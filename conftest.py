@@ -1,0 +1,7 @@
+"""Repo-root pytest config: make `pytest python/tests/ -q` work from the
+repository root by putting the build-time python package on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

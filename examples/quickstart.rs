@@ -1,0 +1,41 @@
+//! Quickstart: load the AOT artifacts, run one generation through the
+//! FreeKV engine (speculative retrieval + correction), print the output
+//! and the engine's retrieval statistics.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use freekv::config::FreeKvParams;
+use freekv::coordinator::engine::{Engine, SampleParams};
+use freekv::coordinator::tokenizer;
+use freekv::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("FREEKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Runtime::load(&artifacts)?;
+    let mut eng = Engine::new(rt, "tiny", FreeKvParams { tau: 0.8, ..Default::default() })?;
+
+    let prompt = "FreeKV is a training-free algorithm-system co-optimization framework \
+                  that boosts KV cache retrieval for efficient LLM inference. ";
+    let mut seq = eng.new_sequence(
+        1,
+        tokenizer::encode(prompt),
+        48,
+        SampleParams { temperature: 0.8, top_p: 0.95, seed: 42 },
+    );
+    seq.eos = Some(tokenizer::EOS);
+
+    eng.generate(&mut seq)?;
+
+    println!("prompt : {prompt}");
+    println!("output : {:?}", tokenizer::decode(seq.generated()));
+    println!();
+    println!("steps           : {}", eng.stats.steps);
+    println!("decode tok/s    : {:.1}", eng.stats.steps as f64 / eng.stats.decode_secs.max(1e-9));
+    println!("corrections     : {} ({:.1}% of head-checks)", eng.stats.corrections, eng.stats.correction_rate() * 100.0);
+    println!("recalled pages  : {}", eng.stats.recalled_pages);
+    println!("offloaded pages : {}", seq.xfer.counters.offloaded_pages);
+    println!("h2d chunks      : {} ({} bytes)", seq.xfer.counters.h2d_chunks, seq.xfer.counters.h2d_bytes);
+    println!("gpu kv bytes    : {}", seq.kv.gpu_bytes());
+    println!("cpu pool bytes  : {}", seq.kv.cpu_bytes());
+    Ok(())
+}

@@ -1,0 +1,301 @@
+"""AOT driver: lower the L2 model to HLO text artifacts + weights blob.
+
+Run once at build time (``make artifacts``); the rust coordinator then
+loads everything from ``artifacts/`` and python never touches the request
+path again.
+
+Interchange format is HLO *text* (not serialized HloModuleProto): jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import (
+    CONFIGS,
+    DECODE_BATCH_BUCKETS,
+    PREFILL_BUCKETS,
+    SELECT_VARIANTS,
+    ModelConfig,
+)
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def make_weights(cfg: ModelConfig, seed: int = 42) -> dict:
+    """Deterministic synthetic weights (substitute for pretrained ones).
+
+    The V/O projections are scaled up (and the embedding down) so the
+    attention branch — a slowly-varying average over history — dominates
+    the residual stream. This reproduces the trained-model property the
+    paper's speculative retrieval rests on: adjacent-step query cosine
+    similarity ~0.9 on layers > 0 and ~0 on layer 0 (Fig. 3a / Table 8 and
+    the paper's observation that compression is not applied to the first
+    layer). Calibration: scales (v x3, o x8, embed x0.5) measured mean
+    per-layer similarity [0.00, 0.92, 0.97, 0.96] on the tiny config.
+    """
+    rng = np.random.default_rng(seed)
+    w = {}
+
+    def init(shape, std):
+        return rng.normal(0.0, std, size=shape).astype(np.float32)
+
+    gshapes = model.global_weight_shapes(cfg)
+    w["embed"] = init(gshapes["embed"], 0.02 * 0.5)
+    w["ln_f"] = np.ones(gshapes["ln_f"], np.float32)
+    lshapes = model.layer_weight_shapes(cfg)
+    for i in range(cfg.n_layers):
+        for name, shape in lshapes.items():
+            if name.startswith("ln"):
+                w[f"layers.{i}.{name}"] = np.ones(shape, np.float32)
+            else:
+                # residual-branch scaling keeps activations O(1) deep in
+                # the random net so golden logits are well-conditioned
+                std = 0.02 / np.sqrt(2 * cfg.n_layers) if name in ("wo", "wd") else 0.02
+                if name == "wv":
+                    std *= 3.0
+                if name == "wo":
+                    std *= 8.0
+                w[f"layers.{i}.{name}"] = init(shape, std)
+    return w
+
+
+def write_weights(w: dict, path: str):
+    """Flat little-endian f32 blob + tensor table (offsets in floats)."""
+    table, off = [], 0
+    with open(path, "wb") as f:
+        for name in sorted(w):
+            arr = np.ascontiguousarray(w[name], np.float32)
+            f.write(arr.tobytes())
+            table.append(
+                {"name": name, "shape": list(arr.shape), "offset": off, "size": arr.size}
+            )
+            off += arr.size
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders: (callable, arg specs) per artifact kind.
+# ---------------------------------------------------------------------------
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32 if dtype == F32 else jnp.int32)
+
+
+def build_artifacts(cfg: ModelConfig):
+    """Yield (name, kind, fn, args) where args = [(name, dtype, shape, is_weight)]."""
+    d, dh, m, qo = cfg.d_model, cfg.d_head, cfg.n_kv, cfg.n_qo
+    s, pmax, k = cfg.budget_slots, cfg.n_pages_max, cfg.select_pages
+    lw = model.layer_weight_shapes(cfg)
+    gw = model.global_weight_shapes(cfg)
+    lw_args = [(n, F32, list(lw[n]), True) for n in model.LAYER_WEIGHTS]
+
+    arts = []
+    for b in DECODE_BATCH_BUCKETS:
+        arts.append((
+            f"embed_b{b}", "embed",
+            functools.partial(model.embed, cfg),
+            [("tokens", I32, [b], False), ("embed", F32, list(gw["embed"]), True)],
+        ))
+        arts.append((
+            f"layer_decode_b{b}", "layer_decode",
+            functools.partial(model.layer_decode, cfg),
+            [
+                ("h", F32, [b, d], False),
+                ("pos", I32, [b], False),
+                ("k_cache", F32, [b, m, s, dh], False),
+                ("v_cache", F32, [b, m, s, dh], False),
+                ("valid", F32, [b, m, s], False),
+                *lw_args,
+            ],
+        ))
+        qkv_w = [(n, F32, list(lw[n]), True) for n in ("ln1", "wq", "wk", "wv")]
+        attn_w = [(n, F32, list(lw[n]), True) for n in ("wo", "ln2", "wg", "wu", "wd")]
+        arts.append((
+            f"layer_qkv_b{b}", "layer_qkv",
+            functools.partial(model.layer_qkv, cfg),
+            [("h", F32, [b, d], False), ("pos", I32, [b], False), *qkv_w],
+        ))
+        arts.append((
+            f"layer_attn_b{b}", "layer_attn",
+            functools.partial(model.layer_attn, cfg),
+            [
+                ("h", F32, [b, d], False),
+                ("q", F32, [b, qo, dh], False),
+                ("k_new", F32, [b, m, dh], False),
+                ("v_new", F32, [b, m, dh], False),
+                ("k_cache", F32, [b, m, s, dh], False),
+                ("v_cache", F32, [b, m, s, dh], False),
+                ("valid", F32, [b, m, s], False),
+                *attn_w,
+            ],
+        ))
+        arts.append((
+            f"logits_b{b}", "logits",
+            functools.partial(model.logits, cfg),
+            [
+                ("h", F32, [b, d], False),
+                ("ln_f", F32, list(gw["ln_f"]), True),
+                ("embed", F32, list(gw["embed"]), True),
+            ],
+        ))
+        for variant in SELECT_VARIANTS if b == 1 else ("means",):
+            arts.append((
+                f"select_{variant}_b{b}", "select",
+                functools.partial(model.select, cfg, variant=variant),
+                [
+                    ("q", F32, [b, qo, dh], False),
+                    ("smin", F32, [b, m, pmax, dh], False),
+                    ("smax", F32, [b, m, pmax, dh], False),
+                    ("page_mask", F32, [b, pmax], False),
+                ],
+            ))
+    for t in PREFILL_BUCKETS:
+        if t > cfg.max_context:
+            continue
+        arts.append((
+            f"embed_t{t}", "embed",
+            functools.partial(model.embed, cfg),
+            [("tokens", I32, [t], False), ("embed", F32, list(gw["embed"]), True)],
+        ))
+        arts.append((
+            f"layer_prefill_t{t}", "layer_prefill",
+            functools.partial(model.layer_prefill, cfg),
+            [
+                ("h", F32, [t, d], False),
+                ("pos", I32, [t], False),
+                ("valid", F32, [t], False),
+                *lw_args,
+            ],
+        ))
+        arts.append((
+            f"summarize_t{t}", "summarize",
+            functools.partial(model.summarize, cfg),
+            [("k", F32, [m, t, dh], False)],
+        ))
+        arts.append((
+            f"logits_t{t}", "logits",
+            functools.partial(model.logits, cfg),
+            [
+                ("h", F32, [t, d], False),
+                ("ln_f", F32, list(gw["ln_f"]), True),
+                ("embed", F32, list(gw["embed"]), True),
+            ],
+        ))
+    return arts
+
+
+def lower_artifact(fn, args):
+    specs = [_spec(shape, dtype) for (_, dtype, shape, _) in args]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+# ---------------------------------------------------------------------------
+# Golden trace for rust integration tests
+# ---------------------------------------------------------------------------
+
+def make_golden(cfg: ModelConfig, weights: dict, n_steps: int = 8):
+    """Greedy full-attention decode the rust engine must reproduce."""
+    jw = {k: jnp.asarray(v) for k, v in weights.items()}
+    prompt = list(b"FreeKV speculative retrieval golden trace, page size 32. " * 2)
+    toks = list(prompt)
+    logits_trace = []
+    for _ in range(n_steps):
+        lg = model.reference_forward(cfg, jw, toks)[-1]
+        logits_trace.append(np.asarray(lg, np.float32))
+        toks.append(int(np.argmax(logits_trace[-1])))
+    return {
+        "prompt": prompt,
+        "generated": toks[len(prompt):],
+        "final_logits": [float(x) for x in logits_trace[-1]],
+        "first_logits_head": [float(x) for x in logits_trace[0][:16]],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny",
+                    help="comma list of model configs, or 'all'")
+    ap.add_argument("--golden-steps", type=int, default=8)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(CONFIGS) if args.configs == "all" else args.configs.split(",")
+    manifest = {
+        "configs": {},
+        "artifacts": [],
+        "weights": {},
+        "buckets": {
+            "decode_batch": list(DECODE_BATCH_BUCKETS),
+            "prefill": list(PREFILL_BUCKETS),
+        },
+        "select_variants": list(SELECT_VARIANTS),
+        "layer_weights": list(model.LAYER_WEIGHTS),
+        "global_weights": list(model.GLOBAL_WEIGHTS),
+    }
+
+    for cname in names:
+        cfg = CONFIGS[cname]
+        manifest["configs"][cname] = cfg.to_dict()
+        print(f"[aot] {cname}: weights ...", flush=True)
+        w = make_weights(cfg)
+        wfile = f"weights_{cname}.bin"
+        table = write_weights(w, os.path.join(args.out_dir, wfile))
+        manifest["weights"][cname] = {"file": wfile, "tensors": table}
+
+        for name, kind, fn, arg_specs in build_artifacts(cfg):
+            fname = f"{cname}_{name}.hlo.txt"
+            print(f"[aot] {cname}: lowering {name} -> {fname}", flush=True)
+            text = lower_artifact(fn, arg_specs)
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({
+                "name": f"{cname}_{name}",
+                "config": cname,
+                "kind": kind,
+                "file": fname,
+                "args": [
+                    {"name": n, "dtype": dt, "shape": sh, "weight": isw}
+                    for (n, dt, sh, isw) in arg_specs
+                ],
+            })
+
+        print(f"[aot] {cname}: golden trace ...", flush=True)
+        golden = make_golden(cfg, w, args.golden_steps)
+        with open(os.path.join(args.out_dir, f"golden_{cname}.json"), "w") as f:
+            json.dump(golden, f)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

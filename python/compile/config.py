@@ -1,0 +1,105 @@
+"""Model and retrieval configurations shared by the compile path.
+
+Every artifact the AOT driver emits is parameterized by one of these
+configs; the same values are serialized into ``artifacts/manifest.json``
+so the rust coordinator (L3) agrees with the compiled HLO on shapes.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of a GQA transformer (Llama-style: RMSNorm + RoPE + SwiGLU)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_qo: int           # query/output heads
+    n_kv: int           # KV heads (GQA); group size G = n_qo // n_kv
+    d_head: int
+    d_ffn: int          # SwiGLU inner dim
+    vocab: int
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    # --- retrieval geometry (FreeKV) ---
+    page_size: int = 32          # p: tokens per KV page
+    max_context: int = 4096      # max tokens tracked -> n_pages_max
+    sink_pages: int = 2          # S = sink_pages * page_size sink tokens
+    window_pages: int = 2        # W = window_pages * page_size local window
+    select_pages: int = 12       # K pages chosen by retrieval per kv head
+
+    def __post_init__(self):
+        assert self.n_qo % self.n_kv == 0, "GQA group must divide evenly"
+        assert self.max_context % self.page_size == 0
+        assert self.d_head % 2 == 0, "RoPE needs an even head dim"
+
+    @property
+    def group_size(self) -> int:
+        return self.n_qo // self.n_kv
+
+    @property
+    def n_pages_max(self) -> int:
+        return self.max_context // self.page_size
+
+    @property
+    def budget_pages(self) -> int:
+        """Total pages resident on 'GPU' per kv head: sink + window + selected."""
+        return self.sink_pages + self.window_pages + self.select_pages
+
+    @property
+    def budget_slots(self) -> int:
+        """S: token slots the decode attention kernel sees (excl. current token)."""
+        return self.budget_pages * self.page_size
+
+    def to_dict(self):
+        d = asdict(self)
+        d.update(
+            group_size=self.group_size,
+            n_pages_max=self.n_pages_max,
+            budget_pages=self.budget_pages,
+            budget_slots=self.budget_slots,
+        )
+        return d
+
+
+# "tiny": the CI / test model. Small enough that every pytest sweep and the
+# rust integration tests run in seconds on one CPU core.
+TINY = ModelConfig(
+    name="tiny",
+    n_layers=4,
+    d_model=256,
+    n_qo=8,
+    n_kv=2,
+    d_head=32,
+    d_ffn=704,
+    vocab=260,  # byte-level tokenizer: 256 bytes + BOS/EOS/PAD/SEP
+    max_context=4096,
+)
+
+# "small": the end-to-end serving example model (~78M params, Llama-style).
+SMALL = ModelConfig(
+    name="small",
+    n_layers=12,
+    d_model=768,
+    n_qo=12,
+    n_kv=4,
+    d_head=64,
+    d_ffn=2048,
+    vocab=260,
+    max_context=4096,
+    select_pages=12,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL)}
+
+# Decode batch buckets compiled per config; the rust batcher pads to the
+# smallest bucket that fits.
+DECODE_BATCH_BUCKETS = (1, 4)
+# Prefill length buckets (single request at a time, padded).
+PREFILL_BUCKETS = (512, 1024, 2048)
+
+# Group-consistent selection variants (paper Appendix B.2). MeanS is the
+# one FreeKV adopts; the others exist for the Table 5 ablation.
+SELECT_VARIANTS = ("means", "maxs", "meanqk", "maxqk", "meanq", "maxq")

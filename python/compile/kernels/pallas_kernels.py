@@ -1,0 +1,190 @@
+"""Layer-1 Pallas kernels: FreeKV's compute hot-spots.
+
+All kernels run with ``interpret=True`` so they lower to plain HLO the CPU
+PJRT plugin can execute (real-TPU lowering emits Mosaic custom-calls the
+CPU client cannot run). The *structure*, however, is written for the TPU:
+
+Hardware adaptation (paper targets A100 CUDA; see DESIGN.md):
+- The paper's recall/selection GPU work is threadblock-tiled over pages.
+  Here each kernel tiles the slot/page axis into VMEM-sized blocks via an
+  in-kernel ``fori_loop`` (decode attention: online-softmax flash blocks)
+  or a 2-D grid (summaries), expressing the HBM->VMEM schedule the paper
+  expressed with threadblocks.
+- The Quest bound  sum_d max(q_d*min_d, q_d*max_d)  is rewritten as two
+  MXU matmuls:  0.5 * (q @ (min+max)^T + |q| @ (max-min)^T)  — exact
+  because max-min >= 0 — instead of the elementwise/broadcast form a CUDA
+  warp reduction would use.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# Slot-axis tile for the decode attention flash loop. 128 matches the MXU
+# systolic tile; S (budget slots) is always a multiple of the page size so
+# padding only occurs on the final +1 (current token) slot.
+ATTN_BLOCK_S = 128
+
+
+# ---------------------------------------------------------------------------
+# Decode attention: GQA, one grid cell per kv head, flash-style over slots.
+# ---------------------------------------------------------------------------
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, *, block_s: int):
+    q = q_ref[0]  # [G, d]
+    g, d = q.shape
+    s_total = k_ref.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    n_blocks = s_total // block_s
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = k_ref[0, pl.dslice(i * block_s, block_s), :]      # [bs, d]
+        v_blk = v_ref[0, pl.dslice(i * block_s, block_s), :]      # [bs, d]
+        msk = valid_ref[0, pl.dslice(i * block_s, block_s)]       # [bs]
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(msk[None, :] > 0, s, jnp.float32(-1e30))
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))               # [G]
+        p = jnp.exp(s - m_new[:, None]) * (msk[None, :] > 0)
+        alpha = jnp.exp(m_prev - m_new)                           # [G]
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    init = (
+        jnp.full((g,), -1e30, jnp.float32),
+        jnp.zeros((g,), jnp.float32),
+        jnp.zeros((g, d), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def decode_attention(q, k, v, valid, *, block_s: int = ATTN_BLOCK_S):
+    """GQA decode attention over gathered KV slots (single batch element).
+
+    q: [n_kv, G, d]; k, v: [n_kv, S, d]; valid: [n_kv, S] (float 0/1).
+    S is padded to a multiple of ``block_s`` internally (mask extended 0).
+    Returns o: [n_kv, G, d].
+    """
+    n_kv, g, d = q.shape
+    s = k.shape[1]
+    pad = (-s) % block_s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    s_padded = s + pad
+    kern = functools.partial(_decode_attn_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kern,
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda m: (m, 0, 0)),
+            pl.BlockSpec((1, s_padded, d), lambda m: (m, 0, 0)),
+            pl.BlockSpec((1, s_padded, d), lambda m: (m, 0, 0)),
+            pl.BlockSpec((1, s_padded), lambda m: (m, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda m: (m, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, g, d), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k, v, valid)
+
+
+# ---------------------------------------------------------------------------
+# Page selection scores: Quest bound + group-consistent pooling (MeanS etc).
+# ---------------------------------------------------------------------------
+
+def _select_scores_kernel(q_ref, ssum_ref, sdiff_ref, mask_ref, o_ref, *, variant):
+    # ssum = smin + smax, sdiff = smax - smin (>= 0), both [P, d].
+    q = q_ref[0]            # [G, d] (or [1, d] for pre-pooled q variants)
+    ssum = ssum_ref[0]      # [P, d]
+    sdiff = sdiff_ref[0]    # [P, d]
+    mask = mask_ref[...]    # [P]
+    neg = jnp.float32(-1e30)
+    # Quest bound as two MXU matmuls (see module docstring).
+    s = 0.5 * (
+        jnp.dot(q, ssum.T, preferred_element_type=jnp.float32)
+        + jnp.dot(jnp.abs(q), sdiff.T, preferred_element_type=jnp.float32)
+    )  # [G, P]
+    if variant in ("meanq", "maxq"):
+        # q was pooled outside the kernel; G axis is 1.
+        o_ref[0] = jnp.where(mask > 0, s[0], neg)
+    elif variant in ("meanqk", "maxqk"):
+        pooled = s.mean(axis=0) if variant == "meanqk" else s.max(axis=0)
+        o_ref[0] = jnp.where(mask > 0, pooled, neg)
+    else:  # means / maxs: softmax per q-head over pages, then pool.
+        sm = jnp.where(mask[None, :] > 0, s, neg)
+        e = jnp.exp(sm - sm.max(axis=-1, keepdims=True))
+        e = e / jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-30)
+        e = jnp.where(mask[None, :] > 0, e, 0.0)
+        o_ref[0] = e.mean(axis=0) if variant == "means" else e.max(axis=0)
+
+
+def select_scores(q, smin, smax, page_mask, variant: str = "means"):
+    """Group-consistent page scores; one grid cell per kv head.
+
+    q: [n_kv, G, d]; smin/smax: [n_kv, P, d]; page_mask: [P].
+    Returns scores [n_kv, P] (masked pages -1e30 or 0, matching ref).
+    """
+    n_kv, g, d = q.shape
+    p = smin.shape[1]
+    if variant in ("meanq", "maxq"):
+        q = (q.mean(axis=1) if variant == "meanq" else q.max(axis=1))[:, None, :]
+        g = 1
+    ssum = smin + smax
+    sdiff = smax - smin
+    kern = functools.partial(_select_scores_kernel, variant=variant)
+    return pl.pallas_call(
+        kern,
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda m: (m, 0, 0)),
+            pl.BlockSpec((1, p, d), lambda m: (m, 0, 0)),
+            pl.BlockSpec((1, p, d), lambda m: (m, 0, 0)),
+            pl.BlockSpec((p,), lambda m: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, p), lambda m: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, p), jnp.float32),
+        interpret=INTERPRET,
+    )(q, ssum, sdiff, page_mask)
+
+
+# ---------------------------------------------------------------------------
+# Page summaries: min/max over each page of the key cache.
+# ---------------------------------------------------------------------------
+
+def _summarize_kernel(k_ref, lo_ref, hi_ref):
+    page = k_ref[0]  # [p, d]
+    lo_ref[0, 0] = page.min(axis=0)
+    hi_ref[0, 0] = page.max(axis=0)
+
+
+def page_summaries(k, page_size: int):
+    """Min/max summaries per page; grid (n_kv, n_pages).
+
+    k: [n_kv, T, d], T divisible by page_size.
+    Returns (smin, smax): [n_kv, T // page_size, d].
+    """
+    n_kv, t, d = k.shape
+    n_pages = t // page_size
+    return pl.pallas_call(
+        _summarize_kernel,
+        grid=(n_kv, n_pages),
+        in_specs=[pl.BlockSpec((1, page_size, d), lambda m, pg: (m, pg, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda m, pg: (m, pg, 0)),
+            pl.BlockSpec((1, 1, d), lambda m, pg: (m, pg, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_kv, n_pages, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_kv, n_pages, d), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(k)

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness references).
+
+These are the ground truth the pytest suite checks the Pallas kernels
+against (``assert_allclose``), and they double as the reference
+implementation used by the L2 model tests.
+"""
+
+import jax.numpy as jnp
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary position embedding, Llama "half" convention.
+
+    x: [..., T, n_heads, d_head]
+    positions: int32 [..., T] absolute positions matching x's T axis.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over the heads axis
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rms_norm(x, g, eps: float = 1e-5):
+    """RMSNorm over the last axis."""
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jnp.reciprocal(jnp.sqrt(ms + eps))) * g
+
+
+def page_summaries(k, page_size: int):
+    """Min/max page summaries (Quest-style) of a key cache.
+
+    k: [n_kv, T, d] with T divisible by page_size.
+    Returns (smin, smax): [n_kv, T // page_size, d].
+    """
+    n_kv, t, d = k.shape
+    pages = k.reshape(n_kv, t // page_size, page_size, d)
+    return pages.min(axis=2), pages.max(axis=2)
+
+
+def _qbound(qv, smin, smax):
+    """Quest upper bound sum_d max(q_d*min_d, q_d*max_d).
+
+    qv: [n_kv, H, d]; smin/smax: [n_kv, P, d] -> [n_kv, H, P]."""
+    lo = qv[:, :, None, :] * smin[:, None, :, :]
+    hi = qv[:, :, None, :] * smax[:, None, :, :]
+    return jnp.maximum(lo, hi).sum(axis=-1)
+
+
+def select_scores(q, smin, smax, page_mask, variant: str = "means"):
+    """Group-consistent page scores (paper §3.2 + Appendix B.2).
+
+    q: [n_kv, G, d] query vectors grouped by kv head.
+    smin, smax: [n_kv, P, d] page summaries.
+    page_mask: [P] float (1 = selectable, 0 = masked out).
+    Returns scores [n_kv, P]; masked pages score -1e30 (pre-softmax
+    variants) or 0 (post-softmax variants) so they never win top-k.
+    """
+    neg = jnp.float32(-1e30)
+
+    if variant in ("meanq", "maxq"):
+        pooled_q = q.mean(axis=1) if variant == "meanq" else q.max(axis=1)
+        s = _qbound(pooled_q[:, None, :], smin, smax)[:, 0, :]  # [n_kv, P]
+        return jnp.where(page_mask[None, :] > 0, s, neg)
+
+    s = _qbound(q, smin, smax)  # [n_kv, G, P]
+    if variant in ("meanqk", "maxqk"):
+        pooled = s.mean(axis=1) if variant == "meanqk" else s.max(axis=1)
+        return jnp.where(page_mask[None, :] > 0, pooled, neg)
+
+    if variant in ("means", "maxs"):
+        masked = jnp.where(page_mask[None, None, :] > 0, s, neg)
+        sm = jnp.exp(masked - masked.max(axis=-1, keepdims=True))
+        sm = sm / jnp.maximum(sm.sum(axis=-1, keepdims=True), 1e-30)
+        sm = jnp.where(page_mask[None, None, :] > 0, sm, 0.0)
+        return sm.mean(axis=1) if variant == "means" else sm.max(axis=1)
+
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def decode_attention(q, k, v, valid):
+    """GQA decode attention over gathered KV slots.
+
+    q: [n_kv, G, d] current-token queries grouped by kv head (post-RoPE).
+    k, v: [n_kv, S, d] gathered cache slots (post-RoPE keys).
+    valid: [n_kv, S] float mask (1 = real token, 0 = empty slot).
+    Returns o: [n_kv, G, d].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("mgd,msd->mgs", q, k) / jnp.sqrt(jnp.float32(d))
+    scores = jnp.where(valid[:, None, :] > 0, scores, jnp.float32(-1e30))
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p * (valid[:, None, :] > 0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("mgs,msd->mgd", p, v)
+
+
+def swiglu(x, wg, wu, wd):
+    """SwiGLU FFN: (silu(x @ wg) * (x @ wu)) @ wd."""
+    g = x @ wg
+    return (g * jnp.reciprocal(1.0 + jnp.exp(-g)) * (x @ wu)) @ wd
+
+
+def causal_attention(q, k, v, pos_q, pos_k):
+    """Full prefill attention with causal mask (oracle for prefill path).
+
+    q: [T, n_kv, G, d]; k, v: [S, n_kv, d]; pos_q: [T], pos_k: [S].
+    Returns o: [T, n_kv, G, d].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("tmgd,smd->tmgs", q, k) / jnp.sqrt(jnp.float32(d))
+    mask = pos_k[None, :] <= pos_q[:, None]  # [T, S]
+    scores = jnp.where(mask[:, None, None, :], scores, jnp.float32(-1e30))
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("tmgs,smd->tmgd", p, v)

@@ -1,0 +1,222 @@
+"""Layer-2 JAX model: a Llama-style GQA transformer built from L1 kernels.
+
+Each public function here becomes one AOT artifact (see aot.py). Weights
+are *runtime arguments* (not baked constants) so a single ``layer_decode``
+artifact serves every layer — the rust coordinator passes the layer's
+weight buffers on each call.
+
+Conventions shared with the rust side (encoded in artifacts/manifest.json):
+- keys are stored **post-RoPE**; positions are only needed for the current
+  token's q/k projection.
+- the decode KV operand is the *gathered* per-kv-head slot buffer
+  ``[n_kv, S, d]`` (sink pages + local window + selected pages), assembled
+  by the rust KV-cache manager from the GPU NHD page cache.
+- query heads are laid out so that kv head m owns query heads
+  ``m*G .. (m+1)*G-1``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import pallas_kernels as pk
+from .kernels import ref
+
+# Layer weight argument order for layer artifacts. The manifest records
+# this so the rust side binds buffers positionally.
+LAYER_WEIGHTS = ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")
+GLOBAL_WEIGHTS = ("embed", "ln_f")
+
+
+def layer_weight_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ffn
+    qd, kd = cfg.n_qo * cfg.d_head, cfg.n_kv * cfg.d_head
+    return {
+        "ln1": (d,),
+        "wq": (d, qd),
+        "wk": (d, kd),
+        "wv": (d, kd),
+        "wo": (qd, d),
+        "ln2": (d,),
+        "wg": (d, f),
+        "wu": (d, f),
+        "wd": (f, d),
+    }
+
+
+def global_weight_shapes(cfg: ModelConfig):
+    return {"embed": (cfg.vocab, cfg.d_model), "ln_f": (cfg.d_model,)}
+
+
+def embed(cfg: ModelConfig, tokens, embed_w):
+    """tokens [N] i32 -> hidden [N, d]."""
+    return embed_w[tokens]
+
+
+def logits(cfg: ModelConfig, h, ln_f, embed_w):
+    """h [B, d] -> next-token logits [B, vocab] (tied embedding head)."""
+    return ref.rms_norm(h, ln_f, cfg.rms_eps) @ embed_w.T
+
+
+def _project_qkv(cfg: ModelConfig, x, wq, wk, wv, pos):
+    """x [N, d] -> q [N, n_qo, dh], k/v [N, n_kv, dh], RoPE applied."""
+    n = x.shape[0]
+    q = (x @ wq).reshape(n, cfg.n_qo, cfg.d_head)
+    k = (x @ wk).reshape(n, cfg.n_kv, cfg.d_head)
+    v = (x @ wv).reshape(n, cfg.n_kv, cfg.d_head)
+    q = ref.rope(q, pos, cfg.rope_theta)
+    k = ref.rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def layer_qkv(cfg: ModelConfig, h, pos, ln1, wq, wk, wv):
+    """First half of a decode layer: norm + QKV projection + RoPE.
+
+    Split from the attention half so the rust coordinator can apply
+    FreeKV's *fine-grained correction* (paper §3.3) between computing the
+    current step's query and running attention: cos(q_i, q_{i-1}) is
+    checked in rust, flagged kv heads get a blocking select+recall, and
+    only then is ``layer_attn`` launched.
+
+    h: [B, d]; pos: [B] i32. Returns (q [B, n_qo, dh], k_new [B, n_kv,
+    dh], v_new [B, n_kv, dh]).
+    """
+    x = ref.rms_norm(h, ln1, cfg.rms_eps)
+    return _project_qkv(cfg, x, wq, wk, wv, pos)
+
+
+def layer_attn(cfg: ModelConfig, h, q, k_new, v_new, k_cache, v_cache, valid,
+               wo, ln2, wg, wu, wd):
+    """Second half of a decode layer: gathered-page attention + FFN.
+
+    Consumes the q/k/v produced by ``layer_qkv`` (possibly after a
+    correction re-gather of k_cache/v_cache). Returns h_out [B, d].
+    """
+    b = h.shape[0]
+    k_all = jnp.concatenate([k_cache, k_new[:, :, None, :]], axis=2)
+    v_all = jnp.concatenate([v_cache, v_new[:, :, None, :]], axis=2)
+    valid_all = jnp.concatenate(
+        [valid, jnp.ones((b, cfg.n_kv, 1), jnp.float32)], axis=2
+    )
+    qg = q.reshape(b, cfg.n_kv, cfg.group_size, cfg.d_head)
+    o = jax.vmap(pk.decode_attention)(qg, k_all, v_all, valid_all)
+    o = o.reshape(b, cfg.n_qo * cfg.d_head)
+    h = h + o @ wo
+    h = h + ref.swiglu(ref.rms_norm(h, ln2, cfg.rms_eps), wg, wu, wd)
+    return h
+
+
+def layer_decode(cfg: ModelConfig, h, pos, k_cache, v_cache, valid, *w):
+    """One decode step through one transformer layer (batched).
+
+    h: [B, d]; pos: [B] i32 absolute position of the current token;
+    k_cache/v_cache: [B, n_kv, S, d] gathered slots; valid: [B, n_kv, S].
+    w: LAYER_WEIGHTS in order.
+    Returns (h_out [B, d], q [B, n_qo, dh], k_new [B, n_kv, dh],
+             v_new [B, n_kv, dh]).
+    """
+    ln1, wq, wk, wv, wo, ln2, wg, wu, wd = w
+    q, k_new, v_new = layer_qkv(cfg, h, pos, ln1, wq, wk, wv)
+    h = layer_attn(cfg, h, q, k_new, v_new, k_cache, v_cache, valid,
+                   wo, ln2, wg, wu, wd)
+    return h, q, k_new, v_new
+
+
+def layer_prefill(cfg: ModelConfig, h, pos, valid, *w, q_chunk: int = 256):
+    """Full causal prefill through one layer (single request).
+
+    h: [T, d]; pos: [T] i32 (absolute positions; padding slots get
+    pos = -1); valid: [T] float (0 for padding).
+    Returns (h_out [T, d], k [n_kv, T, dh], v [n_kv, T, dh],
+             q_last [n_qo, dh]) with q_last the query of the last *valid*
+    token (seed for the first speculative selection).
+    """
+    ln1, wq, wk, wv, wo, ln2, wg, wu, wd = w
+    t = h.shape[0]
+    x = ref.rms_norm(h, ln1, cfg.rms_eps)
+    q, k, v = _project_qkv(cfg, x, wq, wk, wv, jnp.maximum(pos, 0))
+
+    # Chunk the query axis to bound the [chunk, T] score buffer (the
+    # prefill analog of flash tiling; real XLA fuses the masked softmax).
+    qg = q.reshape(t, cfg.n_kv, cfg.group_size, cfg.d_head)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head))
+    kv_valid = valid > 0
+
+    def chunk_attn(args):
+        q_blk, pos_blk = args  # [C, n_kv, G, dh], [C]
+        s = jnp.einsum("cmgd,tmd->cmgt", q_blk, k.reshape(t, cfg.n_kv, cfg.d_head)) * scale
+        mask = (pos[None, :] <= pos_blk[:, None]) & kv_valid[None, :]
+        s = jnp.where(mask[:, None, None, :], s, jnp.float32(-1e30))
+        p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+        p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+        return jnp.einsum("cmgt,tmd->cmgd", p, v.reshape(t, cfg.n_kv, cfg.d_head))
+
+    n_chunks = t // q_chunk if t % q_chunk == 0 else -1
+    if n_chunks > 1:
+        o = jax.lax.map(
+            chunk_attn,
+            (
+                qg.reshape(n_chunks, q_chunk, cfg.n_kv, cfg.group_size, cfg.d_head),
+                pos.reshape(n_chunks, q_chunk),
+            ),
+        ).reshape(t, cfg.n_kv, cfg.group_size, cfg.d_head)
+    else:
+        o = chunk_attn((qg, pos))
+    o = o.reshape(t, cfg.n_qo * cfg.d_head)
+    h = h + o @ wo
+    h = h + ref.swiglu(ref.rms_norm(h, ln2, cfg.rms_eps), wg, wu, wd)
+
+    last = jnp.maximum(valid.astype(jnp.int32).sum() - 1, 0)
+    q_last = q[last]
+    # K/V returned in [n_kv, T, d] (HND-ish) so the rust side can slice
+    # pages contiguously when populating the CPU pool.
+    return h, k.transpose(1, 0, 2), v.transpose(1, 0, 2), q_last
+
+
+def select(cfg: ModelConfig, q, smin, smax, page_mask, variant: str = "means"):
+    """Page selection: scores (Pallas) + top-k (XLA), batched.
+
+    q: [B, n_qo, dh]; smin/smax: [B, n_kv, P, dh]; page_mask: [B, P].
+    Returns (scores [B, n_kv, P], idx [B, n_kv, K] i32).
+    """
+    b = q.shape[0]
+    qg = q.reshape(b, cfg.n_kv, cfg.group_size, cfg.d_head)
+    scores = jax.vmap(
+        lambda qq, lo, hi, msk: pk.select_scores(qq, lo, hi, msk, variant)
+    )(qg, smin, smax, page_mask)
+    # argsort-based top-k: lax.top_k lowers to the `topk(..., largest=true)`
+    # HLO op that xla_extension 0.5.1's text parser rejects; sort-based
+    # lowering round-trips cleanly.
+    idx = jnp.argsort(-scores, axis=-1)[..., : cfg.select_pages]
+    return scores, idx.astype(jnp.int32)
+
+
+def summarize(cfg: ModelConfig, k):
+    """Prefill page summaries: k [n_kv, T, d] -> (smin, smax) [n_kv, P, d]."""
+    return pk.page_summaries(k, cfg.page_size)
+
+
+# ---------------------------------------------------------------------------
+# Reference full-model forward (oracle for integration tests / golden file).
+# ---------------------------------------------------------------------------
+
+def reference_forward(cfg: ModelConfig, weights: dict, tokens):
+    """Full-attention forward over a token sequence; returns logits [T, vocab].
+
+    Pure jnp, no pallas, no paging — the numerical oracle that the rust
+    decode loop (with a budget covering the whole context) must match.
+    """
+    t = len(tokens)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    h = weights["embed"][jnp.asarray(tokens, jnp.int32)]
+    for i in range(cfg.n_layers):
+        w = {name: weights[f"layers.{i}.{name}"] for name in LAYER_WEIGHTS}
+        x = ref.rms_norm(h, w["ln1"], cfg.rms_eps)
+        q, k, v = _project_qkv(cfg, x, w["wq"], w["wk"], w["wv"], pos)
+        qg = q.reshape(t, cfg.n_kv, cfg.group_size, cfg.d_head)
+        o = ref.causal_attention(qg, k, v, pos, pos)
+        h = h + o.reshape(t, cfg.n_qo * cfg.d_head) @ w["wo"]
+        h = h + ref.swiglu(
+            ref.rms_norm(h, w["ln2"], cfg.rms_eps), w["wg"], w["wu"], w["wd"]
+        )
+    return ref.rms_norm(h, weights["ln_f"], cfg.rms_eps) @ weights["embed"].T

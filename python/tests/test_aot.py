@@ -1,0 +1,113 @@
+"""AOT driver tests: manifest schema, weight blob layout, determinism."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.config import CONFIGS, TINY
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weights_deterministic():
+    w1 = aot.make_weights(TINY, seed=42)
+    w2 = aot.make_weights(TINY, seed=42)
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])
+    w3 = aot.make_weights(TINY, seed=43)
+    assert any(not np.array_equal(w1[k], w3[k]) for k in w1)
+
+
+def test_weight_shapes_cover_model():
+    w = aot.make_weights(TINY, seed=42)
+    lshapes = model.layer_weight_shapes(TINY)
+    for i in range(TINY.n_layers):
+        for name, shape in lshapes.items():
+            assert w[f"layers.{i}.{name}"].shape == shape
+    assert w["embed"].shape == (TINY.vocab, TINY.d_model)
+
+
+def test_write_weights_table_contiguous(tmp_path):
+    w = aot.make_weights(TINY, seed=42)
+    path = tmp_path / "w.bin"
+    table = aot.write_weights(w, str(path))
+    expected_floats = sum(arr.size for arr in w.values())
+    assert os.path.getsize(path) == expected_floats * 4
+    off = 0
+    for ent in table:
+        assert ent["offset"] == off
+        assert ent["size"] == int(np.prod(ent["shape"]))
+        off += ent["size"]
+    # round-trip one tensor
+    ent = next(e for e in table if e["name"] == "layers.0.wq")
+    raw = np.fromfile(path, np.float32, count=ent["size"], offset=ent["offset"] * 4)
+    np.testing.assert_array_equal(raw.reshape(ent["shape"]), w["layers.0.wq"])
+
+
+def test_build_artifacts_covers_kinds():
+    arts = aot.build_artifacts(TINY)
+    kinds = {k for (_, k, _, _) in arts}
+    assert kinds == {"embed", "layer_decode", "layer_qkv", "layer_attn", "logits",
+                     "select", "layer_prefill", "summarize"}
+    names = [n for (n, _, _, _) in arts]
+    assert len(names) == len(set(names)), "artifact names must be unique"
+
+
+def test_artifact_arg_specs_are_concrete():
+    for (_, _, _, args) in aot.build_artifacts(TINY):
+        for (name, dtype, shape, is_weight) in args:
+            assert dtype in ("f32", "i32")
+            assert all(isinstance(s, int) and s > 0 for s in shape)
+            assert isinstance(is_weight, bool)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_files_exist(self, manifest):
+        for art in manifest["artifacts"]:
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), art["file"]
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+    def test_manifest_weights_exist(self, manifest):
+        for cfg, went in manifest["weights"].items():
+            path = os.path.join(ART, went["file"])
+            n_floats = sum(t["size"] for t in went["tensors"])
+            assert os.path.getsize(path) == n_floats * 4
+
+    def test_manifest_configs_match_source(self, manifest):
+        for name, cdict in manifest["configs"].items():
+            src = CONFIGS[name].to_dict()
+            assert cdict == src
+
+    def test_golden_exists_and_sane(self, manifest):
+        for name in manifest["configs"]:
+            with open(os.path.join(ART, f"golden_{name}.json")) as f:
+                g = json.load(f)
+            assert len(g["generated"]) >= 4
+            assert len(g["final_logits"]) == CONFIGS[name].vocab
+            assert all(0 <= t < CONFIGS[name].vocab for t in g["generated"])
+
+    def test_layer_decode_args_match_config(self, manifest):
+        for art in manifest["artifacts"]:
+            if art["kind"] != "layer_decode":
+                continue
+            cfg = CONFIGS[art["config"]]
+            args = {a["name"]: a for a in art["args"]}
+            b = args["h"]["shape"][0]
+            assert args["k_cache"]["shape"] == [b, cfg.n_kv, cfg.budget_slots, cfg.d_head]
+            assert args["valid"]["shape"] == [b, cfg.n_kv, cfg.budget_slots]
+            assert [a["name"] for a in art["args"] if a["weight"]] == list(model.LAYER_WEIGHTS)

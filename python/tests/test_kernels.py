@@ -1,0 +1,211 @@
+"""L1 kernel tests: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/masks; assert_allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import pallas_kernels as pk
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _f32(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 4]),        # n_kv
+    st.sampled_from([1, 2, 4, 8]),     # G
+    st.sampled_from([8, 32, 64]),      # d
+    st.sampled_from([16, 96, 128, 257]),  # S (incl. non-multiple of block)
+    st.integers(0, 2**31 - 1),         # seed
+)
+
+
+@given(shape_strategy)
+def test_decode_attention_matches_ref(args):
+    n_kv, g, d, s, seed = args
+    rng = _rng(seed)
+    q = _f32(rng, n_kv, g, d)
+    k = _f32(rng, n_kv, s, d)
+    v = _f32(rng, n_kv, s, d)
+    valid = jnp.asarray(rng.integers(0, 2, size=(n_kv, s)), jnp.float32)
+    got = pk.decode_attention(q, k, v, valid)
+    want = ref.decode_attention(q, k, v, valid)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_all_masked_row_is_zero():
+    rng = _rng(0)
+    q, k, v = (_f32(rng, 2, 4, 16) for _ in range(1)), None, None
+    q = _f32(rng, 2, 4, 16)
+    k = _f32(rng, 2, 64, 16)
+    v = _f32(rng, 2, 64, 16)
+    valid = jnp.zeros((2, 64), jnp.float32).at[1].set(1.0)
+    got = np.asarray(pk.decode_attention(q, k, v, valid))
+    assert_allclose(got[0], 0.0, atol=1e-6)  # fully masked head -> zeros
+    assert np.abs(got[1]).max() > 0
+
+
+def test_decode_attention_single_valid_slot_returns_its_value():
+    rng = _rng(1)
+    q = _f32(rng, 1, 2, 8)
+    k = _f32(rng, 1, 32, 8)
+    v = _f32(rng, 1, 32, 8)
+    valid = jnp.zeros((1, 32), jnp.float32).at[0, 7].set(1.0)
+    got = np.asarray(pk.decode_attention(q, k, v, valid))
+    want = np.broadcast_to(np.asarray(v)[0, 7], (2, 8))
+    assert_allclose(got[0], want, rtol=1e-5)
+
+
+def test_decode_attention_invariant_to_masked_values():
+    """Changing K/V under masked slots must not change the output."""
+    rng = _rng(2)
+    q = _f32(rng, 2, 2, 16)
+    k = _f32(rng, 2, 96, 16)
+    v = _f32(rng, 2, 96, 16)
+    valid = jnp.asarray(rng.integers(0, 2, size=(2, 96)), jnp.float32)
+    out1 = np.asarray(pk.decode_attention(q, k, v, valid))
+    noise = _f32(rng, 2, 96, 16) * 100.0
+    k2 = jnp.where(valid[..., None] > 0, k, k + noise)
+    v2 = jnp.where(valid[..., None] > 0, v, v - noise)
+    out2 = np.asarray(pk.decode_attention(q, k2, v2, valid))
+    assert_allclose(out1, out2, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# select_scores
+# ---------------------------------------------------------------------------
+
+select_strategy = st.tuples(
+    st.sampled_from([1, 2, 4]),      # n_kv
+    st.sampled_from([1, 2, 4]),      # G
+    st.sampled_from([8, 32]),        # d
+    st.sampled_from([4, 16, 128]),   # P
+    st.sampled_from(["means", "maxs", "meanqk", "maxqk", "meanq", "maxq"]),
+    st.integers(0, 2**31 - 1),
+)
+
+
+@given(select_strategy)
+def test_select_scores_matches_ref(args):
+    n_kv, g, d, p, variant, seed = args
+    rng = _rng(seed)
+    q = _f32(rng, n_kv, g, d)
+    k = _f32(rng, n_kv, p * 4, d)
+    smin, smax = ref.page_summaries(k, 4)
+    mask = jnp.asarray(rng.integers(0, 2, size=(p,)), jnp.float32)
+    got = pk.select_scores(q, smin, smax, mask, variant)
+    want = ref.select_scores(q, smin, smax, mask, variant)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_select_bound_dominates_true_scores():
+    """Quest property: the page bound >= any true q.k in the page."""
+    rng = _rng(3)
+    n_kv, g, d, p, psz = 2, 4, 32, 8, 16
+    q = _f32(rng, n_kv, g, d)
+    k = _f32(rng, n_kv, p * psz, d)
+    smin, smax = ref.page_summaries(k, psz)
+    mask = jnp.ones((p,), jnp.float32)
+    bound = np.asarray(pk.select_scores(q, smin, smax, mask, "meanqk"))
+    # compare against mean-over-group of true max q.k per page
+    true = np.einsum("mgd,msd->mgs", np.asarray(q), np.asarray(k))
+    true = true.reshape(n_kv, g, p, psz).max(-1).mean(1)
+    assert (bound + 1e-4 >= true).all()
+
+
+def test_select_masked_pages_never_win():
+    rng = _rng(4)
+    q = _f32(rng, 2, 4, 16)
+    k = _f32(rng, 2, 16 * 8, 16) * 10.0
+    smin, smax = ref.page_summaries(k, 8)
+    mask = jnp.ones((16,), jnp.float32).at[3].set(0.0).at[9].set(0.0)
+    for variant in ("means", "maxs", "meanqk", "maxq"):
+        s = np.asarray(pk.select_scores(q, smin, smax, mask, variant))
+        order = np.argsort(-s, axis=-1)
+        assert 3 not in order[:, :14] or s[:, 3].max() <= s.max() - 1
+        # masked scores are sentinel-low (or zero for softmax variants)
+        assert (s[:, 3] <= 0).all() and (s[:, 9] <= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# page_summaries
+# ---------------------------------------------------------------------------
+
+@given(
+    st.sampled_from([1, 2, 4]),
+    st.sampled_from([1, 4, 16]),
+    st.sampled_from([8, 32]),
+    st.sampled_from([4, 32]),
+    st.integers(0, 2**31 - 1),
+)
+def test_page_summaries_matches_ref(n_kv, p, d, psz, seed):
+    rng = _rng(seed)
+    k = _f32(rng, n_kv, p * psz, d)
+    lo1, hi1 = pk.page_summaries(k, psz)
+    lo2, hi2 = ref.page_summaries(k, psz)
+    assert_allclose(np.asarray(lo1), np.asarray(lo2))
+    assert_allclose(np.asarray(hi1), np.asarray(hi2))
+
+
+def test_page_summaries_bracket_every_key():
+    rng = _rng(5)
+    k = _f32(rng, 2, 128, 16)
+    lo, hi = pk.page_summaries(k, 32)
+    pages = np.asarray(k).reshape(2, 4, 32, 16)
+    assert (np.asarray(lo)[:, :, None, :] <= pages + 1e-7).all()
+    assert (np.asarray(hi)[:, :, None, :] >= pages - 1e-7).all()
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    rng = _rng(6)
+    x = _f32(rng, 16, 4, 32)
+    pos = jnp.arange(16, dtype=jnp.int32)
+    y = ref.rope(x, pos)
+    assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    rng = _rng(7)
+    q = _f32(rng, 1, 1, 64)
+    k = _f32(rng, 1, 1, 64)
+
+    def dot(m, n):
+        qm = ref.rope(q, jnp.asarray([m], jnp.int32))
+        kn = ref.rope(k, jnp.asarray([n], jnp.int32))
+        return float(np.asarray(qm).ravel() @ np.asarray(kn).ravel())
+
+    assert dot(5, 3) == pytest.approx(dot(105, 103), rel=1e-4)
+    assert dot(17, 0) == pytest.approx(dot(1017, 1000), rel=1e-4)
+
+
+def test_rope_position_zero_is_identity():
+    rng = _rng(8)
+    x = _f32(rng, 1, 2, 16)
+    y = ref.rope(x, jnp.zeros((1,), jnp.int32))
+    assert_allclose(np.asarray(y), np.asarray(x), atol=1e-7)

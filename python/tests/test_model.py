@@ -1,0 +1,187 @@
+"""L2 model tests: the paged decode path must equal full attention when the
+budget covers the whole context, and artifact functions must be shape-sound.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.aot import make_weights
+from compile.config import ModelConfig
+
+# A micro config so each test runs in < seconds under interpret mode.
+MICRO = ModelConfig(
+    name="micro",
+    n_layers=2,
+    d_model=64,
+    n_qo=4,
+    n_kv=2,
+    d_head=16,
+    d_ffn=128,
+    vocab=64,
+    page_size=4,
+    max_context=64,
+    sink_pages=1,
+    window_pages=1,
+    select_pages=2,
+)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return {k: jnp.asarray(v) for k, v in make_weights(MICRO, seed=7).items()}
+
+
+def layer_w(weights, i):
+    return [weights[f"layers.{i}.{n}"] for n in model.LAYER_WEIGHTS]
+
+
+def decode_full_budget(cfg, weights, tokens):
+    """Run the decode path token-by-token with a gathered buffer that holds
+    the *entire* history (S = budget_slots >= len(tokens)); returns logits
+    of the final step. Mirrors exactly what the rust engine does."""
+    s = cfg.budget_slots
+    t = len(tokens)
+    assert t <= s
+    k_cache = np.zeros((cfg.n_layers, cfg.n_kv, s, cfg.d_head), np.float32)
+    v_cache = np.zeros_like(k_cache)
+    valid = np.zeros((cfg.n_layers, cfg.n_kv, s), np.float32)
+    logits = None
+    for i, tok in enumerate(tokens):
+        h = model.embed(cfg, jnp.asarray([tok], jnp.int32), weights["embed"])
+        pos = jnp.asarray([i], jnp.int32)
+        for l in range(cfg.n_layers):
+            h, q, k_new, v_new = model.layer_decode(
+                cfg, h, pos,
+                jnp.asarray(k_cache[l][None]), jnp.asarray(v_cache[l][None]),
+                jnp.asarray(valid[l][None]), *layer_w(weights, l),
+            )
+            k_cache[l, :, i, :] = np.asarray(k_new[0])
+            v_cache[l, :, i, :] = np.asarray(v_new[0])
+            valid[l, :, i] = 1.0
+        logits = model.logits(cfg, h, weights["ln_f"], weights["embed"])
+    return np.asarray(logits[0])
+
+
+def test_decode_matches_reference_full_attention(weights):
+    tokens = [3, 17, 42, 5, 9, 13, 27, 31, 8, 2]
+    want = np.asarray(
+        model.reference_forward(MICRO, weights, tokens)[-1]
+    )
+    got = decode_full_budget(MICRO, weights, tokens)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_matches_reference(weights):
+    tokens = [1, 2, 3, 4, 5, 6, 7, 8]
+    t = len(tokens)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    valid = jnp.ones((t,), jnp.float32)
+    h = model.embed(MICRO, jnp.asarray(tokens, jnp.int32), weights["embed"])
+    for l in range(MICRO.n_layers):
+        h, k, v, q_last = model.layer_prefill(
+            MICRO, h, pos, valid, *layer_w(weights, l)
+        )
+    lg = model.logits(MICRO, h, weights["ln_f"], weights["embed"])
+    want = np.asarray(model.reference_forward(MICRO, weights, tokens))
+    assert_allclose(np.asarray(lg), want, rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_padding_does_not_change_valid_outputs(weights):
+    tokens = [5, 6, 7, 8, 9]
+    t_pad = 8
+    pos = jnp.asarray(list(range(len(tokens))) + [-1] * (t_pad - len(tokens)), jnp.int32)
+    valid = jnp.asarray([1.0] * len(tokens) + [0.0] * (t_pad - len(tokens)), jnp.float32)
+    toks_pad = jnp.asarray(tokens + [0] * (t_pad - len(tokens)), jnp.int32)
+    h = model.embed(MICRO, toks_pad, weights["embed"])
+    for l in range(MICRO.n_layers):
+        h, k, v, q_last = model.layer_prefill(MICRO, h, pos, valid, *layer_w(weights, l))
+    lg = np.asarray(model.logits(MICRO, h, weights["ln_f"], weights["embed"]))
+    want = np.asarray(model.reference_forward(MICRO, weights, tokens))
+    assert_allclose(lg[: len(tokens)], want, rtol=2e-4, atol=3e-4)
+
+
+def test_prefill_kv_matches_decode_kv(weights):
+    """K/V produced by prefill must equal K/V produced stepping one by one."""
+    tokens = [9, 8, 7, 6]
+    t = len(tokens)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    valid = jnp.ones((t,), jnp.float32)
+    h0 = model.embed(MICRO, jnp.asarray(tokens, jnp.int32), weights["embed"])
+    _, k_pre, v_pre, _ = model.layer_prefill(MICRO, h0, pos, valid, *layer_w(weights, 0))
+
+    s = MICRO.budget_slots
+    kc = jnp.zeros((1, MICRO.n_kv, s, MICRO.d_head), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    vmask = jnp.zeros((1, MICRO.n_kv, s), jnp.float32)
+    for i, tok in enumerate(tokens):
+        h = model.embed(MICRO, jnp.asarray([tok], jnp.int32), weights["embed"])
+        _, _, k_new, v_new = model.layer_decode(
+            MICRO, h, jnp.asarray([i], jnp.int32), kc, vc, vmask, *layer_w(weights, 0)
+        )
+        assert_allclose(
+            np.asarray(k_new[0]), np.asarray(k_pre)[:, i, :], rtol=1e-4, atol=1e-5
+        )
+        kc = kc.at[0, :, i, :].set(k_new[0])
+        vc = vc.at[0, :, i, :].set(v_new[0])
+        vmask = vmask.at[0, :, i].set(1.0)
+
+
+def test_select_artifact_shapes(weights):
+    b, p = 2, MICRO.n_pages_max
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, MICRO.n_qo, MICRO.d_head)), jnp.float32)
+    smin = jnp.asarray(rng.normal(size=(b, MICRO.n_kv, p, MICRO.d_head)), jnp.float32)
+    smax = smin + 1.0
+    mask = jnp.ones((b, p), jnp.float32)
+    scores, idx = model.select(MICRO, q, smin, smax, mask)
+    assert scores.shape == (b, MICRO.n_kv, p)
+    assert idx.shape == (b, MICRO.n_kv, MICRO.select_pages)
+    assert int(idx.max()) < p and int(idx.min()) >= 0
+
+
+def test_select_prefers_high_attention_pages(weights):
+    """Pages whose keys align with q must be selected over orthogonal ones."""
+    rng = np.random.default_rng(1)
+    p, psz, d = MICRO.n_pages_max, MICRO.page_size, MICRO.d_head
+    q = jnp.asarray(rng.normal(size=(1, MICRO.n_qo, d)), jnp.float32)
+    keys = rng.normal(size=(MICRO.n_kv, p * psz, d)).astype(np.float32) * 0.01
+    hot = [3, 7, 11]
+    for pg in hot:
+        # keys in hot pages point along q for every head in the group
+        keys[:, pg * psz:(pg + 1) * psz, :] += np.asarray(q).reshape(
+            MICRO.n_kv, MICRO.group_size, d
+        ).mean(1)[:, None, :]
+    from compile.kernels import ref as _ref
+    smin, smax = _ref.page_summaries(jnp.asarray(keys), psz)
+    mask = jnp.ones((1, p), jnp.float32)
+    _, idx = model.select(MICRO, q, smin[None], smax[None], mask)
+    got = set(np.asarray(idx).ravel().tolist())
+    assert set(hot) <= got
+
+
+def test_split_layer_equals_combined(weights):
+    """layer_qkv + layer_attn (the correction-capable path the rust engine
+    uses) must equal the fused layer_decode artifact exactly."""
+    rng = np.random.default_rng(2)
+    s = MICRO.budget_slots
+    h = jnp.asarray(rng.normal(size=(1, MICRO.d_model)), jnp.float32)
+    pos = jnp.asarray([5], jnp.int32)
+    kc = jnp.asarray(rng.normal(size=(1, MICRO.n_kv, s, MICRO.d_head)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(1, MICRO.n_kv, s, MICRO.d_head)), jnp.float32)
+    valid = jnp.asarray(rng.integers(0, 2, size=(1, MICRO.n_kv, s)), jnp.float32)
+    w = layer_w(weights, 0)
+    h1, q1, k1, v1 = model.layer_decode(MICRO, h, pos, kc, vc, valid, *w)
+    ln1, wq, wk, wv, wo, ln2, wg, wu, wd = w
+    q2, k2, v2 = model.layer_qkv(MICRO, h, pos, ln1, wq, wk, wv)
+    h2 = model.layer_attn(MICRO, h, q2, k2, v2, kc, vc, valid, wo, ln2, wg, wu, wd)
+    assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+    assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-6)
+
+
+def test_logits_finite(weights):
+    h = jnp.ones((1, MICRO.d_model), jnp.float32)
+    lg = model.logits(MICRO, h, weights["ln_f"], weights["embed"])
+    assert np.isfinite(np.asarray(lg)).all()

@@ -1,0 +1,77 @@
+//! Bench: Fig. 9 optimization ablation (HL / DB / SR) on paper geometry,
+//! plus the real-engine speculative-vs-blocking comparison on the tiny
+//! model. `cargo bench --bench ablation`.
+
+use std::time::Instant;
+
+use freekv::config::{FreeKvParams, ModelConfig};
+use freekv::coordinator::engine::{Engine, SampleParams};
+use freekv::policies::latency::{simulate_request, Method, SimKnobs};
+use freekv::runtime::Runtime;
+use freekv::sim::{CostModel, DeviceProfile};
+
+fn main() {
+    println!("=== bench ablation: Fig. 9 (modeled, Llama-3.1-8B) ===");
+    let cm = CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b());
+    for (scenario, input, output, base) in [
+        ("long-input 32K->512", 32768usize, 512usize, SimKnobs::default()),
+        ("long-gen 600->2K", 600, 2048, SimKnobs::long_generation()),
+    ] {
+        for b in [1usize, 4] {
+            println!("--- {} (b={}) ---", scenario, b);
+            let mut baseline = 0.0;
+            for (label, hl, db, sr) in [
+                ("none", false, false, false),
+                ("+HL", true, false, false),
+                ("+HL+DB", true, true, false),
+                ("+HL+DB+SR", true, true, true),
+            ] {
+                let knobs = SimKnobs {
+                    hybrid_layout: hl,
+                    double_buffer: db,
+                    speculative: sr,
+                    ..base.clone()
+                };
+                let r = simulate_request(Method::FreeKv, &cm, b, input, output.min(1024), &knobs);
+                let pt = r.per_token() * 1e3;
+                if !hl {
+                    baseline = pt;
+                }
+                println!("{:<10} {:>8.2} ms/tok   {:>5.2}x", label, pt, baseline / pt);
+            }
+        }
+    }
+
+    println!();
+    println!("=== bench ablation: REAL engine speculative vs blocking (tiny) ===");
+    if Runtime::load("artifacts").is_err() {
+        println!("artifacts/ missing — run `make artifacts` (skipping real bench)");
+        return;
+    }
+    for (label, blocking, tau) in
+        [("speculative tau=0.9", false, 0.9f32), ("blocking (no spec)", true, 1.0)]
+    {
+        let rt = Runtime::load("artifacts").unwrap();
+        let mut eng = Engine::new(rt, "tiny", FreeKvParams { tau, ..Default::default() }).unwrap();
+        eng.blocking_mode = blocking;
+        let prompt: Vec<i32> = (0..600).map(|i| (i * 13 % 250) as i32).collect();
+        let mut seq = eng.new_sequence(
+            1,
+            prompt,
+            96,
+            SampleParams { temperature: 0.8, top_p: 0.95, seed: 3 },
+        );
+        let t0 = Instant::now();
+        eng.generate(&mut seq).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<22} {:>6.1} ms/step | recalled {:>5} pages | corrections {:>4} | recall wall {:>6.1} ms [total {:.2}s]",
+            label,
+            eng.stats.decode_secs / eng.stats.steps.max(1) as f64 * 1e3,
+            eng.stats.recalled_pages,
+            eng.stats.corrections,
+            eng.stats.recall_secs * 1e3,
+            dt,
+        );
+    }
+}

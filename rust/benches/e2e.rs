@@ -1,0 +1,90 @@
+//! Bench: end-to-end latency per method (Fig. 7 + Fig. 8 grids on the
+//! paper geometries via the event simulator) plus the *real* tiny-model
+//! decode throughput of the rust engine. `cargo bench --bench e2e`.
+
+use std::time::Instant;
+
+use freekv::config::{FreeKvParams, ModelConfig};
+use freekv::coordinator::engine::{Engine, SampleParams};
+use freekv::policies::latency::{simulate_request, Method, SimKnobs};
+use freekv::runtime::Runtime;
+use freekv::sim::{CostModel, DeviceProfile};
+
+fn main() {
+    println!("=== bench e2e: Fig. 7 grid (A100 profile, modeled) ===");
+    for model in [ModelConfig::qwen25_7b(), ModelConfig::llama31_8b()] {
+        let cm = CostModel::new(DeviceProfile::a100_pcie4(), model.clone());
+        for (scenario, input, output, knobs) in [
+            ("long-input 32K->512", 32768usize, 512usize, SimKnobs::default()),
+            ("long-gen 600->16K", 600, 16384, SimKnobs::long_generation()),
+        ] {
+            println!("--- {} {} ---", model.name, scenario);
+            let steps = output.min(1024);
+            let mut freekv_total = f64::MAX;
+            let mut rows = Vec::new();
+            for method in [
+                Method::Razor,
+                Method::RaaS,
+                Method::ArkVale,
+                Method::ShadowKv,
+                Method::InfiniGen,
+                Method::FreeKv,
+            ] {
+                let t0 = Instant::now();
+                let r = simulate_request(method, &cm, 4, input, steps, &knobs);
+                let total = r.prefill_secs + r.per_token() * output as f64;
+                if method == Method::FreeKv {
+                    freekv_total = total;
+                }
+                rows.push((method, total, t0.elapsed().as_secs_f64()));
+            }
+            for (method, total, sim_wall) in rows {
+                println!(
+                    "{:<10} b=4 modeled {:>8.2}s  ({:>5.2}x vs freekv)  [sim wall {:.2}s]",
+                    method.name(),
+                    total,
+                    total / freekv_total,
+                    sim_wall
+                );
+            }
+        }
+    }
+
+    println!();
+    println!("=== bench e2e: real tiny-model engine throughput ===");
+    let Ok(rt) = Runtime::load("artifacts") else {
+        println!("artifacts/ missing — run `make artifacts` (skipping real bench)");
+        return;
+    };
+    let mut eng = Engine::new(rt, "tiny", FreeKvParams { tau: 0.9, ..Default::default() }).unwrap();
+    let prompt: Vec<i32> = (0..480).map(|i| (i * 17 % 250) as i32).collect();
+    for &batch in &[1usize, 4] {
+        let mut seqs: Vec<_> = (0..batch)
+            .map(|i| {
+                eng.new_sequence(
+                    i as u64,
+                    prompt.clone(),
+                    64,
+                    SampleParams { temperature: 0.8, top_p: 0.95, seed: i as u64 },
+                )
+            })
+            .collect();
+        for s in seqs.iter_mut() {
+            let _ = eng.prefill(s).unwrap();
+            s.tokens.push(1);
+        }
+        let steps = 48;
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            let mut batch_refs: Vec<&mut _> = seqs.iter_mut().collect();
+            eng.decode_step(&mut batch_refs).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "real decode: batch={} {:>6.1} ms/step  {:>6.1} tok/s",
+            batch,
+            dt / steps as f64 * 1e3,
+            (steps * batch) as f64 / dt
+        );
+    }
+}

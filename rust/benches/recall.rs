@@ -1,0 +1,87 @@
+//! Bench: recall path microbenchmarks — the Fig. 1 (right) breakdown on
+//! paper geometry, plus *real* chunked-copy throughput of the transfer
+//! engine under HND vs NHD CPU layouts (the physical effect the hybrid
+//! layout exploits). `cargo bench --bench recall`.
+
+use std::time::Instant;
+
+use freekv::kvcache::{GpuLayerCache, LayerPool, Layout};
+use freekv::policies::latency::{simulate_request, Method, SimKnobs};
+use freekv::sim::{CostModel, DeviceProfile};
+use freekv::transfer::TransferEngine;
+use freekv::util::rng::Rng;
+
+fn main() {
+    println!("=== bench recall: Fig. 1 (right) breakdown (modeled, Llama-3.1-8B 32K) ===");
+    let cm = CostModel::new(
+        DeviceProfile::a100_pcie4(),
+        freekv::config::ModelConfig::llama31_8b(),
+    );
+    let knobs = SimKnobs::default();
+    for method in [Method::ArkVale, Method::ShadowKv, Method::InfiniGen, Method::FreeKv] {
+        let r = simulate_request(method, &cm, 1, 32768, 64, &knobs);
+        let per = r.steps as f64;
+        println!(
+            "{:<10} total {:>7.2} ms/tok | compute {:>6.2} sel {:>5.2} recall-exposed {:>7.2} (busy {:>7.2})",
+            method.name(),
+            r.per_token() * 1e3,
+            (r.compute_busy - r.selection_busy) / per * 1e3,
+            r.selection_busy / per * 1e3,
+            r.recall_exposed / per * 1e3,
+            r.recall_busy / per * 1e3,
+        );
+    }
+
+    println!();
+    println!("=== bench recall: REAL chunked-copy throughput (HND vs NHD pool) ===");
+    // paper-scale page geometry: p=32, d=128, n_kv=8
+    let (pages, n_kv, p, d) = (256usize, 8usize, 32usize, 128usize);
+    let mut rng = Rng::new(1);
+    for layout in [Layout::Hnd, Layout::Nhd] {
+        let mut pool = LayerPool::new(layout, pages, n_kv, p, d);
+        let page_elems = p * n_kv * d;
+        let kdata: Vec<f32> = (0..page_elems).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for pg in 0..pages {
+            pool.write_page(pg, &kdata, &kdata);
+        }
+        let mut gpu = GpuLayerCache::new(n_kv, d, p, 2, 2, 48, pages);
+        // fill the gpu cache so selection slots exist
+        for _ in 0..p * 4 {
+            let t: Vec<f32> = (0..n_kv * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            gpu.append(&t.clone(), &t);
+        }
+        let mut eng = TransferEngine::new(p, d, true);
+        let iters = 2000usize;
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let page = 4 + (i % (pages - 8));
+            let head = i % n_kv;
+            let slot = i % 48;
+            eng.recall_page(&pool, page, head, &mut gpu, slot);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let c = &eng.counters;
+        println!(
+            "{:?}: {} page-head recalls in {:>7.2} ms | {:>6.1} MB/s effective | {} chunks ({} B/chunk) | h2d {:.2} ms convert {:.2} ms",
+            layout,
+            iters,
+            dt * 1e3,
+            c.h2d_bytes as f64 / dt / 1e6,
+            c.h2d_chunks,
+            c.h2d_bytes / c.h2d_chunks.max(1),
+            c.real_h2d_secs * 1e3,
+            c.real_convert_secs * 1e3,
+        );
+    }
+
+    println!();
+    println!("=== bench recall: modeled PCIe time per 32-page recall ===");
+    for (label, hnd) in [("HND (FreeKV)", true), ("NHD (baseline)", false)] {
+        let t = cm.recall_pages(32, hnd);
+        println!("{:<16} {:>9.3} ms", label, t * 1e3);
+    }
+    println!(
+        "token-wise (InfiniGen-style, same bytes): {:>9.3} ms",
+        cm.recall_tokens(32 * 32) * 1e3
+    );
+}

@@ -1,0 +1,274 @@
+//! Model / retrieval configuration, mirrored from the python compile path
+//! via `artifacts/manifest.json` (plus hand-constructed paper geometries
+//! for the latency simulator).
+
+use crate::util::json::Json;
+
+/// Geometry of a GQA transformer plus FreeKV paging parameters.
+/// Field names match `python/compile/config.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_qo: usize,
+    pub n_kv: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+    pub page_size: usize,
+    pub max_context: usize,
+    pub sink_pages: usize,
+    pub window_pages: usize,
+    pub select_pages: usize,
+    /// bytes per element of the KV cache (4 = f32 on the CPU plugin;
+    /// paper-geometry simulations use 2 = fp16).
+    pub kv_elem_bytes: usize,
+}
+
+impl ModelConfig {
+    pub fn group_size(&self) -> usize {
+        self.n_qo / self.n_kv
+    }
+    pub fn n_pages_max(&self) -> usize {
+        self.max_context / self.page_size
+    }
+    pub fn budget_pages(&self) -> usize {
+        self.sink_pages + self.window_pages + self.select_pages
+    }
+    /// S: gathered token slots the decode attention kernel sees.
+    pub fn budget_slots(&self) -> usize {
+        self.budget_pages() * self.page_size
+    }
+    /// Bytes of one KV page for one kv head (K and V planes together).
+    pub fn page_bytes_per_head(&self) -> usize {
+        2 * self.page_size * self.d_head * self.kv_elem_bytes
+    }
+    /// Bytes of one full KV page across kv heads (K+V).
+    pub fn page_bytes(&self) -> usize {
+        self.n_kv * self.page_bytes_per_head()
+    }
+    /// Full-context KV bytes per layer.
+    pub fn kv_bytes_per_layer(&self, context: usize) -> usize {
+        2 * context * self.n_kv * self.d_head * self.kv_elem_bytes
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        let req = |k: &str| -> anyhow::Result<f64> {
+            j.get(k).as_f64().ok_or_else(|| anyhow::anyhow!("manifest config missing `{}`", k))
+        };
+        Ok(ModelConfig {
+            name: j.get("name").as_str().unwrap_or("?").to_string(),
+            n_layers: req("n_layers")? as usize,
+            d_model: req("d_model")? as usize,
+            n_qo: req("n_qo")? as usize,
+            n_kv: req("n_kv")? as usize,
+            d_head: req("d_head")? as usize,
+            d_ffn: req("d_ffn")? as usize,
+            vocab: req("vocab")? as usize,
+            rope_theta: req("rope_theta")?,
+            rms_eps: req("rms_eps")?,
+            page_size: req("page_size")? as usize,
+            max_context: req("max_context")? as usize,
+            sink_pages: req("sink_pages")? as usize,
+            window_pages: req("window_pages")? as usize,
+            select_pages: req("select_pages")? as usize,
+            kv_elem_bytes: 4,
+        })
+    }
+
+    // ----- paper geometries (for the latency simulator; fp16 KV) -----
+
+    /// Llama-3.1-8B-Instruct: 32 layers, 32 q heads, 8 kv heads, d=128.
+    pub fn llama31_8b() -> ModelConfig {
+        ModelConfig {
+            name: "llama-3.1-8b".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_qo: 32,
+            n_kv: 8,
+            d_head: 128,
+            d_ffn: 14336,
+            vocab: 128256,
+            rope_theta: 500000.0,
+            rms_eps: 1e-5,
+            page_size: 32,
+            max_context: 131072,
+            sink_pages: 16,   // S = 512 (paper efficiency setup)
+            window_pages: 16, // W = 512
+            select_pages: 32, // B = 2048 total budget
+            kv_elem_bytes: 2,
+        }
+    }
+
+    /// Qwen-2.5-7B-Instruct: 28 layers, 28 q heads, 4 kv heads, d=128.
+    pub fn qwen25_7b() -> ModelConfig {
+        ModelConfig {
+            name: "qwen-2.5-7b".into(),
+            n_layers: 28,
+            d_model: 3584,
+            n_qo: 28,
+            n_kv: 4,
+            d_head: 128,
+            d_ffn: 18944,
+            vocab: 152064,
+            rope_theta: 1000000.0,
+            rms_eps: 1e-6,
+            page_size: 32,
+            max_context: 131072,
+            sink_pages: 16,
+            window_pages: 16,
+            select_pages: 32,
+            kv_elem_bytes: 2,
+        }
+    }
+
+    /// Qwen-2.5-14B-Instruct: 48 layers, 40 q heads, 8 kv heads, d=128.
+    pub fn qwen25_14b() -> ModelConfig {
+        ModelConfig {
+            name: "qwen-2.5-14b".into(),
+            n_layers: 48,
+            d_model: 5120,
+            n_qo: 40,
+            n_kv: 8,
+            d_head: 128,
+            d_ffn: 13824,
+            vocab: 152064,
+            rope_theta: 1000000.0,
+            rms_eps: 1e-5,
+            page_size: 32,
+            max_context: 131072,
+            sink_pages: 16,
+            window_pages: 16,
+            select_pages: 32,
+            kv_elem_bytes: 2,
+        }
+    }
+
+    pub fn paper_geometry(name: &str) -> Option<ModelConfig> {
+        match name {
+            "llama-3.1-8b" => Some(Self::llama31_8b()),
+            "qwen-2.5-7b" => Some(Self::qwen25_7b()),
+            "qwen-2.5-14b" => Some(Self::qwen25_14b()),
+            _ => None,
+        }
+    }
+}
+
+/// FreeKV algorithm parameters (paper §3 + Appendix A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FreeKvParams {
+    /// Correction threshold tau: correction triggers when the
+    /// group-pooled cos(q_i, q_{i-1}) drops below tau.
+    pub tau: f32,
+    /// Group pooling for the correction similarity: mean (paper) or max.
+    pub correction_pool_max: bool,
+    /// Selection variant (MeanS default, see Appendix B.2).
+    pub variant: SelectVariant,
+    /// Disable speculation entirely (tau = 1 equivalent fast path).
+    pub no_speculation: bool,
+}
+
+impl Default for FreeKvParams {
+    fn default() -> Self {
+        FreeKvParams {
+            tau: 0.8,
+            correction_pool_max: false,
+            variant: SelectVariant::MeanS,
+            no_speculation: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SelectVariant {
+    MeanS,
+    MaxS,
+    MeanQK,
+    MaxQK,
+    MeanQ,
+    MaxQ,
+}
+
+impl SelectVariant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SelectVariant::MeanS => "means",
+            SelectVariant::MaxS => "maxs",
+            SelectVariant::MeanQK => "meanqk",
+            SelectVariant::MaxQK => "maxqk",
+            SelectVariant::MeanQ => "meanq",
+            SelectVariant::MaxQ => "maxq",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SelectVariant> {
+        Some(match s {
+            "means" => SelectVariant::MeanS,
+            "maxs" => SelectVariant::MaxS,
+            "meanqk" => SelectVariant::MeanQK,
+            "maxqk" => SelectVariant::MaxQK,
+            "meanq" => SelectVariant::MeanQ,
+            "maxq" => SelectVariant::MaxQ,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [SelectVariant; 6] {
+        [
+            SelectVariant::MeanS,
+            SelectVariant::MaxS,
+            SelectVariant::MeanQK,
+            SelectVariant::MaxQK,
+            SelectVariant::MeanQ,
+            SelectVariant::MaxQ,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_quantities() {
+        let c = ModelConfig::llama31_8b();
+        assert_eq!(c.group_size(), 4);
+        assert_eq!(c.budget_pages(), 64);
+        assert_eq!(c.budget_slots(), 2048); // paper budget B = 2048
+        assert_eq!(c.page_bytes_per_head(), 2 * 32 * 128 * 2);
+        assert_eq!(c.n_pages_max(), 4096);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let src = r#"{
+            "name": "tiny", "n_layers": 4, "d_model": 256, "n_qo": 8,
+            "n_kv": 2, "d_head": 32, "d_ffn": 704, "vocab": 260,
+            "rope_theta": 10000.0, "rms_eps": 1e-5, "page_size": 32,
+            "max_context": 4096, "sink_pages": 2, "window_pages": 2,
+            "select_pages": 12
+        }"#;
+        let c = ModelConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(c.n_layers, 4);
+        assert_eq!(c.group_size(), 4);
+        assert_eq!(c.budget_slots(), 16 * 32);
+        assert_eq!(c.kv_elem_bytes, 4);
+    }
+
+    #[test]
+    fn from_json_missing_field_errors() {
+        let c = ModelConfig::from_json(&Json::parse(r#"{"name":"x"}"#).unwrap());
+        assert!(c.is_err());
+    }
+
+    #[test]
+    fn variant_parse() {
+        for v in SelectVariant::all() {
+            assert_eq!(SelectVariant::parse(v.as_str()), Some(v));
+        }
+        assert_eq!(SelectVariant::parse("nope"), None);
+    }
+}

@@ -1,0 +1,571 @@
+//! The real inference engine: drives the AOT artifacts through the FreeKV
+//! data path — per-layer QKV, fine-grained correction, gathered-page
+//! attention, append/offload, and speculative selection+recall for the
+//! next step. Python is never touched; everything runs over the PJRT CPU
+//! client against `artifacts/`.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{FreeKvParams, ModelConfig};
+use crate::kvcache::{Layout, RequestKv};
+use crate::policies::freekv::{correction_check, SpecState};
+use crate::runtime::{HostTensor, Runtime};
+use crate::transfer::TransferEngine;
+use crate::util::rng::Rng;
+
+/// Wall-time breakdown of the real pipeline (per engine, cumulative).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub qkv_secs: f64,
+    pub attn_secs: f64,
+    pub select_secs: f64,
+    pub gather_secs: f64,
+    pub recall_secs: f64,
+    pub logits_secs: f64,
+    pub steps: u64,
+    pub prefills: u64,
+    pub corrections: u64,
+    pub correction_checks: u64,
+    pub recalled_pages: u64,
+    pub speculative_hits: u64,
+}
+
+impl EngineStats {
+    pub fn correction_rate(&self) -> f64 {
+        if self.correction_checks == 0 {
+            0.0
+        } else {
+            self.corrections as f64 / self.correction_checks as f64
+        }
+    }
+}
+
+/// Sampling parameters.
+#[derive(Debug, Clone)]
+pub struct SampleParams {
+    pub temperature: f32,
+    pub top_p: f32,
+    pub seed: u64,
+}
+
+impl SampleParams {
+    pub fn greedy() -> SampleParams {
+        SampleParams { temperature: 0.0, top_p: 1.0, seed: 0 }
+    }
+}
+
+/// One in-flight sequence (request) with its KV state.
+pub struct Sequence {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub kv: RequestKv,
+    pub xfer: TransferEngine,
+    pub sample: SampleParams,
+    pub rng: Rng,
+    pub finished: bool,
+    pub eos: Option<i32>,
+    spec: Vec<SpecState>,
+    /// scratch gather buffers (reused every layer/step).
+    gk: Vec<f32>,
+    gv: Vec<f32>,
+    gvalid: Vec<f32>,
+}
+
+impl Sequence {
+    pub fn new(id: u64, cfg: &ModelConfig, prompt: Vec<i32>, max_new: usize, layout: Layout, sample: SampleParams) -> Sequence {
+        let s = cfg.budget_slots();
+        Sequence {
+            id,
+            prompt_len: prompt.len(),
+            tokens: prompt,
+            max_new_tokens: max_new,
+            kv: RequestKv::new(cfg, layout),
+            xfer: TransferEngine::new(cfg.page_size, cfg.d_head, true),
+            rng: Rng::new(sample.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15)),
+            sample,
+            finished: false,
+            eos: None,
+            spec: (0..cfg.n_layers).map(|_| SpecState::new(cfg.n_qo, cfg.n_kv, cfg.d_head)).collect(),
+            gk: vec![0.0; cfg.n_kv * s * cfg.d_head],
+            gv: vec![0.0; cfg.n_kv * s * cfg.d_head],
+            gvalid: vec![0.0; cfg.n_kv * s],
+        }
+    }
+
+    pub fn generated(&self) -> &[i32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    pub fn pos(&self) -> usize {
+        self.kv.len()
+    }
+
+    pub fn done(&self) -> bool {
+        self.finished || self.generated().len() >= self.max_new_tokens
+    }
+}
+
+/// The engine: owns the runtime handle + model config and executes the
+/// decode pipeline for batches of sequences.
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    pub cfg_name: String,
+    pub params: FreeKvParams,
+    pub stats: EngineStats,
+    /// disable speculation+correction entirely: run selection blocking
+    /// each step (tau=1-like reference mode).
+    pub blocking_mode: bool,
+    /// when set, per-head query similarities are recorded as
+    /// (layer, sims[n_qo]) tuples each decode step (Fig. 3 / Table 8).
+    pub record_sims: bool,
+    pub sim_trace: Vec<(usize, Vec<f32>)>,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, cfg_name: &str, params: FreeKvParams) -> Result<Engine> {
+        let cfg = rt.manifest.config(cfg_name)?.clone();
+        Ok(Engine {
+            rt,
+            cfg,
+            cfg_name: cfg_name.to_string(),
+            params,
+            stats: EngineStats::default(),
+            blocking_mode: false,
+            record_sims: false,
+            sim_trace: Vec::new(),
+        })
+    }
+
+    pub fn art(&self, name: &str) -> String {
+        format!("{}_{}", self.cfg_name, name)
+    }
+
+    /// Create a fresh sequence for a prompt.
+    pub fn new_sequence(&self, id: u64, prompt: Vec<i32>, max_new: usize, sample: SampleParams) -> Sequence {
+        Sequence::new(id, &self.cfg, prompt, max_new, Layout::Hnd, sample)
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    /// Run prefill for one sequence; returns the next-token logits.
+    pub fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let cfg = self.cfg.clone();
+        let len = seq.tokens.len();
+        let bucket = self
+            .rt
+            .manifest
+            .prefill_bucket(len)
+            .ok_or_else(|| anyhow!("prompt of {} tokens exceeds prefill buckets", len))?;
+
+        let mut toks = seq.tokens.clone();
+        toks.resize(bucket, 0);
+        let mut pos: Vec<i32> = (0..len as i32).collect();
+        pos.resize(bucket, -1);
+        let mut valid = vec![1.0f32; len];
+        valid.resize(bucket, 0.0);
+
+        let h = self
+            .rt
+            .run(&self.art(&format!("embed_t{}", bucket)), &[HostTensor::I32(toks, vec![bucket])], None)?
+            .remove(0);
+        let mut h = h;
+        let pos_t = HostTensor::I32(pos, vec![bucket]);
+        let valid_t = HostTensor::F32(valid, vec![bucket]);
+        let mut q_last_per_layer: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers);
+
+        for l in 0..cfg.n_layers {
+            let out = self.rt.run(
+                &self.art(&format!("layer_prefill_t{}", bucket)),
+                &[h.clone(), pos_t.clone(), valid_t.clone()],
+                Some(l),
+            )?;
+            let mut it = out.into_iter();
+            h = it.next().unwrap();
+            let k = it.next().unwrap().into_f32s()?;
+            let v = it.next().unwrap().into_f32s()?;
+            let q_last = it.next().unwrap().into_f32s()?;
+            // populate GPU cache + offload completed pages
+            let st = &mut seq.kv.layers[l];
+            let completed = st.gpu.load_prefill(&k, &v, len, bucket);
+            for cp in &completed {
+                seq.xfer.offload_page(cp, &mut st.pool);
+            }
+            q_last_per_layer.push(q_last);
+        }
+
+        // Final logits of the last valid token.
+        let lg = self
+            .rt
+            .run(
+                &self.art(&format!("logits_t{}", bucket)),
+                &[h],
+                None,
+            )?
+            .remove(0)
+            .into_f32s()?;
+        let row = &lg[(len - 1) * cfg.vocab..len * cfg.vocab];
+
+        // Seed speculation: select with the last prompt token's query.
+        for l in 0..cfg.n_layers {
+            let q = &q_last_per_layer[l];
+            let sel = self.run_selection_single(seq, l, q)?;
+            for (m, pages) in sel.iter().enumerate() {
+                let n = seq.kv.apply_selection(l, m, pages, &mut seq.xfer);
+                self.stats.recalled_pages += n as u64;
+            }
+            seq.spec[l].store(q);
+        }
+
+        self.stats.prefills += 1;
+        self.stats.prefill_secs += t0.elapsed().as_secs_f64();
+        Ok(row.to_vec())
+    }
+
+    // ------------------------------------------------------------------
+    // Decode
+    // ------------------------------------------------------------------
+
+    /// Run one decode step for a batch of sequences (all must have at
+    /// least one token; finished lanes are skipped by the caller).
+    /// Appends the sampled token to each sequence.
+    pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+        let t_step = Instant::now();
+        let cfg = self.cfg.clone();
+        let n = seqs.len();
+        let bucket = self
+            .rt
+            .manifest
+            .decode_bucket(n)
+            .ok_or_else(|| anyhow!("batch {} exceeds decode buckets", n))?;
+        let (m, dh, qo, s) = (cfg.n_kv, cfg.d_head, cfg.n_qo, cfg.budget_slots());
+
+        // ---- embed ----
+        let mut toks: Vec<i32> = seqs.iter().map(|q| *q.tokens.last().unwrap()).collect();
+        toks.resize(bucket, 0);
+        let mut pos: Vec<i32> = seqs.iter().map(|q| q.pos() as i32).collect();
+        pos.resize(bucket, 0);
+        let mut h = self
+            .rt
+            .run(&self.art(&format!("embed_b{}", bucket)), &[HostTensor::I32(toks, vec![bucket])], None)?
+            .remove(0);
+        let pos_t = HostTensor::I32(pos, vec![bucket]);
+
+        for l in 0..cfg.n_layers {
+            // ---- QKV (split from attention so correction can intercept
+            // between computing q_i and attending, per Fig. 4b) ----
+            let t0 = Instant::now();
+            let out = self.rt.run(
+                &self.art(&format!("layer_qkv_b{}", bucket)),
+                &[h.clone(), pos_t.clone()],
+                Some(l),
+            )?;
+            self.stats.qkv_secs += t0.elapsed().as_secs_f64();
+            let mut it = out.into_iter();
+            let q_t = it.next().unwrap();
+            let k_new_t = it.next().unwrap();
+            let v_new_t = it.next().unwrap();
+            let q_all = q_t.f32s()?.to_vec();
+            let k_new = k_new_t.f32s()?.to_vec();
+            let v_new = v_new_t.f32s()?.to_vec();
+
+            // ---- selection with the current step's queries (batched):
+            // used NOW for corrected heads, and for the NEXT step's
+            // speculative reuse. ----
+            let t0 = Instant::now();
+            let sel_pages = self.run_selection_batch(seqs, l, &q_all, bucket)?;
+            self.stats.select_secs += t0.elapsed().as_secs_f64();
+
+            // ---- correction check + blocking recall for flagged heads --
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                let q_i = &q_all[i * qo * dh..(i + 1) * qo * dh];
+                // Following the paper (App. A), compression heuristics are
+                // not applied to the first layer: its query similarity is
+                // inherently low (h = embedding only), so layer 0 always
+                // runs blocking selection and is excluded from correction
+                // statistics.
+                let decision = if self.blocking_mode || l == 0 {
+                    None
+                } else {
+                    seq.spec[l].head_similarities(q_i).map(|sims| {
+                        self.stats.correction_checks += m as u64;
+                        if self.record_sims {
+                            self.sim_trace.push((l, sims.clone()));
+                        }
+                        correction_check(&sims, m, &self.params)
+                    })
+                };
+                match decision {
+                    Some(d) => {
+                        for &head in &d.corrected_heads {
+                            self.stats.corrections += 1;
+                            let t1 = Instant::now();
+                            let nrec = seq.kv.apply_selection(
+                                l,
+                                head,
+                                &sel_pages[i][head],
+                                &mut seq.xfer,
+                            );
+                            self.stats.recall_secs += t1.elapsed().as_secs_f64();
+                            self.stats.recalled_pages += nrec as u64;
+                        }
+                        let hit = m - d.corrected_heads.len();
+                        self.stats.speculative_hits += hit as u64;
+                    }
+                    None => {
+                        // blocking/first-layer path: install the current
+                        // selection before attention.
+                        for head in 0..m {
+                            let t1 = Instant::now();
+                            let nrec = seq.kv.apply_selection(
+                                l,
+                                head,
+                                &sel_pages[i][head],
+                                &mut seq.xfer,
+                            );
+                            self.stats.recall_secs += t1.elapsed().as_secs_f64();
+                            self.stats.recalled_pages += nrec as u64;
+                        }
+                    }
+                }
+            }
+
+            // ---- gather + attention ----
+            let t0 = Instant::now();
+            let (gk, gv, gvalid) = self.gather_batch(seqs, l, bucket);
+            self.stats.gather_secs += t0.elapsed().as_secs_f64();
+
+            let t0 = Instant::now();
+            let out = self.rt.run(
+                &self.art(&format!("layer_attn_b{}", bucket)),
+                &[
+                    h,
+                    q_t.clone(),
+                    k_new_t.clone(),
+                    v_new_t.clone(),
+                    HostTensor::F32(gk, vec![bucket, m, s, dh]),
+                    HostTensor::F32(gv, vec![bucket, m, s, dh]),
+                    HostTensor::F32(gvalid, vec![bucket, m, s]),
+                ],
+                Some(l),
+            )?;
+            self.stats.attn_secs += t0.elapsed().as_secs_f64();
+            h = out.into_iter().next().unwrap();
+
+            // ---- append new KV, offload completed pages ----
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                let kn = &k_new[i * m * dh..(i + 1) * m * dh];
+                let vn = &v_new[i * m * dh..(i + 1) * m * dh];
+                seq.kv.append(l, kn, vn, &mut seq.xfer);
+            }
+
+            // ---- speculative recall for the NEXT step (non-corrected
+            // heads; page-cache diff makes re-selection cheap) ----
+            if !self.blocking_mode {
+                for (i, seq) in seqs.iter_mut().enumerate() {
+                    for head in 0..m {
+                        let t1 = Instant::now();
+                        let nrec =
+                            seq.kv.apply_selection(l, head, &sel_pages[i][head], &mut seq.xfer);
+                        self.stats.recall_secs += t1.elapsed().as_secs_f64();
+                        self.stats.recalled_pages += nrec as u64;
+                    }
+                }
+            }
+
+            // remember q for the next step's correction check
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                seq.spec[l].store(&q_all[i * qo * dh..(i + 1) * qo * dh]);
+            }
+        }
+
+        // ---- logits + sampling ----
+        let t0 = Instant::now();
+        let lg = self
+            .rt
+            .run(&self.art(&format!("logits_b{}", bucket)), &[h], None)?
+            .remove(0)
+            .into_f32s()?;
+        self.stats.logits_secs += t0.elapsed().as_secs_f64();
+        for (i, seq) in seqs.iter_mut().enumerate() {
+            let row = &lg[i * cfg.vocab..(i + 1) * cfg.vocab];
+            let tok = sample_token(row, &seq.sample, &mut seq.rng);
+            seq.tokens.push(tok);
+            if Some(tok) == seq.eos {
+                seq.finished = true;
+            }
+        }
+
+        self.stats.steps += 1;
+        self.stats.decode_secs += t_step.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Gather every sequence's resident pages into batch tensors.
+    fn gather_batch(
+        &self,
+        seqs: &mut [&mut Sequence],
+        layer: usize,
+        bucket: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let cfg = &self.cfg;
+        let (m, dh, s) = (cfg.n_kv, cfg.d_head, cfg.budget_slots());
+        let mut gk = vec![0.0f32; bucket * m * s * dh];
+        let mut gv = vec![0.0f32; bucket * m * s * dh];
+        let mut gvalid = vec![0.0f32; bucket * m * s];
+        for (i, seq) in seqs.iter_mut().enumerate() {
+            let st = &seq.kv.layers[layer];
+            st.gpu.gather(&mut seq.gk, &mut seq.gv, &mut seq.gvalid);
+            gk[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&seq.gk);
+            gv[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&seq.gv);
+            gvalid[i * m * s..(i + 1) * m * s].copy_from_slice(&seq.gvalid);
+        }
+        (gk, gv, gvalid)
+    }
+
+    /// Batched page selection via the select artifact; returns pages per
+    /// (sequence, kv head), filtered to genuinely selectable pages.
+    fn run_selection_batch(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        layer: usize,
+        q_all: &[f32],
+        bucket: usize,
+    ) -> Result<Vec<Vec<Vec<usize>>>> {
+        let cfg = &self.cfg;
+        let (m, dh, qo, p) = (cfg.n_kv, cfg.d_head, cfg.n_qo, cfg.n_pages_max());
+        let mut q = q_all.to_vec();
+        q.resize(bucket * qo * dh, 0.0);
+        let mut smin = vec![0.0f32; bucket * m * p * dh];
+        let mut smax = vec![0.0f32; bucket * m * p * dh];
+        let mut mask = vec![0.0f32; bucket * p];
+        let mut masks: Vec<Vec<f32>> = Vec::with_capacity(seqs.len());
+        for (i, seq) in seqs.iter().enumerate() {
+            let gpu = &seq.kv.layers[layer].gpu;
+            let (lo, hi) = gpu.summaries_sanitized();
+            smin[i * m * p * dh..(i + 1) * m * p * dh].copy_from_slice(&lo);
+            smax[i * m * p * dh..(i + 1) * m * p * dh].copy_from_slice(&hi);
+            let mk = gpu.selectable_mask();
+            mask[i * p..(i + 1) * p].copy_from_slice(&mk);
+            masks.push(mk);
+        }
+        let variant = self.params.variant.as_str();
+        let out = self.rt.run(
+            &self.art(&format!("select_{}_b{}", variant, bucket)),
+            &[
+                HostTensor::F32(q, vec![bucket, qo, dh]),
+                HostTensor::F32(smin, vec![bucket, m, p, dh]),
+                HostTensor::F32(smax, vec![bucket, m, p, dh]),
+                HostTensor::F32(mask, vec![bucket, p]),
+            ],
+            None,
+        )?;
+        let idx = out[1].i32s()?;
+        let k_sel = cfg.select_pages;
+        let mut result = Vec::with_capacity(seqs.len());
+        for (i, mk) in masks.iter().enumerate() {
+            let mut per_head = Vec::with_capacity(m);
+            for head in 0..m {
+                let base = (i * m + head) * k_sel;
+                let pages: Vec<usize> = idx[base..base + k_sel]
+                    .iter()
+                    .map(|&x| x as usize)
+                    .filter(|&pg| pg < p && mk[pg] > 0.0)
+                    .collect();
+                per_head.push(pages);
+            }
+            result.push(per_head);
+        }
+        Ok(result)
+    }
+
+    /// Selection for a single sequence (prefill seeding path, bucket 1).
+    fn run_selection_single(
+        &mut self,
+        seq: &mut Sequence,
+        layer: usize,
+        q: &[f32],
+    ) -> Result<Vec<Vec<usize>>> {
+        let cfg = &self.cfg;
+        let (m, dh, qo, p) = (cfg.n_kv, cfg.d_head, cfg.n_qo, cfg.n_pages_max());
+        let gpu = &seq.kv.layers[layer].gpu;
+        let (smin, smax) = gpu.summaries_sanitized();
+        let mask = gpu.selectable_mask();
+        let variant = self.params.variant.as_str();
+        let out = self.rt.run(
+            &self.art(&format!("select_{}_b1", variant)),
+            &[
+                HostTensor::F32(q.to_vec(), vec![1, qo, dh]),
+                HostTensor::F32(smin, vec![1, m, p, dh]),
+                HostTensor::F32(smax, vec![1, m, p, dh]),
+                HostTensor::F32(mask.clone(), vec![1, p]),
+            ],
+            None,
+        )?;
+        let idx = out[1].i32s()?;
+        let k_sel = cfg.select_pages;
+        Ok((0..m)
+            .map(|head| {
+                idx[head * k_sel..(head + 1) * k_sel]
+                    .iter()
+                    .map(|&x| x as usize)
+                    .filter(|&pg| pg < p && mask[pg] > 0.0)
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Convenience: generate to completion for a single sequence.
+    pub fn generate(&mut self, seq: &mut Sequence) -> Result<()> {
+        let lg = self.prefill(seq)?;
+        let params = seq.sample.clone();
+        let tok = sample_token(&lg, &params, &mut seq.rng);
+        seq.tokens.push(tok);
+        if Some(tok) == seq.eos {
+            seq.finished = true;
+        }
+        while !seq.done() {
+            let mut batch = [&mut *seq];
+            self.decode_step(&mut batch)?;
+        }
+        Ok(())
+    }
+}
+
+/// Temperature + nucleus sampling (greedy when temperature == 0).
+pub fn sample_token(logits: &[f32], p: &SampleParams, rng: &mut Rng) -> i32 {
+    if p.temperature <= 0.0 {
+        return crate::linalg::argmax(logits) as i32;
+    }
+    let mut probs: Vec<f32> = logits.iter().map(|&x| x / p.temperature).collect();
+    crate::linalg::softmax_inplace(&mut probs);
+    if p.top_p < 1.0 {
+        let mut order: Vec<usize> = (0..probs.len()).collect();
+        order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let mut acc = 0.0f32;
+        let mut cut = probs.len();
+        for (rank, &i) in order.iter().enumerate() {
+            acc += probs[i];
+            if acc >= p.top_p {
+                cut = rank + 1;
+                break;
+            }
+        }
+        let keep: std::collections::HashSet<usize> = order[..cut].iter().cloned().collect();
+        for (i, pr) in probs.iter_mut().enumerate() {
+            if !keep.contains(&i) {
+                *pr = 0.0;
+            }
+        }
+    }
+    rng.categorical(&probs) as i32
+}

@@ -1,0 +1,138 @@
+//! Serving metrics: TTFT / TPOT / end-to-end latency histograms and
+//! throughput counters, reported by the server and the bench drivers.
+
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+#[derive(Debug, Clone)]
+pub struct RequestTiming {
+    pub arrived: Instant,
+    pub prefill_done: Option<Instant>,
+    pub finished: Option<Instant>,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+}
+
+impl RequestTiming {
+    pub fn new(prompt_tokens: usize) -> RequestTiming {
+        RequestTiming {
+            arrived: Instant::now(),
+            prefill_done: None,
+            finished: None,
+            prompt_tokens,
+            generated_tokens: 0,
+        }
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.prefill_done.map(|t| (t - self.arrived).as_secs_f64())
+    }
+
+    pub fn e2e(&self) -> Option<f64> {
+        self.finished.map(|t| (t - self.arrived).as_secs_f64())
+    }
+
+    /// time-per-output-token after the first.
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.prefill_done, self.finished) {
+            (Some(p), Some(f)) if self.generated_tokens > 1 => {
+                Some((f - p).as_secs_f64() / (self.generated_tokens - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    pub e2e: Histogram,
+    pub requests: u64,
+    pub completed: u64,
+    pub tokens_in: u64,
+    pub tokens_out: u64,
+    pub started: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { started: Some(Instant::now()), ..Default::default() }
+    }
+
+    pub fn on_arrival(&mut self, prompt_tokens: usize) {
+        self.requests += 1;
+        self.tokens_in += prompt_tokens as u64;
+    }
+
+    pub fn on_complete(&mut self, t: &RequestTiming) {
+        self.completed += 1;
+        self.tokens_out += t.generated_tokens as u64;
+        if let Some(x) = t.ttft() {
+            self.ttft.record(x);
+        }
+        if let Some(x) = t.tpot() {
+            self.tpot.record(x);
+        }
+        if let Some(x) = t.e2e() {
+            self.e2e.record(x);
+        }
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        match self.started {
+            Some(t0) => self.tokens_out as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+            None => 0.0,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} completed={} tokens_out={} throughput={:.1} tok/s \
+             ttft p50={:.1}ms p99={:.1}ms tpot p50={:.1}ms p99={:.1}ms e2e p50={:.2}s",
+            self.requests,
+            self.completed,
+            self.tokens_out,
+            self.throughput_tok_s(),
+            self.ttft.percentile(50.0) * 1e3,
+            self.ttft.percentile(99.0) * 1e3,
+            self.tpot.percentile(50.0) * 1e3,
+            self.tpot.percentile(99.0) * 1e3,
+            self.e2e.percentile(50.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn timing_math() {
+        let mut t = RequestTiming::new(10);
+        let base = t.arrived;
+        t.prefill_done = Some(base + Duration::from_millis(100));
+        t.finished = Some(base + Duration::from_millis(1100));
+        t.generated_tokens = 11;
+        assert!((t.ttft().unwrap() - 0.1).abs() < 1e-9);
+        assert!((t.tpot().unwrap() - 0.1).abs() < 1e-9);
+        assert!((t.e2e().unwrap() - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let mut m = Metrics::new();
+        m.on_arrival(5);
+        let mut t = RequestTiming::new(5);
+        t.prefill_done = Some(t.arrived);
+        t.finished = Some(t.arrived + std::time::Duration::from_millis(50));
+        t.generated_tokens = 6;
+        m.on_complete(&t);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.tokens_out, 6);
+        assert!(m.report().contains("completed=1"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: the real serving runtime. Engine (decode pipeline
+//! over AOT artifacts with speculative retrieval + correction), byte
+//! tokenizer, serving metrics, and the continuous-batching scheduler.
+
+pub mod engine;
+pub mod metrics;
+pub mod scheduler;
+pub mod tokenizer;
+
+pub use engine::{Engine, EngineStats, SampleParams, Sequence};
+pub use metrics::{Metrics, RequestTiming};
+pub use scheduler::{Completion, Request, Scheduler, SchedulerConfig};

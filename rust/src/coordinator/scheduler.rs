@@ -1,0 +1,166 @@
+//! Continuous-batching scheduler: admits queued requests via prefill
+//! (one at a time, like vLLM's default), then interleaves batched decode
+//! steps over all running sequences, padding to the compiled batch
+//! buckets. Prefill-priority keeps TTFT low; decode keeps throughput up.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{sample_token, Engine, SampleParams, Sequence};
+use crate::coordinator::metrics::{Metrics, RequestTiming};
+use crate::coordinator::tokenizer;
+
+/// A queued generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sample: SampleParams,
+}
+
+impl Request {
+    pub fn from_text(id: u64, text: &str, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt: tokenizer::encode(text),
+            max_new_tokens: max_new,
+            sample: SampleParams::greedy(),
+        }
+    }
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+}
+
+struct Running {
+    seq: Sequence,
+    timing: RequestTiming,
+}
+
+/// Scheduler policy knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// max sequences decoded together (bounded by compiled buckets).
+    pub max_batch: usize,
+    /// admit new prefills only when the running set is below this.
+    pub admit_below: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_batch: 4, admit_below: 4 }
+    }
+}
+
+pub struct Scheduler {
+    pub engine: Engine,
+    pub cfg: SchedulerConfig,
+    queue: VecDeque<Request>,
+    running: Vec<Running>,
+    pub metrics: Metrics,
+    pub completions: Vec<Completion>,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            engine,
+            cfg,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            metrics: Metrics::new(),
+            completions: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.on_arrival(req.prompt.len());
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.running.len()
+    }
+
+    /// One scheduling iteration: admit (prefill) then one decode step.
+    /// Returns true if any work was done.
+    pub fn tick(&mut self) -> Result<bool> {
+        let mut worked = false;
+
+        // ---- admission: prefill-priority, one per tick ----
+        if self.running.len() < self.cfg.admit_below {
+            if let Some(req) = self.queue.pop_front() {
+                let mut timing = RequestTiming::new(req.prompt.len());
+                let mut seq = self.engine.new_sequence(
+                    req.id,
+                    req.prompt,
+                    req.max_new_tokens,
+                    req.sample.clone(),
+                );
+                seq.eos = Some(tokenizer::EOS);
+                let lg = self.engine.prefill(&mut seq)?;
+                let params = seq.sample.clone();
+                let tok = sample_token(&lg, &params, &mut seq.rng);
+                seq.tokens.push(tok);
+                if Some(tok) == seq.eos {
+                    seq.finished = true;
+                }
+                timing.prefill_done = Some(std::time::Instant::now());
+                timing.generated_tokens = 1;
+                self.running.push(Running { seq, timing });
+                worked = true;
+            }
+        }
+
+        // ---- one batched decode step over running sequences ----
+        if !self.running.is_empty() {
+            let limit = self.cfg.max_batch.min(self.running.len());
+            {
+                let mut batch: Vec<&mut Sequence> =
+                    self.running[..limit].iter_mut().map(|r| &mut r.seq).collect();
+                self.engine.decode_step(&mut batch)?;
+            }
+            for r in &mut self.running[..limit] {
+                r.timing.generated_tokens = r.seq.generated().len();
+            }
+            worked = true;
+        }
+
+        // ---- retire finished sequences ----
+        let mut still = Vec::with_capacity(self.running.len());
+        for mut r in self.running.drain(..) {
+            if r.seq.done() {
+                r.timing.finished = Some(std::time::Instant::now());
+                self.metrics.on_complete(&r.timing);
+                self.completions.push(Completion {
+                    id: r.seq.id,
+                    text: tokenizer::decode(r.seq.generated()),
+                    tokens: r.seq.tokens.clone(),
+                    prompt_tokens: r.seq.prompt_len,
+                    generated_tokens: r.seq.generated().len(),
+                });
+            } else {
+                still.push(r);
+            }
+        }
+        self.running = still;
+        Ok(worked)
+    }
+
+    /// Run until every queued request completes.
+    pub fn drain(&mut self) -> Result<()> {
+        while self.pending() > 0 {
+            self.tick()?;
+        }
+        Ok(())
+    }
+}

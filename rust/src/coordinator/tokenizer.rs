@@ -1,0 +1,53 @@
+//! Byte-level tokenizer: 256 byte tokens + BOS/EOS/PAD/SEP specials.
+//! The synthetic-weight models use vocab 260 to match.
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+pub const SEP: i32 = 259;
+pub const VOCAB: usize = 260;
+
+/// Encode text as BOS + bytes.
+pub fn encode(text: &str) -> Vec<i32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS);
+    out.extend(text.bytes().map(|b| b as i32));
+    out
+}
+
+/// Decode tokens back to text (specials are dropped; invalid UTF-8 is
+/// rendered lossily).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let text = "FreeKV: speculative retrieval!";
+        let toks = encode(text);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks.len(), text.len() + 1);
+        assert_eq!(decode(&toks), text);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        assert_eq!(decode(&[BOS, 104, 105, EOS, PAD, SEP]), "hi");
+    }
+
+    #[test]
+    fn all_tokens_in_vocab() {
+        for t in encode("any text ~ \u{00ff}") {
+            assert!((0..VOCAB as i32).contains(&t));
+        }
+    }
+}

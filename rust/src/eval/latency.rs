@@ -1,0 +1,259 @@
+//! Latency eval drivers: Table 1, Fig. 1 (right), Fig. 7, Fig. 8,
+//! Fig. 9, Fig. 10 — built on the discrete-event simulator with the
+//! paper's model geometries and device profiles.
+
+use crate::config::ModelConfig;
+use crate::policies::latency::{gpu_kv_bytes, simulate_request, weight_bytes, Method, SimKnobs};
+use crate::sim::{CostModel, DeviceProfile};
+use crate::util::table::{fnum, ftime, Table};
+
+fn paper_models() -> Vec<ModelConfig> {
+    vec![ModelConfig::qwen25_7b(), ModelConfig::llama31_8b()]
+}
+
+fn retrieval_methods() -> Vec<Method> {
+    vec![
+        Method::Razor,
+        Method::RaaS,
+        Method::ArkVale,
+        Method::ShadowKv,
+        Method::InfiniGen,
+        Method::FreeKv,
+    ]
+}
+
+/// Table 1 analog: measured complexity/feature comparison.
+pub fn table1() -> Table {
+    let m = ModelConfig::llama31_8b();
+    let knobs = SimKnobs::default();
+    let cm = CostModel::new(DeviceProfile::a100_pcie4(), m.clone());
+    let mut t = Table::new(
+        "Table 1 analog — per-method properties (Llama-3.1-8B, 32K ctx, b=1)",
+        &["method", "category", "gpu KV mem", "recall/step", "recall exposed", "group-consistent"],
+    );
+    for method in Method::all() {
+        let rec = simulate_request(method, &cm, 1, 32768, 32, &knobs);
+        let cat = match method {
+            Method::Full => "full cache",
+            Method::Razor | Method::Streaming => "static drop",
+            Method::RaaS => "dynamic drop",
+            _ => "retrieval",
+        };
+        let gc = match method {
+            Method::Quest | Method::InfiniGen => "adapted",
+            Method::Full | Method::Streaming => "n/a",
+            _ => "yes",
+        };
+        t.row(vec![
+            method.name().into(),
+            cat.into(),
+            format!("{:.2} GB", gpu_kv_bytes(method, &m, 1, 32768, &knobs) / 1e9),
+            ftime(rec.recall_busy / rec.steps.max(1) as f64),
+            ftime(rec.recall_exposed / rec.steps.max(1) as f64),
+            gc.into(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 1 (right): latency breakdown of offloading retrieval methods
+/// (Llama-3.1-8B, batch 1, 32K context).
+pub fn fig1_breakdown() -> Table {
+    let cm = CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b());
+    let knobs = SimKnobs::default();
+    let mut t = Table::new(
+        "Fig. 1 (right) analog — per-token latency breakdown (ms)",
+        &["method", "compute", "selection", "recall (exposed)", "total", "recall+sel %"],
+    );
+    for m in [Method::ArkVale, Method::ShadowKv, Method::InfiniGen, Method::FreeKv, Method::Full] {
+        let r = simulate_request(m, &cm, 1, 32768, 64, &knobs);
+        let per = r.steps.max(1) as f64;
+        let comp = (r.compute_busy - r.selection_busy) / per * 1e3;
+        let sel = r.selection_busy / per * 1e3;
+        let rec = r.recall_exposed / per * 1e3;
+        let tot = r.per_token() * 1e3;
+        t.row(vec![
+            m.name().into(),
+            fnum(comp),
+            fnum(sel),
+            fnum(rec),
+            fnum(tot),
+            fnum((sel + rec) / tot * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 7: end-to-end latency, 2 models x 2 scenarios x batch sizes.
+pub fn fig7() -> Vec<Table> {
+    let mut out = Vec::new();
+    for model in paper_models() {
+        for (scenario, input, output, knobs) in [
+            ("long-input 32K->512", 32768usize, 512usize, SimKnobs::default()),
+            ("long-gen 600->16K", 600, 16384, SimKnobs::long_generation()),
+        ] {
+            let cm = CostModel::new(DeviceProfile::a100_pcie4(), model.clone());
+            let mut t = Table::new(
+                &format!("Fig. 7 analog — {} {}", model.name, scenario),
+                &["method", "b=1 (s)", "b=2 (s)", "b=4 (s)", "b=8 (s)", "speedup vs freekv (b=4)"],
+            );
+            let mut fk_b4 = 1.0;
+            let mut rows: Vec<(Method, Vec<f64>)> = Vec::new();
+            for method in retrieval_methods() {
+                let mut totals = Vec::new();
+                for b in [1usize, 2, 4, 8] {
+                    // scale decode steps down for sim speed; report scaled total
+                    let steps = output.min(2048);
+                    let r = simulate_request(method, &cm, b, input, steps, &knobs);
+                    let total = r.prefill_secs + r.per_token() * output as f64;
+                    totals.push(total);
+                }
+                if method == Method::FreeKv {
+                    fk_b4 = totals[2];
+                }
+                rows.push((method, totals));
+            }
+            for (method, totals) in rows {
+                t.row(vec![
+                    method.name().into(),
+                    fnum(totals[0]),
+                    fnum(totals[1]),
+                    fnum(totals[2]),
+                    fnum(totals[3]),
+                    format!("{:.1}x", totals[2] / fk_b4),
+                ]);
+            }
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Fig. 8: FreeKV vs ArkVale across input and output lengths.
+pub fn fig8() -> Vec<Table> {
+    let cm = CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b());
+    let mut out = Vec::new();
+
+    let mut t = Table::new(
+        "Fig. 8a analog — long-input: latency vs input length (512 out, s)",
+        &["input", "arkvale", "freekv", "speedup"],
+    );
+    for input in [8192usize, 16384, 32768, 65536] {
+        let k = SimKnobs::default();
+        let a = simulate_request(Method::ArkVale, &cm, 1, input, 512, &k);
+        let f = simulate_request(Method::FreeKv, &cm, 1, input, 512, &k);
+        t.row(vec![
+            format!("{}K", input / 1024),
+            fnum(a.total()),
+            fnum(f.total()),
+            format!("{:.1}x", a.total() / f.total()),
+        ]);
+    }
+    out.push(t);
+
+    let mut t = Table::new(
+        "Fig. 8b analog — long-gen: latency vs output length (600 in, s)",
+        &["output", "arkvale", "freekv", "speedup"],
+    );
+    for output in [2048usize, 4096, 8192, 16384] {
+        let k = SimKnobs::long_generation();
+        let steps = output.min(2048);
+        let a = simulate_request(Method::ArkVale, &cm, 1, 600, steps, &k);
+        let f = simulate_request(Method::FreeKv, &cm, 1, 600, steps, &k);
+        let at = a.prefill_secs + a.per_token() * output as f64;
+        let ft = f.prefill_secs + f.per_token() * output as f64;
+        t.row(vec![
+            format!("{}K", output / 1024),
+            fnum(at),
+            fnum(ft),
+            format!("{:.1}x", at / ft),
+        ]);
+    }
+    out.push(t);
+    out
+}
+
+/// Fig. 9: ablation of HL / DB / SR (Llama-3.1-8B).
+pub fn fig9() -> Vec<Table> {
+    let cm = CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b());
+    let mut out = Vec::new();
+    for (scenario, input, output, base) in [
+        ("long-input 32K->512", 32768usize, 512usize, SimKnobs::default()),
+        ("long-gen 600->16K", 600, 2048, SimKnobs::long_generation()),
+    ] {
+        for b in [1usize, 4] {
+            let mut t = Table::new(
+                &format!("Fig. 9 analog — {} (b={})", scenario, b),
+                &["config", "per-token (ms)", "speedup vs none"],
+            );
+            let configs: [(&str, bool, bool, bool); 4] = [
+                ("none (blocking, NHD)", false, false, false),
+                ("+HL", true, false, false),
+                ("+HL+DB", true, true, false),
+                ("+HL+DB+SR (FreeKV)", true, true, true),
+            ];
+            let mut none = 0.0;
+            for (label, hl, db, sr) in configs {
+                let knobs = SimKnobs {
+                    hybrid_layout: hl,
+                    double_buffer: db,
+                    speculative: sr,
+                    ..base.clone()
+                };
+                let r = simulate_request(Method::FreeKv, &cm, b, input, output, &knobs);
+                let pt = r.per_token() * 1e3;
+                if !hl {
+                    none = pt;
+                }
+                t.row(vec![label.into(), fnum(pt), format!("{:.1}x", none / pt)]);
+            }
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Fig. 10: Ascend-910B profile, FreeKV vs ArkVale, 32K long-input.
+pub fn fig10() -> Table {
+    let mut t = Table::new(
+        "Fig. 10 analog — Ascend 910B vs A100 (32K long-input, b=1)",
+        &["device", "arkvale (s)", "freekv (s)", "speedup"],
+    );
+    for dev in [DeviceProfile::a100_pcie4(), DeviceProfile::ascend_910b()] {
+        let cm = CostModel::new(dev.clone(), ModelConfig::llama31_8b());
+        let k = SimKnobs::default();
+        let a = simulate_request(Method::ArkVale, &cm, 1, 32768, 512, &k);
+        let f = simulate_request(Method::FreeKv, &cm, 1, 32768, 512, &k);
+        t.row(vec![
+            dev.name.clone(),
+            fnum(a.total()),
+            fnum(f.total()),
+            format!("{:.1}x", a.total() / f.total()),
+        ]);
+    }
+    t
+}
+
+/// Memory safety check backing the Fig. 7 Quest exclusion.
+pub fn oom_table() -> Table {
+    let m = ModelConfig::llama31_8b();
+    let knobs = SimKnobs::default();
+    let mut t = Table::new(
+        "Quest OOM check (A100-40G, Llama-3.1-8B, 32K ctx)",
+        &["method", "batch", "kv+weights+reserve (GB)", "fits 40GB"],
+    );
+    for method in [Method::Quest, Method::FreeKv] {
+        for b in [1usize, 4] {
+            let total = gpu_kv_bytes(method, &m, b, 32768, &knobs)
+                + weight_bytes(&m, 2)
+                + knobs.runtime_reserve;
+            t.row(vec![
+                method.name().into(),
+                b.to_string(),
+                fnum(total / 1e9),
+                (total <= knobs.gpu_mem_bytes).to_string(),
+            ]);
+        }
+    }
+    t
+}

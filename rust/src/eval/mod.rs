@@ -1,0 +1,7 @@
+//! Eval harness: one driver per paper table/figure (see DESIGN.md's
+//! experiment index). Each driver prints the paper-shaped rows and saves
+//! CSV to `results/`.
+
+pub mod accuracy;
+pub mod latency;
+pub mod real;

@@ -1,0 +1,190 @@
+//! Real-pipeline evals on the tiny model: query-similarity measurement
+//! (Fig. 3 on real artifacts rather than the oracle), the wall-clock
+//! phase breakdown of the rust engine, and modeled-vs-real cross-checks.
+
+use anyhow::Result;
+
+use crate::config::FreeKvParams;
+use crate::coordinator::engine::{Engine, SampleParams};
+use crate::runtime::Runtime;
+use crate::util::stats::Summary;
+use crate::util::table::{fnum, ftime, Table};
+
+pub fn load_engine(artifacts: &str, model: &str, params: FreeKvParams) -> Result<Engine> {
+    let rt = Runtime::load(artifacts)?;
+    Engine::new(rt, model, params)
+}
+
+/// Fig. 3 analog on the real model: per-layer mean adjacent-step query
+/// cosine similarity during generation.
+pub fn fig3_similarity(artifacts: &str, model: &str, steps: usize) -> Result<Table> {
+    let mut eng = load_engine(artifacts, model, FreeKvParams::default())?;
+    eng.record_sims = true;
+    let prompt: Vec<i32> = (0..256).map(|i| (i * 11 % 250) as i32).collect();
+    let mut seq = eng.new_sequence(
+        1,
+        prompt,
+        steps,
+        SampleParams { temperature: 0.9, top_p: 0.95, seed: 11 },
+    );
+    eng.generate(&mut seq)?;
+
+    let n_layers = eng.cfg.n_layers;
+    let n_qo = eng.cfg.n_qo;
+    let mut t = Table::new(
+        &format!("Fig. 3 analog — real {} model query similarity", model),
+        &["layer", "mean", "min", "p10", "per-head means"],
+    );
+    for l in 0..n_layers {
+        let mut per_head: Vec<Vec<f64>> = vec![Vec::new(); n_qo];
+        let mut all = Vec::new();
+        for (layer, sims) in &eng.sim_trace {
+            if *layer == l {
+                for (h, &s) in sims.iter().enumerate() {
+                    per_head[h].push(s as f64);
+                    all.push(s as f64);
+                }
+            }
+        }
+        let s = Summary::of(&all);
+        let heads: Vec<String> = per_head
+            .iter()
+            .map(|xs| format!("{:.2}", xs.iter().sum::<f64>() / xs.len().max(1) as f64))
+            .collect();
+        let mut sorted = all.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p10 = crate::util::stats::percentile_sorted(&sorted, 10.0);
+        t.row(vec![l.to_string(), fnum(s.mean), fnum(s.min), fnum(p10), heads.join(" ")]);
+    }
+    Ok(t)
+}
+
+/// Real-engine phase breakdown + counters for a long generation.
+pub fn real_breakdown(artifacts: &str, model: &str, prompt_len: usize, steps: usize, tau: f32) -> Result<(Table, Table)> {
+    let mut eng = load_engine(artifacts, model, FreeKvParams { tau, ..Default::default() })?;
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| (i * 13 % 250) as i32).collect();
+    let mut seq = eng.new_sequence(
+        2,
+        prompt,
+        steps,
+        SampleParams { temperature: 0.8, top_p: 0.95, seed: 5 },
+    );
+    eng.generate(&mut seq)?;
+
+    let st = &eng.stats;
+    let per = st.steps.max(1) as f64;
+    let mut t = Table::new(
+        &format!("Real pipeline breakdown — {} ({} prompt, {} steps)", model, prompt_len, steps),
+        &["phase", "total", "per step"],
+    );
+    for (name, secs) in [
+        ("prefill", st.prefill_secs),
+        ("decode total", st.decode_secs),
+        ("  qkv exec", st.qkv_secs),
+        ("  attention exec", st.attn_secs),
+        ("  selection exec", st.select_secs),
+        ("  gather (host)", st.gather_secs),
+        ("  recall transfers", st.recall_secs),
+        ("  logits exec", st.logits_secs),
+    ] {
+        t.row(vec![name.into(), ftime(secs), ftime(secs / per)]);
+    }
+
+    let c = &seq.xfer.counters;
+    let mut t2 = Table::new(
+        "Engine counters",
+        &["counter", "value"],
+    );
+    for (k, v) in [
+        ("decode steps", st.steps as f64),
+        ("corrections", st.corrections as f64),
+        ("correction checks", st.correction_checks as f64),
+        ("correction rate", st.correction_rate()),
+        ("speculative hits", st.speculative_hits as f64),
+        ("recalled pages", st.recalled_pages as f64),
+        ("offloaded pages", c.offloaded_pages as f64),
+        ("h2d chunks", c.h2d_chunks as f64),
+        ("h2d bytes", c.h2d_bytes as f64),
+        ("tokens/s (real decode)", per / st.decode_secs.max(1e-9)),
+    ] {
+        t2.row(vec![k.into(), fnum(v)]);
+    }
+    Ok((t, t2))
+}
+
+/// Per-layer correction-rate distribution on the real model — the analog
+/// of the paper's per-layer histograms (Figs. 16-20).
+pub fn per_layer_corrections(artifacts: &str, model: &str, steps: usize, tau: f32) -> Result<Table> {
+    let mut eng = load_engine(artifacts, model, FreeKvParams { tau, ..Default::default() })?;
+    eng.record_sims = true;
+    let prompt: Vec<i32> = (0..600).map(|i| (i * 19 % 250) as i32).collect();
+    let mut seq = eng.new_sequence(
+        5,
+        prompt,
+        steps,
+        SampleParams { temperature: 0.85, top_p: 0.95, seed: 23 },
+    );
+    eng.generate(&mut seq)?;
+    let g = eng.cfg.group_size();
+    let n_kv = eng.cfg.n_kv;
+    let mut t = Table::new(
+        &format!("Per-layer correction rates — {} model, tau={} (Figs. 16-20 analog)", model, tau),
+        &["layer", "corr. rate", "mean sim", "min pooled sim"],
+    );
+    for l in 1..eng.cfg.n_layers {
+        let mut checks = 0usize;
+        let mut corr = 0usize;
+        let mut sims = Vec::new();
+        let mut min_pooled = f64::MAX;
+        for (layer, hs) in &eng.sim_trace {
+            if *layer != l {
+                continue;
+            }
+            for m in 0..n_kv {
+                let pooled: f32 = hs[m * g..(m + 1) * g].iter().sum::<f32>() / g as f32;
+                checks += 1;
+                if pooled < tau {
+                    corr += 1;
+                }
+                min_pooled = min_pooled.min(pooled as f64);
+            }
+            sims.extend(hs.iter().map(|&x| x as f64));
+        }
+        let mean = sims.iter().sum::<f64>() / sims.len().max(1) as f64;
+        t.row(vec![
+            l.to_string(),
+            fnum(corr as f64 / checks.max(1) as f64),
+            fnum(mean),
+            fnum(min_pooled),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table 9 analog measured on the *real* model: correction rate vs tau.
+pub fn real_correction_rates(artifacts: &str, model: &str, steps: usize) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Real correction rates — {} model", model),
+        &["tau", "correction rate", "spec hit rate", "recalled pages/step"],
+    );
+    for tau in [0.7f32, 0.8, 0.9, 0.95] {
+        let mut eng = load_engine(artifacts, model, FreeKvParams { tau, ..Default::default() })?;
+        let prompt: Vec<i32> = (0..600).map(|i| (i * 13 % 250) as i32).collect();
+        let mut seq = eng.new_sequence(
+            3,
+            prompt,
+            steps,
+            SampleParams { temperature: 0.8, top_p: 0.95, seed: 7 },
+        );
+        eng.generate(&mut seq)?;
+        let st = &eng.stats;
+        let checks = st.correction_checks.max(1) as f64;
+        t.row(vec![
+            format!("{}", tau),
+            fnum(st.corrections as f64 / checks),
+            fnum(st.speculative_hits as f64 / checks),
+            fnum(st.recalled_pages as f64 / st.steps.max(1) as f64),
+        ]);
+    }
+    Ok(t)
+}

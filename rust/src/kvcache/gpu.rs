@@ -1,0 +1,497 @@
+//! GPU-resident KV state for one (request, layer): the fixed-budget page
+//! cache in NHD layout, the page table for per-kv-head selected pages,
+//! and incrementally-maintained min/max page summaries.
+//!
+//! Slot map (per the paper's budget decomposition B = S + W + selected):
+//!   [0, SP)            sink pages (logical pages 0..SP, fixed)
+//!   [SP, SP+WP)        local-window ring: page g at slot SP + g % WP
+//!   [SP+WP, BP)        selected pages, tracked per kv head
+//!
+//! The NHD cache is `[slot][tok][head][d]`; sink/window slots hold the
+//! same logical page for every head, selected slots hold head-specific
+//! pages in each head's lane (selection is per-kv-head).
+
+/// A page whose last token was just written; ready for offload.
+#[derive(Debug, Clone)]
+pub struct CompletedPage {
+    pub page: usize,
+    /// NHD token-major content `[tok][head][d]` — K then V.
+    pub k_nhd: Vec<f32>,
+    pub v_nhd: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub struct GpuLayerCache {
+    pub n_kv: usize,
+    pub d: usize,
+    pub p: usize,
+    pub sink_pages: usize,
+    pub window_pages: usize,
+    pub select_pages: usize,
+    pub n_pages_max: usize,
+    /// NHD K/V slabs: `[budget_pages][p][n_kv][d]`.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// logical page held by each window-ring slot.
+    ring_pages: Vec<Option<usize>>,
+    /// selected logical page per (kv head, select slot).
+    select_table: Vec<Vec<Option<usize>>>,
+    /// tokens appended so far (absolute sequence length).
+    pub len: usize,
+    /// min/max page summaries `[head][page][d]` over post-RoPE keys.
+    pub smin: Vec<f32>,
+    pub smax: Vec<f32>,
+}
+
+impl GpuLayerCache {
+    pub fn new(
+        n_kv: usize,
+        d: usize,
+        p: usize,
+        sink_pages: usize,
+        window_pages: usize,
+        select_pages: usize,
+        n_pages_max: usize,
+    ) -> GpuLayerCache {
+        let bp = sink_pages + window_pages + select_pages;
+        GpuLayerCache {
+            n_kv,
+            d,
+            p,
+            sink_pages,
+            window_pages,
+            select_pages,
+            n_pages_max,
+            k: vec![0.0; bp * p * n_kv * d],
+            v: vec![0.0; bp * p * n_kv * d],
+            ring_pages: vec![None; window_pages],
+            select_table: vec![vec![None; select_pages]; n_kv],
+            len: 0,
+            smin: vec![f32::INFINITY; n_kv * n_pages_max * d],
+            smax: vec![f32::NEG_INFINITY; n_kv * n_pages_max * d],
+        }
+    }
+
+    pub fn budget_pages(&self) -> usize {
+        self.sink_pages + self.window_pages + self.select_pages
+    }
+
+    pub fn budget_slots(&self) -> usize {
+        self.budget_pages() * self.p
+    }
+
+    pub fn cur_page(&self) -> usize {
+        self.len / self.p
+    }
+
+    pub fn gpu_bytes(&self) -> usize {
+        (self.k.len() + self.v.len() + self.smin.len() + self.smax.len()) * 4
+    }
+
+    #[inline]
+    fn nhd_off(&self, slot: usize, tok: usize, head: usize) -> usize {
+        ((slot * self.p + tok) * self.n_kv + head) * self.d
+    }
+
+    /// Append the new token's K/V (`[head][d]` flattened, post-RoPE).
+    /// Returns the page content when this token completes a page.
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) -> Option<CompletedPage> {
+        let (m, d, p) = (self.n_kv, self.d, self.p);
+        assert_eq!(k_new.len(), m * d);
+        let pos = self.len;
+        let g = pos / p;
+        let tok = pos % p;
+        assert!(g < self.n_pages_max, "context overflow: page {}", g);
+        let slot = if g < self.sink_pages {
+            g
+        } else {
+            // claim the ring slot at page start
+            if tok == 0 || self.ring_pages[g % self.window_pages] != Some(g) {
+                self.ring_pages[g % self.window_pages] = Some(g);
+            }
+            self.sink_pages + g % self.window_pages
+        };
+        for head in 0..m {
+            let o = self.nhd_off(slot, tok, head);
+            self.k[o..o + d].copy_from_slice(&k_new[head * d..(head + 1) * d]);
+            self.v[o..o + d].copy_from_slice(&v_new[head * d..(head + 1) * d]);
+            // incremental min/max summary
+            let so = (head * self.n_pages_max + g) * d;
+            for dim in 0..d {
+                let x = k_new[head * d + dim];
+                if x < self.smin[so + dim] {
+                    self.smin[so + dim] = x;
+                }
+                if x > self.smax[so + dim] {
+                    self.smax[so + dim] = x;
+                }
+            }
+        }
+        self.len += 1;
+        if tok == p - 1 {
+            Some(self.extract_page(slot, g))
+        } else {
+            None
+        }
+    }
+
+    fn extract_page(&self, slot: usize, page: usize) -> CompletedPage {
+        let (m, d, p) = (self.n_kv, self.d, self.p);
+        let mut k_nhd = vec![0.0; p * m * d];
+        let mut v_nhd = vec![0.0; p * m * d];
+        for tok in 0..p {
+            for head in 0..m {
+                let src = self.nhd_off(slot, tok, head);
+                let dst = (tok * m + head) * d;
+                k_nhd[dst..dst + d].copy_from_slice(&self.k[src..src + d]);
+                v_nhd[dst..dst + d].copy_from_slice(&self.v[src..src + d]);
+            }
+        }
+        CompletedPage { page, k_nhd, v_nhd }
+    }
+
+    /// Bulk-load prefill output: K/V `[head][T][d]` (the layer_prefill
+    /// artifact's HND-ish output, possibly padded to `stride` >= t).
+    /// Fills sink + window slots and the summaries; returns the completed
+    /// pages for the caller to offload to the CPU pool.
+    pub fn load_prefill(&mut self, k: &[f32], v: &[f32], t: usize, stride: usize) -> Vec<CompletedPage> {
+        let (m, d) = (self.n_kv, self.d);
+        assert!(stride >= t);
+        assert_eq!(k.len(), m * stride * d);
+        self.len = 0;
+        let mut completed = Vec::new();
+        for pos in 0..t {
+            // reuse append for slot/summary management (O(T*m*d), fine at
+            // prefill granularity; the artifact did the heavy math).
+            let mut kn = vec![0.0; m * d];
+            let mut vn = vec![0.0; m * d];
+            for head in 0..m {
+                let src = (head * stride + pos) * d;
+                kn[head * d..(head + 1) * d].copy_from_slice(&k[src..src + d]);
+                vn[head * d..(head + 1) * d].copy_from_slice(&v[src..src + d]);
+            }
+            if let Some(cp) = self.append(&kn, &vn) {
+                completed.push(cp);
+            }
+        }
+        completed
+    }
+
+    /// Pages eligible for selection: complete, offloaded, not sink, not in
+    /// the window ring. Returned as the 0/1 mask the select artifact takes.
+    pub fn selectable_mask(&self) -> Vec<f32> {
+        let mut mask = vec![0.0f32; self.n_pages_max];
+        let cur = self.cur_page();
+        let horizon = cur.saturating_sub(self.window_pages);
+        for m in mask.iter_mut().take(horizon).skip(self.sink_pages) {
+            *m = 1.0;
+        }
+        // Exclude any page still held by the ring (can happen right after
+        // prefill when T is not page-aligned).
+        for rp in self.ring_pages.iter().flatten() {
+            if *rp < self.n_pages_max {
+                mask[*rp] = 0.0;
+            }
+        }
+        mask
+    }
+
+    /// Number of selectable pages.
+    pub fn selectable_count(&self) -> usize {
+        self.selectable_mask().iter().filter(|&&x| x > 0.0).count() as usize
+    }
+
+    /// Current selected pages for a head.
+    pub fn selected(&self, head: usize) -> &[Option<usize>] {
+        &self.select_table[head]
+    }
+
+    /// Install a recalled page into a select slot of one head. `k_head` /
+    /// `v_head` are `[tok][d]` for that head (post layout conversion).
+    pub fn install_selected(
+        &mut self,
+        head: usize,
+        slot_j: usize,
+        page: usize,
+        k_head: &[f32],
+        v_head: &[f32],
+    ) {
+        let (d, p) = (self.d, self.p);
+        assert_eq!(k_head.len(), p * d);
+        let slot = self.sink_pages + self.window_pages + slot_j;
+        for tok in 0..p {
+            let o = self.nhd_off(slot, tok, head);
+            self.k[o..o + d].copy_from_slice(&k_head[tok * d..(tok + 1) * d]);
+            self.v[o..o + d].copy_from_slice(&v_head[tok * d..(tok + 1) * d]);
+        }
+        self.select_table[head][slot_j] = Some(page);
+    }
+
+    /// Diff a new selection against the resident set: returns
+    /// (slot assignments to fill, pages already resident). Evicts
+    /// non-reselected pages. This is the page-cache behaviour that makes
+    /// speculative recall cheap when consecutive selections overlap.
+    pub fn plan_selection(&mut self, head: usize, pages: &[usize]) -> Vec<(usize, usize)> {
+        let table = &mut self.select_table[head];
+        let keep: Vec<bool> = table
+            .iter()
+            .map(|slot| slot.map_or(false, |pg| pages.contains(&pg)))
+            .collect();
+        let mut to_fill: Vec<(usize, usize)> = Vec::new();
+        let mut free: Vec<usize> = (0..table.len()).filter(|&j| !keep[j]).collect();
+        for &pg in pages {
+            if table.iter().any(|s| *s == Some(pg)) {
+                continue;
+            }
+            if let Some(j) = free.pop() {
+                table[j] = None; // evicted; filled by install_selected
+                to_fill.push((j, pg));
+            }
+        }
+        to_fill
+    }
+
+    /// Gather the attention operands: K/V `[head][S][d]` and the validity
+    /// mask `[head][S]`, with S = budget_slots. Slot order per head:
+    /// sink, window ring, then that head's selected slots.
+    pub fn gather(&self, dst_k: &mut [f32], dst_v: &mut [f32], dst_valid: &mut [f32]) {
+        let (m, d, p) = (self.n_kv, self.d, self.p);
+        let s = self.budget_slots();
+        assert_eq!(dst_k.len(), m * s * d);
+        assert_eq!(dst_valid.len(), m * s);
+        dst_valid.iter_mut().for_each(|x| *x = 0.0);
+        let bp = self.budget_pages();
+        for head in 0..m {
+            for slot in 0..bp {
+                // which logical page does this slot hold for this head?
+                let (page, per_head): (Option<usize>, bool) = if slot < self.sink_pages {
+                    (Some(slot), false)
+                } else if slot < self.sink_pages + self.window_pages {
+                    (self.ring_pages[slot - self.sink_pages], false)
+                } else {
+                    (self.select_table[head][slot - self.sink_pages - self.window_pages], true)
+                };
+                let Some(g) = page else { continue };
+                // Ring entries older than the window horizon are stale.
+                if !per_head && g > self.cur_page() {
+                    continue;
+                }
+                let valid_toks = if per_head {
+                    p // only complete pages are selectable
+                } else {
+                    self.len.saturating_sub(g * p).min(p)
+                };
+                for tok in 0..valid_toks {
+                    let src = self.nhd_off(slot, tok, head);
+                    let dst = (head * s + slot * p + tok) * d;
+                    dst_k[dst..dst + d].copy_from_slice(&self.k[src..src + d]);
+                    dst_v[dst..dst + d].copy_from_slice(&self.v[src..src + d]);
+                    dst_valid[head * s + slot * p + tok] = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Summary planes in the `[head][page][d]` order the select artifact
+    /// expects; untouched pages are +/-inf which the mask suppresses.
+    pub fn summaries(&self) -> (&[f32], &[f32]) {
+        (&self.smin, &self.smax)
+    }
+
+    /// Sanitized summaries with untouched pages zeroed (artifact inputs
+    /// must be finite: 0 * masked-out is fine, inf * 0 is NaN).
+    pub fn summaries_sanitized(&self) -> (Vec<f32>, Vec<f32>) {
+        let fix = |xs: &[f32]| xs.iter().map(|&x| if x.is_finite() { x } else { 0.0 }).collect();
+        (fix(&self.smin), fix(&self.smax))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cache() -> GpuLayerCache {
+        // n_kv=2, d=4, p=4, sink=1, window=2, select=2, pages_max=16
+        GpuLayerCache::new(2, 4, 4, 1, 2, 2, 16)
+    }
+
+    fn tok(rng: &mut Rng, m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+        (
+            (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        )
+    }
+
+    #[test]
+    fn append_completes_pages() {
+        let mut c = cache();
+        let mut rng = Rng::new(1);
+        let mut completed = Vec::new();
+        for i in 0..12 {
+            let (k, v) = tok(&mut rng, 2, 4);
+            if let Some(cp) = c.append(&k, &v) {
+                completed.push((i, cp.page));
+            }
+        }
+        assert_eq!(completed, vec![(3, 0), (7, 1), (11, 2)]);
+        assert_eq!(c.len, 12);
+        assert_eq!(c.cur_page(), 3);
+    }
+
+    #[test]
+    fn selectable_mask_excludes_sink_and_window() {
+        let mut c = cache();
+        let mut rng = Rng::new(2);
+        // write 6 pages (24 tokens): cur_page = 6
+        for _ in 0..24 {
+            let (k, v) = tok(&mut rng, 2, 4);
+            c.append(&k, &v);
+        }
+        let mask = c.selectable_mask();
+        // sink page 0 excluded; window covers pages 5,6(current);
+        // horizon = 6 - 2 = 4 -> selectable 1,2,3
+        assert_eq!(&mask[0..5], &[0.0, 1.0, 1.0, 1.0, 0.0]);
+        assert!(mask[5..].iter().all(|&x| x == 0.0));
+        assert_eq!(c.selectable_count(), 3);
+    }
+
+    #[test]
+    fn gather_marks_partial_page_validity() {
+        let mut c = cache();
+        let mut rng = Rng::new(3);
+        for _ in 0..6 {
+            // 1.5 pages
+            let (k, v) = tok(&mut rng, 2, 4);
+            c.append(&k, &v);
+        }
+        let s = c.budget_slots();
+        let mut gk = vec![0.0; 2 * s * 4];
+        let mut gv = vec![0.0; 2 * s * 4];
+        let mut valid = vec![0.0; 2 * s];
+        c.gather(&mut gk, &mut gv, &mut valid);
+        for head in 0..2 {
+            let v_head = &valid[head * s..(head + 1) * s];
+            // sink slot 0: page 0 complete -> 4 valid
+            assert_eq!(&v_head[0..4], &[1.0; 4]);
+            // ring: page 1 at slot sink+1%2=2? page1 slot = 1 + 1%2 = 2 -> toks 4..6 written, 2 valid
+            let ring1 = &v_head[2 * 4..2 * 4 + 4];
+            assert_eq!(ring1, &[1.0, 1.0, 0.0, 0.0]);
+            // select slots empty
+            assert!(v_head[3 * 4..].iter().all(|&x| x == 0.0));
+        }
+        let total: f32 = valid.iter().sum();
+        assert_eq!(total, 2.0 * 6.0); // every appended token visible once
+    }
+
+    #[test]
+    fn gather_never_duplicates_tokens() {
+        // After many pages, each valid token position must appear exactly
+        // once per head (no sink/ring/select overlap).
+        let mut c = cache();
+        let mut rng = Rng::new(4);
+        for _ in 0..40 {
+            let (k, v) = tok(&mut rng, 2, 4);
+            c.append(&k, &v);
+        }
+        // install selected pages = 2 oldest selectable
+        let mask = c.selectable_mask();
+        let pages: Vec<usize> =
+            mask.iter().enumerate().filter(|(_, &x)| x > 0.0).map(|(g, _)| g).take(2).collect();
+        for head in 0..2 {
+            let fills = c.plan_selection(head, &pages);
+            for (j, pg) in fills {
+                let kd = vec![pg as f32; 16];
+                let vd = vec![-(pg as f32); 16];
+                c.install_selected(head, j, pg, &kd, &vd);
+            }
+        }
+        let s = c.budget_slots();
+        let mut gk = vec![0.0; 2 * s * 4];
+        let mut gv = vec![0.0; 2 * s * 4];
+        let mut valid = vec![0.0; 2 * s];
+        c.gather(&mut gk, &mut gv, &mut valid);
+        // count valid tokens: sink 4 + ring full page 4 + partial 0 (len=40
+        // = page 10 boundary; ring holds pages 8,9 -> 8 toks) + select 8
+        let per_head: f32 = valid[0..s].iter().sum();
+        assert_eq!(per_head, 4.0 + 8.0 + 8.0);
+    }
+
+    #[test]
+    fn plan_selection_reuses_resident_pages() {
+        let mut c = cache();
+        let mut rng = Rng::new(5);
+        for _ in 0..32 {
+            let (k, v) = tok(&mut rng, 2, 4);
+            c.append(&k, &v);
+        }
+        let fills = c.plan_selection(0, &[1, 2]);
+        assert_eq!(fills.len(), 2);
+        for (j, pg) in &fills {
+            c.install_selected(0, *j, *pg, &vec![0.0; 16], &vec![0.0; 16]);
+        }
+        // Re-selecting {2, 3}: page 2 resident -> only 3 transfers.
+        let fills2 = c.plan_selection(0, &[2, 3]);
+        assert_eq!(fills2.len(), 1);
+        assert_eq!(fills2[0].1, 3);
+        // Page 1's slot was freed.
+        assert!(c.selected(0).iter().any(|s| *s == Some(2)));
+        assert!(!c.selected(0).iter().any(|s| *s == Some(1)));
+    }
+
+    #[test]
+    fn summaries_bracket_appended_keys() {
+        let mut c = cache();
+        let mut rng = Rng::new(6);
+        let mut keys: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..8 {
+            let (k, v) = tok(&mut rng, 2, 4);
+            keys.push(k.clone());
+            c.append(&k, &v);
+        }
+        let (smin, smax) = c.summaries();
+        for head in 0..2 {
+            for (pos, k) in keys.iter().enumerate() {
+                let g = pos / 4;
+                let so = (head * 16 + g) * 4;
+                for dim in 0..4 {
+                    let x = k[head * 4 + dim];
+                    assert!(smin[so + dim] <= x + 1e-6);
+                    assert!(smax[so + dim] >= x - 1e-6);
+                }
+            }
+        }
+        let (fmin, fmax) = c.summaries_sanitized();
+        assert!(fmin.iter().chain(fmax.iter()).all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn load_prefill_equivalent_to_appends() {
+        let mut rng = Rng::new(7);
+        let (m, d, t) = (2, 4, 10);
+        let k: Vec<f32> = (0..m * t * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..m * t * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut a = cache();
+        let completed = a.load_prefill(&k, &v, t, t);
+        assert_eq!(completed.len(), t / 4);
+        let mut b = cache();
+        for pos in 0..t {
+            let mut kn = vec![0.0; m * d];
+            let mut vn = vec![0.0; m * d];
+            for head in 0..m {
+                let src = (head * t + pos) * d;
+                kn[head * d..(head + 1) * d].copy_from_slice(&k[src..src + d]);
+                vn[head * d..(head + 1) * d].copy_from_slice(&v[src..src + d]);
+            }
+            b.append(&kn, &vn);
+        }
+        assert_eq!(a.len, b.len);
+        let s = a.budget_slots();
+        let (mut ka, mut va, mut ma) = (vec![0.0; m * s * d], vec![0.0; m * s * d], vec![0.0; m * s]);
+        let (mut kb, mut vb, mut mb) = (ka.clone(), va.clone(), ma.clone());
+        a.gather(&mut ka, &mut va, &mut ma);
+        b.gather(&mut kb, &mut vb, &mut mb);
+        assert_eq!(ka, kb);
+        assert_eq!(ma, mb);
+    }
+}

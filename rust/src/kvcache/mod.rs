@@ -1,0 +1,150 @@
+//! Paged KV-cache manager: GPU-resident budget cache (NHD) + CPU offload
+//! pool (HND for FreeKV, NHD for the layout ablation/baselines), page
+//! tables, and min/max page summaries.
+
+pub mod gpu;
+pub mod pool;
+
+use crate::config::ModelConfig;
+use crate::transfer::TransferEngine;
+
+pub use gpu::{CompletedPage, GpuLayerCache};
+pub use pool::{Chunk, LayerPool, Layout};
+
+/// All KV state for one request across layers.
+pub struct RequestKv {
+    pub layers: Vec<LayerState>,
+}
+
+pub struct LayerState {
+    pub gpu: GpuLayerCache,
+    pub pool: LayerPool,
+}
+
+impl RequestKv {
+    pub fn new(cfg: &ModelConfig, cpu_layout: Layout) -> RequestKv {
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerState {
+                gpu: GpuLayerCache::new(
+                    cfg.n_kv,
+                    cfg.d_head,
+                    cfg.page_size,
+                    cfg.sink_pages,
+                    cfg.window_pages,
+                    cfg.select_pages,
+                    cfg.n_pages_max(),
+                ),
+                pool: LayerPool::new(
+                    cpu_layout,
+                    cfg.n_pages_max(),
+                    cfg.n_kv,
+                    cfg.page_size,
+                    cfg.d_head,
+                ),
+            })
+            .collect();
+        RequestKv { layers }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.gpu.len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append a token's K/V to a layer, offloading the page if completed.
+    pub fn append(
+        &mut self,
+        layer: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+        engine: &mut TransferEngine,
+    ) {
+        let st = &mut self.layers[layer];
+        if let Some(cp) = st.gpu.append(k_new, v_new) {
+            engine.offload_page(&cp, &mut st.pool);
+        }
+    }
+
+    /// Install a selection for one (layer, head): diffs against resident
+    /// pages and recalls only the missing ones. Returns pages transferred.
+    pub fn apply_selection(
+        &mut self,
+        layer: usize,
+        head: usize,
+        pages: &[usize],
+        engine: &mut TransferEngine,
+    ) -> usize {
+        let st = &mut self.layers[layer];
+        let fills = st.gpu.plan_selection(head, pages);
+        let n = fills.len();
+        for (slot_j, page) in fills {
+            debug_assert!(st.pool.is_written(page), "recalling unwritten page {}", page);
+            engine.recall_page(&st.pool, page, head, &mut st.gpu, slot_j);
+        }
+        n
+    }
+
+    /// Total host bytes of the CPU pools (the offloaded cache).
+    pub fn cpu_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.pool.bytes()).sum()
+    }
+
+    /// Total bytes of GPU-resident state (budget cache + summaries).
+    pub fn gpu_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.gpu.gpu_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_qo: 4,
+            n_kv: 2,
+            d_head: 4,
+            d_ffn: 32,
+            vocab: 16,
+            rope_theta: 1e4,
+            rms_eps: 1e-5,
+            page_size: 4,
+            max_context: 64,
+            sink_pages: 1,
+            window_pages: 2,
+            select_pages: 2,
+            kv_elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn request_kv_lifecycle() {
+        let cfg = tiny_cfg();
+        let mut kv = RequestKv::new(&cfg, Layout::Hnd);
+        let mut eng = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            for l in 0..cfg.n_layers {
+                let k: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                kv.append(l, &k, &v, &mut eng);
+            }
+        }
+        assert_eq!(kv.len(), 20);
+        assert_eq!(eng.counters.offloaded_pages, 2 * 5);
+        // select two offloaded pages on layer 0, head 1
+        let n = kv.apply_selection(0, 1, &[1, 2], &mut eng);
+        assert_eq!(n, 2);
+        // re-apply same selection: zero transfers (page cache hit)
+        let n2 = kv.apply_selection(0, 1, &[1, 2], &mut eng);
+        assert_eq!(n2, 0);
+        assert!(kv.cpu_bytes() > 0 && kv.gpu_bytes() > 0);
+    }
+}

@@ -1,0 +1,223 @@
+//! CPU-side KV page pool (the offload target).
+//!
+//! The paper's hybrid-layout design (§4.2): FreeKV keeps the *CPU* pool in
+//! HND layout, `(n_page, n_kv, 2, p, d)`, so recalling one page for one kv
+//! head moves a single contiguous `2*p*d` chunk; the mainstream NHD layout
+//! `(n_page, p, n_kv, d)` fragments the same recall into `2*p` chunks of
+//! `d` elements. Both layouts are implemented so the ablation (Fig. 9) and
+//! the baselines can run on their native layout.
+
+/// Memory organization of the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// `(page, p, n_kv, d)` per K/V plane — natural projection output.
+    Nhd,
+    /// `(page, n_kv, [K|V], p, d)` — FreeKV's CPU layout.
+    Hnd,
+}
+
+/// One layer's pool. Pages are dense in [0, n_pages).
+#[derive(Debug)]
+pub struct LayerPool {
+    pub layout: Layout,
+    pub n_pages: usize,
+    pub n_kv: usize,
+    pub p: usize,
+    pub d: usize,
+    /// K and V for NHD (two planes); single slab for HND.
+    data: Vec<f32>,
+    /// per-page write flag.
+    written: Vec<bool>,
+}
+
+/// A contiguous source range within the pool (for chunked transfer).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Chunk {
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl LayerPool {
+    pub fn new(layout: Layout, n_pages: usize, n_kv: usize, p: usize, d: usize) -> LayerPool {
+        LayerPool {
+            layout,
+            n_pages,
+            n_kv,
+            p,
+            d,
+            data: vec![0.0; n_pages * n_kv * 2 * p * d],
+            written: vec![false; n_pages],
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn is_written(&self, page: usize) -> bool {
+        self.written[page]
+    }
+
+    /// Flat offset of element (page, head, plane 0=K/1=V, tok, dim).
+    #[inline]
+    fn off(&self, page: usize, head: usize, plane: usize, tok: usize, dim: usize) -> usize {
+        match self.layout {
+            Layout::Hnd => {
+                (((page * self.n_kv + head) * 2 + plane) * self.p + tok) * self.d + dim
+            }
+            Layout::Nhd => {
+                // two NHD planes: K then V, each (page, p, n_kv, d)
+                let plane_size = self.n_pages * self.p * self.n_kv * self.d;
+                plane * plane_size + ((page * self.p + tok) * self.n_kv + head) * self.d + dim
+            }
+        }
+    }
+
+    /// Store one page given K/V in NHD token-major order
+    /// (`k[tok][head][dim]` flattened) — exactly what the GPU cache holds.
+    /// For HND this performs the offload-time transpose the paper
+    /// amortizes here rather than on the per-step decode path.
+    pub fn write_page(&mut self, page: usize, k_nhd: &[f32], v_nhd: &[f32]) {
+        let (p, m, d) = (self.p, self.n_kv, self.d);
+        assert_eq!(k_nhd.len(), p * m * d);
+        assert_eq!(v_nhd.len(), p * m * d);
+        for tok in 0..p {
+            for head in 0..m {
+                let src = (tok * m + head) * d;
+                let ko = self.off(page, head, 0, tok, 0);
+                self.data[ko..ko + d].copy_from_slice(&k_nhd[src..src + d]);
+                let vo = self.off(page, head, 1, tok, 0);
+                self.data[vo..vo + d].copy_from_slice(&v_nhd[src..src + d]);
+            }
+        }
+        self.written[page] = true;
+    }
+
+    /// Contiguous chunks to move one (page, head) pair — the layout-
+    /// dependent transfer plan whose chunk count drives recall cost.
+    pub fn recall_chunks(&self, page: usize, head: usize) -> Vec<Chunk> {
+        match self.layout {
+            Layout::Hnd => {
+                // K and V adjacent: one chunk of 2*p*d.
+                vec![Chunk { offset: self.off(page, head, 0, 0, 0), len: 2 * self.p * self.d }]
+            }
+            Layout::Nhd => {
+                // p chunks of d per plane.
+                let mut out = Vec::with_capacity(2 * self.p);
+                for plane in 0..2 {
+                    for tok in 0..self.p {
+                        out.push(Chunk {
+                            offset: self.off(page, head, plane, tok, 0),
+                            len: self.d,
+                        });
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Raw read access for the transfer engine.
+    pub fn slice(&self, chunk: Chunk) -> &[f32] {
+        &self.data[chunk.offset..chunk.offset + chunk.len]
+    }
+
+    /// Read one (page, head) pair back into NHD-slot order
+    /// (`[tok][dim]` for K then V), independent of layout — used by tests
+    /// and by the recall fallback path.
+    pub fn read_page_head(&self, page: usize, head: usize) -> (Vec<f32>, Vec<f32>) {
+        let (p, d) = (self.p, self.d);
+        let mut k = vec![0.0; p * d];
+        let mut v = vec![0.0; p * d];
+        for tok in 0..p {
+            let ko = self.off(page, head, 0, tok, 0);
+            k[tok * d..(tok + 1) * d].copy_from_slice(&self.data[ko..ko + d]);
+            let vo = self.off(page, head, 1, tok, 0);
+            v[tok * d..(tok + 1) * d].copy_from_slice(&self.data[vo..vo + d]);
+        }
+        (k, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn roundtrip_both_layouts() {
+        let mut rng = Rng::new(1);
+        let (pages, m, p, d) = (4, 2, 8, 16);
+        let k = fill(&mut rng, p * m * d);
+        let v = fill(&mut rng, p * m * d);
+        for layout in [Layout::Nhd, Layout::Hnd] {
+            let mut pool = LayerPool::new(layout, pages, m, p, d);
+            pool.write_page(2, &k, &v);
+            assert!(pool.is_written(2) && !pool.is_written(1));
+            for head in 0..m {
+                let (kr, vr) = pool.read_page_head(2, head);
+                for tok in 0..p {
+                    for dim in 0..d {
+                        let src = (tok * m + head) * d + dim;
+                        assert_eq!(kr[tok * d + dim], k[src]);
+                        assert_eq!(vr[tok * d + dim], v[src]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_counts_match_paper() {
+        let (pages, m, p, d) = (4, 2, 32, 128);
+        let hnd = LayerPool::new(Layout::Hnd, pages, m, p, d);
+        let nhd = LayerPool::new(Layout::Nhd, pages, m, p, d);
+        // HND: 1 chunk of 2*p*d = 8192 elems (32 KB f32 / 8 KB fp16 in paper).
+        let hc = hnd.recall_chunks(0, 1);
+        assert_eq!(hc.len(), 1);
+        assert_eq!(hc[0].len, 2 * p * d);
+        // NHD: 2*p chunks of d elems (256 B fp16 in paper).
+        let nc = nhd.recall_chunks(0, 1);
+        assert_eq!(nc.len(), 2 * p);
+        assert!(nc.iter().all(|c| c.len == d));
+    }
+
+    #[test]
+    fn hnd_chunks_are_truly_contiguous_per_head() {
+        let mut rng = Rng::new(2);
+        let (pages, m, p, d) = (2, 3, 4, 8);
+        let mut pool = LayerPool::new(Layout::Hnd, pages, m, p, d);
+        let k = fill(&mut rng, p * m * d);
+        let v = fill(&mut rng, p * m * d);
+        pool.write_page(1, &k, &v);
+        for head in 0..m {
+            let c = pool.recall_chunks(1, head)[0];
+            let s = pool.slice(c);
+            // First p*d elems = K tokens in order, next p*d = V.
+            for tok in 0..p {
+                for dim in 0..d {
+                    assert_eq!(s[tok * d + dim], k[(tok * m + head) * d + dim]);
+                    assert_eq!(s[p * d + tok * d + dim], v[(tok * m + head) * d + dim]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_cover_disjoint_ranges() {
+        let nhd = LayerPool::new(Layout::Nhd, 2, 2, 4, 8);
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        for head in 0..2 {
+            for c in nhd.recall_chunks(0, head) {
+                for &(o, l) in &seen {
+                    assert!(c.offset + c.len <= o || o + l <= c.offset, "overlap");
+                }
+                seen.push((c.offset, c.len));
+            }
+        }
+    }
+}

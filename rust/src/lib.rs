@@ -1,0 +1,22 @@
+//! FreeKV: boosting KV cache retrieval for efficient LLM inference.
+//!
+//! Three-layer reproduction: Pallas kernels (L1) + JAX model (L2) are
+//! AOT-compiled to HLO text at build time; this crate is the Layer-3
+//! rust coordinator that owns the serving runtime — request routing,
+//! continuous batching, the paged KV cache with CPU offload (hybrid
+//! NHD/GPU + HND/CPU layouts), double-buffered streamed recall, and the
+//! FreeKV speculative-retrieval + fine-grained-correction policy.
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod server;
+pub mod oracle;
+pub mod policies;
+pub mod linalg;
+pub mod runtime;
+pub mod sim;
+pub mod transfer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,346 @@
+//! f32 linear-algebra substrate for coordinator-side math: cosine
+//! similarity (fine-grained correction), selection scoring for the
+//! simulators, softmax/top-k, and a one-sided Jacobi SVD used by the
+//! ShadowKV baseline's low-rank key reconstruction.
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than a naive fold on
+    // the per-step correction path (called n_layers * n_qo times/token).
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity; 0 when either vector is ~zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na < 1e-20 || nb < 1e-20 {
+        return 0.0;
+    }
+    (dot(a, b) / (na * nb)).clamp(-1.0, 1.0)
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in xs.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// Indices of the k largest values (descending by value, stable on ties).
+pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let k = k.min(xs.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1).min(xs.len().saturating_sub(1)), |&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut top: Vec<usize> = idx[..k].to_vec();
+    top.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    top
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// self [m,k] x other [k,n] -> [m,n]; ikj loop order for locality.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.at(i, p);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[p * n..(p + 1) * n];
+                let dst = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    dst[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        norm(&self.data)
+    }
+}
+
+/// Thin SVD A = U S V^T via one-sided Jacobi on A^T A (columns of A are
+/// rotated until mutually orthogonal). Suited to the tall-skinny key
+/// matrices ShadowKV factorizes (T x d with T >> d).
+///
+/// Returns (u [m,k], s [k], vt [k,n]) with k = min(rank, n), singular
+/// values descending.
+pub fn svd_jacobi(a: &Mat, rank: usize, max_sweeps: usize) -> (Mat, Vec<f32>, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    let mut u = a.clone(); // columns become U * S
+    let mut v = Mat::zeros(n, n);
+    for i in 0..n {
+        *v.at_mut(i, i) = 1.0;
+    }
+    let eps = 1e-9f32;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f32;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries over columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f32, 0.0f32, 0.0f32);
+                for r in 0..m {
+                    let x = u.at(r, p);
+                    let y = u.at(r, q);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off += apq * apq;
+                if apq.abs() < eps * (app * aqq).sqrt().max(1e-30) {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for r in 0..m {
+                    let x = u.at(r, p);
+                    let y = u.at(r, q);
+                    *u.at_mut(r, p) = c * x - s * y;
+                    *u.at_mut(r, q) = s * x + c * y;
+                }
+                for r in 0..n {
+                    let x = v.at(r, p);
+                    let y = v.at(r, q);
+                    *v.at_mut(r, p) = c * x - s * y;
+                    *v.at_mut(r, q) = s * x + c * y;
+                }
+            }
+        }
+        if off.sqrt() < 1e-7 * a.frob_norm().max(1e-30) {
+            break;
+        }
+    }
+    // Column norms are singular values.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sig = vec![0.0f32; n];
+    for j in 0..n {
+        let mut s = 0.0f32;
+        for r in 0..m {
+            s += u.at(r, j) * u.at(r, j);
+        }
+        sig[j] = s.sqrt();
+    }
+    order.sort_by(|&a_, &b_| sig[b_].partial_cmp(&sig[a_]).unwrap());
+    let k = rank.min(n);
+    let mut uk = Mat::zeros(m, k);
+    let mut vtk = Mat::zeros(k, n);
+    let mut sk = vec![0.0f32; k];
+    for (jj, &j) in order.iter().take(k).enumerate() {
+        sk[jj] = sig[j];
+        let inv = if sig[j] > 1e-20 { 1.0 / sig[j] } else { 0.0 };
+        for r in 0..m {
+            *uk.at_mut(r, jj) = u.at(r, j) * inv;
+        }
+        for r in 0..n {
+            *vtk.at_mut(jj, r) = v.at(r, j);
+        }
+    }
+    (uk, sk, vtk)
+}
+
+/// Reconstruct the rank-k approximation U diag(S) V^T.
+pub fn svd_reconstruct(u: &Mat, s: &[f32], vt: &Mat) -> Mat {
+    let mut us = u.clone();
+    for r in 0..us.rows {
+        for c in 0..us.cols {
+            *us.at_mut(r, c) *= s[c];
+        }
+    }
+    us.matmul(vt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot_and_cosine() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0, 4.0, 5.0], &[1.0, 1.0, 1.0, 1.0, 1.0]), 15.0);
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-2.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, -1e30];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert_eq!(xs[3], 0.0);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn top_k_orders_desc() {
+        let xs = [0.1f32, 5.0, 3.0, 5.0, -2.0];
+        assert_eq!(top_k(&xs, 3), vec![1, 3, 2]);
+        assert_eq!(top_k(&xs, 0), Vec::<usize>::new());
+        assert_eq!(top_k(&xs, 10).len(), 5);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let id = Mat::from_rows(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        assert_eq!(a.matmul(&id), a);
+        let b = Mat::from_rows(vec![vec![5.0], vec![6.0]]);
+        let ab = a.matmul(&b);
+        assert_eq!(ab.data, vec![17.0, 39.0]);
+    }
+
+    #[test]
+    fn svd_reconstructs_low_rank() {
+        // Build an exactly rank-3 matrix and verify the rank-3 SVD recovers it.
+        let mut rng = Rng::new(9);
+        let (m, n, r) = (64, 16, 3);
+        let b = Mat { rows: m, cols: r, data: (0..m * r).map(|_| rng.normal_f32(0.0, 1.0)).collect() };
+        let c = Mat { rows: r, cols: n, data: (0..r * n).map(|_| rng.normal_f32(0.0, 1.0)).collect() };
+        let a = b.matmul(&c);
+        let (u, s, vt) = svd_jacobi(&a, r, 30);
+        let rec = svd_reconstruct(&u, &s, &vt);
+        let mut err = 0.0f32;
+        for i in 0..a.data.len() {
+            err += (a.data[i] - rec.data[i]).powi(2);
+        }
+        assert!(err.sqrt() / a.frob_norm() < 1e-3, "rel err {}", err.sqrt() / a.frob_norm());
+        assert!(s[0] >= s[1] && s[1] >= s[2]);
+    }
+
+    #[test]
+    fn svd_truncation_error_decreases_with_rank() {
+        let mut rng = Rng::new(10);
+        let a = Mat { rows: 48, cols: 12, data: (0..48 * 12).map(|_| rng.normal_f32(0.0, 1.0)).collect() };
+        let mut prev = f32::MAX;
+        for rank in [2, 4, 8, 12] {
+            let (u, s, vt) = svd_jacobi(&a, rank, 30);
+            let rec = svd_reconstruct(&u, &s, &vt);
+            let err: f32 = a
+                .data
+                .iter()
+                .zip(&rec.data)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                .sqrt();
+            assert!(err <= prev + 1e-4, "rank {} err {} prev {}", rank, err, prev);
+            prev = err;
+        }
+        assert!(prev < 1e-2); // full rank reconstructs exactly
+    }
+
+    #[test]
+    fn svd_orthogonal_u() {
+        let mut rng = Rng::new(11);
+        let a = Mat { rows: 32, cols: 8, data: (0..32 * 8).map(|_| rng.normal_f32(0.0, 1.0)).collect() };
+        let (u, _s, _vt) = svd_jacobi(&a, 8, 30);
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut d = 0.0f32;
+                for r in 0..32 {
+                    d += u.at(r, i) * u.at(r, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-3, "u'u[{},{}] = {}", i, j, d);
+            }
+        }
+    }
+}

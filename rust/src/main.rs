@@ -1,0 +1,221 @@
+//! `freekv` CLI: serve, generate, eval (paper exhibits), info.
+//!
+//! Examples:
+//!   freekv generate --prompt "The paper shows" --max-tokens 32
+//!   freekv serve --addr 127.0.0.1:8080
+//!   freekv eval fig7
+//!   freekv eval all --seeds 4
+//!   freekv info
+
+use anyhow::{anyhow, Result};
+
+use freekv::config::FreeKvParams;
+use freekv::coordinator::engine::SampleParams;
+use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use freekv::coordinator::tokenizer;
+use freekv::eval::{accuracy, latency, real};
+use freekv::runtime::Runtime;
+use freekv::util::cli::Args;
+use freekv::util::table::Table;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn emit(t: Table, name: &str) {
+    t.emit(Some("results"), name);
+    println!();
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let model = args.str_or("model", "tiny");
+    let tau = args.f64_or("tau", 0.8) as f32;
+    let params = FreeKvParams { tau, ..Default::default() };
+
+    match args.command() {
+        Some("info") => {
+            let rt = Runtime::load(&artifacts)?;
+            println!("configs: {:?}", rt.manifest.configs.keys().collect::<Vec<_>>());
+            println!("artifacts: {}", rt.manifest.artifacts.len());
+            for (name, cfg) in &rt.manifest.configs {
+                println!(
+                    "  {}: {}L d{} q{} kv{} page{} budget {} slots",
+                    name, cfg.n_layers, cfg.d_model, cfg.n_qo, cfg.n_kv, cfg.page_size,
+                    cfg.budget_slots()
+                );
+            }
+            Ok(())
+        }
+        Some("generate") => {
+            let prompt = args.str_or("prompt", "FreeKV boosts KV cache retrieval. ");
+            let max_tokens = args.usize_or("max-tokens", 32);
+            let temp = args.f64_or("temperature", 0.0) as f32;
+            let rt = Runtime::load(&artifacts)?;
+            let mut eng = freekv::coordinator::engine::Engine::new(rt, &model, params)?;
+            let mut seq = eng.new_sequence(
+                1,
+                tokenizer::encode(&prompt),
+                max_tokens,
+                SampleParams { temperature: temp, top_p: 0.95, seed: args.u64_or("seed", 0) },
+            );
+            seq.eos = Some(tokenizer::EOS);
+            eng.generate(&mut seq)?;
+            println!("prompt: {prompt}");
+            println!("output: {}", tokenizer::decode(seq.generated()));
+            println!(
+                "[{} steps, {:.1} tok/s, corrections {} ({:.1}%), recalled {} pages]",
+                eng.stats.steps,
+                eng.stats.steps as f64 / eng.stats.decode_secs.max(1e-9),
+                eng.stats.corrections,
+                eng.stats.correction_rate() * 100.0,
+                eng.stats.recalled_pages,
+            );
+            Ok(())
+        }
+        Some("serve") => {
+            let addr = args.str_or("addr", "127.0.0.1:8080");
+            let rt = Runtime::load(&artifacts)?;
+            let eng = freekv::coordinator::engine::Engine::new(rt, &model, params)?;
+            if args.flag("warmup") {
+                let n = eng.rt.warmup(&model)?;
+                println!("[freekv] warmed {} artifacts", n);
+            }
+            let sched = Scheduler::new(
+                eng,
+                SchedulerConfig {
+                    max_batch: args.usize_or("max-batch", 4),
+                    admit_below: args.usize_or("admit-below", 4),
+                },
+            );
+            let max_requests = args.get("max-requests").and_then(|v| v.parse().ok());
+            freekv::server::serve(sched, &addr, max_requests)
+        }
+        Some("loadtest") => {
+            let rt = Runtime::load(&artifacts)?;
+            let eng = freekv::coordinator::engine::Engine::new(rt, &model, params)?;
+            let mut sched = Scheduler::new(
+                eng,
+                SchedulerConfig {
+                    max_batch: args.usize_or("max-batch", 4),
+                    admit_below: args.usize_or("admit-below", 4),
+                },
+            );
+            let spec = freekv::workload::WorkloadSpec {
+                scenario: freekv::workload::Scenario::parse(&args.str_or("scenario", "mixed"))
+                    .ok_or_else(|| anyhow!("unknown scenario"))?,
+                rate: args.f64_or("rate", 4.0),
+                n_requests: args.usize_or("requests", 16),
+                max_prompt: args.usize_or("max-prompt", 1000),
+                max_output: args.usize_or("max-output", 48),
+                seed: args.u64_or("seed", 0xF00D),
+            };
+            let workload = freekv::workload::generate(&spec);
+            let report = freekv::workload::run_loadtest(&mut sched, workload, args.f64_or("ticks-per-sec", 8.0))?;
+            println!("{}", sched.metrics.report());
+            println!(
+                "loadtest: {} completed in {:.2}s over {} ticks, max inflight {}, {} tokens out",
+                report.completed, report.wall_secs, report.ticks, report.max_inflight, report.tokens_out
+            );
+            Ok(())
+        }
+        Some("eval") => {
+            let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let seeds = args.u64_or("seeds", 3);
+            eval(what, seeds, &artifacts, &model)
+        }
+        _ => Err(anyhow!(
+            "usage: freekv <info|generate|serve|eval> [--model tiny] [--artifacts dir]\n\
+             eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
+             table2 table3 table4 table5 table6 table7 table8 table9 fig7 fig8 fig9 fig10 \
+             oom real-breakdown real-correction fig16-20 all"
+        )),
+    }
+}
+
+fn eval(what: &str, seeds: u64, artifacts: &str, model: &str) -> Result<()> {
+    let all = what == "all";
+    let is = |x: &str| all || what == x;
+
+    if is("fig1-accuracy") {
+        emit(accuracy::fig1_accuracy(seeds), "fig1_accuracy");
+    }
+    if is("fig1-breakdown") {
+        emit(latency::fig1_breakdown(), "fig1_breakdown");
+    }
+    if is("fig2-pareto") {
+        emit(accuracy::fig2_pareto(seeds), "fig2_pareto");
+    }
+    if is("table1") {
+        emit(latency::table1(), "table1");
+    }
+    if is("table2") {
+        for (i, t) in accuracy::table2(seeds).into_iter().enumerate() {
+            emit(t, &format!("table2_{}", i));
+        }
+    }
+    if is("table3") {
+        let k = if all { seeds.max(4) } else { seeds.max(4) };
+        for (i, t) in accuracy::table3(k).into_iter().enumerate() {
+            emit(t, &format!("table3_{}", i));
+        }
+    }
+    if is("table4") {
+        emit(accuracy::table4(seeds), "table4");
+    }
+    if is("table5") {
+        emit(accuracy::table5(seeds), "table5");
+    }
+    if is("table6") {
+        emit(accuracy::table6(seeds), "table6");
+    }
+    if is("table7") {
+        emit(accuracy::table7(seeds), "table7");
+    }
+    if is("table8") {
+        emit(accuracy::table8(seeds), "table8");
+    }
+    if is("table9") {
+        emit(accuracy::table9(seeds), "table9");
+    }
+    if is("fig7") {
+        for (i, t) in latency::fig7().into_iter().enumerate() {
+            emit(t, &format!("fig7_{}", i));
+        }
+    }
+    if is("fig8") {
+        for (i, t) in latency::fig8().into_iter().enumerate() {
+            emit(t, &format!("fig8_{}", i));
+        }
+    }
+    if is("fig9") {
+        for (i, t) in latency::fig9().into_iter().enumerate() {
+            emit(t, &format!("fig9_{}", i));
+        }
+    }
+    if is("fig10") {
+        emit(latency::fig10(), "fig10");
+    }
+    if is("oom") {
+        emit(latency::oom_table(), "oom");
+    }
+    if is("fig3-similarity") {
+        emit(real::fig3_similarity(artifacts, model, 96)?, "fig3_similarity");
+    }
+    if is("real-breakdown") {
+        let (a, b) = real::real_breakdown(artifacts, model, 600, 128, 0.9)?;
+        emit(a, "real_breakdown");
+        emit(b, "real_counters");
+    }
+    if is("real-correction") {
+        emit(real::real_correction_rates(artifacts, model, 96)?, "real_correction");
+    }
+    if is("fig16-20") {
+        emit(real::per_layer_corrections(artifacts, model, 96, 0.9)?, "fig16_20");
+    }
+    Ok(())
+}

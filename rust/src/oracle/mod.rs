@@ -1,0 +1,314 @@
+//! Attention-oracle simulator: synthetic per-head attention processes
+//! with task-shaped dynamics, used for every accuracy experiment.
+//!
+//! Why this substitution is sound (DESIGN.md): what separates KV
+//! dropping from KV retrieval from speculative retrieval is *which pages
+//! a policy can still surface when token importance shifts* — a property
+//! of the selection dynamics, not of natural language. The oracle
+//! generates latent query/page processes whose statistics are calibrated
+//! to the paper's measurements (mean adjacent-step query cosine ~0.85-0.92
+//! with head-specific outlier steps, Fig. 3 / Table 8) and task overlays
+//! matching the paper's categories:
+//!   - NIAH: a needle page that must be retrievable at answer time;
+//!   - summarization / long-input QA: diffuse, slowly drifting interest;
+//!   - long-generation: periodic subtask pages (LongGenBench's structure);
+//!   - reasoning: long generation with *revisits* — pages cold for a long
+//!     stretch become hot again (the pattern that kills dropping).
+//!
+//! Policies only see what their real counterparts see: noisy summary
+//! scores (current or previous step), realized attention over resident
+//! pages, and the query-similarity signal. Metrics: attention-mass
+//! recall and task scores (needle hit rate / completion rate / solved).
+
+pub mod tasks;
+
+use crate::util::rng::Rng;
+
+pub use tasks::{TaskKind, TaskSpec};
+
+/// Latent dimensionality of the query/page embedding process.
+pub const LATENT: usize = 24;
+
+/// Ground truth for one decode step.
+#[derive(Debug, Clone)]
+pub struct StepTruth {
+    /// normalized true attention mass per (q-head, page): `[n_qo][pages]`.
+    pub weights: Vec<Vec<f32>>,
+    /// cos(q_i, q_{i-1}) per q-head (the correction signal).
+    pub query_sim: Vec<f32>,
+    /// noisy page-summary scores per (q-head, page) — what Quest-style
+    /// selection sees at this step.
+    pub summary_scores: Vec<Vec<f32>>,
+    /// scores of the group-pooled query (Appendix B.2 MeanQ / MaxQ
+    /// variants pool q *before* scoring): `[n_kv][pages]`.
+    pub scores_meanq: Vec<Vec<f32>>,
+    pub scores_maxq: Vec<Vec<f32>>,
+    /// pages that the task *requires* at this step (empty if none).
+    pub required_pages: Vec<usize>,
+    /// total pages existing at this step (prompt + generated so far).
+    pub n_pages: usize,
+}
+
+/// The full generated trace of one episode.
+pub struct Trace {
+    pub spec: TaskSpec,
+    pub n_qo: usize,
+    pub n_kv: usize,
+    pub steps: Vec<StepTruth>,
+}
+
+impl Trace {
+    pub fn group(&self) -> usize {
+        self.n_qo / self.n_kv
+    }
+}
+
+/// Generator parameters (calibrated to the paper's similarity stats).
+#[derive(Debug, Clone)]
+pub struct OracleParams {
+    /// AR(1) coefficient of the per-head latent — sets mean query
+    /// similarity (~0.9 for alpha ~0.995 at LATENT=24).
+    pub alpha: f32,
+    /// per-step probability of a head-specific outlier jump (Fig. 3c).
+    pub outlier_prob: f32,
+    /// fraction of the latent redrawn on an outlier jump.
+    pub outlier_mix: f32,
+    /// within-group head noise (heads share the kv-head latent).
+    pub head_noise: f32,
+    /// summary approximation noise (page-summary score error).
+    pub summary_noise: f32,
+    /// softmax temperature over page affinities (low beta = diffuse).
+    pub beta: f32,
+}
+
+impl Default for OracleParams {
+    fn default() -> Self {
+        OracleParams {
+            alpha: 0.995,
+            outlier_prob: 0.02,
+            outlier_mix: 0.8,
+            head_noise: 0.25,
+            summary_noise: 0.35,
+            beta: 2.2,
+        }
+    }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-20);
+    v.iter_mut().for_each(|x| *x /= n);
+}
+
+fn randn_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+/// Generate a trace for a task episode.
+pub fn generate(spec: &TaskSpec, n_qo: usize, n_kv: usize, params: &OracleParams, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x0AC1E);
+    let g = n_qo / n_kv;
+    let max_pages = spec.prompt_pages + spec.gen_steps / spec.tokens_per_page + 2;
+
+    // Fixed page embeddings.
+    let pages_emb: Vec<Vec<f32>> = (0..max_pages)
+        .map(|_| {
+            let mut e = randn_vec(&mut rng, LATENT);
+            normalize(&mut e);
+            e
+        })
+        .collect();
+
+    // Per-kv-head latent + per-q-head perturbations.
+    let mut z_kv: Vec<Vec<f32>> = (0..n_kv)
+        .map(|_| {
+            let mut z = randn_vec(&mut rng, LATENT);
+            normalize(&mut z);
+            z
+        })
+        .collect();
+    let mut head_eps: Vec<Vec<f32>> = (0..n_qo).map(|_| randn_vec(&mut rng, LATENT)).collect();
+    let mut prev_q: Vec<Vec<f32>> = vec![vec![0.0; LATENT]; n_qo];
+    let mut first = true;
+
+    let overlay = tasks::Overlay::new(spec, &mut rng);
+    let mut steps = Vec::with_capacity(spec.gen_steps);
+
+    for t in 0..spec.gen_steps {
+        let n_pages = (spec.prompt_pages + t / spec.tokens_per_page).min(max_pages);
+        // Evolve kv-head latents; head-specific outliers.
+        for m in 0..n_kv {
+            let noise = randn_vec(&mut rng, LATENT);
+            for (zi, ni) in z_kv[m].iter_mut().zip(&noise) {
+                *zi = params.alpha * *zi + (1.0 - params.alpha * params.alpha).sqrt() * ni;
+            }
+            normalize(&mut z_kv[m]);
+        }
+        let mut outlier_heads = vec![false; n_qo];
+        for h in 0..n_qo {
+            // heads drift slightly within the group
+            let noise = randn_vec(&mut rng, LATENT);
+            for (ei, ni) in head_eps[h].iter_mut().zip(&noise) {
+                *ei = 0.98 * *ei + 0.02f32.sqrt() * ni * 2.0;
+            }
+            if rng.f32() < params.outlier_prob || overlay.forced_jump(t) {
+                outlier_heads[h] = true;
+                let jump = randn_vec(&mut rng, LATENT);
+                for (ei, ji) in head_eps[h].iter_mut().zip(&jump) {
+                    *ei = (1.0 - params.outlier_mix) * *ei
+                        + params.outlier_mix * ji * (1.0 + params.head_noise);
+                }
+            }
+        }
+
+        // Compose per-q-head query latents.
+        let q: Vec<Vec<f32>> = (0..n_qo)
+            .map(|h| {
+                let m = h / g;
+                let mut v: Vec<f32> = z_kv[m]
+                    .iter()
+                    .zip(&head_eps[h])
+                    .map(|(z, e)| z + params.head_noise * e)
+                    .collect();
+                // task overlay steers the query toward required pages
+                overlay.steer(t, &mut v, &pages_emb);
+                normalize(&mut v);
+                v
+            })
+            .collect();
+
+        let query_sim: Vec<f32> = (0..n_qo)
+            .map(|h| {
+                if first {
+                    1.0
+                } else {
+                    crate::linalg::dot(&q[h], &prev_q[h])
+                }
+            })
+            .collect();
+
+        // True attention mass + noisy summary scores per head.
+        let beta = params.beta * overlay.beta_scale(t);
+        let required = overlay.required_pages(t, n_pages);
+        let mut weights = Vec::with_capacity(n_qo);
+        let mut summary = Vec::with_capacity(n_qo);
+        for qh in q.iter() {
+            let mut aff: Vec<f32> = (0..n_pages)
+                .map(|pg| crate::linalg::dot(qh, &pages_emb[pg]))
+                .collect();
+            overlay.boost(t, &mut aff);
+            let mut w: Vec<f32> = aff.iter().map(|a| a * beta).collect();
+            crate::linalg::softmax_inplace(&mut w);
+            let est: Vec<f32> = aff
+                .iter()
+                .map(|a| {
+                    // page-summary error: gaussian plus occasional heavy
+                    // outliers (min/max bounds are loose for some pages)
+                    let spike = if rng.f32() < 0.03 {
+                        rng.normal_f32(0.0, 1.0) * 4.0 * params.summary_noise
+                    } else {
+                        0.0
+                    };
+                    a + params.summary_noise * rng.normal_f32(0.0, 1.0) + spike
+                })
+                .collect();
+            weights.push(w);
+            summary.push(est);
+        }
+
+        // Query-pooled variants (MeanQ / MaxQ): pool the group's query
+        // latents first, score the pooled query once per kv head.
+        let mut scores_meanq = Vec::with_capacity(n_kv);
+        let mut scores_maxq = Vec::with_capacity(n_kv);
+        for m in 0..n_kv {
+            let grp = &q[m * g..(m + 1) * g];
+            let mut qmean = vec![0.0f32; LATENT];
+            let mut qmax = vec![f32::NEG_INFINITY; LATENT];
+            for qh in grp {
+                for i in 0..LATENT {
+                    qmean[i] += qh[i] / g as f32;
+                    qmax[i] = qmax[i].max(qh[i]);
+                }
+            }
+            let score_of = |qv: &[f32], rng: &mut Rng| -> Vec<f32> {
+                let mut aff: Vec<f32> =
+                    (0..n_pages).map(|pg| crate::linalg::dot(qv, &pages_emb[pg])).collect();
+                overlay.boost(t, &mut aff);
+                aff.iter()
+                    .map(|a| a + params.summary_noise * rng.normal_f32(0.0, 1.0))
+                    .collect()
+            };
+            scores_meanq.push(score_of(&qmean, &mut rng));
+            scores_maxq.push(score_of(&qmax, &mut rng));
+        }
+
+        steps.push(StepTruth {
+            weights,
+            query_sim,
+            summary_scores: summary,
+            scores_meanq,
+            scores_maxq,
+            required_pages: required,
+            n_pages,
+        });
+        prev_q = q;
+        first = false;
+    }
+
+    Trace { spec: spec.clone(), n_qo, n_kv, steps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TaskSpec {
+        TaskSpec::new(TaskKind::Summarization, 64, 200, 8)
+    }
+
+    #[test]
+    fn similarity_calibrated_to_paper() {
+        let tr = generate(&spec(), 8, 2, &OracleParams::default(), 7);
+        let mut sims = Vec::new();
+        for st in tr.steps.iter().skip(1) {
+            sims.extend(st.query_sim.iter().map(|&x| x as f64));
+        }
+        let mean = sims.iter().sum::<f64>() / sims.len() as f64;
+        assert!((0.80..0.97).contains(&mean), "mean sim {}", mean);
+        // outliers exist (Fig. 3c)
+        let min = sims.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(min < 0.6, "min sim {}", min);
+    }
+
+    #[test]
+    fn weights_normalized_and_groups_coherent() {
+        let tr = generate(&spec(), 8, 2, &OracleParams::default(), 8);
+        let st = &tr.steps[50];
+        for w in &st.weights {
+            let s: f32 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3);
+        }
+        // heads in the same group agree more than heads across groups
+        let top = |h: usize| crate::linalg::top_k(&st.weights[h], 8);
+        let overlap = |a: &[usize], b: &[usize]| {
+            a.iter().filter(|x| b.contains(x)).count()
+        };
+        let within = overlap(&top(0), &top(1)) + overlap(&top(2), &top(3));
+        let across = overlap(&top(0), &top(5)) + overlap(&top(2), &top(7));
+        assert!(within >= across, "within {} across {}", within, across);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&spec(), 4, 2, &OracleParams::default(), 42);
+        let b = generate(&spec(), 4, 2, &OracleParams::default(), 42);
+        assert_eq!(a.steps[10].weights, b.steps[10].weights);
+        let c = generate(&spec(), 4, 2, &OracleParams::default(), 43);
+        assert_ne!(a.steps[10].weights, c.steps[10].weights);
+    }
+
+    #[test]
+    fn pages_grow_during_generation() {
+        let tr = generate(&spec(), 4, 2, &OracleParams::default(), 1);
+        assert!(tr.steps.last().unwrap().n_pages > tr.steps[0].n_pages);
+    }
+}

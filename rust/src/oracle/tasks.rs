@@ -1,0 +1,243 @@
+//! Task overlays for the attention oracle: the structures that make
+//! NIAH / summarization / long-generation / reasoning traces behave like
+//! their real counterparts.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Needle-in-a-haystack: one prompt page must be retrievable during
+    /// the answer phase (last quarter of generation).
+    Niah,
+    /// Long-input QA / summarization: diffuse drifting interest over the
+    /// whole prompt (LongBench-v2-like).
+    Summarization,
+    /// LongGenBench-like: periodic subtasks, each tied to a prompt page
+    /// that must be surfaced during its window.
+    LongGen,
+    /// Reasoning (MATH/AIME/GPQA-like): fact pages are revisited after
+    /// long cold stretches; revisits coincide with query-outlier jumps.
+    Reasoning,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Niah => "niah",
+            TaskKind::Summarization => "summarization",
+            TaskKind::LongGen => "longgen",
+            TaskKind::Reasoning => "reasoning",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        Some(match s {
+            "niah" => TaskKind::Niah,
+            "summarization" | "summ" => TaskKind::Summarization,
+            "longgen" => TaskKind::LongGen,
+            "reasoning" => TaskKind::Reasoning,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [TaskKind; 4] {
+        [TaskKind::Niah, TaskKind::Summarization, TaskKind::LongGen, TaskKind::Reasoning]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub kind: TaskKind,
+    pub prompt_pages: usize,
+    pub gen_steps: usize,
+    /// decode steps per generated page (page granularity of the trace).
+    pub tokens_per_page: usize,
+}
+
+impl TaskSpec {
+    pub fn new(kind: TaskKind, prompt_pages: usize, gen_steps: usize, tokens_per_page: usize) -> TaskSpec {
+        TaskSpec { kind, prompt_pages, gen_steps, tokens_per_page }
+    }
+
+    /// Paper-flavoured defaults: long-input tasks have big prompts and
+    /// short outputs; generation/reasoning tasks the reverse.
+    pub fn default_for(kind: TaskKind) -> TaskSpec {
+        match kind {
+            TaskKind::Niah => TaskSpec::new(kind, 128, 80, 8),
+            TaskKind::Summarization => TaskSpec::new(kind, 128, 200, 8),
+            TaskKind::LongGen => TaskSpec::new(kind, 24, 640, 8),
+            TaskKind::Reasoning => TaskSpec::new(kind, 32, 640, 8),
+        }
+    }
+}
+
+/// Precomputed per-episode schedule of required pages / jumps / boosts.
+pub struct Overlay {
+    kind: TaskKind,
+    /// needle page (Niah).
+    needle: usize,
+    answer_start: usize,
+    /// (page, hot_start, hot_end) windows.
+    hot_windows: Vec<(usize, usize, usize)>,
+    /// steps at which the overlay forces a query jump (reasoning revisits).
+    jump_steps: Vec<usize>,
+    boost_gain: f32,
+}
+
+impl Overlay {
+    pub fn new(spec: &TaskSpec, rng: &mut Rng) -> Overlay {
+        let mut hot = Vec::new();
+        let mut jumps = Vec::new();
+        let (needle, answer_start, gain) = match spec.kind {
+            TaskKind::Niah => {
+                let needle = rng.below(spec.prompt_pages.max(1));
+                (needle, spec.gen_steps * 3 / 5, 4.0)
+            }
+            TaskKind::Summarization => (0, spec.gen_steps, 0.0),
+            TaskKind::LongGen => {
+                // ~8 subtasks, each tied to a prompt page, hot for a window.
+                let n_sub = 8.min(spec.prompt_pages);
+                let span = spec.gen_steps / n_sub.max(1);
+                for i in 0..n_sub {
+                    let pg = rng.below(spec.prompt_pages.max(1));
+                    let start = i * span + span / 4;
+                    hot.push((pg, start, start + span / 2));
+                }
+                (0, spec.gen_steps, 3.0)
+            }
+            TaskKind::Reasoning => {
+                // fact pages revisited after cold stretches; each revisit
+                // forces a query jump (the Fig. 3c outliers).
+                let n_facts = 6.min(spec.prompt_pages);
+                let facts: Vec<usize> =
+                    (0..n_facts).map(|_| rng.below(spec.prompt_pages.max(1))).collect();
+                let mut t = spec.gen_steps / 8;
+                while t + 30 < spec.gen_steps {
+                    let pg = facts[rng.below(facts.len())];
+                    hot.push((pg, t, t + 24));
+                    jumps.push(t);
+                    t += spec.gen_steps / 8 + rng.below(spec.gen_steps / 8 + 1);
+                }
+                (0, spec.gen_steps, 2.1)
+            }
+        };
+        Overlay {
+            kind: spec.kind,
+            needle,
+            answer_start,
+            hot_windows: hot,
+            jump_steps: jumps,
+            boost_gain: gain,
+        }
+    }
+
+    /// Pages the task needs covered at step t (for task scoring).
+    pub fn required_pages(&self, t: usize, n_pages: usize) -> Vec<usize> {
+        let mut req = Vec::new();
+        if self.kind == TaskKind::Niah && t >= self.answer_start && self.needle < n_pages {
+            req.push(self.needle);
+        }
+        for &(pg, s, e) in &self.hot_windows {
+            if t >= s && t < e && pg < n_pages {
+                req.push(pg);
+            }
+        }
+        req
+    }
+
+    /// Force a query-latent jump at this step (reasoning revisits).
+    pub fn forced_jump(&self, t: usize) -> bool {
+        self.jump_steps.contains(&t)
+    }
+
+    /// Steer query latents toward required pages (the model "attends" to
+    /// what the task needs).
+    pub fn steer(&self, t: usize, q: &mut [f32], pages_emb: &[Vec<f32>]) {
+        let mut any = false;
+        for &(pg, s, e) in &self.hot_windows {
+            if t >= s && t < e {
+                for (qi, ei) in q.iter_mut().zip(&pages_emb[pg]) {
+                    *qi += 0.9 * ei;
+                }
+                any = true;
+            }
+        }
+        if self.kind == TaskKind::Niah && t >= self.answer_start {
+            for (qi, ei) in q.iter_mut().zip(&pages_emb[self.needle]) {
+                *qi += 1.2 * ei;
+            }
+            any = true;
+        }
+        let _ = any;
+    }
+
+    /// Raw-affinity boost for required pages.
+    pub fn boost(&self, t: usize, aff: &mut [f32]) {
+        if self.kind == TaskKind::LongGen && t % 24 < 2 {
+            // periodic re-read of the instruction list: keeps subtask
+            // pages warm enough that recency-based droppers retain them
+            // (the paper notes RaaS holds up on LongGenBench).
+            for &(pg, _, _) in &self.hot_windows {
+                if pg < aff.len() {
+                    aff[pg] += 1.4;
+                }
+            }
+        }
+        if self.kind == TaskKind::Niah && self.needle < aff.len() {
+            // the question sits in the prompt, so the needle is mildly warm
+            // from step 0 (this is what prefill-snapshot droppers latch on
+            // to) and strongly hot in the answer phase.
+            aff[self.needle] += if t >= self.answer_start { self.boost_gain } else { 1.6 };
+        }
+        for &(pg, s, e) in &self.hot_windows {
+            if t >= s && t < e && pg < aff.len() {
+                aff[pg] += self.boost_gain;
+            }
+        }
+    }
+
+    /// Summarization is diffuse: lower softmax temperature.
+    pub fn beta_scale(&self, _t: usize) -> f32 {
+        match self.kind {
+            TaskKind::Summarization => 0.45,
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn niah_requires_needle_only_in_answer_phase() {
+        let spec = TaskSpec::default_for(TaskKind::Niah);
+        let mut rng = Rng::new(1);
+        let ov = Overlay::new(&spec, &mut rng);
+        assert!(ov.required_pages(0, spec.prompt_pages).is_empty());
+        let late = ov.required_pages(spec.gen_steps - 1, spec.prompt_pages);
+        assert_eq!(late.len(), 1);
+        assert!(late[0] < spec.prompt_pages);
+    }
+
+    #[test]
+    fn reasoning_has_revisits_and_jumps() {
+        let spec = TaskSpec::default_for(TaskKind::Reasoning);
+        let mut rng = Rng::new(2);
+        let ov = Overlay::new(&spec, &mut rng);
+        assert!(!ov.jump_steps.is_empty());
+        // revisit windows exist well after the start
+        assert!(ov.hot_windows.iter().any(|&(_, s, _)| s > spec.gen_steps / 2));
+    }
+
+    #[test]
+    fn longgen_subtasks_cover_timeline() {
+        let spec = TaskSpec::default_for(TaskKind::LongGen);
+        let mut rng = Rng::new(3);
+        let ov = Overlay::new(&spec, &mut rng);
+        assert!(ov.hot_windows.len() >= 4);
+        let first = ov.hot_windows.first().unwrap().1;
+        let last = ov.hot_windows.last().unwrap().1;
+        assert!(last > first + spec.gen_steps / 2);
+    }
+}

@@ -1,0 +1,271 @@
+//! FreeKV algorithm core (paper §3): speculative retrieval state and the
+//! fine-grained correction rule. Pure functions + small state machines so
+//! the real engine (coordinator), the latency simulator, and the accuracy
+//! simulator all share the same logic.
+
+use crate::config::FreeKvParams;
+use crate::linalg;
+
+/// Per-layer speculative state: the previous step's query vectors and the
+/// selection they produced (already recalled, resident on GPU).
+#[derive(Debug, Clone)]
+pub struct SpecState {
+    /// previous step's q, `[n_qo][d]` flattened.
+    pub prev_q: Option<Vec<f32>>,
+    pub n_qo: usize,
+    pub n_kv: usize,
+    pub d: usize,
+}
+
+impl SpecState {
+    pub fn new(n_qo: usize, n_kv: usize, d: usize) -> SpecState {
+        SpecState { prev_q: None, n_qo, n_kv, d }
+    }
+
+    pub fn group(&self) -> usize {
+        self.n_qo / self.n_kv
+    }
+
+    /// Per-query-head cosine similarity between the current and previous
+    /// step's query vectors (the paper's C_i, §3.1).
+    pub fn head_similarities(&self, q: &[f32]) -> Option<Vec<f32>> {
+        let prev = self.prev_q.as_ref()?;
+        debug_assert_eq!(q.len(), self.n_qo * self.d);
+        Some(
+            (0..self.n_qo)
+                .map(|h| {
+                    linalg::cosine(&q[h * self.d..(h + 1) * self.d], &prev[h * self.d..(h + 1) * self.d])
+                })
+                .collect(),
+        )
+    }
+
+    /// Record the current step's queries for the next step's check.
+    pub fn store(&mut self, q: &[f32]) {
+        debug_assert_eq!(q.len(), self.n_qo * self.d);
+        match &mut self.prev_q {
+            Some(buf) => buf.copy_from_slice(q),
+            None => self.prev_q = Some(q.to_vec()),
+        }
+    }
+}
+
+/// Outcome of the correction check for one layer (paper §3.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CorrectionDecision {
+    /// group-pooled similarity per kv head.
+    pub group_sim: Vec<f32>,
+    /// kv heads whose pooled similarity dropped below tau: these get a
+    /// blocking select+recall before attention.
+    pub corrected_heads: Vec<usize>,
+}
+
+impl CorrectionDecision {
+    pub fn any(&self) -> bool {
+        !self.corrected_heads.is_empty()
+    }
+}
+
+/// Apply the query-based identification rule: pool C_i across the head
+/// group (mean by default, max for the Appendix B.3 ablation), compare
+/// with tau.
+pub fn correction_check(
+    head_sims: &[f32],
+    n_kv: usize,
+    params: &FreeKvParams,
+) -> CorrectionDecision {
+    let g = head_sims.len() / n_kv;
+    let mut group_sim = Vec::with_capacity(n_kv);
+    let mut corrected = Vec::new();
+    for m in 0..n_kv {
+        let grp = &head_sims[m * g..(m + 1) * g];
+        // "max pooling" pools the *dissimilarity* (i.e. takes the most
+        // deviated head) — the conservative variant the paper reports as
+        // triggering more corrections with similar accuracy (App. B.3).
+        let pooled = if params.correction_pool_max {
+            grp.iter().cloned().fold(f32::INFINITY, f32::min)
+        } else {
+            grp.iter().sum::<f32>() / g as f32
+        };
+        group_sim.push(pooled);
+        let tau = if params.no_speculation { 1.0 + 1e-6 } else { params.tau };
+        if pooled < tau {
+            corrected.push(m);
+        }
+    }
+    CorrectionDecision { group_sim, corrected_heads: corrected }
+}
+
+/// Group-consistent page scoring on the coordinator side (used by the
+/// simulators and as a fallback/reference for the select artifact).
+///
+/// q `[n_qo][d]`, smin/smax `[n_kv][P][d]`, mask `[P]` -> scores `[n_kv][P]`.
+pub fn select_scores(
+    q: &[f32],
+    smin: &[f32],
+    smax: &[f32],
+    mask: &[f32],
+    n_kv: usize,
+    n_qo: usize,
+    d: usize,
+    variant: crate::config::SelectVariant,
+) -> Vec<Vec<f32>> {
+    use crate::config::SelectVariant as V;
+    let g = n_qo / n_kv;
+    let p = mask.len();
+    let neg = -1e30f32;
+    let bound = |qh: &[f32], m: usize, pg: usize| -> f32 {
+        let base = (m * p + pg) * d;
+        let mut s = 0.0f32;
+        for dim in 0..d {
+            let lo = qh[dim] * smin[base + dim];
+            let hi = qh[dim] * smax[base + dim];
+            s += lo.max(hi);
+        }
+        s
+    };
+    let mut out = Vec::with_capacity(n_kv);
+    for m in 0..n_kv {
+        let scores = match variant {
+            V::MeanQ | V::MaxQ => {
+                let mut qp = vec![0.0f32; d];
+                for j in 0..g {
+                    let qh = &q[(m * g + j) * d..(m * g + j + 1) * d];
+                    for dim in 0..d {
+                        qp[dim] = if variant == V::MeanQ {
+                            qp[dim] + qh[dim] / g as f32
+                        } else if j == 0 {
+                            qh[dim]
+                        } else {
+                            qp[dim].max(qh[dim])
+                        };
+                    }
+                }
+                (0..p)
+                    .map(|pg| if mask[pg] > 0.0 { bound(&qp, m, pg) } else { neg })
+                    .collect::<Vec<f32>>()
+            }
+            V::MeanQK | V::MaxQK => {
+                let mut pooled = vec![if variant == V::MaxQK { neg } else { 0.0 }; p];
+                for j in 0..g {
+                    let qh = &q[(m * g + j) * d..(m * g + j + 1) * d];
+                    for pg in 0..p {
+                        let b = bound(qh, m, pg);
+                        if variant == V::MeanQK {
+                            pooled[pg] += b / g as f32;
+                        } else {
+                            pooled[pg] = pooled[pg].max(b);
+                        }
+                    }
+                }
+                (0..p).map(|pg| if mask[pg] > 0.0 { pooled[pg] } else { neg }).collect()
+            }
+            V::MeanS | V::MaxS => {
+                let mut pooled = vec![0.0f32; p];
+                for j in 0..g {
+                    let qh = &q[(m * g + j) * d..(m * g + j + 1) * d];
+                    let mut row: Vec<f32> =
+                        (0..p).map(|pg| if mask[pg] > 0.0 { bound(qh, m, pg) } else { neg }).collect();
+                    linalg::softmax_inplace(&mut row);
+                    for pg in 0..p {
+                        let v = if mask[pg] > 0.0 { row[pg] } else { 0.0 };
+                        if variant == V::MeanS {
+                            pooled[pg] += v / g as f32;
+                        } else {
+                            pooled[pg] = pooled[pg].max(v);
+                        }
+                    }
+                }
+                pooled
+            }
+        };
+        out.push(scores);
+    }
+    out
+}
+
+/// Top-k selection from per-head scores.
+pub fn select_pages(scores: &[Vec<f32>], k: usize) -> Vec<Vec<usize>> {
+    scores.iter().map(|row| linalg::top_k(row, k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FreeKvParams, SelectVariant};
+
+    #[test]
+    fn spec_state_similarity() {
+        let mut st = SpecState::new(4, 2, 3);
+        let q1 = vec![
+            1.0, 0.0, 0.0, /**/ 0.0, 1.0, 0.0, /**/ 1.0, 1.0, 0.0, /**/ 0.0, 0.0, 1.0,
+        ];
+        assert!(st.head_similarities(&q1).is_none());
+        st.store(&q1);
+        let mut q2 = q1.clone();
+        q2[0..3].copy_from_slice(&[0.0, 1.0, 0.0]); // head 0 rotated 90 deg
+        let sims = st.head_similarities(&q2).unwrap();
+        assert!((sims[0] - 0.0).abs() < 1e-6);
+        assert!((sims[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn correction_thresholds() {
+        let p = FreeKvParams { tau: 0.8, ..Default::default() };
+        // n_kv=2, G=2: head sims [0.9, 0.95 | 0.5, 0.9]
+        let d = correction_check(&[0.9, 0.95, 0.5, 0.9], 2, &p);
+        assert_eq!(d.corrected_heads, vec![1]); // mean 0.7 < 0.8
+        assert!((d.group_sim[0] - 0.925).abs() < 1e-6);
+
+        // "max" pooling is conservative (most-deviated head): head 0's
+        // group dips to 0.9 >= 0.8 (no correction) but head 1's dips to
+        // 0.5 -> corrected, and it triggers at least as often as mean.
+        let pmax = FreeKvParams { tau: 0.8, correction_pool_max: true, ..Default::default() };
+        let d2 = correction_check(&[0.9, 0.95, 0.5, 0.9], 2, &pmax);
+        assert_eq!(d2.corrected_heads, vec![1]);
+        let d3 = correction_check(&[0.75, 0.95, 0.95, 0.95], 2, &pmax);
+        assert_eq!(d3.corrected_heads, vec![0]); // mean (0.85) would not trigger
+
+        // tau = 0 -> never corrects; no_speculation -> always corrects
+        let p0 = FreeKvParams { tau: 0.0, ..Default::default() };
+        assert!(!correction_check(&[0.2, 0.2, 0.2, 0.2], 2, &p0).any());
+        let p1 = FreeKvParams { no_speculation: true, ..Default::default() };
+        assert_eq!(correction_check(&[1.0, 1.0, 1.0, 1.0], 2, &p1).corrected_heads, vec![0, 1]);
+    }
+
+    #[test]
+    fn select_scores_group_consistent_and_masked() {
+        // n_kv=1, G=2, d=2, P=3; head0 aligned with page0 summary, head1
+        // with page2; MeanS must produce one shared ranking.
+        let q = vec![1.0, 0.0, /**/ 0.0, 1.0];
+        let smin = vec![
+            0.9, 0.0, /*pg0*/ 0.1, 0.1, /*pg1*/ 0.0, 0.9, /*pg2*/
+        ];
+        let smax = smin.clone();
+        let mask = vec![1.0, 1.0, 0.0];
+        for variant in SelectVariant::all() {
+            let scores = select_scores(&q, &smin, &smax, &mask, 1, 2, 2, variant);
+            assert_eq!(scores.len(), 1);
+            assert_eq!(scores[0].len(), 3);
+            // masked page 2 never wins even though head1 loves it
+            let top = select_pages(&scores, 1);
+            assert_ne!(top[0][0], 2, "{:?}", variant);
+        }
+        // MeanS with full mask: both hot pages beat the dud page 1.
+        let scores =
+            select_scores(&q, &smin, &smax, &[1.0, 1.0, 1.0], 1, 2, 2, SelectVariant::MeanS);
+        let top2 = select_pages(&scores, 2);
+        assert!(top2[0].contains(&0) && top2[0].contains(&2));
+    }
+
+    #[test]
+    fn rust_select_matches_quest_bound() {
+        // bound = sum_d max(q*min, q*max); negative q flips which side wins.
+        let q = vec![1.0, -1.0];
+        let smin = vec![-2.0, -3.0];
+        let smax = vec![5.0, 4.0];
+        let s = select_scores(&q, &smin, &smax, &[1.0], 1, 1, 2, SelectVariant::MeanQK);
+        // max(1*-2, 1*5) + max(-1*-3, -1*4) = 5 + 3 = 8
+        assert!((s[0][0] - 8.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,9 @@
+//! Retrieval/dropping policies: the FreeKV algorithm core shared with the
+//! real engine, plus the per-method latency and accuracy simulators used
+//! to regenerate the paper's tables and figures.
+
+pub mod accuracy;
+pub mod freekv;
+pub mod latency;
+
+pub use latency::{Method, RunRecord, SimKnobs};

@@ -1,0 +1,239 @@
+//! Artifact manifest: the contract between the python compile path and
+//! the rust runtime. Parses `artifacts/manifest.json` into typed specs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::{usize_array, Json};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(anyhow!("unknown dtype `{}` in manifest", other)),
+        }
+    }
+}
+
+/// One argument of an artifact's entry computation.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// true if this argument is a model weight (bound once at load time,
+    /// per layer for layer artifacts).
+    pub weight: bool,
+}
+
+impl ArgSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub config: String,
+    pub kind: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn data_args(&self) -> impl Iterator<Item = &ArgSpec> {
+        self.args.iter().filter(|a| !a.weight)
+    }
+    pub fn weight_args(&self) -> impl Iterator<Item = &ArgSpec> {
+        self.args.iter().filter(|a| a.weight)
+    }
+}
+
+/// Entry in the flat weights blob.
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// offset into the blob, in f32 elements.
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightsSpec {
+    pub file: String,
+    pub tensors: Vec<WeightTensor>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: HashMap<String, ModelConfig>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub weights: HashMap<String, WeightsSpec>,
+    pub decode_batch_buckets: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut configs = HashMap::new();
+        if let Some(obj) = j.get("configs").as_obj() {
+            for (name, cj) in obj.iter() {
+                configs.insert(name.clone(), ModelConfig::from_json(cj)?);
+            }
+        }
+
+        let mut artifacts = HashMap::new();
+        for aj in j.get("artifacts").as_arr().unwrap_or(&[]) {
+            let args = aj
+                .get("args")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|arg| {
+                    Ok(ArgSpec {
+                        name: arg.get("name").as_str().unwrap_or("?").into(),
+                        dtype: DType::parse(arg.get("dtype").as_str().unwrap_or("?"))?,
+                        shape: usize_array(arg.get("shape")),
+                        weight: arg.get("weight").as_bool().unwrap_or(false),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let spec = ArtifactSpec {
+                name: aj.get("name").as_str().unwrap_or("?").into(),
+                config: aj.get("config").as_str().unwrap_or("?").into(),
+                kind: aj.get("kind").as_str().unwrap_or("?").into(),
+                file: aj.get("file").as_str().unwrap_or("?").into(),
+                args,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        let mut weights = HashMap::new();
+        if let Some(obj) = j.get("weights").as_obj() {
+            for (cfg, wj) in obj.iter() {
+                let tensors = wj
+                    .get("tensors")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|t| WeightTensor {
+                        name: t.get("name").as_str().unwrap_or("?").into(),
+                        shape: usize_array(t.get("shape")),
+                        offset: t.get("offset").as_usize().unwrap_or(0),
+                        size: t.get("size").as_usize().unwrap_or(0),
+                    })
+                    .collect();
+                weights.insert(
+                    cfg.clone(),
+                    WeightsSpec { file: wj.get("file").as_str().unwrap_or("?").into(), tensors },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            configs,
+            artifacts,
+            weights,
+            decode_batch_buckets: usize_array(j.get("buckets").get("decode_batch")),
+            prefill_buckets: usize_array(j.get("buckets").get("prefill")),
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs.get(name).ok_or_else(|| anyhow!("config `{}` not in manifest", name))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| anyhow!("artifact `{}` not in manifest", name))
+    }
+
+    /// Smallest decode batch bucket >= n.
+    pub fn decode_bucket(&self, n: usize) -> Option<usize> {
+        self.decode_batch_buckets.iter().copied().filter(|&b| b >= n).min()
+    }
+
+    /// Smallest prefill bucket >= n.
+    pub fn prefill_bucket(&self, n: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().filter(|&b| b >= n).min()
+    }
+
+    /// Golden trace path for a config.
+    pub fn golden_path(&self, config: &str) -> PathBuf {
+        self.dir.join(format!("golden_{}.json", config))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(artifacts_dir()).expect("run `make artifacts` first");
+        assert!(m.configs.contains_key("tiny"));
+        let cfg = m.config("tiny").unwrap();
+        assert_eq!(cfg.page_size, 32);
+
+        // Every artifact file exists and kinds are known.
+        for spec in m.artifacts.values() {
+            assert!(m.dir.join(&spec.file).exists(), "{} missing", spec.file);
+            assert!(
+                ["embed", "layer_decode", "layer_qkv", "layer_attn", "logits", "select",
+                 "layer_prefill", "summarize"]
+                .contains(&spec.kind.as_str()),
+                "unknown kind {}",
+                spec.kind
+            );
+        }
+        // Weight blob exists with the right size.
+        let w = &m.weights["tiny"];
+        let floats: usize = w.tensors.iter().map(|t| t.size).sum();
+        let md = std::fs::metadata(m.dir.join(&w.file)).unwrap();
+        assert_eq!(md.len() as usize, floats * 4);
+    }
+
+    #[test]
+    fn buckets() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.decode_bucket(1), Some(1));
+        assert_eq!(m.decode_bucket(2), Some(4));
+        assert_eq!(m.decode_bucket(100), None);
+        assert_eq!(m.prefill_bucket(100), Some(512));
+    }
+
+    #[test]
+    fn layer_artifact_weight_args_are_marked() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let a = m.artifact("tiny_layer_qkv_b1").unwrap();
+        let wnames: Vec<_> = a.weight_args().map(|w| w.name.as_str()).collect();
+        assert_eq!(wnames, vec!["ln1", "wq", "wk", "wv"]);
+        let dnames: Vec<_> = a.data_args().map(|w| w.name.as_str()).collect();
+        assert_eq!(dnames, vec!["h", "pos"]);
+    }
+}

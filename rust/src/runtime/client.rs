@@ -1,0 +1,306 @@
+//! PJRT runtime: compile HLO-text artifacts once, bind weight buffers
+//! once, execute from the decode hot path with zero python involvement.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactSpec, DType, Manifest};
+
+/// Host-side tensor passed to / returned from artifact executions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+}
+
+/// Cumulative runtime counters (reported by `freekv serve --stats` and the
+/// perf harness).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub compile_secs: f64,
+    pub compiled: u64,
+}
+
+/// Owns the PJRT client, lazily-compiled executables, and resident weight
+/// buffers for every model config in the manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// per config: tensor name -> device buffer.
+    weights: RefCell<HashMap<String, Rc<HashMap<String, xla::PjRtBuffer>>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        Runtime::new(Manifest::load(dir)?)
+    }
+
+    /// Compile (or fetch cached) an artifact executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", name))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compile_secs += t0.elapsed().as_secs_f64();
+            st.compiled += 1;
+        }
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact of a config (avoids first-request
+    /// latency spikes; used by `freekv serve --warmup`).
+    pub fn warmup(&self, config: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| a.config == config)
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Load the weight blob of a config into device buffers (idempotent).
+    pub fn weight_buffers(&self, config: &str) -> Result<Rc<HashMap<String, xla::PjRtBuffer>>> {
+        if let Some(w) = self.weights.borrow().get(config) {
+            return Ok(w.clone());
+        }
+        let spec = self
+            .manifest
+            .weights
+            .get(config)
+            .ok_or_else(|| anyhow!("no weights for config `{}`", config))?
+            .clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let blob = std::fs::read(&path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        let floats: &[f32] = bytemuck_cast_f32(&blob)?;
+        let needed: usize = spec.tensors.iter().map(|t| t.offset + t.size).max().unwrap_or(0);
+        if floats.len() < needed {
+            return Err(anyhow!(
+                "weights blob {} truncated: {} floats, manifest expects {}",
+                path.display(),
+                floats.len(),
+                needed
+            ));
+        }
+        let mut map = HashMap::new();
+        for t in &spec.tensors {
+            let data = &floats[t.offset..t.offset + t.size];
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(data, &t.shape, None)
+                .map_err(|e| anyhow!("uploading weight {}: {e}", t.name))?;
+            self.stats.borrow_mut().h2d_bytes += (t.size * 4) as u64;
+            map.insert(t.name.clone(), buf);
+        }
+        let rc = Rc::new(map);
+        self.weights.borrow_mut().insert(config.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    fn input_buffer(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            HostTensor::F32(d, s) => {
+                self.stats.borrow_mut().h2d_bytes += (d.len() * 4) as u64;
+                self.client.buffer_from_host_buffer::<f32>(d, s, None)
+            }
+            HostTensor::I32(d, s) => {
+                self.stats.borrow_mut().h2d_bytes += (d.len() * 4) as u64;
+                self.client.buffer_from_host_buffer::<i32>(d, s, None)
+            }
+        };
+        buf.map_err(|e| anyhow!("creating input buffer: {e}"))
+    }
+
+    /// Execute an artifact: data tensors positionally for non-weight args,
+    /// weight args resolved from the config's buffers. `layer` selects the
+    /// `layers.{i}.` prefix for layer artifacts (None -> global weights).
+    pub fn run(
+        &self,
+        name: &str,
+        data: &[HostTensor],
+        layer: Option<usize>,
+    ) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.check_args(&spec, data)?;
+        let exe = self.executable(name)?;
+        let weights = self.weight_buffers(&spec.config)?;
+
+        // Input tensors become fresh device buffers; weight args reuse the
+        // resident buffers (no per-call copy — this is the point of the
+        // AOT + persistent-buffer design).
+        let owned: Vec<xla::PjRtBuffer> = data
+            .iter()
+            .map(|t| self.input_buffer(t))
+            .collect::<Result<Vec<_>>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(spec.args.len());
+        let mut di = 0usize;
+        for a in &spec.args {
+            if a.weight {
+                let key = match layer {
+                    Some(i) if !matches!(a.name.as_str(), "embed" | "ln_f") => {
+                        format!("layers.{}.{}", i, a.name)
+                    }
+                    _ => a.name.clone(),
+                };
+                let buf = weights
+                    .get(&key)
+                    .ok_or_else(|| anyhow!("weight `{}` missing for {}", key, name))?;
+                args.push(buf);
+            } else {
+                args.push(&owned[di]);
+                di += 1;
+            }
+        }
+
+        let t0 = Instant::now();
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {}: {e}", name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", name))?;
+        // NB: never call size_bytes() on the tuple literal itself — XLA's
+        // ShapeUtil::ByteSizeOf aborts on TUPLE shapes without a pointer
+        // size. Account bytes per decomposed leaf instead.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untupling {}: {e}", name))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.exec_secs += t0.elapsed().as_secs_f64();
+            st.d2h_bytes += parts.iter().map(|p| p.size_bytes() as u64).sum::<u64>();
+        }
+        parts
+            .into_iter()
+            .map(|l| literal_to_host(&l))
+            .collect::<Result<Vec<_>>>()
+    }
+
+    fn check_args(&self, spec: &ArtifactSpec, data: &[HostTensor]) -> Result<()> {
+        let expected: Vec<_> = spec.data_args().collect();
+        if expected.len() != data.len() {
+            return Err(anyhow!(
+                "{} expects {} data args, got {}",
+                spec.name,
+                expected.len(),
+                data.len()
+            ));
+        }
+        for (a, t) in expected.iter().zip(data) {
+            let dt_ok = matches!(
+                (&a.dtype, t),
+                (DType::F32, HostTensor::F32(..)) | (DType::I32, HostTensor::I32(..))
+            );
+            if !dt_ok || a.shape != t.shape() {
+                return Err(anyhow!(
+                    "{} arg `{}`: expected {:?} {:?}, got {:?}",
+                    spec.name,
+                    a.name,
+                    a.dtype,
+                    a.shape,
+                    t.shape()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn literal_to_host(l: &xla::Literal) -> Result<HostTensor> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::F32(
+            l.to_vec::<f32>().map_err(|e| anyhow!("literal f32: {e}"))?,
+            dims,
+        )),
+        xla::ElementType::S32 => Ok(HostTensor::I32(
+            l.to_vec::<i32>().map_err(|e| anyhow!("literal i32: {e}"))?,
+            dims,
+        )),
+        other => Err(anyhow!("unsupported output element type {:?}", other)),
+    }
+}
+
+/// Reinterpret the weight blob bytes as f32 (little-endian hosts only,
+/// which is everything PJRT CPU targets).
+fn bytemuck_cast_f32(bytes: &[u8]) -> Result<&[f32]> {
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("weight blob length {} not divisible by 4", bytes.len()));
+    }
+    if bytes.as_ptr() as usize % std::mem::align_of::<f32>() != 0 {
+        return Err(anyhow!("weight blob misaligned"));
+    }
+    // SAFETY: length and alignment checked above; f32 has no invalid bit
+    // patterns.
+    Ok(unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) })
+}

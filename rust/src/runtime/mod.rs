@@ -1,0 +1,8 @@
+//! PJRT runtime (Layer-3 side of the AOT bridge): artifact manifest,
+//! executable cache, resident weight buffers, typed host tensors.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArgSpec, ArtifactSpec, DType, Manifest, WeightsSpec};
+pub use client::{HostTensor, Runtime, RuntimeStats};

@@ -1,0 +1,199 @@
+//! Minimal HTTP/1.1 server for the serving example. Hand-rolled over
+//! `std::net` (the offline registry has no hyper/tokio): one acceptor
+//! thread feeding a request channel, the engine thread consuming it —
+//! the PJRT runtime is single-threaded by design, so the coordinator
+//! owns it and the network edge stays thin.
+//!
+//! API:
+//!   POST /generate  {"prompt": "...", "max_tokens": 64}
+//!     -> {"id": n, "text": "...", "prompt_tokens": n, "generated": n}
+//!   GET  /metrics   -> one-line serving metrics report
+//!   GET  /healthz   -> ok
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::{Request, Scheduler};
+use crate::util::json::{Json, JsonObj};
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one HTTP/1.1 request from a stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest { method, path, body: String::from_utf8_lossy(&body).into_owned() })
+}
+
+/// Write an HTTP response.
+pub fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        reason,
+        content_type,
+        body.len(),
+        body
+    )?;
+    Ok(())
+}
+
+enum Job {
+    Generate { req: HttpRequest, stream: TcpStream },
+    Quick { req: HttpRequest, stream: TcpStream },
+}
+
+/// Serve until `max_requests` generations complete (None = forever).
+/// Single engine thread (owns the PJRT client), one acceptor thread.
+pub fn serve(mut sched: Scheduler, addr: &str, max_requests: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!("[freekv] serving on http://{}", listener.local_addr()?);
+    let (tx, rx) = mpsc::channel::<Job>();
+
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            match read_request(&mut stream) {
+                Ok(req) => {
+                    let job = if req.method == "POST" && req.path == "/generate" {
+                        Job::Generate { req, stream }
+                    } else {
+                        Job::Quick { req, stream }
+                    };
+                    if tx.send(job).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    let _ = write_response(&mut stream, 400, "text/plain", "bad request");
+                }
+            }
+        }
+    });
+
+    let mut served = 0usize;
+    let mut next_id = 1u64;
+    for job in rx {
+        match job {
+            Job::Quick { req, mut stream } => {
+                let _ = match (req.method.as_str(), req.path.as_str()) {
+                    ("GET", "/healthz") => write_response(&mut stream, 200, "text/plain", "ok"),
+                    ("GET", "/metrics") => {
+                        write_response(&mut stream, 200, "text/plain", &sched.metrics.report())
+                    }
+                    _ => write_response(&mut stream, 404, "text/plain", "not found"),
+                };
+            }
+            Job::Generate { req, mut stream } => {
+                let parsed = Json::parse(&req.body).unwrap_or(Json::Null);
+                let prompt = parsed.get("prompt").as_str().unwrap_or("").to_string();
+                let max_tokens = parsed.get("max_tokens").as_usize().unwrap_or(32);
+                if prompt.is_empty() {
+                    let _ = write_response(&mut stream, 400, "application/json", r#"{"error":"missing prompt"}"#);
+                    continue;
+                }
+                let id = next_id;
+                next_id += 1;
+                sched.submit(Request::from_text(id, &prompt, max_tokens));
+                // Drive the scheduler until this request finishes (other
+                // queued requests advance too — continuous batching).
+                while !sched.completions.iter().any(|c| c.id == id) {
+                    sched.tick()?;
+                }
+                let c = sched.completions.iter().find(|c| c.id == id).unwrap().clone();
+                let mut obj = JsonObj::new();
+                obj.insert("id", c.id as usize);
+                obj.insert("text", c.text.clone());
+                obj.insert("prompt_tokens", c.prompt_tokens);
+                obj.insert("generated", c.generated_tokens);
+                let _ = write_response(
+                    &mut stream,
+                    200,
+                    "application/json",
+                    &Json::from(obj).to_string_compact(),
+                );
+                served += 1;
+                if let Some(max) = max_requests {
+                    if served >= max {
+                        println!("[freekv] served {} requests, exiting", served);
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_parse_roundtrip() {
+        // exercise the parser through a real socket pair
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let req = read_request(&mut s).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/generate");
+            assert_eq!(req.body, r#"{"prompt":"hi","max_tokens":4}"#);
+            write_response(&mut s, 200, "application/json", r#"{"ok":true}"#).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let body = r#"{"prompt":"hi","max_tokens":4}"#;
+        write!(
+            c,
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        let mut resp = String::new();
+        c.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"));
+        assert!(resp.ends_with(r#"{"ok":true}"#));
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,233 @@
+//! Analytical cost model: roofline per decode-step op, parameterized by
+//! model geometry (config.rs) and device profile (profiles.rs).
+//!
+//! LLM decode is memory-bound, so op times are dominated by bytes moved
+//! (weights + KV); the matmul flops term matters for prefill and for
+//! large batch. All sizes derive from the *paper's* model geometries so
+//! the latency figures (Fig. 1 right, 7, 8, 9, 10) reproduce the paper's
+//! shapes without the paper's hardware.
+
+use crate::config::ModelConfig;
+
+use super::profiles::DeviceProfile;
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub dev: DeviceProfile,
+    pub model: ModelConfig,
+    /// bytes per weight element on device (2 = fp16 paper setting).
+    pub weight_elem_bytes: usize,
+}
+
+impl CostModel {
+    pub fn new(dev: DeviceProfile, model: ModelConfig) -> CostModel {
+        CostModel { dev, model, weight_elem_bytes: 2 }
+    }
+
+    fn eb(&self) -> f64 {
+        self.model.kv_elem_bytes as f64
+    }
+
+    fn web(&self) -> f64 {
+        self.weight_elem_bytes as f64
+    }
+
+    /// Per-layer weight bytes (qkv + o + swiglu ffn).
+    pub fn layer_weight_bytes(&self) -> f64 {
+        let m = &self.model;
+        let qkv = m.d_model * (m.n_qo + 2 * m.n_kv) * m.d_head;
+        let o = m.n_qo * m.d_head * m.d_model;
+        let ffn = 3 * m.d_model * m.d_ffn;
+        (qkv + o + ffn) as f64 * self.web()
+    }
+
+    /// QKV + output + FFN projections for one layer, batch b.
+    pub fn layer_linear(&self, b: usize) -> f64 {
+        let m = &self.model;
+        let qkv = 2.0 * (m.d_model * (m.n_qo + 2 * m.n_kv) * m.d_head) as f64;
+        let o = 2.0 * (m.n_qo * m.d_head * m.d_model) as f64;
+        let ffn = 2.0 * (3 * m.d_model * m.d_ffn) as f64;
+        let flops = b as f64 * (qkv + o + ffn);
+        self.dev.op_time(flops, self.layer_weight_bytes())
+    }
+
+    /// Decode attention over `slots` gathered KV slots, batch b.
+    pub fn attention(&self, b: usize, slots: usize) -> f64 {
+        let m = &self.model;
+        let flops = 4.0 * (b * m.n_qo * slots * m.d_head) as f64; // qk + pv
+        let bytes = (2 * b * m.n_kv * slots * m.d_head) as f64 * self.eb();
+        self.dev.op_time(flops, bytes)
+    }
+
+    /// Page-selection scoring over `pages` summaries + top-k, batch b.
+    pub fn selection(&self, b: usize, pages: usize) -> f64 {
+        let m = &self.model;
+        let flops = 4.0 * (b * m.n_qo * pages * m.d_head) as f64;
+        let bytes = (2 * b * m.n_kv * pages * m.d_head) as f64 * self.eb();
+        self.dev.op_time(flops, bytes)
+    }
+
+    /// On-GPU gather of selected pages into the contiguous attention
+    /// input (HBM-bound).
+    pub fn gather(&self, b: usize, slots: usize) -> f64 {
+        let m = &self.model;
+        let bytes = (2 * 2 * b * m.n_kv * slots * m.d_head) as f64 * self.eb(); // rd+wr
+        self.dev.op_time(0.0, bytes)
+    }
+
+    /// LM head.
+    pub fn logits(&self, b: usize) -> f64 {
+        let m = &self.model;
+        let flops = 2.0 * (b * m.d_model * m.vocab) as f64;
+        let bytes = (m.d_model * m.vocab) as f64 * self.web();
+        self.dev.op_time(flops, bytes)
+    }
+
+    /// One full decode step's compute (all layers + head) with a given
+    /// number of attended slots — the building block every policy shares.
+    pub fn decode_compute(&self, b: usize, slots: usize) -> f64 {
+        self.model.n_layers as f64 * (self.layer_linear(b) + self.attention(b, slots))
+            + self.logits(b)
+    }
+
+    /// Prefill compute for `t` prompt tokens (full causal attention).
+    pub fn prefill_compute(&self, t: usize) -> f64 {
+        let m = &self.model;
+        let lin = self.layer_linear(t); // flops scale with t via b argument
+        let attn_flops = 2.0 * (m.n_qo * m.d_head) as f64 * (t as f64 * t as f64);
+        let attn_bytes = (2 * m.n_kv * t * m.d_head) as f64 * self.eb();
+        let attn = self.dev.op_time(attn_flops, attn_bytes);
+        m.n_layers as f64 * (lin + attn) + self.logits(1)
+    }
+
+    /// ShadowKV-style key reconstruction from rank-r factors for
+    /// `tokens` selected tokens, batch b.
+    pub fn svd_reconstruct(&self, b: usize, tokens: usize, rank: usize) -> f64 {
+        let m = &self.model;
+        let flops = 2.0 * (b * m.n_kv * tokens * rank * m.d_head) as f64;
+        let bytes = (b * m.n_kv * tokens * rank) as f64 * self.eb();
+        self.dev.op_time(flops, bytes)
+    }
+
+    /// InfiniGen-style query re-projection (skewed partial weights,
+    /// rank fraction `r_frac` of the head dim), batch b.
+    pub fn reprojection(&self, b: usize, r_frac: f64) -> f64 {
+        let m = &self.model;
+        let cols = (m.n_qo as f64 * m.d_head as f64 * r_frac).ceil();
+        let flops = 2.0 * b as f64 * m.d_model as f64 * cols;
+        let bytes = m.d_model as f64 * cols * self.web();
+        self.dev.op_time(flops, bytes)
+    }
+
+    /// Token-level scoring over the whole context (InfiniGen's selection
+    /// is token-wise, not page-wise).
+    pub fn token_selection(&self, b: usize, context: usize, r_frac: f64) -> f64 {
+        let m = &self.model;
+        let dh = (m.d_head as f64 * r_frac).ceil();
+        let flops = 2.0 * (b * m.n_qo * context) as f64 * dh;
+        let bytes = (b * m.n_kv * context) as f64 * dh * self.eb();
+        self.dev.op_time(flops, bytes)
+    }
+
+    // ----- transfer building blocks ------------------------------------
+
+    /// Recall `pages` KV pages for ALL kv heads, contiguity per layout:
+    /// HND -> one transaction of 2*p*d per (page, head); NHD -> p
+    /// transactions of d elems per (page, head, k/v plane).
+    pub fn recall_pages(&self, pages: usize, hnd: bool) -> f64 {
+        let m = &self.model;
+        let per_head_bytes = (2 * m.page_size * m.d_head) as f64 * self.eb();
+        if hnd {
+            let chunks = (pages * m.n_kv) as u64;
+            self.dev.h2d.time(chunks, per_head_bytes as u64)
+        } else {
+            let chunks = (pages * m.n_kv * 2 * m.page_size) as u64;
+            let chunk_bytes = m.d_head as f64 * self.eb();
+            self.dev.h2d.time(chunks, chunk_bytes as u64)
+        }
+    }
+
+    /// Recall `tokens` individual tokens (InfiniGen's token-wise recall).
+    pub fn recall_tokens(&self, tokens: usize) -> f64 {
+        let m = &self.model;
+        let chunks = (tokens * m.n_kv * 2) as u64;
+        let chunk_bytes = (m.d_head as f64 * self.eb()) as u64;
+        self.dev.h2d.time(chunks, chunk_bytes)
+    }
+
+    /// Offload one completed page (D2H), HND-converted on the fly.
+    pub fn offload_page(&self) -> f64 {
+        let m = &self.model;
+        let per_head_bytes = (2 * m.page_size * m.d_head) as f64 * self.eb();
+        self.dev.d2h.time(m.n_kv as u64, per_head_bytes as u64)
+    }
+
+    /// On-GPU HND->NHD conversion of `pages` recalled pages.
+    pub fn convert_pages(&self, pages: usize) -> f64 {
+        let bytes = pages as f64 * self.model.page_bytes() as f64;
+        self.dev.launch + bytes / self.dev.convert_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profiles::DeviceProfile;
+
+    fn cm() -> CostModel {
+        CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b())
+    }
+
+    #[test]
+    fn decode_step_is_memory_bound_and_plausible() {
+        let c = cm();
+        // Llama-8B fp16 weights ~15 GB -> ~10 ms/token on A100 roofline.
+        let t = c.decode_compute(1, 2048);
+        assert!(t > 5e-3 && t < 30e-3, "decode {}", t);
+        // Bigger batch amortizes weights: same order of magnitude.
+        let t4 = c.decode_compute(4, 2048);
+        assert!(t4 < 2.0 * t, "t4 {} t {}", t4, t);
+    }
+
+    #[test]
+    fn full_context_attention_much_slower_than_budget() {
+        let c = cm();
+        let budget = c.attention(1, 2048);
+        let full = c.attention(1, 32768);
+        assert!(full > 8.0 * budget);
+    }
+
+    #[test]
+    fn hnd_recall_beats_nhd_by_order_of_magnitude() {
+        let c = cm();
+        let hnd = c.recall_pages(32, true);
+        let nhd = c.recall_pages(32, false);
+        // The paper's hybrid-layout ablation (Fig. 9) reports up to ~10x.
+        assert!(nhd / hnd > 5.0, "nhd {} hnd {} ratio {}", nhd, hnd, nhd / hnd);
+        assert!(nhd / hnd < 80.0);
+    }
+
+    #[test]
+    fn token_recall_worse_than_page_recall() {
+        let c = cm();
+        // Same token count: 32 pages vs 1024 scattered tokens.
+        let page = c.recall_pages(32, true);
+        let tok = c.recall_tokens(32 * 32);
+        assert!(tok > page * 3.0, "tok {} page {}", tok, page);
+    }
+
+    #[test]
+    fn prefill_scales_superlinearly() {
+        let c = cm();
+        let t1 = c.prefill_compute(8192);
+        let t2 = c.prefill_compute(32768);
+        assert!(t2 > 3.9 * t1);
+    }
+
+    #[test]
+    fn ascend_recall_slower_than_a100() {
+        let a = cm();
+        let n = CostModel::new(DeviceProfile::ascend_910b(), ModelConfig::llama31_8b());
+        assert!(n.recall_pages(32, true) > a.recall_pages(32, true) * 1.2);
+    }
+}

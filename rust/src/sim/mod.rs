@@ -1,0 +1,12 @@
+//! Latency-model substrate: device profiles, analytical op costs, and a
+//! discrete-event timeline with named streams. The policy simulators
+//! (`policies::latency`) build per-step event graphs on top of these to
+//! regenerate the paper's latency tables and figures.
+
+pub mod cost;
+pub mod profiles;
+pub mod timeline;
+
+pub use cost::CostModel;
+pub use profiles::{DeviceProfile, LinkProfile};
+pub use timeline::{Event, EventId, Stream, Timeline};

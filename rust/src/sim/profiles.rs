@@ -1,0 +1,150 @@
+//! Device profiles for the latency model.
+//!
+//! The paper's testbed is an A100-40G on PCIe Gen4 (plus an Ascend 910B in
+//! Appendix D). This environment has neither, so latency *figures* are
+//! produced by an analytical model parameterized by these profiles; the
+//! real CPU pipeline exercises the same code paths and validates ordering.
+//! See DESIGN.md §Hardware adaptation.
+
+/// One direction of a host<->device link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkProfile {
+    /// sustained bandwidth for large contiguous copies, bytes/s.
+    pub bw: f64,
+    /// fixed cost per DMA transaction (descriptor setup / doorbell).
+    /// This is what makes fragmented NHD recall slow: a 256 B chunk pays
+    /// the same per-transaction cost as an 8 KB one.
+    pub per_txn: f64,
+    /// base latency per engine invocation (driver + completion signal).
+    pub base: f64,
+}
+
+impl LinkProfile {
+    /// Modeled time to move `chunks` transactions of `chunk_bytes` each.
+    pub fn time(&self, chunks: u64, chunk_bytes: u64) -> f64 {
+        if chunks == 0 {
+            return 0.0;
+        }
+        self.base + chunks as f64 * (self.per_txn + chunk_bytes as f64 / self.bw)
+    }
+}
+
+/// Full device profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// peak dense matmul throughput, flop/s (fp16/bf16 tensor units).
+    pub peak_flops: f64,
+    /// device memory bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// fixed kernel-launch overhead per device op.
+    pub launch: f64,
+    pub h2d: LinkProfile,
+    pub d2h: LinkProfile,
+    /// on-device layout-conversion throughput (HND->NHD transpose),
+    /// bytes/s — bounded by HBM bandwidth, with some inefficiency.
+    pub convert_bw: f64,
+    /// fraction of transfer time that can overlap compute on this
+    /// platform (1.0 = perfect async copy engines; Appendix D notes the
+    /// Ascend path overlaps poorly).
+    pub overlap_efficiency: f64,
+}
+
+impl DeviceProfile {
+    /// Roofline time of a device op touching `bytes` and doing `flops`.
+    pub fn op_time(&self, flops: f64, bytes: f64) -> f64 {
+        self.launch + (flops / self.peak_flops).max(bytes / self.hbm_bw)
+    }
+
+    /// NVIDIA A100-40GB + PCIe Gen4 x16 (paper §5.3 testbed).
+    pub fn a100_pcie4() -> DeviceProfile {
+        DeviceProfile {
+            name: "a100-pcie4".into(),
+            peak_flops: 312e12,       // fp16 tensor core
+            hbm_bw: 1.555e12,         // HBM2e
+            launch: 5e-6,
+            h2d: LinkProfile { bw: 24e9, per_txn: 1.5e-6, base: 8e-6 },
+            d2h: LinkProfile { bw: 22e9, per_txn: 1.5e-6, base: 8e-6 },
+            convert_bw: 0.05e12, // strided per-page transpose, not bulk copy
+            overlap_efficiency: 1.0,
+        }
+    }
+
+    /// Ascend 910B (Appendix D): lower effective PCIe bandwidth, higher
+    /// per-op overhead, and poorer copy/compute overlap through the
+    /// current AscendC path.
+    pub fn ascend_910b() -> DeviceProfile {
+        DeviceProfile {
+            name: "ascend-910b".into(),
+            peak_flops: 280e12,
+            hbm_bw: 1.2e12,
+            launch: 20e-6,            // torch-level op dispatch (App. D (i))
+            h2d: LinkProfile { bw: 12e9, per_txn: 1.8e-6, base: 20e-6 },
+            d2h: LinkProfile { bw: 11e9, per_txn: 1.8e-6, base: 20e-6 },
+            convert_bw: 0.3e12,
+            overlap_efficiency: 0.5,  // App. D (ii): insufficient overlap
+        }
+    }
+
+    /// The local CPU testbed (used when cross-checking modeled vs real
+    /// wall-clock on the tiny model; "transfers" are memcpys).
+    pub fn cpu_local() -> DeviceProfile {
+        DeviceProfile {
+            name: "cpu-local".into(),
+            peak_flops: 5e9,
+            hbm_bw: 10e9,
+            launch: 50e-6,
+            h2d: LinkProfile { bw: 8e9, per_txn: 0.2e-6, base: 0.5e-6 },
+            d2h: LinkProfile { bw: 8e9, per_txn: 0.2e-6, base: 0.5e-6 },
+            convert_bw: 4e9,
+            overlap_efficiency: 0.0, // single core: nothing overlaps
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        match name {
+            "a100-pcie4" | "a100" => Some(Self::a100_pcie4()),
+            "ascend-910b" | "ascend" => Some(Self::ascend_910b()),
+            "cpu-local" | "cpu" => Some(Self::cpu_local()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fragmentation_dominates_small_chunks() {
+        let p = DeviceProfile::a100_pcie4();
+        // One KV page for one head: 8 KB contiguous (HND) vs 32 x 256 B (NHD).
+        let hnd = p.h2d.time(1, 8192);
+        let nhd = p.h2d.time(32, 256);
+        assert!(nhd > 5.0 * hnd, "nhd {} hnd {}", nhd, hnd);
+    }
+
+    #[test]
+    fn op_time_is_rooflined() {
+        let p = DeviceProfile::a100_pcie4();
+        // Memory-bound op: 1 GB at 1.555 TB/s ~ 0.64 ms.
+        let t = p.op_time(1e9, 1e9);
+        assert!((t - (1e9 / 1.555e12 + 5e-6)).abs() < 1e-6);
+        // Compute-bound op.
+        let t2 = p.op_time(1e15, 1e6);
+        assert!(t2 > 3e-3);
+    }
+
+    #[test]
+    fn profiles_resolvable() {
+        for n in ["a100", "ascend", "cpu"] {
+            assert!(DeviceProfile::by_name(n).is_some());
+        }
+        assert!(DeviceProfile::by_name("tpu-v9").is_none());
+    }
+
+    #[test]
+    fn zero_chunks_is_free() {
+        assert_eq!(DeviceProfile::a100_pcie4().h2d.time(0, 4096), 0.0);
+    }
+}

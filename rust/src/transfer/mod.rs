@@ -1,0 +1,6 @@
+//! CPU<->GPU transfer path: double-buffered streamed recall, offload with
+//! amortized layout transpose, and chunk-accurate counters.
+
+pub mod engine;
+
+pub use engine::{TransferCounters, TransferEngine};

@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser substrate (no `clap` in the offline registry).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; used by the `freekv` binary and the examples.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("serve --model tiny --batch=4 --verbose --tau 0.9");
+        assert_eq!(a.command(), Some("serve"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.usize_or("batch", 1), 4);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!((a.f64_or("tau", 0.8) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.str_or("out", "results"), "results");
+        assert_eq!(a.usize_or("n", 10), 10);
+    }
+
+    #[test]
+    fn lists_and_positionals() {
+        let a = parse("eval table2 --methods freekv,quest , --n 5");
+        assert_eq!(a.positional, vec!["eval", "table2", ","]);
+        assert_eq!(a.list_or("methods", &[]), vec!["freekv", "quest"]);
+        assert_eq!(a.list_or("tasks", &["niah"]), vec!["niah"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--fast --check --n 3");
+        assert!(a.flag("fast") && a.flag("check"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+}

@@ -1,0 +1,554 @@
+//! Minimal JSON parser/writer.
+//!
+//! The offline build environment vendors only the `xla` crate closure, so
+//! serde/serde_json are unavailable; this module is the in-tree substrate
+//! used for `artifacts/manifest.json`, golden traces, configs, and eval
+//! result files. It supports the full JSON grammar (objects, arrays,
+//! strings with escapes, numbers, bools, null) and preserves object key
+//! order (insertion order) so emitted files diff cleanly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Objects keep a side vector of keys in insertion order for stable
+    /// serialization; lookups go through the map.
+    Obj(JsonObj),
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JsonObj {
+    map: BTreeMap<String, Json>,
+    order: Vec<String>,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn insert(&mut self, key: impl Into<String>, val: impl Into<Json>) {
+        let key = key.into();
+        if !self.map.contains_key(&key) {
+            self.order.push(key.clone());
+        }
+        self.map.insert(key, val.into());
+    }
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.map.get(key)
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.order.iter()
+    }
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Json)> {
+        self.order.iter().map(move |k| (k, &self.map[k]))
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
+    }
+}
+impl From<f64> for Json {
+    fn from(n: f64) -> Self {
+        Json::Num(n)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(n: i64) -> Self {
+        Json::Num(n as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Self {
+        Json::Arr(v)
+    }
+}
+impl From<JsonObj> for Json {
+    fn from(o: JsonObj) -> Self {
+        Json::Obj(o)
+    }
+}
+
+/// Parse error with byte offset for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonError {
+    pub msg: String,
+    pub offset: usize,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.msg)
+    }
+}
+impl std::error::Error for JsonError {}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(p.err("trailing characters"));
+        }
+        Ok(v)
+    }
+
+    // ---- typed accessors -------------------------------------------------
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|n| n as i64)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&JsonObj> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+    /// `obj["a"]["b"]`-style access; returns Null for missing paths.
+    pub fn get(&self, key: &str) -> &Json {
+        static NULL: Json = Json::Null;
+        match self {
+            Json::Obj(o) => o.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+    pub fn idx(&self, i: usize) -> &Json {
+        static NULL: Json = Json::Null;
+        match self {
+            Json::Arr(a) => a.get(i).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(0));
+        s
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, None);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(a) => {
+                if a.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if let Some(lvl) = indent {
+                        newline(out, lvl + 1);
+                        v.write(out, Some(lvl + 1));
+                    } else {
+                        v.write(out, None);
+                    }
+                }
+                if let Some(lvl) = indent {
+                    newline(out, lvl);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                if o.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if let Some(lvl) = indent {
+                        newline(out, lvl + 1);
+                        write_str(out, k);
+                        out.push_str(": ");
+                        v.write(out, Some(lvl + 1));
+                    } else {
+                        write_str(out, k);
+                        out.push(':');
+                        v.write(out, None);
+                    }
+                }
+                if let Some(lvl) = indent {
+                    newline(out, lvl);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline(out: &mut String, level: usize) {
+    out.push('\n');
+    for _ in 0..level {
+        out.push(' ');
+    }
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else if n.is_finite() {
+        out.push_str(&format!("{}", n));
+    } else {
+        out.push_str("null"); // JSON has no inf/nan
+    }
+}
+
+fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { msg: msg.to_string(), offset: self.i }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn lit(&mut self, word: &str, val: Json) -> Result<Json, JsonError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(val)
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| self.err("invalid number"))
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            // Surrogate pairs: parse the low half if present.
+                            let c = if (0xD800..0xDC00).contains(&cp) {
+                                self.i += 5;
+                                if self.b.get(self.i) != Some(&b'\\')
+                                    || self.b.get(self.i + 1) != Some(&b'u')
+                                {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                                let hex2 =
+                                    std::str::from_utf8(&self.b[self.i + 2..self.i + 6])
+                                        .map_err(|_| self.err("bad \\u escape"))?;
+                                let lo = u32::from_str_radix(hex2, 16)
+                                    .map_err(|_| self.err("bad \\u escape"))?;
+                                self.i += 1; // consumed below with the +5
+                                char::from_u32(
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00),
+                                )
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            out.push(c.ok_or_else(|| self.err("bad codepoint"))?);
+                            self.i += 4; // the final +1 below covers 'u'
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar.
+                    let s = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut obj = JsonObj::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(obj));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            obj.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(obj));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut arr = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(arr));
+        }
+        loop {
+            self.skip_ws();
+            arr.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(arr));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+}
+
+/// Convenience: array of numbers -> Vec<f64>.
+pub fn num_array(j: &Json) -> Vec<f64> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+        .unwrap_or_default()
+}
+
+/// Convenience: array of numbers -> Vec<usize>.
+pub fn usize_array(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-3.25e2").unwrap(), Json::Num(-325.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": false}"#).unwrap();
+        assert_eq!(j.get("a").idx(2).get("b").as_str(), Some("x"));
+        assert_eq!(j.get("c").as_bool(), Some(false));
+        assert_eq!(j.get("missing").as_str(), None);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"name":"freekv","n":[1,2.5,-3],"nested":{"ok":true,"nul":null},"s":"q\"uote\\"}"#;
+        let j = Json::parse(src).unwrap();
+        let re = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(j, re);
+        let re2 = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(j, re2);
+    }
+
+    #[test]
+    fn preserves_key_order() {
+        let j = Json::parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
+        let keys: Vec<_> = j.as_obj().unwrap().keys().cloned().collect();
+        assert_eq!(keys, vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let j = Json::parse(r#""é😀""#).unwrap();
+        assert_eq!(j.as_str(), Some("é😀"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn builder_api() {
+        let mut o = JsonObj::new();
+        o.insert("x", 1.5);
+        o.insert("y", "s");
+        o.insert("z", Json::Arr(vec![Json::from(1usize), Json::from(2usize)]));
+        let j = Json::from(o);
+        assert_eq!(
+            Json::parse(&j.to_string_compact()).unwrap(),
+            j
+        );
+    }
+}

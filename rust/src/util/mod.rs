@@ -1,0 +1,10 @@
+//! In-tree substrates: the offline build vendors only the `xla` crate
+//! closure, so JSON, CLI parsing, PRNG, statistics, tables, and the
+//! property-test harness are implemented here.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,51 @@
+//! Micro property-testing harness (the `proptest` crate is not available
+//! offline). Runs a property over many seeded random cases and reports
+//! the failing seed; combined with `Rng::fork` this gives reproducible
+//! shrink-free property tests for coordinator invariants.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeded inputs; panics with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{}` failed on case {} (seed {:#x}): {}",
+                name, case, seed, msg
+            );
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check("sorted-after-sort", 50, |rng| {
+            let mut v: Vec<u64> = (0..20).map(|_| rng.next_u64() % 100).collect();
+            v.sort_unstable();
+            prop_assert!(v.windows(2).all(|w| w[0] <= w[1]), "not sorted: {:?}", v);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn reports_failing_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+}

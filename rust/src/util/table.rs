@@ -1,0 +1,158 @@
+//! ASCII table rendering for eval drivers — prints the same rows the
+//! paper's tables/figures report, plus CSV export for plotting.
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and optionally save CSV under `dir/name.csv`.
+    pub fn emit(&self, dir: Option<&str>, name: &str) {
+        print!("{}", self.render());
+        if let Some(dir) = dir {
+            let _ = std::fs::create_dir_all(dir);
+            let path = format!("{}/{}.csv", dir, name);
+            if std::fs::write(&path, self.to_csv()).is_ok() {
+                println!("[saved {}]", path);
+            }
+        }
+    }
+}
+
+/// Format a float with sensible precision for table cells.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 100.0 {
+        format!("{:.0}", x)
+    } else if x.abs() >= 1.0 {
+        format!("{:.2}", x)
+    } else {
+        format!("{:.4}", x)
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn ftime(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["method", "latency"]);
+        t.row(vec!["freekv".into(), "1.2ms".into()]);
+        t.row(vec!["arkvale-longname".into(), "13ms".into()]);
+        let r = t.render();
+        assert!(r.contains("| freekv           |"));
+        assert!(r.lines().filter(|l| l.starts_with('+')).count() == 3);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        assert_eq!(t.to_csv(), "a,b\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(1234.4), "1234");
+        assert_eq!(fnum(3.14159), "3.14");
+        assert_eq!(fnum(0.01234), "0.0123");
+        assert_eq!(ftime(0.0000015), "1.5us");
+        assert_eq!(ftime(0.0123), "12.30ms");
+        assert_eq!(ftime(2.5), "2.50s");
+    }
+}

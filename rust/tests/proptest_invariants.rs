@@ -1,0 +1,371 @@
+//! Property tests (in-tree harness, util::proptest) over coordinator
+//! invariants: KV-cache slot management, selection/page-table state,
+//! transfer accounting, batching math, and the simulators.
+
+use freekv::config::{FreeKvParams, ModelConfig, SelectVariant};
+use freekv::kvcache::{GpuLayerCache, LayerPool, Layout, RequestKv};
+use freekv::linalg;
+use freekv::oracle::{generate, OracleParams, TaskKind, TaskSpec};
+use freekv::policies::accuracy::{run_episode, AccBudget, AccKnobs};
+use freekv::policies::freekv::{correction_check, select_scores};
+use freekv::policies::latency::{simulate_request, Method, SimKnobs};
+use freekv::sim::{CostModel, DeviceProfile, Stream, Timeline};
+use freekv::transfer::TransferEngine;
+use freekv::prop_assert;
+use freekv::util::proptest::check;
+use freekv::util::rng::Rng;
+
+fn small_cfg(rng: &mut Rng) -> ModelConfig {
+    let n_kv = [1, 2, 4][rng.below(3)];
+    let g = [1, 2, 4][rng.below(3)];
+    ModelConfig {
+        name: "prop".into(),
+        n_layers: 1 + rng.below(3),
+        d_model: 32,
+        n_qo: n_kv * g,
+        n_kv,
+        d_head: [4, 8][rng.below(2)],
+        d_ffn: 64,
+        vocab: 64,
+        rope_theta: 1e4,
+        rms_eps: 1e-5,
+        page_size: [2, 4, 8][rng.below(3)],
+        max_context: 256,
+        sink_pages: 1 + rng.below(2),
+        window_pages: 1 + rng.below(3),
+        select_pages: 1 + rng.below(6),
+        kv_elem_bytes: 4,
+    }
+}
+
+#[test]
+fn gather_valid_count_equals_visible_tokens() {
+    // Every appended token that is in sink/window/selected coverage must
+    // appear exactly once per head; no token is ever double-counted.
+    check("gather-valid-count", 40, |rng| {
+        let cfg = small_cfg(rng);
+        let mut gpu = GpuLayerCache::new(
+            cfg.n_kv,
+            cfg.d_head,
+            cfg.page_size,
+            cfg.sink_pages,
+            cfg.window_pages,
+            cfg.select_pages,
+            cfg.n_pages_max(),
+        );
+        let n_tokens = 1 + rng.below(cfg.max_context - 1);
+        for _ in 0..n_tokens {
+            let k: Vec<f32> = (0..cfg.n_kv * cfg.d_head).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            gpu.append(&k.clone(), &k);
+        }
+        let s = gpu.budget_slots();
+        let mut gk = vec![0.0; cfg.n_kv * s * cfg.d_head];
+        let mut gv = gk.clone();
+        let mut valid = vec![0.0; cfg.n_kv * s];
+        gpu.gather(&mut gk, &mut gv, &mut valid);
+        let per_head: f32 = valid[..s].iter().sum();
+        // expected: sink tokens + window-resident tokens (no selection
+        // applied). The ring holds the last `window_pages` pages that have
+        // at least one token (the current page is only claimed once a
+        // token lands in it).
+        let last = (n_tokens - 1) / cfg.page_size;
+        let mut expect = 0usize;
+        for g in 0..=last {
+            let in_sink = g < cfg.sink_pages;
+            let in_ring = g + cfg.window_pages > last && g >= cfg.sink_pages;
+            if in_sink || in_ring {
+                expect += n_tokens.saturating_sub(g * cfg.page_size).min(cfg.page_size);
+            }
+        }
+        prop_assert!(
+            per_head as usize == expect,
+            "visible {} expected {} (tokens {}, cfg {:?})",
+            per_head,
+            expect,
+            n_tokens,
+            (cfg.page_size, cfg.sink_pages, cfg.window_pages)
+        );
+        // all heads identical before selection
+        for m in 1..cfg.n_kv {
+            let vh: f32 = valid[m * s..(m + 1) * s].iter().sum();
+            prop_assert!(vh == per_head, "head {} differs", m);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn selection_page_table_no_duplicates_and_bounded() {
+    check("selection-table", 40, |rng| {
+        let cfg = small_cfg(rng);
+        let mut kv = RequestKv::new(&cfg, Layout::Hnd);
+        let mut eng = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        let tokens = cfg.page_size * (cfg.sink_pages + cfg.window_pages + 4 + rng.below(8));
+        for _ in 0..tokens.min(cfg.max_context) {
+            for l in 0..cfg.n_layers {
+                let k: Vec<f32> =
+                    (0..cfg.n_kv * cfg.d_head).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                kv.append(l, &k.clone(), &k, &mut eng);
+            }
+        }
+        let mask = kv.layers[0].gpu.selectable_mask();
+        let candidates: Vec<usize> =
+            mask.iter().enumerate().filter(|(_, &x)| x > 0.0).map(|(i, _)| i).collect();
+        if candidates.is_empty() {
+            return Ok(());
+        }
+        for _round in 0..4 {
+            let mut pages = candidates.clone();
+            rng.shuffle(&mut pages);
+            let take = 1 + rng.below(cfg.select_pages.min(pages.len()));
+            let pages = &pages[..take];
+            for head in 0..cfg.n_kv {
+                kv.apply_selection(0, head, pages, &mut eng);
+                let resident: Vec<usize> =
+                    kv.layers[0].gpu.selected(head).iter().flatten().cloned().collect();
+                // no duplicates
+                let mut d = resident.clone();
+                d.sort_unstable();
+                d.dedup();
+                prop_assert!(d.len() == resident.len(), "dup pages {:?}", resident);
+                // bounded by slots
+                prop_assert!(resident.len() <= cfg.select_pages, "overflow");
+                // every requested page resident (fits by construction)
+                for pg in pages {
+                    prop_assert!(resident.contains(pg), "page {} missing", pg);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reapplying_selection_is_free() {
+    check("selection-idempotent", 25, |rng| {
+        let cfg = small_cfg(rng);
+        let mut kv = RequestKv::new(&cfg, Layout::Hnd);
+        let mut eng = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        let tokens = cfg.page_size * (cfg.sink_pages + cfg.window_pages + 6);
+        for _ in 0..tokens.min(cfg.max_context) {
+            let k: Vec<f32> =
+                (0..cfg.n_kv * cfg.d_head).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            kv.append(0, &k.clone(), &k, &mut eng);
+        }
+        let mask = kv.layers[0].gpu.selectable_mask();
+        let pages: Vec<usize> = mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x > 0.0)
+            .map(|(i, _)| i)
+            .take(cfg.select_pages)
+            .collect();
+        if pages.is_empty() {
+            return Ok(());
+        }
+        let first = kv.apply_selection(0, 0, &pages, &mut eng);
+        prop_assert!(first == pages.len(), "first apply {} != {}", first, pages.len());
+        let second = kv.apply_selection(0, 0, &pages, &mut eng);
+        prop_assert!(second == 0, "idempotent apply recalled {}", second);
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_roundtrip_any_geometry() {
+    check("pool-roundtrip", 40, |rng| {
+        let (m, p, d) = (1 + rng.below(4), 1 + rng.below(8), 1 + rng.below(16));
+        let pages = 2 + rng.below(6);
+        let layout = if rng.below(2) == 0 { Layout::Hnd } else { Layout::Nhd };
+        let mut pool = LayerPool::new(layout, pages, m, p, d);
+        let k: Vec<f32> = (0..p * m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..p * m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let pg = rng.below(pages);
+        pool.write_page(pg, &k, &v);
+        for head in 0..m {
+            let (kr, vr) = pool.read_page_head(pg, head);
+            for tok in 0..p {
+                for dim in 0..d {
+                    let src = (tok * m + head) * d + dim;
+                    prop_assert!(kr[tok * d + dim] == k[src], "k mismatch");
+                    prop_assert!(vr[tok * d + dim] == v[src], "v mismatch");
+                }
+            }
+            // chunk plan covers exactly the page bytes
+            let total: usize = pool.recall_chunks(pg, head).iter().map(|c| c.len).sum();
+            prop_assert!(total == 2 * p * d, "chunks cover {} != {}", total, 2 * p * d);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn correction_monotone_in_tau() {
+    check("correction-monotone", 50, |rng| {
+        let n_kv = 1 + rng.below(4);
+        let g = 1 + rng.below(4);
+        let sims: Vec<f32> = (0..n_kv * g).map(|_| rng.f32()).collect();
+        let mut prev = 0usize;
+        for tau in [0.0f32, 0.25, 0.5, 0.75, 1.0] {
+            let p = FreeKvParams { tau, ..Default::default() };
+            let d = correction_check(&sims, n_kv, &p);
+            prop_assert!(
+                d.corrected_heads.len() >= prev,
+                "tau {} corrected {} < prev {}",
+                tau,
+                d.corrected_heads.len(),
+                prev
+            );
+            prev = d.corrected_heads.len();
+        }
+        // max (min-sim) pooling triggers at least as often as mean
+        let tau = 0.5f32;
+        let mean = correction_check(&sims, n_kv, &FreeKvParams { tau, ..Default::default() });
+        let maxp = correction_check(
+            &sims,
+            n_kv,
+            &FreeKvParams { tau, correction_pool_max: true, ..Default::default() },
+        );
+        prop_assert!(
+            maxp.corrected_heads.len() >= mean.corrected_heads.len(),
+            "max pooling must be conservative"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn rust_select_scores_rank_pages_with_aligned_summaries_first() {
+    check("select-ranking", 30, |rng| {
+        let (n_kv, g, d, p) = (2, 2, 8, 6);
+        let q: Vec<f32> = (0..n_kv * g * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // summaries: page 0 = exact q direction per head-group mean
+        let mut smin = vec![0.0f32; n_kv * p * d];
+        let mut smax = vec![0.0f32; n_kv * p * d];
+        for m in 0..n_kv {
+            for pg in 0..p {
+                for dim in 0..d {
+                    let base = (m * p + pg) * d + dim;
+                    let aligned = (0..g).map(|j| q[(m * g + j) * d + dim]).sum::<f32>() / g as f32;
+                    let val = if pg == 0 { aligned * 3.0 } else { rng.normal_f32(0.0, 0.2) };
+                    smin[base] = val - 0.05;
+                    smax[base] = val + 0.05;
+                }
+            }
+        }
+        let mask = vec![1.0f32; p];
+        // MaxQ is excluded: elementwise-max query pooling distorts the
+        // direction (exactly the lossiness that makes it worst in the
+        // paper's Table 5 ablation).
+        for variant in [
+            SelectVariant::MeanS,
+            SelectVariant::MaxS,
+            SelectVariant::MeanQK,
+            SelectVariant::MaxQK,
+            SelectVariant::MeanQ,
+        ] {
+            let scores = select_scores(&q, &smin, &smax, &mask, n_kv, n_kv * g, d, variant);
+            for row in &scores {
+                let top = linalg::top_k(row, 1)[0];
+                prop_assert!(top == 0, "{:?} picked page {} over aligned page 0", variant, top);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn timeline_makespan_bounds() {
+    check("timeline-bounds", 40, |rng| {
+        let mut tl = Timeline::new();
+        let streams = [Stream::Compute, Stream::H2D, Stream::D2H, Stream::Convert];
+        let n = 5 + rng.below(40);
+        let mut total_per_stream = std::collections::HashMap::new();
+        let mut total = 0.0f64;
+        let mut prev: Option<usize> = None;
+        for i in 0..n {
+            let s = streams[rng.below(4)];
+            let dur = rng.f64() * 0.01;
+            let deps: Vec<usize> = match (prev, rng.below(3)) {
+                (Some(p), 0) => vec![p],
+                _ => vec![],
+            };
+            let e = tl.schedule(s, &deps, dur, format!("op{}", i));
+            prev = Some(e);
+            *total_per_stream.entry(s).or_insert(0.0f64) += dur;
+            total += dur;
+        }
+        let span = tl.makespan();
+        let max_stream = total_per_stream.values().cloned().fold(0.0, f64::max);
+        prop_assert!(span <= total + 1e-9, "span {} > serial {}", span, total);
+        prop_assert!(span >= max_stream - 1e-9, "span {} < busiest stream {}", span, max_stream);
+        // exposed never exceeds busy
+        for pre in ["op", "recall"] {
+            prop_assert!(
+                tl.exposed(pre) <= tl.busy_labeled(pre) + 1e-9,
+                "exposed > busy for {}",
+                pre
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn latency_sim_sane_for_all_methods() {
+    check("latency-sane", 12, |rng| {
+        let cm = CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b());
+        let knobs = SimKnobs::default();
+        let method = Method::all()[rng.below(9)];
+        let input = 1024 * (1 + rng.below(8));
+        let out = 4 + rng.below(16);
+        let r = simulate_request(method, &cm, 1 + rng.below(4), input, out, &knobs);
+        prop_assert!(r.decode_secs > 0.0 && r.decode_secs.is_finite(), "bad decode");
+        prop_assert!(r.prefill_secs > 0.0, "bad prefill");
+        prop_assert!(r.recall_exposed <= r.recall_busy + 1e-9, "exposed > busy");
+        prop_assert!(r.per_token() < 10.0, "absurd per-token {}", r.per_token());
+        Ok(())
+    });
+}
+
+#[test]
+fn accuracy_sim_scores_in_range_and_full_is_best() {
+    check("accuracy-range", 8, |rng| {
+        let kind = TaskKind::all()[rng.below(4)];
+        let tr = generate(
+            &TaskSpec::default_for(kind),
+            8,
+            2,
+            &OracleParams::default(),
+            rng.next_u64(),
+        );
+        let full = run_episode(
+            Method::Full,
+            SelectVariant::MeanS,
+            &tr,
+            &AccBudget::default(),
+            &AccKnobs::default(),
+            1,
+        );
+        prop_assert!(full.task_score > 0.99, "full not perfect: {}", full.task_score);
+        for method in [Method::Streaming, Method::RaaS, Method::FreeKv, Method::Quest] {
+            let r = run_episode(
+                method,
+                SelectVariant::MeanS,
+                &tr,
+                &AccBudget::default(),
+                &AccKnobs::default(),
+                2,
+            );
+            prop_assert!(
+                (0.0..=1.0 + 1e-9).contains(&r.task_score),
+                "{:?} score {}",
+                method,
+                r.task_score
+            );
+            prop_assert!(r.task_score <= full.task_score + 1e-6, "beats full");
+            prop_assert!((0.0..=1.0).contains(&r.mass_recall), "mass {}", r.mass_recall);
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,119 @@
+//! Integration smoke tests: load real artifacts, compile on the PJRT CPU
+//! client, execute, and check numerics against the python-side contract.
+
+use freekv::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Runtime {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    Runtime::load(dir).expect("run `make artifacts` first")
+}
+
+#[test]
+fn embed_then_logits_runs() {
+    let rt = runtime();
+    let out = rt
+        .run("tiny_embed_b1", &[HostTensor::I32(vec![65], vec![1])], None)
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let h = &out[0];
+    assert_eq!(h.shape(), &[1, 256]);
+    let lg = rt
+        .run("tiny_logits_b1", &[h.clone()], None)
+        .unwrap();
+    assert_eq!(lg[0].shape(), &[1, 260]);
+    let v = lg[0].f32s().unwrap();
+    assert!(v.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn embed_matches_weight_row() {
+    // embed(t) must equal row t of the embedding matrix in the blob.
+    let rt = runtime();
+    let tok = 123usize;
+    let out = rt
+        .run("tiny_embed_b1", &[HostTensor::I32(vec![tok as i32], vec![1])], None)
+        .unwrap();
+    let h = out[0].f32s().unwrap();
+
+    let spec = &rt.manifest.weights["tiny"];
+    let ent = spec.tensors.iter().find(|t| t.name == "embed").unwrap();
+    let blob = std::fs::read(rt.manifest.dir.join(&spec.file)).unwrap();
+    let d = ent.shape[1];
+    let start = (ent.offset + tok * d) * 4;
+    let row: Vec<f32> = blob[start..start + d * 4]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    for (a, b) in h.iter().zip(&row) {
+        assert!((a - b).abs() < 1e-6, "{} vs {}", a, b);
+    }
+}
+
+#[test]
+fn layer_qkv_shapes_and_determinism() {
+    let rt = runtime();
+    let h = HostTensor::F32(vec![0.1; 256], vec![1, 256]);
+    let pos = HostTensor::I32(vec![7], vec![1]);
+    let out1 = rt.run("tiny_layer_qkv_b1", &[h.clone(), pos.clone()], Some(0)).unwrap();
+    assert_eq!(out1.len(), 3);
+    assert_eq!(out1[0].shape(), &[1, 8, 32]); // q
+    assert_eq!(out1[1].shape(), &[1, 2, 32]); // k_new
+    assert_eq!(out1[2].shape(), &[1, 2, 32]); // v_new
+    let out2 = rt.run("tiny_layer_qkv_b1", &[h, pos], Some(0)).unwrap();
+    assert_eq!(out1[0], out2[0]);
+
+    // Different layers bind different weights -> different q.
+    let h = HostTensor::F32(vec![0.1; 256], vec![1, 256]);
+    let pos = HostTensor::I32(vec![7], vec![1]);
+    let out3 = rt.run("tiny_layer_qkv_b1", &[h, pos], Some(1)).unwrap();
+    assert_ne!(out1[0], out3[0]);
+}
+
+#[test]
+fn select_returns_valid_page_indices() {
+    let rt = runtime();
+    let cfg = rt.manifest.config("tiny").unwrap().clone();
+    let p = cfg.n_pages_max();
+    let (qo, m, dh, k) = (cfg.n_qo, cfg.n_kv, cfg.d_head, cfg.select_pages);
+    let q = HostTensor::F32((0..qo * dh).map(|i| (i as f32 * 0.37).sin()).collect(), vec![1, qo, dh]);
+    let smin = HostTensor::F32(vec![-0.5; m * p * dh], vec![1, m, p, dh]);
+    let smax = HostTensor::F32(vec![0.5; m * p * dh], vec![1, m, p, dh]);
+    // Only pages 4..20 selectable.
+    let mut mask = vec![0.0f32; p];
+    for pg in 4..20 {
+        mask[pg] = 1.0;
+    }
+    let out = rt
+        .run(
+            "tiny_select_means_b1",
+            &[q, smin, smax, HostTensor::F32(mask, vec![1, p])],
+            None,
+        )
+        .unwrap();
+    assert_eq!(out[0].shape(), &[1, m, p]); // scores
+    assert_eq!(out[1].shape(), &[1, m, k]); // indices
+    for &idx in out[1].i32s().unwrap() {
+        assert!((4..20).contains(&(idx as usize)), "selected masked page {}", idx);
+    }
+}
+
+#[test]
+fn wrong_shape_is_rejected() {
+    let rt = runtime();
+    let bad = rt.run("tiny_embed_b1", &[HostTensor::I32(vec![1, 2], vec![2])], None);
+    assert!(bad.is_err());
+    let badty = rt.run("tiny_embed_b1", &[HostTensor::F32(vec![1.0], vec![1])], None);
+    assert!(badty.is_err());
+}
+
+#[test]
+fn stats_accumulate() {
+    let rt = runtime();
+    let _ = rt
+        .run("tiny_embed_b1", &[HostTensor::I32(vec![1], vec![1])], None)
+        .unwrap();
+    let st = rt.stats.borrow();
+    assert!(st.executions >= 1);
+    assert!(st.compiled >= 1);
+    assert!(st.h2d_bytes > 0);
+}
