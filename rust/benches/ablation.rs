@@ -20,16 +20,18 @@ fn main() {
         for b in [1usize, 4] {
             println!("--- {} (b={}) ---", scenario, b);
             let mut baseline = 0.0;
-            for (label, hl, db, sr) in [
-                ("none", false, false, false),
-                ("+HL", true, false, false),
-                ("+HL+DB", true, true, false),
-                ("+HL+DB+SR", true, true, true),
+            for (label, hl, db, sr, ov) in [
+                ("none", false, false, false, true),
+                ("+HL", true, false, false, true),
+                ("+HL+DB", true, true, false, true),
+                ("+HL+DB+SR serial", true, true, true, false),
+                ("+HL+DB+SR", true, true, true, true),
             ] {
                 let knobs = SimKnobs {
                     hybrid_layout: hl,
                     double_buffer: db,
                     speculative: sr,
+                    overlap: ov,
                     ..base.clone()
                 };
                 let r = simulate_request(Method::FreeKv, &cm, b, input, output.min(1024), &knobs);
@@ -48,11 +50,14 @@ fn main() {
         println!("artifacts/ missing — run `make artifacts` (skipping real bench)");
         return;
     }
-    for (label, blocking, tau) in
-        [("speculative tau=0.9", false, 0.9f32), ("blocking (no spec)", true, 1.0)]
-    {
+    for (label, blocking, tau, overlap) in [
+        ("speculative overlapped", false, 0.9f32, true),
+        ("speculative serial", false, 0.9, false),
+        ("blocking (no spec)", true, 1.0, true),
+    ] {
         let rt = Runtime::load("artifacts").unwrap();
-        let mut eng = Engine::new(rt, "tiny", FreeKvParams { tau, ..Default::default() }).unwrap();
+        let mut eng =
+            Engine::new(rt, "tiny", FreeKvParams { tau, overlap, ..Default::default() }).unwrap();
         eng.blocking_mode = blocking;
         let prompt: Vec<i32> = (0..600).map(|i| (i * 13 % 250) as i32).collect();
         let mut seq = eng.new_sequence(

@@ -1,6 +1,9 @@
 //! Bench: end-to-end latency per method (Fig. 7 + Fig. 8 grids on the
 //! paper geometries via the event simulator) plus the *real* tiny-model
-//! decode throughput of the rust engine. `cargo bench --bench e2e`.
+//! decode throughput of the rust engine, including the serial-dispatch
+//! vs overlapped speculative-recall ablation. Results are also written
+//! to `BENCH_decode.json` for machine consumption.
+//! `cargo bench --bench e2e`.
 
 use std::time::Instant;
 
@@ -9,8 +12,48 @@ use freekv::coordinator::engine::{Engine, SampleParams};
 use freekv::policies::latency::{simulate_request, Method, SimKnobs};
 use freekv::runtime::Runtime;
 use freekv::sim::{CostModel, DeviceProfile};
+use freekv::util::json::{Json, JsonObj};
+
+/// One real-engine decode run; returns (ms/step, stats snapshot, tokens).
+fn real_decode(
+    overlap: bool,
+    batch: usize,
+    steps: usize,
+) -> Option<(f64, freekv::coordinator::engine::EngineStats, Vec<Vec<i32>>)> {
+    let rt = Runtime::load("artifacts").ok()?;
+    let params = FreeKvParams { tau: 0.9, overlap, ..Default::default() };
+    let mut eng = Engine::new(rt, "tiny", params).ok()?;
+    let prompt: Vec<i32> = (0..480).map(|i| (i * 17 % 250) as i32).collect();
+    let mut seqs: Vec<_> = (0..batch)
+        .map(|i| {
+            eng.new_sequence(
+                i as u64,
+                prompt.clone(),
+                steps + 1,
+                SampleParams { temperature: 0.8, top_p: 0.95, seed: i as u64 },
+            )
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        let _ = eng.prefill(s).unwrap();
+        s.tokens.push(1);
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let mut batch_refs: Vec<&mut _> = seqs.iter_mut().collect();
+        eng.decode_step(&mut batch_refs).unwrap();
+    }
+    let ms_per_step = t0.elapsed().as_secs_f64() / steps as f64 * 1e3;
+    for s in seqs.iter_mut() {
+        eng.drain_sequence(s);
+    }
+    let tokens = seqs.iter().map(|s| s.generated().to_vec()).collect();
+    Some((ms_per_step, eng.stats.clone(), tokens))
+}
 
 fn main() {
+    let mut report = JsonObj::new();
+
     println!("=== bench e2e: Fig. 7 grid (A100 profile, modeled) ===");
     for model in [ModelConfig::qwen25_7b(), ModelConfig::llama31_8b()] {
         let cm = CostModel::new(DeviceProfile::a100_pcie4(), model.clone());
@@ -51,40 +94,116 @@ fn main() {
     }
 
     println!();
-    println!("=== bench e2e: real tiny-model engine throughput ===");
-    let Ok(rt) = Runtime::load("artifacts") else {
-        println!("artifacts/ missing — run `make artifacts` (skipping real bench)");
-        return;
-    };
-    let mut eng = Engine::new(rt, "tiny", FreeKvParams { tau: 0.9, ..Default::default() }).unwrap();
-    let prompt: Vec<i32> = (0..480).map(|i| (i * 17 % 250) as i32).collect();
-    for &batch in &[1usize, 4] {
-        let mut seqs: Vec<_> = (0..batch)
-            .map(|i| {
-                eng.new_sequence(
-                    i as u64,
-                    prompt.clone(),
-                    64,
-                    SampleParams { temperature: 0.8, top_p: 0.95, seed: i as u64 },
-                )
-            })
-            .collect();
-        for s in seqs.iter_mut() {
-            let _ = eng.prefill(s).unwrap();
-            s.tokens.push(1);
-        }
-        let steps = 48;
-        let t0 = Instant::now();
-        for _ in 0..steps {
-            let mut batch_refs: Vec<&mut _> = seqs.iter_mut().collect();
-            eng.decode_step(&mut batch_refs).unwrap();
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "real decode: batch={} {:>6.1} ms/step  {:>6.1} tok/s",
-            batch,
-            dt / steps as f64 * 1e3,
-            (steps * batch) as f64 / dt
+    println!("=== bench e2e: modeled serial-dispatch vs overlapped recall (Llama-3.1-8B) ===");
+    {
+        let cm = CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b());
+        let on = simulate_request(Method::FreeKv, &cm, 4, 32768, 256, &SimKnobs::default());
+        let off = simulate_request(
+            Method::FreeKv,
+            &cm,
+            4,
+            32768,
+            256,
+            &SimKnobs { overlap: false, ..Default::default() },
         );
+        let speedup = off.per_token() / on.per_token();
+        println!(
+            "serial  {:>7.2} ms/tok (recall exposed {:.0}% of busy)",
+            off.per_token() * 1e3,
+            off.recall_exposed / off.recall_busy.max(1e-12) * 100.0
+        );
+        println!(
+            "overlap {:>7.2} ms/tok (recall exposed {:.0}% of busy)  -> {:.2}x",
+            on.per_token() * 1e3,
+            on.recall_exposed / on.recall_busy.max(1e-12) * 100.0,
+            speedup
+        );
+        let mut modeled = JsonObj::new();
+        modeled.insert("config", "llama-3.1-8b b=4 32k->256");
+        modeled.insert("serial_ms_per_tok", off.per_token() * 1e3);
+        modeled.insert("overlap_ms_per_tok", on.per_token() * 1e3);
+        modeled.insert("speedup", speedup);
+        modeled.insert("serial_recall_exposed_frac", off.recall_exposed / off.recall_busy.max(1e-12));
+        modeled.insert("overlap_recall_exposed_frac", on.recall_exposed / on.recall_busy.max(1e-12));
+        report.insert("modeled", modeled);
+    }
+
+    println!();
+    println!("=== bench e2e: real tiny-model engine throughput ===");
+    if Runtime::load("artifacts").is_err() {
+        println!("artifacts/ missing — run `make artifacts` (skipping real bench)");
+        report.insert("real", Json::Null);
+        write_report(&report);
+        return;
+    }
+    // baseline throughput sweep (speculative overlapped mode)
+    for &batch in &[1usize, 4] {
+        if let Some((ms_per_step, _, _)) = real_decode(true, batch, 48) {
+            println!(
+                "real decode: batch={} {:>6.1} ms/step  {:>6.1} tok/s",
+                batch,
+                ms_per_step,
+                batch as f64 * 1e3 / ms_per_step
+            );
+        }
+    }
+
+    println!();
+    println!("=== bench e2e: REAL serial-dispatch vs overlapped recall (tiny, b=4) ===");
+    let (batch, steps) = (4usize, 48usize);
+    let serial = real_decode(false, batch, steps);
+    let overlapped = real_decode(true, batch, steps);
+    match (serial, overlapped) {
+        (Some((ser_ms, ser_st, ser_toks)), Some((ovl_ms, ovl_st, ovl_toks))) => {
+            let speedup = ser_ms / ovl_ms;
+            println!(
+                "serial  {:>7.2} ms/step | recall exposed {:>7.2} ms hidden {:>7.2} ms | gather {:>7.2} ms",
+                ser_ms,
+                ser_st.recall_exposed_secs * 1e3,
+                ser_st.recall_hidden_secs * 1e3,
+                ser_st.gather_secs * 1e3,
+            );
+            println!(
+                "overlap {:>7.2} ms/step | recall exposed {:>7.2} ms hidden {:>7.2} ms | gather {:>7.2} ms | queue depth {} | {:.2}x",
+                ovl_ms,
+                ovl_st.recall_exposed_secs * 1e3,
+                ovl_st.recall_hidden_secs * 1e3,
+                ovl_st.gather_secs * 1e3,
+                ovl_st.max_queue_depth,
+                speedup,
+            );
+            let identical = ser_toks == ovl_toks;
+            println!("outputs bit-identical across modes: {}", identical);
+            let mut real = JsonObj::new();
+            real.insert("model", "tiny");
+            real.insert("batch", batch);
+            real.insert("steps", steps);
+            real.insert("serial_ms_per_step", ser_ms);
+            real.insert("overlap_ms_per_step", ovl_ms);
+            real.insert("speedup", speedup);
+            real.insert("serial_recall_exposed_secs", ser_st.recall_exposed_secs);
+            real.insert("overlap_recall_exposed_secs", ovl_st.recall_exposed_secs);
+            real.insert("overlap_recall_hidden_secs", ovl_st.recall_hidden_secs);
+            real.insert("overlap_recall_hidden_fraction", ovl_st.recall_hidden_fraction());
+            real.insert("serial_gather_secs", ser_st.gather_secs);
+            real.insert("overlap_gather_secs", ovl_st.gather_secs);
+            real.insert("recall_jobs", ovl_st.recall_jobs as usize);
+            real.insert("max_queue_depth", ovl_st.max_queue_depth as usize);
+            real.insert("outputs_identical", identical);
+            report.insert("real", real);
+        }
+        _ => {
+            report.insert("real", Json::Null);
+        }
+    }
+    write_report(&report);
+}
+
+fn write_report(report: &JsonObj) {
+    let path = "BENCH_decode.json";
+    let body = Json::Obj(report.clone()).to_string_pretty();
+    match std::fs::write(path, &body) {
+        Ok(()) => println!("\nwrote {}", path),
+        Err(e) => eprintln!("failed writing {}: {}", path, e),
     }
 }

@@ -1,14 +1,16 @@
 //! Bench: recall path microbenchmarks — the Fig. 1 (right) breakdown on
-//! paper geometry, plus *real* chunked-copy throughput of the transfer
-//! engine under HND vs NHD CPU layouts (the physical effect the hybrid
-//! layout exploits). `cargo bench --bench recall`.
+//! paper geometry, *real* chunked-copy throughput of the transfer engine
+//! under HND vs NHD CPU layouts (the physical effect the hybrid layout
+//! exploits), and the *real* overlap win of the background recall
+//! pipeline vs inline dispatch. `cargo bench --bench recall`.
 
 use std::time::Instant;
 
-use freekv::kvcache::{GpuLayerCache, LayerPool, Layout};
+use freekv::kvcache::{apply_selection_parts, LayerPool, LayerXfer, Layout, SelectSlots};
+use freekv::linalg;
 use freekv::policies::latency::{simulate_request, Method, SimKnobs};
 use freekv::sim::{CostModel, DeviceProfile};
-use freekv::transfer::TransferEngine;
+use freekv::transfer::{RecallJob, RecallPipeline, TransferEngine};
 use freekv::util::rng::Rng;
 
 fn main() {
@@ -44,12 +46,7 @@ fn main() {
         for pg in 0..pages {
             pool.write_page(pg, &kdata, &kdata);
         }
-        let mut gpu = GpuLayerCache::new(n_kv, d, p, 2, 2, 48, pages);
-        // fill the gpu cache so selection slots exist
-        for _ in 0..p * 4 {
-            let t: Vec<f32> = (0..n_kv * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-            gpu.append(&t.clone(), &t);
-        }
+        let mut sel = SelectSlots::new(n_kv, d, p, 48);
         let mut eng = TransferEngine::new(p, d, true);
         let iters = 2000usize;
         let t0 = Instant::now();
@@ -57,7 +54,7 @@ fn main() {
             let page = 4 + (i % (pages - 8));
             let head = i % n_kv;
             let slot = i % 48;
-            eng.recall_page(&pool, page, head, &mut gpu, slot);
+            eng.recall_page(&pool, page, head, &mut sel, slot);
         }
         let dt = t0.elapsed().as_secs_f64();
         let c = &eng.counters;
@@ -71,6 +68,81 @@ fn main() {
             c.h2d_bytes / c.h2d_chunks.max(1),
             c.real_h2d_secs * 1e3,
             c.real_convert_secs * 1e3,
+        );
+    }
+
+    println!();
+    println!("=== bench recall: REAL inline vs pipelined recall (worker-thread overlap) ===");
+    // Recall a churning selection while the "engine" does compute work of
+    // comparable cost: inline pays recall + compute serially; the
+    // pipeline hides the recall behind the compute.
+    {
+        let (pages, n_kv, p, d, sel_k) = (256usize, 8usize, 32usize, 128usize, 32usize);
+        let mut rng = Rng::new(2);
+        let mut pool = LayerPool::new(Layout::Hnd, pages, n_kv, p, d);
+        let page_elems = p * n_kv * d;
+        for pg in 0..pages {
+            let k: Vec<f32> = (0..page_elems).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            pool.write_page(pg, &k, &k);
+        }
+        // two disjoint page sets so every iteration misses the page cache
+        let set_a: Vec<Vec<usize>> = (0..n_kv).map(|_| (4..4 + sel_k).collect()).collect();
+        let set_b: Vec<Vec<usize>> =
+            (0..n_kv).map(|_| (4 + sel_k..4 + 2 * sel_k).collect()).collect();
+        let work: Vec<f32> = (0..1 << 16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let compute = |rounds: usize| {
+            let mut acc = 0.0f32;
+            for _ in 0..rounds {
+                acc += linalg::dot(&work, &work);
+            }
+            acc
+        };
+        let iters = 60usize;
+        let rounds = 24usize;
+
+        // inline dispatch
+        let mut sel = SelectSlots::new(n_kv, d, p, sel_k);
+        let mut eng = TransferEngine::new(p, d, true);
+        let mut sink = 0.0f32;
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let pick = if i % 2 == 0 { &set_a } else { &set_b };
+            for (head, pg) in pick.iter().enumerate() {
+                apply_selection_parts(&mut sel, &pool, head, pg, &mut eng);
+            }
+            sink += compute(rounds);
+        }
+        let inline_secs = t0.elapsed().as_secs_f64();
+
+        // pipelined dispatch: same work, recall on the worker
+        let mut pipe = RecallPipeline::new(p, d);
+        let mut xfer = Some(LayerXfer { select: SelectSlots::new(n_kv, d, p, sel_k), pool });
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let pick = if i % 2 == 0 { &set_a } else { &set_b };
+            pipe.submit(RecallJob {
+                seq_uid: 1,
+                layer: 0,
+                selections: pick.clone(),
+                xfer: xfer.take().unwrap(),
+            });
+            sink += compute(rounds);
+            let done = pipe.wait(1, 0);
+            xfer = Some(done.xfer);
+        }
+        let piped_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "inline   {:>8.2} ms  ({} iterations of {}-page x {}-head recall + compute)",
+            inline_secs * 1e3,
+            iters,
+            sel_k,
+            n_kv,
+        );
+        println!(
+            "pipeline {:>8.2} ms  -> {:.2}x  [checksum {:.1}]",
+            piped_secs * 1e3,
+            inline_secs / piped_secs,
+            sink
         );
     }
 

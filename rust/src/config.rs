@@ -169,6 +169,11 @@ pub struct FreeKvParams {
     pub variant: SelectVariant,
     /// Disable speculation entirely (tau = 1 equivalent fast path).
     pub no_speculation: bool,
+    /// Dispatch speculative recall to the background worker so it
+    /// overlaps the remaining layers' compute (§4.2). `false` keeps the
+    /// serial in-thread dispatch as the ablation baseline; results are
+    /// bit-identical either way.
+    pub overlap: bool,
 }
 
 impl Default for FreeKvParams {
@@ -178,6 +183,7 @@ impl Default for FreeKvParams {
             correction_pool_max: false,
             variant: SelectVariant::MeanS,
             no_speculation: false,
+            overlap: true,
         }
     }
 }

@@ -3,7 +3,16 @@
 //! attention, append/offload, and speculative selection+recall for the
 //! next step. Python is never touched; everything runs over the PJRT CPU
 //! client against `artifacts/`.
+//!
+//! Speculative recall is dispatched to the background worker of
+//! `transfer::pipeline` (when `FreeKvParams::overlap` is set): layer
+//! *l*'s next-step recall runs while this thread computes layers
+//! *l+1..L* and the step's logits, and is drained at the next step's
+//! correction check. Gather is incremental: each sequence keeps
+//! per-layer persistent batch-lane tensors that only dirty slots are
+//! rewritten into.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -12,8 +21,12 @@ use crate::config::{FreeKvParams, ModelConfig};
 use crate::kvcache::{Layout, RequestKv};
 use crate::policies::freekv::{correction_check, SpecState};
 use crate::runtime::{HostTensor, Runtime};
-use crate::transfer::TransferEngine;
+use crate::transfer::{RecallJob, RecallPipeline, TransferEngine};
 use crate::util::rng::Rng;
+
+/// Distinguishes Sequence objects even when callers reuse request ids
+/// (the recall pipeline keys in-flight work by this uid).
+static SEQ_UID: AtomicU64 = AtomicU64::new(1);
 
 /// Wall-time breakdown of the real pipeline (per engine, cumulative).
 #[derive(Debug, Default, Clone)]
@@ -26,6 +39,17 @@ pub struct EngineStats {
     pub gather_secs: f64,
     pub recall_secs: f64,
     pub logits_secs: f64,
+    /// Recall wall time spent on the background worker (off the decode
+    /// critical path).
+    pub recall_hidden_secs: f64,
+    /// Recall latency the decode thread actually waited for: blocking
+    /// correction recalls, serial-mode speculative recall, and drain
+    /// waits on the worker.
+    pub recall_exposed_secs: f64,
+    /// Speculative-recall jobs handed to the background worker.
+    pub recall_jobs: u64,
+    /// Peak number of jobs simultaneously in flight on the worker.
+    pub max_queue_depth: u64,
     pub steps: u64,
     pub prefills: u64,
     pub corrections: u64,
@@ -40,6 +64,17 @@ impl EngineStats {
             0.0
         } else {
             self.corrections as f64 / self.correction_checks as f64
+        }
+    }
+
+    /// Fraction of recall wall time hidden behind compute (0 when every
+    /// transfer blocked the decode thread).
+    pub fn recall_hidden_fraction(&self) -> f64 {
+        let total = self.recall_hidden_secs + self.recall_exposed_secs;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.recall_hidden_secs / total
         }
     }
 }
@@ -58,9 +93,17 @@ impl SampleParams {
     }
 }
 
+/// Per-layer persistent gather destination (one batch lane).
+struct GatherBuf {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    valid: Vec<f32>,
+}
+
 /// One in-flight sequence (request) with its KV state.
 pub struct Sequence {
     pub id: u64,
+    uid: u64,
     pub tokens: Vec<i32>,
     pub prompt_len: usize,
     pub max_new_tokens: usize,
@@ -71,10 +114,8 @@ pub struct Sequence {
     pub finished: bool,
     pub eos: Option<i32>,
     spec: Vec<SpecState>,
-    /// scratch gather buffers (reused every layer/step).
-    gk: Vec<f32>,
-    gv: Vec<f32>,
-    gvalid: Vec<f32>,
+    /// per-layer persistent gather lanes (incrementally maintained).
+    gather: Vec<GatherBuf>,
 }
 
 impl Sequence {
@@ -82,6 +123,7 @@ impl Sequence {
         let s = cfg.budget_slots();
         Sequence {
             id,
+            uid: SEQ_UID.fetch_add(1, Ordering::Relaxed),
             prompt_len: prompt.len(),
             tokens: prompt,
             max_new_tokens: max_new,
@@ -92,9 +134,13 @@ impl Sequence {
             finished: false,
             eos: None,
             spec: (0..cfg.n_layers).map(|_| SpecState::new(cfg.n_qo, cfg.n_kv, cfg.d_head)).collect(),
-            gk: vec![0.0; cfg.n_kv * s * cfg.d_head],
-            gv: vec![0.0; cfg.n_kv * s * cfg.d_head],
-            gvalid: vec![0.0; cfg.n_kv * s],
+            gather: (0..cfg.n_layers)
+                .map(|_| GatherBuf {
+                    k: vec![0.0; cfg.n_kv * s * cfg.d_head],
+                    v: vec![0.0; cfg.n_kv * s * cfg.d_head],
+                    valid: vec![0.0; cfg.n_kv * s],
+                })
+                .collect(),
         }
     }
 
@@ -109,6 +155,15 @@ impl Sequence {
     pub fn done(&self) -> bool {
         self.finished || self.generated().len() >= self.max_new_tokens
     }
+}
+
+/// Reused artifact-input scratch for batched selection (the smin/smax
+/// planes are the largest per-step host allocations; rebuilding them
+/// every layer/step is pure waste).
+struct SelScratch {
+    bucket: usize,
+    /// [q, smin, smax, mask] in the select artifact's argument order.
+    args: Vec<HostTensor>,
 }
 
 /// The engine: owns the runtime handle + model config and executes the
@@ -126,6 +181,11 @@ pub struct Engine {
     /// (layer, sims[n_qo]) tuples each decode step (Fig. 3 / Table 8).
     pub record_sims: bool,
     pub sim_trace: Vec<(usize, Vec<f32>)>,
+    /// background recall worker (lazily spawned when overlap is active).
+    pipeline: Option<RecallPipeline>,
+    sel_scratch: Option<SelScratch>,
+    /// reclaimed batch gather tensors (gk, gv, gvalid).
+    attn_scratch: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
 }
 
 impl Engine {
@@ -140,6 +200,9 @@ impl Engine {
             blocking_mode: false,
             record_sims: false,
             sim_trace: Vec::new(),
+            pipeline: None,
+            sel_scratch: None,
+            attn_scratch: None,
         })
     }
 
@@ -150,6 +213,10 @@ impl Engine {
     /// Create a fresh sequence for a prompt.
     pub fn new_sequence(&self, id: u64, prompt: Vec<i32>, max_new: usize, sample: SampleParams) -> Sequence {
         Sequence::new(id, &self.cfg, prompt, max_new, Layout::Hnd, sample)
+    }
+
+    fn overlap_active(&self) -> bool {
+        self.params.overlap && !self.blocking_mode
     }
 
     // ------------------------------------------------------------------
@@ -197,8 +264,9 @@ impl Engine {
             // populate GPU cache + offload completed pages
             let st = &mut seq.kv.layers[l];
             let completed = st.gpu.load_prefill(&k, &v, len, bucket);
+            let x = st.xfer_mut();
             for cp in &completed {
-                seq.xfer.offload_page(cp, &mut st.pool);
+                seq.xfer.offload_page(cp, &mut x.pool);
             }
             q_last_per_layer.push(q_last);
         }
@@ -248,6 +316,10 @@ impl Engine {
             .decode_bucket(n)
             .ok_or_else(|| anyhow!("batch {} exceeds decode buckets", n))?;
         let (m, dh, qo, s) = (cfg.n_kv, cfg.d_head, cfg.n_qo, cfg.budget_slots());
+        let overlap = self.overlap_active();
+        if overlap && self.pipeline.is_none() {
+            self.pipeline = Some(RecallPipeline::new(cfg.page_size, cfg.d_head));
+        }
 
         // ---- embed ----
         let mut toks: Vec<i32> = seqs.iter().map(|q| *q.tokens.last().unwrap()).collect();
@@ -280,10 +352,19 @@ impl Engine {
 
             // ---- selection with the current step's queries (batched):
             // used NOW for corrected heads, and for the NEXT step's
-            // speculative reuse. ----
+            // speculative reuse. Needs only the compute half, so it runs
+            // before the drain to hide a little more of the worker's
+            // recall. ----
             let t0 = Instant::now();
             let sel_pages = self.run_selection_batch(seqs, l, &q_all, bucket)?;
             self.stats.select_secs += t0.elapsed().as_secs_f64();
+
+            // ---- drain: re-attach this layer's transfer half (the
+            // previous step's speculative recall) before anything below
+            // touches the select table or pool ----
+            for seq in seqs.iter_mut() {
+                self.drain_layer(seq, l);
+            }
 
             // ---- correction check + blocking recall for flagged heads --
             for (i, seq) in seqs.iter_mut().enumerate() {
@@ -315,7 +396,9 @@ impl Engine {
                                 &sel_pages[i][head],
                                 &mut seq.xfer,
                             );
-                            self.stats.recall_secs += t1.elapsed().as_secs_f64();
+                            let dt = t1.elapsed().as_secs_f64();
+                            self.stats.recall_secs += dt;
+                            self.stats.recall_exposed_secs += dt;
                             self.stats.recalled_pages += nrec as u64;
                         }
                         let hit = m - d.corrected_heads.len();
@@ -332,34 +415,55 @@ impl Engine {
                                 &sel_pages[i][head],
                                 &mut seq.xfer,
                             );
-                            self.stats.recall_secs += t1.elapsed().as_secs_f64();
+                            let dt = t1.elapsed().as_secs_f64();
+                            self.stats.recall_secs += dt;
+                            self.stats.recall_exposed_secs += dt;
                             self.stats.recalled_pages += nrec as u64;
                         }
                     }
                 }
             }
 
-            // ---- gather + attention ----
+            // ---- incremental gather into persistent per-seq lanes ----
             let t0 = Instant::now();
-            let (gk, gv, gvalid) = self.gather_batch(seqs, l, bucket);
+            let (mut gk, mut gv, mut gvalid) = self.take_attn_scratch(bucket, m, s, dh);
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                let (gpu, x) = seq.kv.layers[l].parts_mut();
+                let buf = &mut seq.gather[l];
+                gpu.gather_dirty(&mut x.select, &mut buf.k, &mut buf.v, &mut buf.valid);
+                gk[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&buf.k);
+                gv[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&buf.v);
+                gvalid[i * m * s..(i + 1) * m * s].copy_from_slice(&buf.valid);
+            }
+            for lane in n..bucket {
+                gvalid[lane * m * s..(lane + 1) * m * s].iter_mut().for_each(|v| *v = 0.0);
+            }
             self.stats.gather_secs += t0.elapsed().as_secs_f64();
 
+            // ---- attention ----
             let t0 = Instant::now();
-            let out = self.rt.run(
-                &self.art(&format!("layer_attn_b{}", bucket)),
-                &[
-                    h,
-                    q_t.clone(),
-                    k_new_t.clone(),
-                    v_new_t.clone(),
-                    HostTensor::F32(gk, vec![bucket, m, s, dh]),
-                    HostTensor::F32(gv, vec![bucket, m, s, dh]),
-                    HostTensor::F32(gvalid, vec![bucket, m, s]),
-                ],
-                Some(l),
-            )?;
+            let args = [
+                h,
+                q_t,
+                k_new_t,
+                v_new_t,
+                HostTensor::F32(gk, vec![bucket, m, s, dh]),
+                HostTensor::F32(gv, vec![bucket, m, s, dh]),
+                HostTensor::F32(gvalid, vec![bucket, m, s]),
+            ];
+            let out = self.rt.run(&self.art(&format!("layer_attn_b{}", bucket)), &args, Some(l))?;
             self.stats.attn_secs += t0.elapsed().as_secs_f64();
             h = out.into_iter().next().unwrap();
+            // reclaim the big gather tensors for the next layer/step
+            let mut it = args.into_iter().skip(4);
+            if let (
+                Some(HostTensor::F32(a, _)),
+                Some(HostTensor::F32(b, _)),
+                Some(HostTensor::F32(c, _)),
+            ) = (it.next(), it.next(), it.next())
+            {
+                self.attn_scratch = Some((a, b, c));
+            }
 
             // ---- append new KV, offload completed pages ----
             for (i, seq) in seqs.iter_mut().enumerate() {
@@ -369,15 +473,39 @@ impl Engine {
             }
 
             // ---- speculative recall for the NEXT step (non-corrected
-            // heads; page-cache diff makes re-selection cheap) ----
+            // heads; page-cache diff makes re-selection cheap). With
+            // overlap on, the transfer half is checked out to the worker
+            // and the recall hides under the remaining layers' compute;
+            // serial mode keeps it inline as the ablation baseline. ----
             if !self.blocking_mode {
-                for (i, seq) in seqs.iter_mut().enumerate() {
-                    for head in 0..m {
-                        let t1 = Instant::now();
-                        let nrec =
-                            seq.kv.apply_selection(l, head, &sel_pages[i][head], &mut seq.xfer);
-                        self.stats.recall_secs += t1.elapsed().as_secs_f64();
-                        self.stats.recalled_pages += nrec as u64;
+                if overlap {
+                    for (i, seq) in seqs.iter_mut().enumerate() {
+                        let xfer = seq.kv.layers[l].take_xfer();
+                        let pipe = self.pipeline.as_mut().expect("pipeline active");
+                        pipe.submit(RecallJob {
+                            seq_uid: seq.uid,
+                            layer: l,
+                            selections: sel_pages[i].clone(),
+                            xfer,
+                        });
+                        self.stats.recall_jobs += 1;
+                        // sweep finished completions first so this counts
+                        // actual worker backlog, not jobs-since-drain
+                        pipe.poll();
+                        let depth = pipe.pending() as u64;
+                        self.stats.max_queue_depth = self.stats.max_queue_depth.max(depth);
+                    }
+                } else {
+                    for (i, seq) in seqs.iter_mut().enumerate() {
+                        for head in 0..m {
+                            let t1 = Instant::now();
+                            let nrec =
+                                seq.kv.apply_selection(l, head, &sel_pages[i][head], &mut seq.xfer);
+                            let dt = t1.elapsed().as_secs_f64();
+                            self.stats.recall_secs += dt;
+                            self.stats.recall_exposed_secs += dt;
+                            self.stats.recalled_pages += nrec as u64;
+                        }
                     }
                 }
             }
@@ -405,35 +533,71 @@ impl Engine {
             }
         }
 
+        // Finished sequences leave the batch after this step: reclaim
+        // their in-flight transfer halves so nothing strands on the
+        // worker.
+        for seq in seqs.iter_mut() {
+            if seq.done() {
+                self.drain_sequence(seq);
+            }
+        }
+
         self.stats.steps += 1;
         self.stats.decode_secs += t_step.elapsed().as_secs_f64();
         Ok(())
     }
 
-    /// Gather every sequence's resident pages into batch tensors.
-    fn gather_batch(
-        &self,
-        seqs: &mut [&mut Sequence],
-        layer: usize,
-        bucket: usize,
-    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let cfg = &self.cfg;
-        let (m, dh, s) = (cfg.n_kv, cfg.d_head, cfg.budget_slots());
-        let mut gk = vec![0.0f32; bucket * m * s * dh];
-        let mut gv = vec![0.0f32; bucket * m * s * dh];
-        let mut gvalid = vec![0.0f32; bucket * m * s];
-        for (i, seq) in seqs.iter_mut().enumerate() {
-            let st = &seq.kv.layers[layer];
-            st.gpu.gather(&mut seq.gk, &mut seq.gv, &mut seq.gvalid);
-            gk[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&seq.gk);
-            gv[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&seq.gv);
-            gvalid[i * m * s..(i + 1) * m * s].copy_from_slice(&seq.gvalid);
+    /// Re-attach one layer's transfer half if its speculative-recall job
+    /// is still in flight; merges the worker's counters/stats.
+    fn drain_layer(&mut self, seq: &mut Sequence, layer: usize) {
+        if !seq.kv.layers[layer].in_flight() {
+            return;
         }
-        (gk, gv, gvalid)
+        let pipe = self
+            .pipeline
+            .as_mut()
+            .expect("transfer half checked out but no pipeline is running");
+        let t0 = Instant::now();
+        let done = pipe.wait(seq.uid, layer);
+        let waited = t0.elapsed().as_secs_f64();
+        // Of the worker's busy time, the part we just blocked for was NOT
+        // hidden; only the remainder ran under compute.
+        self.stats.recall_exposed_secs += waited;
+        self.stats.recall_hidden_secs += (done.busy_secs - waited).max(0.0);
+        self.stats.recall_secs += done.busy_secs;
+        self.stats.recalled_pages += done.recalled_pages as u64;
+        seq.xfer.counters = seq.xfer.counters.merged(&done.counters);
+        seq.kv.layers[layer].put_xfer(done.xfer);
+    }
+
+    /// Block until every in-flight recall job of this sequence has been
+    /// re-attached. Called automatically when a sequence finishes inside
+    /// `decode_step`; callers abandoning a sequence mid-generation must
+    /// call it themselves before dropping the engine.
+    pub fn drain_sequence(&mut self, seq: &mut Sequence) {
+        if self.pipeline.is_none() {
+            return;
+        }
+        for l in 0..self.cfg.n_layers {
+            self.drain_layer(seq, l);
+        }
+    }
+
+    /// Take (or allocate) the batch gather tensors for this bucket.
+    fn take_attn_scratch(&mut self, bucket: usize, m: usize, s: usize, dh: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let want_kv = bucket * m * s * dh;
+        let want_valid = bucket * m * s;
+        match self.attn_scratch.take() {
+            Some((gk, gv, gvalid)) if gk.len() == want_kv && gvalid.len() == want_valid => {
+                (gk, gv, gvalid)
+            }
+            _ => (vec![0.0; want_kv], vec![0.0; want_kv], vec![0.0; want_valid]),
+        }
     }
 
     /// Batched page selection via the select artifact; returns pages per
-    /// (sequence, kv head), filtered to genuinely selectable pages.
+    /// (sequence, kv head), filtered to genuinely selectable pages. The
+    /// artifact inputs live in a scratch reused across layers/steps.
     fn run_selection_batch(
         &mut self,
         seqs: &mut [&mut Sequence],
@@ -441,45 +605,71 @@ impl Engine {
         q_all: &[f32],
         bucket: usize,
     ) -> Result<Vec<Vec<Vec<usize>>>> {
-        let cfg = &self.cfg;
-        let (m, dh, qo, p) = (cfg.n_kv, cfg.d_head, cfg.n_qo, cfg.n_pages_max());
-        let mut q = q_all.to_vec();
-        q.resize(bucket * qo * dh, 0.0);
-        let mut smin = vec![0.0f32; bucket * m * p * dh];
-        let mut smax = vec![0.0f32; bucket * m * p * dh];
-        let mut mask = vec![0.0f32; bucket * p];
-        let mut masks: Vec<Vec<f32>> = Vec::with_capacity(seqs.len());
-        for (i, seq) in seqs.iter().enumerate() {
-            let gpu = &seq.kv.layers[layer].gpu;
-            let (lo, hi) = gpu.summaries_sanitized();
-            smin[i * m * p * dh..(i + 1) * m * p * dh].copy_from_slice(&lo);
-            smax[i * m * p * dh..(i + 1) * m * p * dh].copy_from_slice(&hi);
-            let mk = gpu.selectable_mask();
-            mask[i * p..(i + 1) * p].copy_from_slice(&mk);
-            masks.push(mk);
+        let (m, dh, qo, p) = (self.cfg.n_kv, self.cfg.d_head, self.cfg.n_qo, self.cfg.n_pages_max());
+        let k_sel = self.cfg.select_pages;
+        let rebuild = self.sel_scratch.as_ref().map_or(true, |sc| sc.bucket != bucket);
+        if rebuild {
+            self.sel_scratch = Some(SelScratch {
+                bucket,
+                args: vec![
+                    HostTensor::F32(vec![0.0; bucket * qo * dh], vec![bucket, qo, dh]),
+                    HostTensor::F32(vec![0.0; bucket * m * p * dh], vec![bucket, m, p, dh]),
+                    HostTensor::F32(vec![0.0; bucket * m * p * dh], vec![bucket, m, p, dh]),
+                    HostTensor::F32(vec![0.0; bucket * p], vec![bucket, p]),
+                ],
+            });
         }
-        let variant = self.params.variant.as_str();
-        let out = self.rt.run(
-            &self.art(&format!("select_{}_b{}", variant, bucket)),
-            &[
-                HostTensor::F32(q, vec![bucket, qo, dh]),
-                HostTensor::F32(smin, vec![bucket, m, p, dh]),
-                HostTensor::F32(smax, vec![bucket, m, p, dh]),
-                HostTensor::F32(mask, vec![bucket, p]),
-            ],
-            None,
-        )?;
+        {
+            let scratch = self.sel_scratch.as_mut().unwrap();
+            let mut it = scratch.args.iter_mut();
+            let (qt, smin_t, smax_t, mask_t) =
+                (it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+            let (
+                HostTensor::F32(qd, _),
+                HostTensor::F32(lo, _),
+                HostTensor::F32(hi, _),
+                HostTensor::F32(mk, _),
+            ) = (qt, smin_t, smax_t, mask_t)
+            else {
+                unreachable!("selection scratch is always f32")
+            };
+            qd[..q_all.len()].copy_from_slice(q_all);
+            qd[q_all.len()..].iter_mut().for_each(|x| *x = 0.0);
+            for (i, seq) in seqs.iter().enumerate() {
+                let gpu = &seq.kv.layers[layer].gpu;
+                gpu.summaries_sanitized_into(
+                    &mut lo[i * m * p * dh..(i + 1) * m * p * dh],
+                    &mut hi[i * m * p * dh..(i + 1) * m * p * dh],
+                );
+                gpu.selectable_mask_into(&mut mk[i * p..(i + 1) * p]);
+            }
+            // padded lanes: clean mask so the artifact selects nothing
+            for lane in seqs.len()..bucket {
+                mk[lane * p..(lane + 1) * p].iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+        let name = {
+            let variant = self.params.variant.as_str();
+            self.art(&format!("select_{}_b{}", variant, bucket))
+        };
+        let out = {
+            let scratch = self.sel_scratch.as_ref().unwrap();
+            self.rt.run(&name, &scratch.args, None)?
+        };
         let idx = out[1].i32s()?;
-        let k_sel = cfg.select_pages;
+        let scratch = self.sel_scratch.as_ref().unwrap();
+        let HostTensor::F32(mk, _) = &scratch.args[3] else {
+            unreachable!("selection scratch is always f32")
+        };
         let mut result = Vec::with_capacity(seqs.len());
-        for (i, mk) in masks.iter().enumerate() {
+        for i in 0..seqs.len() {
             let mut per_head = Vec::with_capacity(m);
             for head in 0..m {
                 let base = (i * m + head) * k_sel;
                 let pages: Vec<usize> = idx[base..base + k_sel]
                     .iter()
                     .map(|&x| x as usize)
-                    .filter(|&pg| pg < p && mk[pg] > 0.0)
+                    .filter(|&pg| pg < p && mk[i * p + pg] > 0.0)
                     .collect();
                 per_head.push(pages);
             }
@@ -549,23 +739,128 @@ pub fn sample_token(logits: &[f32], p: &SampleParams, rng: &mut Rng) -> i32 {
     let mut probs: Vec<f32> = logits.iter().map(|&x| x / p.temperature).collect();
     crate::linalg::softmax_inplace(&mut probs);
     if p.top_p < 1.0 {
-        let mut order: Vec<usize> = (0..probs.len()).collect();
-        order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        truncate_top_p(&mut probs, p.top_p);
+    }
+    rng.categorical(&probs) as i32
+}
+
+/// Zero every probability outside the nucleus: the shortest prefix of
+/// the (probability-descending, index-ascending on ties) order whose
+/// mass reaches `top_p`. Uses partial selection with a doubling
+/// candidate set instead of sorting the whole vocabulary — the nucleus
+/// is tiny compared to V, so this is O(V + c log c) per call instead of
+/// O(V log V), and it needs no auxiliary hash set.
+fn truncate_top_p(probs: &mut [f32], top_p: f32) {
+    let v = probs.len();
+    if v == 0 {
+        return;
+    }
+    let cmp = |a: &usize, b: &usize| {
+        probs[*b]
+            .partial_cmp(&probs[*a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    let mut order: Vec<usize> = (0..v).collect();
+    let mut k = 64.min(v);
+    let cut = loop {
+        if k < v {
+            order.select_nth_unstable_by(k - 1, cmp);
+        }
+        order[..k].sort_unstable_by(cmp);
         let mut acc = 0.0f32;
-        let mut cut = probs.len();
-        for (rank, &i) in order.iter().enumerate() {
+        let mut cut = None;
+        for (rank, &i) in order[..k].iter().enumerate() {
             acc += probs[i];
-            if acc >= p.top_p {
-                cut = rank + 1;
+            if acc >= top_p {
+                cut = Some(rank + 1);
                 break;
             }
         }
-        let keep: std::collections::HashSet<usize> = order[..cut].iter().cloned().collect();
-        for (i, pr) in probs.iter_mut().enumerate() {
-            if !keep.contains(&i) {
-                *pr = 0.0;
+        match cut {
+            Some(c) => break c,
+            // numerical shortfall: the whole distribution is the nucleus
+            None if k == v => break v,
+            None => k = (k * 2).min(v),
+        }
+    };
+    for &i in &order[cut..] {
+        probs[i] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The seed's straightforward implementation (full vocab sort + hash
+    /// set), kept as the behavioural reference for the optimized path.
+    fn sample_token_reference(logits: &[f32], p: &SampleParams, rng: &mut Rng) -> i32 {
+        if p.temperature <= 0.0 {
+            return crate::linalg::argmax(logits) as i32;
+        }
+        let mut probs: Vec<f32> = logits.iter().map(|&x| x / p.temperature).collect();
+        crate::linalg::softmax_inplace(&mut probs);
+        if p.top_p < 1.0 {
+            let mut order: Vec<usize> = (0..probs.len()).collect();
+            order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            let mut acc = 0.0f32;
+            let mut cut = probs.len();
+            for (rank, &i) in order.iter().enumerate() {
+                acc += probs[i];
+                if acc >= p.top_p {
+                    cut = rank + 1;
+                    break;
+                }
+            }
+            let keep: std::collections::HashSet<usize> = order[..cut].iter().cloned().collect();
+            for (i, pr) in probs.iter_mut().enumerate() {
+                if !keep.contains(&i) {
+                    *pr = 0.0;
+                }
             }
         }
+        rng.categorical(&probs) as i32
     }
-    rng.categorical(&probs) as i32
+
+    #[test]
+    fn nucleus_sampling_matches_reference_for_fixed_seeds() {
+        let mut gen = Rng::new(0xBEEF);
+        for case in 0..200u64 {
+            let vocab = 1 + gen.below(300);
+            let logits: Vec<f32> = (0..vocab).map(|_| gen.normal_f32(0.0, 3.0)).collect();
+            let p = SampleParams {
+                temperature: 0.25 + gen.f32() * 1.5,
+                top_p: [0.1f32, 0.5, 0.9, 0.95, 0.999, 1.0][gen.below(6)],
+                seed: case,
+            };
+            let mut r1 = Rng::new(case);
+            let mut r2 = Rng::new(case);
+            let a = sample_token(&logits, &p, &mut r1);
+            let b = sample_token_reference(&logits, &p, &mut r2);
+            assert_eq!(a, b, "case {} vocab {} top_p {}", case, vocab, p.top_p);
+            // identical RNG consumption, so downstream draws stay aligned
+            assert_eq!(r1.next_u64(), r2.next_u64(), "rng stream diverged at case {}", case);
+        }
+    }
+
+    #[test]
+    fn nucleus_growth_past_initial_candidate_set() {
+        // near-uniform distribution with top_p close to 1 forces the
+        // doubling loop well past the initial 64 candidates.
+        let logits = vec![0.0f32; 4096];
+        let p = SampleParams { temperature: 1.0, top_p: 0.999, seed: 1 };
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = sample_token(&logits, &p, &mut r1);
+        let b = sample_token_reference(&logits, &p, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn greedy_ignores_rng() {
+        let logits = vec![0.1f32, 2.0, -1.0];
+        let mut rng = Rng::new(4);
+        assert_eq!(sample_token(&logits, &SampleParams::greedy(), &mut rng), 1);
+    }
 }

@@ -85,6 +85,8 @@ pub fn real_breakdown(artifacts: &str, model: &str, prompt_len: usize, steps: us
         ("  selection exec", st.select_secs),
         ("  gather (host)", st.gather_secs),
         ("  recall transfers", st.recall_secs),
+        ("    hidden (worker)", st.recall_hidden_secs),
+        ("    exposed (blocking)", st.recall_exposed_secs),
         ("  logits exec", st.logits_secs),
     ] {
         t.row(vec![name.into(), ftime(secs), ftime(secs / per)]);
@@ -102,6 +104,9 @@ pub fn real_breakdown(artifacts: &str, model: &str, prompt_len: usize, steps: us
         ("correction rate", st.correction_rate()),
         ("speculative hits", st.speculative_hits as f64),
         ("recalled pages", st.recalled_pages as f64),
+        ("recall jobs (worker)", st.recall_jobs as f64),
+        ("max queue depth", st.max_queue_depth as f64),
+        ("recall hidden fraction", st.recall_hidden_fraction()),
         ("offloaded pages", c.offloaded_pages as f64),
         ("h2d chunks", c.h2d_chunks as f64),
         ("h2d bytes", c.h2d_bytes as f64),

@@ -1,15 +1,29 @@
-//! GPU-resident KV state for one (request, layer): the fixed-budget page
-//! cache in NHD layout, the page table for per-kv-head selected pages,
-//! and incrementally-maintained min/max page summaries.
+//! GPU-resident KV state for one (request, layer), split into the two
+//! ownership halves the overlapped recall pipeline hands around:
+//!
+//! * [`GpuLayerCache`] — the **compute half**: sink + local-window slabs,
+//!   the window ring, sequence length, and the incrementally-maintained
+//!   min/max page summaries. This half never leaves the engine thread
+//!   (selection and append need it every layer).
+//! * [`SelectSlots`] — the **transfer half**: the per-kv-head selected
+//!   page slab and its page table. Together with the CPU `LayerPool` it
+//!   forms the `LayerXfer` bundle that can be checked out to the
+//!   background recall worker while the engine computes other layers.
 //!
 //! Slot map (per the paper's budget decomposition B = S + W + selected):
 //!   [0, SP)            sink pages (logical pages 0..SP, fixed)
 //!   [SP, SP+WP)        local-window ring: page g at slot SP + g % WP
 //!   [SP+WP, BP)        selected pages, tracked per kv head
 //!
-//! The NHD cache is `[slot][tok][head][d]`; sink/window slots hold the
+//! Both slabs are NHD `[slot][tok][head][d]`; sink/window slots hold the
 //! same logical page for every head, selected slots hold head-specific
 //! pages in each head's lane (selection is per-kv-head).
+//!
+//! Gather is **incremental**: every slot write (append, ring rotation,
+//! selected-page install/evict) marks a dirty bit, and `gather_dirty`
+//! rewrites only dirty slot regions of the caller's persistent
+//! destination buffers, zero-filling the invalid tail of each region so
+//! the result is bit-identical to a from-scratch `gather_full`.
 
 /// A page whose last token was just written; ready for offload.
 #[derive(Debug, Clone)]
@@ -20,6 +34,7 @@ pub struct CompletedPage {
     pub v_nhd: Vec<f32>,
 }
 
+/// Compute half: sink + window slabs, ring, summaries, dirty bits.
 #[derive(Debug)]
 pub struct GpuLayerCache {
     pub n_kv: usize,
@@ -29,18 +44,18 @@ pub struct GpuLayerCache {
     pub window_pages: usize,
     pub select_pages: usize,
     pub n_pages_max: usize,
-    /// NHD K/V slabs: `[budget_pages][p][n_kv][d]`.
+    /// NHD K/V slabs for the shared slots: `[sink+window][p][n_kv][d]`.
     k: Vec<f32>,
     v: Vec<f32>,
     /// logical page held by each window-ring slot.
     ring_pages: Vec<Option<usize>>,
-    /// selected logical page per (kv head, select slot).
-    select_table: Vec<Vec<Option<usize>>>,
     /// tokens appended so far (absolute sequence length).
     pub len: usize,
     /// min/max page summaries `[head][page][d]` over post-RoPE keys.
     pub smin: Vec<f32>,
     pub smax: Vec<f32>,
+    /// shared (all-head) slots written since the last incremental gather.
+    dirty_shared: Vec<bool>,
 }
 
 impl GpuLayerCache {
@@ -53,7 +68,7 @@ impl GpuLayerCache {
         select_pages: usize,
         n_pages_max: usize,
     ) -> GpuLayerCache {
-        let bp = sink_pages + window_pages + select_pages;
+        let sw = sink_pages + window_pages;
         GpuLayerCache {
             n_kv,
             d,
@@ -62,14 +77,19 @@ impl GpuLayerCache {
             window_pages,
             select_pages,
             n_pages_max,
-            k: vec![0.0; bp * p * n_kv * d],
-            v: vec![0.0; bp * p * n_kv * d],
+            k: vec![0.0; sw * p * n_kv * d],
+            v: vec![0.0; sw * p * n_kv * d],
             ring_pages: vec![None; window_pages],
-            select_table: vec![vec![None; select_pages]; n_kv],
             len: 0,
             smin: vec![f32::INFINITY; n_kv * n_pages_max * d],
             smax: vec![f32::NEG_INFINITY; n_kv * n_pages_max * d],
+            dirty_shared: vec![false; sw],
         }
+    }
+
+    /// A matching (empty) transfer-half select slab.
+    pub fn new_select_slots(&self) -> SelectSlots {
+        SelectSlots::new(self.n_kv, self.d, self.p, self.select_pages)
     }
 
     pub fn budget_pages(&self) -> usize {
@@ -111,6 +131,7 @@ impl GpuLayerCache {
             }
             self.sink_pages + g % self.window_pages
         };
+        self.dirty_shared[slot] = true;
         for head in 0..m {
             let o = self.nhd_off(slot, tok, head);
             self.k[o..o + d].copy_from_slice(&k_new[head * d..(head + 1) * d]);
@@ -181,6 +202,15 @@ impl GpuLayerCache {
     /// the window ring. Returned as the 0/1 mask the select artifact takes.
     pub fn selectable_mask(&self) -> Vec<f32> {
         let mut mask = vec![0.0f32; self.n_pages_max];
+        self.selectable_mask_into(&mut mask);
+        mask
+    }
+
+    /// Allocation-free variant writing into a caller slice of len
+    /// `n_pages_max` (the per-step selection scratch reuses one buffer).
+    pub fn selectable_mask_into(&self, mask: &mut [f32]) {
+        assert_eq!(mask.len(), self.n_pages_max);
+        mask.iter_mut().for_each(|x| *x = 0.0);
         let cur = self.cur_page();
         let horizon = cur.saturating_sub(self.window_pages);
         for m in mask.iter_mut().take(horizon).skip(self.sink_pages) {
@@ -193,103 +223,106 @@ impl GpuLayerCache {
                 mask[*rp] = 0.0;
             }
         }
-        mask
     }
 
     /// Number of selectable pages.
     pub fn selectable_count(&self) -> usize {
-        self.selectable_mask().iter().filter(|&&x| x > 0.0).count() as usize
-    }
-
-    /// Current selected pages for a head.
-    pub fn selected(&self, head: usize) -> &[Option<usize>] {
-        &self.select_table[head]
-    }
-
-    /// Install a recalled page into a select slot of one head. `k_head` /
-    /// `v_head` are `[tok][d]` for that head (post layout conversion).
-    pub fn install_selected(
-        &mut self,
-        head: usize,
-        slot_j: usize,
-        page: usize,
-        k_head: &[f32],
-        v_head: &[f32],
-    ) {
-        let (d, p) = (self.d, self.p);
-        assert_eq!(k_head.len(), p * d);
-        let slot = self.sink_pages + self.window_pages + slot_j;
-        for tok in 0..p {
-            let o = self.nhd_off(slot, tok, head);
-            self.k[o..o + d].copy_from_slice(&k_head[tok * d..(tok + 1) * d]);
-            self.v[o..o + d].copy_from_slice(&v_head[tok * d..(tok + 1) * d]);
-        }
-        self.select_table[head][slot_j] = Some(page);
-    }
-
-    /// Diff a new selection against the resident set: returns
-    /// (slot assignments to fill, pages already resident). Evicts
-    /// non-reselected pages. This is the page-cache behaviour that makes
-    /// speculative recall cheap when consecutive selections overlap.
-    pub fn plan_selection(&mut self, head: usize, pages: &[usize]) -> Vec<(usize, usize)> {
-        let table = &mut self.select_table[head];
-        let keep: Vec<bool> = table
-            .iter()
-            .map(|slot| slot.map_or(false, |pg| pages.contains(&pg)))
-            .collect();
-        let mut to_fill: Vec<(usize, usize)> = Vec::new();
-        let mut free: Vec<usize> = (0..table.len()).filter(|&j| !keep[j]).collect();
-        for &pg in pages {
-            if table.iter().any(|s| *s == Some(pg)) {
-                continue;
-            }
-            if let Some(j) = free.pop() {
-                table[j] = None; // evicted; filled by install_selected
-                to_fill.push((j, pg));
-            }
-        }
-        to_fill
+        self.selectable_mask().iter().filter(|&&x| x > 0.0).count()
     }
 
     /// Gather the attention operands: K/V `[head][S][d]` and the validity
     /// mask `[head][S]`, with S = budget_slots. Slot order per head:
-    /// sink, window ring, then that head's selected slots.
-    pub fn gather(&self, dst_k: &mut [f32], dst_v: &mut [f32], dst_valid: &mut [f32]) {
+    /// sink, window ring, then that head's selected slots. Writes every
+    /// slot region (zero-filling invalid tails), so the destination need
+    /// not be pre-zeroed. Clears all dirty bits.
+    pub fn gather_full(
+        &mut self,
+        sel: &mut SelectSlots,
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+        dst_valid: &mut [f32],
+    ) {
+        self.gather_impl(sel, dst_k, dst_v, dst_valid, false);
+    }
+
+    /// Incremental gather: rewrite only the slot regions dirtied since the
+    /// last gather into the caller's *persistent* buffers. Equivalent to
+    /// `gather_full` when the buffers have been maintained by this method
+    /// since creation (zero-initialized).
+    pub fn gather_dirty(
+        &mut self,
+        sel: &mut SelectSlots,
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+        dst_valid: &mut [f32],
+    ) {
+        self.gather_impl(sel, dst_k, dst_v, dst_valid, true);
+    }
+
+    fn gather_impl(
+        &mut self,
+        sel: &mut SelectSlots,
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+        dst_valid: &mut [f32],
+        only_dirty: bool,
+    ) {
         let (m, d, p) = (self.n_kv, self.d, self.p);
         let s = self.budget_slots();
         assert_eq!(dst_k.len(), m * s * d);
+        assert_eq!(dst_v.len(), m * s * d);
         assert_eq!(dst_valid.len(), m * s);
-        dst_valid.iter_mut().for_each(|x| *x = 0.0);
+        assert_eq!(sel.n_kv, m);
+        assert_eq!(sel.select_pages, self.select_pages);
+        let sw = self.sink_pages + self.window_pages;
         let bp = self.budget_pages();
         for head in 0..m {
             for slot in 0..bp {
                 // which logical page does this slot hold for this head?
-                let (page, per_head): (Option<usize>, bool) = if slot < self.sink_pages {
-                    (Some(slot), false)
-                } else if slot < self.sink_pages + self.window_pages {
-                    (self.ring_pages[slot - self.sink_pages], false)
+                let (page, per_head, dirty) = if slot < self.sink_pages {
+                    (Some(slot), false, self.dirty_shared[slot])
+                } else if slot < sw {
+                    (self.ring_pages[slot - self.sink_pages], false, self.dirty_shared[slot])
                 } else {
-                    (self.select_table[head][slot - self.sink_pages - self.window_pages], true)
+                    let j = slot - sw;
+                    (sel.select_table[head][j], true, sel.dirty[head * sel.select_pages + j])
                 };
-                let Some(g) = page else { continue };
-                // Ring entries older than the window horizon are stale.
-                if !per_head && g > self.cur_page() {
+                if only_dirty && !dirty {
                     continue;
                 }
-                let valid_toks = if per_head {
-                    p // only complete pages are selectable
-                } else {
-                    self.len.saturating_sub(g * p).min(p)
+                // Tokens of the slot's page that are real; ring slots of a
+                // partially-written page expose only the written prefix.
+                let valid_toks = match page {
+                    None => 0,
+                    Some(_) if per_head => p, // only complete pages are selectable
+                    Some(g) => self.len.saturating_sub(g * p).min(p),
                 };
-                for tok in 0..valid_toks {
-                    let src = self.nhd_off(slot, tok, head);
+                for tok in 0..p {
                     let dst = (head * s + slot * p + tok) * d;
-                    dst_k[dst..dst + d].copy_from_slice(&self.k[src..src + d]);
-                    dst_v[dst..dst + d].copy_from_slice(&self.v[src..src + d]);
-                    dst_valid[head * s + slot * p + tok] = 1.0;
+                    if tok < valid_toks {
+                        let src = if per_head {
+                            sel.nhd_off(slot - sw, tok, head)
+                        } else {
+                            self.nhd_off(slot, tok, head)
+                        };
+                        let (sk, sv) = if per_head {
+                            (&sel.k[src..src + d], &sel.v[src..src + d])
+                        } else {
+                            (&self.k[src..src + d], &self.v[src..src + d])
+                        };
+                        dst_k[dst..dst + d].copy_from_slice(sk);
+                        dst_v[dst..dst + d].copy_from_slice(sv);
+                        dst_valid[head * s + slot * p + tok] = 1.0;
+                    } else {
+                        dst_k[dst..dst + d].iter_mut().for_each(|x| *x = 0.0);
+                        dst_v[dst..dst + d].iter_mut().for_each(|x| *x = 0.0);
+                        dst_valid[head * s + slot * p + tok] = 0.0;
+                    }
                 }
             }
         }
+        self.dirty_shared.iter_mut().for_each(|x| *x = false);
+        sel.dirty.iter_mut().for_each(|x| *x = false);
     }
 
     /// Summary planes in the `[head][page][d]` order the select artifact
@@ -303,6 +336,113 @@ impl GpuLayerCache {
     pub fn summaries_sanitized(&self) -> (Vec<f32>, Vec<f32>) {
         let fix = |xs: &[f32]| xs.iter().map(|&x| if x.is_finite() { x } else { 0.0 }).collect();
         (fix(&self.smin), fix(&self.smax))
+    }
+
+    /// Allocation-free sanitize into caller slices (per-step selection
+    /// scratch): same values as `summaries_sanitized`.
+    pub fn summaries_sanitized_into(&self, lo: &mut [f32], hi: &mut [f32]) {
+        assert_eq!(lo.len(), self.smin.len());
+        assert_eq!(hi.len(), self.smax.len());
+        for (dst, &x) in lo.iter_mut().zip(&self.smin) {
+            *dst = if x.is_finite() { x } else { 0.0 };
+        }
+        for (dst, &x) in hi.iter_mut().zip(&self.smax) {
+            *dst = if x.is_finite() { x } else { 0.0 };
+        }
+    }
+}
+
+/// Transfer half: the per-kv-head selected-page slab and page table.
+/// Owned by the engine between steps; checked out (inside a `LayerXfer`)
+/// to the background recall worker while speculative recall runs.
+#[derive(Debug)]
+pub struct SelectSlots {
+    pub n_kv: usize,
+    pub d: usize,
+    pub p: usize,
+    pub select_pages: usize,
+    /// NHD K/V slabs for the select slots: `[select_pages][p][n_kv][d]`.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// selected logical page per (kv head, select slot).
+    select_table: Vec<Vec<Option<usize>>>,
+    /// per (head, slot) dirty bits for incremental gather.
+    dirty: Vec<bool>,
+}
+
+impl SelectSlots {
+    pub fn new(n_kv: usize, d: usize, p: usize, select_pages: usize) -> SelectSlots {
+        SelectSlots {
+            n_kv,
+            d,
+            p,
+            select_pages,
+            k: vec![0.0; select_pages * p * n_kv * d],
+            v: vec![0.0; select_pages * p * n_kv * d],
+            select_table: vec![vec![None; select_pages]; n_kv],
+            dirty: vec![false; n_kv * select_pages],
+        }
+    }
+
+    #[inline]
+    fn nhd_off(&self, slot_j: usize, tok: usize, head: usize) -> usize {
+        ((slot_j * self.p + tok) * self.n_kv + head) * self.d
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Current selected pages for a head.
+    pub fn selected(&self, head: usize) -> &[Option<usize>] {
+        &self.select_table[head]
+    }
+
+    /// Install a recalled page into a select slot of one head. `k_head` /
+    /// `v_head` are `[tok][d]` for that head (post layout conversion).
+    pub fn install(
+        &mut self,
+        head: usize,
+        slot_j: usize,
+        page: usize,
+        k_head: &[f32],
+        v_head: &[f32],
+    ) {
+        let (d, p) = (self.d, self.p);
+        assert_eq!(k_head.len(), p * d);
+        for tok in 0..p {
+            let o = self.nhd_off(slot_j, tok, head);
+            self.k[o..o + d].copy_from_slice(&k_head[tok * d..(tok + 1) * d]);
+            self.v[o..o + d].copy_from_slice(&v_head[tok * d..(tok + 1) * d]);
+        }
+        self.select_table[head][slot_j] = Some(page);
+        self.dirty[head * self.select_pages + slot_j] = true;
+    }
+
+    /// Diff a new selection against the resident set: returns
+    /// (slot assignments to fill, pages already resident). Evicts
+    /// non-reselected pages. This is the page-cache behaviour that makes
+    /// speculative recall cheap when consecutive selections overlap.
+    pub fn plan_selection(&mut self, head: usize, pages: &[usize]) -> Vec<(usize, usize)> {
+        let sp = self.select_pages;
+        let table = &mut self.select_table[head];
+        let keep: Vec<bool> = table
+            .iter()
+            .map(|slot| slot.map_or(false, |pg| pages.contains(&pg)))
+            .collect();
+        let mut to_fill: Vec<(usize, usize)> = Vec::new();
+        let mut free: Vec<usize> = (0..table.len()).filter(|&j| !keep[j]).collect();
+        for &pg in pages {
+            if table.iter().any(|s| *s == Some(pg)) {
+                continue;
+            }
+            if let Some(j) = free.pop() {
+                table[j] = None; // evicted; filled by install
+                self.dirty[head * sp + j] = true;
+                to_fill.push((j, pg));
+            }
+        }
+        to_fill
     }
 }
 
@@ -359,6 +499,7 @@ mod tests {
     #[test]
     fn gather_marks_partial_page_validity() {
         let mut c = cache();
+        let mut sel = c.new_select_slots();
         let mut rng = Rng::new(3);
         for _ in 0..6 {
             // 1.5 pages
@@ -369,7 +510,7 @@ mod tests {
         let mut gk = vec![0.0; 2 * s * 4];
         let mut gv = vec![0.0; 2 * s * 4];
         let mut valid = vec![0.0; 2 * s];
-        c.gather(&mut gk, &mut gv, &mut valid);
+        c.gather_full(&mut sel, &mut gk, &mut gv, &mut valid);
         for head in 0..2 {
             let v_head = &valid[head * s..(head + 1) * s];
             // sink slot 0: page 0 complete -> 4 valid
@@ -389,6 +530,7 @@ mod tests {
         // After many pages, each valid token position must appear exactly
         // once per head (no sink/ring/select overlap).
         let mut c = cache();
+        let mut sel = c.new_select_slots();
         let mut rng = Rng::new(4);
         for _ in 0..40 {
             let (k, v) = tok(&mut rng, 2, 4);
@@ -399,18 +541,18 @@ mod tests {
         let pages: Vec<usize> =
             mask.iter().enumerate().filter(|(_, &x)| x > 0.0).map(|(g, _)| g).take(2).collect();
         for head in 0..2 {
-            let fills = c.plan_selection(head, &pages);
+            let fills = sel.plan_selection(head, &pages);
             for (j, pg) in fills {
                 let kd = vec![pg as f32; 16];
                 let vd = vec![-(pg as f32); 16];
-                c.install_selected(head, j, pg, &kd, &vd);
+                sel.install(head, j, pg, &kd, &vd);
             }
         }
         let s = c.budget_slots();
         let mut gk = vec![0.0; 2 * s * 4];
         let mut gv = vec![0.0; 2 * s * 4];
         let mut valid = vec![0.0; 2 * s];
-        c.gather(&mut gk, &mut gv, &mut valid);
+        c.gather_full(&mut sel, &mut gk, &mut gv, &mut valid);
         // count valid tokens: sink 4 + ring full page 4 + partial 0 (len=40
         // = page 10 boundary; ring holds pages 8,9 -> 8 toks) + select 8
         let per_head: f32 = valid[0..s].iter().sum();
@@ -419,24 +561,19 @@ mod tests {
 
     #[test]
     fn plan_selection_reuses_resident_pages() {
-        let mut c = cache();
-        let mut rng = Rng::new(5);
-        for _ in 0..32 {
-            let (k, v) = tok(&mut rng, 2, 4);
-            c.append(&k, &v);
-        }
-        let fills = c.plan_selection(0, &[1, 2]);
+        let mut sel = SelectSlots::new(2, 4, 4, 2);
+        let fills = sel.plan_selection(0, &[1, 2]);
         assert_eq!(fills.len(), 2);
         for (j, pg) in &fills {
-            c.install_selected(0, *j, *pg, &vec![0.0; 16], &vec![0.0; 16]);
+            sel.install(0, *j, *pg, &vec![0.0; 16], &vec![0.0; 16]);
         }
         // Re-selecting {2, 3}: page 2 resident -> only 3 transfers.
-        let fills2 = c.plan_selection(0, &[2, 3]);
+        let fills2 = sel.plan_selection(0, &[2, 3]);
         assert_eq!(fills2.len(), 1);
         assert_eq!(fills2[0].1, 3);
         // Page 1's slot was freed.
-        assert!(c.selected(0).iter().any(|s| *s == Some(2)));
-        assert!(!c.selected(0).iter().any(|s| *s == Some(1)));
+        assert!(sel.selected(0).iter().any(|s| *s == Some(2)));
+        assert!(!sel.selected(0).iter().any(|s| *s == Some(1)));
     }
 
     #[test]
@@ -463,6 +600,12 @@ mod tests {
         }
         let (fmin, fmax) = c.summaries_sanitized();
         assert!(fmin.iter().chain(fmax.iter()).all(|x| x.is_finite()));
+        // the _into variant must agree exactly
+        let mut lo = vec![1.0f32; fmin.len()];
+        let mut hi = vec![1.0f32; fmax.len()];
+        c.summaries_sanitized_into(&mut lo, &mut hi);
+        assert_eq!(lo, fmin);
+        assert_eq!(hi, fmax);
     }
 
     #[test]
@@ -472,9 +615,11 @@ mod tests {
         let k: Vec<f32> = (0..m * t * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let v: Vec<f32> = (0..m * t * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let mut a = cache();
+        let mut sel_a = a.new_select_slots();
         let completed = a.load_prefill(&k, &v, t, t);
         assert_eq!(completed.len(), t / 4);
         let mut b = cache();
+        let mut sel_b = b.new_select_slots();
         for pos in 0..t {
             let mut kn = vec![0.0; m * d];
             let mut vn = vec![0.0; m * d];
@@ -489,9 +634,57 @@ mod tests {
         let s = a.budget_slots();
         let (mut ka, mut va, mut ma) = (vec![0.0; m * s * d], vec![0.0; m * s * d], vec![0.0; m * s]);
         let (mut kb, mut vb, mut mb) = (ka.clone(), va.clone(), ma.clone());
-        a.gather(&mut ka, &mut va, &mut ma);
-        b.gather(&mut kb, &mut vb, &mut mb);
+        a.gather_full(&mut sel_a, &mut ka, &mut va, &mut ma);
+        b.gather_full(&mut sel_b, &mut kb, &mut vb, &mut mb);
         assert_eq!(ka, kb);
         assert_eq!(ma, mb);
+    }
+
+    #[test]
+    fn gather_dirty_matches_full_rebuild() {
+        // Maintain one destination incrementally across a random schedule
+        // of appends and select installs; a from-scratch gather into a
+        // fresh buffer must agree bit-for-bit after every round.
+        let mut c = cache();
+        let mut sel = c.new_select_slots();
+        let mut rng = Rng::new(8);
+        let (m, d, s) = (2usize, 4usize, cache().budget_slots());
+        let mut ik = vec![0.0f32; m * s * d];
+        let mut iv = ik.clone();
+        let mut ivalid = vec![0.0f32; m * s];
+        for round in 0..30 {
+            // a few appends
+            for _ in 0..1 + rng.below(5) {
+                if c.len + 1 >= 16 * 4 {
+                    break;
+                }
+                let (k, v) = tok(&mut rng, m, d);
+                c.append(&k, &v);
+            }
+            // occasionally install a fresh selection
+            if round % 3 == 0 {
+                let mask = c.selectable_mask();
+                let mut cands: Vec<usize> =
+                    mask.iter().enumerate().filter(|(_, &x)| x > 0.0).map(|(g, _)| g).collect();
+                rng.shuffle(&mut cands);
+                let take = cands.len().min(1 + rng.below(2));
+                for head in 0..m {
+                    let fills = sel.plan_selection(head, &cands[..take]);
+                    for (j, pg) in fills {
+                        let kd: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                        let vd: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                        sel.install(head, j, pg, &kd, &vd);
+                    }
+                }
+            }
+            c.gather_dirty(&mut sel, &mut ik, &mut iv, &mut ivalid);
+            let mut fk = vec![0.0f32; m * s * d];
+            let mut fv = fk.clone();
+            let mut fvalid = vec![0.0f32; m * s];
+            c.gather_full(&mut sel, &mut fk, &mut fv, &mut fvalid);
+            assert_eq!(ik, fk, "round {} k diverged", round);
+            assert_eq!(iv, fv, "round {} v diverged", round);
+            assert_eq!(ivalid, fvalid, "round {} validity diverged", round);
+        }
     }
 }

@@ -1,6 +1,14 @@
 //! Paged KV-cache manager: GPU-resident budget cache (NHD) + CPU offload
 //! pool (HND for FreeKV, NHD for the layout ablation/baselines), page
 //! tables, and min/max page summaries.
+//!
+//! Ownership is split per layer into a compute half ([`GpuLayerCache`])
+//! that never leaves the engine thread, and a transfer half
+//! ([`LayerXfer`] = select slots + CPU pool) that can be checked out to
+//! the background recall worker (`transfer::pipeline`) while the engine
+//! computes other layers. While checked out, `LayerState::xfer` is
+//! `None`; the engine re-attaches it at the drain point before the next
+//! use of that layer's selection state.
 
 pub mod gpu;
 pub mod pool;
@@ -8,24 +16,98 @@ pub mod pool;
 use crate::config::ModelConfig;
 use crate::transfer::TransferEngine;
 
-pub use gpu::{CompletedPage, GpuLayerCache};
+pub use gpu::{CompletedPage, GpuLayerCache, SelectSlots};
 pub use pool::{Chunk, LayerPool, Layout};
 
 /// All KV state for one request across layers.
 pub struct RequestKv {
     pub layers: Vec<LayerState>,
+    pool_bytes_per_layer: usize,
+    select_bytes_per_layer: usize,
 }
 
 pub struct LayerState {
     pub gpu: GpuLayerCache,
+    /// Transfer half; `None` while checked out to the recall worker.
+    xfer: Option<LayerXfer>,
+}
+
+/// The per-layer state the recall worker needs exclusive access to:
+/// the CPU page pool it reads and the GPU select slots it fills.
+pub struct LayerXfer {
+    pub select: SelectSlots,
     pub pool: LayerPool,
+}
+
+impl LayerState {
+    /// Is the transfer half currently checked out to the recall worker?
+    pub fn in_flight(&self) -> bool {
+        self.xfer.is_none()
+    }
+
+    pub fn xfer(&self) -> &LayerXfer {
+        self.xfer.as_ref().expect("transfer half is checked out to the recall worker")
+    }
+
+    pub fn xfer_mut(&mut self) -> &mut LayerXfer {
+        self.xfer.as_mut().expect("transfer half is checked out to the recall worker")
+    }
+
+    /// Check the transfer half out (for handing to the recall worker).
+    pub fn take_xfer(&mut self) -> LayerXfer {
+        self.xfer.take().expect("transfer half already checked out")
+    }
+
+    /// Re-attach the transfer half returned by the recall worker.
+    pub fn put_xfer(&mut self, x: LayerXfer) {
+        debug_assert!(self.xfer.is_none(), "transfer half re-attached twice");
+        self.xfer = Some(x);
+    }
+
+    /// Convenience read access to the select page table.
+    pub fn select(&self) -> &SelectSlots {
+        &self.xfer().select
+    }
+
+    /// Split borrow: the compute half and the transfer half of this
+    /// layer simultaneously (gather needs both mutably).
+    pub fn parts_mut(&mut self) -> (&mut GpuLayerCache, &mut LayerXfer) {
+        let x = self.xfer.as_mut().expect("transfer half is checked out to the recall worker");
+        (&mut self.gpu, x)
+    }
+
+    /// Convenience read access to the CPU pool.
+    pub fn pool(&self) -> &LayerPool {
+        &self.xfer().pool
+    }
+}
+
+/// Install one head's selection into the select slots: diffs against the
+/// resident pages and recalls only the missing ones from the pool.
+/// Shared between the engine's blocking path (via
+/// [`RequestKv::apply_selection`]) and the background recall worker,
+/// which runs it on a checked-out [`LayerXfer`]. Returns pages moved.
+pub fn apply_selection_parts(
+    select: &mut SelectSlots,
+    pool: &LayerPool,
+    head: usize,
+    pages: &[usize],
+    engine: &mut TransferEngine,
+) -> usize {
+    let fills = select.plan_selection(head, pages);
+    let n = fills.len();
+    for (slot_j, page) in fills {
+        debug_assert!(pool.is_written(page), "recalling unwritten page {}", page);
+        engine.recall_page(pool, page, head, select, slot_j);
+    }
+    n
 }
 
 impl RequestKv {
     pub fn new(cfg: &ModelConfig, cpu_layout: Layout) -> RequestKv {
-        let layers = (0..cfg.n_layers)
-            .map(|_| LayerState {
-                gpu: GpuLayerCache::new(
+        let layers: Vec<LayerState> = (0..cfg.n_layers)
+            .map(|_| {
+                let gpu = GpuLayerCache::new(
                     cfg.n_kv,
                     cfg.d_head,
                     cfg.page_size,
@@ -33,20 +115,26 @@ impl RequestKv {
                     cfg.window_pages,
                     cfg.select_pages,
                     cfg.n_pages_max(),
-                ),
-                pool: LayerPool::new(
+                );
+                let select = gpu.new_select_slots();
+                let pool = LayerPool::new(
                     cpu_layout,
                     cfg.n_pages_max(),
                     cfg.n_kv,
                     cfg.page_size,
                     cfg.d_head,
-                ),
+                );
+                LayerState { gpu, xfer: Some(LayerXfer { select, pool }) }
             })
             .collect();
-        RequestKv { layers }
+        let pool_bytes_per_layer = layers.first().map_or(0, |l| l.pool().bytes());
+        let select_bytes_per_layer = layers.first().map_or(0, |l| l.select().bytes());
+        RequestKv { layers, pool_bytes_per_layer, select_bytes_per_layer }
     }
 
     pub fn len(&self) -> usize {
+        // the compute half (which owns `len`) never leaves the engine, so
+        // this is safe even while transfer halves are in flight.
         self.layers.first().map_or(0, |l| l.gpu.len)
     }
 
@@ -64,7 +152,8 @@ impl RequestKv {
     ) {
         let st = &mut self.layers[layer];
         if let Some(cp) = st.gpu.append(k_new, v_new) {
-            engine.offload_page(&cp, &mut st.pool);
+            let x = st.xfer.as_mut().expect("append while transfer half is on the recall worker");
+            engine.offload_page(&cp, &mut x.pool);
         }
     }
 
@@ -78,23 +167,20 @@ impl RequestKv {
         engine: &mut TransferEngine,
     ) -> usize {
         let st = &mut self.layers[layer];
-        let fills = st.gpu.plan_selection(head, pages);
-        let n = fills.len();
-        for (slot_j, page) in fills {
-            debug_assert!(st.pool.is_written(page), "recalling unwritten page {}", page);
-            engine.recall_page(&st.pool, page, head, &mut st.gpu, slot_j);
-        }
-        n
+        let x = st.xfer.as_mut().expect("selection while transfer half is on the recall worker");
+        apply_selection_parts(&mut x.select, &x.pool, head, pages, engine)
     }
 
-    /// Total host bytes of the CPU pools (the offloaded cache).
+    /// Total host bytes of the CPU pools (the offloaded cache). Derived
+    /// from geometry so it stays answerable while halves are in flight.
     pub fn cpu_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.pool.bytes()).sum()
+        self.layers.len() * self.pool_bytes_per_layer
     }
 
     /// Total bytes of GPU-resident state (budget cache + summaries).
     pub fn gpu_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.gpu.gpu_bytes()).sum()
+        self.layers.iter().map(|l| l.gpu.gpu_bytes()).sum::<usize>()
+            + self.layers.len() * self.select_bytes_per_layer
     }
 }
 
@@ -146,5 +232,21 @@ mod tests {
         let n2 = kv.apply_selection(0, 1, &[1, 2], &mut eng);
         assert_eq!(n2, 0);
         assert!(kv.cpu_bytes() > 0 && kv.gpu_bytes() > 0);
+    }
+
+    #[test]
+    fn transfer_half_checkout_roundtrip() {
+        let cfg = tiny_cfg();
+        let mut kv = RequestKv::new(&cfg, Layout::Hnd);
+        assert!(!kv.layers[0].in_flight());
+        let cpu_bytes = kv.cpu_bytes();
+        let x = kv.layers[0].take_xfer();
+        assert!(kv.layers[0].in_flight());
+        // length and byte accounting stay answerable while checked out
+        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.cpu_bytes(), cpu_bytes);
+        kv.layers[0].put_xfer(x);
+        assert!(!kv.layers[0].in_flight());
+        assert_eq!(kv.layers[0].select().selected(0).len(), cfg.select_pages);
     }
 }

@@ -58,9 +58,14 @@ pub fn softmax_inplace(xs: &mut [f32]) {
 
 /// Indices of the k largest values (descending by value, stable on ties).
 pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..xs.len()).collect();
     let k = k.min(xs.len());
-    idx.select_nth_unstable_by(k.saturating_sub(1).min(xs.len().saturating_sub(1)), |&a, &b| {
+    if k == 0 {
+        // select_nth_unstable_by(0, ..) on an empty index vec would be
+        // out-of-bounds; an empty query or empty input selects nothing.
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
         xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
     });
     let mut top: Vec<usize> = idx[..k].to_vec();
@@ -276,6 +281,16 @@ mod tests {
         assert_eq!(top_k(&xs, 3), vec![1, 3, 2]);
         assert_eq!(top_k(&xs, 0), Vec::<usize>::new());
         assert_eq!(top_k(&xs, 10).len(), 5);
+    }
+
+    #[test]
+    fn top_k_empty_input_is_empty() {
+        // regression: used to call select_nth_unstable_by(0, ..) on an
+        // empty index vec and panic out-of-bounds.
+        assert_eq!(top_k(&[], 3), Vec::<usize>::new());
+        assert_eq!(top_k(&[], 0), Vec::<usize>::new());
+        assert_eq!(top_k(&[1.0], 0), Vec::<usize>::new());
+        assert_eq!(top_k(&[1.0], 1), vec![0]);
     }
 
     #[test]

@@ -35,7 +35,10 @@ fn run() -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     let model = args.str_or("model", "tiny");
     let tau = args.f64_or("tau", 0.8) as f32;
-    let params = FreeKvParams { tau, ..Default::default() };
+    // --serial-recall keeps speculative recall on the decode thread (the
+    // overlap ablation baseline); default dispatches it to the worker.
+    let params =
+        FreeKvParams { tau, overlap: !args.flag("serial-recall"), ..Default::default() };
 
     match args.command() {
         Some("info") => {
@@ -129,7 +132,7 @@ fn run() -> Result<()> {
             eval(what, seeds, &artifacts, &model)
         }
         _ => Err(anyhow!(
-            "usage: freekv <info|generate|serve|eval> [--model tiny] [--artifacts dir]\n\
+            "usage: freekv <info|generate|serve|eval> [--model tiny] [--artifacts dir] [--serial-recall]\n\
              eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
              table2 table3 table4 table5 table6 table7 table8 table9 fig7 fig8 fig9 fig10 \
              oom real-breakdown real-correction fig16-20 all"

@@ -102,6 +102,11 @@ pub struct SimKnobs {
     pub hybrid_layout: bool,
     pub double_buffer: bool,
     pub speculative: bool,
+    /// Dispatch speculative recall on the copy stream concurrently with
+    /// compute (the real engine's `FreeKvParams::overlap`); when false
+    /// the recall serializes with the next layer's compute, modeling the
+    /// serial in-thread dispatch ablation.
+    pub overlap: bool,
     /// GPU memory capacity for OOM accounting (A100-40G).
     pub gpu_mem_bytes: f64,
     /// runtime reserve (CUDA context, activations, workspace) subtracted
@@ -121,6 +126,7 @@ impl Default for SimKnobs {
             hybrid_layout: true,
             double_buffer: true,
             speculative: true,
+            overlap: true,
             gpu_mem_bytes: 40e9,
             runtime_reserve: 7e9,
         }
@@ -194,6 +200,9 @@ pub fn simulate_request(
     // carried dependency: the speculative recall each step issues for the
     // next one (FreeKV), or InfiniGen's next-layer prefetch.
     let mut spec_recall_done: Vec<Option<usize>> = vec![None; m.n_layers];
+    // serial-dispatch gate: with overlap off, the engine thread performs
+    // the speculative recall inline, so the next compute op waits for it.
+    let mut serial_gate: Option<usize> = None;
 
     for step in 0..output_len {
         let ctx = input_len + step;
@@ -202,10 +211,17 @@ pub fn simulate_request(
         let mut prev_compute: Option<usize> = None;
 
         for layer in 0..m.n_layers {
+            // deferred serial-dispatch speculative recall (sel event,
+            // missed pages), scheduled once this layer's attn exists.
+            let mut serial_spec: Option<(usize, usize)> = None;
             // -- linear part of the layer --
+            let mut lin_deps: Vec<usize> = prev_compute.into_iter().collect();
+            if let Some(g) = serial_gate.take() {
+                lin_deps.push(g);
+            }
             let lin = tl.schedule(
                 Stream::Compute,
-                prev_compute.as_slice_opt(),
+                &lin_deps,
                 cm.layer_linear(b),
                 "compute:linear",
             );
@@ -361,47 +377,59 @@ pub fn simulate_request(
                         );
                         let miss_pages =
                             ((sel_k as f64 * knobs.churn).ceil() as usize).max(1) * b;
-                        let r = tl.schedule(
-                            Stream::H2D,
-                            &[s],
-                            cm.recall_pages(miss_pages, knobs.hybrid_layout),
-                            "recall:freekv",
-                        );
-                        let conv = if knobs.double_buffer {
-                            // pipelined: per-page conversion overlaps the
-                            // next page's transfer; only the tail shows.
-                            tl.schedule(
-                                Stream::Convert,
-                                &[r],
-                                cm.convert_pages(1),
-                                "convert:freekv",
-                            )
-                        } else {
-                            // serialized on the copy stream.
-                            tl.schedule(
+                        if knobs.overlap {
+                            let r = tl.schedule(
                                 Stream::H2D,
-                                &[r],
-                                cm.convert_pages(miss_pages),
-                                "convert:freekv",
-                            )
-                        };
-                        // Platforms with imperfect copy/compute overlap
-                        // (Appendix D, Ascend) expose part of the side-
-                        // stream work on the compute stream.
-                        let eff = cm.dev.overlap_efficiency;
-                        if eff < 1.0 {
-                            let exposed = (cm.recall_pages(miss_pages, knobs.hybrid_layout)
-                                + cm.convert_pages(miss_pages))
-                                * (1.0 - eff);
-                            let e = tl.schedule(
-                                Stream::Compute,
-                                &[lin],
-                                exposed,
-                                "recall:unoverlapped",
+                                &[s],
+                                cm.recall_pages(miss_pages, knobs.hybrid_layout),
+                                "recall:freekv",
                             );
-                            attn_deps.push(e);
+                            let conv = if knobs.double_buffer {
+                                // pipelined: per-page conversion overlaps
+                                // the next page's transfer; only the tail
+                                // shows.
+                                tl.schedule(
+                                    Stream::Convert,
+                                    &[r],
+                                    cm.convert_pages(1),
+                                    "convert:freekv",
+                                )
+                            } else {
+                                // serialized on the copy stream.
+                                tl.schedule(
+                                    Stream::H2D,
+                                    &[r],
+                                    cm.convert_pages(miss_pages),
+                                    "convert:freekv",
+                                )
+                            };
+                            // Platforms with imperfect copy/compute
+                            // overlap (Appendix D, Ascend) expose part of
+                            // the side-stream work on the compute stream.
+                            let eff = cm.dev.overlap_efficiency;
+                            if eff < 1.0 {
+                                let exposed = (cm.recall_pages(miss_pages, knobs.hybrid_layout)
+                                    + cm.convert_pages(miss_pages))
+                                    * (1.0 - eff);
+                                let e = tl.schedule(
+                                    Stream::Compute,
+                                    &[lin],
+                                    exposed,
+                                    "recall:unoverlapped",
+                                );
+                                attn_deps.push(e);
+                            }
+                            spec_recall_done[layer] = Some(conv);
+                        } else {
+                            // Serial dispatch (the real engine's
+                            // overlap=false ablation): the engine thread
+                            // itself moves the pages after this layer's
+                            // attention, so the recall starts once the
+                            // attention finishes and gates the next
+                            // compute op. Deferred below until the attn
+                            // event exists.
+                            serial_spec = Some((s, miss_pages));
                         }
-                        spec_recall_done[layer] = Some(conv);
                     } else {
                         // SR ablation off: blocking select + recall.
                         let s = tl.schedule(
@@ -445,17 +473,40 @@ pub fn simulate_request(
             );
             prev_compute = Some(attn);
 
+            // serial-dispatch speculative recall: runs on the engine
+            // thread after attention and gates the next compute op.
+            if let Some((s, miss_pages)) = serial_spec.take() {
+                let r = tl.schedule(
+                    Stream::H2D,
+                    &[s, attn],
+                    cm.recall_pages(miss_pages, knobs.hybrid_layout),
+                    "recall:freekv",
+                );
+                let conv_t = if knobs.double_buffer {
+                    cm.convert_pages(1)
+                } else {
+                    cm.convert_pages(miss_pages)
+                };
+                let cv = tl.schedule(
+                    if knobs.double_buffer { Stream::Convert } else { Stream::H2D },
+                    &[r],
+                    conv_t,
+                    "convert:freekv",
+                );
+                serial_gate = Some(cv);
+                spec_recall_done[layer] = Some(cv);
+            }
+
             // offloading methods push completed pages out (overlapped).
             if method.offloads() && (ctx + 1) % m.page_size == 0 {
                 tl.schedule(Stream::D2H, &[attn], cm.offload_page() * b as f64, "offload");
             }
         }
-        let _ = tl.schedule(
-            Stream::Compute,
-            prev_compute.as_slice_opt(),
-            cm.logits(b),
-            "compute:logits",
-        );
+        let mut logits_deps: Vec<usize> = prev_compute.into_iter().collect();
+        if let Some(g) = serial_gate.take() {
+            logits_deps.push(g);
+        }
+        let _ = tl.schedule(Stream::Compute, &logits_deps, cm.logits(b), "compute:logits");
         let _ = step;
     }
 
@@ -497,18 +548,6 @@ pub fn weight_bytes(m: &ModelConfig, elem: usize) -> f64 {
         + m.n_qo * m.d_head * m.d_model
         + 3 * m.d_model * m.d_ffn;
     ((m.n_layers * per_layer + 2 * m.vocab * m.d_model) * elem) as f64
-}
-
-trait AsSliceOpt {
-    fn as_slice_opt(&self) -> &[usize];
-}
-impl AsSliceOpt for Option<usize> {
-    fn as_slice_opt(&self) -> &[usize] {
-        match self {
-            Some(v) => std::slice::from_ref(v),
-            None => &[],
-        }
-    }
 }
 
 #[cfg(test)]
@@ -562,6 +601,31 @@ mod tests {
         // ArkVale: recall+selection dominate total latency (Fig. 1 right ~94%).
         let frac = (av.recall_exposed + av.selection_busy) / av.decode_secs;
         assert!(frac > 0.7, "arkvale recall+sel frac {}", frac);
+    }
+
+    #[test]
+    fn serial_dispatch_exposes_recall_and_slows_decode() {
+        // The modeled analog of the real engine's overlap ablation: with
+        // serial dispatch the speculative recall gates the next layer's
+        // compute, so it is (almost) fully exposed and per-token latency
+        // grows; with overlap it hides under compute.
+        let on = SimKnobs::default();
+        let off = SimKnobs { overlap: false, ..Default::default() };
+        let fk_on = run(Method::FreeKv, &on);
+        let fk_off = run(Method::FreeKv, &off);
+        assert!(
+            fk_off.per_token() > fk_on.per_token(),
+            "serial {} <= overlapped {}",
+            fk_off.per_token(),
+            fk_on.per_token()
+        );
+        assert!(
+            fk_off.recall_exposed > 0.7 * fk_off.recall_busy,
+            "serial dispatch should expose recall: exposed {} busy {}",
+            fk_off.recall_exposed,
+            fk_off.recall_busy
+        );
+        assert!(fk_on.recall_exposed < 0.25 * fk_on.recall_busy);
     }
 
     #[test]

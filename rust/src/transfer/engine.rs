@@ -6,10 +6,15 @@
 //! NHD) through a double-buffered staging pipeline, and records counters
 //! (chunks / bytes / calls) that the cost model turns into modeled PCIe
 //! time. Real wall time per phase is also measured for the perf pass.
+//!
+//! One `TransferEngine` lives on the engine thread (offload + blocking
+//! correction recalls) and one inside the background recall worker
+//! (`transfer::pipeline`); the worker's counters are snapshotted per job
+//! and merged back at the drain point.
 
 use std::time::Instant;
 
-use crate::kvcache::gpu::{CompletedPage, GpuLayerCache};
+use crate::kvcache::gpu::{CompletedPage, SelectSlots};
 use crate::kvcache::pool::{LayerPool, Layout};
 
 #[derive(Debug, Default, Clone)]
@@ -67,13 +72,14 @@ impl TransferEngine {
 
     /// Recall one (page, head) pair from the CPU pool into a GPU select
     /// slot. Phase 1 streams the pool chunks into a staging buffer
-    /// ("PCIe"); phase 2 converts/installs into the NHD cache ("GPU").
+    /// ("PCIe"); phase 2 converts/installs into the NHD select slab
+    /// ("GPU").
     pub fn recall_page(
         &mut self,
         pool: &LayerPool,
         page: usize,
         head: usize,
-        gpu: &mut GpuLayerCache,
+        sel: &mut SelectSlots,
         slot_j: usize,
     ) {
         let (p, d) = (pool.p, pool.d);
@@ -109,7 +115,7 @@ impl TransferEngine {
         {
             let staging = &self.staging[buf_idx];
             let (k_head, v_head) = staging.split_at(p * d);
-            gpu.install_selected(head, slot_j, page, k_head, &v_head[..p * d]);
+            sel.install(head, slot_j, page, k_head, &v_head[..p * d]);
             self.counters.convert_bytes += (2 * p * d * 4) as u64;
         }
         self.counters.real_convert_secs += t1.elapsed().as_secs_f64();
@@ -137,18 +143,20 @@ impl TransferEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::gpu::GpuLayerCache;
     use crate::util::rng::Rng;
 
-    fn setup(layout: Layout) -> (LayerPool, GpuLayerCache, TransferEngine) {
+    fn setup(layout: Layout) -> (LayerPool, GpuLayerCache, SelectSlots, TransferEngine) {
         let (m, d, p) = (2, 8, 4);
         let pool = LayerPool::new(layout, 16, m, p, d);
         let gpu = GpuLayerCache::new(m, d, p, 1, 2, 2, 16);
+        let sel = gpu.new_select_slots();
         let eng = TransferEngine::new(p, d, true);
-        (pool, gpu, eng)
+        (pool, gpu, sel, eng)
     }
 
     fn run_roundtrip(layout: Layout) {
-        let (mut pool, mut gpu, mut eng) = setup(layout);
+        let (mut pool, mut gpu, mut sel, mut eng) = setup(layout);
         let mut rng = Rng::new(11);
         // Fill 5 pages through the GPU cache, offloading as they complete.
         let mut kept: Vec<CompletedPage> = Vec::new();
@@ -162,13 +170,13 @@ mod tests {
         }
         assert_eq!(eng.counters.offloaded_pages, 5);
         // Recall page 1 for head 1 into select slot 0 and check content.
-        eng.recall_page(&pool, 1, 1, &mut gpu, 0);
-        assert_eq!(gpu.selected(1)[0], Some(1));
+        eng.recall_page(&pool, 1, 1, &mut sel, 0);
+        assert_eq!(sel.selected(1)[0], Some(1));
         let cp = &kept[1];
         let s = gpu.budget_slots();
         let (mut gk, mut gv, mut valid) =
             (vec![0.0; 2 * s * 8], vec![0.0; 2 * s * 8], vec![0.0; 2 * s]);
-        gpu.gather(&mut gk, &mut gv, &mut valid);
+        gpu.gather_full(&mut sel, &mut gk, &mut gv, &mut valid);
         let select_slot = (1 + 2) * 4; // sink 1 page + window 2 pages
         for tok in 0..4 {
             for dim in 0..8 {
@@ -195,7 +203,7 @@ mod tests {
     #[test]
     fn chunk_counters_reflect_layout() {
         for (layout, per_page_head) in [(Layout::Hnd, 1u64), (Layout::Nhd, 8u64)] {
-            let (mut pool, mut gpu, mut eng) = setup(layout);
+            let (mut pool, mut gpu, mut sel, mut eng) = setup(layout);
             let mut rng = Rng::new(3);
             for _ in 0..8 {
                 let k: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
@@ -203,8 +211,8 @@ mod tests {
                     eng.offload_page(&cp, &mut pool);
                 }
             }
-            eng.recall_page(&pool, 0, 0, &mut gpu, 0);
-            eng.recall_page(&pool, 1, 1, &mut gpu, 0);
+            eng.recall_page(&pool, 0, 0, &mut sel, 0);
+            eng.recall_page(&pool, 1, 1, &mut sel, 0);
             assert_eq!(eng.counters.h2d_chunks, 2 * per_page_head, "{:?}", layout);
             assert_eq!(eng.counters.h2d_bytes, 2 * (2 * 4 * 8 * 4) as u64);
             assert_eq!(eng.counters.recalled_pages, 2);

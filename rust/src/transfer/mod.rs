@@ -1,6 +1,10 @@
 //! CPU<->GPU transfer path: double-buffered streamed recall, offload with
-//! amortized layout transpose, and chunk-accurate counters.
+//! amortized layout transpose, chunk-accurate counters, and the
+//! background speculative-recall pipeline that overlaps page movement
+//! with the engine's compute.
 
 pub mod engine;
+pub mod pipeline;
 
 pub use engine::{TransferCounters, TransferEngine};
+pub use pipeline::{RecallDone, RecallJob, RecallPipeline};

@@ -1,0 +1,275 @@
+//! Background speculative-recall pipeline.
+//!
+//! The paper's headline system claim (§4.2) is that streamed recall
+//! *overlaps with computation*: the speculative selection made at layer
+//! *l* of step *t* is recalled while the GPU computes layers *l+1..L*
+//! (and the step's logits), so that by the time step *t+1* reaches layer
+//! *l* the pages are already resident and only mispredicted heads pay a
+//! blocking correction recall. This module makes that overlap real in
+//! the rust engine with a dedicated worker thread, mirroring the
+//! acceptor/engine thread split already used by `server`.
+//!
+//! # Queue protocol
+//!
+//! * The engine thread enqueues one [`RecallJob`] per (sequence, layer)
+//!   right after that layer's attention + append, carrying the selection
+//!   to install and the checked-out [`LayerXfer`] (select slots + CPU
+//!   pool) — see *Ownership split* below.
+//! * The worker performs the page-cache diff (`plan_selection`) and the
+//!   double-buffered chunked recall (`TransferEngine::recall_page`) for
+//!   every kv head, then sends a [`RecallDone`] back with the transfer
+//!   half, per-job counters, and its busy time.
+//! * Jobs are processed strictly FIFO; completions may be awaited out of
+//!   order — [`RecallPipeline::wait`] parks early completions in a
+//!   `(seq, layer)`-keyed ready map.
+//!
+//! # Ownership split
+//!
+//! Rust makes the concurrency discipline explicit: the *compute half* of
+//! a layer's KV state (`GpuLayerCache`: sink/window slabs, summaries,
+//! sequence length) never leaves the engine thread, while the *transfer
+//! half* (`LayerXfer`: select slab + page table + CPU pool) is **moved**
+//! into the job and moved back in the completion. While a layer's
+//! transfer half is in flight, `LayerState::xfer` is `None`, so any
+//! accidental engine-side use is a loud panic instead of a data race.
+//!
+//! # Drain points
+//!
+//! The engine re-attaches a layer's transfer half ("drains") at:
+//! 1. step *t+1*, layer *l*, right after selection and before the
+//!    correction check — the first point that needs the select table;
+//! 2. end of any decode step for sequences that just finished, so a
+//!    retired sequence never strands state on the worker;
+//! 3. `Engine::drain_sequence`, for callers that stop decoding early.
+//!
+//! Time the worker spends recalling is recorded as *hidden*
+//! (`busy_secs`); time the engine blocks in `wait` is the *exposed*
+//! remainder and is accounted separately by the engine
+//! (`EngineStats::recall_exposed_secs`).
+//!
+//! What is still serial: the PJRT CPU client itself is single-threaded
+//! (`Runtime` is `!Send` by design), so artifact execution — including
+//! selection scoring — stays on the engine thread; only host-side page
+//! movement overlaps. True async compute would need multi-threaded PJRT
+//! dispatch (see ROADMAP open items).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use crate::kvcache::{apply_selection_parts, LayerXfer};
+use crate::transfer::engine::{TransferCounters, TransferEngine};
+
+/// A speculative-recall work item for one (sequence, layer).
+pub struct RecallJob {
+    /// Unique id of the sequence (not the user-facing request id, which
+    /// callers may reuse across sequences).
+    pub seq_uid: u64,
+    pub layer: usize,
+    /// Selected pages per kv head (already mask-filtered).
+    pub selections: Vec<Vec<usize>>,
+    /// The checked-out transfer half the recall operates on.
+    pub xfer: LayerXfer,
+}
+
+/// Completion of a [`RecallJob`]: the transfer half plus accounting.
+pub struct RecallDone {
+    pub seq_uid: u64,
+    pub layer: usize,
+    pub xfer: LayerXfer,
+    /// Pages actually moved (page-cache misses).
+    pub recalled_pages: usize,
+    /// The worker engine's counters for exactly this job.
+    pub counters: TransferCounters,
+    /// Wall time the worker spent on this job (hidden recall time).
+    pub busy_secs: f64,
+}
+
+/// Handle to the background recall worker. Dropping it closes the job
+/// channel and joins the thread; any unclaimed completions are dropped
+/// with it.
+pub struct RecallPipeline {
+    job_tx: Option<Sender<RecallJob>>,
+    done_rx: Receiver<RecallDone>,
+    worker: Option<JoinHandle<()>>,
+    /// completions received but not yet claimed by `wait`.
+    ready: HashMap<(u64, usize), RecallDone>,
+    in_flight: usize,
+    /// total jobs enqueued over the pipeline's lifetime.
+    pub enqueued_jobs: u64,
+}
+
+impl RecallPipeline {
+    /// Spawn the worker. `page_size`/`d_head` size its staging buffers
+    /// (the same double-buffered pair a serial `TransferEngine` uses).
+    pub fn new(page_size: usize, d_head: usize) -> RecallPipeline {
+        let (job_tx, job_rx) = channel::<RecallJob>();
+        let (done_tx, done_rx) = channel::<RecallDone>();
+        let worker = thread::Builder::new()
+            .name("freekv-recall".into())
+            .spawn(move || {
+                let mut eng = TransferEngine::new(page_size, d_head, true);
+                for mut job in job_rx {
+                    let t0 = Instant::now();
+                    let mut recalled = 0usize;
+                    for (head, pages) in job.selections.iter().enumerate() {
+                        recalled += apply_selection_parts(
+                            &mut job.xfer.select,
+                            &job.xfer.pool,
+                            head,
+                            pages,
+                            &mut eng,
+                        );
+                    }
+                    let counters = std::mem::take(&mut eng.counters);
+                    let done = RecallDone {
+                        seq_uid: job.seq_uid,
+                        layer: job.layer,
+                        xfer: job.xfer,
+                        recalled_pages: recalled,
+                        counters,
+                        busy_secs: t0.elapsed().as_secs_f64(),
+                    };
+                    if done_tx.send(done).is_err() {
+                        break; // receiver gone: engine is shutting down
+                    }
+                }
+            })
+            .expect("spawning recall worker");
+        RecallPipeline {
+            job_tx: Some(job_tx),
+            done_rx,
+            worker: Some(worker),
+            ready: HashMap::new(),
+            in_flight: 0,
+            enqueued_jobs: 0,
+        }
+    }
+
+    /// Enqueue a job. Returns immediately; the worker picks it up FIFO.
+    pub fn submit(&mut self, job: RecallJob) {
+        self.in_flight += 1;
+        self.enqueued_jobs += 1;
+        self.job_tx
+            .as_ref()
+            .expect("pipeline already shut down")
+            .send(job)
+            .expect("recall worker hung up");
+    }
+
+    /// Jobs submitted but not yet absorbed into the ready map.
+    pub fn pending(&self) -> usize {
+        self.in_flight
+    }
+
+    fn absorb(&mut self, done: RecallDone) {
+        self.in_flight -= 1;
+        let key = (done.seq_uid, done.layer);
+        let prev = self.ready.insert(key, done);
+        debug_assert!(prev.is_none(), "duplicate in-flight job for {:?}", key);
+    }
+
+    /// Non-blocking sweep of finished jobs into the ready map.
+    pub fn poll(&mut self) {
+        while let Ok(done) = self.done_rx.try_recv() {
+            self.absorb(done);
+        }
+    }
+
+    /// Block until the job for (seq_uid, layer) completes and return it.
+    /// Earlier completions for other keys are parked in the ready map.
+    pub fn wait(&mut self, seq_uid: u64, layer: usize) -> RecallDone {
+        self.poll();
+        loop {
+            if let Some(done) = self.ready.remove(&(seq_uid, layer)) {
+                return done;
+            }
+            match self.done_rx.recv() {
+                Ok(done) => self.absorb(done),
+                Err(_) => panic!(
+                    "recall worker exited with job (seq {}, layer {}) outstanding",
+                    seq_uid, layer
+                ),
+            }
+        }
+    }
+}
+
+impl Drop for RecallPipeline {
+    fn drop(&mut self) {
+        // Closing the job channel ends the worker's loop; join so no
+        // detached thread outlives the engine.
+        self.job_tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{LayerPool, LayerXfer, Layout, SelectSlots};
+    use crate::util::rng::Rng;
+
+    fn xfer(pages: usize, m: usize, p: usize, d: usize, seed: u64) -> LayerXfer {
+        let mut pool = LayerPool::new(Layout::Hnd, pages, m, p, d);
+        let mut rng = Rng::new(seed);
+        for pg in 0..pages {
+            let k: Vec<f32> = (0..p * m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..p * m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            pool.write_page(pg, &k, &v);
+        }
+        LayerXfer { select: SelectSlots::new(m, d, p, 2), pool }
+    }
+
+    #[test]
+    fn worker_matches_inline_recall() {
+        let (pages, m, p, d) = (8, 2, 4, 8);
+        // inline reference
+        let mut a = xfer(pages, m, p, d, 42);
+        let mut eng = TransferEngine::new(p, d, true);
+        let sel_pages = vec![vec![1usize, 3], vec![2usize, 5]];
+        let mut inline_recalled = 0;
+        for (head, pg) in sel_pages.iter().enumerate() {
+            inline_recalled += apply_selection_parts(&mut a.select, &a.pool, head, pg, &mut eng);
+        }
+        // worker path on an identical transfer half
+        let b = xfer(pages, m, p, d, 42);
+        let mut pipe = RecallPipeline::new(p, d);
+        pipe.submit(RecallJob { seq_uid: 7, layer: 0, selections: sel_pages.clone(), xfer: b });
+        let done = pipe.wait(7, 0);
+        assert_eq!(done.recalled_pages, inline_recalled);
+        assert_eq!(done.counters.recalled_pages, eng.counters.recalled_pages);
+        assert_eq!(done.counters.h2d_chunks, eng.counters.h2d_chunks);
+        assert_eq!(done.counters.h2d_bytes, eng.counters.h2d_bytes);
+        for head in 0..m {
+            assert_eq!(done.xfer.select.selected(head), a.select.selected(head));
+        }
+        assert_eq!(pipe.pending(), 0);
+    }
+
+    #[test]
+    fn completions_awaitable_out_of_order() {
+        let (pages, m, p, d) = (8, 2, 4, 8);
+        let mut pipe = RecallPipeline::new(p, d);
+        for layer in 0..4usize {
+            pipe.submit(RecallJob {
+                seq_uid: 1,
+                layer,
+                selections: vec![vec![1 + layer % 3], vec![2]],
+                xfer: xfer(pages, m, p, d, layer as u64),
+            });
+        }
+        assert_eq!(pipe.pending(), 4);
+        // await in reverse order: FIFO completions get parked and matched
+        for layer in (0..4usize).rev() {
+            let done = pipe.wait(1, layer);
+            assert_eq!(done.layer, layer);
+            assert!(done.xfer.select.selected(0).iter().flatten().count() > 0);
+        }
+        assert_eq!(pipe.pending(), 0);
+        assert_eq!(pipe.enqueued_jobs, 4);
+    }
+}

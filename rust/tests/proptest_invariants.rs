@@ -59,10 +59,11 @@ fn gather_valid_count_equals_visible_tokens() {
             gpu.append(&k.clone(), &k);
         }
         let s = gpu.budget_slots();
+        let mut sel = gpu.new_select_slots();
         let mut gk = vec![0.0; cfg.n_kv * s * cfg.d_head];
         let mut gv = gk.clone();
         let mut valid = vec![0.0; cfg.n_kv * s];
-        gpu.gather(&mut gk, &mut gv, &mut valid);
+        gpu.gather_full(&mut sel, &mut gk, &mut gv, &mut valid);
         let per_head: f32 = valid[..s].iter().sum();
         // expected: sink tokens + window-resident tokens (no selection
         // applied). The ring holds the last `window_pages` pages that have
@@ -122,7 +123,7 @@ fn selection_page_table_no_duplicates_and_bounded() {
             for head in 0..cfg.n_kv {
                 kv.apply_selection(0, head, pages, &mut eng);
                 let resident: Vec<usize> =
-                    kv.layers[0].gpu.selected(head).iter().flatten().cloned().collect();
+                    kv.layers[0].select().selected(head).iter().flatten().cloned().collect();
                 // no duplicates
                 let mut d = resident.clone();
                 d.sort_unstable();
