@@ -1,13 +1,16 @@
 //! End-to-end serving driver (the repo's E2E validation run, recorded in
-//! EXPERIMENTS.md): boots the full stack — PJRT runtime, FreeKV engine,
-//! continuous-batching scheduler — feeds it a batched workload of real
-//! requests, and reports latency/throughput percentiles.
+//! EXPERIMENTS.md): boots the full event-driven stack — PJRT runtime,
+//! FreeKV engine, continuous-batching scheduler on its own engine
+//! thread — submits a batch of concurrent sessions through the
+//! `Submitter`, streams the first session's tokens as they are sampled,
+//! and reports per-token latency/throughput percentiles.
 //!
 //!   make artifacts && cargo run --release --example serve_batch -- \
 //!       --requests 12 --max-tokens 48 --max-batch 4
 
 use freekv::config::FreeKvParams;
 use freekv::coordinator::engine::{Engine, SampleParams};
+use freekv::coordinator::engine_loop::{EngineLoop, LoopConfig, SessionEvent};
 use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig};
 use freekv::runtime::Runtime;
 use freekv::util::cli::Args;
@@ -27,49 +30,79 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.usize_or("requests", 12);
     let max_tokens = args.usize_or("max-tokens", 48);
     let model = args.str_or("model", "tiny");
+    let scfg = SchedulerConfig {
+        max_batch: args.usize_or("max-batch", 4),
+        admit_below: args.usize_or("admit-below", 4),
+        ..Default::default()
+    };
 
-    let rt = Runtime::load(&artifacts)?;
-    let eng = Engine::new(rt, &model, FreeKvParams { tau: 0.9, ..Default::default() })?;
-    let mut sched = Scheduler::new(
-        eng,
-        SchedulerConfig {
-            max_batch: args.usize_or("max-batch", 4),
-            admit_below: args.usize_or("admit-below", 4),
-        },
-    );
+    let el = EngineLoop::spawn(LoopConfig::default(), move || {
+        let rt = Runtime::load(&artifacts)?;
+        let eng = Engine::new(rt, &model, FreeKvParams { tau: 0.9, ..Default::default() })?;
+        Ok(Scheduler::new(eng, scfg))
+    })?;
+    let sub = el.submitter();
 
-    println!("[serve_batch] model={model} requests={n_requests} max_tokens={max_tokens}");
+    println!("[serve_batch] requests={n_requests} max_tokens={max_tokens}");
     let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
         let text = PROMPTS[i % PROMPTS.len()];
-        let mut req = Request::from_text(i as u64 + 1, text, max_tokens);
+        let mut req = Request::from_text(0, text, max_tokens);
         req.sample = SampleParams { temperature: 0.8, top_p: 0.95, seed: i as u64 };
-        sched.submit(req);
+        handles.push(sub.submit(req)?);
     }
-    sched.drain()?;
+
+    // Stream the first session token-by-token (the other sessions decode
+    // in the same batches meanwhile), then collect the rest.
+    let mut first = None;
+    if let Some(h) = handles.first() {
+        print!("req {:>2} streams: ", h.id());
+        loop {
+            match h.next_event() {
+                Some(SessionEvent::Token { text, .. }) => print!("{}", text.escape_debug()),
+                Some(SessionEvent::Done(c)) => {
+                    println!();
+                    first = Some(c);
+                    break;
+                }
+                Some(SessionEvent::Error(e)) => anyhow::bail!("first session failed: {e}"),
+                None => anyhow::bail!("engine loop died"),
+            }
+        }
+    }
+    let mut completions: Vec<_> = first.into_iter().collect();
+    for h in handles.into_iter().skip(1) {
+        completions.push(h.wait()?);
+    }
     let wall = t0.elapsed().as_secs_f64();
 
     println!();
-    for c in sched.completions.iter().take(3) {
+    for c in completions.iter().take(3) {
         let preview: String = c.text.chars().take(60).collect();
-        println!("req {:>2}: {:?}", c.id, preview);
+        println!("req {:>2} [{}]: {:?}", c.id, c.finish_reason.as_str(), preview);
     }
     println!("...");
     println!();
     println!("== serving metrics ==");
-    println!("{}", sched.metrics.report());
+    println!("{}", sub.metrics_report()?);
+    let tokens_out: usize = completions.iter().map(|c| c.generated_tokens).sum();
     println!("wall time       : {:.2}s", wall);
     println!(
         "goodput         : {:.1} generated tok/s over the whole run",
-        sched.metrics.tokens_out as f64 / wall
+        tokens_out as f64 / wall
     );
-    let st = &sched.engine.stats;
-    println!("decode steps    : {} (batched)", st.steps);
+    let st = sub.engine_stats()?;
+    println!(
+        "decode steps    : {} ({} batched, widest batch {})",
+        st.steps, st.batched_steps, st.max_batch_lanes
+    );
     println!("corrections     : {} ({:.1}%)", st.corrections, st.correction_rate() * 100.0);
     println!("recalled pages  : {}", st.recalled_pages);
     println!(
         "phase breakdown : qkv {:.2}s attn {:.2}s select {:.2}s gather {:.2}s recall {:.2}s logits {:.2}s",
         st.qkv_secs, st.attn_secs, st.select_secs, st.gather_secs, st.recall_secs, st.logits_secs
     );
+    el.shutdown();
     Ok(())
 }

@@ -51,6 +51,11 @@ pub struct EngineStats {
     /// Peak number of jobs simultaneously in flight on the worker.
     pub max_queue_depth: u64,
     pub steps: u64,
+    /// Decode steps that carried ≥ 2 sequences (continuous batching
+    /// actually interleaving concurrent requests).
+    pub batched_steps: u64,
+    /// Largest number of sequences decoded together in one step.
+    pub max_batch_lanes: u64,
     pub prefills: u64,
     pub corrections: u64,
     pub correction_checks: u64,
@@ -77,6 +82,40 @@ impl EngineStats {
             self.recall_hidden_secs / total
         }
     }
+}
+
+/// The engine interface the scheduler drives. `Engine` is the real
+/// artifact-backed implementation; `coordinator::sim_backend::SimBackend`
+/// is an artifact-free stand-in for tests, benches, and `--sim` serving.
+///
+/// Contract: `prefill` fills the sequence's KV state for the prompt and
+/// returns next-token logits (the scheduler samples the first token);
+/// `decode_step` appends exactly one sampled token to every sequence in
+/// the batch; `retire_sequence` releases any engine-held resources of a
+/// sequence leaving mid-generation (the sequence's KV memory itself is
+/// freed when the `Sequence` drops).
+pub trait Backend {
+    fn model(&self) -> &ModelConfig;
+
+    fn new_sequence(
+        &self,
+        id: u64,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sample: SampleParams,
+    ) -> Sequence {
+        Sequence::new(id, self.model(), prompt, max_new, Layout::Hnd, sample)
+    }
+
+    fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>>;
+
+    fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()>;
+
+    /// Mid-flight retirement hook: reclaim in-flight transfer state so a
+    /// cancelled sequence strands nothing on background workers.
+    fn retire_sequence(&mut self, _seq: &mut Sequence) {}
+
+    fn stats(&self) -> &EngineStats;
 }
 
 /// Sampling parameters.
@@ -310,6 +349,10 @@ impl Engine {
         let t_step = Instant::now();
         let cfg = self.cfg.clone();
         let n = seqs.len();
+        self.stats.max_batch_lanes = self.stats.max_batch_lanes.max(n as u64);
+        if n > 1 {
+            self.stats.batched_steps += 1;
+        }
         let bucket = self
             .rt
             .manifest
@@ -728,6 +771,38 @@ impl Engine {
             self.decode_step(&mut batch)?;
         }
         Ok(())
+    }
+}
+
+impl Backend for Engine {
+    fn model(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn new_sequence(
+        &self,
+        id: u64,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sample: SampleParams,
+    ) -> Sequence {
+        Engine::new_sequence(self, id, prompt, max_new, sample)
+    }
+
+    fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>> {
+        Engine::prefill(self, seq)
+    }
+
+    fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+        Engine::decode_step(self, seqs)
+    }
+
+    fn retire_sequence(&mut self, seq: &mut Sequence) {
+        self.drain_sequence(seq);
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
     }
 }
 

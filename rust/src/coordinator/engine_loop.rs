@@ -1,0 +1,541 @@
+//! The event-driven serving front half: an engine thread that pumps
+//! [`Scheduler::tick`] continuously, plus the client-facing session API.
+//!
+//! The PJRT runtime is single-threaded by design (`Runtime` is `!Send`),
+//! so the engine — and therefore the scheduler that owns it — lives on
+//! one dedicated thread, constructed *on* that thread by the closure
+//! passed to [`EngineLoop::spawn`]. Everything else talks to it through
+//! channels:
+//!
+//! * [`Submitter`] (cloneable, `Send`) submits requests and asks for
+//!   metrics/engine stats. Admission is bounded: when `queue_cap`
+//!   sessions are already in flight, [`Submitter::submit`] returns
+//!   [`SubmitError::Busy`] immediately — the HTTP edge maps this to 429
+//!   instead of queueing unboundedly.
+//! * [`SessionHandle`] is the per-request side: a stream of
+//!   [`SessionEvent::Token`] as tokens are sampled, terminated by
+//!   `Done` or `Error`, plus [`SessionHandle::cancel`] which retires
+//!   the sequence mid-flight and releases its GPU slots and CPU pool
+//!   pages. Dropping the handle cancels implicitly: the loop notices the
+//!   dead channel on the next token and cancels the sequence.
+//!
+//! The loop blocks on the command channel while idle (no spinning) and
+//! drains commands between ticks while busy, so multiple in-flight
+//! requests genuinely share decode batches.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::{Backend, EngineStats};
+use crate::coordinator::scheduler::{Completion, Request, Scheduler, StepEvent};
+
+/// What a session's client receives, in order: zero or more `Token`s,
+/// then exactly one `Done` or `Error` (unless the engine loop shuts
+/// down first, which closes the channel).
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    Token { index: usize, token: i32, text: String },
+    Done(Completion),
+    Error(String),
+}
+
+enum Command {
+    Submit { req: Request, events: mpsc::Sender<SessionEvent>, arrived: Instant },
+    Cancel(u64),
+    Metrics(mpsc::Sender<String>),
+    Stats(mpsc::Sender<EngineStats>),
+    Shutdown,
+}
+
+/// Why a submission was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission queue full: `in_flight` sessions against `cap`.
+    /// Backpressure — retry later (HTTP 429).
+    Busy { in_flight: usize, cap: usize },
+    /// The engine loop has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy { in_flight, cap } => {
+                write!(f, "server busy: {} sessions in flight (cap {})", in_flight, cap)
+            }
+            SubmitError::Closed => write!(f, "engine loop is not running"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Terminal failure of a session wait.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionError {
+    /// The engine reported a per-request or global error.
+    Engine(String),
+    /// The engine loop went away before the session finished.
+    Disconnected,
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Engine(e) => write!(f, "engine error: {}", e),
+            SessionError::Disconnected => write!(f, "engine loop shut down mid-session"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// Engine-loop policy knobs.
+#[derive(Debug, Clone)]
+pub struct LoopConfig {
+    /// Max sessions in flight (queued + running) before `submit`
+    /// returns [`SubmitError::Busy`].
+    pub queue_cap: usize,
+}
+
+impl Default for LoopConfig {
+    fn default() -> Self {
+        LoopConfig { queue_cap: 64 }
+    }
+}
+
+/// Cloneable, thread-safe handle for submitting work to the engine
+/// loop. Every accepted submission gets a fresh request id.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: mpsc::Sender<Command>,
+    in_flight: Arc<AtomicUsize>,
+    next_id: Arc<AtomicU64>,
+    queue_cap: usize,
+}
+
+impl Submitter {
+    /// Submit a request (its `id` is replaced with a fresh one).
+    /// Returns immediately: `Busy` when the admission queue is full,
+    /// `Closed` when the loop is gone.
+    pub fn submit(&self, mut req: Request) -> Result<SessionHandle, SubmitError> {
+        let prev = self.in_flight.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.queue_cap {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            return Err(SubmitError::Busy { in_flight: prev, cap: self.queue_cap });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        let (tx, rx) = mpsc::channel();
+        let arrived = Instant::now();
+        if self.tx.send(Command::Submit { req, events: tx, arrived }).is_err() {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            return Err(SubmitError::Closed);
+        }
+        Ok(SessionHandle { id, events: rx, cmd: self.tx.clone() })
+    }
+
+    /// Convenience: submit a plain text prompt.
+    pub fn submit_text(
+        &self,
+        prompt: &str,
+        max_tokens: usize,
+    ) -> Result<SessionHandle, SubmitError> {
+        self.submit(Request::from_text(0, prompt, max_tokens))
+    }
+
+    /// Sessions currently queued or running (the admission gauge).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// One-line serving metrics report from the loop's scheduler.
+    pub fn metrics_report(&self) -> Result<String, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Command::Metrics(tx)).map_err(|_| SubmitError::Closed)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Snapshot of the engine's cumulative stats.
+    pub fn engine_stats(&self) -> Result<EngineStats, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Command::Stats(tx)).map_err(|_| SubmitError::Closed)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Ask the loop to stop. In-flight sessions are cancelled and their
+    /// event channels closed.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+    }
+}
+
+/// One client's view of an in-flight generation.
+pub struct SessionHandle {
+    id: u64,
+    events: mpsc::Receiver<SessionEvent>,
+    cmd: mpsc::Sender<Command>,
+}
+
+impl SessionHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Next event, blocking. `None` when the engine loop is gone.
+    pub fn next_event(&self) -> Option<SessionEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Next event with a timeout (lets callers interleave disconnect
+    /// polling with event consumption).
+    pub fn recv_timeout(&self, d: Duration) -> Result<SessionEvent, RecvTimeoutError> {
+        self.events.recv_timeout(d)
+    }
+
+    /// Cancel this session: the sequence is retired mid-flight and its
+    /// KV resources are released. A `Done` event with
+    /// `finish_reason == Cancelled` follows (if the session was still
+    /// alive).
+    pub fn cancel(&self) {
+        let _ = self.cmd.send(Command::Cancel(self.id));
+    }
+
+    /// Block until the session ends, discarding token events.
+    pub fn wait(self) -> Result<Completion, SessionError> {
+        loop {
+            match self.events.recv() {
+                Ok(SessionEvent::Token { .. }) => {}
+                Ok(SessionEvent::Done(c)) => return Ok(c),
+                Ok(SessionEvent::Error(e)) => return Err(SessionError::Engine(e)),
+                Err(_) => return Err(SessionError::Disconnected),
+            }
+        }
+    }
+}
+
+/// The engine thread: owns the scheduler (and through it the `!Send`
+/// engine), pumps ticks, and routes step events to session channels.
+pub struct EngineLoop {
+    submitter: Submitter,
+    handle: thread::JoinHandle<()>,
+}
+
+impl EngineLoop {
+    /// Spawn the engine thread. `make` runs *on* that thread (the
+    /// engine need not be `Send`); spawn blocks until construction
+    /// finishes and propagates its error if it fails.
+    pub fn spawn<B, F>(cfg: LoopConfig, make: F) -> Result<EngineLoop>
+    where
+        B: Backend + 'static,
+        F: FnOnce() -> Result<Scheduler<B>> + Send + 'static,
+    {
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let counter = in_flight.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = thread::Builder::new()
+            .name("freekv-engine".into())
+            .spawn(move || {
+                let mut sched = match make() {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                run_loop(&mut sched, cmd_rx, &counter);
+            })
+            .expect("spawn engine thread");
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(EngineLoop {
+                submitter: Submitter {
+                    tx: cmd_tx,
+                    in_flight,
+                    next_id: Arc::new(AtomicU64::new(1)),
+                    queue_cap: cfg.queue_cap.max(1),
+                },
+                handle,
+            }),
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                Err(anyhow!("engine startup failed: {}", e))
+            }
+            Err(_) => {
+                let _ = handle.join();
+                Err(anyhow!("engine thread died during startup"))
+            }
+        }
+    }
+
+    pub fn submitter(&self) -> Submitter {
+        self.submitter.clone()
+    }
+
+    /// Stop the loop and join the engine thread.
+    pub fn shutdown(self) {
+        self.submitter.shutdown();
+        let _ = self.handle.join();
+    }
+}
+
+struct Sessions {
+    channels: HashMap<u64, mpsc::Sender<SessionEvent>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl Sessions {
+    /// Remove a session and release its admission slot.
+    fn close(&mut self, id: u64) -> Option<mpsc::Sender<SessionEvent>> {
+        let tx = self.channels.remove(&id)?;
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        Some(tx)
+    }
+}
+
+fn run_loop<B: Backend>(
+    sched: &mut Scheduler<B>,
+    rx: mpsc::Receiver<Command>,
+    in_flight: &Arc<AtomicUsize>,
+) {
+    let mut sessions = Sessions { channels: HashMap::new(), in_flight: in_flight.clone() };
+    'outer: loop {
+        // Idle: block until the next command instead of spinning.
+        if sched.pending() == 0 {
+            match rx.recv() {
+                Ok(cmd) => {
+                    if !handle_command(sched, &mut sessions, cmd) {
+                        break 'outer;
+                    }
+                }
+                Err(_) => break 'outer, // every Submitter is gone
+            }
+        }
+        // Busy: drain whatever has arrived, then tick.
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    if !handle_command(sched, &mut sessions, cmd) {
+                        break 'outer;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if sched.pending() == 0 {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        if sched.pending() > 0 {
+            match sched.tick() {
+                Ok(events) => route_events(sched, &mut sessions, events),
+                Err(e) => {
+                    // Decode errors are engine-global: fail every live
+                    // session loudly and stop serving.
+                    let msg = format!("{e:#}");
+                    for id in sched.active_ids() {
+                        if let Some(tx) = sessions.close(id) {
+                            let _ = tx.send(SessionEvent::Error(msg.clone()));
+                        }
+                    }
+                    break 'outer;
+                }
+            }
+        }
+    }
+    // Shutdown: retire in-flight sequences so nothing strands on the
+    // recall worker, then drop the session channels (clients see EOF).
+    for id in sched.active_ids() {
+        sched.cancel(id);
+        let _ = sched.take_completion(id);
+        sessions.close(id);
+    }
+}
+
+/// Returns false when the loop should stop.
+fn handle_command<B: Backend>(
+    sched: &mut Scheduler<B>,
+    sessions: &mut Sessions,
+    cmd: Command,
+) -> bool {
+    match cmd {
+        Command::Submit { req, events, arrived } => {
+            sessions.channels.insert(req.id, events);
+            sched.submit_arrived(req, arrived);
+            true
+        }
+        Command::Cancel(id) => {
+            if sched.cancel(id) {
+                let done = sched.take_completion(id);
+                if let Some(tx) = sessions.close(id) {
+                    if let Some(c) = done {
+                        let _ = tx.send(SessionEvent::Done(c));
+                    }
+                }
+            }
+            true
+        }
+        Command::Metrics(reply) => {
+            let _ = reply.send(sched.metrics.report());
+            true
+        }
+        Command::Stats(reply) => {
+            let _ = reply.send(sched.engine.stats().clone());
+            true
+        }
+        Command::Shutdown => false,
+    }
+}
+
+fn route_events<B: Backend>(
+    sched: &mut Scheduler<B>,
+    sessions: &mut Sessions,
+    events: Vec<StepEvent>,
+) {
+    for ev in events {
+        match ev {
+            StepEvent::Token { id, index, token, text } => {
+                let dead = match sessions.channels.get(&id) {
+                    Some(tx) => tx.send(SessionEvent::Token { index, token, text }).is_err(),
+                    None => false,
+                };
+                if dead {
+                    // Client went away (handle dropped without cancel):
+                    // retire the sequence and reclaim the slot.
+                    sessions.close(id);
+                    sched.cancel(id);
+                    let _ = sched.take_completion(id);
+                }
+            }
+            StepEvent::Finished { id } => {
+                let done = sched.take_completion(id);
+                if let Some(tx) = sessions.close(id) {
+                    if let Some(c) = done {
+                        let _ = tx.send(SessionEvent::Done(c));
+                    }
+                }
+            }
+            StepEvent::Failed { id, error } => {
+                if let Some(tx) = sessions.close(id) {
+                    let _ = tx.send(SessionEvent::Error(error));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{FinishReason, SchedulerConfig};
+    use crate::coordinator::sim_backend::SimBackend;
+
+    fn spawn_sim(queue_cap: usize, step_delay_ms: u64) -> EngineLoop {
+        EngineLoop::spawn(LoopConfig { queue_cap }, move || {
+            let mut b = SimBackend::tiny();
+            b.step_delay = Duration::from_millis(step_delay_ms);
+            let cfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
+            Ok(Scheduler::new(b, cfg))
+        })
+        .expect("sim loop spawns")
+    }
+
+    #[test]
+    fn sessions_stream_tokens_then_done() {
+        let el = spawn_sim(8, 0);
+        let sub = el.submitter();
+        let h = sub.submit_text("engine loop test ", 6).unwrap();
+        let mut tokens = 0;
+        let done = loop {
+            match h.next_event().expect("loop alive") {
+                SessionEvent::Token { index, .. } => {
+                    assert_eq!(index, tokens);
+                    tokens += 1;
+                }
+                SessionEvent::Done(c) => break c,
+                SessionEvent::Error(e) => panic!("unexpected error: {}", e),
+            }
+        };
+        assert_eq!(tokens, 6);
+        assert_eq!(done.generated_tokens, 6);
+        assert_eq!(done.finish_reason, FinishReason::Length);
+        assert_eq!(sub.in_flight(), 0, "admission slot released");
+        let report = sub.metrics_report().unwrap();
+        assert!(report.contains("completed=1"), "{}", report);
+        el.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_closed() {
+        let el = spawn_sim(8, 0);
+        let sub = el.submitter();
+        el.shutdown();
+        assert!(matches!(sub.submit_text("x", 2), Err(SubmitError::Closed)));
+        assert!(sub.metrics_report().is_err());
+    }
+
+    #[test]
+    fn busy_when_queue_cap_reached() {
+        let el = spawn_sim(1, 30);
+        let sub = el.submitter();
+        let h = sub.submit_text("occupies the only slot ", 20).unwrap();
+        let err = sub.submit_text("rejected ", 2).unwrap_err();
+        assert!(matches!(err, SubmitError::Busy { cap: 1, .. }), "{:?}", err);
+        let c = h.wait().unwrap();
+        assert_eq!(c.generated_tokens, 20);
+        // slot released: next submit is admitted
+        let h2 = sub.submit_text("admitted now ", 2).unwrap();
+        assert!(h2.wait().is_ok());
+        el.shutdown();
+    }
+
+    #[test]
+    fn explicit_cancel_returns_cancelled_completion() {
+        let el = spawn_sim(4, 20);
+        let sub = el.submitter();
+        let h = sub.submit_text("long running request ", 500).unwrap();
+        // wait for the first token so the sequence is mid-flight
+        match h.next_event().expect("alive") {
+            SessionEvent::Token { .. } => {}
+            other => panic!("expected token, got {:?}", other),
+        }
+        h.cancel();
+        let c = loop {
+            match h.next_event().expect("alive") {
+                SessionEvent::Token { .. } => {}
+                SessionEvent::Done(c) => break c,
+                SessionEvent::Error(e) => panic!("unexpected error: {}", e),
+            }
+        };
+        assert_eq!(c.finish_reason, FinishReason::Cancelled);
+        assert!(c.generated_tokens < 500);
+        assert_eq!(sub.in_flight(), 0);
+        el.shutdown();
+    }
+
+    #[test]
+    fn dropped_handle_cancels_session() {
+        let el = spawn_sim(4, 10);
+        let sub = el.submitter();
+        let h = sub.submit_text("abandoned request ", 500).unwrap();
+        drop(h);
+        // the loop notices the dead channel on the next token
+        let t0 = std::time::Instant::now();
+        while sub.in_flight() != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "session never reclaimed");
+            thread::sleep(Duration::from_millis(10));
+        }
+        el.shutdown();
+    }
+}

@@ -1,14 +1,21 @@
-//! Serving metrics: TTFT / TPOT / end-to-end latency histograms and
-//! throughput counters, reported by the server and the bench drivers.
+//! Serving metrics, measured per token: TTFT (arrival → first sampled
+//! token, queueing included), inter-token latency (ITL), TPOT, and
+//! end-to-end latency histograms plus throughput counters. Reported by
+//! the `/metrics` endpoint, the load-test driver, and the benches.
 
 use std::time::Instant;
 
 use crate::util::stats::Histogram;
 
+/// Per-request timestamps, updated as the scheduler emits tokens.
 #[derive(Debug, Clone)]
 pub struct RequestTiming {
     pub arrived: Instant,
     pub prefill_done: Option<Instant>,
+    /// When the first output token was sampled (TTFT endpoint).
+    pub first_token: Option<Instant>,
+    /// When the most recent output token was sampled (ITL base).
+    pub last_token: Option<Instant>,
     pub finished: Option<Instant>,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
@@ -19,6 +26,8 @@ impl RequestTiming {
         RequestTiming {
             arrived: Instant::now(),
             prefill_done: None,
+            first_token: None,
+            last_token: None,
             finished: None,
             prompt_tokens,
             generated_tokens: 0,
@@ -26,7 +35,9 @@ impl RequestTiming {
     }
 
     pub fn ttft(&self) -> Option<f64> {
-        self.prefill_done.map(|t| (t - self.arrived).as_secs_f64())
+        self.first_token
+            .or(self.prefill_done)
+            .map(|t| (t - self.arrived).as_secs_f64())
     }
 
     pub fn e2e(&self) -> Option<f64> {
@@ -35,7 +46,8 @@ impl RequestTiming {
 
     /// time-per-output-token after the first.
     pub fn tpot(&self) -> Option<f64> {
-        match (self.prefill_done, self.finished) {
+        let start = self.first_token.or(self.prefill_done);
+        match (start, self.finished) {
             (Some(p), Some(f)) if self.generated_tokens > 1 => {
                 Some((f - p).as_secs_f64() / (self.generated_tokens - 1) as f64)
             }
@@ -48,10 +60,15 @@ impl RequestTiming {
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub ttft: Histogram,
+    /// Inter-token latency: gap between consecutive sampled tokens of
+    /// one request (the streaming user's perceived cadence).
+    pub itl: Histogram,
     pub tpot: Histogram,
     pub e2e: Histogram,
     pub requests: u64,
     pub completed: u64,
+    pub cancelled: u64,
+    pub failed: u64,
     pub tokens_in: u64,
     pub tokens_out: u64,
     pub started: Option<Instant>,
@@ -67,18 +84,38 @@ impl Metrics {
         self.tokens_in += prompt_tokens as u64;
     }
 
+    /// Record one sampled token: updates the request's timestamps and
+    /// the TTFT (first token) / ITL (subsequent tokens) histograms.
+    pub fn on_token(&mut self, t: &mut RequestTiming) {
+        let now = Instant::now();
+        match t.last_token {
+            None => {
+                t.first_token = Some(now);
+                self.ttft.record((now - t.arrived).as_secs_f64());
+            }
+            Some(prev) => self.itl.record((now - prev).as_secs_f64()),
+        }
+        t.last_token = Some(now);
+        t.generated_tokens += 1;
+        self.tokens_out += 1;
+    }
+
     pub fn on_complete(&mut self, t: &RequestTiming) {
         self.completed += 1;
-        self.tokens_out += t.generated_tokens as u64;
-        if let Some(x) = t.ttft() {
-            self.ttft.record(x);
-        }
         if let Some(x) = t.tpot() {
             self.tpot.record(x);
         }
         if let Some(x) = t.e2e() {
             self.e2e.record(x);
         }
+    }
+
+    pub fn on_cancelled(&mut self) {
+        self.cancelled += 1;
+    }
+
+    pub fn on_failed(&mut self) {
+        self.failed += 1;
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
@@ -90,16 +127,24 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} completed={} tokens_out={} throughput={:.1} tok/s \
-             ttft p50={:.1}ms p99={:.1}ms tpot p50={:.1}ms p99={:.1}ms e2e p50={:.2}s",
+            "requests={} completed={} cancelled={} failed={} tokens_out={} \
+             throughput={:.1} tok/s \
+             ttft p50={:.1}ms p95={:.1}ms p99={:.1}ms \
+             itl p50={:.1}ms p95={:.1}ms p99={:.1}ms \
+             tpot p50={:.1}ms e2e p50={:.2}s",
             self.requests,
             self.completed,
+            self.cancelled,
+            self.failed,
             self.tokens_out,
             self.throughput_tok_s(),
             self.ttft.percentile(50.0) * 1e3,
+            self.ttft.percentile(95.0) * 1e3,
             self.ttft.percentile(99.0) * 1e3,
+            self.itl.percentile(50.0) * 1e3,
+            self.itl.percentile(95.0) * 1e3,
+            self.itl.percentile(99.0) * 1e3,
             self.tpot.percentile(50.0) * 1e3,
-            self.tpot.percentile(99.0) * 1e3,
             self.e2e.percentile(50.0),
         )
     }
@@ -114,7 +159,7 @@ mod tests {
     fn timing_math() {
         let mut t = RequestTiming::new(10);
         let base = t.arrived;
-        t.prefill_done = Some(base + Duration::from_millis(100));
+        t.first_token = Some(base + Duration::from_millis(100));
         t.finished = Some(base + Duration::from_millis(1100));
         t.generated_tokens = 11;
         assert!((t.ttft().unwrap() - 0.1).abs() < 1e-9);
@@ -123,16 +168,43 @@ mod tests {
     }
 
     #[test]
-    fn metrics_aggregate() {
+    fn ttft_falls_back_to_prefill_done() {
+        let mut t = RequestTiming::new(4);
+        let base = t.arrived;
+        t.prefill_done = Some(base + Duration::from_millis(50));
+        assert!((t.ttft().unwrap() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_token_accounting() {
         let mut m = Metrics::new();
         m.on_arrival(5);
         let mut t = RequestTiming::new(5);
-        t.prefill_done = Some(t.arrived);
-        t.finished = Some(t.arrived + std::time::Duration::from_millis(50));
-        t.generated_tokens = 6;
+        for _ in 0..6 {
+            m.on_token(&mut t);
+        }
+        t.finished = Some(Instant::now());
         m.on_complete(&t);
         assert_eq!(m.completed, 1);
         assert_eq!(m.tokens_out, 6);
-        assert!(m.report().contains("completed=1"));
+        assert_eq!(t.generated_tokens, 6);
+        assert_eq!(m.ttft.count(), 1);
+        assert_eq!(m.itl.count(), 5);
+        assert!(t.first_token.is_some() && t.last_token.is_some());
+        let r = m.report();
+        assert!(r.contains("completed=1"), "{}", r);
+        assert!(r.contains("itl p50="), "{}", r);
+    }
+
+    #[test]
+    fn cancelled_and_failed_counters() {
+        let mut m = Metrics::new();
+        m.on_arrival(1);
+        m.on_arrival(1);
+        m.on_cancelled();
+        m.on_failed();
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.failed, 1);
+        assert!(m.report().contains("cancelled=1"));
     }
 }

@@ -1,12 +1,24 @@
-//! Layer-3 coordinator: the real serving runtime. Engine (decode pipeline
-//! over AOT artifacts with speculative retrieval + correction), byte
-//! tokenizer, serving metrics, and the continuous-batching scheduler.
+//! Layer-3 coordinator: the real serving runtime, event-driven end to
+//! end. The [`engine::Engine`] executes the decode pipeline over AOT
+//! artifacts (speculative retrieval + correction); the
+//! [`scheduler::Scheduler`] is the pure continuous-batching policy core
+//! that reports every sampled token as a [`scheduler::StepEvent`]; the
+//! [`engine_loop::EngineLoop`] owns the engine thread and fans those
+//! events out to per-session channels, giving clients a cloneable
+//! [`engine_loop::Submitter`] with bounded admission and a
+//! [`engine_loop::SessionHandle`] with streaming events and mid-flight
+//! cancellation. [`sim_backend::SimBackend`] swaps in for the engine
+//! where artifacts/PJRT are unavailable.
 
 pub mod engine;
+pub mod engine_loop;
 pub mod metrics;
 pub mod scheduler;
+pub mod sim_backend;
 pub mod tokenizer;
 
-pub use engine::{Engine, EngineStats, SampleParams, Sequence};
+pub use engine::{Backend, Engine, EngineStats, SampleParams, Sequence};
+pub use engine_loop::{EngineLoop, LoopConfig, SessionEvent, SessionHandle, SubmitError, Submitter};
 pub use metrics::{Metrics, RequestTiming};
-pub use scheduler::{Completion, Request, Scheduler, SchedulerConfig};
+pub use scheduler::{Completion, FinishReason, Request, Scheduler, SchedulerConfig, StepEvent};
+pub use sim_backend::SimBackend;

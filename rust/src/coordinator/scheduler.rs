@@ -1,23 +1,40 @@
-//! Continuous-batching scheduler: admits queued requests via prefill
-//! (one at a time, like vLLM's default), then interleaves batched decode
-//! steps over all running sequences, padding to the compiled batch
-//! buckets. Prefill-priority keeps TTFT low; decode keeps throughput up.
+//! Continuous-batching scheduler: the pure policy/state core of the
+//! serving stack. It owns the request queue and running set, admits
+//! queued requests via prefill (bursting when the engine is idle),
+//! interleaves batched decode steps, and reports everything that
+//! happened in a tick as [`StepEvent`]s — per-token emission included —
+//! so callers (the [`EngineLoop`](crate::coordinator::engine_loop), the
+//! load-test driver, tests) can route tokens to sessions as they are
+//! sampled instead of waiting for completions.
+//!
+//! The scheduler never blocks and never touches the network; threading
+//! and session channels live in `coordinator::engine_loop`. Completions
+//! are handed out exactly once via [`Scheduler::take_completion`] (or
+//! dropped after a bounded backlog), so nothing accumulates for the
+//! lifetime of the server.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::engine::{sample_token, Engine, SampleParams, Sequence};
+use crate::coordinator::engine::{sample_token, Backend, Engine, SampleParams, Sequence};
 use crate::coordinator::metrics::{Metrics, RequestTiming};
 use crate::coordinator::tokenizer;
 
 /// A queued generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Caller-chosen id; must be unique among in-flight requests (the
+    /// `Submitter` assigns fresh ids automatically).
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub sample: SampleParams,
+    /// Stop strings: generation finishes when the decoded output
+    /// contains any of them; the completion text is truncated at the
+    /// first match.
+    pub stop: Vec<String>,
 }
 
 impl Request {
@@ -27,6 +44,31 @@ impl Request {
             prompt: tokenizer::encode(text),
             max_new_tokens: max_new,
             sample: SampleParams::greedy(),
+            stop: Vec::new(),
+        }
+    }
+}
+
+/// Why a request stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// hit its `max_new_tokens` budget.
+    Length,
+    /// sampled the EOS token.
+    Eos,
+    /// matched a stop string.
+    Stop,
+    /// cancelled by the client (disconnect or explicit cancel).
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Eos => "eos",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
         }
     }
 }
@@ -39,11 +81,48 @@ pub struct Completion {
     pub text: String,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
+    pub finish_reason: FinishReason,
+}
+
+/// What happened during one [`Scheduler::tick`], in order. Token events
+/// are emitted the tick the token is sampled (prefill's first token
+/// included), which is what makes streaming and per-token latency
+/// metrics possible.
+#[derive(Debug, Clone)]
+pub enum StepEvent {
+    /// One newly sampled token for request `id`. `text` is the decoded
+    /// delta released so far — empty for special tokens and while a
+    /// suffix is held back pending a stop-string decision; concatenated
+    /// deltas always equal the completion text.
+    Token { id: u64, index: usize, token: i32, text: String },
+    /// Request `id` finished; its completion is waiting in
+    /// [`Scheduler::take_completion`].
+    Finished { id: u64 },
+    /// Admission failed for request `id` (e.g. the prompt exceeds the
+    /// compiled prefill buckets). Per-request: other sequences continue.
+    Failed { id: u64, error: String },
+}
+
+struct Queued {
+    req: Request,
+    arrived: Instant,
 }
 
 struct Running {
     seq: Sequence,
     timing: RequestTiming,
+    /// Decoded output accumulated per token (stop-string window and the
+    /// completion text).
+    text: String,
+    stop: Vec<String>,
+    /// Output tokens already reported as [`StepEvent::Token`].
+    emitted: usize,
+    /// Bytes of `text` already released in `Token` events. Trails
+    /// `text.len()` by the longest suffix that could still become a
+    /// stop-string match, so streamed deltas concatenate exactly to the
+    /// (possibly stop-truncated) completion text.
+    sent: usize,
+    stop_hit: bool,
 }
 
 /// Scheduler policy knobs.
@@ -53,114 +132,583 @@ pub struct SchedulerConfig {
     pub max_batch: usize,
     /// admit new prefills only when the running set is below this.
     pub admit_below: usize,
+    /// max unclaimed completions retained for `take_completion` before
+    /// the oldest are dropped (leak guard for callers that never claim).
+    pub completion_backlog: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 4, admit_below: 4 }
+        SchedulerConfig { max_batch: 4, admit_below: 4, completion_backlog: 256 }
     }
 }
 
-pub struct Scheduler {
-    pub engine: Engine,
+pub struct Scheduler<B: Backend = Engine> {
+    pub engine: B,
     pub cfg: SchedulerConfig,
-    queue: VecDeque<Request>,
+    queue: VecDeque<Queued>,
     running: Vec<Running>,
     pub metrics: Metrics,
-    pub completions: Vec<Completion>,
+    finished: HashMap<u64, Completion>,
+    finished_order: VecDeque<u64>,
 }
 
-impl Scheduler {
-    pub fn new(engine: Engine, cfg: SchedulerConfig) -> Scheduler {
+impl<B: Backend> Scheduler<B> {
+    pub fn new(engine: B, cfg: SchedulerConfig) -> Scheduler<B> {
         Scheduler {
             engine,
             cfg,
             queue: VecDeque::new(),
             running: Vec::new(),
             metrics: Metrics::new(),
-            completions: Vec::new(),
+            finished: HashMap::new(),
+            finished_order: VecDeque::new(),
         }
     }
 
     pub fn submit(&mut self, req: Request) {
+        self.submit_arrived(req, Instant::now());
+    }
+
+    /// Submit with an externally measured arrival timestamp — the
+    /// engine loop stamps arrival at the `Submitter` call site so TTFT
+    /// includes the command-channel wait, not just queue time.
+    pub fn submit_arrived(&mut self, req: Request, arrived: Instant) {
         self.metrics.on_arrival(req.prompt.len());
-        self.queue.push_back(req);
+        self.queue.push_back(Queued { req, arrived });
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.running.len()
     }
 
-    /// One scheduling iteration: admit (prefill) then one decode step.
-    /// Returns true if any work was done.
-    pub fn tick(&mut self) -> Result<bool> {
-        let mut worked = false;
+    pub fn queued_len(&self) -> usize {
+        self.queue.len()
+    }
 
-        // ---- admission: prefill-priority, one per tick ----
-        if self.running.len() < self.cfg.admit_below {
-            if let Some(req) = self.queue.pop_front() {
-                let mut timing = RequestTiming::new(req.prompt.len());
-                let mut seq = self.engine.new_sequence(
-                    req.id,
-                    req.prompt,
-                    req.max_new_tokens,
-                    req.sample.clone(),
-                );
-                seq.eos = Some(tokenizer::EOS);
-                let lg = self.engine.prefill(&mut seq)?;
-                let params = seq.sample.clone();
-                let tok = sample_token(&lg, &params, &mut seq.rng);
-                seq.tokens.push(tok);
-                if Some(tok) == seq.eos {
-                    seq.finished = true;
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Ids of every queued or running request.
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.queue
+            .iter()
+            .map(|q| q.req.id)
+            .chain(self.running.iter().map(|r| r.seq.id))
+            .collect()
+    }
+
+    /// Bytes of KV state (GPU-resident + CPU pool) held by running
+    /// sequences — drops back to zero when they finish or are cancelled.
+    pub fn running_kv_bytes(&self) -> usize {
+        self.running.iter().map(|r| r.seq.kv.gpu_bytes() + r.seq.kv.cpu_bytes()).sum()
+    }
+
+    /// One scheduling iteration: admission (prefill), one batched decode
+    /// step, then retirement of finished sequences. Returns the tick's
+    /// events in emission order. Decode errors are engine-global and
+    /// propagate; admission errors are per-request `Failed` events.
+    pub fn tick(&mut self) -> Result<Vec<StepEvent>> {
+        let mut events = Vec::new();
+        self.admit(&mut events);
+        self.decode(&mut events)?;
+        self.retire(&mut events);
+        Ok(events)
+    }
+
+    /// Admission: prefill-priority. One prefill per tick while decode is
+    /// in flight (keeps running sequences' ITL steady), bursting up to
+    /// `admit_below` when the running set is empty so a queued backlog
+    /// doesn't pay one decode step of TTFT per request.
+    fn admit(&mut self, events: &mut Vec<StepEvent>) {
+        let burst = if self.running.is_empty() { self.cfg.admit_below } else { 1 };
+        let mut admitted = 0;
+        while admitted < burst && self.running.len() < self.cfg.admit_below {
+            let Some(q) = self.queue.pop_front() else { break };
+            admitted += 1;
+            let id = q.req.id;
+            if let Err(e) = self.prefill_one(q, events) {
+                self.metrics.on_failed();
+                events.push(StepEvent::Failed { id, error: format!("{e:#}") });
+            }
+        }
+    }
+
+    fn prefill_one(&mut self, q: Queued, events: &mut Vec<StepEvent>) -> Result<()> {
+        let mut timing = RequestTiming::new(q.req.prompt.len());
+        timing.arrived = q.arrived; // TTFT includes queueing delay
+        // Defensive cap: one hostile max_tokens must not decode past the
+        // model context and poison the shared engine's compiled buckets.
+        let budget =
+            self.engine.model().max_context.saturating_sub(q.req.prompt.len()).max(1);
+        let max_new = q.req.max_new_tokens.min(budget);
+        let mut seq = self.engine.new_sequence(
+            q.req.id,
+            q.req.prompt,
+            max_new,
+            q.req.sample.clone(),
+        );
+        seq.eos = Some(tokenizer::EOS);
+        let lg = self.engine.prefill(&mut seq)?;
+        let params = seq.sample.clone();
+        let tok = sample_token(&lg, &params, &mut seq.rng);
+        seq.tokens.push(tok);
+        if Some(tok) == seq.eos {
+            seq.finished = true;
+        }
+        timing.prefill_done = Some(Instant::now());
+        let mut r = Running {
+            seq,
+            timing,
+            text: String::new(),
+            stop: q.req.stop,
+            emitted: 0,
+            sent: 0,
+            stop_hit: false,
+        };
+        Self::emit_new_tokens(&mut self.metrics, &mut r, events);
+        self.running.push(r);
+        Ok(())
+    }
+
+    fn decode(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
+        if self.running.is_empty() {
+            return Ok(());
+        }
+        let limit = self.cfg.max_batch.min(self.running.len());
+        {
+            // Finished lanes (EOS at prefill, stop hit) must not decode
+            // another token — the engine contract skips them here.
+            let mut batch: Vec<&mut Sequence> = self.running[..limit]
+                .iter_mut()
+                .map(|r| &mut r.seq)
+                .filter(|s| !s.done())
+                .collect();
+            if batch.is_empty() {
+                return Ok(());
+            }
+            self.engine.decode_step(&mut batch)?;
+        }
+        for r in self.running[..limit].iter_mut() {
+            Self::emit_new_tokens(&mut self.metrics, r, events);
+        }
+        Ok(())
+    }
+
+    /// Report every not-yet-emitted output token of `r`: record per-token
+    /// metrics, append to the text accumulator, check stop strings, and
+    /// push one `Token` event per token. A suffix that could still grow
+    /// into a stop match is held back, so the concatenated event deltas
+    /// always equal the final (stop-truncated) completion text; the held
+    /// text flushes as soon as the match becomes impossible or the
+    /// sequence finishes.
+    fn emit_new_tokens(metrics: &mut Metrics, r: &mut Running, events: &mut Vec<StepEvent>) {
+        while r.emitted < r.seq.generated().len() {
+            let idx = r.emitted;
+            let tok = r.seq.tokens[r.seq.prompt_len + idx];
+            r.emitted += 1;
+            metrics.on_token(&mut r.timing);
+            let delta = tokenizer::decode(&[tok]);
+            let old_len = r.text.len();
+            r.text.push_str(&delta);
+            if !r.stop_hit {
+                // A new match must end inside the delta, so only the
+                // tail window can contain one (keeps this O(output)).
+                let max_stop = r.stop.iter().map(|s| s.len()).max().unwrap_or(0);
+                let scan_from = old_len.saturating_sub(max_stop.saturating_sub(1));
+                if let Some(pos) = find_stop(&r.text, &r.stop, scan_from) {
+                    r.stop_hit = true;
+                    r.seq.finished = true;
+                    r.text.truncate(pos);
                 }
-                timing.prefill_done = Some(std::time::Instant::now());
-                timing.generated_tokens = 1;
-                self.running.push(Running { seq, timing });
-                worked = true;
             }
+            let boundary = if r.stop_hit || r.seq.done() {
+                r.text.len()
+            } else {
+                r.text.len() - stop_holdback(&r.text, &r.stop)
+            };
+            let emit = if boundary > r.sent {
+                let s = r.text[r.sent..boundary].to_string();
+                r.sent = boundary;
+                s
+            } else {
+                String::new()
+            };
+            events.push(StepEvent::Token { id: r.seq.id, index: idx, token: tok, text: emit });
         }
+    }
 
-        // ---- one batched decode step over running sequences ----
-        if !self.running.is_empty() {
-            let limit = self.cfg.max_batch.min(self.running.len());
-            {
-                let mut batch: Vec<&mut Sequence> =
-                    self.running[..limit].iter_mut().map(|r| &mut r.seq).collect();
-                self.engine.decode_step(&mut batch)?;
-            }
-            for r in &mut self.running[..limit] {
-                r.timing.generated_tokens = r.seq.generated().len();
-            }
-            worked = true;
+    fn retire(&mut self, events: &mut Vec<StepEvent>) {
+        if self.running.iter().all(|r| !r.seq.done()) {
+            return;
         }
-
-        // ---- retire finished sequences ----
         let mut still = Vec::with_capacity(self.running.len());
         for mut r in self.running.drain(..) {
             if r.seq.done() {
-                r.timing.finished = Some(std::time::Instant::now());
+                r.timing.finished = Some(Instant::now());
                 self.metrics.on_complete(&r.timing);
-                self.completions.push(Completion {
-                    id: r.seq.id,
-                    text: tokenizer::decode(r.seq.generated()),
+                let reason = if r.stop_hit {
+                    FinishReason::Stop
+                } else if r.seq.finished {
+                    FinishReason::Eos
+                } else {
+                    FinishReason::Length
+                };
+                let id = r.seq.id;
+                let c = Completion {
+                    id,
+                    text: r.text,
                     tokens: r.seq.tokens.clone(),
                     prompt_tokens: r.seq.prompt_len,
                     generated_tokens: r.seq.generated().len(),
-                });
+                    finish_reason: reason,
+                };
+                Self::store_completion(&mut self.finished, &mut self.finished_order, &self.cfg, c);
+                events.push(StepEvent::Finished { id });
             } else {
                 still.push(r);
             }
         }
         self.running = still;
-        Ok(worked)
     }
 
-    /// Run until every queued request completes.
+    fn store_completion(
+        finished: &mut HashMap<u64, Completion>,
+        order: &mut VecDeque<u64>,
+        cfg: &SchedulerConfig,
+        c: Completion,
+    ) {
+        let id = c.id;
+        if finished.insert(id, c).is_none() {
+            order.push_back(id);
+        }
+        while order.len() > cfg.completion_backlog.max(1) {
+            if let Some(old) = order.pop_front() {
+                finished.remove(&old);
+            }
+        }
+    }
+
+    /// Claim a finished request's completion. Each completion can be
+    /// taken exactly once; unclaimed ones are dropped after
+    /// `completion_backlog` newer completions.
+    pub fn take_completion(&mut self, id: u64) -> Option<Completion> {
+        let c = self.finished.remove(&id)?;
+        if let Some(i) = self.finished_order.iter().position(|&x| x == id) {
+            self.finished_order.remove(i);
+        }
+        Some(c)
+    }
+
+    /// Cancel a queued or running request mid-flight: retires the
+    /// sequence through the engine (reclaiming any in-flight transfer
+    /// state) and releases its KV slots and CPU pool pages by dropping
+    /// the sequence. A `Cancelled` completion with the tokens generated
+    /// so far is left for `take_completion`. Returns false if `id` is
+    /// not in flight.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(i) = self.queue.iter().position(|q| q.req.id == id) {
+            let q = self.queue.remove(i).expect("index from position");
+            self.metrics.on_cancelled();
+            let c = Completion {
+                id,
+                prompt_tokens: q.req.prompt.len(),
+                tokens: q.req.prompt,
+                text: String::new(),
+                generated_tokens: 0,
+                finish_reason: FinishReason::Cancelled,
+            };
+            Self::store_completion(&mut self.finished, &mut self.finished_order, &self.cfg, c);
+            return true;
+        }
+        if let Some(i) = self.running.iter().position(|r| r.seq.id == id) {
+            let mut r = self.running.remove(i);
+            self.engine.retire_sequence(&mut r.seq);
+            self.metrics.on_cancelled();
+            let c = Completion {
+                id,
+                text: r.text,
+                tokens: r.seq.tokens.clone(),
+                prompt_tokens: r.seq.prompt_len,
+                generated_tokens: r.seq.generated().len(),
+                finish_reason: FinishReason::Cancelled,
+            };
+            Self::store_completion(&mut self.finished, &mut self.finished_order, &self.cfg, c);
+            return true;
+        }
+        false
+    }
+
+    /// Run until every queued request completes. Completions stay
+    /// claimable via [`Scheduler::take_completion`] (bounded backlog).
     pub fn drain(&mut self) -> Result<()> {
         while self.pending() > 0 {
             self.tick()?;
         }
         Ok(())
+    }
+}
+
+/// Earliest match position of any stop string in `text`, scanning only
+/// from `scan_from` (clamped back to a char boundary).
+fn find_stop(text: &str, stops: &[String], scan_from: usize) -> Option<usize> {
+    let mut from = scan_from.min(text.len());
+    while from > 0 && !text.is_char_boundary(from) {
+        from -= 1;
+    }
+    stops
+        .iter()
+        .filter(|s| !s.is_empty())
+        .filter_map(|s| text[from..].find(s.as_str()).map(|p| from + p))
+        .min()
+}
+
+/// Longest proper prefix of any stop string that `text` ends with —
+/// the byte count a streaming emitter must hold back because the next
+/// token may complete the stop.
+fn stop_holdback(text: &str, stops: &[String]) -> usize {
+    let mut hold = 0;
+    for s in stops {
+        for (k, _) in s.char_indices().skip(1) {
+            if k > hold && text.ends_with(&s[..k]) {
+                hold = k;
+            }
+        }
+    }
+    hold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sim_backend::{sim_next_token, SimBackend};
+
+    fn sim_sched(cfg: SchedulerConfig) -> Scheduler<SimBackend> {
+        Scheduler::new(SimBackend::tiny(), cfg)
+    }
+
+    fn count_tokens(events: &[StepEvent]) -> usize {
+        events.iter().filter(|e| matches!(e, StepEvent::Token { .. })).count()
+    }
+
+    #[test]
+    fn events_and_completions_per_request() {
+        let mut s = sim_sched(SchedulerConfig::default());
+        s.submit(Request::from_text(1, "alpha ", 5));
+        s.submit(Request::from_text(2, "beta ", 3));
+        let mut tokens = 0;
+        let mut done = Vec::new();
+        while s.pending() > 0 {
+            for ev in s.tick().unwrap() {
+                match ev {
+                    StepEvent::Token { .. } => tokens += 1,
+                    StepEvent::Finished { id } => done.push(id),
+                    StepEvent::Failed { id, error } => panic!("req {} failed: {}", id, error),
+                }
+            }
+        }
+        assert_eq!(tokens, 5 + 3);
+        done.sort_unstable();
+        assert_eq!(done, vec![1, 2]);
+        let c1 = s.take_completion(1).unwrap();
+        assert_eq!(c1.generated_tokens, 5);
+        assert_eq!(c1.finish_reason, FinishReason::Length);
+        assert_eq!(c1.text.len(), 5, "printable sim tokens decode 1:1");
+        assert!(s.take_completion(1).is_none(), "completions are take-once");
+        assert!(s.take_completion(2).is_some());
+        assert_eq!(s.metrics.completed, 2);
+        assert_eq!(s.metrics.tokens_out, 8);
+        assert_eq!(s.metrics.ttft.count(), 2);
+        assert_eq!(s.metrics.itl.count(), 8 - 2);
+    }
+
+    #[test]
+    fn idle_burst_admission_vs_one_per_tick() {
+        let cfg = SchedulerConfig { max_batch: 4, admit_below: 4, ..Default::default() };
+        let mut s = sim_sched(cfg);
+        for i in 1..=2 {
+            s.submit(Request::from_text(i, "queued burst ", 50));
+        }
+        // running set empty + deep queue: one tick admits both
+        let ev = s.tick().unwrap();
+        assert_eq!(s.running_len(), 2, "idle burst admits up to admit_below");
+        assert!(count_tokens(&ev) >= 2, "each admitted request got its first token");
+        // decode in flight: admission throttles back to one per tick
+        s.submit(Request::from_text(3, "late ", 50));
+        s.submit(Request::from_text(4, "later ", 50));
+        s.tick().unwrap();
+        assert_eq!(s.running_len(), 3, "one admission per tick while decoding");
+        s.tick().unwrap();
+        assert_eq!(s.running_len(), 4);
+    }
+
+    #[test]
+    fn cancel_running_frees_kv_and_leaves_cancelled_completion() {
+        let mut s = sim_sched(SchedulerConfig::default());
+        s.submit(Request::from_text(7, "cancel me ", 100));
+        s.submit(Request::from_text(8, "keep me ", 10));
+        for _ in 0..3 {
+            s.tick().unwrap();
+        }
+        assert_eq!(s.running_len(), 2);
+        let bytes_two = s.running_kv_bytes();
+        assert!(bytes_two > 0);
+        assert!(s.cancel(7));
+        assert_eq!(s.running_len(), 1);
+        assert!(s.running_kv_bytes() < bytes_two, "cancelled sequence's KV released");
+        let c = s.take_completion(7).unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Cancelled);
+        assert!(c.generated_tokens > 0, "tokens generated before cancel are kept");
+        assert!(!s.cancel(7), "already gone");
+        assert!(!s.cancel(999));
+        s.drain().unwrap();
+        assert_eq!(s.running_kv_bytes(), 0);
+        assert_eq!(s.take_completion(8).unwrap().finish_reason, FinishReason::Length);
+        assert_eq!(s.metrics.cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_queued_request() {
+        let cfg = SchedulerConfig { admit_below: 1, ..Default::default() };
+        let mut s = sim_sched(cfg);
+        s.submit(Request::from_text(1, "first ", 4));
+        s.submit(Request::from_text(2, "second ", 4));
+        s.tick().unwrap();
+        assert_eq!(s.queued_len(), 1);
+        assert!(s.cancel(2));
+        assert_eq!(s.queued_len(), 0);
+        let c = s.take_completion(2).unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Cancelled);
+        assert_eq!(c.generated_tokens, 0);
+        s.drain().unwrap();
+        assert!(s.take_completion(1).is_some());
+    }
+
+    #[test]
+    fn stop_string_truncates_text_and_stream_agrees() {
+        // Predict the sim stream from the prompt's last token, pick a
+        // substring as the stop, and check truncation + streamed text.
+        let prompt = "stop test ";
+        let mut last = *tokenizer::encode(prompt).last().unwrap();
+        let mut expected = String::new();
+        for _ in 0..20 {
+            last = sim_next_token(last);
+            expected.push(last as u8 as char);
+        }
+        let stop = expected[6..9].to_string();
+        let cut = expected.find(&stop).unwrap();
+
+        let mut s = sim_sched(SchedulerConfig::default());
+        let mut req = Request::from_text(1, prompt, 20);
+        req.stop = vec![stop];
+        s.submit(req);
+        let mut streamed = String::new();
+        while s.pending() > 0 {
+            for ev in s.tick().unwrap() {
+                if let StepEvent::Token { text, .. } = ev {
+                    streamed.push_str(&text);
+                }
+            }
+        }
+        let c = s.take_completion(1).unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Stop);
+        assert_eq!(c.text, expected[..cut].to_string());
+        assert_eq!(streamed, c.text, "streamed deltas equal completion text");
+        assert!(c.generated_tokens < 20, "stopped before the length budget");
+    }
+
+    #[test]
+    fn holdback_releases_when_the_stop_match_fails() {
+        // A stop whose first char appears in the stream (but never the
+        // full stop) must not eat output: held-back bytes are released
+        // once the match becomes impossible, and everything flushes by
+        // the time the request finishes.
+        let prompt = "holdback ";
+        let mut last = *tokenizer::encode(prompt).last().unwrap();
+        let mut expected = String::new();
+        for _ in 0..12 {
+            last = sim_next_token(last);
+            expected.push(last as u8 as char);
+        }
+        // first char of the stream + a char that never follows it
+        let first = expected.chars().next().unwrap();
+        let never = (32..127u8)
+            .map(|b| b as char)
+            .find(|&c| !expected.contains(&format!("{}{}", first, c)))
+            .expect("some 2-gram is absent from 12 chars");
+        let stop = format!("{}{}", first, never);
+        assert!(!expected.contains(&stop));
+
+        let mut s = sim_sched(SchedulerConfig::default());
+        let mut req = Request::from_text(1, prompt, 12);
+        req.stop = vec![stop];
+        s.submit(req);
+        let mut streamed = String::new();
+        while s.pending() > 0 {
+            for ev in s.tick().unwrap() {
+                if let StepEvent::Token { text, .. } = ev {
+                    streamed.push_str(&text);
+                }
+            }
+        }
+        let c = s.take_completion(1).unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Length);
+        assert_eq!(c.text, expected);
+        assert_eq!(streamed, expected, "held-back bytes must all be released");
+    }
+
+    #[test]
+    fn max_tokens_is_clamped_to_model_context() {
+        let mut s = sim_sched(SchedulerConfig::default());
+        let ctx = s.engine.model().max_context;
+        let mut req = Request::from_text(1, "clamp ", usize::MAX);
+        let prompt_len = req.prompt.len();
+        req.max_new_tokens = usize::MAX;
+        s.submit(req);
+        s.drain().unwrap();
+        let c = s.take_completion(1).unwrap();
+        assert_eq!(c.generated_tokens, ctx - prompt_len, "decode stops at the context edge");
+        assert_eq!(c.finish_reason, FinishReason::Length);
+    }
+
+    #[test]
+    fn oversize_prompt_fails_that_request_only() {
+        let mut s = sim_sched(SchedulerConfig::default());
+        s.engine.max_prompt = 16;
+        s.submit(Request {
+            id: 1,
+            prompt: vec![65; 64],
+            max_new_tokens: 4,
+            sample: SampleParams::greedy(),
+            stop: vec![],
+        });
+        s.submit(Request::from_text(2, "fine ", 4));
+        let mut failed = None;
+        while s.pending() > 0 {
+            for ev in s.tick().unwrap() {
+                if let StepEvent::Failed { id, error } = ev {
+                    failed = Some((id, error));
+                }
+            }
+        }
+        let (id, error) = failed.expect("oversize prompt reported");
+        assert_eq!(id, 1);
+        assert!(error.contains("exceeds"), "{}", error);
+        assert!(s.take_completion(2).is_some());
+        assert!(s.take_completion(1).is_none());
+        assert_eq!(s.metrics.failed, 1);
+    }
+
+    #[test]
+    fn completion_backlog_is_bounded() {
+        let cfg = SchedulerConfig { completion_backlog: 4, ..Default::default() };
+        let mut s = sim_sched(cfg);
+        for i in 1..=12 {
+            s.submit(Request::from_text(i, "x ", 1));
+        }
+        s.drain().unwrap();
+        let kept = (1..=12).filter(|&i| s.take_completion(i).is_some()).count();
+        assert_eq!(kept, 4, "unclaimed completions beyond the backlog are dropped");
     }
 }

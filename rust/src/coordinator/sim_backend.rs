@@ -1,0 +1,172 @@
+//! Artifact-free engine backend: a deterministic token generator behind
+//! the [`Backend`] trait, with real per-sequence KV/pool allocation and
+//! an optional artificial per-step latency.
+//!
+//! The real `Engine` needs compiled artifacts plus a native PJRT client,
+//! so the serving stack above it (scheduler, engine loop, HTTP edge)
+//! would otherwise be untestable on hosts without the XLA backend. This
+//! backend stands in for it: tokens are a pure function of the previous
+//! token ([`sim_next_token`]), sequences allocate genuine `RequestKv`
+//! state (so memory-accounting and cancellation tests measure the real
+//! thing), and `step_delay` models device time so concurrency tests get
+//! an honest overlap window. Also reachable from the CLI via
+//! `freekv serve --sim` / `freekv loadtest --sim`.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::engine::{Backend, EngineStats, Sequence};
+
+/// The deterministic next-token function: an LCG over the previous
+/// token, mapped to printable ASCII (so decoded text is readable and
+/// never hits EOS). Exposed so tests can precompute expected output.
+pub fn sim_next_token(last: i32) -> i32 {
+    let x = (last as i64).wrapping_mul(1_103_515_245).wrapping_add(12_345);
+    32 + (x.rem_euclid(95)) as i32
+}
+
+/// Geometry used by [`SimBackend::tiny`]: small enough that per-request
+/// pools are cheap, large enough that long prompts complete pages and
+/// exercise offload.
+pub fn sim_config() -> ModelConfig {
+    ModelConfig {
+        name: "sim".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_qo: 4,
+        n_kv: 2,
+        d_head: 4,
+        d_ffn: 32,
+        vocab: crate::coordinator::tokenizer::VOCAB,
+        rope_theta: 1e4,
+        rms_eps: 1e-5,
+        page_size: 4,
+        max_context: 4096,
+        sink_pages: 1,
+        window_pages: 2,
+        select_pages: 2,
+        kv_elem_bytes: 4,
+    }
+}
+
+pub struct SimBackend {
+    cfg: ModelConfig,
+    stats: EngineStats,
+    /// Artificial wall time per decode step (device-time stand-in).
+    pub step_delay: Duration,
+    /// Prompts longer than this fail admission (models prefill buckets).
+    pub max_prompt: usize,
+}
+
+impl SimBackend {
+    pub fn new(cfg: ModelConfig) -> SimBackend {
+        let max_prompt = cfg.max_context / 2;
+        SimBackend { cfg, stats: EngineStats::default(), step_delay: Duration::ZERO, max_prompt }
+    }
+
+    pub fn tiny() -> SimBackend {
+        SimBackend::new(sim_config())
+    }
+}
+
+impl Backend for SimBackend {
+    fn model(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>> {
+        let len = seq.tokens.len();
+        if len > self.max_prompt {
+            return Err(anyhow!(
+                "prompt of {} tokens exceeds sim bucket of {}",
+                len,
+                self.max_prompt
+            ));
+        }
+        let kv_row = vec![0.0f32; self.cfg.n_kv * self.cfg.d_head];
+        for _ in 0..len {
+            for l in 0..self.cfg.n_layers {
+                seq.kv.append(l, &kv_row, &kv_row, &mut seq.xfer);
+            }
+        }
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        let tok = sim_next_token(*seq.tokens.last().unwrap());
+        logits[tok as usize] = 1.0;
+        self.stats.prefills += 1;
+        Ok(logits)
+    }
+
+    fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let n = seqs.len();
+        self.stats.steps += 1;
+        self.stats.max_batch_lanes = self.stats.max_batch_lanes.max(n as u64);
+        if n > 1 {
+            self.stats.batched_steps += 1;
+        }
+        let kv_row = vec![0.0f32; self.cfg.n_kv * self.cfg.d_head];
+        for seq in seqs.iter_mut() {
+            let tok = sim_next_token(*seq.tokens.last().unwrap());
+            for l in 0..self.cfg.n_layers {
+                seq.kv.append(l, &kv_row, &kv_row, &mut seq.xfer);
+            }
+            seq.tokens.push(tok);
+            if Some(tok) == seq.eos {
+                seq.finished = true;
+            }
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::SampleParams;
+    use crate::coordinator::tokenizer;
+
+    #[test]
+    fn deterministic_printable_stream() {
+        let mut last = tokenizer::BOS;
+        for _ in 0..200 {
+            let t = sim_next_token(last);
+            assert!((32..127).contains(&t), "non-printable {}", t);
+            assert_eq!(t, sim_next_token(last));
+            last = t;
+        }
+    }
+
+    #[test]
+    fn prefill_and_decode_advance_kv() {
+        let mut b = SimBackend::tiny();
+        let prompt = tokenizer::encode("hello sim backend");
+        let plen = prompt.len();
+        let mut seq = b.new_sequence(1, prompt, 8, SampleParams::greedy());
+        let lg = b.prefill(&mut seq).unwrap();
+        assert_eq!(lg.len(), b.cfg.vocab);
+        assert_eq!(seq.kv.len(), plen);
+        let first = crate::linalg::argmax(&lg) as i32;
+        seq.tokens.push(first);
+        let mut batch = [&mut seq];
+        b.decode_step(&mut batch).unwrap();
+        assert_eq!(seq.kv.len(), plen + 1);
+        assert_eq!(seq.generated().len(), 2);
+        assert_eq!(seq.generated()[1], sim_next_token(first));
+    }
+
+    #[test]
+    fn oversize_prompt_is_per_request_error() {
+        let mut b = SimBackend::tiny();
+        b.max_prompt = 8;
+        let mut seq = b.new_sequence(1, vec![65; 9], 4, SampleParams::greedy());
+        assert!(b.prefill(&mut seq).is_err());
+    }
+}

@@ -14,7 +14,8 @@
 //!
 //! Three-layer reproduction: Pallas kernels (L1) + JAX model (L2) are
 //! AOT-compiled to HLO text at build time; this crate is the Layer-3
-//! rust coordinator that owns the serving runtime — request routing,
+//! rust coordinator that owns the serving runtime — an event-driven
+//! session API (streaming tokens, cancellation, bounded admission) over
 //! continuous batching, the paged KV cache with CPU offload (hybrid
 //! NHD/GPU + HND/CPU layouts), double-buffered streamed recall, and the
 //! FreeKV speculative-retrieval + fine-grained-correction policy.

@@ -10,11 +10,14 @@
 use anyhow::{anyhow, Result};
 
 use freekv::config::FreeKvParams;
-use freekv::coordinator::engine::SampleParams;
+use freekv::coordinator::engine::{Backend, Engine, SampleParams};
+use freekv::coordinator::engine_loop::{EngineLoop, LoopConfig};
 use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use freekv::coordinator::sim_backend::SimBackend;
 use freekv::coordinator::tokenizer;
 use freekv::eval::{accuracy, latency, real};
 use freekv::runtime::Runtime;
+use freekv::server::ServeOptions;
 use freekv::util::cli::Args;
 use freekv::util::table::Table;
 
@@ -82,49 +85,47 @@ fn run() -> Result<()> {
         }
         Some("serve") => {
             let addr = args.str_or("addr", "127.0.0.1:8080");
-            let rt = Runtime::load(&artifacts)?;
-            let eng = freekv::coordinator::engine::Engine::new(rt, &model, params)?;
-            if args.flag("warmup") {
-                let n = eng.rt.warmup(&model)?;
-                println!("[freekv] warmed {} artifacts", n);
-            }
-            let sched = Scheduler::new(
-                eng,
-                SchedulerConfig {
-                    max_batch: args.usize_or("max-batch", 4),
-                    admit_below: args.usize_or("admit-below", 4),
-                },
-            );
+            let scfg = SchedulerConfig {
+                max_batch: args.usize_or("max-batch", 4),
+                admit_below: args.usize_or("admit-below", 4),
+                ..Default::default()
+            };
+            let loop_cfg = LoopConfig { queue_cap: args.usize_or("queue-cap", 64) };
+            let warm = args.flag("warmup");
+            // The engine is constructed on the loop thread (the PJRT
+            // client is !Send); --sim swaps in the artifact-free backend.
+            let el = if args.flag("sim") {
+                EngineLoop::spawn(loop_cfg, move || Ok(Scheduler::new(SimBackend::tiny(), scfg)))?
+            } else {
+                EngineLoop::spawn(loop_cfg, move || {
+                    let rt = Runtime::load(&artifacts)?;
+                    let eng = Engine::new(rt, &model, params)?;
+                    if warm {
+                        let n = eng.rt.warmup(&model)?;
+                        println!("[freekv] warmed {} artifacts", n);
+                    }
+                    Ok(Scheduler::new(eng, scfg))
+                })?
+            };
             let max_requests = args.get("max-requests").and_then(|v| v.parse().ok());
-            freekv::server::serve(sched, &addr, max_requests)
+            let opts = ServeOptions { max_requests, ..Default::default() };
+            let result = freekv::server::serve(el.submitter(), &addr, opts);
+            el.shutdown();
+            result
         }
         Some("loadtest") => {
-            let rt = Runtime::load(&artifacts)?;
-            let eng = freekv::coordinator::engine::Engine::new(rt, &model, params)?;
-            let mut sched = Scheduler::new(
-                eng,
-                SchedulerConfig {
-                    max_batch: args.usize_or("max-batch", 4),
-                    admit_below: args.usize_or("admit-below", 4),
-                },
-            );
-            let spec = freekv::workload::WorkloadSpec {
-                scenario: freekv::workload::Scenario::parse(&args.str_or("scenario", "mixed"))
-                    .ok_or_else(|| anyhow!("unknown scenario"))?,
-                rate: args.f64_or("rate", 4.0),
-                n_requests: args.usize_or("requests", 16),
-                max_prompt: args.usize_or("max-prompt", 1000),
-                max_output: args.usize_or("max-output", 48),
-                seed: args.u64_or("seed", 0xF00D),
+            let scfg = SchedulerConfig {
+                max_batch: args.usize_or("max-batch", 4),
+                admit_below: args.usize_or("admit-below", 4),
+                ..Default::default()
             };
-            let workload = freekv::workload::generate(&spec);
-            let report = freekv::workload::run_loadtest(&mut sched, workload, args.f64_or("ticks-per-sec", 8.0))?;
-            println!("{}", sched.metrics.report());
-            println!(
-                "loadtest: {} completed in {:.2}s over {} ticks, max inflight {}, {} tokens out",
-                report.completed, report.wall_secs, report.ticks, report.max_inflight, report.tokens_out
-            );
-            Ok(())
+            if args.flag("sim") {
+                loadtest(Scheduler::new(SimBackend::tiny(), scfg), &args)
+            } else {
+                let rt = Runtime::load(&artifacts)?;
+                let eng = Engine::new(rt, &model, params)?;
+                loadtest(Scheduler::new(eng, scfg), &args)
+            }
         }
         Some("eval") => {
             let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
@@ -132,12 +133,39 @@ fn run() -> Result<()> {
             eval(what, seeds, &artifacts, &model)
         }
         _ => Err(anyhow!(
-            "usage: freekv <info|generate|serve|eval> [--model tiny] [--artifacts dir] [--serial-recall]\n\
+            "usage: freekv <info|generate|serve|loadtest|eval> [--model tiny] [--artifacts dir] \
+             [--serial-recall] [--sim] [--queue-cap 64] [--max-batch 4] [--admit-below 4]\n\
              eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
              table2 table3 table4 table5 table6 table7 table8 table9 fig7 fig8 fig9 fig10 \
              oom real-breakdown real-correction fig16-20 all"
         )),
     }
+}
+
+fn loadtest<B: Backend>(mut sched: Scheduler<B>, args: &Args) -> Result<()> {
+    let spec = freekv::workload::WorkloadSpec {
+        scenario: freekv::workload::Scenario::parse(&args.str_or("scenario", "mixed"))
+            .ok_or_else(|| anyhow!("unknown scenario"))?,
+        rate: args.f64_or("rate", 4.0),
+        n_requests: args.usize_or("requests", 16),
+        max_prompt: args.usize_or("max-prompt", 1000),
+        max_output: args.usize_or("max-output", 48),
+        seed: args.u64_or("seed", 0xF00D),
+    };
+    let workload = freekv::workload::generate(&spec);
+    let report =
+        freekv::workload::run_loadtest(&mut sched, workload, args.f64_or("ticks-per-sec", 8.0))?;
+    println!("{}", sched.metrics.report());
+    println!(
+        "loadtest: {} completed ({} failed) in {:.2}s over {} ticks, max inflight {}, {} tokens out",
+        report.completed,
+        report.failed,
+        report.wall_secs,
+        report.ticks,
+        report.max_inflight,
+        report.tokens_out
+    );
+    Ok(())
 }
 
 fn eval(what: &str, seeds: u64, artifacts: &str, model: &str) -> Result<()> {

@@ -1,24 +1,93 @@
-//! Minimal HTTP/1.1 server for the serving example. Hand-rolled over
-//! `std::net` (the offline registry has no hyper/tokio): one acceptor
-//! thread feeding a request channel, the engine thread consuming it —
-//! the PJRT runtime is single-threaded by design, so the coordinator
-//! owns it and the network edge stays thin.
+//! Minimal HTTP/1.1 edge over the event-driven serving API. Hand-rolled
+//! on `std::net` (the offline registry has no hyper/tokio): one acceptor
+//! plus a thread per connection, all of them talking to the engine
+//! thread only through a cloneable [`Submitter`] — so concurrent
+//! `/generate` requests genuinely share decode batches instead of
+//! serializing behind a single request/response loop.
 //!
 //! API:
-//!   POST /generate  {"prompt": "...", "max_tokens": 64}
-//!     -> {"id": n, "text": "...", "prompt_tokens": n, "generated": n}
-//!   GET  /metrics   -> one-line serving metrics report
+//!   POST /generate  {"prompt": "...", "max_tokens": 64,
+//!                    "temperature": 0.8, "top_p": 0.95, "seed": 7,
+//!                    "stop": "###" | ["###", "\n\n"], "stream": false}
+//!     -> 200 {"id", "text", "prompt_tokens", "generated", "finish_reason"}
+//!     -> 400 malformed JSON / missing prompt
+//!     -> 429 admission queue full (backpressure — retry later)
+//!     with "stream": true -> chunked `text/event-stream`; each sampled
+//!     token arrives as `data: {"event":"token","index":..,"token":..,
+//!     "text":".."}` the moment it is emitted, terminated by one
+//!     `data: {"event":"done",...}` (or `{"event":"error",...}`) event.
+//!   GET  /metrics   -> one-line serving metrics (per-token TTFT/ITL
+//!                      percentiles included)
 //!   GET  /healthz   -> ok
+//!
+//! Robustness at the edge: request lines that aren't `METHOD SP PATH SP
+//! HTTP/x` are rejected with 400, bodies above
+//! [`HttpLimits::max_body_bytes`] with 413, a read timeout bounds how
+//! long a stalled client can hold a connection thread, and a write
+//! timeout bounds a client that stops reading its response. Client
+//! disconnects cancel the in-flight session mid-generation, returning
+//! its GPU slots and CPU pool pages to the free pool: streaming
+//! sessions treat a failed chunk write *or* an EOF `peek` as
+//! disconnect; buffered sessions only hard socket errors (a half-close
+//! while awaiting the response is legal HTTP/1.1).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::coordinator::scheduler::{Request, Scheduler};
+use crate::coordinator::engine::SampleParams;
+use crate::coordinator::engine_loop::{SessionEvent, SessionHandle, SubmitError, Submitter};
+use crate::coordinator::scheduler::Request;
 use crate::util::json::{Json, JsonObj};
+
+/// How often waiting handlers poll the socket for client disconnect.
+const DISCONNECT_POLL: Duration = Duration::from_millis(100);
+
+/// Parsing limits for the HTTP edge.
+#[derive(Debug, Clone)]
+pub struct HttpLimits {
+    /// Reject request bodies larger than this (413).
+    pub max_body_bytes: usize,
+    /// Reject request/header lines longer than this (400).
+    pub max_line_bytes: usize,
+    /// Reject requests with more headers than this (400).
+    pub max_headers: usize,
+    /// A client that stalls mid-request is dropped after this long.
+    pub header_timeout: Duration,
+    /// A client that stops reading its response is dropped after a
+    /// blocked write exceeds this (frees the connection thread and
+    /// cancels the session).
+    pub write_timeout: Duration,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits {
+            max_body_bytes: 1 << 20, // 1 MiB
+            max_line_bytes: 8 << 10,
+            max_headers: 100,
+            header_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Why a request could not be read off the wire.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line / headers — answer 400.
+    BadRequest(String),
+    /// Declared body exceeds the cap — answer 413.
+    TooLarge { len: usize, cap: usize },
+    /// Stalled or vanished client — drop the connection.
+    Io(std::io::Error),
+}
 
 /// A parsed HTTP request.
 #[derive(Debug)]
@@ -28,45 +97,95 @@ pub struct HttpRequest {
     pub body: String,
 }
 
-/// Read one HTTP/1.1 request from a stream.
-pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
-    let mut reader = BufReader::new(stream.try_clone()?);
+/// Read one line, capped at `cap` bytes.
+fn take_line<R: BufRead>(r: &mut R, out: &mut String, cap: usize) -> Result<usize, HttpError> {
+    out.clear();
+    let n = r.by_ref().take(cap as u64 + 1).read_line(out).map_err(HttpError::Io)?;
+    if n > cap {
+        return Err(HttpError::BadRequest(format!("line exceeds {} bytes", cap)));
+    }
+    Ok(n)
+}
+
+/// Read one HTTP/1.1 request from a stream, enforcing `limits`.
+pub fn read_request(stream: &mut TcpStream, limits: &HttpLimits) -> Result<HttpRequest, HttpError> {
+    stream.set_read_timeout(Some(limits.header_timeout)).map_err(HttpError::Io)?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(HttpError::Io)?);
     let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("/").to_string();
+    if take_line(&mut reader, &mut line, limits.max_line_bytes)? == 0 {
+        return Err(HttpError::BadRequest("empty request".into()));
+    }
+    let parts: Vec<String> = line.trim_end().split(' ').map(str::to_string).collect();
+    if parts.len() != 3 {
+        return Err(HttpError::BadRequest("malformed request line".into()));
+    }
+    let (method, path, version) = (&parts[0], &parts[1], &parts[2]);
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::BadRequest(format!("bad method {:?}", method)));
+    }
+    if !path.starts_with('/') {
+        return Err(HttpError::BadRequest("path must start with '/'".into()));
+    }
+    if !version.starts_with("HTTP/") {
+        return Err(HttpError::BadRequest("bad protocol version".into()));
+    }
+
     let mut content_len = 0usize;
+    let mut n_headers = 0usize;
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim_end();
+        if take_line(&mut reader, &mut line, limits.max_line_bytes)? == 0 {
+            return Err(HttpError::BadRequest("truncated headers".into()));
+        }
+        let h = line.trim_end();
         if h.is_empty() {
             break;
         }
-        if let Some((k, v)) = h.split_once(':') {
-            if k.eq_ignore_ascii_case("content-length") {
-                content_len = v.trim().parse().unwrap_or(0);
-            }
+        n_headers += 1;
+        if n_headers > limits.max_headers {
+            return Err(HttpError::BadRequest(format!("more than {} headers", limits.max_headers)));
         }
+        let Some((k, v)) = h.split_once(':') else {
+            return Err(HttpError::BadRequest(format!("malformed header {:?}", h)));
+        };
+        if k.eq_ignore_ascii_case("content-length") {
+            content_len = v
+                .trim()
+                .parse()
+                .map_err(|_| HttpError::BadRequest(format!("bad content-length {:?}", v.trim())))?;
+        }
+    }
+    if content_len > limits.max_body_bytes {
+        return Err(HttpError::TooLarge { len: content_len, cap: limits.max_body_bytes });
     }
     let mut body = vec![0u8; content_len];
     if content_len > 0 {
-        reader.read_exact(&mut body)?;
+        reader.read_exact(&mut body).map_err(HttpError::Io)?;
     }
-    Ok(HttpRequest { method, path, body: String::from_utf8_lossy(&body).into_owned() })
+    Ok(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
 }
 
-/// Write an HTTP response.
-pub fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) -> Result<()> {
+/// Write a complete HTTP response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     };
     write!(
-        stream,
+        w,
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
         status,
         reason,
@@ -77,91 +196,317 @@ pub fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, b
     Ok(())
 }
 
-enum Job {
-    Generate { req: HttpRequest, stream: TcpStream },
-    Quick { req: HttpRequest, stream: TcpStream },
+fn write_chunk<W: Write>(w: &mut W, data: &str) -> std::io::Result<()> {
+    write!(w, "{:x}\r\n{}\r\n", data.len(), data)
 }
 
-/// Serve until `max_requests` generations complete (None = forever).
-/// Single engine thread (owns the PJRT client), one acceptor thread.
-pub fn serve(mut sched: Scheduler, addr: &str, max_requests: Option<usize>) -> Result<()> {
+fn finish_chunks<W: Write>(w: &mut W) -> std::io::Result<()> {
+    write!(w, "0\r\n\r\n")
+}
+
+fn sse_data(j: Json) -> String {
+    format!("data: {}\n\n", j.to_string_compact())
+}
+
+fn error_json(msg: &str) -> String {
+    let mut obj = JsonObj::new();
+    obj.insert("error", msg);
+    Json::from(obj).to_string_compact()
+}
+
+/// Parse a `/generate` body into a request plus the stream flag.
+/// Per-request sampling (`temperature`/`top_p`/`seed`) and `stop`
+/// strings come straight from the JSON.
+pub fn parse_generate(body: &str) -> Result<(Request, bool), String> {
+    let parsed = Json::parse(body).map_err(|e| format!("invalid json: {}", e))?;
+    let prompt = parsed.get("prompt").as_str().unwrap_or("");
+    if prompt.is_empty() {
+        return Err("missing prompt".into());
+    }
+    let max_tokens = parsed.get("max_tokens").as_usize().unwrap_or(32);
+    let mut req = Request::from_text(0, prompt, max_tokens);
+    req.sample = SampleParams {
+        temperature: parsed.get("temperature").as_f64().unwrap_or(0.0) as f32,
+        top_p: parsed.get("top_p").as_f64().unwrap_or(1.0) as f32,
+        seed: parsed.get("seed").as_f64().unwrap_or(0.0) as u64,
+    };
+    req.stop = match parsed.get("stop") {
+        Json::Str(s) => vec![s.clone()],
+        Json::Arr(a) => a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect(),
+        _ => Vec::new(),
+    };
+    let stream = parsed.get("stream").as_bool().unwrap_or(false);
+    Ok((req, stream))
+}
+
+/// Has the peer abandoned the connection? Non-blocking-ish: a 1 ms
+/// `peek` that treats timeouts as "still there". `eof_means_gone`
+/// controls whether a read-side FIN counts: streaming clients hold the
+/// connection fully open, so EOF there means the client died; buffered
+/// clients may legitimately half-close their write side while waiting
+/// for the response, so only hard errors count.
+fn client_gone(stream: &TcpStream, eof_means_gone: bool) -> bool {
+    let mut buf = [0u8; 1];
+    if stream.set_read_timeout(Some(Duration::from_millis(1))).is_err() {
+        return true;
+    }
+    match stream.peek(&mut buf) {
+        Ok(0) => eof_means_gone,
+        Ok(_) => false,
+        Err(e) => !matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ),
+    }
+}
+
+/// Server behaviour knobs.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Exit after this many completed generations (None = run forever).
+    pub max_requests: Option<usize>,
+    pub limits: HttpLimits,
+}
+
+/// Bind `addr` and serve. See [`serve_listener`].
+pub fn serve(submitter: Submitter, addr: &str, opts: ServeOptions) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    println!("[freekv] serving on http://{}", listener.local_addr()?);
-    let (tx, rx) = mpsc::channel::<Job>();
+    serve_listener(listener, submitter, opts)
+}
 
-    thread::spawn(move || {
-        for stream in listener.incoming() {
-            let Ok(mut stream) = stream else { continue };
-            match read_request(&mut stream) {
-                Ok(req) => {
-                    let job = if req.method == "POST" && req.path == "/generate" {
-                        Job::Generate { req, stream }
-                    } else {
-                        Job::Quick { req, stream }
-                    };
-                    if tx.send(job).is_err() {
-                        break;
-                    }
-                }
-                Err(_) => {
-                    let _ = write_response(&mut stream, 400, "text/plain", "bad request");
-                }
-            }
+/// Serve connections from an already-bound listener: one thread per
+/// connection, sessions multiplexed onto the engine loop through
+/// `submitter`. Returns once `max_requests` generations have completed.
+pub fn serve_listener(
+    listener: TcpListener,
+    submitter: Submitter,
+    opts: ServeOptions,
+) -> Result<()> {
+    let local = listener.local_addr()?;
+    println!("[freekv] serving on http://{}", local);
+    let served = Arc::new(AtomicUsize::new(0));
+    let engine_down = Arc::new(AtomicBool::new(false));
+    let limits = Arc::new(opts.limits.clone());
+    for stream in listener.incoming() {
+        if engine_down.load(Ordering::SeqCst) {
+            return Err(anyhow!("engine loop terminated; shutting down server"));
         }
-    });
-
-    let mut served = 0usize;
-    let mut next_id = 1u64;
-    for job in rx {
-        match job {
-            Job::Quick { req, mut stream } => {
-                let _ = match (req.method.as_str(), req.path.as_str()) {
-                    ("GET", "/healthz") => write_response(&mut stream, 200, "text/plain", "ok"),
-                    ("GET", "/metrics") => {
-                        write_response(&mut stream, 200, "text/plain", &sched.metrics.report())
-                    }
-                    _ => write_response(&mut stream, 404, "text/plain", "not found"),
-                };
+        if opts.max_requests.map_or(false, |m| served.load(Ordering::SeqCst) >= m) {
+            println!("[freekv] served {} generations, exiting", served.load(Ordering::SeqCst));
+            break;
+        }
+        let Ok(mut stream) = stream else { continue };
+        let sub = submitter.clone();
+        let served = served.clone();
+        let engine_down = engine_down.clone();
+        let limits = limits.clone();
+        let max = opts.max_requests;
+        thread::spawn(move || {
+            handle_connection(&mut stream, &sub, &limits, &served, &engine_down);
+            // Completing the last generation — or noticing the engine
+            // loop died — must unblock the acceptor.
+            if engine_down.load(Ordering::SeqCst)
+                || max.map_or(false, |m| served.load(Ordering::SeqCst) >= m)
+            {
+                let _ = TcpStream::connect(local);
             }
-            Job::Generate { req, mut stream } => {
-                let parsed = Json::parse(&req.body).unwrap_or(Json::Null);
-                let prompt = parsed.get("prompt").as_str().unwrap_or("").to_string();
-                let max_tokens = parsed.get("max_tokens").as_usize().unwrap_or(32);
-                if prompt.is_empty() {
-                    let _ = write_response(&mut stream, 400, "application/json", r#"{"error":"missing prompt"}"#);
-                    continue;
-                }
-                let id = next_id;
-                next_id += 1;
-                sched.submit(Request::from_text(id, &prompt, max_tokens));
-                // Drive the scheduler until this request finishes (other
-                // queued requests advance too — continuous batching).
-                while !sched.completions.iter().any(|c| c.id == id) {
-                    sched.tick()?;
-                }
-                let c = sched.completions.iter().find(|c| c.id == id).unwrap().clone();
+        });
+    }
+    Ok(())
+}
+
+fn handle_connection(
+    stream: &mut TcpStream,
+    sub: &Submitter,
+    limits: &HttpLimits,
+    served: &AtomicUsize,
+    engine_down: &AtomicBool,
+) {
+    // A peer that stops reading must not wedge this thread on a write.
+    let _ = stream.set_write_timeout(Some(limits.write_timeout));
+    let req = match read_request(stream, limits) {
+        Ok(r) => r,
+        Err(HttpError::BadRequest(msg)) => {
+            let _ = write_response(stream, 400, "application/json", &error_json(&msg));
+            return;
+        }
+        Err(HttpError::TooLarge { len, cap }) => {
+            let msg = format!("body of {} bytes exceeds cap of {}", len, cap);
+            let _ = write_response(stream, 413, "application/json", &error_json(&msg));
+            return;
+        }
+        Err(HttpError::Io(_)) => return, // stalled or vanished client
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        // Health is honest: it round-trips the engine loop, so a dead
+        // loop flips this instance to 503 for load balancers.
+        ("GET", "/healthz") => match sub.metrics_report() {
+            Ok(_) => {
+                let _ = write_response(stream, 200, "text/plain", "ok");
+            }
+            Err(_) => {
+                engine_down.store(true, Ordering::SeqCst);
+                let _ = write_response(stream, 503, "text/plain", "engine loop down");
+            }
+        },
+        ("GET", "/metrics") => match sub.metrics_report() {
+            Ok(r) => {
+                let _ = write_response(stream, 200, "text/plain", &r);
+            }
+            Err(_) => {
+                engine_down.store(true, Ordering::SeqCst);
+                let _ = write_response(stream, 503, "text/plain", "engine unavailable");
+            }
+        },
+        ("POST", "/generate") => handle_generate(stream, sub, served, engine_down, &req.body),
+        _ => {
+            let _ = write_response(stream, 404, "text/plain", "not found");
+        }
+    }
+}
+
+fn handle_generate(
+    stream: &mut TcpStream,
+    sub: &Submitter,
+    served: &AtomicUsize,
+    engine_down: &AtomicBool,
+    body: &str,
+) {
+    let (req, stream_mode) = match parse_generate(body) {
+        Ok(x) => x,
+        Err(msg) => {
+            let _ = write_response(stream, 400, "application/json", &error_json(&msg));
+            return;
+        }
+    };
+    let handle = match sub.submit(req) {
+        Ok(h) => h,
+        Err(e @ SubmitError::Busy { .. }) => {
+            let _ = write_response(stream, 429, "application/json", &error_json(&e.to_string()));
+            return;
+        }
+        Err(SubmitError::Closed) => {
+            engine_down.store(true, Ordering::SeqCst);
+            let msg = error_json("engine unavailable");
+            let _ = write_response(stream, 503, "application/json", &msg);
+            return;
+        }
+    };
+    if stream_mode {
+        stream_session(stream, &handle, served, engine_down);
+    } else {
+        wait_session(stream, &handle, served, engine_down);
+    }
+}
+
+/// Buffered mode: wait for the terminal event, polling for client
+/// disconnect so an abandoned request is cancelled instead of decoded
+/// to completion.
+fn wait_session(
+    stream: &mut TcpStream,
+    h: &SessionHandle,
+    served: &AtomicUsize,
+    engine_down: &AtomicBool,
+) {
+    loop {
+        match h.recv_timeout(DISCONNECT_POLL) {
+            Ok(SessionEvent::Token { .. }) => {}
+            Ok(SessionEvent::Done(c)) => {
                 let mut obj = JsonObj::new();
                 obj.insert("id", c.id as usize);
-                obj.insert("text", c.text.clone());
+                obj.insert("text", c.text);
                 obj.insert("prompt_tokens", c.prompt_tokens);
                 obj.insert("generated", c.generated_tokens);
-                let _ = write_response(
-                    &mut stream,
-                    200,
-                    "application/json",
-                    &Json::from(obj).to_string_compact(),
-                );
-                served += 1;
-                if let Some(max) = max_requests {
-                    if served >= max {
-                        println!("[freekv] served {} requests, exiting", served);
-                        return Ok(());
-                    }
+                obj.insert("finish_reason", c.finish_reason.as_str());
+                let body = Json::from(obj).to_string_compact();
+                let _ = write_response(stream, 200, "application/json", &body);
+                served.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+            Ok(SessionEvent::Error(e)) => {
+                let _ = write_response(stream, 500, "application/json", &error_json(&e));
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // EOF alone is not abandonment here: buffered clients
+                // may half-close and still await the response.
+                if client_gone(stream, false) {
+                    h.cancel();
+                    return;
                 }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                engine_down.store(true, Ordering::SeqCst);
+                let msg = error_json("engine shut down");
+                let _ = write_response(stream, 503, "application/json", &msg);
+                return;
             }
         }
     }
-    Ok(())
+}
+
+/// Streaming mode: chunked SSE, one event per sampled token. A failed
+/// chunk write or an EOF peek means the client is gone — cancel.
+fn stream_session(
+    stream: &mut TcpStream,
+    h: &SessionHandle,
+    served: &AtomicUsize,
+    engine_down: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+                Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        h.cancel();
+        return;
+    }
+    loop {
+        match h.recv_timeout(DISCONNECT_POLL) {
+            Ok(SessionEvent::Token { index, token, text }) => {
+                let mut obj = JsonObj::new();
+                obj.insert("event", "token");
+                obj.insert("index", index);
+                obj.insert("token", token as i64);
+                obj.insert("text", text);
+                if write_chunk(stream, &sse_data(Json::from(obj))).is_err() {
+                    h.cancel();
+                    return;
+                }
+            }
+            Ok(SessionEvent::Done(c)) => {
+                let mut obj = JsonObj::new();
+                obj.insert("event", "done");
+                obj.insert("id", c.id as usize);
+                obj.insert("finish_reason", c.finish_reason.as_str());
+                obj.insert("prompt_tokens", c.prompt_tokens);
+                obj.insert("generated", c.generated_tokens);
+                obj.insert("text", c.text);
+                let _ = write_chunk(stream, &sse_data(Json::from(obj)));
+                let _ = finish_chunks(stream);
+                served.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+            Ok(SessionEvent::Error(e)) => {
+                let mut obj = JsonObj::new();
+                obj.insert("event", "error");
+                obj.insert("error", e);
+                let _ = write_chunk(stream, &sse_data(Json::from(obj)));
+                let _ = finish_chunks(stream);
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if client_gone(stream, true) {
+                    h.cancel();
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                engine_down.store(true, Ordering::SeqCst);
+                let _ = finish_chunks(stream);
+                return;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -175,7 +520,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let h = thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
-            let req = read_request(&mut s).unwrap();
+            let req = read_request(&mut s, &HttpLimits::default()).unwrap();
             assert_eq!(req.method, "POST");
             assert_eq!(req.path, "/generate");
             assert_eq!(req.body, r#"{"prompt":"hi","max_tokens":4}"#);
@@ -195,5 +540,121 @@ mod tests {
         assert!(resp.starts_with("HTTP/1.1 200"));
         assert!(resp.ends_with(r#"{"ok":true}"#));
         h.join().unwrap();
+    }
+
+    /// Run the parser against one raw client payload.
+    fn parse_raw(payload: &[u8], limits: HttpLimits) -> Result<HttpRequest, HttpError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let payload = payload.to_vec();
+        let client = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(&payload).unwrap();
+            // hold the connection open so EOF doesn't mask timeouts
+            thread::sleep(Duration::from_millis(300));
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let r = read_request(&mut s, &limits);
+        client.join().unwrap();
+        r
+    }
+
+    #[test]
+    fn garbage_request_line_is_bad_request() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            &b"GET /x\r\n\r\n"[..],
+            &b"get /x HTTP/1.1\r\n\r\n"[..],
+            &b"GET x HTTP/1.1\r\n\r\n"[..],
+            &b"GET /x SMTP\r\n\r\n"[..],
+        ] {
+            match parse_raw(raw, HttpLimits::default()) {
+                Err(HttpError::BadRequest(_)) => {}
+                other => {
+                    panic!("expected BadRequest for {:?}, got {:?}", raw, other.map(|r| r.method))
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_body_is_rejected_without_reading_it() {
+        let raw = b"POST /generate HTTP/1.1\r\nContent-Length: 2097152\r\n\r\n";
+        match parse_raw(raw, HttpLimits::default()) {
+            Err(HttpError::TooLarge { len, cap }) => {
+                assert_eq!(len, 2 << 20);
+                assert_eq!(cap, 1 << 20);
+            }
+            other => panic!("expected TooLarge, got {:?}", other.map(|r| r.method)),
+        }
+    }
+
+    #[test]
+    fn bad_content_length_is_bad_request() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: banana\r\n\r\n";
+        assert!(matches!(parse_raw(raw, HttpLimits::default()), Err(HttpError::BadRequest(_))));
+    }
+
+    #[test]
+    fn stalled_client_times_out() {
+        let limits =
+            HttpLimits { header_timeout: Duration::from_millis(100), ..Default::default() };
+        let t0 = std::time::Instant::now();
+        // request line arrives, then the client stalls before the blank line
+        let r = parse_raw(b"POST /generate HTTP/1.1\r\nContent-Len", limits);
+        assert!(matches!(r, Err(HttpError::Io(_))), "stall must surface as Io");
+        assert!(t0.elapsed() < Duration::from_secs(2), "timeout must bound the stall");
+    }
+
+    #[test]
+    fn overlong_line_is_bad_request() {
+        let limits = HttpLimits { max_line_bytes: 64, ..Default::default() };
+        let mut raw = b"GET /".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(200));
+        raw.extend(b" HTTP/1.1\r\n\r\n");
+        assert!(matches!(parse_raw(&raw, limits), Err(HttpError::BadRequest(_))));
+    }
+
+    #[test]
+    fn parse_generate_full_fields() {
+        let (req, stream) = parse_generate(
+            r#"{"prompt":"hello","max_tokens":7,"temperature":0.8,"top_p":0.9,
+               "seed":42,"stop":["###","\n\n"],"stream":true}"#,
+        )
+        .unwrap();
+        assert!(stream);
+        assert_eq!(req.max_new_tokens, 7);
+        assert!((req.sample.temperature - 0.8).abs() < 1e-6);
+        assert!((req.sample.top_p - 0.9).abs() < 1e-6);
+        assert_eq!(req.sample.seed, 42);
+        assert_eq!(req.stop, vec!["###".to_string(), "\n\n".to_string()]);
+        // prompt is BOS + bytes
+        assert_eq!(req.prompt.len(), "hello".len() + 1);
+    }
+
+    #[test]
+    fn parse_generate_defaults_and_scalar_stop() {
+        let (req, stream) = parse_generate(r#"{"prompt":"p","stop":"x"}"#).unwrap();
+        assert!(!stream);
+        assert_eq!(req.max_new_tokens, 32);
+        assert_eq!(req.sample.temperature, 0.0);
+        assert_eq!(req.sample.top_p, 1.0);
+        assert_eq!(req.stop, vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn parse_generate_rejects_bad_input() {
+        assert!(parse_generate("not json").is_err());
+        assert!(parse_generate(r#"{"max_tokens":4}"#).is_err());
+        assert!(parse_generate(r#"{"prompt":""}"#).is_err());
+    }
+
+    #[test]
+    fn chunked_framing() {
+        let mut buf = Vec::new();
+        write_chunk(&mut buf, "data: {\"a\":1}\n\n").unwrap();
+        finish_chunks(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s, "f\r\ndata: {\"a\":1}\n\n\r\n0\r\n\r\n");
     }
 }

@@ -4,8 +4,8 @@
 //! long-input (big prompt, short output) and long-generation (short
 //! prompt, long output).
 
-use crate::coordinator::engine::SampleParams;
-use crate::coordinator::scheduler::Request;
+use crate::coordinator::engine::{Backend, SampleParams};
+use crate::coordinator::scheduler::{Request, StepEvent};
 use crate::util::rng::Rng;
 
 /// Request-shape scenario.
@@ -114,6 +114,7 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
                 prompt,
                 max_new_tokens: o_len,
                 sample: SampleParams { temperature: 0.8, top_p: 0.95, seed: i as u64 },
+                stop: Vec::new(),
             },
         });
     }
@@ -124,8 +125,8 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
 /// respecting arrival times in *scheduler ticks* (the single-core testbed
 /// has no wall-clock arrival fidelity; arrivals are mapped to ticks by
 /// the requested rate so queueing behaviour is still exercised).
-pub fn run_loadtest(
-    sched: &mut crate::coordinator::scheduler::Scheduler,
+pub fn run_loadtest<B: Backend>(
+    sched: &mut crate::coordinator::scheduler::Scheduler<B>,
     workload: Vec<TimedRequest>,
     ticks_per_second: f64,
 ) -> anyhow::Result<LoadtestReport> {
@@ -133,19 +134,32 @@ pub fn run_loadtest(
     let mut tick = 0u64;
     let t0 = std::time::Instant::now();
     let mut max_inflight = 0usize;
+    let mut completed = 0usize;
+    let mut failed = 0usize;
     while !pending.is_empty() || sched.pending() > 0 {
         let now = tick as f64 / ticks_per_second.max(1e-9);
         while pending.front().map_or(false, |r| r.at <= now) {
             sched.submit(pending.pop_front().unwrap().request);
         }
-        sched.tick()?;
+        for ev in sched.tick()? {
+            match ev {
+                StepEvent::Finished { id } => {
+                    completed += 1;
+                    // claim each completion so nothing accumulates
+                    let _ = sched.take_completion(id);
+                }
+                StepEvent::Failed { .. } => failed += 1,
+                StepEvent::Token { .. } => {}
+            }
+        }
         max_inflight = max_inflight.max(sched.pending());
         tick += 1;
     }
     Ok(LoadtestReport {
         wall_secs: t0.elapsed().as_secs_f64(),
         ticks: tick,
-        completed: sched.completions.len(),
+        completed,
+        failed,
         max_inflight,
         tokens_out: sched.metrics.tokens_out,
     })
@@ -156,6 +170,7 @@ pub struct LoadtestReport {
     pub wall_secs: f64,
     pub ticks: u64,
     pub completed: usize,
+    pub failed: usize,
     pub max_inflight: usize,
     pub tokens_out: u64,
 }
@@ -203,6 +218,22 @@ mod tests {
         assert_eq!(a[3].request.prompt, b[3].request.prompt);
         let c = generate(&WorkloadSpec { seed: 1, ..spec });
         assert_ne!(a[3].request.prompt, c[3].request.prompt);
+    }
+
+    #[test]
+    fn loadtest_over_sim_backend_completes_everything() {
+        use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+        use crate::coordinator::sim_backend::SimBackend;
+        let spec =
+            WorkloadSpec { n_requests: 12, max_prompt: 64, max_output: 8, ..Default::default() };
+        let w = generate(&spec);
+        let mut sched = Scheduler::new(SimBackend::tiny(), SchedulerConfig::default());
+        let report = run_loadtest(&mut sched, w, 1000.0).unwrap();
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.failed, 0);
+        assert!(report.max_inflight >= 1);
+        assert!(sched.metrics.tokens_out > 0);
+        assert_eq!(sched.pending(), 0);
     }
 
     #[test]

@@ -1,0 +1,335 @@
+//! Event-driven serving API, end to end over HTTP, artifact-free: these
+//! tests run the full stack — per-connection server threads → cloneable
+//! `Submitter` → engine loop → continuous-batching scheduler — against
+//! the deterministic `SimBackend`, so they exercise real concurrency on
+//! any host (no PJRT needed).
+//!
+//! Covered: N simultaneous HTTP clients decoding in shared batches,
+//! streaming that yields the first token long before the last,
+//! mid-generation cancellation (client disconnect) releasing KV and the
+//! admission slot, 429 backpressure when the queue cap is hit, and
+//! per-token TTFT/ITL percentiles on `/metrics`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use freekv::coordinator::engine_loop::{EngineLoop, LoopConfig};
+use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use freekv::coordinator::sim_backend::{sim_next_token, SimBackend};
+use freekv::coordinator::tokenizer;
+use freekv::server::{serve_listener, ServeOptions};
+use freekv::util::json::Json;
+
+fn spawn_sim_loop(step_delay_ms: u64, queue_cap: usize) -> EngineLoop {
+    EngineLoop::spawn(LoopConfig { queue_cap }, move || {
+        let mut b = SimBackend::tiny();
+        b.step_delay = Duration::from_millis(step_delay_ms);
+        Ok(Scheduler::new(
+            b,
+            SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() },
+        ))
+    })
+    .expect("sim engine loop spawns without artifacts")
+}
+
+/// Serve on an OS-assigned port; returns the address. The server thread
+/// exits once `max_requests` generations complete (or runs detached).
+fn serve_sim(el: &EngineLoop, max_requests: Option<usize>) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sub = el.submitter();
+    thread::spawn(move || {
+        serve_listener(listener, sub, ServeOptions { max_requests, ..Default::default() }).unwrap();
+    });
+    addr
+}
+
+fn post_generate(addr: std::net::SocketAddr, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let (head, body) = resp.split_once("\r\n\r\n").unwrap_or((resp.as_str(), ""));
+    let status: u16 =
+        head.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    (status, body.to_string())
+}
+
+fn get(addr: std::net::SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {} HTTP/1.1\r\nHost: t\r\n\r\n", path).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let (head, body) = resp.split_once("\r\n\r\n").unwrap_or((resp.as_str(), ""));
+    let status: u16 =
+        head.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    (status, body.to_string())
+}
+
+#[test]
+fn concurrent_http_requests_decode_in_shared_batches() {
+    // 5ms per decode step × 40 tokens ≈ 200ms per request: four clients
+    // fired together overlap for almost their whole lifetime, so the
+    // engine must see multi-lane decode steps.
+    let el = spawn_sim_loop(5, 64);
+    let addr = serve_sim(&el, Some(4));
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            thread::spawn(move || {
+                let body = format!(
+                    r#"{{"prompt":"concurrent client {} ","max_tokens":40}}"#,
+                    i
+                );
+                post_generate(addr, &body)
+            })
+        })
+        .collect();
+    for c in clients {
+        let (status, body) = c.join().unwrap();
+        assert_eq!(status, 200, "{}", body);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("generated").as_usize(), Some(40));
+        assert_eq!(j.get("finish_reason").as_str(), Some("length"));
+        assert_eq!(j.get("text").as_str().unwrap().len(), 40);
+    }
+    let stats = el.submitter().engine_stats().unwrap();
+    assert!(
+        stats.batched_steps > 1 && stats.max_batch_lanes >= 2,
+        "requests serialized: {} batched steps, widest batch {}",
+        stats.batched_steps,
+        stats.max_batch_lanes
+    );
+    // per-token percentiles are live on /metrics
+    let report = el.submitter().metrics_report().unwrap();
+    assert!(report.contains("ttft p50="), "{}", report);
+    assert!(report.contains("itl p50="), "{}", report);
+    assert!(report.contains("completed=4"), "{}", report);
+    el.shutdown();
+}
+
+#[test]
+fn streaming_yields_first_token_before_the_last() {
+    let el = spawn_sim_loop(4, 8);
+    let addr = serve_sim(&el, Some(1));
+    let mut s = TcpStream::connect(addr).unwrap();
+    let body = r#"{"prompt":"stream me ","max_tokens":50,"stream":true}"#;
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+
+    let mut reader = BufReader::new(s);
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.trim_end().is_empty() {
+            break;
+        }
+        head.push_str(&line);
+    }
+    assert!(head.starts_with("HTTP/1.1 200"), "{}", head);
+    assert!(head.to_lowercase().contains("text/event-stream"), "{}", head);
+    assert!(head.to_lowercase().contains("chunked"), "{}", head);
+
+    // Read SSE events as they arrive, timestamping each data line.
+    let mut first_token_at: Option<Instant> = None;
+    let mut token_events = 0usize;
+    let mut done: Option<Json> = None;
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap() > 0 {
+        let t = line.trim_end().to_string();
+        line.clear();
+        let Some(payload) = t.strip_prefix("data: ") else { continue };
+        let j = Json::parse(payload).unwrap();
+        match j.get("event").as_str() {
+            Some("token") => {
+                assert_eq!(j.get("index").as_usize(), Some(token_events));
+                first_token_at.get_or_insert_with(Instant::now);
+                token_events += 1;
+            }
+            Some("done") => {
+                done = Some(j);
+                break;
+            }
+            other => panic!("unexpected event {:?} in {}", other, payload),
+        }
+    }
+    let first_at = first_token_at.expect("token events before done");
+    let done = done.expect("terminal done event");
+    // 49 decode steps × 4ms ≈ 200ms separate the first token from the
+    // last; well over any scheduling jitter.
+    assert!(
+        first_at.elapsed() >= Duration::from_millis(50),
+        "first token must arrive while generation is still running ({:?})",
+        first_at.elapsed()
+    );
+    assert_eq!(token_events, 50, "one SSE event per sampled token");
+    assert_eq!(done.get("generated").as_usize(), Some(50));
+    assert_eq!(done.get("finish_reason").as_str(), Some("length"));
+    assert_eq!(done.get("text").as_str().unwrap().len(), 50);
+    el.shutdown();
+}
+
+#[test]
+fn client_disconnect_cancels_the_session() {
+    let el = spawn_sim_loop(5, 8);
+    let addr = serve_sim(&el, None);
+    let sub = el.submitter();
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let body = r#"{"prompt":"abandoned stream ","max_tokens":1000,"stream":true}"#;
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        // read until the first token event so the session is mid-flight
+        let mut reader = BufReader::new(&s);
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap() > 0 {
+            if line.starts_with("data: ") {
+                break;
+            }
+            line.clear();
+        }
+        assert_eq!(sub.in_flight(), 1);
+        // dropping the socket here is the client vanishing
+    }
+    let t0 = Instant::now();
+    while sub.in_flight() != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "disconnect never cancelled the session"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+    // 1000 tokens at 5ms/step would take 5s; the engine going idle this
+    // fast proves decode stopped early.
+    let steps_then = sub.engine_stats().unwrap().steps;
+    thread::sleep(Duration::from_millis(100));
+    assert_eq!(sub.engine_stats().unwrap().steps, steps_then, "decode kept running after cancel");
+    let report = sub.metrics_report().unwrap();
+    assert!(report.contains("cancelled=1"), "{}", report);
+    el.shutdown();
+}
+
+#[test]
+fn admission_queue_full_returns_429() {
+    // queue_cap 1: the first (slow) request occupies the only slot; the
+    // second is rejected with 429 instead of queueing unboundedly.
+    let el = spawn_sim_loop(40, 1);
+    let addr = serve_sim(&el, None);
+    let occupant = thread::spawn(move || {
+        post_generate(addr, r#"{"prompt":"slow occupant ","max_tokens":30}"#)
+    });
+    // wait until the occupant holds the admission slot
+    let sub = el.submitter();
+    let t0 = Instant::now();
+    while sub.in_flight() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "occupant never admitted");
+        thread::sleep(Duration::from_millis(10));
+    }
+    let (status, body) = post_generate(addr, r#"{"prompt":"rejected ","max_tokens":4}"#);
+    assert_eq!(status, 429, "{}", body);
+    assert!(body.contains("busy"), "{}", body);
+    let (status, body) = occupant.join().unwrap();
+    assert_eq!(status, 200, "{}", body);
+    // slot released: the same request is admitted now
+    let (status, _) = post_generate(addr, r#"{"prompt":"admitted ","max_tokens":2}"#);
+    assert_eq!(status, 200);
+    el.shutdown();
+}
+
+#[test]
+fn stop_strings_and_sampling_come_from_request_json() {
+    // The sim stream is a pure function of the previous token, so the
+    // expected text is computable client-side; a stop string cut from it
+    // must truncate the completion at its first occurrence.
+    let prompt = "stop over http ";
+    let mut last = *tokenizer::encode(prompt).last().unwrap();
+    let mut expected = String::new();
+    for _ in 0..30 {
+        last = sim_next_token(last);
+        expected.push(last as u8 as char);
+    }
+    let stop = &expected[10..13];
+    let cut = expected.find(stop).unwrap();
+
+    let el = spawn_sim_loop(0, 8);
+    let addr = serve_sim(&el, Some(1));
+    let body = format!(
+        r#"{{"prompt":"{}","max_tokens":30,"stop":{},"seed":7}}"#,
+        prompt,
+        Json::from(stop).to_string_compact()
+    );
+    let (status, resp) = post_generate(addr, &body);
+    assert_eq!(status, 200, "{}", resp);
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("finish_reason").as_str(), Some("stop"));
+    assert_eq!(j.get("text").as_str().unwrap(), &expected[..cut]);
+    assert!(j.get("generated").as_usize().unwrap() < 30);
+    el.shutdown();
+}
+
+#[test]
+fn dead_engine_flips_healthz_to_503_and_stops_the_server() {
+    let el = spawn_sim_loop(0, 8);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sub = el.submitter();
+    let server = thread::spawn(move || serve_listener(listener, sub, ServeOptions::default()));
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200, "{}", body);
+    el.shutdown();
+    // health is honest: a dead engine loop turns this instance unhealthy
+    let (status, _) = get(addr, "/healthz");
+    assert_eq!(status, 503);
+    // and the acceptor notices on its next pass and exits with an error
+    let result = server.join().unwrap();
+    assert!(result.is_err(), "server must stop once the engine loop is gone");
+}
+
+#[test]
+fn malformed_requests_get_400_not_garbage_parsing() {
+    let el = spawn_sim_loop(0, 8);
+    let addr = serve_sim(&el, None);
+    // bad JSON body
+    let (status, body) = post_generate(addr, "this is not json");
+    assert_eq!(status, 400, "{}", body);
+    // missing prompt
+    let (status, _) = post_generate(addr, r#"{"max_tokens":4}"#);
+    assert_eq!(status, 400);
+    // garbage request line
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"NONSENSE\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 400"), "{}", resp);
+    // oversized declared body
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"POST /generate HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 413"), "{}", resp);
+    // unknown path still routes
+    let (status, _) = get(addr, "/nope");
+    assert_eq!(status, 404);
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok");
+    el.shutdown();
+}
