@@ -1,0 +1,24 @@
+# Build entry points shared by developers and CI.
+#
+#   make artifacts   AOT-compile the JAX/Pallas model to HLO text +
+#                    weights blob + golden trace under rust/artifacts/
+#                    (needs python with jax[cpu]; see python/compile/).
+#   make test        tier-1 verify (build + test, stub-friendly).
+#   make bench       modeled-mode bench smoke; writes rust/BENCH_decode.json.
+
+PYTHON ?= python3
+ARTIFACTS_DIR ?= rust/artifacts
+
+.PHONY: artifacts test bench clean-artifacts
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo bench --bench e2e
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

@@ -17,11 +17,12 @@ use freekv::util::json::{Json, JsonObj};
 /// One real-engine decode run; returns (ms/step, stats snapshot, tokens).
 fn real_decode(
     overlap: bool,
+    exec_workers: usize,
     batch: usize,
     steps: usize,
 ) -> Option<(f64, freekv::coordinator::engine::EngineStats, Vec<Vec<i32>>)> {
     let rt = Runtime::load("artifacts").ok()?;
-    let params = FreeKvParams { tau: 0.9, overlap, ..Default::default() };
+    let params = FreeKvParams { tau: 0.9, overlap, exec_workers, ..Default::default() };
     let mut eng = Engine::new(rt, "tiny", params).ok()?;
     let prompt: Vec<i32> = (0..480).map(|i| (i * 17 % 250) as i32).collect();
     let mut seqs: Vec<_> = (0..batch)
@@ -129,16 +130,58 @@ fn main() {
     }
 
     println!();
+    println!("=== bench e2e: modeled serial vs pooled artifact dispatch (Llama-3.1-8B) ===");
+    {
+        // The executor-pool analog: selection scoring moves off the
+        // compute stream (SimKnobs::pooled_selection), the modeled twin
+        // of FreeKvParams::exec_workers on the real engine.
+        let cm = CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b());
+        let serial = simulate_request(Method::FreeKv, &cm, 4, 32768, 256, &SimKnobs::default());
+        let pooled = simulate_request(
+            Method::FreeKv,
+            &cm,
+            4,
+            32768,
+            256,
+            &SimKnobs { pooled_selection: true, ..Default::default() },
+        );
+        let speedup = serial.per_token() / pooled.per_token();
+        println!(
+            "serial  {:>7.2} ms/tok (selection exposed {:>6.3} ms, on the compute stream)",
+            serial.per_token() * 1e3,
+            serial.selection_exposed * 1e3 / serial.steps.max(1) as f64,
+        );
+        println!(
+            "pooled  {:>7.2} ms/tok (selection exposed {:>6.3} ms of {:>6.3} ms busy)  -> {:.2}x",
+            pooled.per_token() * 1e3,
+            pooled.selection_exposed * 1e3 / pooled.steps.max(1) as f64,
+            pooled.selection_busy * 1e3 / pooled.steps.max(1) as f64,
+            speedup
+        );
+        let mut modeled = JsonObj::new();
+        modeled.insert("config", "llama-3.1-8b b=4 32k->256");
+        modeled.insert("serial_ms_per_tok", serial.per_token() * 1e3);
+        modeled.insert("pooled_ms_per_tok", pooled.per_token() * 1e3);
+        modeled.insert("speedup", speedup);
+        modeled.insert(
+            "pooled_selection_exposed_frac",
+            pooled.selection_exposed / pooled.selection_busy.max(1e-12),
+        );
+        report.insert("modeled_dispatch", modeled);
+    }
+
+    println!();
     println!("=== bench e2e: real tiny-model engine throughput ===");
     if Runtime::load("artifacts").is_err() {
         println!("artifacts/ missing — run `make artifacts` (skipping real bench)");
         report.insert("real", Json::Null);
+        report.insert("real_dispatch", Json::Null);
         write_report(&report);
         return;
     }
-    // baseline throughput sweep (speculative overlapped mode)
+    // baseline throughput sweep (speculative overlapped mode, pooled)
     for &batch in &[1usize, 4] {
-        if let Some((ms_per_step, _, _)) = real_decode(true, batch, 48) {
+        if let Some((ms_per_step, _, _)) = real_decode(true, 2, batch, 48) {
             println!(
                 "real decode: batch={} {:>6.1} ms/step  {:>6.1} tok/s",
                 batch,
@@ -149,10 +192,56 @@ fn main() {
     }
 
     println!();
+    println!("=== bench e2e: REAL serial vs pooled artifact dispatch (tiny, b=4) ===");
+    {
+        // Same recall overlap in both runs; only the execution venue of
+        // selection scoring changes (engine thread vs executor pool).
+        let (batch, steps) = (4usize, 48usize);
+        let inline = real_decode(true, 0, batch, steps);
+        let pooled = real_decode(true, 2, batch, steps);
+        match (inline, pooled) {
+            (Some((ser_ms, ser_st, ser_toks)), Some((pool_ms, pool_st, pool_toks))) => {
+                let speedup = ser_ms / pool_ms;
+                println!(
+                    "serial  {:>7.2} ms/step | select exposed {:>7.2} ms (on-thread)",
+                    ser_ms,
+                    ser_st.select_secs * 1e3,
+                );
+                println!(
+                    "pooled  {:>7.2} ms/step | select exposed {:>7.2} ms hidden {:>7.2} ms | {} pool jobs | {:.2}x",
+                    pool_ms,
+                    pool_st.select_secs * 1e3,
+                    pool_st.select_hidden_secs * 1e3,
+                    pool_st.exec_jobs,
+                    speedup,
+                );
+                let identical = ser_toks == pool_toks;
+                println!("outputs bit-identical across dispatch modes: {}", identical);
+                let mut real = JsonObj::new();
+                real.insert("model", "tiny");
+                real.insert("batch", batch);
+                real.insert("steps", steps);
+                real.insert("serial_ms_per_step", ser_ms);
+                real.insert("pooled_ms_per_step", pool_ms);
+                real.insert("speedup", speedup);
+                real.insert("serial_select_secs", ser_st.select_secs);
+                real.insert("pooled_select_secs", pool_st.select_secs);
+                real.insert("pooled_select_hidden_secs", pool_st.select_hidden_secs);
+                real.insert("pooled_exec_jobs", pool_st.exec_jobs as usize);
+                real.insert("outputs_identical", identical);
+                report.insert("real_dispatch", real);
+            }
+            _ => {
+                report.insert("real_dispatch", Json::Null);
+            }
+        }
+    }
+
+    println!();
     println!("=== bench e2e: REAL serial-dispatch vs overlapped recall (tiny, b=4) ===");
     let (batch, steps) = (4usize, 48usize);
-    let serial = real_decode(false, batch, steps);
-    let overlapped = real_decode(true, batch, steps);
+    let serial = real_decode(false, 2, batch, steps);
+    let overlapped = real_decode(true, 2, batch, steps);
     match (serial, overlapped) {
         (Some((ser_ms, ser_st, ser_toks)), Some((ovl_ms, ovl_st, ovl_toks))) => {
             let speedup = ser_ms / ovl_ms;

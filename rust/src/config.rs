@@ -174,6 +174,21 @@ pub struct FreeKvParams {
     /// serial in-thread dispatch as the ablation baseline; results are
     /// bit-identical either way.
     pub overlap: bool,
+    /// Workers in the Send-safe PJRT executor pool
+    /// (`runtime::executor`). With N >= 1, selection scoring is
+    /// submitted to the pool and leaves the decode critical path, and
+    /// `Engine::decode_step_pair` can pipeline two microbatches across
+    /// workers. `0` keeps every artifact execution inline on the engine
+    /// thread — the serial-dispatch ablation baseline. Outputs are
+    /// bit-identical either way (same artifacts, same inputs).
+    ///
+    /// Memory note: single-lane decode sends only selection (weight-free
+    /// artifacts) to the pool, so workers stay cheap. Paired-microbatch
+    /// decode routes weight-bearing artifacts too, and each worker's
+    /// private runtime then lazily uploads its own copy of the config's
+    /// weights — budget roughly `(exec_workers + 1) x` weight memory
+    /// when enabling the scheduler's `microbatch_min`.
+    pub exec_workers: usize,
 }
 
 impl Default for FreeKvParams {
@@ -184,6 +199,7 @@ impl Default for FreeKvParams {
             variant: SelectVariant::MeanS,
             no_speculation: false,
             overlap: true,
+            exec_workers: 2,
         }
     }
 }

@@ -11,6 +11,17 @@
 //! correction check. Gather is incremental: each sequence keeps
 //! per-layer persistent batch-lane tensors that only dirty slots are
 //! rewritten into.
+//!
+//! Artifact execution itself is dispatched through `runtime::executor`
+//! when `FreeKvParams::exec_workers > 0`: the decode step is factored
+//! into explicit submit/join phases over a [`Lane`] (one microbatch), so
+//! selection scoring runs on a pool worker while this thread drains the
+//! recall pipeline, and [`Engine::decode_step_pair`] interleaves two
+//! lanes so one microbatch's host-side work (gather, correction, page
+//! bookkeeping) overlaps the other's QKV/attention execution. With
+//! `exec_workers == 0` every phase executes inline in the same order —
+//! the serial-dispatch ablation — and outputs are bit-identical either
+//! way.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -20,7 +31,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{FreeKvParams, ModelConfig};
 use crate::kvcache::{Layout, RequestKv};
 use crate::policies::freekv::{correction_check, SpecState};
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{ExecJob, ExecTicket, ExecutorPool, HostTensor, Runtime};
 use crate::transfer::{RecallJob, RecallPipeline, TransferEngine};
 use crate::util::rng::Rng;
 
@@ -50,6 +61,14 @@ pub struct EngineStats {
     pub recall_jobs: u64,
     /// Peak number of jobs simultaneously in flight on the worker.
     pub max_queue_depth: u64,
+    /// Artifact executions dispatched to the executor pool (0 under
+    /// serial in-thread dispatch).
+    pub exec_jobs: u64,
+    /// Selection-scoring worker time hidden behind engine-thread work
+    /// (`select_secs` counts only the time the engine blocked joining).
+    pub select_hidden_secs: f64,
+    /// Decode invocations that pipelined two microbatches as a pair.
+    pub microbatch_pairs: u64,
     pub steps: u64,
     /// Decode steps that carried ≥ 2 sequences (continuous batching
     /// actually interleaving concurrent requests).
@@ -110,6 +129,21 @@ pub trait Backend {
     fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>>;
 
     fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()>;
+
+    /// Decode two disjoint microbatches "in flight together". The
+    /// default runs them back to back (correct for any backend); the
+    /// real [`Engine`] overrides it to pipeline the two across the
+    /// executor pool so one microbatch's host-side work overlaps the
+    /// other's artifact execution. Appends exactly one token to every
+    /// sequence of both batches, like two `decode_step` calls.
+    fn decode_step_pair(
+        &mut self,
+        a: &mut [&mut Sequence],
+        b: &mut [&mut Sequence],
+    ) -> Result<()> {
+        self.decode_step(a)?;
+        self.decode_step(b)
+    }
 
     /// Mid-flight retirement hook: reclaim in-flight transfer state so a
     /// cancelled sequence strands nothing on background workers.
@@ -198,11 +232,49 @@ impl Sequence {
 
 /// Reused artifact-input scratch for batched selection (the smin/smax
 /// planes are the largest per-step host allocations; rebuilding them
-/// every layer/step is pure waste).
+/// every layer/step is pure waste). Kept in a small free-list on the
+/// engine: pooled dispatch moves the tensors into the executor job and
+/// gets them back with the completion, and paired microbatches need two
+/// in rotation.
 struct SelScratch {
     bucket: usize,
     /// [q, smin, smax, mask] in the select artifact's argument order.
     args: Vec<HostTensor>,
+}
+
+/// An artifact execution in flight: either already done (serial
+/// in-thread dispatch) or a ticket on the executor pool. Both hand the
+/// input tensors back so scratch buffers survive the round trip.
+enum Pending {
+    Ready { outputs: Vec<HostTensor>, inputs: Vec<HostTensor>, busy_secs: f64 },
+    Ticket(ExecTicket),
+}
+
+/// Per-microbatch decode state threaded through the lane phases. Holds
+/// the mutable borrow of its sequences plus the tensors that flow
+/// between phases; at most one artifact execution is pending per lane.
+struct Lane<'a, 'b> {
+    seqs: &'a mut [&'b mut Sequence],
+    /// live sequences (<= bucket; the rest is padding).
+    n: usize,
+    bucket: usize,
+    /// hidden state entering the next artifact.
+    h: Option<HostTensor>,
+    /// position tensor, reused across layers.
+    pos_t: Option<HostTensor>,
+    pending: Option<Pending>,
+    q_all: Vec<f32>,
+    k_new: Vec<f32>,
+    v_new: Vec<f32>,
+    /// (q, k_new, v_new) tensors held for the attention args.
+    qkv_t: Option<(HostTensor, HostTensor, HostTensor)>,
+    /// selected pages per (sequence, kv head), post mask filter.
+    sel_pages: Vec<Vec<Vec<usize>>>,
+    /// route *every* artifact of this lane through the pool (pair mode,
+    /// where the other lane's host work overlaps). Single-lane decode
+    /// pools only selection — the other joins are immediate, so pooling
+    /// them would add dispatch overhead for zero overlap.
+    pool_all: bool,
 }
 
 /// The engine: owns the runtime handle + model config and executes the
@@ -222,14 +294,26 @@ pub struct Engine {
     pub sim_trace: Vec<(usize, Vec<f32>)>,
     /// background recall worker (lazily spawned when overlap is active).
     pipeline: Option<RecallPipeline>,
-    sel_scratch: Option<SelScratch>,
+    /// Send-safe executor pool (`params.exec_workers` PJRT clients);
+    /// `None` keeps all artifact execution inline on this thread.
+    executor: Option<ExecutorPool>,
+    /// free-list of selection scratches (one per bucket in rotation).
+    sel_scratch: Vec<SelScratch>,
     /// reclaimed batch gather tensors (gk, gv, gvalid).
-    attn_scratch: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+    attn_scratch: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
 }
 
 impl Engine {
     pub fn new(rt: Runtime, cfg_name: &str, params: FreeKvParams) -> Result<Engine> {
         let cfg = rt.manifest.config(cfg_name)?.clone();
+        // Each pool worker owns a full PJRT client built on its own
+        // thread (the EngineLoop trick); the engine-thread runtime stays
+        // for prefill and serial dispatch.
+        let executor = if params.exec_workers > 0 {
+            Some(ExecutorPool::for_manifest(&rt.manifest, params.exec_workers)?)
+        } else {
+            None
+        };
         Ok(Engine {
             rt,
             cfg,
@@ -240,13 +324,27 @@ impl Engine {
             record_sims: false,
             sim_trace: Vec::new(),
             pipeline: None,
-            sel_scratch: None,
-            attn_scratch: None,
+            executor,
+            sel_scratch: Vec::new(),
+            attn_scratch: Vec::new(),
         })
     }
 
     pub fn art(&self, name: &str) -> String {
         format!("{}_{}", self.cfg_name, name)
+    }
+
+    /// Eager-compile every artifact of this engine's config on the
+    /// engine-thread runtime AND, when pooled, on every executor worker
+    /// (each owns a private executable cache), so the first request pays
+    /// no XLA compilation anywhere. Returns the per-runtime artifact
+    /// count.
+    pub fn warmup(&self) -> Result<usize> {
+        let n = self.rt.warmup(&self.cfg_name)?;
+        if let Some(pool) = &self.executor {
+            pool.warmup(&self.cfg_name)?;
+        }
+        Ok(n)
     }
 
     /// Create a fresh sequence for a prompt.
@@ -345,235 +443,31 @@ impl Engine {
     /// Run one decode step for a batch of sequences (all must have at
     /// least one token; finished lanes are skipped by the caller).
     /// Appends the sampled token to each sequence.
+    ///
+    /// The step is a sequence of lane phases. Under pooled dispatch the
+    /// phase split is what buys overlap: selection scoring executes on
+    /// an executor worker while this thread drains the recall pipeline,
+    /// and joins just before the correction check needs the result.
+    /// Serial dispatch executes each phase inline in the same order.
     pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
         let t_step = Instant::now();
-        let cfg = self.cfg.clone();
-        let n = seqs.len();
-        self.stats.max_batch_lanes = self.stats.max_batch_lanes.max(n as u64);
-        if n > 1 {
-            self.stats.batched_steps += 1;
-        }
-        let bucket = self
-            .rt
-            .manifest
-            .decode_bucket(n)
-            .ok_or_else(|| anyhow!("batch {} exceeds decode buckets", n))?;
-        let (m, dh, qo, s) = (cfg.n_kv, cfg.d_head, cfg.n_qo, cfg.budget_slots());
-        let overlap = self.overlap_active();
-        if overlap && self.pipeline.is_none() {
-            self.pipeline = Some(RecallPipeline::new(cfg.page_size, cfg.d_head));
-        }
-
-        // ---- embed ----
-        let mut toks: Vec<i32> = seqs.iter().map(|q| *q.tokens.last().unwrap()).collect();
-        toks.resize(bucket, 0);
-        let mut pos: Vec<i32> = seqs.iter().map(|q| q.pos() as i32).collect();
-        pos.resize(bucket, 0);
-        let mut h = self
-            .rt
-            .run(&self.art(&format!("embed_b{}", bucket)), &[HostTensor::I32(toks, vec![bucket])], None)?
-            .remove(0);
-        let pos_t = HostTensor::I32(pos, vec![bucket]);
-
-        for l in 0..cfg.n_layers {
-            // ---- QKV (split from attention so correction can intercept
-            // between computing q_i and attending, per Fig. 4b) ----
-            let t0 = Instant::now();
-            let out = self.rt.run(
-                &self.art(&format!("layer_qkv_b{}", bucket)),
-                &[h.clone(), pos_t.clone()],
-                Some(l),
-            )?;
-            self.stats.qkv_secs += t0.elapsed().as_secs_f64();
-            let mut it = out.into_iter();
-            let q_t = it.next().unwrap();
-            let k_new_t = it.next().unwrap();
-            let v_new_t = it.next().unwrap();
-            let q_all = q_t.f32s()?.to_vec();
-            let k_new = k_new_t.f32s()?.to_vec();
-            let v_new = v_new_t.f32s()?.to_vec();
-
-            // ---- selection with the current step's queries (batched):
-            // used NOW for corrected heads, and for the NEXT step's
-            // speculative reuse. Needs only the compute half, so it runs
-            // before the drain to hide a little more of the worker's
-            // recall. ----
-            let t0 = Instant::now();
-            let sel_pages = self.run_selection_batch(seqs, l, &q_all, bucket)?;
-            self.stats.select_secs += t0.elapsed().as_secs_f64();
-
-            // ---- drain: re-attach this layer's transfer half (the
-            // previous step's speculative recall) before anything below
-            // touches the select table or pool ----
-            for seq in seqs.iter_mut() {
-                self.drain_layer(seq, l);
+        self.ensure_pipeline();
+        let n_layers = self.cfg.n_layers;
+        {
+            let mut lane = self.lane_start(&mut *seqs, false)?;
+            self.lane_embed_join(&mut lane)?;
+            for l in 0..n_layers {
+                self.lane_qkv_submit(&mut lane, l)?;
+                self.lane_qkv_join(&mut lane)?;
+                self.lane_select_submit(&mut lane, l)?;
+                self.lane_drain(&mut lane, l);
+                self.lane_select_join(&mut lane)?;
+                self.lane_correct(&mut lane, l);
+                self.lane_attn_submit(&mut lane, l)?;
+                self.lane_attn_join(&mut lane, l)?;
             }
-
-            // ---- correction check + blocking recall for flagged heads --
-            for (i, seq) in seqs.iter_mut().enumerate() {
-                let q_i = &q_all[i * qo * dh..(i + 1) * qo * dh];
-                // Following the paper (App. A), compression heuristics are
-                // not applied to the first layer: its query similarity is
-                // inherently low (h = embedding only), so layer 0 always
-                // runs blocking selection and is excluded from correction
-                // statistics.
-                let decision = if self.blocking_mode || l == 0 {
-                    None
-                } else {
-                    seq.spec[l].head_similarities(q_i).map(|sims| {
-                        self.stats.correction_checks += m as u64;
-                        if self.record_sims {
-                            self.sim_trace.push((l, sims.clone()));
-                        }
-                        correction_check(&sims, m, &self.params)
-                    })
-                };
-                match decision {
-                    Some(d) => {
-                        for &head in &d.corrected_heads {
-                            self.stats.corrections += 1;
-                            let t1 = Instant::now();
-                            let nrec = seq.kv.apply_selection(
-                                l,
-                                head,
-                                &sel_pages[i][head],
-                                &mut seq.xfer,
-                            );
-                            let dt = t1.elapsed().as_secs_f64();
-                            self.stats.recall_secs += dt;
-                            self.stats.recall_exposed_secs += dt;
-                            self.stats.recalled_pages += nrec as u64;
-                        }
-                        let hit = m - d.corrected_heads.len();
-                        self.stats.speculative_hits += hit as u64;
-                    }
-                    None => {
-                        // blocking/first-layer path: install the current
-                        // selection before attention.
-                        for head in 0..m {
-                            let t1 = Instant::now();
-                            let nrec = seq.kv.apply_selection(
-                                l,
-                                head,
-                                &sel_pages[i][head],
-                                &mut seq.xfer,
-                            );
-                            let dt = t1.elapsed().as_secs_f64();
-                            self.stats.recall_secs += dt;
-                            self.stats.recall_exposed_secs += dt;
-                            self.stats.recalled_pages += nrec as u64;
-                        }
-                    }
-                }
-            }
-
-            // ---- incremental gather into persistent per-seq lanes ----
-            let t0 = Instant::now();
-            let (mut gk, mut gv, mut gvalid) = self.take_attn_scratch(bucket, m, s, dh);
-            for (i, seq) in seqs.iter_mut().enumerate() {
-                let (gpu, x) = seq.kv.layers[l].parts_mut();
-                let buf = &mut seq.gather[l];
-                gpu.gather_dirty(&mut x.select, &mut buf.k, &mut buf.v, &mut buf.valid);
-                gk[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&buf.k);
-                gv[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&buf.v);
-                gvalid[i * m * s..(i + 1) * m * s].copy_from_slice(&buf.valid);
-            }
-            for lane in n..bucket {
-                gvalid[lane * m * s..(lane + 1) * m * s].iter_mut().for_each(|v| *v = 0.0);
-            }
-            self.stats.gather_secs += t0.elapsed().as_secs_f64();
-
-            // ---- attention ----
-            let t0 = Instant::now();
-            let args = [
-                h,
-                q_t,
-                k_new_t,
-                v_new_t,
-                HostTensor::F32(gk, vec![bucket, m, s, dh]),
-                HostTensor::F32(gv, vec![bucket, m, s, dh]),
-                HostTensor::F32(gvalid, vec![bucket, m, s]),
-            ];
-            let out = self.rt.run(&self.art(&format!("layer_attn_b{}", bucket)), &args, Some(l))?;
-            self.stats.attn_secs += t0.elapsed().as_secs_f64();
-            h = out.into_iter().next().unwrap();
-            // reclaim the big gather tensors for the next layer/step
-            let mut it = args.into_iter().skip(4);
-            if let (
-                Some(HostTensor::F32(a, _)),
-                Some(HostTensor::F32(b, _)),
-                Some(HostTensor::F32(c, _)),
-            ) = (it.next(), it.next(), it.next())
-            {
-                self.attn_scratch = Some((a, b, c));
-            }
-
-            // ---- append new KV, offload completed pages ----
-            for (i, seq) in seqs.iter_mut().enumerate() {
-                let kn = &k_new[i * m * dh..(i + 1) * m * dh];
-                let vn = &v_new[i * m * dh..(i + 1) * m * dh];
-                seq.kv.append(l, kn, vn, &mut seq.xfer);
-            }
-
-            // ---- speculative recall for the NEXT step (non-corrected
-            // heads; page-cache diff makes re-selection cheap). With
-            // overlap on, the transfer half is checked out to the worker
-            // and the recall hides under the remaining layers' compute;
-            // serial mode keeps it inline as the ablation baseline. ----
-            if !self.blocking_mode {
-                if overlap {
-                    for (i, seq) in seqs.iter_mut().enumerate() {
-                        let xfer = seq.kv.layers[l].take_xfer();
-                        let pipe = self.pipeline.as_mut().expect("pipeline active");
-                        pipe.submit(RecallJob {
-                            seq_uid: seq.uid,
-                            layer: l,
-                            selections: sel_pages[i].clone(),
-                            xfer,
-                        });
-                        self.stats.recall_jobs += 1;
-                        // sweep finished completions first so this counts
-                        // actual worker backlog, not jobs-since-drain
-                        pipe.poll();
-                        let depth = pipe.pending() as u64;
-                        self.stats.max_queue_depth = self.stats.max_queue_depth.max(depth);
-                    }
-                } else {
-                    for (i, seq) in seqs.iter_mut().enumerate() {
-                        for head in 0..m {
-                            let t1 = Instant::now();
-                            let nrec =
-                                seq.kv.apply_selection(l, head, &sel_pages[i][head], &mut seq.xfer);
-                            let dt = t1.elapsed().as_secs_f64();
-                            self.stats.recall_secs += dt;
-                            self.stats.recall_exposed_secs += dt;
-                            self.stats.recalled_pages += nrec as u64;
-                        }
-                    }
-                }
-            }
-
-            // remember q for the next step's correction check
-            for (i, seq) in seqs.iter_mut().enumerate() {
-                seq.spec[l].store(&q_all[i * qo * dh..(i + 1) * qo * dh]);
-            }
-        }
-
-        // ---- logits + sampling ----
-        let t0 = Instant::now();
-        let lg = self
-            .rt
-            .run(&self.art(&format!("logits_b{}", bucket)), &[h], None)?
-            .remove(0)
-            .into_f32s()?;
-        self.stats.logits_secs += t0.elapsed().as_secs_f64();
-        for (i, seq) in seqs.iter_mut().enumerate() {
-            let row = &lg[i * cfg.vocab..(i + 1) * cfg.vocab];
-            let tok = sample_token(row, &seq.sample, &mut seq.rng);
-            seq.tokens.push(tok);
-            if Some(tok) == seq.eos {
-                seq.finished = true;
-            }
+            self.lane_logits_submit(&mut lane)?;
+            self.lane_logits_join(&mut lane)?;
         }
 
         // Finished sequences leave the batch after this step: reclaim
@@ -587,6 +481,525 @@ impl Engine {
 
         self.stats.steps += 1;
         self.stats.decode_secs += t_step.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Decode two disjoint microbatches as a pipelined pair: while lane
+    /// A's QKV / selection / attention execute on pool workers, this
+    /// thread does lane B's host-side phases (and vice versa), so the
+    /// engine thread and several PJRT clients stay busy simultaneously.
+    /// Without a pool the lanes run back to back — same results, no
+    /// overlap. Equivalent to `decode_step(a); decode_step(b)` in
+    /// outputs either way.
+    ///
+    /// Bucket-aware: when the joint batch fits the same compiled bucket
+    /// a single lane would use, splitting buys nothing and *doubles*
+    /// artifact compute (each half pads up to that bucket), so the pair
+    /// is decoded as one joint step instead. The split genuinely pays
+    /// when the joint batch needs a larger bucket — or exceeds every
+    /// compiled bucket, which is what lets the scheduler run batches
+    /// past the largest bucket at all.
+    pub fn decode_step_pair(
+        &mut self,
+        a: &mut [&mut Sequence],
+        b: &mut [&mut Sequence],
+    ) -> Result<()> {
+        if a.is_empty() {
+            return self.decode_chunked(b);
+        }
+        if b.is_empty() {
+            return self.decode_chunked(a);
+        }
+        let lane_bucket = self.rt.manifest.decode_bucket(a.len().max(b.len()));
+        if lane_bucket.is_none() {
+            // A half wider than the largest compiled bucket cannot run
+            // as one lane no matter how we pair; decode each half in
+            // bucket-sized chunks instead of failing the whole engine.
+            self.decode_chunked(a)?;
+            return self.decode_chunked(b);
+        }
+        let joint_bucket = self.rt.manifest.decode_bucket(a.len() + b.len());
+        if let (Some(joint), Some(lane)) = (joint_bucket, lane_bucket) {
+            if joint <= lane {
+                let mut joint_batch: Vec<&mut Sequence> = a
+                    .iter_mut()
+                    .map(|s| &mut **s)
+                    .chain(b.iter_mut().map(|s| &mut **s))
+                    .collect();
+                return self.decode_step(&mut joint_batch);
+            }
+        }
+        if self.executor.is_none() {
+            self.decode_step(a)?;
+            return self.decode_step(b);
+        }
+        let t_step = Instant::now();
+        self.ensure_pipeline();
+        self.stats.microbatch_pairs += 1;
+        let n_layers = self.cfg.n_layers;
+        {
+            let mut la = self.lane_start(&mut *a, true)?;
+            let mut lb = self.lane_start(&mut *b, true)?;
+            self.lane_embed_join(&mut la)?;
+            self.lane_embed_join(&mut lb)?;
+            for l in 0..n_layers {
+                // Ping-pong schedule: every join on one lane has the
+                // other lane's artifact execution in flight behind it.
+                self.lane_qkv_submit(&mut la, l)?;
+                self.lane_qkv_submit(&mut lb, l)?;
+                self.lane_qkv_join(&mut la)?;
+                self.lane_select_submit(&mut la, l)?;
+                self.lane_qkv_join(&mut lb)?;
+                self.lane_select_submit(&mut lb, l)?;
+                self.lane_drain(&mut la, l);
+                self.lane_drain(&mut lb, l);
+                self.lane_select_join(&mut la)?;
+                self.lane_correct(&mut la, l);
+                self.lane_attn_submit(&mut la, l)?;
+                self.lane_select_join(&mut lb)?;
+                self.lane_correct(&mut lb, l);
+                self.lane_attn_submit(&mut lb, l)?;
+                self.lane_attn_join(&mut la, l)?;
+                self.lane_attn_join(&mut lb, l)?;
+            }
+            self.lane_logits_submit(&mut la)?;
+            self.lane_logits_submit(&mut lb)?;
+            self.lane_logits_join(&mut la)?;
+            self.lane_logits_join(&mut lb)?;
+        }
+        for seq in a.iter_mut().chain(b.iter_mut()) {
+            if seq.done() {
+                self.drain_sequence(seq);
+            }
+        }
+        // Two microbatch decode invocations, one wall-clock interval.
+        self.stats.steps += 2;
+        self.stats.decode_secs += t_step.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Decode a batch of any width: one step when it fits a compiled
+    /// bucket, otherwise sequential bucket-sized chunks. Keeps oversized
+    /// microbatch halves from turning into a fatal engine-global error.
+    fn decode_chunked(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+        if seqs.is_empty() {
+            return Ok(());
+        }
+        if self.rt.manifest.decode_bucket(seqs.len()).is_some() {
+            return self.decode_step(seqs);
+        }
+        let cap = self
+            .rt
+            .manifest
+            .decode_batch_buckets
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        for chunk in seqs.chunks_mut(cap) {
+            self.decode_step(chunk)?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Lane phases (shared by decode_step and decode_step_pair)
+    // ------------------------------------------------------------------
+
+    fn ensure_pipeline(&mut self) {
+        if self.overlap_active() && self.pipeline.is_none() {
+            self.pipeline = Some(RecallPipeline::new(self.cfg.page_size, self.cfg.d_head));
+        }
+    }
+
+    /// Dispatch an artifact execution: to the pool when `pooled` (and a
+    /// pool exists), inline otherwise. Inline execution happens *here*
+    /// (submit time), so serial dispatch preserves the exact historical
+    /// op order.
+    fn dispatch_in(&mut self, job: ExecJob, pooled: bool) -> Result<Pending> {
+        if pooled {
+            if let Some(pool) = &self.executor {
+                self.stats.exec_jobs += 1;
+                return Ok(Pending::Ticket(pool.submit(job)));
+            }
+        }
+        let (name, layer, args) = job.into_parts();
+        let t0 = Instant::now();
+        let outputs = self.rt.run(&name, &args, layer)?;
+        Ok(Pending::Ready { outputs, inputs: args, busy_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Join a pending execution: (outputs, returned inputs, worker busy
+    /// seconds, seconds this thread actually blocked). For inline
+    /// executions the two times coincide.
+    fn join(p: Pending) -> Result<(Vec<HostTensor>, Vec<HostTensor>, f64, f64)> {
+        match p {
+            Pending::Ready { outputs, inputs, busy_secs } => {
+                Ok((outputs, inputs, busy_secs, busy_secs))
+            }
+            Pending::Ticket(t) => {
+                let t0 = Instant::now();
+                let done = t.wait()?;
+                Ok((done.outputs, done.inputs, done.busy_secs, t0.elapsed().as_secs_f64()))
+            }
+        }
+    }
+
+    /// Open a lane over one microbatch: bucket lookup, batching stats,
+    /// and the embed dispatch.
+    fn lane_start<'a, 'b>(
+        &mut self,
+        seqs: &'a mut [&'b mut Sequence],
+        pool_all: bool,
+    ) -> Result<Lane<'a, 'b>> {
+        let n = seqs.len();
+        self.stats.max_batch_lanes = self.stats.max_batch_lanes.max(n as u64);
+        if n > 1 {
+            self.stats.batched_steps += 1;
+        }
+        let bucket = self
+            .rt
+            .manifest
+            .decode_bucket(n)
+            .ok_or_else(|| anyhow!("batch {} exceeds decode buckets", n))?;
+        let mut toks: Vec<i32> = seqs.iter().map(|q| *q.tokens.last().unwrap()).collect();
+        toks.resize(bucket, 0);
+        let mut pos: Vec<i32> = seqs.iter().map(|q| q.pos() as i32).collect();
+        pos.resize(bucket, 0);
+        let name = self.art(&format!("embed_b{}", bucket));
+        let pending = self.dispatch_in(
+            ExecJob::Embed { name, args: vec![HostTensor::I32(toks, vec![bucket])] },
+            pool_all,
+        )?;
+        Ok(Lane {
+            seqs,
+            n,
+            bucket,
+            h: None,
+            pos_t: Some(HostTensor::I32(pos, vec![bucket])),
+            pending: Some(pending),
+            q_all: Vec::new(),
+            k_new: Vec::new(),
+            v_new: Vec::new(),
+            qkv_t: None,
+            sel_pages: Vec::new(),
+            pool_all,
+        })
+    }
+
+    fn lane_embed_join(&mut self, lane: &mut Lane<'_, '_>) -> Result<()> {
+        let pending = lane.pending.take().expect("embed in flight");
+        let (mut outputs, _inputs, _busy, _waited) = Self::join(pending)?;
+        lane.h = Some(outputs.remove(0));
+        Ok(())
+    }
+
+    /// QKV (split from attention so correction can intercept between
+    /// computing q_i and attending, per Fig. 4b).
+    fn lane_qkv_submit(&mut self, lane: &mut Lane<'_, '_>, l: usize) -> Result<()> {
+        let name = self.art(&format!("layer_qkv_b{}", lane.bucket));
+        let args = vec![
+            lane.h.take().expect("hidden state present"),
+            lane.pos_t.take().expect("pos tensor present"),
+        ];
+        let pooled = lane.pool_all;
+        lane.pending = Some(self.dispatch_in(ExecJob::Qkv { name, layer: l, args }, pooled)?);
+        Ok(())
+    }
+
+    fn lane_qkv_join(&mut self, lane: &mut Lane<'_, '_>) -> Result<()> {
+        let pending = lane.pending.take().expect("qkv in flight");
+        let (outputs, mut inputs, _busy, waited) = Self::join(pending)?;
+        self.stats.qkv_secs += waited;
+        let mut it = outputs.into_iter();
+        let q_t = it.next().unwrap();
+        let k_new_t = it.next().unwrap();
+        let v_new_t = it.next().unwrap();
+        lane.q_all = q_t.f32s()?.to_vec();
+        lane.k_new = k_new_t.f32s()?.to_vec();
+        lane.v_new = v_new_t.f32s()?.to_vec();
+        lane.qkv_t = Some((q_t, k_new_t, v_new_t));
+        // recover the layer input h and the reusable pos tensor
+        lane.pos_t = Some(inputs.pop().expect("pos tensor returned"));
+        lane.h = Some(inputs.pop().expect("hidden state returned"));
+        Ok(())
+    }
+
+    /// Selection with the current step's queries (batched): used at this
+    /// layer for corrected heads, and for the NEXT step's speculative
+    /// reuse. Needs only the compute half of the KV state, so under
+    /// pooled dispatch it scores on a worker while the engine drains the
+    /// recall pipeline — selection scoring leaves the critical path.
+    fn lane_select_submit(&mut self, lane: &mut Lane<'_, '_>, l: usize) -> Result<()> {
+        let (m, dh, p) = (self.cfg.n_kv, self.cfg.d_head, self.cfg.n_pages_max());
+        let bucket = lane.bucket;
+        // Host-side input build counts as selection time (it did in the
+        // monolithic run_selection_batch; keeps the real-breakdown
+        // exhibit comparable across PRs).
+        let t_fill = Instant::now();
+        let mut scratch = self.take_sel_scratch(bucket);
+        {
+            let mut it = scratch.args.iter_mut();
+            let (qt, smin_t, smax_t, mask_t) =
+                (it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+            let (
+                HostTensor::F32(qd, _),
+                HostTensor::F32(lo, _),
+                HostTensor::F32(hi, _),
+                HostTensor::F32(mk, _),
+            ) = (qt, smin_t, smax_t, mask_t)
+            else {
+                unreachable!("selection scratch is always f32")
+            };
+            qd[..lane.q_all.len()].copy_from_slice(&lane.q_all);
+            qd[lane.q_all.len()..].iter_mut().for_each(|x| *x = 0.0);
+            for (i, seq) in lane.seqs.iter().enumerate() {
+                let gpu = &seq.kv.layers[l].gpu;
+                gpu.summaries_sanitized_into(
+                    &mut lo[i * m * p * dh..(i + 1) * m * p * dh],
+                    &mut hi[i * m * p * dh..(i + 1) * m * p * dh],
+                );
+                gpu.selectable_mask_into(&mut mk[i * p..(i + 1) * p]);
+            }
+            // padded lanes: clean mask so the artifact selects nothing
+            for pad in lane.n..bucket {
+                mk[pad * p..(pad + 1) * p].iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+        let name = self.art(&format!("select_{}_b{}", self.params.variant.as_str(), bucket));
+        self.stats.select_secs += t_fill.elapsed().as_secs_f64();
+        lane.pending = Some(self.dispatch_in(ExecJob::Selection { name, args: scratch.args }, true)?);
+        Ok(())
+    }
+
+    /// Drain: re-attach this layer's transfer half (the previous step's
+    /// speculative recall) before anything below touches the select
+    /// table or pool. Under pooled dispatch this wait runs concurrently
+    /// with the in-flight selection scoring.
+    fn lane_drain(&mut self, lane: &mut Lane<'_, '_>, l: usize) {
+        for seq in lane.seqs.iter_mut() {
+            self.drain_layer(seq, l);
+        }
+    }
+
+    fn lane_select_join(&mut self, lane: &mut Lane<'_, '_>) -> Result<()> {
+        let pending = lane.pending.take().expect("selection in flight");
+        let (outputs, inputs, busy, waited) = Self::join(pending)?;
+        self.stats.select_secs += waited;
+        self.stats.select_hidden_secs += (busy - waited).max(0.0);
+        // Index filtering is selection time too (see lane_select_submit).
+        let t_filter = Instant::now();
+        let idx = outputs[1].i32s()?;
+        let HostTensor::F32(mk, _) = &inputs[3] else {
+            unreachable!("selection scratch is always f32")
+        };
+        let (m, p) = (self.cfg.n_kv, self.cfg.n_pages_max());
+        let k_sel = self.cfg.select_pages;
+        let mut result = Vec::with_capacity(lane.n);
+        for i in 0..lane.n {
+            let mut per_head = Vec::with_capacity(m);
+            for head in 0..m {
+                let base = (i * m + head) * k_sel;
+                let pages: Vec<usize> = idx[base..base + k_sel]
+                    .iter()
+                    .map(|&x| x as usize)
+                    .filter(|&pg| pg < p && mk[i * p + pg] > 0.0)
+                    .collect();
+                per_head.push(pages);
+            }
+            result.push(per_head);
+        }
+        lane.sel_pages = result;
+        self.sel_scratch.push(SelScratch { bucket: lane.bucket, args: inputs });
+        self.stats.select_secs += t_filter.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Correction check + blocking recall for flagged heads.
+    fn lane_correct(&mut self, lane: &mut Lane<'_, '_>, l: usize) {
+        let (m, dh, qo) = (self.cfg.n_kv, self.cfg.d_head, self.cfg.n_qo);
+        for (i, seq) in lane.seqs.iter_mut().enumerate() {
+            let q_i = &lane.q_all[i * qo * dh..(i + 1) * qo * dh];
+            // Following the paper (App. A), compression heuristics are
+            // not applied to the first layer: its query similarity is
+            // inherently low (h = embedding only), so layer 0 always
+            // runs blocking selection and is excluded from correction
+            // statistics.
+            let decision = if self.blocking_mode || l == 0 {
+                None
+            } else {
+                seq.spec[l].head_similarities(q_i).map(|sims| {
+                    self.stats.correction_checks += m as u64;
+                    if self.record_sims {
+                        self.sim_trace.push((l, sims.clone()));
+                    }
+                    correction_check(&sims, m, &self.params)
+                })
+            };
+            match decision {
+                Some(d) => {
+                    for &head in &d.corrected_heads {
+                        self.stats.corrections += 1;
+                        let t1 = Instant::now();
+                        let nrec =
+                            seq.kv.apply_selection(l, head, &lane.sel_pages[i][head], &mut seq.xfer);
+                        let dt = t1.elapsed().as_secs_f64();
+                        self.stats.recall_secs += dt;
+                        self.stats.recall_exposed_secs += dt;
+                        self.stats.recalled_pages += nrec as u64;
+                    }
+                    let hit = m - d.corrected_heads.len();
+                    self.stats.speculative_hits += hit as u64;
+                }
+                None => {
+                    // blocking/first-layer path: install the current
+                    // selection before attention.
+                    for head in 0..m {
+                        let t1 = Instant::now();
+                        let nrec =
+                            seq.kv.apply_selection(l, head, &lane.sel_pages[i][head], &mut seq.xfer);
+                        let dt = t1.elapsed().as_secs_f64();
+                        self.stats.recall_secs += dt;
+                        self.stats.recall_exposed_secs += dt;
+                        self.stats.recalled_pages += nrec as u64;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Incremental gather into persistent per-seq lanes, then dispatch
+    /// attention.
+    fn lane_attn_submit(&mut self, lane: &mut Lane<'_, '_>, l: usize) -> Result<()> {
+        let (m, dh, s) = (self.cfg.n_kv, self.cfg.d_head, self.cfg.budget_slots());
+        let bucket = lane.bucket;
+        let t0 = Instant::now();
+        let (mut gk, mut gv, mut gvalid) = self.take_attn_scratch(bucket, m, s, dh);
+        for (i, seq) in lane.seqs.iter_mut().enumerate() {
+            let (gpu, x) = seq.kv.layers[l].parts_mut();
+            let buf = &mut seq.gather[l];
+            gpu.gather_dirty(&mut x.select, &mut buf.k, &mut buf.v, &mut buf.valid);
+            gk[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&buf.k);
+            gv[i * m * s * dh..(i + 1) * m * s * dh].copy_from_slice(&buf.v);
+            gvalid[i * m * s..(i + 1) * m * s].copy_from_slice(&buf.valid);
+        }
+        for pad in lane.n..bucket {
+            gvalid[pad * m * s..(pad + 1) * m * s].iter_mut().for_each(|v| *v = 0.0);
+        }
+        self.stats.gather_secs += t0.elapsed().as_secs_f64();
+
+        let (q_t, k_new_t, v_new_t) = lane.qkv_t.take().expect("qkv tensors present");
+        let args = vec![
+            lane.h.take().expect("hidden state present"),
+            q_t,
+            k_new_t,
+            v_new_t,
+            HostTensor::F32(gk, vec![bucket, m, s, dh]),
+            HostTensor::F32(gv, vec![bucket, m, s, dh]),
+            HostTensor::F32(gvalid, vec![bucket, m, s]),
+        ];
+        let name = self.art(&format!("layer_attn_b{}", bucket));
+        let pooled = lane.pool_all;
+        lane.pending = Some(self.dispatch_in(ExecJob::Attention { name, layer: l, args }, pooled)?);
+        Ok(())
+    }
+
+    /// Join attention, then the host-side tail of the layer: KV append +
+    /// offload, speculative recall dispatch for the next step, and the
+    /// query snapshot for the next correction check.
+    fn lane_attn_join(&mut self, lane: &mut Lane<'_, '_>, l: usize) -> Result<()> {
+        let pending = lane.pending.take().expect("attention in flight");
+        let (outputs, inputs, _busy, waited) = Self::join(pending)?;
+        self.stats.attn_secs += waited;
+        lane.h = Some(outputs.into_iter().next().expect("attention output"));
+        // reclaim the big gather tensors for the next layer/step
+        let mut it = inputs.into_iter().skip(4);
+        if let (
+            Some(HostTensor::F32(a, _)),
+            Some(HostTensor::F32(b, _)),
+            Some(HostTensor::F32(c, _)),
+        ) = (it.next(), it.next(), it.next())
+        {
+            self.attn_scratch.push((a, b, c));
+        }
+
+        let (m, dh, qo) = (self.cfg.n_kv, self.cfg.d_head, self.cfg.n_qo);
+        // ---- append new KV, offload completed pages ----
+        for (i, seq) in lane.seqs.iter_mut().enumerate() {
+            let kn = &lane.k_new[i * m * dh..(i + 1) * m * dh];
+            let vn = &lane.v_new[i * m * dh..(i + 1) * m * dh];
+            seq.kv.append(l, kn, vn, &mut seq.xfer);
+        }
+
+        // ---- speculative recall for the NEXT step (non-corrected
+        // heads; page-cache diff makes re-selection cheap). With
+        // overlap on, the transfer half is checked out to the worker
+        // and the recall hides under the remaining layers' compute;
+        // serial mode keeps it inline as the ablation baseline. ----
+        if !self.blocking_mode {
+            if self.overlap_active() {
+                for (i, seq) in lane.seqs.iter_mut().enumerate() {
+                    let xfer = seq.kv.layers[l].take_xfer();
+                    let pipe = self.pipeline.as_mut().expect("pipeline active");
+                    pipe.submit(RecallJob {
+                        seq_uid: seq.uid,
+                        layer: l,
+                        selections: lane.sel_pages[i].clone(),
+                        xfer,
+                    });
+                    self.stats.recall_jobs += 1;
+                    // sweep finished completions first so this counts
+                    // actual worker backlog, not jobs-since-drain
+                    pipe.poll();
+                    let depth = pipe.pending() as u64;
+                    self.stats.max_queue_depth = self.stats.max_queue_depth.max(depth);
+                }
+            } else {
+                for (i, seq) in lane.seqs.iter_mut().enumerate() {
+                    for head in 0..m {
+                        let t1 = Instant::now();
+                        let nrec =
+                            seq.kv.apply_selection(l, head, &lane.sel_pages[i][head], &mut seq.xfer);
+                        let dt = t1.elapsed().as_secs_f64();
+                        self.stats.recall_secs += dt;
+                        self.stats.recall_exposed_secs += dt;
+                        self.stats.recalled_pages += nrec as u64;
+                    }
+                }
+            }
+        }
+
+        // remember q for the next step's correction check
+        for (i, seq) in lane.seqs.iter_mut().enumerate() {
+            seq.spec[l].store(&lane.q_all[i * qo * dh..(i + 1) * qo * dh]);
+        }
+        Ok(())
+    }
+
+    fn lane_logits_submit(&mut self, lane: &mut Lane<'_, '_>) -> Result<()> {
+        let name = self.art(&format!("logits_b{}", lane.bucket));
+        let args = vec![lane.h.take().expect("hidden state present")];
+        let pooled = lane.pool_all;
+        lane.pending = Some(self.dispatch_in(ExecJob::Logits { name, args }, pooled)?);
+        Ok(())
+    }
+
+    /// Join logits and sample one token per sequence.
+    fn lane_logits_join(&mut self, lane: &mut Lane<'_, '_>) -> Result<()> {
+        let pending = lane.pending.take().expect("logits in flight");
+        let (outputs, _inputs, _busy, waited) = Self::join(pending)?;
+        self.stats.logits_secs += waited;
+        let lg = outputs.into_iter().next().expect("logits output").into_f32s()?;
+        let vocab = self.cfg.vocab;
+        for (i, seq) in lane.seqs.iter_mut().enumerate() {
+            let row = &lg[i * vocab..(i + 1) * vocab];
+            let tok = sample_token(row, &seq.sample, &mut seq.rng);
+            seq.tokens.push(tok);
+            if Some(tok) == seq.eos {
+                seq.finished = true;
+            }
+        }
         Ok(())
     }
 
@@ -627,98 +1040,42 @@ impl Engine {
     }
 
     /// Take (or allocate) the batch gather tensors for this bucket.
-    fn take_attn_scratch(&mut self, bucket: usize, m: usize, s: usize, dh: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    fn take_attn_scratch(
+        &mut self,
+        bucket: usize,
+        m: usize,
+        s: usize,
+        dh: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let want_kv = bucket * m * s * dh;
         let want_valid = bucket * m * s;
-        match self.attn_scratch.take() {
-            Some((gk, gv, gvalid)) if gk.len() == want_kv && gvalid.len() == want_valid => {
-                (gk, gv, gvalid)
-            }
-            _ => (vec![0.0; want_kv], vec![0.0; want_kv], vec![0.0; want_valid]),
+        if let Some(pos) = self
+            .attn_scratch
+            .iter()
+            .position(|(gk, _, gvalid)| gk.len() == want_kv && gvalid.len() == want_valid)
+        {
+            return self.attn_scratch.swap_remove(pos);
         }
+        (vec![0.0; want_kv], vec![0.0; want_kv], vec![0.0; want_valid])
     }
 
-    /// Batched page selection via the select artifact; returns pages per
-    /// (sequence, kv head), filtered to genuinely selectable pages. The
-    /// artifact inputs live in a scratch reused across layers/steps.
-    fn run_selection_batch(
-        &mut self,
-        seqs: &mut [&mut Sequence],
-        layer: usize,
-        q_all: &[f32],
-        bucket: usize,
-    ) -> Result<Vec<Vec<Vec<usize>>>> {
-        let (m, dh, qo, p) = (self.cfg.n_kv, self.cfg.d_head, self.cfg.n_qo, self.cfg.n_pages_max());
-        let k_sel = self.cfg.select_pages;
-        let rebuild = self.sel_scratch.as_ref().map_or(true, |sc| sc.bucket != bucket);
-        if rebuild {
-            self.sel_scratch = Some(SelScratch {
-                bucket,
-                args: vec![
-                    HostTensor::F32(vec![0.0; bucket * qo * dh], vec![bucket, qo, dh]),
-                    HostTensor::F32(vec![0.0; bucket * m * p * dh], vec![bucket, m, p, dh]),
-                    HostTensor::F32(vec![0.0; bucket * m * p * dh], vec![bucket, m, p, dh]),
-                    HostTensor::F32(vec![0.0; bucket * p], vec![bucket, p]),
-                ],
-            });
+    /// Take (or allocate) a selection scratch for this bucket:
+    /// [q, smin, smax, mask] in the select artifact's argument order.
+    fn take_sel_scratch(&mut self, bucket: usize) -> SelScratch {
+        if let Some(pos) = self.sel_scratch.iter().position(|sc| sc.bucket == bucket) {
+            return self.sel_scratch.swap_remove(pos);
         }
-        {
-            let scratch = self.sel_scratch.as_mut().unwrap();
-            let mut it = scratch.args.iter_mut();
-            let (qt, smin_t, smax_t, mask_t) =
-                (it.next().unwrap(), it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
-            let (
-                HostTensor::F32(qd, _),
-                HostTensor::F32(lo, _),
-                HostTensor::F32(hi, _),
-                HostTensor::F32(mk, _),
-            ) = (qt, smin_t, smax_t, mask_t)
-            else {
-                unreachable!("selection scratch is always f32")
-            };
-            qd[..q_all.len()].copy_from_slice(q_all);
-            qd[q_all.len()..].iter_mut().for_each(|x| *x = 0.0);
-            for (i, seq) in seqs.iter().enumerate() {
-                let gpu = &seq.kv.layers[layer].gpu;
-                gpu.summaries_sanitized_into(
-                    &mut lo[i * m * p * dh..(i + 1) * m * p * dh],
-                    &mut hi[i * m * p * dh..(i + 1) * m * p * dh],
-                );
-                gpu.selectable_mask_into(&mut mk[i * p..(i + 1) * p]);
-            }
-            // padded lanes: clean mask so the artifact selects nothing
-            for lane in seqs.len()..bucket {
-                mk[lane * p..(lane + 1) * p].iter_mut().for_each(|x| *x = 0.0);
-            }
+        let (m, dh, qo, p) =
+            (self.cfg.n_kv, self.cfg.d_head, self.cfg.n_qo, self.cfg.n_pages_max());
+        SelScratch {
+            bucket,
+            args: vec![
+                HostTensor::F32(vec![0.0; bucket * qo * dh], vec![bucket, qo, dh]),
+                HostTensor::F32(vec![0.0; bucket * m * p * dh], vec![bucket, m, p, dh]),
+                HostTensor::F32(vec![0.0; bucket * m * p * dh], vec![bucket, m, p, dh]),
+                HostTensor::F32(vec![0.0; bucket * p], vec![bucket, p]),
+            ],
         }
-        let name = {
-            let variant = self.params.variant.as_str();
-            self.art(&format!("select_{}_b{}", variant, bucket))
-        };
-        let out = {
-            let scratch = self.sel_scratch.as_ref().unwrap();
-            self.rt.run(&name, &scratch.args, None)?
-        };
-        let idx = out[1].i32s()?;
-        let scratch = self.sel_scratch.as_ref().unwrap();
-        let HostTensor::F32(mk, _) = &scratch.args[3] else {
-            unreachable!("selection scratch is always f32")
-        };
-        let mut result = Vec::with_capacity(seqs.len());
-        for i in 0..seqs.len() {
-            let mut per_head = Vec::with_capacity(m);
-            for head in 0..m {
-                let base = (i * m + head) * k_sel;
-                let pages: Vec<usize> = idx[base..base + k_sel]
-                    .iter()
-                    .map(|&x| x as usize)
-                    .filter(|&pg| pg < p && mk[i * p + pg] > 0.0)
-                    .collect();
-                per_head.push(pages);
-            }
-            result.push(per_head);
-        }
-        Ok(result)
     }
 
     /// Selection for a single sequence (prefill seeding path, bucket 1).
@@ -795,6 +1152,14 @@ impl Backend for Engine {
 
     fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
         Engine::decode_step(self, seqs)
+    }
+
+    fn decode_step_pair(
+        &mut self,
+        a: &mut [&mut Sequence],
+        b: &mut [&mut Sequence],
+    ) -> Result<()> {
+        Engine::decode_step_pair(self, a, b)
     }
 
     fn retire_sequence(&mut self, seq: &mut Sequence) {

@@ -21,7 +21,11 @@
 //!
 //! The loop blocks on the command channel while idle (no spinning) and
 //! drains commands between ticks while busy, so multiple in-flight
-//! requests genuinely share decode batches.
+//! requests genuinely share decode batches. When the scheduler is
+//! configured with `microbatch_min`, a large running set is decoded as
+//! two pipelined microbatches per tick (`Backend::decode_step_pair`),
+//! which a pooled-dispatch engine overlaps across its executor workers —
+//! two decode microbatches in flight from one engine thread.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -153,6 +157,13 @@ impl Submitter {
     /// Sessions currently queued or running (the admission gauge).
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// The admission cap this submitter enforces (sessions in flight
+    /// before `submit` returns `Busy`). The HTTP edge sizes its
+    /// connection-thread cap from this.
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
     }
 
     /// One-line serving metrics report from the loop's scheduler.
@@ -473,6 +484,37 @@ mod tests {
         assert_eq!(sub.in_flight(), 0, "admission slot released");
         let report = sub.metrics_report().unwrap();
         assert!(report.contains("completed=1"), "{}", report);
+        el.shutdown();
+    }
+
+    #[test]
+    fn microbatched_sessions_all_complete_with_identical_streams() {
+        // Four concurrent sessions over a microbatching scheduler: every
+        // stream must match the single-batch result (the sim stream is a
+        // pure function of the prompt), proving the pair dispatch path
+        // is invisible to clients.
+        let el = EngineLoop::spawn(LoopConfig { queue_cap: 8 }, || {
+            let cfg = SchedulerConfig {
+                max_batch: 8,
+                admit_below: 8,
+                microbatch_min: 4,
+                ..Default::default()
+            };
+            Ok(Scheduler::new(SimBackend::tiny(), cfg))
+        })
+        .expect("sim loop spawns");
+        let sub = el.submitter();
+        let handles: Vec<_> = (0..4)
+            .map(|i| sub.submit_text(&format!("microbatch client {} ", i), 16).unwrap())
+            .collect();
+        let texts: Vec<String> =
+            handles.into_iter().map(|h| h.wait().unwrap().text).collect();
+        for (i, text) in texts.iter().enumerate() {
+            assert_eq!(text.len(), 16, "client {} got {:?}", i, text);
+        }
+        // same prompt solo must produce the same text as under the pair
+        let solo = sub.submit_text("microbatch client 0 ", 16).unwrap().wait().unwrap();
+        assert_eq!(solo.text, texts[0], "microbatching changed a client's stream");
         el.shutdown();
     }
 

@@ -135,11 +135,22 @@ pub struct SchedulerConfig {
     /// max unclaimed completions retained for `take_completion` before
     /// the oldest are dropped (leak guard for callers that never claim).
     pub completion_backlog: usize,
+    /// When the decode batch reaches this many sequences, split it into
+    /// two microbatches dispatched as a pipelined pair
+    /// (`Backend::decode_step_pair`), so a backend with an executor pool
+    /// keeps two artifact streams in flight. `0` disables splitting.
+    /// Token outputs are unchanged: the pair appends one token to every
+    /// sequence just like a joint step, and pure-policy backends run the
+    /// halves back to back. Cost note: on the pooled real engine the
+    /// pair path runs weight-bearing artifacts on the workers, which
+    /// each hold a private weight copy (see
+    /// `FreeKvParams::exec_workers`).
+    pub microbatch_min: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 4, admit_below: 4, completion_backlog: 256 }
+        SchedulerConfig { max_batch: 4, admit_below: 4, completion_backlog: 256, microbatch_min: 0 }
     }
 }
 
@@ -288,7 +299,18 @@ impl<B: Backend> Scheduler<B> {
             if batch.is_empty() {
                 return Ok(());
             }
-            self.engine.decode_step(&mut batch)?;
+            // Large enough running set: split into two microbatches so
+            // the backend can keep both in flight concurrently.
+            let split = self.cfg.microbatch_min > 0
+                && batch.len() >= self.cfg.microbatch_min
+                && batch.len() >= 2;
+            if split {
+                let mid = batch.len() / 2;
+                let (a, b) = batch.split_at_mut(mid);
+                self.engine.decode_step_pair(a, b)?;
+            } else {
+                self.engine.decode_step(&mut batch)?;
+            }
         }
         for r in self.running[..limit].iter_mut() {
             Self::emit_new_tokens(&mut self.metrics, r, events);
@@ -541,6 +563,41 @@ mod tests {
         assert_eq!(s.running_len(), 3, "one admission per tick while decoding");
         s.tick().unwrap();
         assert_eq!(s.running_len(), 4);
+    }
+
+    #[test]
+    fn microbatch_split_preserves_outputs_and_halves_lanes() {
+        // Same four requests with and without microbatching: identical
+        // completions (the pair path is a pure scheduling change), but
+        // the split run decodes two half-width batches per tick.
+        let run = |microbatch_min: usize| {
+            let cfg = SchedulerConfig {
+                max_batch: 4,
+                admit_below: 4,
+                microbatch_min,
+                ..Default::default()
+            };
+            let mut s = sim_sched(cfg);
+            for i in 1..=4u64 {
+                s.submit(Request::from_text(i, &format!("microbatch req {} ", i), 12));
+            }
+            s.drain().unwrap();
+            let texts: Vec<String> =
+                (1..=4u64).map(|i| s.take_completion(i).unwrap().text).collect();
+            let st = s.engine.stats().clone();
+            (texts, st.max_batch_lanes, st.steps)
+        };
+        let (joint_texts, joint_lanes, joint_steps) = run(0);
+        let (split_texts, split_lanes, split_steps) = run(4);
+        assert_eq!(joint_texts, split_texts, "microbatching changed outputs");
+        assert_eq!(joint_lanes, 4, "joint run decodes all four lanes together");
+        assert_eq!(split_lanes, 2, "split run decodes two microbatches of two");
+        assert!(
+            split_steps > joint_steps,
+            "pair dispatch counts both microbatch invocations ({} vs {})",
+            split_steps,
+            joint_steps
+        );
     }
 
     #[test]

@@ -12,7 +12,11 @@ use crate::util::table::{fnum, ftime, Table};
 
 pub fn load_engine(artifacts: &str, model: &str, params: FreeKvParams) -> Result<Engine> {
     let rt = Runtime::load(artifacts)?;
-    Engine::new(rt, model, params)
+    // Exhibits reproduce the paper's single-stream engine: artifact
+    // dispatch stays on this thread so the phase breakdown reports full
+    // selection execution time, not the post-pool exposed remainder
+    // (mirrors `SimKnobs::pooled_selection` defaulting to false).
+    Engine::new(rt, model, FreeKvParams { exec_workers: 0, ..params })
 }
 
 /// Fig. 3 analog on the real model: per-layer mean adjacent-step query

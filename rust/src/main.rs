@@ -40,8 +40,14 @@ fn run() -> Result<()> {
     let tau = args.f64_or("tau", 0.8) as f32;
     // --serial-recall keeps speculative recall on the decode thread (the
     // overlap ablation baseline); default dispatches it to the worker.
-    let params =
-        FreeKvParams { tau, overlap: !args.flag("serial-recall"), ..Default::default() };
+    // --exec-workers N sizes the PJRT executor pool (0 = serial
+    // in-thread artifact dispatch, the ablation baseline).
+    let params = FreeKvParams {
+        tau,
+        overlap: !args.flag("serial-recall"),
+        exec_workers: args.usize_or("exec-workers", FreeKvParams::default().exec_workers),
+        ..Default::default()
+    };
 
     match args.command() {
         Some("info") => {
@@ -88,6 +94,9 @@ fn run() -> Result<()> {
             let scfg = SchedulerConfig {
                 max_batch: args.usize_or("max-batch", 4),
                 admit_below: args.usize_or("admit-below", 4),
+                // split decode into two pipelined microbatches once this
+                // many sequences are running (0 = never split)
+                microbatch_min: args.usize_or("microbatch-min", 0),
                 ..Default::default()
             };
             let loop_cfg = LoopConfig { queue_cap: args.usize_or("queue-cap", 64) };
@@ -101,14 +110,20 @@ fn run() -> Result<()> {
                     let rt = Runtime::load(&artifacts)?;
                     let eng = Engine::new(rt, &model, params)?;
                     if warm {
-                        let n = eng.rt.warmup(&model)?;
+                        // warms the engine runtime and every pool worker
+                        let n = eng.warmup()?;
                         println!("[freekv] warmed {} artifacts", n);
                     }
                     Ok(Scheduler::new(eng, scfg))
                 })?
             };
             let max_requests = args.get("max-requests").and_then(|v| v.parse().ok());
-            let opts = ServeOptions { max_requests, ..Default::default() };
+            let opts = ServeOptions {
+                max_requests,
+                // 0 derives the connection-thread cap from the queue cap
+                max_connections: args.usize_or("max-conns", 0),
+                ..Default::default()
+            };
             let result = freekv::server::serve(el.submitter(), &addr, opts);
             el.shutdown();
             result
@@ -117,6 +132,7 @@ fn run() -> Result<()> {
             let scfg = SchedulerConfig {
                 max_batch: args.usize_or("max-batch", 4),
                 admit_below: args.usize_or("admit-below", 4),
+                microbatch_min: args.usize_or("microbatch-min", 0),
                 ..Default::default()
             };
             if args.flag("sim") {
@@ -134,7 +150,8 @@ fn run() -> Result<()> {
         }
         _ => Err(anyhow!(
             "usage: freekv <info|generate|serve|loadtest|eval> [--model tiny] [--artifacts dir] \
-             [--serial-recall] [--sim] [--queue-cap 64] [--max-batch 4] [--admit-below 4]\n\
+             [--serial-recall] [--exec-workers 2] [--sim] [--queue-cap 64] [--max-batch 4] \
+             [--admit-below 4] [--microbatch-min 0] [--max-conns 0]\n\
              eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
              table2 table3 table4 table5 table6 table7 table8 table9 fig7 fig8 fig9 fig10 \
              oom real-breakdown real-correction fig16-20 all"

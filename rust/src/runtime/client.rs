@@ -191,7 +191,15 @@ impl Runtime {
         let spec = self.manifest.artifact(name)?.clone();
         self.check_args(&spec, data)?;
         let exe = self.executable(name)?;
-        let weights = self.weight_buffers(&spec.config)?;
+        // Resolve the config's resident weight buffers only when this
+        // artifact binds any (selection artifacts bind none — executor
+        // pool workers that only score selection must not each upload a
+        // private copy of the full weight blob).
+        let weights = if spec.args.iter().any(|a| a.weight) {
+            Some(self.weight_buffers(&spec.config)?)
+        } else {
+            None
+        };
 
         // Input tensors become fresh device buffers; weight args reuse the
         // resident buffers (no per-call copy — this is the point of the
@@ -211,6 +219,8 @@ impl Runtime {
                     _ => a.name.clone(),
                 };
                 let buf = weights
+                    .as_ref()
+                    .expect("weights resolved when any weight arg exists")
                     .get(&key)
                     .ok_or_else(|| anyhow!("weight `{}` missing for {}", key, name))?;
                 args.push(buf);

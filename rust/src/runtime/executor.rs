@@ -1,0 +1,538 @@
+//! Send-safe executor pool for artifact execution.
+//!
+//! The PJRT CPU client is deliberately `!Send` (`runtime::Runtime` caches
+//! executables and weight buffers behind `Rc`/`RefCell`), which until now
+//! serialized every artifact execution — QKV, attention, selection
+//! scoring, logits — on whichever thread built the runtime. This module
+//! provides concurrency *around* that constraint instead of fighting it:
+//!
+//! * [`ExecutorPool::spawn`] starts N worker threads, each of which
+//!   constructs its own backend **on-thread** (the same trick
+//!   `EngineLoop::spawn` uses for the engine). A worker's PJRT client,
+//!   executable cache, and resident weight buffers never cross a thread
+//!   boundary, so nothing `Send` is ever required of them.
+//! * Jobs are typed [`ExecJob`]s carrying owned [`HostTensor`] inputs —
+//!   plain `Send` data. Submitting returns an [`ExecTicket`], a one-shot
+//!   future the caller joins wherever the result is actually needed;
+//!   completions may be joined in any order.
+//! * [`ExecDone`] hands the input tensors back alongside the outputs, so
+//!   callers that maintain reusable scratch buffers (the engine's
+//!   selection planes are the big ones) get them back without
+//!   reallocating.
+//! * [`ExecutorHandle`] is cloneable and `Send`: any thread may submit.
+//!
+//! Failure semantics: a panic inside a job is caught on the worker,
+//! reported as an error on that job's ticket, and the worker keeps
+//! serving (one poisoned input must not take down the pool). A worker
+//! that dies entirely surfaces as a disconnected ticket. Dropping the
+//! pool drains: already-queued jobs still execute and their tickets
+//! still resolve, then the workers exit and are joined.
+//!
+//! The pool is generic over [`ExecBackend`] so its scheduling/lifecycle
+//! machinery is testable on hosts without a native XLA backend (see
+//! `tests/executor_pool.rs`); [`ExecutorPool::for_manifest`] is the
+//! production constructor where every worker is a full PJRT [`Runtime`].
+//!
+//! What this buys the engine: selection scoring leaves the decode
+//! critical path (scored on a worker while the engine drains the recall
+//! pipeline), and two decode microbatches can keep several workers busy
+//! at once (`Engine::decode_step_pair`). Outputs are bit-identical to
+//! serial in-thread dispatch — same artifacts, same inputs, same XLA CPU
+//! kernels — so pooling is a pure scheduling change.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::Manifest;
+use super::client::{HostTensor, Runtime};
+
+/// One artifact execution, typed by pipeline stage. The variants carry
+/// the fully-resolved artifact name (the engine owns config/bucket
+/// naming); the type distinguishes stages for labeling and stats.
+pub enum ExecJob {
+    /// Token embedding (`*_embed_*`).
+    Embed { name: String, args: Vec<HostTensor> },
+    /// Per-layer QKV projection (`*_layer_qkv_*`).
+    Qkv { name: String, layer: usize, args: Vec<HostTensor> },
+    /// Per-layer attention + FFN (`*_layer_attn_*`).
+    Attention { name: String, layer: usize, args: Vec<HostTensor> },
+    /// Page-selection scoring (`*_select_*`); no layer weights.
+    Selection { name: String, args: Vec<HostTensor> },
+    /// Final-norm + LM head (`*_logits_*`).
+    Logits { name: String, args: Vec<HostTensor> },
+    /// Escape hatch for anything else (benches, tests).
+    Raw { name: String, layer: Option<usize>, args: Vec<HostTensor> },
+    /// Eager-compile every artifact of `config` on the executing worker
+    /// (see [`ExecBackend::warmup`]); completes with empty outputs.
+    /// Handled on the worker before `into_parts`.
+    Warmup { config: String },
+}
+
+impl ExecJob {
+    pub fn name(&self) -> &str {
+        match self {
+            ExecJob::Embed { name, .. }
+            | ExecJob::Qkv { name, .. }
+            | ExecJob::Attention { name, .. }
+            | ExecJob::Selection { name, .. }
+            | ExecJob::Logits { name, .. }
+            | ExecJob::Raw { name, .. } => name,
+            ExecJob::Warmup { config } => config,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ExecJob::Embed { .. } => "embed",
+            ExecJob::Qkv { .. } => "qkv",
+            ExecJob::Attention { .. } => "attention",
+            ExecJob::Selection { .. } => "selection",
+            ExecJob::Logits { .. } => "logits",
+            ExecJob::Raw { .. } => "raw",
+            ExecJob::Warmup { .. } => "warmup",
+        }
+    }
+
+    /// (artifact name, layer for weight resolution, input tensors).
+    /// Public so serial (in-thread) dispatch can execute the same jobs.
+    /// `Warmup` never reaches this (the worker intercepts it).
+    pub fn into_parts(self) -> (String, Option<usize>, Vec<HostTensor>) {
+        match self {
+            ExecJob::Embed { name, args }
+            | ExecJob::Selection { name, args }
+            | ExecJob::Logits { name, args } => (name, None, args),
+            ExecJob::Qkv { name, layer, args } | ExecJob::Attention { name, layer, args } => {
+                (name, Some(layer), args)
+            }
+            ExecJob::Raw { name, layer, args } => (name, layer, args),
+            ExecJob::Warmup { config } => (config, None, Vec::new()),
+        }
+    }
+}
+
+/// A completed execution: outputs plus the job's own input tensors
+/// (returned so callers can recycle scratch buffers), and the worker
+/// wall time — hidden latency unless the caller blocked in
+/// [`ExecTicket::wait`] for it.
+pub struct ExecDone {
+    pub outputs: Vec<HostTensor>,
+    pub inputs: Vec<HostTensor>,
+    pub busy_secs: f64,
+    /// Index of the worker that executed the job.
+    pub worker: usize,
+}
+
+struct JobMsg {
+    job: ExecJob,
+    reply: Sender<Result<ExecDone, String>>,
+}
+
+/// One-shot handle to an in-flight job. Join with [`ExecTicket::wait`].
+pub struct ExecTicket {
+    rx: Receiver<Result<ExecDone, String>>,
+    name: String,
+}
+
+impl ExecTicket {
+    /// Block until the job completes. Worker panics and execution errors
+    /// surface here; a dead pool surfaces as a disconnect error.
+    pub fn wait(self) -> Result<ExecDone> {
+        match self.rx.recv() {
+            Ok(Ok(done)) => Ok(done),
+            Ok(Err(e)) => Err(anyhow!("executor job `{}` failed: {}", self.name, e)),
+            Err(_) => Err(anyhow!(
+                "executor pool shut down with job `{}` outstanding",
+                self.name
+            )),
+        }
+    }
+
+    /// Non-blocking probe; `None` while the job is still running.
+    pub fn try_wait(&self) -> Option<Result<ExecDone>> {
+        match self.rx.try_recv() {
+            Ok(Ok(done)) => Some(Ok(done)),
+            Ok(Err(e)) => Some(Err(anyhow!("executor job `{}` failed: {}", self.name, e))),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Some(Err(anyhow!(
+                "executor pool shut down with job `{}` outstanding",
+                self.name
+            ))),
+        }
+    }
+}
+
+/// What a worker thread executes jobs against. The production backend is
+/// a per-worker PJRT [`Runtime`]; tests substitute host-side backends so
+/// pool mechanics are covered without a native XLA client.
+pub trait ExecBackend {
+    fn run(
+        &mut self,
+        name: &str,
+        args: &[HostTensor],
+        layer: Option<usize>,
+    ) -> Result<Vec<HostTensor>>;
+
+    /// Eager-compile every artifact of `config` (first-request latency
+    /// control); returns how many were prepared. No-op by default.
+    fn warmup(&mut self, _config: &str) -> Result<usize> {
+        Ok(0)
+    }
+}
+
+impl ExecBackend for Runtime {
+    fn run(
+        &mut self,
+        name: &str,
+        args: &[HostTensor],
+        layer: Option<usize>,
+    ) -> Result<Vec<HostTensor>> {
+        Runtime::run(self, name, args, layer)
+    }
+
+    fn warmup(&mut self, config: &str) -> Result<usize> {
+        Runtime::warmup(self, config)
+    }
+}
+
+/// Cloneable, `Send` submission handle. Holding one keeps the pool's
+/// job queue open — workers exit only after every handle (and the pool's
+/// own sender) is gone and the queue has drained.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: Sender<JobMsg>,
+    jobs: Arc<AtomicU64>,
+    workers: usize,
+}
+
+impl ExecutorHandle {
+    /// Enqueue a job; any idle worker picks it up FIFO. Never blocks.
+    /// If the pool is gone the error surfaces at [`ExecTicket::wait`].
+    pub fn submit(&self, job: ExecJob) -> ExecTicket {
+        let name = job.name().to_string();
+        let (reply, rx) = channel();
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        // On a dead pool the message (with its reply sender) is dropped,
+        // which the ticket observes as a disconnect.
+        let _ = self.tx.send(JobMsg { job, reply });
+        ExecTicket { rx, name }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total jobs submitted over the pool's lifetime.
+    pub fn jobs_submitted(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+}
+
+/// The pool: owns the worker threads. Dropping it drains the queue
+/// (queued jobs still run, tickets still resolve) and joins the workers.
+pub struct ExecutorPool {
+    /// Dropped first on shutdown so workers see the queue close.
+    tx: Option<Sender<JobMsg>>,
+    jobs: Arc<AtomicU64>,
+    worker_count: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ExecutorPool {
+    /// Spawn `workers` threads (min 1). `factory(i)` runs *on* worker
+    /// `i`'s thread to build its backend — this is what makes a pool of
+    /// `!Send` PJRT clients possible. Fails if any worker's backend
+    /// fails to construct (the others are shut down cleanly).
+    pub fn spawn<B, F>(workers: usize, factory: F) -> Result<ExecutorPool>
+    where
+        B: ExecBackend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<JobMsg>();
+        let queue = Arc::new(Mutex::new(rx));
+        let factory = Arc::new(factory);
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let mut joins = Vec::with_capacity(workers);
+        let mut failures = Vec::new();
+        for i in 0..workers {
+            let queue = queue.clone();
+            let factory = factory.clone();
+            let ready = ready_tx.clone();
+            let spawned = thread::Builder::new()
+                .name(format!("freekv-exec-{}", i))
+                .spawn(move || {
+                    // Backend built on-thread; never crosses threads.
+                    let mut backend = match factory(i) {
+                        Ok(b) => {
+                            let _ = ready.send(Ok(()));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(format!("{e:#}")));
+                            return;
+                        }
+                    };
+                    loop {
+                        // Hold the queue lock only for the dequeue; idle
+                        // workers queue up on the mutex, which is exactly
+                        // the work-stealing order we want from std mpsc.
+                        let msg = match queue.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break, // queue mutex poisoned: shut down
+                        };
+                        let Ok(JobMsg { job, reply }) = msg else {
+                            break; // every sender gone and queue drained
+                        };
+                        let result = run_job(&mut backend, job, i);
+                        // A caller that dropped its ticket just loses the
+                        // result; the worker moves on.
+                        let _ = reply.send(result);
+                    }
+                });
+            match spawned {
+                Ok(j) => joins.push(j),
+                Err(e) => {
+                    // OS refused the thread (EAGAIN under pressure):
+                    // abort below exactly like a backend failure.
+                    failures.push(format!("spawning executor worker {}: {}", i, e));
+                    break;
+                }
+            }
+        }
+        drop(ready_tx);
+
+        // One readiness report per thread that actually spawned.
+        for _ in 0..joins.len() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => failures.push(e),
+                Err(_) => failures.push("worker thread died before reporting ready".into()),
+            }
+        }
+        if !failures.is_empty() {
+            // Abort: close the queue so healthy workers exit, then join.
+            drop(tx);
+            for j in joins {
+                let _ = j.join();
+            }
+            return Err(anyhow!(
+                "executor pool startup failed ({} of {} workers): {}",
+                failures.len(),
+                workers,
+                failures.join("; ")
+            ));
+        }
+
+        Ok(ExecutorPool {
+            tx: Some(tx),
+            jobs: Arc::new(AtomicU64::new(0)),
+            worker_count: workers,
+            workers: joins,
+        })
+    }
+
+    /// Production pool: every worker constructs its own PJRT [`Runtime`]
+    /// over a clone of `manifest` (shared artifact dir, private client,
+    /// private executable/weight caches).
+    pub fn for_manifest(manifest: &Manifest, workers: usize) -> Result<ExecutorPool> {
+        let manifest = manifest.clone();
+        ExecutorPool::spawn(workers, move |_| Runtime::new(manifest.clone()))
+    }
+
+    /// Submit directly on the pool (same as `handle().submit`).
+    pub fn submit(&self, job: ExecJob) -> ExecTicket {
+        self.handle().submit(job)
+    }
+
+    /// Best-effort pool warm-up: one [`ExecJob::Warmup`] per worker,
+    /// awaited together. Warming takes long enough that idle workers
+    /// each pick one job up; a worker that grabs two just re-warms
+    /// idempotently. Returns the number of warm jobs completed.
+    pub fn warmup(&self, config: &str) -> Result<usize> {
+        let tickets: Vec<ExecTicket> = (0..self.worker_count)
+            .map(|_| self.submit(ExecJob::Warmup { config: config.to_string() }))
+            .collect();
+        let mut done = 0;
+        for t in tickets {
+            t.wait()?;
+            done += 1;
+        }
+        Ok(done)
+    }
+
+    /// A cloneable, `Send` submission handle for other threads. NB: an
+    /// outstanding handle keeps the job queue open, so dropping the pool
+    /// blocks until every handle is gone.
+    pub fn handle(&self) -> ExecutorHandle {
+        ExecutorHandle {
+            tx: self.tx.as_ref().expect("pool not yet shut down").clone(),
+            jobs: self.jobs.clone(),
+            workers: self.worker_count,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.worker_count
+    }
+
+    pub fn jobs_submitted(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        // Close the queue, let the workers drain what's already
+        // enqueued, then join them.
+        self.tx.take();
+        for j in self.workers.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Execute one job on a worker's backend, panics contained.
+fn run_job<B: ExecBackend>(
+    backend: &mut B,
+    job: ExecJob,
+    worker: usize,
+) -> Result<ExecDone, String> {
+    let t0 = Instant::now();
+    match job {
+        ExecJob::Warmup { config } => {
+            match catch_unwind(AssertUnwindSafe(|| backend.warmup(&config))) {
+                Ok(Ok(_n)) => Ok(ExecDone {
+                    outputs: Vec::new(),
+                    inputs: Vec::new(),
+                    busy_secs: t0.elapsed().as_secs_f64(),
+                    worker,
+                }),
+                Ok(Err(e)) => Err(format!("{e:#}")),
+                Err(payload) => Err(format!(
+                    "worker {} panicked warming `{}`: {}",
+                    worker,
+                    config,
+                    panic_message(&payload)
+                )),
+            }
+        }
+        job => {
+            let (name, layer, args) = job.into_parts();
+            let outcome = catch_unwind(AssertUnwindSafe(|| backend.run(&name, &args, layer)));
+            match outcome {
+                Ok(Ok(outputs)) => Ok(ExecDone {
+                    outputs,
+                    inputs: args,
+                    busy_secs: t0.elapsed().as_secs_f64(),
+                    worker,
+                }),
+                Ok(Err(e)) => Err(format!("{e:#}")),
+                Err(payload) => Err(format!(
+                    "worker {} panicked executing `{}`: {}",
+                    worker,
+                    name,
+                    panic_message(&payload)
+                )),
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Host-side backend: multiplies every f32 input by (layer + 2).
+    struct Scaler;
+
+    impl ExecBackend for Scaler {
+        fn run(
+            &mut self,
+            name: &str,
+            args: &[HostTensor],
+            layer: Option<usize>,
+        ) -> Result<Vec<HostTensor>> {
+            if name == "explode" {
+                panic!("requested panic");
+            }
+            let k = (layer.unwrap_or(0) + 2) as f32;
+            Ok(args
+                .iter()
+                .map(|t| match t {
+                    HostTensor::F32(d, s) => {
+                        HostTensor::F32(d.iter().map(|x| x * k).collect(), s.clone())
+                    }
+                    HostTensor::I32(d, s) => HostTensor::I32(d.clone(), s.clone()),
+                })
+                .collect())
+        }
+    }
+
+    fn f32s(v: &[f32]) -> HostTensor {
+        HostTensor::F32(v.to_vec(), vec![v.len()])
+    }
+
+    #[test]
+    fn jobs_round_trip_and_return_inputs() {
+        let pool = ExecutorPool::spawn(2, |_| Ok(Scaler)).unwrap();
+        let t = pool.submit(ExecJob::Qkv {
+            name: "anything".into(),
+            layer: 1,
+            args: vec![f32s(&[1.0, 2.0])],
+        });
+        let done = t.wait().unwrap();
+        assert_eq!(done.outputs, vec![f32s(&[3.0, 6.0])]);
+        assert_eq!(done.inputs, vec![f32s(&[1.0, 2.0])], "inputs handed back for reuse");
+        assert!(done.busy_secs >= 0.0);
+        assert_eq!(pool.jobs_submitted(), 1);
+    }
+
+    #[test]
+    fn out_of_order_joins() {
+        let pool = ExecutorPool::spawn(3, |_| Ok(Scaler)).unwrap();
+        let tickets: Vec<ExecTicket> = (0..16)
+            .map(|i| {
+                pool.submit(ExecJob::Raw {
+                    name: format!("job{}", i),
+                    layer: Some(i),
+                    args: vec![f32s(&[i as f32])],
+                })
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate().rev() {
+            let done = t.wait().unwrap();
+            assert_eq!(done.outputs, vec![f32s(&[i as f32 * (i + 2) as f32])]);
+        }
+    }
+
+    #[test]
+    fn startup_failure_aborts_the_pool() {
+        let err = ExecutorPool::spawn(3, |i| {
+            if i == 1 {
+                Err(anyhow!("no backend on worker 1"))
+            } else {
+                Ok(Scaler)
+            }
+        })
+        .map(|_| ())
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no backend on worker 1"), "{}", msg);
+    }
+}

@@ -24,7 +24,12 @@
 //! HTTP/x` are rejected with 400, bodies above
 //! [`HttpLimits::max_body_bytes`] with 413, a read timeout bounds how
 //! long a stalled client can hold a connection thread, and a write
-//! timeout bounds a client that stops reading its response. Client
+//! timeout bounds a client that stops reading its response. Connection
+//! threads are capped ([`ServeOptions::max_connections`], derived from
+//! the submitter's admission queue depth by default): past the cap,
+//! generation requests get `503` instead of spawning unboundedly, while
+//! a small probe headroom keeps `/healthz` and `/metrics` answering so
+//! saturation is not mistaken for a dead engine loop. Client
 //! disconnects cancel the in-flight session mid-generation, returning
 //! its GPU slots and CPU pool pages to the free pool: streaming
 //! sessions treat a failed chunk write *or* an EOF `peek` as
@@ -266,6 +271,32 @@ pub struct ServeOptions {
     /// Exit after this many completed generations (None = run forever).
     pub max_requests: Option<usize>,
     pub limits: HttpLimits,
+    /// Cap on generation-serving connection threads. `0` derives the
+    /// cap from the submitter's admission depth (`2 * queue_cap`, min
+    /// 8): every admissible session can hold a connection plus room for
+    /// 429 rejections, but a connection flood can no longer spawn
+    /// unbounded threads. At the cap, `/generate` connections are
+    /// answered `503` and closed; a further [`PROBE_HEADROOM`] threads
+    /// still serve `/healthz` and `/metrics` so probes stay truthful.
+    pub max_connections: usize,
+}
+
+/// Extra connection threads allowed past [`ServeOptions::max_connections`]
+/// that serve only cheap read-only endpoints (`/healthz`, `/metrics`).
+/// This keeps the health contract truthful under a connection flood: a
+/// saturated-but-alive instance still answers probes 200 instead of the
+/// 503 that means "engine dead — restart me". Generation requests on
+/// these overflow slots get the saturation 503.
+const PROBE_HEADROOM: usize = 4;
+
+/// RAII slot in the connection-thread budget: decrements on drop so a
+/// panicking handler can't leak its slot.
+struct ConnSlot(Arc<AtomicUsize>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// Bind `addr` and serve. See [`serve_listener`].
@@ -287,6 +318,14 @@ pub fn serve_listener(
     let served = Arc::new(AtomicUsize::new(0));
     let engine_down = Arc::new(AtomicBool::new(false));
     let limits = Arc::new(opts.limits.clone());
+    // Connection-thread budget tied to the admission queue depth: see
+    // `ServeOptions::max_connections`.
+    let conn_cap = if opts.max_connections > 0 {
+        opts.max_connections
+    } else {
+        submitter.queue_cap().saturating_mul(2).max(8)
+    };
+    let active_conns = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
         if engine_down.load(Ordering::SeqCst) {
             return Err(anyhow!("engine loop terminated; shutting down server"));
@@ -296,13 +335,37 @@ pub fn serve_listener(
             break;
         }
         let Ok(mut stream) = stream else { continue };
+        // Past cap + headroom: answer 503 from the acceptor (bounded
+        // work — one short write with a timeout), no thread spawned.
+        // Deliberate tradeoff: the request is never read, so a client
+        // mid-way through a large body may see the close as a TCP RST
+        // instead of the 503. Draining would serialize the acceptor
+        // behind the very flood this path defends against; acceptor
+        // liveness wins, and the in-headroom path below still answers
+        // well-behaved probes properly.
+        let prev = active_conns.fetch_add(1, Ordering::SeqCst);
+        if prev >= conn_cap + PROBE_HEADROOM {
+            active_conns.fetch_sub(1, Ordering::SeqCst);
+            let _ = stream.set_write_timeout(Some(opts.limits.write_timeout));
+            let msg = error_json(&format!(
+                "connection limit reached ({} active); retry later",
+                prev
+            ));
+            let _ = write_response(&mut stream, 503, "application/json", &msg);
+            continue;
+        }
+        // Past the cap but within headroom: serve only probes (health/
+        // metrics); generation requests get the saturation 503.
+        let restricted = prev >= conn_cap;
+        let slot = ConnSlot(active_conns.clone());
         let sub = submitter.clone();
         let served = served.clone();
         let engine_down = engine_down.clone();
         let limits = limits.clone();
         let max = opts.max_requests;
         thread::spawn(move || {
-            handle_connection(&mut stream, &sub, &limits, &served, &engine_down);
+            let _slot = slot; // released when the handler thread exits
+            handle_connection(&mut stream, &sub, &limits, &served, &engine_down, restricted);
             // Completing the last generation — or noticing the engine
             // loop died — must unblock the acceptor.
             if engine_down.load(Ordering::SeqCst)
@@ -321,6 +384,7 @@ fn handle_connection(
     limits: &HttpLimits,
     served: &AtomicUsize,
     engine_down: &AtomicBool,
+    restricted: bool,
 ) {
     // A peer that stops reading must not wedge this thread on a write.
     let _ = stream.set_write_timeout(Some(limits.write_timeout));
@@ -358,6 +422,12 @@ fn handle_connection(
                 let _ = write_response(stream, 503, "text/plain", "engine unavailable");
             }
         },
+        ("POST", "/generate") if restricted => {
+            // Overflow (probe-headroom) slot: generation would hold this
+            // thread for a whole session, which the cap exists to bound.
+            let msg = error_json("connection limit reached; retry later");
+            let _ = write_response(stream, 503, "application/json", &msg);
+        }
         ("POST", "/generate") => handle_generate(stream, sub, served, engine_down, &req.body),
         _ => {
             let _ = write_response(stream, 404, "text/plain", "not found");

@@ -19,6 +19,11 @@ pub enum Stream {
     Convert,
     /// CPU-side control work (scheduling, index math).
     Cpu,
+    /// Executor-pool worker: artifact execution dispatched off the
+    /// engine thread (`runtime::executor`), e.g. pooled selection
+    /// scoring. Serialized per worker like every stream, but concurrent
+    /// with `Compute`.
+    Exec,
 }
 
 pub type EventId = usize;

@@ -47,11 +47,13 @@
 //! remainder and is accounted separately by the engine
 //! (`EngineStats::recall_exposed_secs`).
 //!
-//! What is still serial: the PJRT CPU client itself is single-threaded
-//! (`Runtime` is `!Send` by design), so artifact execution — including
-//! selection scoring — stays on the engine thread; only host-side page
-//! movement overlaps. True async compute would need multi-threaded PJRT
-//! dispatch (see ROADMAP open items).
+//! This worker owns host-side page movement only. Artifact execution is
+//! handled separately: each PJRT client is `!Send` by design, so
+//! `runtime::executor` runs a pool of clients (one per worker thread)
+//! and the engine dispatches selection scoring — and, for paired
+//! microbatches, QKV/attention — to it. The two workers compose: while
+//! this thread recalls pages for step *t+1*, an executor worker can be
+//! scoring step *t*'s selection.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -6,13 +6,13 @@
 
 use freekv::config::FreeKvParams;
 use freekv::coordinator::engine::{sample_token, Engine, SampleParams};
-use freekv::runtime::Runtime;
 use freekv::util::json::Json;
 
-fn engine() -> Engine {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let rt = Runtime::load(dir).expect("run `make artifacts` first");
-    Engine::new(rt, "tiny", FreeKvParams::default()).unwrap()
+/// Engine over the real backend, or a skip (hard failure when the CI
+/// real-backend job sets FREEKV_REQUIRE_ARTIFACTS).
+fn engine() -> Option<Engine> {
+    let rt = freekv::runtime::load_or_skip(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+    Some(Engine::new(rt, "tiny", FreeKvParams::default()).unwrap())
 }
 
 fn golden() -> Json {
@@ -22,7 +22,7 @@ fn golden() -> Json {
 
 #[test]
 fn reproduces_golden_greedy_trace() {
-    let mut eng = engine();
+    let Some(mut eng) = engine() else { return };
     let g = golden();
     let prompt: Vec<i32> = g.get("prompt").as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect();
     let want: Vec<i32> =
@@ -63,11 +63,14 @@ fn reproduces_golden_greedy_trace() {
 fn speculative_and_blocking_agree_when_budget_covers_context() {
     // With the whole context resident, speculation cannot lose pages, so
     // both modes must produce identical tokens.
+    if engine().is_none() {
+        return;
+    }
     let g = golden();
     let prompt: Vec<i32> = g.get("prompt").as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect();
 
     let run = |blocking: bool| -> Vec<i32> {
-        let mut eng = engine();
+        let mut eng = engine().expect("backend available");
         eng.blocking_mode = blocking;
         let mut seq = eng.new_sequence(7, prompt.clone(), 6, SampleParams::greedy());
         eng.generate(&mut seq).unwrap();
@@ -81,7 +84,7 @@ fn long_generation_exceeding_budget_stays_stable() {
     // Generate past the GPU budget (tiny budget = 512 slots): pages get
     // offloaded and recalled; tokens must stay in-vocab and the engine
     // must report selection/recall activity.
-    let mut eng = engine();
+    let Some(mut eng) = engine() else { return };
     let prompt: Vec<i32> = (0..600).map(|i| (i * 7 % 256) as i32).collect();
     let mut seq = eng.new_sequence(2, prompt, 64, SampleParams { temperature: 0.8, top_p: 0.95, seed: 3 });
     eng.generate(&mut seq).unwrap();
@@ -98,14 +101,14 @@ fn long_generation_exceeding_budget_stays_stable() {
 fn batched_decode_matches_single_sequence() {
     // The same prompt decoded alone and inside a padded batch must agree
     // (greedy, deterministic artifacts).
+    let Some(mut eng) = engine() else { return };
     let g = golden();
     let prompt: Vec<i32> = g.get("prompt").as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect();
 
-    let mut eng = engine();
     let mut a = eng.new_sequence(1, prompt.clone(), 4, SampleParams::greedy());
     eng.generate(&mut a).unwrap();
 
-    let mut eng2 = engine();
+    let mut eng2 = engine().expect("backend available");
     let mut s1 = eng2.new_sequence(10, prompt.clone(), 4, SampleParams::greedy());
     let mut s2 = eng2.new_sequence(11, prompt.clone(), 4, SampleParams::greedy());
     // prefill both, then batch-decode them together (bucket 4, padded)

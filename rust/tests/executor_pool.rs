@@ -1,0 +1,182 @@
+//! Executor-pool mechanics, artifact-free: the pool is generic over
+//! `ExecBackend`, so scheduling, result routing, panic containment, and
+//! shutdown/drain are all testable with host-side backends on any host.
+//! The PJRT-backed equivalence tests (pooled selection bit-identical to
+//! serial dispatch on the real engine) live in `tests/overlap_pipeline.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use freekv::runtime::{ExecBackend, ExecJob, ExecTicket, ExecutorPool, HostTensor};
+
+/// Deterministic host backend: output = inputs scaled by (layer + 2);
+/// artifact names trigger special behaviour (`panic!`, error, sleep).
+struct HostBackend {
+    worker: usize,
+    delay: Duration,
+}
+
+impl ExecBackend for HostBackend {
+    fn run(
+        &mut self,
+        name: &str,
+        args: &[HostTensor],
+        layer: Option<usize>,
+    ) -> Result<Vec<HostTensor>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        match name {
+            "explode" => panic!("deliberate panic on worker {}", self.worker),
+            "fail" => Err(anyhow!("deliberate failure")),
+            _ => {
+                let k = (layer.unwrap_or(0) + 2) as f32;
+                Ok(args
+                    .iter()
+                    .map(|t| match t {
+                        HostTensor::F32(d, s) => {
+                            HostTensor::F32(d.iter().map(|x| x * k).collect(), s.clone())
+                        }
+                        HostTensor::I32(d, s) => HostTensor::I32(d.clone(), s.clone()),
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+fn pool(workers: usize, delay_ms: u64) -> ExecutorPool {
+    ExecutorPool::spawn(workers, move |worker| {
+        Ok(HostBackend { worker, delay: Duration::from_millis(delay_ms) })
+    })
+    .expect("host pool spawns")
+}
+
+fn f32s(v: &[f32]) -> HostTensor {
+    HostTensor::F32(v.to_vec(), vec![v.len()])
+}
+
+fn job(i: usize) -> ExecJob {
+    ExecJob::Raw { name: format!("job{}", i), layer: Some(i), args: vec![f32s(&[i as f32, 1.0])] }
+}
+
+fn expected(i: usize) -> Vec<HostTensor> {
+    let k = (i + 2) as f32;
+    vec![f32s(&[i as f32 * k, k])]
+}
+
+#[test]
+fn pooled_results_match_inline_execution_joined_out_of_order() {
+    // Reference: execute every job inline on one backend.
+    let mut inline = HostBackend { worker: 0, delay: Duration::ZERO };
+    let reference: Vec<Vec<HostTensor>> = (0..24)
+        .map(|i| {
+            let (name, layer, args) = job(i).into_parts();
+            inline.run(&name, &args, layer).unwrap()
+        })
+        .collect();
+
+    // Pool: submit everything, join in reverse order.
+    let p = pool(4, 0);
+    let tickets: Vec<ExecTicket> = (0..24).map(|i| p.submit(job(i))).collect();
+    let mut results: Vec<Option<Vec<HostTensor>>> = (0..24).map(|_| None).collect();
+    for (i, t) in tickets.into_iter().enumerate().rev() {
+        let done = t.wait().unwrap();
+        assert_eq!(done.inputs, vec![f32s(&[i as f32, 1.0])], "inputs returned for reuse");
+        assert!(done.worker < 4);
+        results[i] = Some(done.outputs);
+    }
+    for (i, r) in results.into_iter().enumerate() {
+        assert_eq!(r.unwrap(), reference[i], "job {} diverged from inline execution", i);
+        assert_eq!(reference[i], expected(i));
+    }
+    assert_eq!(p.jobs_submitted(), 24);
+}
+
+#[test]
+fn panic_in_worker_propagates_to_the_ticket_and_pool_survives() {
+    // Single worker so the panicking job and the follow-up share one
+    // backend: the catch_unwind must leave the worker serving.
+    let p = pool(1, 0);
+    let bad = p.submit(ExecJob::Raw { name: "explode".into(), layer: None, args: vec![] });
+    let err = bad.wait().expect_err("panic must surface as an error");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("panic") && msg.contains("explode"), "{}", msg);
+
+    // Plain execution errors are distinguishable from panics.
+    let failing = p.submit(ExecJob::Raw { name: "fail".into(), layer: None, args: vec![] });
+    let err = format!("{:#}", failing.wait().unwrap_err());
+    assert!(err.contains("deliberate failure"), "{}", err);
+
+    // The worker survived both: a normal job still completes.
+    let ok = p.submit(job(3)).wait().unwrap();
+    assert_eq!(ok.outputs, expected(3));
+}
+
+#[test]
+fn worker_startup_failure_aborts_spawn_cleanly() {
+    let attempts = Arc::new(AtomicUsize::new(0));
+    let seen = attempts.clone();
+    let err = ExecutorPool::spawn(3, move |worker| {
+        seen.fetch_add(1, Ordering::SeqCst);
+        if worker == 2 {
+            Err(anyhow!("backend unavailable on worker 2"))
+        } else {
+            Ok(HostBackend { worker, delay: Duration::ZERO })
+        }
+    })
+    .map(|_| ())
+    .expect_err("pool with a failing worker must not spawn");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("backend unavailable on worker 2"), "{}", msg);
+    assert_eq!(attempts.load(Ordering::SeqCst), 3, "every worker ran its factory");
+}
+
+#[test]
+fn drop_drains_queued_jobs_without_leaking_tickets() {
+    // More slow jobs than workers, then drop the pool immediately: every
+    // already-submitted job must still execute and resolve its ticket
+    // (drain-on-shutdown), and the drop must block until workers finish.
+    let tickets: Vec<ExecTicket> = {
+        let p = pool(2, 5);
+        (0..10).map(|i| p.submit(job(i))).collect()
+        // `p` drops here: queue closes, workers drain, threads join.
+    };
+    for (i, t) in tickets.into_iter().enumerate() {
+        let done = t.wait().expect("queued job resolved after shutdown");
+        assert_eq!(done.outputs, expected(i));
+    }
+}
+
+#[test]
+fn warmup_broadcast_resolves_per_worker() {
+    // One warm job per worker, all awaited; HostBackend's default
+    // warmup is a no-op, so this covers routing + completion shape.
+    let p = pool(3, 0);
+    let warmed = p.warmup("tiny").expect("warmup jobs resolve");
+    assert_eq!(warmed, 3);
+    assert_eq!(p.jobs_submitted(), 3);
+    // pool still serves normal jobs afterwards
+    assert_eq!(p.submit(job(1)).wait().unwrap().outputs, expected(1));
+}
+
+#[test]
+fn handles_submit_from_other_threads() {
+    let p = pool(2, 0);
+    let h = p.handle();
+    let t = std::thread::spawn(move || {
+        let tickets: Vec<ExecTicket> = (0..8).map(|i| h.submit(job(i))).collect();
+        tickets
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| (i, t.wait().unwrap().outputs))
+            .collect::<Vec<_>>()
+        // the cloned handle drops with this thread, releasing the queue
+    });
+    for (i, out) in t.join().unwrap() {
+        assert_eq!(out, expected(i));
+    }
+    assert_eq!(p.jobs_submitted(), 8);
+}

@@ -6,7 +6,6 @@
 use freekv::config::{FreeKvParams, ModelConfig};
 use freekv::coordinator::engine::{Engine, SampleParams, Sequence};
 use freekv::kvcache::{Layout, RequestKv};
-use freekv::runtime::Runtime;
 use freekv::transfer::{RecallJob, RecallPipeline, TransferEngine};
 use freekv::util::rng::Rng;
 
@@ -126,20 +125,23 @@ fn worker_recall_equals_inline_recall_on_request_kv() {
 }
 
 // ---------------------------------------------------------------------
-// Real-engine equivalence (requires `make artifacts`; skips otherwise).
+// Real-engine equivalence (requires `make artifacts`; skips otherwise —
+// unless FREEKV_REQUIRE_ARTIFACTS is set, in which case skipping fails).
 // ---------------------------------------------------------------------
 
-fn engine(overlap: bool) -> Option<Engine> {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let rt = Runtime::load(dir).ok()?;
-    Engine::new(rt, "tiny", FreeKvParams { tau: 0.9, overlap, ..Default::default() }).ok()
+fn engine(overlap: bool, exec_workers: usize) -> Option<Engine> {
+    let rt = freekv::runtime::load_or_skip(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+    Some(
+        Engine::new(rt, "tiny", FreeKvParams { tau: 0.9, overlap, exec_workers, ..Default::default() })
+            .expect("engine constructs once the runtime loads"),
+    )
 }
 
 /// Seeded multi-sequence batch decode past the GPU budget; returns
 /// (per-seq generated tokens, engine counter tuple, per-seq xfer tuple).
 #[allow(clippy::type_complexity)]
-fn run_batch(overlap: bool, steps: usize) -> Option<(Vec<Vec<i32>>, (u64, u64, u64, u64), Vec<(u64, u64, u64)>)> {
-    let mut eng = engine(overlap)?;
+fn run_batch(overlap: bool, exec_workers: usize, steps: usize) -> Option<(Vec<Vec<i32>>, (u64, u64, u64, u64), Vec<(u64, u64, u64)>)> {
+    let mut eng = engine(overlap, exec_workers)?;
     let mut seqs: Vec<Sequence> = (0..2)
         .map(|i| {
             let prompt: Vec<i32> = (0..600).map(|t| ((t * 13 + i * 7) % 250) as i32).collect();
@@ -185,7 +187,8 @@ fn run_batch(overlap: bool, steps: usize) -> Option<(Vec<Vec<i32>>, (u64, u64, u
 
 #[test]
 fn overlapped_engine_bit_identical_to_serial() {
-    let (Some(serial), Some(overlapped)) = (run_batch(false, 24), run_batch(true, 24)) else {
+    let (Some(serial), Some(overlapped)) = (run_batch(false, 0, 24), run_batch(true, 0, 24))
+    else {
         eprintln!("artifacts/ missing — skipping real-engine overlap equivalence test");
         return;
     };
@@ -198,11 +201,110 @@ fn overlapped_engine_bit_identical_to_serial() {
 }
 
 #[test]
+fn pooled_dispatch_bit_identical_to_inline_dispatch() {
+    // The executor pool is a pure scheduling change: selection scored on
+    // a pool worker (recall overlap active in both runs) must leave
+    // tokens, recall/correction counters, and per-sequence transfer
+    // accounting exactly as inline execution does.
+    let (Some(inline), Some(pooled)) = (run_batch(true, 0, 24), run_batch(true, 2, 24)) else {
+        eprintln!("artifacts/ missing — skipping pooled-dispatch equivalence test");
+        return;
+    };
+    assert_eq!(inline.0, pooled.0, "generated tokens diverged between dispatch modes");
+    assert_eq!(inline.1, pooled.1, "recall/correction counters diverged");
+    assert_eq!(inline.2, pooled.2, "per-sequence transfer counters diverged");
+    assert!(inline.1 .0 > 0, "no pages recalled — test not exercising the pipeline");
+}
+
+#[test]
+fn microbatch_pair_bit_identical_across_dispatch_modes() {
+    // Six sequences split 3/3: the joint batch exceeds the largest
+    // compiled decode bucket (4), so the pair path genuinely runs two
+    // bucket-4 lanes — this is the configuration where microbatching
+    // extends the servable batch size. Pipelined (pooled) and
+    // sequential (serial) dispatch must produce identical outputs.
+    let run_pair = |exec_workers: usize, steps: usize| -> Option<Vec<Vec<i32>>> {
+        let mut eng = engine(true, exec_workers)?;
+        let mut seqs: Vec<Sequence> = (0..6)
+            .map(|i| {
+                let prompt: Vec<i32> =
+                    (0..600).map(|t| ((t * 13 + i * 7) % 250) as i32).collect();
+                eng.new_sequence(
+                    i as u64,
+                    prompt,
+                    steps + 1,
+                    SampleParams { temperature: 0.8, top_p: 0.95, seed: 11 + i as u64 },
+                )
+            })
+            .collect();
+        for s in seqs.iter_mut() {
+            let lg = eng.prefill(s).unwrap();
+            let tok =
+                freekv::coordinator::engine::sample_token(&lg, &s.sample.clone(), &mut s.rng);
+            s.tokens.push(tok);
+        }
+        for _ in 0..steps {
+            let (front, back) = seqs.split_at_mut(3);
+            let mut a: Vec<&mut Sequence> = front.iter_mut().collect();
+            let mut b: Vec<&mut Sequence> = back.iter_mut().collect();
+            eng.decode_step_pair(&mut a, &mut b).unwrap();
+        }
+        for s in seqs.iter_mut() {
+            eng.drain_sequence(s);
+        }
+        if exec_workers > 0 {
+            assert!(eng.stats.microbatch_pairs > 0, "pair path not exercised");
+            assert!(eng.stats.exec_jobs > 0, "pool not exercised");
+        }
+        Some(seqs.iter().map(|s| s.generated().to_vec()).collect())
+    };
+    let (Some(serial), Some(pooled)) = (run_pair(0, 12), run_pair(2, 12)) else {
+        eprintln!("artifacts/ missing — skipping microbatch pair equivalence test");
+        return;
+    };
+    assert_eq!(serial, pooled, "paired microbatch tokens diverged between dispatch modes");
+}
+
+#[test]
+fn pair_merges_when_splitting_would_not_shrink_the_bucket() {
+    // Two lanes of two sequences both pad to bucket 4 — identical to
+    // the joint batch's bucket — so decode_step_pair must decode them
+    // as ONE joint step instead of doubling artifact compute.
+    let Some(mut eng) = engine(true, 2) else {
+        eprintln!("artifacts/ missing — skipping pair-merge test");
+        return;
+    };
+    let mut seqs: Vec<Sequence> = (0..4)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..120).map(|t| ((t * 11 + i * 5) % 250) as i32).collect();
+            eng.new_sequence(i as u64, prompt, 4, SampleParams::greedy())
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        let lg = eng.prefill(s).unwrap();
+        let tok = freekv::coordinator::engine::sample_token(&lg, &s.sample.clone(), &mut s.rng);
+        s.tokens.push(tok);
+    }
+    {
+        let (front, back) = seqs.split_at_mut(2);
+        let mut a: Vec<&mut Sequence> = front.iter_mut().collect();
+        let mut b: Vec<&mut Sequence> = back.iter_mut().collect();
+        eng.decode_step_pair(&mut a, &mut b).unwrap();
+    }
+    for s in seqs.iter_mut() {
+        eng.drain_sequence(s);
+    }
+    assert_eq!(eng.stats.microbatch_pairs, 0, "same-bucket split must merge, not pair");
+    assert_eq!(eng.stats.steps, 1, "merged pair decodes as one joint step");
+    assert_eq!(eng.stats.max_batch_lanes, 4, "joint step carries all four lanes");
+}
+
+#[test]
 fn overlapped_engine_matches_blocking_when_budget_covers_context() {
     // With the whole context resident, speculation cannot lose pages, so
     // blocking and overlapped speculative decode must produce identical
     // tokens (the seed's guarantee, now with the worker in the loop).
-    let Some(mut eng) = engine(true) else {
+    let Some(mut eng) = engine(true, 2) else {
         eprintln!("artifacts/ missing — skipping");
         return;
     };
@@ -215,7 +317,7 @@ fn overlapped_engine_matches_blocking_when_budget_covers_context() {
         seq.generated().to_vec()
     };
     let spec = run(&mut eng, false);
-    let Some(mut eng2) = engine(true) else { return };
+    let Some(mut eng2) = engine(true, 2) else { return };
     let block = run(&mut eng2, true);
     assert_eq!(spec, block);
 }

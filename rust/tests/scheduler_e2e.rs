@@ -22,17 +22,14 @@ fn artifacts_dir() -> &'static str {
     concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
 }
 
-fn scheduler() -> Option<Scheduler> {
-    let rt = match Runtime::load(artifacts_dir()) {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping real-engine test: {e:#}");
-            return None;
-        }
-    };
+fn scheduler_with(scfg: SchedulerConfig) -> Option<Scheduler> {
+    let rt = freekv::runtime::load_or_skip(artifacts_dir())?;
     let eng = Engine::new(rt, "tiny", FreeKvParams { tau: 0.9, ..Default::default() }).ok()?;
-    let cfg = SchedulerConfig { max_batch: 4, admit_below: 4, ..Default::default() };
-    Some(Scheduler::new(eng, cfg))
+    Some(Scheduler::new(eng, scfg))
+}
+
+fn scheduler() -> Option<Scheduler> {
+    scheduler_with(SchedulerConfig { max_batch: 4, admit_below: 4, ..Default::default() })
 }
 
 #[test]
@@ -100,6 +97,51 @@ fn batched_and_sequential_scheduling_agree_for_greedy() {
 }
 
 #[test]
+fn microbatched_real_decode_matches_bucketed_scheduling() {
+    // Decode buckets top out at 4, so a running set of 6 can only be
+    // served jointly by rotating 4-deep batches — or, with
+    // microbatching, by splitting into two 3-wide lanes per tick
+    // (decode_step_pair). Per-lane computation is independent, so every
+    // request must generate the same greedy text either way.
+    let run = |max_batch: usize, microbatch_min: usize| -> Option<Vec<String>> {
+        let mut sched = scheduler_with(SchedulerConfig {
+            max_batch,
+            admit_below: 6,
+            microbatch_min,
+            ..Default::default()
+        })?;
+        for i in 1..=6u64 {
+            // distinct prompts so per-lane results are distinguishable
+            sched.submit(Request::from_text(i, &format!("microbatch real engine {} ", i), 8));
+        }
+        sched.drain().unwrap();
+        Some((1..=6u64).map(|i| sched.take_completion(i).unwrap().text).collect())
+    };
+    // baseline: joint 4-deep batches, no splitting
+    let Some(joint) = run(4, 0) else { return };
+    // microbatched: 6-deep decode set split into two pair-dispatched lanes
+    let Some(split) = run(8, 2) else { return };
+    assert_eq!(joint, split, "microbatched decode diverged from bucketed scheduling");
+    // and the pair path genuinely ran (joint bucket for 6 doesn't exist,
+    // so the engine cannot have merged the halves)
+    let mut sched = scheduler_with(SchedulerConfig {
+        max_batch: 8,
+        admit_below: 6,
+        microbatch_min: 2,
+        ..Default::default()
+    })
+    .expect("backend available");
+    for i in 1..=6u64 {
+        sched.submit(Request::from_text(i, &format!("count the pairs {} ", i), 6));
+    }
+    sched.drain().unwrap();
+    assert!(
+        sched.engine.stats().microbatch_pairs > 0,
+        "running set of 6 never took the pair path"
+    );
+}
+
+#[test]
 fn cancel_mid_generation_frees_kv_on_the_real_engine() {
     let Some(mut sched) = scheduler() else { return };
     sched.submit(Request::from_text(1, "cancel on the real engine ", 64));
@@ -133,7 +175,8 @@ fn http_server_generates_over_the_wire() {
     }) {
         Ok(el) => el,
         Err(e) => {
-            eprintln!("skipping real-engine HTTP test: {e:#}");
+            // same skip-or-hard-fail contract as runtime::load_or_skip
+            let _ = freekv::runtime::require_or_skip::<()>(Err(e));
             return;
         }
     };

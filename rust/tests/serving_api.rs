@@ -255,6 +255,76 @@ fn admission_queue_full_returns_429() {
 }
 
 #[test]
+fn connection_cap_answers_503_instead_of_spawning_threads() {
+    // Two slow streaming sessions occupy the whole connection budget;
+    // an extra connection must be answered 503 by the acceptor, and the
+    // budget must be released once a session ends.
+    let el = spawn_sim_loop(10, 8);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sub = el.submitter();
+    thread::spawn(move || {
+        serve_listener(
+            listener,
+            sub,
+            ServeOptions { max_connections: 2, ..Default::default() },
+        )
+        .unwrap();
+    });
+
+    // Hold two streaming connections open mid-generation.
+    let mut held = Vec::new();
+    for i in 0..2 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let body = format!(
+            r#"{{"prompt":"occupy slot {} ","max_tokens":200,"stream":true}}"#,
+            i
+        );
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        // wait for the first token so the connection is surely serving
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap() > 0 {
+            if line.starts_with("data: ") {
+                break;
+            }
+            line.clear();
+        }
+        held.push((s, reader));
+    }
+
+    // Third connection: saturated edge answers 503 for generation...
+    let (status, body) = post_generate(addr, r#"{"prompt":"no room ","max_tokens":2}"#);
+    assert_eq!(status, 503, "{}", body);
+    assert!(body.contains("connection limit"), "{}", body);
+    // ...but probes still work (saturation must not look like a dead
+    // engine loop to an orchestrator).
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200, "healthz must survive saturation: {}", body);
+
+    // Release one slot (client disconnect cancels the session)...
+    held.pop();
+    // ...and the edge accepts again once the handler thread exits.
+    let t0 = Instant::now();
+    loop {
+        let (status, _) = post_generate(addr, r#"{"prompt":"room now ","max_tokens":2}"#);
+        if status == 200 {
+            break;
+        }
+        assert_eq!(status, 503, "unexpected status {}", status);
+        assert!(t0.elapsed() < Duration::from_secs(5), "connection slot never released");
+        thread::sleep(Duration::from_millis(20));
+    }
+    el.shutdown();
+}
+
+#[test]
 fn stop_strings_and_sampling_come_from_request_json() {
     // The sim stream is a pure function of the previous token, so the
     // expected text is computable client-side; a stop string cut from it
