@@ -9,7 +9,10 @@
 # source changes in `freekv` (see the stub's module docs). This script:
 #
 #   1. rewrites the `xla` dependency in rust/Cargo.toml to the real
-#      binding crate (pinned via XLA_RS_GIT / XLA_RS_REV),
+#      binding crate — PINNED by default to the immutable crates.io
+#      release XLA_RS_VERSION, so the job is reproducible; exporting
+#      XLA_RS_REV (a git rev/branch of XLA_RS_GIT) overrides the pin
+#      for testing newer binding surfaces,
 #   2. drops the stub from the workspace members,
 #   3. fetches the prebuilt xla_extension archive the binding links
 #      against and exports XLA_EXTENSION_DIR for subsequent steps.
@@ -20,25 +23,33 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 XLA_RS_GIT="${XLA_RS_GIT:-https://github.com/LaurentMazare/xla-rs}"
-# NOT yet pinned: floats on upstream `main` until a commit has been
-# vetted on a real runner (authored offline — inventing a SHA here would
-# be worse than the float). First green CI run: copy the rev it resolved
-# into this default so the job becomes reproducible. Tracked in ROADMAP.
-XLA_RS_REV="${XLA_RS_REV:-main}"
+# Default pin: the crates.io release of the binding (immutable, no
+# floating SHA). Bump deliberately after validating on a real runner.
+XLA_RS_VERSION="${XLA_RS_VERSION:-0.1.6}"
+# Escape hatch: a git rev/branch of XLA_RS_GIT takes precedence over the
+# crates.io pin when set (e.g. XLA_RS_REV=main to trial upstream).
+XLA_RS_REV="${XLA_RS_REV:-}"
 XLA_EXT_VERSION="${XLA_EXT_VERSION:-0.5.1}"
 XLA_EXT_URL="${XLA_EXT_URL:-https://github.com/elixir-nx/xla/releases/download/v${XLA_EXT_VERSION}/xla_extension-x86_64-linux-gnu-cpu.tar.gz}"
 
-echo "[use-real-xla] pointing rust/Cargo.toml at ${XLA_RS_GIT}@${XLA_RS_REV}"
-python3 - "$XLA_RS_GIT" "$XLA_RS_REV" <<'EOF'
+if [ -n "${XLA_RS_REV}" ]; then
+  echo "[use-real-xla] pointing rust/Cargo.toml at ${XLA_RS_GIT}@${XLA_RS_REV} (git override)"
+else
+  echo "[use-real-xla] pointing rust/Cargo.toml at crates.io xla =${XLA_RS_VERSION} (pinned)"
+fi
+python3 - "$XLA_RS_GIT" "$XLA_RS_REV" "$XLA_RS_VERSION" <<'EOF'
 import re
 import sys
 
-git, rev = sys.argv[1], sys.argv[2]
+git, rev, version = sys.argv[1], sys.argv[2], sys.argv[3]
 path = "rust/Cargo.toml"
 s = open(path).read()
-dep = f'xla = {{ git = "{git}", rev = "{rev}" }}'
-if rev in ("main", "master"):
-    dep = f'xla = {{ git = "{git}", branch = "{rev}" }}'
+if rev:
+    dep = f'xla = {{ git = "{git}", rev = "{rev}" }}'
+    if rev in ("main", "master"):
+        dep = f'xla = {{ git = "{git}", branch = "{rev}" }}'
+else:
+    dep = f'xla = "={version}"'
 s, n = re.subn(r'^xla = \{ path = "vendor/xla" \}$', dep, s, flags=re.M)
 assert n == 1, "xla path dependency not found in rust/Cargo.toml"
 s, n = re.subn(

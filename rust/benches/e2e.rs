@@ -8,11 +8,51 @@
 use std::time::Instant;
 
 use freekv::config::{FreeKvParams, ModelConfig};
-use freekv::coordinator::engine::{Engine, SampleParams};
-use freekv::policies::latency::{simulate_request, Method, SimKnobs};
+use freekv::coordinator::engine::{Engine, SampleParams, Sequence};
+use freekv::policies::latency::{simulate_lane_scaling, simulate_request, Method, SimKnobs};
 use freekv::runtime::Runtime;
 use freekv::sim::{CostModel, DeviceProfile};
 use freekv::util::json::{Json, JsonObj};
+
+/// One real-engine N-lane decode run: `batch` sequences decoded through
+/// `decode_step_lanes` with the engine's bucket-aware planner capped at
+/// `max_lanes`. Returns (ms/step, tokens, stats snapshot).
+fn real_lane_decode(
+    batch: usize,
+    max_lanes: usize,
+    steps: usize,
+) -> Option<(f64, Vec<Vec<i32>>, freekv::coordinator::engine::EngineStats)> {
+    let rt = Runtime::load("artifacts").ok()?;
+    let params =
+        FreeKvParams { tau: 0.9, overlap: true, exec_workers: 2, max_lanes, ..Default::default() };
+    let mut eng = Engine::new(rt, "tiny", params).ok()?;
+    let prompt: Vec<i32> = (0..480).map(|i| (i * 17 % 250) as i32).collect();
+    let mut seqs: Vec<Sequence> = (0..batch)
+        .map(|i| {
+            eng.new_sequence(
+                i as u64,
+                prompt.clone(),
+                steps + 1,
+                SampleParams { temperature: 0.8, top_p: 0.95, seed: i as u64 },
+            )
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        let _ = eng.prefill(s).unwrap();
+        s.tokens.push(1);
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let mut lanes: Vec<Vec<&mut Sequence>> = vec![seqs.iter_mut().collect()];
+        eng.decode_step_lanes(&mut lanes).unwrap();
+    }
+    let ms_per_step = t0.elapsed().as_secs_f64() / steps as f64 * 1e3;
+    for s in seqs.iter_mut() {
+        eng.drain_sequence(s);
+    }
+    let tokens = seqs.iter().map(|s| s.generated().to_vec()).collect();
+    Some((ms_per_step, tokens, eng.stats.clone()))
+}
 
 /// One real-engine decode run; returns (ms/step, stats snapshot, tokens).
 fn real_decode(
@@ -171,6 +211,26 @@ fn main() {
     }
 
     println!();
+    println!("=== bench e2e: modeled decode lane sweep (Llama-3.1-8B, b=8) ===");
+    {
+        // The N-lane microbatch model: per-lane artifact streams with
+        // host-side work serialized on the engine thread
+        // (simulate_lane_scaling) — the modeled twin of --max-lanes.
+        let cm = CostModel::new(DeviceProfile::a100_pcie4(), ModelConfig::llama31_8b());
+        let mut rows = Vec::new();
+        for lanes in [1usize, 2, 4] {
+            let k = SimKnobs { decode_lanes: lanes, exec_streams: 4, ..Default::default() };
+            let r = simulate_lane_scaling(&cm, 8, 128, &k);
+            println!("lanes={} {:>8.2} ms/tok", lanes, r.per_token() * 1e3);
+            let mut o = JsonObj::new();
+            o.insert("lanes", lanes);
+            o.insert("ms_per_tok", r.per_token() * 1e3);
+            rows.push(Json::from(o));
+        }
+        report.insert("modeled_lanes", Json::Arr(rows));
+    }
+
+    println!();
     println!("=== bench e2e: real tiny-model engine throughput ===");
     if Runtime::load("artifacts").is_err() {
         println!("artifacts/ missing — run `make artifacts` (skipping real bench)");
@@ -234,6 +294,52 @@ fn main() {
             _ => {
                 report.insert("real_dispatch", Json::Null);
             }
+        }
+    }
+
+    println!();
+    println!("=== bench e2e: REAL decode lane sweep (tiny) ===");
+    {
+        // Per-lane width pinned at 4 (one full bucket): batch grows with
+        // the lane count, so the tok/s column is the lane-scaling curve.
+        let steps = 32usize;
+        let mut rows = Vec::new();
+        let mut outputs_identical = true;
+        for (batch, lanes) in [(4usize, 1usize), (8, 2), (16, 4)] {
+            match real_lane_decode(batch, lanes, steps) {
+                Some((ms, toks, st)) => {
+                    let tok_s = batch as f64 * 1e3 / ms;
+                    println!(
+                        "batch={:>2} max_lanes={} {:>8.2} ms/step {:>8.1} tok/s | lane_sets {} peak inflight {}",
+                        batch, lanes, ms, tok_s, st.lane_sets, st.max_lanes_inflight,
+                    );
+                    // lane scheduling must not change any sequence's
+                    // tokens vs single-lane dispatch of the same batch
+                    // (the lanes==1 row IS its own reference)
+                    if lanes > 1 {
+                        match real_lane_decode(batch, 1, steps) {
+                            Some((_, ref_toks, _)) => outputs_identical &= ref_toks == toks,
+                            None => outputs_identical = false,
+                        }
+                    }
+                    let mut o = JsonObj::new();
+                    o.insert("batch", batch);
+                    o.insert("max_lanes", lanes);
+                    o.insert("ms_per_step", ms);
+                    o.insert("tok_s", tok_s);
+                    o.insert("lane_sets", st.lane_sets as usize);
+                    o.insert("max_lanes_inflight", st.max_lanes_inflight as usize);
+                    rows.push(Json::from(o));
+                }
+                None => break,
+            }
+        }
+        if rows.is_empty() {
+            report.insert("real_lanes", Json::Null);
+        } else {
+            println!("lane outputs identical to single-lane dispatch: {}", outputs_identical);
+            report.insert("real_lanes", Json::Arr(rows));
+            report.insert("real_lanes_outputs_identical", outputs_identical);
         }
     }
 

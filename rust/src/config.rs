@@ -176,19 +176,34 @@ pub struct FreeKvParams {
     pub overlap: bool,
     /// Workers in the Send-safe PJRT executor pool
     /// (`runtime::executor`). With N >= 1, selection scoring is
-    /// submitted to the pool and leaves the decode critical path, and
-    /// `Engine::decode_step_pair` can pipeline two microbatches across
-    /// workers. `0` keeps every artifact execution inline on the engine
-    /// thread — the serial-dispatch ablation baseline. Outputs are
-    /// bit-identical either way (same artifacts, same inputs).
+    /// submitted to the pool and leaves the decode critical path,
+    /// `Engine::decode_step_lanes` can pipeline N microbatch lanes
+    /// across workers, and prefill runs as chunked pool jobs. `0` keeps
+    /// every artifact execution inline on the engine thread — the
+    /// serial-dispatch ablation baseline. Outputs are bit-identical
+    /// either way (same artifacts, same inputs).
     ///
     /// Memory note: single-lane decode sends only selection (weight-free
-    /// artifacts) to the pool, so workers stay cheap. Paired-microbatch
-    /// decode routes weight-bearing artifacts too, and each worker's
-    /// private runtime then lazily uploads its own copy of the config's
-    /// weights — budget roughly `(exec_workers + 1) x` weight memory
-    /// when enabling the scheduler's `microbatch_min`.
+    /// artifacts) to the pool, so workers stay cheap. Multi-lane decode
+    /// routes weight-bearing artifacts too, but those are confined to
+    /// the first `weight_workers` pool workers, so weight memory is
+    /// `(weight_workers + 1) x` — it no longer grows with the pool.
     pub exec_workers: usize,
+    /// Max decode microbatch lanes the engine keeps in flight
+    /// concurrently (`Engine::decode_step_lanes`). The lane planner is
+    /// bucket-aware: it only splits a batch into as many lanes as
+    /// actually reduce padded artifact compute, so raising this past
+    /// what the compiled buckets justify is harmless. `1` disables
+    /// multi-lane pipelining entirely.
+    pub max_lanes: usize,
+    /// Pool workers allowed to hold a private copy of the model weights
+    /// (clamped to `exec_workers`, min 1). Weight-bearing jobs (embed /
+    /// QKV / attention / logits / prefill chunks) are routed only to
+    /// these workers; weight-free selection scoring runs anywhere. This
+    /// is the designated-weight-worker design: total weight memory is
+    /// `(weight_workers + 1) x` (engine runtime + weight workers)
+    /// instead of `(exec_workers + 1) x`.
+    pub weight_workers: usize,
 }
 
 impl Default for FreeKvParams {
@@ -200,6 +215,8 @@ impl Default for FreeKvParams {
             no_speculation: false,
             overlap: true,
             exec_workers: 2,
+            max_lanes: 2,
+            weight_workers: 1,
         }
     }
 }

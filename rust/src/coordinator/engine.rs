@@ -16,12 +16,20 @@
 //! when `FreeKvParams::exec_workers > 0`: the decode step is factored
 //! into explicit submit/join phases over a [`Lane`] (one microbatch), so
 //! selection scoring runs on a pool worker while this thread drains the
-//! recall pipeline, and [`Engine::decode_step_pair`] interleaves two
-//! lanes so one microbatch's host-side work (gather, correction, page
-//! bookkeeping) overlaps the other's QKV/attention execution. With
-//! `exec_workers == 0` every phase executes inline in the same order —
-//! the serial-dispatch ablation — and outputs are bit-identical either
-//! way.
+//! recall pipeline. [`Engine::decode_step_lanes`] generalizes this to N
+//! microbatch lanes: a bucket-aware planner splits the joint batch into
+//! the lane widths that minimize padded artifact compute (up to
+//! `FreeKvParams::max_lanes` in flight), and an in-engine lane scheduler
+//! drives each lane's submit/join state machine, advancing whichever
+//! lane's pool ticket completes next — so one lane's host-side work
+//! (gather, correction, page bookkeeping) overlaps the others' QKV /
+//! attention execution with no fixed alternation. Prefill rides the
+//! same pool as chunked jobs ([`Engine::prefill_begin`]): a long prompt
+//! is embedded, layered, logits-ed, and speculation-seeded one artifact
+//! at a time, interleaving with in-flight decode lanes instead of
+//! stalling the engine thread. With `exec_workers == 0` every phase
+//! executes inline in the same order — the serial-dispatch ablation —
+//! and outputs are bit-identical either way.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -31,7 +39,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{FreeKvParams, ModelConfig};
 use crate::kvcache::{Layout, RequestKv};
 use crate::policies::freekv::{correction_check, SpecState};
-use crate::runtime::{ExecJob, ExecTicket, ExecutorPool, HostTensor, Runtime};
+use crate::runtime::{ExecDone, ExecJob, ExecTicket, ExecutorPool, HostTensor, Runtime};
 use crate::transfer::{RecallJob, RecallPipeline, TransferEngine};
 use crate::util::rng::Rng;
 
@@ -67,8 +75,25 @@ pub struct EngineStats {
     /// Selection-scoring worker time hidden behind engine-thread work
     /// (`select_secs` counts only the time the engine blocked joining).
     pub select_hidden_secs: f64,
-    /// Decode invocations that pipelined two microbatches as a pair.
-    pub microbatch_pairs: u64,
+    /// Decode invocations that pipelined >= 2 microbatch lanes through
+    /// the lane scheduler.
+    pub lane_sets: u64,
+    /// Peak microbatch lanes concurrently in flight on the scheduler.
+    pub max_lanes_inflight: u64,
+    /// Pooled prefill chunks (embed / layer / logits / seed jobs)
+    /// completed on executor workers.
+    pub prefill_chunks: u64,
+    /// Prefill chunks that completed while decode work (a joint step or
+    /// a lane set) was in flight — the proof that prefill no longer
+    /// stalls decode.
+    pub prefill_overlap_chunks: u64,
+    /// XLA executable compiles across the engine runtime and every pool
+    /// worker (route-aware warm-up keeps this near one compile per
+    /// artifact per *eligible* runtime instead of per worker).
+    pub exec_compiles: u64,
+    /// Weight-blob device uploads across the engine runtime and pool
+    /// workers; bounded by `weight_workers + 1`, not the pool size.
+    pub weight_uploads: u64,
     pub steps: u64,
     /// Decode steps that carried ≥ 2 sequences (continuous batching
     /// actually interleaving concurrent requests).
@@ -128,21 +153,56 @@ pub trait Backend {
 
     fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>>;
 
+    /// Hand a sequence to the backend for prefill. A backend with an
+    /// executor pool may run it asynchronously in chunks — then this
+    /// returns `None` and the completed prefill surfaces later from
+    /// [`Backend::prefill_poll`] / [`Backend::prefill_wait`]. The
+    /// default completes synchronously and returns the result at once.
+    fn prefill_begin(&mut self, mut seq: Sequence) -> Option<PrefillDone> {
+        let result = self.prefill(&mut seq);
+        Some(PrefillDone { seq, result })
+    }
+
+    /// Non-blocking: advance any in-flight asynchronous prefills and
+    /// return the ones that completed (possibly failed).
+    fn prefill_poll(&mut self) -> Vec<PrefillDone> {
+        Vec::new()
+    }
+
+    /// Block until at least one in-flight asynchronous prefill
+    /// completes; returns the completed set (empty when none in flight).
+    fn prefill_wait(&mut self) -> Vec<PrefillDone> {
+        Vec::new()
+    }
+
+    /// Asynchronous prefills currently in flight.
+    fn prefills_inflight(&self) -> usize {
+        0
+    }
+
+    /// Abandon an in-flight asynchronous prefill, returning the
+    /// sequence so the caller can release its KV state. `None` when
+    /// `id` is not prefilling.
+    fn prefill_cancel(&mut self, _id: u64) -> Option<Sequence> {
+        None
+    }
+
     fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()>;
 
-    /// Decode two disjoint microbatches "in flight together". The
-    /// default runs them back to back (correct for any backend); the
-    /// real [`Engine`] overrides it to pipeline the two across the
-    /// executor pool so one microbatch's host-side work overlaps the
-    /// other's artifact execution. Appends exactly one token to every
-    /// sequence of both batches, like two `decode_step` calls.
-    fn decode_step_pair(
-        &mut self,
-        a: &mut [&mut Sequence],
-        b: &mut [&mut Sequence],
-    ) -> Result<()> {
-        self.decode_step(a)?;
-        self.decode_step(b)
+    /// Decode several disjoint microbatch lanes "in flight together",
+    /// appending exactly one token to every sequence of every lane —
+    /// equivalent in outputs to one `decode_step` per lane. The default
+    /// runs the lanes back to back (correct for any backend) with
+    /// per-lane error containment: a failing lane does not stop the
+    /// remaining lanes from taking their step (its own sequences simply
+    /// don't advance this step), and the first error is returned once
+    /// every lane has been driven. The real [`Engine`] overrides this
+    /// with a bucket-aware lane scheduler that pipelines the lanes
+    /// across its executor pool; the caller's partition is advisory —
+    /// the engine may repartition (or merge) when the compiled buckets
+    /// make the given split wasteful.
+    fn decode_step_lanes(&mut self, lanes: &mut [Vec<&mut Sequence>]) -> Result<()> {
+        contain_lanes(lanes.iter_mut().filter(|l| !l.is_empty()), |lane| self.decode_step(lane))
     }
 
     /// Mid-flight retirement hook: reclaim in-flight transfer state so a
@@ -164,6 +224,14 @@ impl SampleParams {
     pub fn greedy() -> SampleParams {
         SampleParams { temperature: 0.0, top_p: 1.0, seed: 0 }
     }
+}
+
+/// A prefill the backend finished (synchronously or asynchronously):
+/// the sequence comes back with either its next-token logits or the
+/// per-request failure.
+pub struct PrefillDone {
+    pub seq: Sequence,
+    pub result: Result<Vec<f32>>,
 }
 
 /// Per-layer persistent gather destination (one batch lane).
@@ -243,10 +311,18 @@ struct SelScratch {
 }
 
 /// An artifact execution in flight: either already done (serial
-/// in-thread dispatch) or a ticket on the executor pool. Both hand the
-/// input tensors back so scratch buffers survive the round trip.
+/// in-thread dispatch, or a pool ticket the lane scheduler folded after
+/// observing it complete) or a ticket on the executor pool. Both hand
+/// the input tensors back so scratch buffers survive the round trip.
+/// `waited_secs` is what this thread actually blocked: equal to
+/// `busy_secs` for inline execution, ~0 for a polled completion.
 enum Pending {
-    Ready { outputs: Vec<HostTensor>, inputs: Vec<HostTensor>, busy_secs: f64 },
+    Ready {
+        outputs: Vec<HostTensor>,
+        inputs: Vec<HostTensor>,
+        busy_secs: f64,
+        waited_secs: f64,
+    },
     Ticket(ExecTicket),
 }
 
@@ -270,11 +346,80 @@ struct Lane<'a, 'b> {
     qkv_t: Option<(HostTensor, HostTensor, HostTensor)>,
     /// selected pages per (sequence, kv head), post mask filter.
     sel_pages: Vec<Vec<Vec<usize>>>,
-    /// route *every* artifact of this lane through the pool (pair mode,
-    /// where the other lane's host work overlaps). Single-lane decode
-    /// pools only selection — the other joins are immediate, so pooling
-    /// them would add dispatch overhead for zero overlap.
+    /// route *every* artifact of this lane through the pool (lane-set
+    /// mode, where the other lanes' host work overlaps). Single-lane
+    /// decode pools only selection — the other joins are immediate, so
+    /// pooling them would add dispatch overhead for zero overlap.
     pool_all: bool,
+}
+
+/// Which artifact a lane currently has in flight on the pool; joining
+/// it unlocks the next host phase + submit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LaneStep {
+    /// embed in flight; join starts layer 0's QKV.
+    Embed,
+    /// QKV of this layer in flight; join submits selection + drains.
+    Qkv(usize),
+    /// selection of this layer in flight; join corrects + submits attn.
+    Select(usize),
+    /// attention of this layer in flight; join appends KV, dispatches
+    /// speculative recall, then submits the next QKV (or logits).
+    Attn(usize),
+    /// logits in flight; join samples one token per sequence.
+    Logits,
+    /// step complete (or the lane failed and was retired).
+    Done,
+}
+
+/// One lane being driven by the in-engine lane scheduler.
+struct LaneRun<'a, 'b> {
+    lane: Lane<'a, 'b>,
+    step: LaneStep,
+    /// Monotone submission stamp of the in-flight job — the blocking
+    /// fallback joins the earliest-submitted lane (FIFO per worker
+    /// makes it the likeliest to finish first).
+    submitted_at: u64,
+    /// First error this lane hit; the lane is retired but the other
+    /// lanes complete their step before the error propagates.
+    error: Option<anyhow::Error>,
+}
+
+/// Which artifact an in-flight chunked prefill currently has pending on
+/// the pool.
+#[derive(Debug, Clone, Copy)]
+enum PrefillPhase {
+    /// prompt embedding over the prefill bucket.
+    Embed,
+    /// `layer_prefill` for this layer.
+    Layer(usize),
+    /// final logits over the bucketed hidden state.
+    Logits,
+    /// speculative seeding (single-sequence selection) for this layer.
+    Seed(usize),
+}
+
+/// One prompt prefill in flight on the executor pool, advanced one
+/// artifact ("chunk") at a time from the engine thread. Chunking is
+/// what bounds head-of-line blocking: a 100k-token prefill never holds
+/// a pool worker for more than one layer's work, so decode lane jobs
+/// interleave with it instead of stalling behind the whole prompt.
+struct PrefillJob {
+    seq: Sequence,
+    bucket: usize,
+    /// live prompt tokens (<= bucket; the rest is padding).
+    len: usize,
+    phase: PrefillPhase,
+    pending: Option<ExecTicket>,
+    /// hidden state entering the next layer chunk.
+    h: Option<HostTensor>,
+    pos_t: Option<HostTensor>,
+    valid_t: Option<HostTensor>,
+    /// last-token query per layer (drives speculation seeding).
+    q_last: Vec<Vec<f32>>,
+    /// the prompt's next-token logits row, extracted at the Logits phase.
+    logits_row: Option<Vec<f32>>,
+    started: Instant,
 }
 
 /// The engine: owns the runtime handle + model config and executes the
@@ -301,6 +446,13 @@ pub struct Engine {
     sel_scratch: Vec<SelScratch>,
     /// reclaimed batch gather tensors (gk, gv, gvalid).
     attn_scratch: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+    /// chunked prefills in flight on the executor pool.
+    prefills: Vec<PrefillJob>,
+    /// completed (or failed) async prefills awaiting `prefill_poll`.
+    prefill_done: Vec<PrefillDone>,
+    /// true while the lane scheduler is driving a decode lane set —
+    /// prefill chunks completing in this window are the overlap proof.
+    decode_active: bool,
 }
 
 impl Engine {
@@ -308,9 +460,15 @@ impl Engine {
         let cfg = rt.manifest.config(cfg_name)?.clone();
         // Each pool worker owns a full PJRT client built on its own
         // thread (the EngineLoop trick); the engine-thread runtime stays
-        // for prefill and serial dispatch.
+        // for synchronous prefill and serial dispatch. Weight-bearing
+        // jobs are confined to the first `weight_workers` workers so
+        // pool weight memory stops scaling with the pool size.
         let executor = if params.exec_workers > 0 {
-            Some(ExecutorPool::for_manifest(&rt.manifest, params.exec_workers)?)
+            Some(ExecutorPool::for_manifest_routed(
+                &rt.manifest,
+                params.exec_workers,
+                params.weight_workers.clamp(1, params.exec_workers),
+            )?)
         } else {
             None
         };
@@ -327,6 +485,9 @@ impl Engine {
             executor,
             sel_scratch: Vec::new(),
             attn_scratch: Vec::new(),
+            prefills: Vec::new(),
+            prefill_done: Vec::new(),
+            decode_active: false,
         })
     }
 
@@ -461,6 +622,18 @@ impl Engine {
                 self.lane_qkv_join(&mut lane)?;
                 self.lane_select_submit(&mut lane, l)?;
                 self.lane_drain(&mut lane, l);
+                // Selection is scoring on a pool worker: spend the
+                // sliver advancing any completed prefill chunks, so a
+                // prefill progresses once per *layer* during joint
+                // decode instead of once per scheduler tick (chunk-
+                // paced TTFT would otherwise scale with n_layers).
+                // These folds happen under in-flight decode, so they
+                // count toward the overlap proof.
+                if !self.prefills.is_empty() {
+                    self.decode_active = true;
+                    self.prefill_advance();
+                    self.decode_active = false;
+                }
                 self.lane_select_join(&mut lane)?;
                 self.lane_correct(&mut lane, l);
                 self.lane_attn_submit(&mut lane, l)?;
@@ -468,6 +641,14 @@ impl Engine {
             }
             self.lane_logits_submit(&mut lane)?;
             self.lane_logits_join(&mut lane)?;
+        }
+
+        // Chunks that completed during the step's tail still overlapped
+        // in-flight decode; fold them with the overlap credit.
+        if !self.prefills.is_empty() {
+            self.decode_active = true;
+            self.prefill_advance();
+            self.decode_active = false;
         }
 
         // Finished sequences leave the batch after this step: reclaim
@@ -481,130 +662,329 @@ impl Engine {
 
         self.stats.steps += 1;
         self.stats.decode_secs += t_step.elapsed().as_secs_f64();
+        self.sync_pool_stats();
         Ok(())
     }
 
-    /// Decode two disjoint microbatches as a pipelined pair: while lane
-    /// A's QKV / selection / attention execute on pool workers, this
-    /// thread does lane B's host-side phases (and vice versa), so the
-    /// engine thread and several PJRT clients stay busy simultaneously.
-    /// Without a pool the lanes run back to back — same results, no
-    /// overlap. Equivalent to `decode_step(a); decode_step(b)` in
-    /// outputs either way.
-    ///
-    /// Bucket-aware: when the joint batch fits the same compiled bucket
-    /// a single lane would use, splitting buys nothing and *doubles*
-    /// artifact compute (each half pads up to that bucket), so the pair
-    /// is decoded as one joint step instead. The split genuinely pays
-    /// when the joint batch needs a larger bucket — or exceeds every
-    /// compiled bucket, which is what lets the scheduler run batches
-    /// past the largest bucket at all.
-    pub fn decode_step_pair(
-        &mut self,
-        a: &mut [&mut Sequence],
-        b: &mut [&mut Sequence],
-    ) -> Result<()> {
-        if a.is_empty() {
-            return self.decode_chunked(b);
+    /// Decode N disjoint microbatch lanes through the in-engine lane
+    /// scheduler. The caller's partition is advisory: the batch is
+    /// flattened and re-planned bucket-aware ([`Engine::plan_lanes`]),
+    /// which also recovers the pair-merge rule — lanes that would pad
+    /// to the joint batch's compiled bucket are merged back into one
+    /// joint step, since splitting there only duplicates artifact
+    /// compute. Outputs are bit-identical to decoding each lane
+    /// serially: per-sequence computation is independent of lane
+    /// composition (padding lanes are masked), so lane scheduling is a
+    /// pure wall-clock change.
+    pub fn decode_step_lanes(&mut self, lanes: &mut [Vec<&mut Sequence>]) -> Result<()> {
+        let flat: Vec<&mut Sequence> = lanes
+            .iter_mut()
+            .flat_map(|l| l.iter_mut().map(|s| &mut **s))
+            .collect();
+        if flat.is_empty() {
+            return Ok(());
         }
-        if b.is_empty() {
-            return self.decode_chunked(a);
+        self.decode_batch(flat)
+    }
+
+    /// Decode a joint batch of any width: planned into bucket-aware
+    /// lanes, pipelined through the executor pool when one exists, run
+    /// back to back otherwise.
+    fn decode_batch(&mut self, mut flat: Vec<&mut Sequence>) -> Result<()> {
+        let widths = self.plan_lanes(flat.len());
+        if widths.len() == 1 {
+            return self.decode_step(&mut flat);
         }
-        let lane_bucket = self.rt.manifest.decode_bucket(a.len().max(b.len()));
-        if lane_bucket.is_none() {
-            // A half wider than the largest compiled bucket cannot run
-            // as one lane no matter how we pair; decode each half in
-            // bucket-sized chunks instead of failing the whole engine.
-            self.decode_chunked(a)?;
-            return self.decode_chunked(b);
-        }
-        let joint_bucket = self.rt.manifest.decode_bucket(a.len() + b.len());
-        if let (Some(joint), Some(lane)) = (joint_bucket, lane_bucket) {
-            if joint <= lane {
-                let mut joint_batch: Vec<&mut Sequence> = a
-                    .iter_mut()
-                    .map(|s| &mut **s)
-                    .chain(b.iter_mut().map(|s| &mut **s))
-                    .collect();
-                return self.decode_step(&mut joint_batch);
-            }
+        let mut parts: Vec<Vec<&mut Sequence>> = Vec::with_capacity(widths.len());
+        let mut it = flat.into_iter();
+        for w in &widths {
+            parts.push(it.by_ref().take(*w).collect());
         }
         if self.executor.is_none() {
-            self.decode_step(a)?;
-            return self.decode_step(b);
+            // Serial dispatch: lanes run back to back with the same
+            // per-lane error containment as the default trait impl.
+            return contain_lanes(parts.iter_mut(), |part| self.decode_step(part));
         }
         let t_step = Instant::now();
         self.ensure_pipeline();
-        self.stats.microbatch_pairs += 1;
-        let n_layers = self.cfg.n_layers;
-        {
-            let mut la = self.lane_start(&mut *a, true)?;
-            let mut lb = self.lane_start(&mut *b, true)?;
-            self.lane_embed_join(&mut la)?;
-            self.lane_embed_join(&mut lb)?;
-            for l in 0..n_layers {
-                // Ping-pong schedule: every join on one lane has the
-                // other lane's artifact execution in flight behind it.
-                self.lane_qkv_submit(&mut la, l)?;
-                self.lane_qkv_submit(&mut lb, l)?;
-                self.lane_qkv_join(&mut la)?;
-                self.lane_select_submit(&mut la, l)?;
-                self.lane_qkv_join(&mut lb)?;
-                self.lane_select_submit(&mut lb, l)?;
-                self.lane_drain(&mut la, l);
-                self.lane_drain(&mut lb, l);
-                self.lane_select_join(&mut la)?;
-                self.lane_correct(&mut la, l);
-                self.lane_attn_submit(&mut la, l)?;
-                self.lane_select_join(&mut lb)?;
-                self.lane_correct(&mut lb, l);
-                self.lane_attn_submit(&mut lb, l)?;
-                self.lane_attn_join(&mut la, l)?;
-                self.lane_attn_join(&mut lb, l)?;
-            }
-            self.lane_logits_submit(&mut la)?;
-            self.lane_logits_submit(&mut lb)?;
-            self.lane_logits_join(&mut la)?;
-            self.lane_logits_join(&mut lb)?;
-        }
-        for seq in a.iter_mut().chain(b.iter_mut()) {
+        let max_inflight = self.params.max_lanes.max(1);
+        self.decode_active = true;
+        let result = self.run_lane_set(&mut parts, max_inflight);
+        // Chunks that finished on workers during the lane set but were
+        // not folded in an idle sliver still count as overlapped work.
+        self.prefill_advance();
+        self.decode_active = false;
+        // Finished sequences leave the batch after this step: reclaim
+        // their in-flight transfer halves.
+        for seq in parts.iter_mut().flat_map(|p| p.iter_mut()) {
             if seq.done() {
                 self.drain_sequence(seq);
             }
         }
-        // Two microbatch decode invocations, one wall-clock interval.
-        self.stats.steps += 2;
+        // One microbatch decode invocation per lane, one wall interval.
+        self.stats.steps += parts.len() as u64;
         self.stats.decode_secs += t_step.elapsed().as_secs_f64();
+        self.sync_pool_stats();
+        result
+    }
+
+    /// Bucket-aware lane plan for a joint batch of `total` sequences:
+    /// balanced lane widths. Chooses the lane count (between the
+    /// minimum that fits the largest compiled bucket and
+    /// `params.max_lanes`) minimizing total padded artifact compute
+    /// `N * bucket(ceil(total/N))`; ties go to the fewest lanes —
+    /// splitting without shrinking the per-lane bucket only duplicates
+    /// compute, which is the old pair-merge rule generalized.
+    fn plan_lanes(&self, total: usize) -> Vec<usize> {
+        let cap = self.rt.manifest.decode_batch_buckets.iter().copied().max().unwrap_or(0);
+        if cap == 0 {
+            // no compiled decode buckets: let decode_step surface it
+            return vec![total];
+        }
+        let n_min = total.div_ceil(cap).max(1);
+        let n_max = self.params.max_lanes.max(n_min).min(total);
+        let mut best: Option<(usize, usize)> = None; // (cost, n)
+        for n in n_min..=n_max {
+            let w = total.div_ceil(n);
+            let Some(b) = self.rt.manifest.decode_bucket(w) else { continue };
+            let cost = n * b;
+            let better = match best {
+                Some((c, _)) => cost < c,
+                None => true,
+            };
+            if better {
+                best = Some((cost, n));
+            }
+        }
+        let Some((_, n)) = best else {
+            return vec![total]; // even the narrowest lane has no bucket
+        };
+        crate::util::balanced_widths(total, n)
+    }
+
+    /// The lane scheduler: drive every lane's submit/join state machine,
+    /// advancing whichever lane's pool ticket completes next (no fixed
+    /// alternation), with at most `max_inflight` lanes in flight —
+    /// further lanes start as earlier ones finish. While no decode
+    /// ticket is ready, completed prefill chunks are advanced instead
+    /// (that idle sliver is exactly where prefill overlap comes from);
+    /// only when nothing at all is ready does the scheduler block, on
+    /// the earliest-submitted lane. A lane that fails is retired and
+    /// the others complete their step before the first error returns.
+    fn run_lane_set<'a, 'b>(
+        &mut self,
+        parts: &'a mut [Vec<&'b mut Sequence>],
+        max_inflight: usize,
+    ) -> Result<()> {
+        let n_layers = self.cfg.n_layers;
+        let concurrent = parts.len().min(max_inflight);
+        if concurrent > 1 {
+            self.stats.lane_sets += 1;
+        }
+        self.stats.max_lanes_inflight = self.stats.max_lanes_inflight.max(concurrent as u64);
+        let mut submit_seq: u64 = 0;
+        // Error of a lane that could not even start (no LaneRun exists
+        // for it); reported alongside per-lane failures.
+        let mut start_err: Option<anyhow::Error> = None;
+        let mut parts_iter = parts.iter_mut();
+        let mut runs: Vec<LaneRun<'a, 'b>> = Vec::with_capacity(concurrent);
+        while runs.len() < max_inflight {
+            let Some(part) = parts_iter.next() else { break };
+            let lane = self.lane_start(part.as_mut_slice(), true)?;
+            runs.push(LaneRun { lane, step: LaneStep::Embed, submitted_at: submit_seq, error: None });
+            submit_seq += 1;
+        }
+        loop {
+            let mut any_live = false;
+            let mut progressed = false;
+            for i in 0..runs.len() {
+                if runs[i].step == LaneStep::Done {
+                    continue;
+                }
+                any_live = true;
+                match Self::poll_lane(&mut runs[i]) {
+                    Ok(false) => {}
+                    Ok(true) => {
+                        progressed = true;
+                        self.advance_lane(&mut runs[i], n_layers, &mut submit_seq);
+                    }
+                    Err(e) => {
+                        progressed = true;
+                        Self::fail_lane(&mut runs[i], e);
+                    }
+                }
+                if runs[i].step == LaneStep::Done {
+                    // a lane finished: admit the next queued lane
+                    if let Some(part) = parts_iter.next() {
+                        match self.lane_start(part.as_mut_slice(), true) {
+                            Ok(lane) => {
+                                runs.push(LaneRun {
+                                    lane,
+                                    step: LaneStep::Embed,
+                                    submitted_at: submit_seq,
+                                    error: None,
+                                });
+                                submit_seq += 1;
+                            }
+                            Err(e) => {
+                                // lane never started: its sequences skip
+                                // this step; the error surfaces at the end
+                                if start_err.is_none() {
+                                    start_err = Some(e);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if !any_live {
+                break;
+            }
+            if progressed {
+                continue;
+            }
+            // No decode ticket ready: give completed prefill chunks the
+            // idle sliver, then re-poll the lanes.
+            if self.prefill_advance() > 0 {
+                continue;
+            }
+            // Everything is genuinely executing: block on the lane
+            // whose job was submitted earliest.
+            let Some(i) = runs
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.step != LaneStep::Done)
+                .min_by_key(|(_, r)| r.submitted_at)
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            match Self::block_lane(&mut runs[i]) {
+                Ok(()) => self.advance_lane(&mut runs[i], n_layers, &mut submit_seq),
+                Err(e) => Self::fail_lane(&mut runs[i], e),
+            }
+        }
+        // Every lane ran to completion or was retired; surface the
+        // first failure only now, with the other lanes' tokens safely
+        // appended.
+        for run in runs.iter_mut() {
+            if let Some(e) = run.error.take() {
+                return Err(e);
+            }
+        }
+        match start_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Non-blocking: fold the lane's pool ticket into a ready result if
+    /// it has completed. `Ok(true)` means the lane can advance now.
+    fn poll_lane(run: &mut LaneRun<'_, '_>) -> Result<bool> {
+        let polled = match run.lane.pending.as_ref() {
+            Some(Pending::Ticket(t)) => t.try_wait(),
+            // inline result already buffered, or nothing pending (the
+            // next advance will surface the phase mismatch)
+            _ => return Ok(true),
+        };
+        match polled {
+            None => Ok(false),
+            Some(Ok(done)) => {
+                run.lane.pending = Some(Pending::Ready {
+                    outputs: done.outputs,
+                    inputs: done.inputs,
+                    busy_secs: done.busy_secs,
+                    waited_secs: 0.0,
+                });
+                Ok(true)
+            }
+            Some(Err(e)) => Err(e),
+        }
+    }
+
+    /// Blocking: wait for the lane's pool ticket, folding the result
+    /// (and the time this thread actually blocked) for the next advance.
+    fn block_lane(run: &mut LaneRun<'_, '_>) -> Result<()> {
+        if matches!(run.lane.pending.as_ref(), Some(Pending::Ticket(_))) {
+            let Some(Pending::Ticket(t)) = run.lane.pending.take() else { unreachable!() };
+            let t0 = Instant::now();
+            let done = t.wait()?;
+            run.lane.pending = Some(Pending::Ready {
+                outputs: done.outputs,
+                inputs: done.inputs,
+                busy_secs: done.busy_secs,
+                waited_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
         Ok(())
     }
 
-    /// Decode a batch of any width: one step when it fits a compiled
-    /// bucket, otherwise sequential bucket-sized chunks. Keeps oversized
-    /// microbatch halves from turning into a fatal engine-global error.
-    fn decode_chunked(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
-        if seqs.is_empty() {
-            return Ok(());
+    /// Retire a failed lane; its sequences do not advance this step.
+    fn fail_lane(run: &mut LaneRun<'_, '_>, e: anyhow::Error) {
+        if run.error.is_none() {
+            run.error = Some(e);
         }
-        if self.rt.manifest.decode_bucket(seqs.len()).is_some() {
-            return self.decode_step(seqs);
+        run.step = LaneStep::Done;
+        run.lane.pending = None;
+    }
+
+    /// One state-machine transition: join the completed artifact, do
+    /// the host-side phase work, submit the lane's next artifact. Phase
+    /// errors retire the lane (`fail_lane`) without touching the others.
+    fn advance_lane(&mut self, run: &mut LaneRun<'_, '_>, n_layers: usize, submit_seq: &mut u64) {
+        let step = run.step;
+        let advanced = (|| -> Result<LaneStep> {
+            match step {
+                LaneStep::Embed => {
+                    self.lane_embed_join(&mut run.lane)?;
+                    self.lane_qkv_submit(&mut run.lane, 0)?;
+                    Ok(LaneStep::Qkv(0))
+                }
+                LaneStep::Qkv(l) => {
+                    self.lane_qkv_join(&mut run.lane)?;
+                    self.lane_select_submit(&mut run.lane, l)?;
+                    // the drain waits on the recall worker while the
+                    // just-submitted selection scores on a pool worker
+                    self.lane_drain(&mut run.lane, l);
+                    Ok(LaneStep::Select(l))
+                }
+                LaneStep::Select(l) => {
+                    self.lane_select_join(&mut run.lane)?;
+                    self.lane_correct(&mut run.lane, l);
+                    self.lane_attn_submit(&mut run.lane, l)?;
+                    Ok(LaneStep::Attn(l))
+                }
+                LaneStep::Attn(l) => {
+                    self.lane_attn_join(&mut run.lane, l)?;
+                    if l + 1 < n_layers {
+                        self.lane_qkv_submit(&mut run.lane, l + 1)?;
+                        Ok(LaneStep::Qkv(l + 1))
+                    } else {
+                        self.lane_logits_submit(&mut run.lane)?;
+                        Ok(LaneStep::Logits)
+                    }
+                }
+                LaneStep::Logits => {
+                    self.lane_logits_join(&mut run.lane)?;
+                    Ok(LaneStep::Done)
+                }
+                LaneStep::Done => Ok(LaneStep::Done),
+            }
+        })();
+        match advanced {
+            Ok(next) => {
+                run.step = next;
+                if next != LaneStep::Done {
+                    *submit_seq += 1;
+                    run.submitted_at = *submit_seq;
+                }
+            }
+            Err(e) => Self::fail_lane(run, e),
         }
-        let cap = self
-            .rt
-            .manifest
-            .decode_batch_buckets
-            .iter()
-            .copied()
-            .max()
-            .unwrap_or(1)
-            .max(1);
-        for chunk in seqs.chunks_mut(cap) {
-            self.decode_step(chunk)?;
-        }
-        Ok(())
     }
 
     // ------------------------------------------------------------------
-    // Lane phases (shared by decode_step and decode_step_pair)
+    // Lane phases (shared by decode_step and the lane scheduler)
     // ------------------------------------------------------------------
 
     fn ensure_pipeline(&mut self) {
@@ -627,16 +1007,18 @@ impl Engine {
         let (name, layer, args) = job.into_parts();
         let t0 = Instant::now();
         let outputs = self.rt.run(&name, &args, layer)?;
-        Ok(Pending::Ready { outputs, inputs: args, busy_secs: t0.elapsed().as_secs_f64() })
+        let busy = t0.elapsed().as_secs_f64();
+        Ok(Pending::Ready { outputs, inputs: args, busy_secs: busy, waited_secs: busy })
     }
 
     /// Join a pending execution: (outputs, returned inputs, worker busy
     /// seconds, seconds this thread actually blocked). For inline
-    /// executions the two times coincide.
+    /// executions the two times coincide; for a completion the lane
+    /// scheduler already observed, the blocked time is ~0.
     fn join(p: Pending) -> Result<(Vec<HostTensor>, Vec<HostTensor>, f64, f64)> {
         match p {
-            Pending::Ready { outputs, inputs, busy_secs } => {
-                Ok((outputs, inputs, busy_secs, busy_secs))
+            Pending::Ready { outputs, inputs, busy_secs, waited_secs } => {
+                Ok((outputs, inputs, busy_secs, waited_secs))
             }
             Pending::Ticket(t) => {
                 let t0 = Instant::now();
@@ -1039,6 +1421,311 @@ impl Engine {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Chunked prefill on the executor pool
+    // ------------------------------------------------------------------
+
+    /// Begin a prefill. With an executor pool the prompt is processed as
+    /// chunked pool jobs (embed, per-layer prefill, logits, per-layer
+    /// speculation seeding) advanced from the engine thread between
+    /// decode work — a long prefill overlaps in-flight decode lanes
+    /// instead of stalling them. Without a pool this is the synchronous
+    /// path, completed before returning. Chunked and synchronous
+    /// prefill run the same artifacts on the same inputs in the same
+    /// order, so results are bit-identical.
+    pub fn prefill_begin(&mut self, mut seq: Sequence) -> Option<PrefillDone> {
+        if self.executor.is_none() {
+            let result = self.prefill(&mut seq);
+            return Some(PrefillDone { seq, result });
+        }
+        let len = seq.tokens.len();
+        let Some(bucket) = self.rt.manifest.prefill_bucket(len) else {
+            let result = Err(anyhow!("prompt of {} tokens exceeds prefill buckets", len));
+            return Some(PrefillDone { seq, result });
+        };
+        let mut toks = seq.tokens.clone();
+        toks.resize(bucket, 0);
+        let mut pos: Vec<i32> = (0..len as i32).collect();
+        pos.resize(bucket, -1);
+        let mut valid = vec![1.0f32; len];
+        valid.resize(bucket, 0.0);
+        let name = self.art(&format!("embed_t{}", bucket));
+        let ticket =
+            self.pool_submit(ExecJob::Embed { name, args: vec![HostTensor::I32(toks, vec![bucket])] });
+        let n_layers = self.cfg.n_layers;
+        self.prefills.push(PrefillJob {
+            seq,
+            bucket,
+            len,
+            phase: PrefillPhase::Embed,
+            pending: Some(ticket),
+            h: None,
+            pos_t: Some(HostTensor::I32(pos, vec![bucket])),
+            valid_t: Some(HostTensor::F32(valid, vec![bucket])),
+            q_last: Vec::with_capacity(n_layers),
+            logits_row: None,
+            started: Instant::now(),
+        });
+        None
+    }
+
+    /// Non-blocking: advance chunked prefills and hand back completions.
+    pub fn prefill_poll(&mut self) -> Vec<PrefillDone> {
+        self.prefill_advance();
+        std::mem::take(&mut self.prefill_done)
+    }
+
+    /// Block until at least one chunked prefill completes (no-op when
+    /// none are in flight).
+    pub fn prefill_wait(&mut self) -> Vec<PrefillDone> {
+        loop {
+            self.prefill_advance();
+            if !self.prefill_done.is_empty() || self.prefills.is_empty() {
+                return std::mem::take(&mut self.prefill_done);
+            }
+            // Every job is mid-chunk on the pool: block on the oldest.
+            let mut job = self.prefills.remove(0);
+            match job.pending.take() {
+                Some(t) => {
+                    let res = t.wait();
+                    self.prefill_step(job, res);
+                }
+                None => {
+                    let result = Err(anyhow!("prefill job stalled without a pending chunk"));
+                    self.prefill_done.push(PrefillDone { seq: job.seq, result });
+                }
+            }
+        }
+    }
+
+    /// Abandon an in-flight (or completed-but-unclaimed) chunked
+    /// prefill; the sequence comes back so its KV state drops with it.
+    /// Any chunk still executing on a worker completes and is discarded.
+    pub fn prefill_cancel(&mut self, id: u64) -> Option<Sequence> {
+        if let Some(i) = self.prefills.iter().position(|j| j.seq.id == id) {
+            let job = self.prefills.swap_remove(i);
+            return Some(job.seq);
+        }
+        if let Some(i) = self.prefill_done.iter().position(|d| d.seq.id == id) {
+            let done = self.prefill_done.swap_remove(i);
+            return Some(done.seq);
+        }
+        None
+    }
+
+    /// Advance every in-flight prefill whose chunk has completed;
+    /// returns how many phase transitions were made. Non-blocking.
+    fn prefill_advance(&mut self) -> usize {
+        let mut advanced = 0;
+        let mut i = 0;
+        while i < self.prefills.len() {
+            let polled = match self.prefills[i].pending.as_ref() {
+                Some(t) => t.try_wait(),
+                None => None,
+            };
+            match polled {
+                None => i += 1,
+                Some(res) => {
+                    let mut job = self.prefills.swap_remove(i);
+                    job.pending = None;
+                    self.prefill_step(job, res);
+                    advanced += 1;
+                    // don't advance `i`: swap_remove moved a fresh job here
+                }
+            }
+        }
+        advanced
+    }
+
+    /// Fold one completed chunk into its job: host-side phase work, then
+    /// either the next chunk is submitted (job re-queued) or the prefill
+    /// is complete/failed (pushed to the done buffer).
+    fn prefill_step(&mut self, mut job: PrefillJob, res: Result<ExecDone>) {
+        let done = match res {
+            Ok(d) => d,
+            Err(e) => {
+                self.prefill_done.push(PrefillDone { seq: job.seq, result: Err(e) });
+                return;
+            }
+        };
+        self.stats.prefill_chunks += 1;
+        if self.decode_active {
+            self.stats.prefill_overlap_chunks += 1;
+        }
+        match self.prefill_phase(&mut job, done) {
+            Ok(true) => self.prefills.push(job),
+            Ok(false) => {
+                let row = job.logits_row.take().expect("logits row present at completion");
+                self.stats.prefills += 1;
+                self.stats.prefill_secs += job.started.elapsed().as_secs_f64();
+                self.prefill_done.push(PrefillDone { seq: job.seq, result: Ok(row) });
+                self.sync_pool_stats();
+            }
+            Err(e) => self.prefill_done.push(PrefillDone { seq: job.seq, result: Err(e) }),
+        }
+    }
+
+    /// The host-side half of one prefill phase. Returns `Ok(true)` when
+    /// another chunk was submitted, `Ok(false)` when the prefill is
+    /// complete (logits row buffered, speculation seeded).
+    fn prefill_phase(&mut self, job: &mut PrefillJob, done: ExecDone) -> Result<bool> {
+        let n_layers = self.cfg.n_layers;
+        match job.phase {
+            PrefillPhase::Embed => {
+                let mut outputs = done.outputs;
+                if outputs.is_empty() {
+                    return Err(anyhow!("prefill embed returned no output"));
+                }
+                job.h = Some(outputs.remove(0));
+                self.prefill_submit_layer(job, 0);
+                Ok(true)
+            }
+            PrefillPhase::Layer(l) => {
+                let mut it = done.outputs.into_iter();
+                let h = it.next().ok_or_else(|| anyhow!("prefill layer output missing h"))?;
+                let k = it
+                    .next()
+                    .ok_or_else(|| anyhow!("prefill layer output missing k"))?
+                    .into_f32s()?;
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow!("prefill layer output missing v"))?
+                    .into_f32s()?;
+                let q_last = it
+                    .next()
+                    .ok_or_else(|| anyhow!("prefill layer output missing q_last"))?
+                    .into_f32s()?;
+                // recover pos/valid for the next layer chunk
+                let mut inputs = done.inputs;
+                let valid_t = inputs.pop().expect("valid tensor returned");
+                let pos_t = inputs.pop().expect("pos tensor returned");
+                job.pos_t = Some(pos_t);
+                job.valid_t = Some(valid_t);
+                job.h = Some(h);
+                // populate GPU cache + offload completed pages (same
+                // host work, same order as synchronous prefill)
+                {
+                    let st = &mut job.seq.kv.layers[l];
+                    let completed = st.gpu.load_prefill(&k, &v, job.len, job.bucket);
+                    let x = st.xfer_mut();
+                    for cp in &completed {
+                        job.seq.xfer.offload_page(cp, &mut x.pool);
+                    }
+                }
+                job.q_last.push(q_last);
+                if l + 1 < n_layers {
+                    self.prefill_submit_layer(job, l + 1);
+                } else {
+                    let name = self.art(&format!("logits_t{}", job.bucket));
+                    let args = vec![job.h.take().expect("hidden state present")];
+                    let ticket = self.pool_submit(ExecJob::Logits { name, args });
+                    job.pending = Some(ticket);
+                    job.phase = PrefillPhase::Logits;
+                }
+                Ok(true)
+            }
+            PrefillPhase::Logits => {
+                let lg = done
+                    .outputs
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("prefill logits output missing"))?
+                    .into_f32s()?;
+                let vocab = self.cfg.vocab;
+                job.logits_row = Some(lg[(job.len - 1) * vocab..job.len * vocab].to_vec());
+                self.prefill_submit_seed(job, 0);
+                Ok(true)
+            }
+            PrefillPhase::Seed(l) => {
+                let idx = done
+                    .outputs
+                    .get(1)
+                    .ok_or_else(|| anyhow!("selection indices missing"))?
+                    .i32s()?;
+                let mask = done
+                    .inputs
+                    .get(3)
+                    .ok_or_else(|| anyhow!("selection mask not returned"))?
+                    .f32s()?;
+                let sel = filter_selected(
+                    idx,
+                    mask,
+                    self.cfg.n_kv,
+                    self.cfg.n_pages_max(),
+                    self.cfg.select_pages,
+                );
+                for (head, pages) in sel.iter().enumerate() {
+                    let n = job.seq.kv.apply_selection(l, head, pages, &mut job.seq.xfer);
+                    self.stats.recalled_pages += n as u64;
+                }
+                job.seq.spec[l].store(&job.q_last[l]);
+                if l + 1 < n_layers {
+                    self.prefill_submit_seed(job, l + 1);
+                    Ok(true)
+                } else {
+                    Ok(false)
+                }
+            }
+        }
+    }
+
+    /// Submit the next `layer_prefill` chunk for `job`.
+    fn prefill_submit_layer(&mut self, job: &mut PrefillJob, l: usize) {
+        let name = self.art(&format!("layer_prefill_t{}", job.bucket));
+        let args = vec![
+            job.h.take().expect("hidden state present"),
+            job.pos_t.take().expect("pos tensor present"),
+            job.valid_t.take().expect("valid tensor present"),
+        ];
+        let ticket = self.pool_submit(ExecJob::Prefill { name, layer: l, args });
+        job.pending = Some(ticket);
+        job.phase = PrefillPhase::Layer(l);
+    }
+
+    /// Submit the speculation-seeding selection (bucket 1) for layer `l`.
+    fn prefill_submit_seed(&mut self, job: &mut PrefillJob, l: usize) {
+        let (m, dh, qo, p) = (self.cfg.n_kv, self.cfg.d_head, self.cfg.n_qo, self.cfg.n_pages_max());
+        let args = {
+            let gpu = &job.seq.kv.layers[l].gpu;
+            let (smin, smax) = gpu.summaries_sanitized();
+            let mask = gpu.selectable_mask();
+            vec![
+                HostTensor::F32(job.q_last[l].clone(), vec![1, qo, dh]),
+                HostTensor::F32(smin, vec![1, m, p, dh]),
+                HostTensor::F32(smax, vec![1, m, p, dh]),
+                HostTensor::F32(mask, vec![1, p]),
+            ]
+        };
+        let name = self.art(&format!("select_{}_b1", self.params.variant.as_str()));
+        let ticket = self.pool_submit(ExecJob::Selection { name, args });
+        job.pending = Some(ticket);
+        job.phase = PrefillPhase::Seed(l);
+    }
+
+    /// Submit a job on the executor pool (which must exist), counted in
+    /// the engine stats like every pooled dispatch.
+    fn pool_submit(&mut self, job: ExecJob) -> ExecTicket {
+        self.stats.exec_jobs += 1;
+        self.executor.as_ref().expect("executor pool active").submit(job)
+    }
+
+    /// Fold the runtime's and pool workers' cumulative compile /
+    /// weight-upload counters into the engine stats (cheap: two atomics
+    /// per worker).
+    fn sync_pool_stats(&mut self) {
+        let (mut compiled, mut uploads) = {
+            let rt = self.rt.stats.borrow();
+            (rt.compiled, rt.weight_uploads)
+        };
+        if let Some(pool) = &self.executor {
+            let c = pool.counters();
+            compiled += c.compiled;
+            uploads += c.weight_uploads;
+        }
+        self.stats.exec_compiles = compiled;
+        self.stats.weight_uploads = uploads;
+    }
+
     /// Take (or allocate) the batch gather tensors for this bucket.
     fn take_attn_scratch(
         &mut self,
@@ -1102,16 +1789,7 @@ impl Engine {
             None,
         )?;
         let idx = out[1].i32s()?;
-        let k_sel = cfg.select_pages;
-        Ok((0..m)
-            .map(|head| {
-                idx[head * k_sel..(head + 1) * k_sel]
-                    .iter()
-                    .map(|&x| x as usize)
-                    .filter(|&pg| pg < p && mask[pg] > 0.0)
-                    .collect()
-            })
-            .collect())
+        Ok(filter_selected(idx, &mask, m, p, cfg.select_pages))
     }
 
     /// Convenience: generate to completion for a single sequence.
@@ -1150,16 +1828,32 @@ impl Backend for Engine {
         Engine::prefill(self, seq)
     }
 
+    fn prefill_begin(&mut self, seq: Sequence) -> Option<PrefillDone> {
+        Engine::prefill_begin(self, seq)
+    }
+
+    fn prefill_poll(&mut self) -> Vec<PrefillDone> {
+        Engine::prefill_poll(self)
+    }
+
+    fn prefill_wait(&mut self) -> Vec<PrefillDone> {
+        Engine::prefill_wait(self)
+    }
+
+    fn prefills_inflight(&self) -> usize {
+        self.prefills.len() + self.prefill_done.len()
+    }
+
+    fn prefill_cancel(&mut self, id: u64) -> Option<Sequence> {
+        Engine::prefill_cancel(self, id)
+    }
+
     fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
         Engine::decode_step(self, seqs)
     }
 
-    fn decode_step_pair(
-        &mut self,
-        a: &mut [&mut Sequence],
-        b: &mut [&mut Sequence],
-    ) -> Result<()> {
-        Engine::decode_step_pair(self, a, b)
+    fn decode_step_lanes(&mut self, lanes: &mut [Vec<&mut Sequence>]) -> Result<()> {
+        Engine::decode_step_lanes(self, lanes)
     }
 
     fn retire_sequence(&mut self, seq: &mut Sequence) {
@@ -1169,6 +1863,49 @@ impl Backend for Engine {
     fn stats(&self) -> &EngineStats {
         &self.stats
     }
+}
+
+/// The lane-containment fold shared by the `Backend::decode_step_lanes`
+/// default impl and the engine's serial-dispatch fallback: every lane
+/// is driven even when one fails (its sequences simply don't advance
+/// this step), and the first error returns only once all lanes ran.
+fn contain_lanes<T>(
+    lanes: impl IntoIterator<Item = T>,
+    mut step: impl FnMut(T) -> Result<()>,
+) -> Result<()> {
+    let mut first_err = None;
+    for lane in lanes {
+        if let Err(e) = step(lane) {
+            if first_err.is_none() {
+                first_err = Some(e);
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Post-filter one sequence's raw selection indices: per kv head, drop
+/// padded / non-selectable pages. Shared by the synchronous seeding
+/// path and the pooled prefill Seed phase so they cannot diverge.
+fn filter_selected(
+    idx: &[i32],
+    mask: &[f32],
+    n_kv: usize,
+    n_pages: usize,
+    k_sel: usize,
+) -> Vec<Vec<usize>> {
+    (0..n_kv)
+        .map(|head| {
+            idx[head * k_sel..(head + 1) * k_sel]
+                .iter()
+                .map(|&x| x as usize)
+                .filter(|&pg| pg < n_pages && mask[pg] > 0.0)
+                .collect()
+        })
+        .collect()
 }
 
 /// Temperature + nucleus sampling (greedy when temperature == 0).

@@ -23,12 +23,13 @@
 //! drains commands between ticks while busy, so multiple in-flight
 //! requests genuinely share decode batches. When the scheduler is
 //! configured with `microbatch_min`, a large running set is decoded as
-//! two pipelined microbatches per tick (`Backend::decode_step_pair`),
-//! which a pooled-dispatch engine overlaps across its executor workers —
-//! two decode microbatches in flight from one engine thread.
+//! up to `max_lanes` pipelined microbatch lanes per tick
+//! (`Backend::decode_step_lanes`), which a pooled-dispatch engine
+//! overlaps across its executor workers — several decode microbatches
+//! in flight from one engine thread, with prefill chunks interleaved.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::thread;
@@ -54,6 +55,9 @@ enum Command {
     Cancel(u64),
     Metrics(mpsc::Sender<String>),
     Stats(mpsc::Sender<EngineStats>),
+    /// Stop accepting new sessions and finish the in-flight ones; any
+    /// still running at the deadline are cancelled.
+    Drain { deadline: Instant },
     Shutdown,
 }
 
@@ -63,6 +67,9 @@ pub enum SubmitError {
     /// Admission queue full: `in_flight` sessions against `cap`.
     /// Backpressure — retry later (HTTP 429).
     Busy { in_flight: usize, cap: usize },
+    /// The loop is draining for shutdown: in-flight sessions finish,
+    /// new ones are refused.
+    Draining,
     /// The engine loop has shut down.
     Closed,
 }
@@ -73,6 +80,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Busy { in_flight, cap } => {
                 write!(f, "server busy: {} sessions in flight (cap {})", in_flight, cap)
             }
+            SubmitError::Draining => write!(f, "server draining; not accepting new sessions"),
             SubmitError::Closed => write!(f, "engine loop is not running"),
         }
     }
@@ -121,14 +129,18 @@ pub struct Submitter {
     tx: mpsc::Sender<Command>,
     in_flight: Arc<AtomicUsize>,
     next_id: Arc<AtomicU64>,
+    draining: Arc<AtomicBool>,
     queue_cap: usize,
 }
 
 impl Submitter {
     /// Submit a request (its `id` is replaced with a fresh one).
     /// Returns immediately: `Busy` when the admission queue is full,
-    /// `Closed` when the loop is gone.
+    /// `Draining` once a drain began, `Closed` when the loop is gone.
     pub fn submit(&self, mut req: Request) -> Result<SessionHandle, SubmitError> {
+        if self.draining.load(Ordering::SeqCst) {
+            return Err(SubmitError::Draining);
+        }
         let prev = self.in_flight.fetch_add(1, Ordering::SeqCst);
         if prev >= self.queue_cap {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
@@ -184,6 +196,15 @@ impl Submitter {
     /// event channels closed.
     pub fn shutdown(&self) {
         let _ = self.tx.send(Command::Shutdown);
+    }
+
+    /// Graceful drain: new submissions are refused (`Draining`)
+    /// immediately, in-flight sessions keep decoding to completion, and
+    /// whatever still runs after `timeout` is cancelled as the loop
+    /// exits. Metrics/stats queries keep answering during the drain.
+    pub fn drain(&self, timeout: Duration) {
+        self.draining.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Command::Drain { deadline: Instant::now() + timeout });
     }
 }
 
@@ -273,6 +294,7 @@ impl EngineLoop {
                     tx: cmd_tx,
                     in_flight,
                     next_id: Arc::new(AtomicU64::new(1)),
+                    draining: Arc::new(AtomicBool::new(false)),
                     queue_cap: cfg.queue_cap.max(1),
                 },
                 handle,
@@ -292,9 +314,18 @@ impl EngineLoop {
         self.submitter.clone()
     }
 
-    /// Stop the loop and join the engine thread.
+    /// Stop the loop and join the engine thread. In-flight sessions are
+    /// cancelled.
     pub fn shutdown(self) {
         self.submitter.shutdown();
+        let _ = self.handle.join();
+    }
+
+    /// Graceful shutdown: refuse new sessions, finish the running ones
+    /// (up to `timeout`), then join the engine thread. Sessions still
+    /// running at the deadline are cancelled.
+    pub fn shutdown_graceful(self, timeout: Duration) {
+        self.submitter.drain(timeout);
         let _ = self.handle.join();
     }
 }
@@ -319,12 +350,21 @@ fn run_loop<B: Backend>(
     in_flight: &Arc<AtomicUsize>,
 ) {
     let mut sessions = Sessions { channels: HashMap::new(), in_flight: in_flight.clone() };
+    // Set by Command::Drain: no new sessions; the loop exits once the
+    // in-flight set empties or the deadline passes (stragglers are
+    // cancelled by the shutdown tail below).
+    let mut draining: Option<Instant> = None;
     'outer: loop {
+        if let Some(deadline) = draining {
+            if sched.pending() == 0 || Instant::now() >= deadline {
+                break 'outer;
+            }
+        }
         // Idle: block until the next command instead of spinning.
         if sched.pending() == 0 {
             match rx.recv() {
                 Ok(cmd) => {
-                    if !handle_command(sched, &mut sessions, cmd) {
+                    if !handle_command(sched, &mut sessions, cmd, &mut draining) {
                         break 'outer;
                     }
                 }
@@ -335,7 +375,7 @@ fn run_loop<B: Backend>(
         loop {
             match rx.try_recv() {
                 Ok(cmd) => {
-                    if !handle_command(sched, &mut sessions, cmd) {
+                    if !handle_command(sched, &mut sessions, cmd, &mut draining) {
                         break 'outer;
                     }
                 }
@@ -379,8 +419,16 @@ fn handle_command<B: Backend>(
     sched: &mut Scheduler<B>,
     sessions: &mut Sessions,
     cmd: Command,
+    draining: &mut Option<Instant>,
 ) -> bool {
     match cmd {
+        Command::Submit { events, .. } if draining.is_some() => {
+            // Raced the drain flag: refuse and release the admission
+            // slot this submission took (it never reaches the map).
+            let _ = events.send(SessionEvent::Error(SubmitError::Draining.to_string()));
+            sessions.in_flight.fetch_sub(1, Ordering::SeqCst);
+            true
+        }
         Command::Submit { req, events, arrived } => {
             sessions.channels.insert(req.id, events);
             sched.submit_arrived(req, arrived);
@@ -403,6 +451,10 @@ fn handle_command<B: Backend>(
         }
         Command::Stats(reply) => {
             let _ = reply.send(sched.engine.stats().clone());
+            true
+        }
+        Command::Drain { deadline } => {
+            *draining = Some(deadline);
             true
         }
         Command::Shutdown => false,
@@ -564,6 +616,49 @@ mod tests {
         assert!(c.generated_tokens < 500);
         assert_eq!(sub.in_flight(), 0);
         el.shutdown();
+    }
+
+    #[test]
+    fn graceful_drain_finishes_inflight_sessions() {
+        let el = spawn_sim(8, 5);
+        let sub = el.submitter();
+        let h = sub.submit_text("drain finishes me ", 12).unwrap();
+        // wait for the first token so the session is genuinely running
+        match h.next_event().expect("alive") {
+            SessionEvent::Token { .. } => {}
+            other => panic!("expected token, got {:?}", other),
+        }
+        sub.drain(Duration::from_secs(10));
+        // new work is refused immediately
+        assert!(matches!(sub.submit_text("late ", 2), Err(SubmitError::Draining)));
+        // ...but the in-flight session runs to a natural completion
+        let c = h.wait().expect("drained session completes");
+        assert_eq!(c.finish_reason, FinishReason::Length);
+        assert_eq!(c.generated_tokens, 12);
+        el.shutdown();
+    }
+
+    #[test]
+    fn drain_deadline_cancels_stragglers() {
+        let el = spawn_sim(4, 30);
+        let sub = el.submitter();
+        let h = sub.submit_text("will outlive the deadline ", 10_000).unwrap();
+        match h.next_event().expect("alive") {
+            SessionEvent::Token { .. } => {}
+            other => panic!("expected token, got {:?}", other),
+        }
+        // Deadline far shorter than the generation: the loop must stop
+        // anyway, closing the session channel.
+        el.shutdown_graceful(Duration::from_millis(100));
+        let t0 = std::time::Instant::now();
+        loop {
+            match h.next_event() {
+                Some(SessionEvent::Token { .. }) => {}
+                Some(SessionEvent::Done(_)) | None => break, // cancelled or channel closed
+                Some(SessionEvent::Error(e)) => panic!("unexpected error: {}", e),
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "drain deadline ignored");
+        }
     }
 
     #[test]

@@ -18,7 +18,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::engine::{sample_token, Backend, Engine, SampleParams, Sequence};
+use crate::coordinator::engine::{
+    sample_token, Backend, Engine, PrefillDone, SampleParams, Sequence,
+};
 use crate::coordinator::metrics::{Metrics, RequestTiming};
 use crate::coordinator::tokenizer;
 
@@ -108,6 +110,14 @@ struct Queued {
     arrived: Instant,
 }
 
+/// Request-side metadata held while its sequence prefills inside the
+/// backend (possibly asynchronously, overlapped with decode).
+struct Prefilling {
+    timing: RequestTiming,
+    stop: Vec<String>,
+    prompt_len: usize,
+}
+
 struct Running {
     seq: Sequence,
     timing: RequestTiming,
@@ -136,21 +146,32 @@ pub struct SchedulerConfig {
     /// the oldest are dropped (leak guard for callers that never claim).
     pub completion_backlog: usize,
     /// When the decode batch reaches this many sequences, split it into
-    /// two microbatches dispatched as a pipelined pair
-    /// (`Backend::decode_step_pair`), so a backend with an executor pool
-    /// keeps two artifact streams in flight. `0` disables splitting.
-    /// Token outputs are unchanged: the pair appends one token to every
-    /// sequence just like a joint step, and pure-policy backends run the
-    /// halves back to back. Cost note: on the pooled real engine the
-    /// pair path runs weight-bearing artifacts on the workers, which
-    /// each hold a private weight copy (see
-    /// `FreeKvParams::exec_workers`).
+    /// up to `max_lanes` microbatch lanes dispatched together
+    /// (`Backend::decode_step_lanes`), so a backend with an executor
+    /// pool keeps several artifact streams in flight. `0` disables
+    /// splitting. Token outputs are unchanged: the lane set appends one
+    /// token to every sequence just like a joint step, and pure-policy
+    /// backends run the lanes back to back. Cost note: on the pooled
+    /// real engine, lane mode runs weight-bearing artifacts on the
+    /// pool's designated weight workers (see
+    /// `FreeKvParams::weight_workers`).
     pub microbatch_min: usize,
+    /// Most microbatch lanes a split decode batch is divided into. The
+    /// real engine re-plans the partition bucket-aware (merging lanes
+    /// whose split would not shrink the compiled bucket), so this is an
+    /// upper bound, not a promise. `< 2` disables splitting.
+    pub max_lanes: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 4, admit_below: 4, completion_backlog: 256, microbatch_min: 0 }
+        SchedulerConfig {
+            max_batch: 4,
+            admit_below: 4,
+            completion_backlog: 256,
+            microbatch_min: 0,
+            max_lanes: 2,
+        }
     }
 }
 
@@ -159,6 +180,8 @@ pub struct Scheduler<B: Backend = Engine> {
     pub cfg: SchedulerConfig,
     queue: VecDeque<Queued>,
     running: Vec<Running>,
+    /// Requests whose sequences are prefilling inside the backend.
+    prefilling: HashMap<u64, Prefilling>,
     pub metrics: Metrics,
     finished: HashMap<u64, Completion>,
     finished_order: VecDeque<u64>,
@@ -171,6 +194,7 @@ impl<B: Backend> Scheduler<B> {
             cfg,
             queue: VecDeque::new(),
             running: Vec::new(),
+            prefilling: HashMap::new(),
             metrics: Metrics::new(),
             finished: HashMap::new(),
             finished_order: VecDeque::new(),
@@ -190,7 +214,7 @@ impl<B: Backend> Scheduler<B> {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.running.len()
+        self.queue.len() + self.prefilling.len() + self.running.len()
     }
 
     pub fn queued_len(&self) -> usize {
@@ -201,86 +225,155 @@ impl<B: Backend> Scheduler<B> {
         self.running.len()
     }
 
-    /// Ids of every queued or running request.
+    /// Requests whose prefill is in flight inside the backend.
+    pub fn prefilling_len(&self) -> usize {
+        self.prefilling.len()
+    }
+
+    /// Ids of every queued, prefilling, or running request.
     pub fn active_ids(&self) -> Vec<u64> {
         self.queue
             .iter()
             .map(|q| q.req.id)
+            .chain(self.prefilling.keys().copied())
             .chain(self.running.iter().map(|r| r.seq.id))
             .collect()
     }
 
     /// Bytes of KV state (GPU-resident + CPU pool) held by running
     /// sequences — drops back to zero when they finish or are cancelled.
+    /// (Sequences mid-prefill are owned by the backend and not counted.)
     pub fn running_kv_bytes(&self) -> usize {
         self.running.iter().map(|r| r.seq.kv.gpu_bytes() + r.seq.kv.cpu_bytes()).sum()
     }
 
-    /// One scheduling iteration: admission (prefill), one batched decode
-    /// step, then retirement of finished sequences. Returns the tick's
-    /// events in emission order. Decode errors are engine-global and
-    /// propagate; admission errors are per-request `Failed` events.
+    /// One scheduling iteration: admission (prefill handed to the
+    /// backend, possibly asynchronous), harvest of completed prefills,
+    /// one batched decode step (split into microbatch lanes when
+    /// configured), then retirement of finished sequences. Returns the
+    /// tick's events in emission order. Decode errors are engine-global
+    /// and propagate; admission/prefill errors are per-request `Failed`
+    /// events.
     pub fn tick(&mut self) -> Result<Vec<StepEvent>> {
         let mut events = Vec::new();
         self.admit(&mut events);
+        self.harvest(&mut events);
+        if self.running.is_empty() && !self.prefilling.is_empty() {
+            // Nothing to decode yet: block for the first prefill so the
+            // tick always makes progress.
+            let done = self.engine.prefill_wait();
+            if done.is_empty() {
+                // The backend lost track of prefills it accepted — fail
+                // them rather than spinning forever.
+                let ids: Vec<u64> = self.prefilling.keys().copied().collect();
+                for id in ids {
+                    self.prefilling.remove(&id);
+                    self.metrics.on_failed();
+                    events.push(StepEvent::Failed {
+                        id,
+                        error: "backend dropped an in-flight prefill".into(),
+                    });
+                }
+            } else {
+                for d in done {
+                    self.finish_harvested(d, &mut events);
+                }
+            }
+        }
         self.decode(&mut events)?;
+        self.harvest(&mut events);
         self.retire(&mut events);
         Ok(events)
     }
 
     /// Admission: prefill-priority. One prefill per tick while decode is
     /// in flight (keeps running sequences' ITL steady), bursting up to
-    /// `admit_below` when the running set is empty so a queued backlog
-    /// doesn't pay one decode step of TTFT per request.
+    /// `admit_below` when the engine is idle so a queued backlog doesn't
+    /// pay one decode step of TTFT per request. Prefilling sequences
+    /// occupy admission slots like running ones.
     fn admit(&mut self, events: &mut Vec<StepEvent>) {
-        let burst = if self.running.is_empty() { self.cfg.admit_below } else { 1 };
+        let occupied = self.running.len() + self.prefilling.len();
+        let burst = if occupied == 0 { self.cfg.admit_below } else { 1 };
         let mut admitted = 0;
-        while admitted < burst && self.running.len() < self.cfg.admit_below {
+        while admitted < burst
+            && self.running.len() + self.prefilling.len() < self.cfg.admit_below
+        {
             let Some(q) = self.queue.pop_front() else { break };
             admitted += 1;
-            let id = q.req.id;
-            if let Err(e) = self.prefill_one(q, events) {
-                self.metrics.on_failed();
-                events.push(StepEvent::Failed { id, error: format!("{e:#}") });
+            self.begin_prefill(q, events);
+        }
+    }
+
+    /// Build the sequence and hand it to the backend. A synchronous
+    /// backend completes right here; an asynchronous one parks the
+    /// request in `prefilling` until `harvest` claims it.
+    fn begin_prefill(&mut self, q: Queued, events: &mut Vec<StepEvent>) {
+        let id = q.req.id;
+        let prompt_len = q.req.prompt.len();
+        let mut timing = RequestTiming::new(prompt_len);
+        timing.arrived = q.arrived; // TTFT includes queueing delay
+        // Defensive cap: one hostile max_tokens must not decode past the
+        // model context and poison the shared engine's compiled buckets.
+        let budget = self.engine.model().max_context.saturating_sub(prompt_len).max(1);
+        let max_new = q.req.max_new_tokens.min(budget);
+        let mut seq = self.engine.new_sequence(id, q.req.prompt, max_new, q.req.sample.clone());
+        seq.eos = Some(tokenizer::EOS);
+        let meta = Prefilling { timing, stop: q.req.stop, prompt_len };
+        match self.engine.prefill_begin(seq) {
+            Some(done) => self.finish_prefill(done, meta, events),
+            None => {
+                self.prefilling.insert(id, meta);
             }
         }
     }
 
-    fn prefill_one(&mut self, q: Queued, events: &mut Vec<StepEvent>) -> Result<()> {
-        let mut timing = RequestTiming::new(q.req.prompt.len());
-        timing.arrived = q.arrived; // TTFT includes queueing delay
-        // Defensive cap: one hostile max_tokens must not decode past the
-        // model context and poison the shared engine's compiled buckets.
-        let budget =
-            self.engine.model().max_context.saturating_sub(q.req.prompt.len()).max(1);
-        let max_new = q.req.max_new_tokens.min(budget);
-        let mut seq = self.engine.new_sequence(
-            q.req.id,
-            q.req.prompt,
-            max_new,
-            q.req.sample.clone(),
-        );
-        seq.eos = Some(tokenizer::EOS);
-        let lg = self.engine.prefill(&mut seq)?;
-        let params = seq.sample.clone();
-        let tok = sample_token(&lg, &params, &mut seq.rng);
-        seq.tokens.push(tok);
-        if Some(tok) == seq.eos {
-            seq.finished = true;
+    /// Claim completed asynchronous prefills from the backend.
+    fn harvest(&mut self, events: &mut Vec<StepEvent>) {
+        for done in self.engine.prefill_poll() {
+            self.finish_harvested(done, events);
         }
-        timing.prefill_done = Some(Instant::now());
-        let mut r = Running {
-            seq,
-            timing,
-            text: String::new(),
-            stop: q.req.stop,
-            emitted: 0,
-            sent: 0,
-            stop_hit: false,
+    }
+
+    fn finish_harvested(&mut self, done: PrefillDone, events: &mut Vec<StepEvent>) {
+        let Some(meta) = self.prefilling.remove(&done.seq.id) else {
+            // cancelled while in flight; the sequence (and its KV) drops
+            return;
         };
-        Self::emit_new_tokens(&mut self.metrics, &mut r, events);
-        self.running.push(r);
-        Ok(())
+        self.finish_prefill(done, meta, events);
+    }
+
+    /// Sample the first token of a completed prefill and move the
+    /// request into the running set (or report its failure).
+    fn finish_prefill(&mut self, done: PrefillDone, meta: Prefilling, events: &mut Vec<StepEvent>) {
+        let PrefillDone { mut seq, result } = done;
+        let id = seq.id;
+        let mut timing = meta.timing;
+        match result {
+            Ok(lg) => {
+                let params = seq.sample.clone();
+                let tok = sample_token(&lg, &params, &mut seq.rng);
+                seq.tokens.push(tok);
+                if Some(tok) == seq.eos {
+                    seq.finished = true;
+                }
+                timing.prefill_done = Some(Instant::now());
+                let mut r = Running {
+                    seq,
+                    timing,
+                    text: String::new(),
+                    stop: meta.stop,
+                    emitted: 0,
+                    sent: 0,
+                    stop_hit: false,
+                };
+                Self::emit_new_tokens(&mut self.metrics, &mut r, events);
+                self.running.push(r);
+            }
+            Err(e) => {
+                self.metrics.on_failed();
+                events.push(StepEvent::Failed { id, error: format!("{e:#}") });
+            }
+        }
     }
 
     fn decode(&mut self, events: &mut Vec<StepEvent>) -> Result<()> {
@@ -291,7 +384,7 @@ impl<B: Backend> Scheduler<B> {
         {
             // Finished lanes (EOS at prefill, stop hit) must not decode
             // another token — the engine contract skips them here.
-            let mut batch: Vec<&mut Sequence> = self.running[..limit]
+            let batch: Vec<&mut Sequence> = self.running[..limit]
                 .iter_mut()
                 .map(|r| &mut r.seq)
                 .filter(|s| !s.done())
@@ -299,17 +392,39 @@ impl<B: Backend> Scheduler<B> {
             if batch.is_empty() {
                 return Ok(());
             }
-            // Large enough running set: split into two microbatches so
-            // the backend can keep both in flight concurrently.
+            // Large enough running set: split into up to `max_lanes`
+            // microbatch lanes so the backend can keep several in
+            // flight concurrently (the real engine re-plans the
+            // partition bucket-aware).
             let split = self.cfg.microbatch_min > 0
+                && self.cfg.max_lanes >= 2
                 && batch.len() >= self.cfg.microbatch_min
                 && batch.len() >= 2;
-            if split {
-                let mid = batch.len() / 2;
-                let (a, b) = batch.split_at_mut(mid);
-                self.engine.decode_step_pair(a, b)?;
+            let step_result = if split {
+                let widths =
+                    crate::util::balanced_widths(batch.len(), self.cfg.max_lanes.min(batch.len()));
+                let mut lanes: Vec<Vec<&mut Sequence>> = Vec::with_capacity(widths.len());
+                let mut it = batch.into_iter();
+                for w in widths {
+                    lanes.push(it.by_ref().take(w).collect());
+                }
+                self.engine.decode_step_lanes(&mut lanes)
             } else {
-                self.engine.decode_step(&mut batch)?;
+                let mut batch = batch;
+                self.engine.decode_step(&mut batch)
+            };
+            if let Err(e) = step_result {
+                // A failed lane set may still have advanced its other
+                // lanes (the containment contract): fold those tokens
+                // into the per-request accumulators and metrics before
+                // the error propagates, so completions taken during the
+                // subsequent teardown (cancel on shutdown) carry every
+                // token that was actually generated and the token
+                // counters stay truthful.
+                for r in self.running[..limit].iter_mut() {
+                    Self::emit_new_tokens(&mut self.metrics, r, events);
+                }
+                return Err(e);
             }
         }
         for r in self.running[..limit].iter_mut() {
@@ -438,6 +553,27 @@ impl<B: Backend> Scheduler<B> {
                 prompt_tokens: q.req.prompt.len(),
                 tokens: q.req.prompt,
                 text: String::new(),
+                generated_tokens: 0,
+                finish_reason: FinishReason::Cancelled,
+            };
+            Self::store_completion(&mut self.finished, &mut self.finished_order, &self.cfg, c);
+            return true;
+        }
+        if let Some(meta) = self.prefilling.remove(&id) {
+            // Reclaim the sequence from the backend's prefill machinery
+            // so its KV drops here; any chunk still executing completes
+            // on a worker and is discarded.
+            let seq = self.engine.prefill_cancel(id);
+            self.metrics.on_cancelled();
+            let (tokens, prompt_tokens) = match seq {
+                Some(s) => (s.tokens.clone(), s.prompt_len),
+                None => (Vec::new(), meta.prompt_len),
+            };
+            let c = Completion {
+                id,
+                tokens,
+                text: String::new(),
+                prompt_tokens,
                 generated_tokens: 0,
                 finish_reason: FinishReason::Cancelled,
             };
@@ -755,6 +891,92 @@ mod tests {
         assert!(s.take_completion(2).is_some());
         assert!(s.take_completion(1).is_none());
         assert_eq!(s.metrics.failed, 1);
+    }
+
+    #[test]
+    fn four_lane_split_preserves_outputs() {
+        // The same eight requests decoded jointly and as four 2-wide
+        // lanes must complete with identical texts — the lane set is a
+        // pure scheduling change for any backend.
+        let run = |max_lanes: usize, microbatch_min: usize| {
+            let cfg = SchedulerConfig {
+                max_batch: 8,
+                admit_below: 8,
+                microbatch_min,
+                max_lanes,
+                ..Default::default()
+            };
+            let mut s = sim_sched(cfg);
+            for i in 1..=8u64 {
+                s.submit(Request::from_text(i, &format!("lane req {} ", i), 10));
+            }
+            s.drain().unwrap();
+            let texts: Vec<String> =
+                (1..=8u64).map(|i| s.take_completion(i).unwrap().text).collect();
+            (texts, s.engine.stats().max_batch_lanes)
+        };
+        let (joint, joint_lanes) = run(2, 0);
+        let (split, split_lanes) = run(4, 4);
+        assert_eq!(joint, split, "4-lane split changed outputs");
+        assert_eq!(joint_lanes, 8, "joint run decodes all eight lanes together");
+        assert_eq!(split_lanes, 2, "8 sequences over 4 lanes decode 2-wide");
+    }
+
+    #[test]
+    fn async_prefill_overlaps_decode() {
+        let mut s = sim_sched(SchedulerConfig::default());
+        s.submit(Request::from_text(1, "first ", 24));
+        s.tick().unwrap();
+        assert_eq!(s.running_len(), 1);
+        // subsequent prefills take several poll rounds to complete
+        s.engine.prefill_ticks = 4;
+        s.submit(Request::from_text(2, "second ", 6));
+        let mut tokens_for_1_during_prefill = 0;
+        let mut first_token_2 = false;
+        while !first_token_2 {
+            for ev in s.tick().unwrap() {
+                if let StepEvent::Token { id, .. } = ev {
+                    if id == 1 && !first_token_2 {
+                        tokens_for_1_during_prefill += 1;
+                    }
+                    if id == 2 {
+                        first_token_2 = true;
+                    }
+                }
+            }
+        }
+        assert!(
+            tokens_for_1_during_prefill >= 2,
+            "request 1 must keep decoding while request 2 prefills (got {} tokens)",
+            tokens_for_1_during_prefill
+        );
+        s.drain().unwrap();
+        let c2 = s.take_completion(2).unwrap();
+        assert_eq!(s.take_completion(1).unwrap().generated_tokens, 24);
+        // deferred prefill must not change the output stream
+        let mut reference = sim_sched(SchedulerConfig::default());
+        reference.submit(Request::from_text(2, "second ", 6));
+        reference.drain().unwrap();
+        assert_eq!(c2.text, reference.take_completion(2).unwrap().text);
+    }
+
+    #[test]
+    fn cancel_during_async_prefill_releases_the_request() {
+        let mut s = sim_sched(SchedulerConfig::default());
+        s.submit(Request::from_text(1, "keeps the engine busy ", 20));
+        s.tick().unwrap();
+        s.engine.prefill_ticks = 1000;
+        s.submit(Request::from_text(9, "slow prefill ", 4));
+        s.tick().unwrap();
+        assert_eq!(s.prefilling_len(), 1, "request 9 parked in prefill");
+        assert!(s.cancel(9));
+        assert_eq!(s.prefilling_len(), 0);
+        assert_eq!(s.engine.prefills_inflight(), 0, "backend released the sequence");
+        let c = s.take_completion(9).unwrap();
+        assert_eq!(c.finish_reason, FinishReason::Cancelled);
+        assert_eq!(c.generated_tokens, 0);
+        s.drain().unwrap();
+        assert_eq!(s.take_completion(1).unwrap().generated_tokens, 20);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::config::ModelConfig;
-use crate::coordinator::engine::{Backend, EngineStats, Sequence};
+use crate::coordinator::engine::{Backend, EngineStats, PrefillDone, Sequence};
 
 /// The deterministic next-token function: an LCG over the previous
 /// token, mapped to printable ASCII (so decoded text is readable and
@@ -58,16 +58,39 @@ pub struct SimBackend {
     pub step_delay: Duration,
     /// Prompts longer than this fail admission (models prefill buckets).
     pub max_prompt: usize,
+    /// Asynchronous-prefill model: a prefill handed to `prefill_begin`
+    /// completes only after this many `prefill_poll` rounds (0 =
+    /// immediate, the synchronous default). Lets scheduler tests prove
+    /// decode proceeds while a prefill is in flight.
+    pub prefill_ticks: usize,
+    /// Deferred prefills: (remaining poll rounds, sequence).
+    prefilling: Vec<(usize, Sequence)>,
+    /// Decode-failure injection: `decode_step` errors when the batch
+    /// contains any of these request ids (lane-containment tests).
+    pub fail_decode_ids: Vec<u64>,
 }
 
 impl SimBackend {
     pub fn new(cfg: ModelConfig) -> SimBackend {
         let max_prompt = cfg.max_context / 2;
-        SimBackend { cfg, stats: EngineStats::default(), step_delay: Duration::ZERO, max_prompt }
+        SimBackend {
+            cfg,
+            stats: EngineStats::default(),
+            step_delay: Duration::ZERO,
+            max_prompt,
+            prefill_ticks: 0,
+            prefilling: Vec::new(),
+            fail_decode_ids: Vec::new(),
+        }
     }
 
     pub fn tiny() -> SimBackend {
         SimBackend::new(sim_config())
+    }
+
+    fn complete_prefill(&mut self, mut seq: Sequence) -> PrefillDone {
+        let result = self.prefill(&mut seq);
+        PrefillDone { seq, result }
     }
 }
 
@@ -98,9 +121,55 @@ impl Backend for SimBackend {
         Ok(logits)
     }
 
+    fn prefill_begin(&mut self, mut seq: Sequence) -> Option<PrefillDone> {
+        if self.prefill_ticks == 0 {
+            let result = self.prefill(&mut seq);
+            return Some(PrefillDone { seq, result });
+        }
+        self.prefilling.push((self.prefill_ticks, seq));
+        None
+    }
+
+    fn prefill_poll(&mut self) -> Vec<PrefillDone> {
+        for slot in self.prefilling.iter_mut() {
+            slot.0 = slot.0.saturating_sub(1);
+        }
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            if self.prefilling[i].0 == 0 {
+                let (_, seq) = self.prefilling.remove(i);
+                out.push(self.complete_prefill(seq));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    fn prefill_wait(&mut self) -> Vec<PrefillDone> {
+        if self.prefilling.is_empty() {
+            return Vec::new();
+        }
+        let (_, seq) = self.prefilling.remove(0);
+        vec![self.complete_prefill(seq)]
+    }
+
+    fn prefills_inflight(&self) -> usize {
+        self.prefilling.len()
+    }
+
+    fn prefill_cancel(&mut self, id: u64) -> Option<Sequence> {
+        let i = self.prefilling.iter().position(|(_, s)| s.id == id)?;
+        Some(self.prefilling.remove(i).1)
+    }
+
     fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
+        }
+        if let Some(seq) = seqs.iter().find(|s| self.fail_decode_ids.contains(&s.id)) {
+            return Err(anyhow!("injected decode failure for request {}", seq.id));
         }
         let n = seqs.len();
         self.stats.steps += 1;
@@ -168,5 +237,56 @@ mod tests {
         b.max_prompt = 8;
         let mut seq = b.new_sequence(1, vec![65; 9], 4, SampleParams::greedy());
         assert!(b.prefill(&mut seq).is_err());
+    }
+
+    #[test]
+    fn lane_failure_leaves_other_lanes_intact() {
+        // The default decode_step_lanes contract: a failing lane is
+        // contained — every other lane still appends its token, and the
+        // failed lane's sequences simply don't advance this step.
+        let mut b = SimBackend::tiny();
+        let mut seqs: Vec<Sequence> = (1..=3u64)
+            .map(|i| {
+                let mut seq = b.new_sequence(
+                    i,
+                    tokenizer::encode("lane fail "),
+                    8,
+                    SampleParams::greedy(),
+                );
+                let lg = b.prefill(&mut seq).unwrap();
+                let tok = crate::linalg::argmax(&lg) as i32;
+                seq.tokens.push(tok);
+                seq
+            })
+            .collect();
+        b.fail_decode_ids.push(2);
+        {
+            let mut iter = seqs.iter_mut();
+            let mut lanes: Vec<Vec<&mut Sequence>> = vec![
+                vec![iter.next().unwrap()],
+                vec![iter.next().unwrap()],
+                vec![iter.next().unwrap()],
+            ];
+            let err = b.decode_step_lanes(&mut lanes).unwrap_err();
+            assert!(format!("{err:#}").contains("injected"), "{err:#}");
+        }
+        assert_eq!(seqs[0].generated().len(), 2, "lane before the failure advanced");
+        assert_eq!(seqs[1].generated().len(), 1, "failed lane did not advance");
+        assert_eq!(seqs[2].generated().len(), 2, "lane after the failure advanced");
+    }
+
+    #[test]
+    fn deferred_prefill_completes_after_polls() {
+        let mut b = SimBackend::tiny();
+        b.prefill_ticks = 2;
+        let seq = b.new_sequence(5, tokenizer::encode("deferred "), 4, SampleParams::greedy());
+        assert!(b.prefill_begin(seq).is_none(), "prefill deferred");
+        assert_eq!(b.prefills_inflight(), 1);
+        assert!(b.prefill_poll().is_empty(), "one round remaining");
+        let done = b.prefill_poll();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].result.is_ok());
+        assert_eq!(done[0].seq.id, 5);
+        assert_eq!(b.prefills_inflight(), 0);
     }
 }

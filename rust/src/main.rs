@@ -42,10 +42,15 @@ fn run() -> Result<()> {
     // overlap ablation baseline); default dispatches it to the worker.
     // --exec-workers N sizes the PJRT executor pool (0 = serial
     // in-thread artifact dispatch, the ablation baseline).
+    // --max-lanes caps concurrent decode microbatch lanes;
+    // --weight-workers bounds how many pool workers hold weight copies.
+    let defaults = FreeKvParams::default();
     let params = FreeKvParams {
         tau,
         overlap: !args.flag("serial-recall"),
-        exec_workers: args.usize_or("exec-workers", FreeKvParams::default().exec_workers),
+        exec_workers: args.usize_or("exec-workers", defaults.exec_workers),
+        max_lanes: args.usize_or("max-lanes", defaults.max_lanes),
+        weight_workers: args.usize_or("weight-workers", defaults.weight_workers),
         ..Default::default()
     };
 
@@ -94,9 +99,10 @@ fn run() -> Result<()> {
             let scfg = SchedulerConfig {
                 max_batch: args.usize_or("max-batch", 4),
                 admit_below: args.usize_or("admit-below", 4),
-                // split decode into two pipelined microbatches once this
+                // split decode into pipelined microbatch lanes once this
                 // many sequences are running (0 = never split)
                 microbatch_min: args.usize_or("microbatch-min", 0),
+                max_lanes: params.max_lanes,
                 ..Default::default()
             };
             let loop_cfg = LoopConfig { queue_cap: args.usize_or("queue-cap", 64) };
@@ -118,14 +124,22 @@ fn run() -> Result<()> {
                 })?
             };
             let max_requests = args.get("max-requests").and_then(|v| v.parse().ok());
+            // --drain-secs: on shutdown, let running sessions finish for
+            // this long before cancelling them (0 = cancel immediately).
+            let drain = std::time::Duration::from_secs_f64(args.f64_or("drain-secs", 0.0).max(0.0));
             let opts = ServeOptions {
                 max_requests,
                 // 0 derives the connection-thread cap from the queue cap
                 max_connections: args.usize_or("max-conns", 0),
+                drain,
                 ..Default::default()
             };
             let result = freekv::server::serve(el.submitter(), &addr, opts);
-            el.shutdown();
+            if drain.is_zero() {
+                el.shutdown();
+            } else {
+                el.shutdown_graceful(drain);
+            }
             result
         }
         Some("loadtest") => {
@@ -133,6 +147,7 @@ fn run() -> Result<()> {
                 max_batch: args.usize_or("max-batch", 4),
                 admit_below: args.usize_or("admit-below", 4),
                 microbatch_min: args.usize_or("microbatch-min", 0),
+                max_lanes: params.max_lanes,
                 ..Default::default()
             };
             if args.flag("sim") {
@@ -150,8 +165,9 @@ fn run() -> Result<()> {
         }
         _ => Err(anyhow!(
             "usage: freekv <info|generate|serve|loadtest|eval> [--model tiny] [--artifacts dir] \
-             [--serial-recall] [--exec-workers 2] [--sim] [--queue-cap 64] [--max-batch 4] \
-             [--admit-below 4] [--microbatch-min 0] [--max-conns 0]\n\
+             [--serial-recall] [--exec-workers 2] [--max-lanes 2] [--weight-workers 1] [--sim] \
+             [--queue-cap 64] [--max-batch 4] [--admit-below 4] [--microbatch-min 0] \
+             [--max-conns 0] [--drain-secs 0]\n\
              eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
              table2 table3 table4 table5 table6 table7 table8 table9 fig7 fig8 fig9 fig10 \
              oom real-breakdown real-correction fig16-20 all"

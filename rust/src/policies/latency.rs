@@ -12,7 +12,7 @@
 //! the measured correction rate.
 
 use crate::config::ModelConfig;
-use crate::sim::{CostModel, Stream, Timeline};
+use crate::sim::{CostModel, EventId, Stream, Timeline};
 use crate::util::rng::Rng;
 
 /// KV compression methods compared in the paper.
@@ -114,6 +114,16 @@ pub struct SimKnobs {
     /// single-stream GPU engine the paper measures; the dispatch bench
     /// and serving configs flip it.
     pub pooled_selection: bool,
+    /// Decode microbatch lanes for [`simulate_lane_scaling`] — the
+    /// modeled analog of `FreeKvParams::max_lanes` /
+    /// `Engine::decode_step_lanes`. `1` models joint single-stream
+    /// decode; `simulate_request` ignores this (the paper exhibits stay
+    /// single-lane).
+    pub decode_lanes: usize,
+    /// Modeled executor streams backing the lanes (the pool's worker
+    /// count): lane `i` executes on `Lane(i % exec_streams)`, so lanes
+    /// beyond this serialize like jobs sharing a pool worker.
+    pub exec_streams: usize,
     /// GPU memory capacity for OOM accounting (A100-40G).
     pub gpu_mem_bytes: f64,
     /// runtime reserve (CUDA context, activations, workspace) subtracted
@@ -135,6 +145,8 @@ impl Default for SimKnobs {
             speculative: true,
             overlap: true,
             pooled_selection: false,
+            decode_lanes: 1,
+            exec_streams: 2,
             gpu_mem_bytes: 40e9,
             runtime_reserve: 7e9,
         }
@@ -539,6 +551,63 @@ pub fn simulate_request(
     rec
 }
 
+/// Model N-lane microbatched decode (`knobs.decode_lanes`): the batch
+/// splits into balanced lanes whose artifact execution runs on per-lane
+/// executor streams (`Stream::Lane(i % exec_streams)`) while every
+/// lane's host-side gather/bookkeeping serializes on the engine thread
+/// (`Stream::Cpu`) — the modeled twin of `Engine::decode_step_lanes`.
+/// With `decode_lanes == 1` the whole batch runs the classic
+/// single-stream pipeline (compute and host work serialized), which is
+/// the lane-sweep baseline. Selection/recall are omitted: this isolates
+/// the lane-scheduling effect the real `--max-lanes` sweep measures.
+pub fn simulate_lane_scaling(
+    cm: &CostModel,
+    b: usize,
+    output_len: usize,
+    knobs: &SimKnobs,
+) -> RunRecord {
+    let m = &cm.model;
+    let lanes = knobs.decode_lanes.max(1).min(b.max(1));
+    let streams = knobs.exec_streams.max(1);
+    let slots = m.budget_slots();
+    let lane_b = crate::util::balanced_widths(b, lanes);
+    let lane_stream = |i: usize| {
+        if lanes == 1 { Stream::Compute } else { Stream::Lane((i % streams) as u8) }
+    };
+    let mut tl = Timeline::new();
+    let mut prev: Vec<Option<EventId>> = vec![None; lanes];
+    for _step in 0..output_len {
+        for _layer in 0..m.n_layers {
+            for i in 0..lanes {
+                let deps: Vec<EventId> = prev[i].into_iter().collect();
+                let qkv =
+                    tl.schedule(lane_stream(i), &deps, cm.layer_linear(lane_b[i]), "compute:qkv");
+                // host-side gather serializes on the engine thread
+                let host =
+                    tl.schedule(Stream::Cpu, &[qkv], cm.gather(lane_b[i], slots), "host:gather");
+                let attn =
+                    tl.schedule(lane_stream(i), &[host], cm.attention(lane_b[i], slots), "compute:attn");
+                prev[i] = Some(attn);
+            }
+        }
+        for i in 0..lanes {
+            let deps: Vec<EventId> = prev[i].into_iter().collect();
+            prev[i] = Some(tl.schedule(lane_stream(i), &deps, cm.logits(lane_b[i]), "compute:logits"));
+        }
+    }
+    let mut compute_busy = tl.busy(Stream::Compute);
+    for s in 0..streams {
+        compute_busy += tl.busy(Stream::Lane(s as u8));
+    }
+    RunRecord {
+        method: format!("freekv-lanes{}", lanes),
+        steps: output_len,
+        decode_secs: tl.makespan(),
+        compute_busy,
+        ..Default::default()
+    }
+}
+
 /// GPU memory for KV-related state per method (Table 1 row "GPU Mem").
 pub fn gpu_kv_bytes(
     method: Method,
@@ -673,6 +742,29 @@ mod tests {
             "pooled selection mostly hidden: exposed {} busy {}",
             fk_pooled.selection_exposed,
             fk_pooled.selection_busy
+        );
+    }
+
+    #[test]
+    fn lane_scaling_overlaps_host_work_but_oversplitting_costs_weights() {
+        // The modeled lane sweep: 2 lanes on 2 executor streams beat
+        // the joint single-stream pipeline (one lane's host gather and
+        // attention hide under the other's), but 4 lanes on the same 2
+        // streams re-read the (batch-independent) weight bytes once per
+        // lane and lose — exactly the over-splitting penalty the real
+        // engine's bucket-aware planner exists to avoid.
+        let cm = cm();
+        let run = |lanes: usize| {
+            let k = SimKnobs { decode_lanes: lanes, exec_streams: 2, ..Default::default() };
+            simulate_lane_scaling(&cm, 8, 32, &k).per_token()
+        };
+        let (l1, l2, l4) = (run(1), run(2), run(4));
+        assert!(l2 < l1, "2 lanes {} must beat joint {}", l2, l1);
+        assert!(
+            l4 > l2,
+            "over-splitting (4 lanes, 2 streams) should pay weight re-reads: {} vs {}",
+            l4,
+            l2
         );
     }
 

@@ -3,6 +3,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, Weak};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -86,6 +87,15 @@ pub struct Manifest {
     pub weights: HashMap<String, WeightsSpec>,
     pub decode_batch_buckets: Vec<usize>,
     pub prefill_buckets: Vec<usize>,
+    /// Host-side cache of large blob files (the weights), keyed by
+    /// manifest-relative path and **shared across clones**: the engine
+    /// runtime and every executor-pool worker clone this manifest, so
+    /// concurrent readers (warm-up, first-use uploads) share one disk
+    /// read and one host copy. Entries are `Weak` — the blob is freed
+    /// as soon as the last reader drops its `Arc`, so a multi-gigabyte
+    /// weight blob is never pinned in host memory for the process
+    /// lifetime just because it was read once.
+    blob_cache: Arc<Mutex<HashMap<String, Weak<Vec<u8>>>>>,
 }
 
 impl Manifest {
@@ -158,7 +168,30 @@ impl Manifest {
             weights,
             decode_batch_buckets: usize_array(j.get("buckets").get("decode_batch")),
             prefill_buckets: usize_array(j.get("buckets").get("prefill")),
+            blob_cache: Arc::new(Mutex::new(HashMap::new())),
         })
+    }
+
+    /// Read a manifest-relative blob file through the process-wide cache
+    /// shared by every clone of this manifest: readers whose lifetimes
+    /// overlap (e.g. pool workers uploading weights around warm-up)
+    /// share one disk read and one host copy; once every reader drops
+    /// its `Arc` the memory is released and a later reader re-reads
+    /// from disk (the OS page cache makes that cheap).
+    pub fn read_blob(&self, file: &str) -> Result<Arc<Vec<u8>>> {
+        let mut cache = self
+            .blob_cache
+            .lock()
+            .map_err(|_| anyhow!("manifest blob cache poisoned"))?;
+        if let Some(blob) = cache.get(file).and_then(Weak::upgrade) {
+            return Ok(blob);
+        }
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading blob {}", path.display()))?;
+        let blob = Arc::new(bytes);
+        cache.insert(file.to_string(), Arc::downgrade(&blob));
+        Ok(blob)
     }
 
     pub fn config(&self, name: &str) -> Result<&ModelConfig> {

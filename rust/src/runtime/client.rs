@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use super::artifacts::{ArtifactSpec, DType, Manifest};
 
@@ -56,6 +56,11 @@ pub struct RuntimeStats {
     pub d2h_bytes: u64,
     pub compile_secs: f64,
     pub compiled: u64,
+    /// Weight-blob device uploads (one per config whose weights became
+    /// resident on this client). The executor pool aggregates this
+    /// across workers to prove weight memory tracks `weight_workers`,
+    /// not the pool size.
+    pub weight_uploads: u64,
 }
 
 /// Owns the PJRT client, lazily-compiled executables, and resident weight
@@ -113,11 +118,24 @@ impl Runtime {
     /// Eagerly compile every artifact of a config (avoids first-request
     /// latency spikes; used by `freekv serve --warmup`).
     pub fn warmup(&self, config: &str) -> Result<usize> {
+        self.warmup_filtered(config, false)
+    }
+
+    /// Eagerly compile only the artifacts of a config that bind no
+    /// weights (selection scoring). Non-weight executor-pool workers
+    /// warm with this: they can never be routed a weight-bearing job,
+    /// so compiling the rest would be pure waste.
+    pub fn warmup_weight_free(&self, config: &str) -> Result<usize> {
+        self.warmup_filtered(config, true)
+    }
+
+    fn warmup_filtered(&self, config: &str, weight_free_only: bool) -> Result<usize> {
         let names: Vec<String> = self
             .manifest
             .artifacts
             .values()
             .filter(|a| a.config == config)
+            .filter(|a| !weight_free_only || !a.args.iter().any(|arg| arg.weight))
             .map(|a| a.name.clone())
             .collect();
         for n in &names {
@@ -138,8 +156,14 @@ impl Runtime {
             .ok_or_else(|| anyhow!("no weights for config `{}`", config))?
             .clone();
         let path = self.manifest.dir.join(&spec.file);
-        let blob = std::fs::read(&path)
-            .with_context(|| format!("reading weights {}", path.display()))?;
+        // The host-side blob is shared across every runtime cloned from
+        // this manifest (engine + pool workers) while readers overlap,
+        // and freed once they all drop it. Device residency stays per
+        // client — that is what the weight-worker routing bounds.
+        let blob = self
+            .manifest
+            .read_blob(&spec.file)
+            .map_err(|e| e.context(format!("reading weights {}", path.display())))?;
         let floats: &[f32] = bytemuck_cast_f32(&blob)?;
         let needed: usize = spec.tensors.iter().map(|t| t.offset + t.size).max().unwrap_or(0);
         if floats.len() < needed {
@@ -160,6 +184,7 @@ impl Runtime {
             self.stats.borrow_mut().h2d_bytes += (t.size * 4) as u64;
             map.insert(t.name.clone(), buf);
         }
+        self.stats.borrow_mut().weight_uploads += 1;
         let rc = Rc::new(map);
         self.weights.borrow_mut().insert(config.to_string(), rc.clone());
         Ok(rc)

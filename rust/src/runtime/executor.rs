@@ -21,6 +21,27 @@
 //!   reallocating.
 //! * [`ExecutorHandle`] is cloneable and `Send`: any thread may submit.
 //!
+//! ## Weight-affinity routing
+//!
+//! Each worker has its own job queue, and submission routes by job
+//! class: **weight-bearing** jobs (embed / QKV / attention / logits /
+//! prefill chunks — anything that binds model weights) go only to the
+//! first `weight_workers` workers, so only those ever upload a private
+//! copy of the weight blob; **weight-free** jobs (selection scoring,
+//! warm-up) go to whichever worker has the least outstanding work,
+//! preferring non-weight workers on ties so the weight lane stays
+//! clear. This is the designated-weight-worker design: pool weight
+//! memory is `weight_workers` copies instead of one per worker, at the
+//! cost of weight jobs queueing behind each other when
+//! `weight_workers < workers`. Chunk-sized jobs keep that head-of-line
+//! wait bounded. Warm-up is route-aware too: non-weight workers compile
+//! only the weight-free artifacts they can ever be asked to run.
+//!
+//! Workers fold their backend's compile / weight-upload counters into
+//! pool-wide totals after every job ([`ExecutorPool::counters`]), which
+//! is how `EngineStats` proves weight memory stopped scaling with the
+//! pool.
+//!
 //! Failure semantics: a panic inside a job is caught on the worker,
 //! reported as an error on that job's ticket, and the worker keeps
 //! serving (one poisoned input must not take down the pool). A worker
@@ -35,15 +56,16 @@
 //!
 //! What this buys the engine: selection scoring leaves the decode
 //! critical path (scored on a worker while the engine drains the recall
-//! pipeline), and two decode microbatches can keep several workers busy
-//! at once (`Engine::decode_step_pair`). Outputs are bit-identical to
-//! serial in-thread dispatch — same artifacts, same inputs, same XLA CPU
-//! kernels — so pooling is a pure scheduling change.
+//! pipeline), N decode microbatch lanes keep several workers busy at
+//! once (`Engine::decode_step_lanes`), and chunked prefill jobs
+//! interleave with in-flight decode. Outputs are bit-identical to
+//! serial in-thread dispatch — same artifacts, same inputs, same XLA
+//! CPU kernels — so pooling is a pure scheduling change.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::Instant;
 
@@ -54,7 +76,8 @@ use super::client::{HostTensor, Runtime};
 
 /// One artifact execution, typed by pipeline stage. The variants carry
 /// the fully-resolved artifact name (the engine owns config/bucket
-/// naming); the type distinguishes stages for labeling and stats.
+/// naming); the type distinguishes stages for labeling, stats, and
+/// weight-affinity routing.
 pub enum ExecJob {
     /// Token embedding (`*_embed_*`).
     Embed { name: String, args: Vec<HostTensor> },
@@ -62,16 +85,21 @@ pub enum ExecJob {
     Qkv { name: String, layer: usize, args: Vec<HostTensor> },
     /// Per-layer attention + FFN (`*_layer_attn_*`).
     Attention { name: String, layer: usize, args: Vec<HostTensor> },
+    /// Per-layer full-prompt prefill chunk (`*_layer_prefill_*`).
+    Prefill { name: String, layer: usize, args: Vec<HostTensor> },
     /// Page-selection scoring (`*_select_*`); no layer weights.
     Selection { name: String, args: Vec<HostTensor> },
     /// Final-norm + LM head (`*_logits_*`).
     Logits { name: String, args: Vec<HostTensor> },
-    /// Escape hatch for anything else (benches, tests).
+    /// Escape hatch for anything else (benches, tests). Routed as
+    /// weight-bearing (the pool cannot know it binds none).
     Raw { name: String, layer: Option<usize>, args: Vec<HostTensor> },
-    /// Eager-compile every artifact of `config` on the executing worker
-    /// (see [`ExecBackend::warmup`]); completes with empty outputs.
-    /// Handled on the worker before `into_parts`.
-    Warmup { config: String },
+    /// Eager-compile `config`'s artifacts on the executing worker (see
+    /// [`ExecBackend::warmup`]); completes with empty outputs. Handled
+    /// on the worker before `into_parts`. `weight_free_only` restricts
+    /// the warm set to artifacts binding no weights — what non-weight
+    /// workers compile.
+    Warmup { config: String, weight_free_only: bool },
 }
 
 impl ExecJob {
@@ -80,10 +108,11 @@ impl ExecJob {
             ExecJob::Embed { name, .. }
             | ExecJob::Qkv { name, .. }
             | ExecJob::Attention { name, .. }
+            | ExecJob::Prefill { name, .. }
             | ExecJob::Selection { name, .. }
             | ExecJob::Logits { name, .. }
             | ExecJob::Raw { name, .. } => name,
-            ExecJob::Warmup { config } => config,
+            ExecJob::Warmup { config, .. } => config,
         }
     }
 
@@ -92,10 +121,27 @@ impl ExecJob {
             ExecJob::Embed { .. } => "embed",
             ExecJob::Qkv { .. } => "qkv",
             ExecJob::Attention { .. } => "attention",
+            ExecJob::Prefill { .. } => "prefill",
             ExecJob::Selection { .. } => "selection",
             ExecJob::Logits { .. } => "logits",
             ExecJob::Raw { .. } => "raw",
             ExecJob::Warmup { .. } => "warmup",
+        }
+    }
+
+    /// Does executing this job bind model weights on the worker? Drives
+    /// routing: weight-bearing jobs are confined to the designated
+    /// weight workers so the pool holds `weight_workers` copies of the
+    /// blob, not one per worker.
+    pub fn needs_weights(&self) -> bool {
+        match self {
+            ExecJob::Embed { .. }
+            | ExecJob::Qkv { .. }
+            | ExecJob::Attention { .. }
+            | ExecJob::Prefill { .. }
+            | ExecJob::Logits { .. }
+            | ExecJob::Raw { .. } => true,
+            ExecJob::Selection { .. } | ExecJob::Warmup { .. } => false,
         }
     }
 
@@ -107,11 +153,11 @@ impl ExecJob {
             ExecJob::Embed { name, args }
             | ExecJob::Selection { name, args }
             | ExecJob::Logits { name, args } => (name, None, args),
-            ExecJob::Qkv { name, layer, args } | ExecJob::Attention { name, layer, args } => {
-                (name, Some(layer), args)
-            }
+            ExecJob::Qkv { name, layer, args }
+            | ExecJob::Attention { name, layer, args }
+            | ExecJob::Prefill { name, layer, args } => (name, Some(layer), args),
             ExecJob::Raw { name, layer, args } => (name, layer, args),
-            ExecJob::Warmup { config } => (config, None, Vec::new()),
+            ExecJob::Warmup { config, .. } => (config, None, Vec::new()),
         }
     }
 }
@@ -153,7 +199,8 @@ impl ExecTicket {
         }
     }
 
-    /// Non-blocking probe; `None` while the job is still running.
+    /// Non-blocking probe; `None` while the job is still running. NB:
+    /// a `Some` return consumes the completion — the caller must use it.
     pub fn try_wait(&self) -> Option<Result<ExecDone>> {
         match self.rx.try_recv() {
             Ok(Ok(done)) => Some(Ok(done)),
@@ -167,6 +214,17 @@ impl ExecTicket {
     }
 }
 
+/// Cumulative backend-side counters a worker samples after every job so
+/// the pool can aggregate compile / weight-upload totals.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ExecCounters {
+    /// Executables compiled by this backend so far.
+    pub compiled: u64,
+    /// Weight-blob device uploads performed by this backend so far
+    /// (one per config whose weights became resident).
+    pub weight_uploads: u64,
+}
+
 /// What a worker thread executes jobs against. The production backend is
 /// a per-worker PJRT [`Runtime`]; tests substitute host-side backends so
 /// pool mechanics are covered without a native XLA client.
@@ -178,10 +236,17 @@ pub trait ExecBackend {
         layer: Option<usize>,
     ) -> Result<Vec<HostTensor>>;
 
-    /// Eager-compile every artifact of `config` (first-request latency
-    /// control); returns how many were prepared. No-op by default.
-    fn warmup(&mut self, _config: &str) -> Result<usize> {
+    /// Eager-compile `config`'s artifacts (first-request latency
+    /// control); with `weight_free_only` set, only artifacts that bind
+    /// no weights. Returns how many were prepared. No-op by default.
+    fn warmup(&mut self, _config: &str, _weight_free_only: bool) -> Result<usize> {
         Ok(0)
+    }
+
+    /// Cumulative compile / weight-upload counters (deltas are folded
+    /// into the pool totals after each job). Zero by default.
+    fn counters(&self) -> ExecCounters {
+        ExecCounters::default()
     }
 }
 
@@ -195,75 +260,166 @@ impl ExecBackend for Runtime {
         Runtime::run(self, name, args, layer)
     }
 
-    fn warmup(&mut self, config: &str) -> Result<usize> {
-        Runtime::warmup(self, config)
+    fn warmup(&mut self, config: &str, weight_free_only: bool) -> Result<usize> {
+        if weight_free_only {
+            Runtime::warmup_weight_free(self, config)
+        } else {
+            Runtime::warmup(self, config)
+        }
     }
+
+    fn counters(&self) -> ExecCounters {
+        let st = self.stats.borrow();
+        ExecCounters { compiled: st.compiled, weight_uploads: st.weight_uploads }
+    }
+}
+
+/// Pool-wide counter totals, folded in by workers after every job.
+#[derive(Default)]
+struct PoolCounters {
+    compiled: AtomicU64,
+    weight_uploads: AtomicU64,
+}
+
+/// One worker's submission side: its private queue plus a gauge of jobs
+/// submitted-but-not-finished (the routing load signal).
+#[derive(Clone)]
+struct WorkerLink {
+    tx: Sender<JobMsg>,
+    outstanding: Arc<AtomicU64>,
 }
 
 /// Cloneable, `Send` submission handle. Holding one keeps the pool's
-/// job queue open — workers exit only after every handle (and the pool's
-/// own sender) is gone and the queue has drained.
+/// job queues open — workers exit only after every handle (and the
+/// pool's own copy) is gone and their queues have drained.
 #[derive(Clone)]
 pub struct ExecutorHandle {
-    tx: Sender<JobMsg>,
+    links: Vec<WorkerLink>,
+    weight_workers: usize,
     jobs: Arc<AtomicU64>,
-    workers: usize,
+    counters: Arc<PoolCounters>,
 }
 
 impl ExecutorHandle {
-    /// Enqueue a job; any idle worker picks it up FIFO. Never blocks.
-    /// If the pool is gone the error surfaces at [`ExecTicket::wait`].
+    /// Enqueue a job on the least-loaded eligible worker (weight-bearing
+    /// jobs: the weight workers only). Never blocks. If the pool is gone
+    /// the error surfaces at [`ExecTicket::wait`].
     pub fn submit(&self, job: ExecJob) -> ExecTicket {
+        let worker = self.route(&job);
+        self.submit_to(worker, job)
+    }
+
+    /// Enqueue a job on a specific worker (warm-up broadcast, tests).
+    pub fn submit_to(&self, worker: usize, job: ExecJob) -> ExecTicket {
         let name = job.name().to_string();
         let (reply, rx) = channel();
         self.jobs.fetch_add(1, Ordering::Relaxed);
-        // On a dead pool the message (with its reply sender) is dropped,
-        // which the ticket observes as a disconnect.
-        let _ = self.tx.send(JobMsg { job, reply });
+        let link = &self.links[worker];
+        link.outstanding.fetch_add(1, Ordering::SeqCst);
+        // On a dead worker the message (with its reply sender) is
+        // dropped, which the ticket observes as a disconnect.
+        if link.tx.send(JobMsg { job, reply }).is_err() {
+            link.outstanding.fetch_sub(1, Ordering::SeqCst);
+        }
         ExecTicket { rx, name }
     }
 
+    /// Least-outstanding worker among those eligible for this job; ties
+    /// prefer non-weight workers so the weight lane stays clear for the
+    /// jobs that must run there.
+    fn route(&self, job: &ExecJob) -> usize {
+        let eligible = if job.needs_weights() {
+            &self.links[..self.weight_workers]
+        } else {
+            &self.links[..]
+        };
+        let mut best = 0usize;
+        let mut best_load = u64::MAX;
+        for (i, link) in eligible.iter().enumerate() {
+            let load = link.outstanding.load(Ordering::SeqCst);
+            if load < best_load || (load == best_load && i >= self.weight_workers) {
+                best = i;
+                best_load = load;
+            }
+        }
+        best
+    }
+
     pub fn workers(&self) -> usize {
-        self.workers
+        self.links.len()
+    }
+
+    /// Workers eligible to hold model weights.
+    pub fn weight_workers(&self) -> usize {
+        self.weight_workers
     }
 
     /// Total jobs submitted over the pool's lifetime.
     pub fn jobs_submitted(&self) -> u64 {
         self.jobs.load(Ordering::Relaxed)
     }
+
+    /// Aggregated backend counters across every worker (updated after
+    /// each completed job).
+    pub fn counters(&self) -> ExecCounters {
+        ExecCounters {
+            compiled: self.counters.compiled.load(Ordering::Relaxed),
+            weight_uploads: self.counters.weight_uploads.load(Ordering::Relaxed),
+        }
+    }
 }
 
-/// The pool: owns the worker threads. Dropping it drains the queue
+/// The pool: owns the worker threads. Dropping it drains the queues
 /// (queued jobs still run, tickets still resolve) and joins the workers.
 pub struct ExecutorPool {
-    /// Dropped first on shutdown so workers see the queue close.
-    tx: Option<Sender<JobMsg>>,
-    jobs: Arc<AtomicU64>,
+    /// Dropped first on shutdown so workers see their queues close.
+    handle: Option<ExecutorHandle>,
     worker_count: usize,
+    weight_workers: usize,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl ExecutorPool {
-    /// Spawn `workers` threads (min 1). `factory(i)` runs *on* worker
-    /// `i`'s thread to build its backend — this is what makes a pool of
-    /// `!Send` PJRT clients possible. Fails if any worker's backend
-    /// fails to construct (the others are shut down cleanly).
+    /// Spawn `workers` threads with every worker eligible to hold
+    /// weights (the pre-routing behaviour). See [`ExecutorPool::spawn_routed`].
     pub fn spawn<B, F>(workers: usize, factory: F) -> Result<ExecutorPool>
     where
         B: ExecBackend + 'static,
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
     {
+        Self::spawn_routed(workers, workers, factory)
+    }
+
+    /// Spawn `workers` threads (min 1), confining weight-bearing jobs to
+    /// the first `weight_workers` of them (clamped to `1..=workers`).
+    /// `factory(i)` runs *on* worker `i`'s thread to build its backend —
+    /// this is what makes a pool of `!Send` PJRT clients possible. Fails
+    /// if any worker's backend fails to construct (the others are shut
+    /// down cleanly).
+    pub fn spawn_routed<B, F>(
+        workers: usize,
+        weight_workers: usize,
+        factory: F,
+    ) -> Result<ExecutorPool>
+    where
+        B: ExecBackend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
         let workers = workers.max(1);
-        let (tx, rx) = channel::<JobMsg>();
-        let queue = Arc::new(Mutex::new(rx));
+        let weight_workers = weight_workers.clamp(1, workers);
         let factory = Arc::new(factory);
+        let counters = Arc::new(PoolCounters::default());
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let mut links = Vec::with_capacity(workers);
         let mut joins = Vec::with_capacity(workers);
         let mut failures = Vec::new();
         for i in 0..workers {
-            let queue = queue.clone();
+            let (tx, rx) = channel::<JobMsg>();
+            let outstanding = Arc::new(AtomicU64::new(0));
+            links.push(WorkerLink { tx, outstanding: outstanding.clone() });
             let factory = factory.clone();
             let ready = ready_tx.clone();
+            let totals = counters.clone();
             let spawned = thread::Builder::new()
                 .name(format!("freekv-exec-{}", i))
                 .spawn(move || {
@@ -278,18 +434,20 @@ impl ExecutorPool {
                             return;
                         }
                     };
-                    loop {
-                        // Hold the queue lock only for the dequeue; idle
-                        // workers queue up on the mutex, which is exactly
-                        // the work-stealing order we want from std mpsc.
-                        let msg = match queue.lock() {
-                            Ok(guard) => guard.recv(),
-                            Err(_) => break, // queue mutex poisoned: shut down
-                        };
-                        let Ok(JobMsg { job, reply }) = msg else {
-                            break; // every sender gone and queue drained
-                        };
+                    let mut last = ExecCounters::default();
+                    while let Ok(JobMsg { job, reply }) = rx.recv() {
                         let result = run_job(&mut backend, job, i);
+                        outstanding.fetch_sub(1, Ordering::SeqCst);
+                        let now = backend.counters();
+                        totals.compiled.fetch_add(
+                            now.compiled.saturating_sub(last.compiled),
+                            Ordering::Relaxed,
+                        );
+                        totals.weight_uploads.fetch_add(
+                            now.weight_uploads.saturating_sub(last.weight_uploads),
+                            Ordering::Relaxed,
+                        );
+                        last = now;
                         // A caller that dropped its ticket just loses the
                         // result; the worker moves on.
                         let _ = reply.send(result);
@@ -301,6 +459,7 @@ impl ExecutorPool {
                     // OS refused the thread (EAGAIN under pressure):
                     // abort below exactly like a backend failure.
                     failures.push(format!("spawning executor worker {}: {}", i, e));
+                    links.pop();
                     break;
                 }
             }
@@ -316,8 +475,8 @@ impl ExecutorPool {
             }
         }
         if !failures.is_empty() {
-            // Abort: close the queue so healthy workers exit, then join.
-            drop(tx);
+            // Abort: close every queue so healthy workers exit, then join.
+            drop(links);
             for j in joins {
                 let _ = j.join();
             }
@@ -330,33 +489,58 @@ impl ExecutorPool {
         }
 
         Ok(ExecutorPool {
-            tx: Some(tx),
-            jobs: Arc::new(AtomicU64::new(0)),
+            handle: Some(ExecutorHandle {
+                links,
+                weight_workers,
+                jobs: Arc::new(AtomicU64::new(0)),
+                counters,
+            }),
             worker_count: workers,
+            weight_workers,
             workers: joins,
         })
     }
 
     /// Production pool: every worker constructs its own PJRT [`Runtime`]
-    /// over a clone of `manifest` (shared artifact dir, private client,
-    /// private executable/weight caches).
+    /// over a clone of `manifest` (shared artifact dir + host blob
+    /// cache, private client, private executable/weight caches). All
+    /// workers weight-eligible; see [`ExecutorPool::for_manifest_routed`].
     pub fn for_manifest(manifest: &Manifest, workers: usize) -> Result<ExecutorPool> {
+        Self::for_manifest_routed(manifest, workers, workers)
+    }
+
+    /// Production pool with weight-affinity routing: only the first
+    /// `weight_workers` runtimes ever upload the weight blob.
+    pub fn for_manifest_routed(
+        manifest: &Manifest,
+        workers: usize,
+        weight_workers: usize,
+    ) -> Result<ExecutorPool> {
         let manifest = manifest.clone();
-        ExecutorPool::spawn(workers, move |_| Runtime::new(manifest.clone()))
+        ExecutorPool::spawn_routed(workers, weight_workers, move |_| Runtime::new(manifest.clone()))
     }
 
     /// Submit directly on the pool (same as `handle().submit`).
     pub fn submit(&self, job: ExecJob) -> ExecTicket {
-        self.handle().submit(job)
+        self.inner().submit(job)
     }
 
-    /// Best-effort pool warm-up: one [`ExecJob::Warmup`] per worker,
-    /// awaited together. Warming takes long enough that idle workers
-    /// each pick one job up; a worker that grabs two just re-warms
-    /// idempotently. Returns the number of warm jobs completed.
+    /// Route-aware pool warm-up: one [`ExecJob::Warmup`] per worker,
+    /// awaited together — weight workers compile everything, the rest
+    /// only the weight-free artifacts they can be routed. Returns the
+    /// number of warm jobs completed.
     pub fn warmup(&self, config: &str) -> Result<usize> {
+        let h = self.inner();
         let tickets: Vec<ExecTicket> = (0..self.worker_count)
-            .map(|_| self.submit(ExecJob::Warmup { config: config.to_string() }))
+            .map(|i| {
+                h.submit_to(
+                    i,
+                    ExecJob::Warmup {
+                        config: config.to_string(),
+                        weight_free_only: i >= self.weight_workers,
+                    },
+                )
+            })
             .collect();
         let mut done = 0;
         for t in tickets {
@@ -366,31 +550,41 @@ impl ExecutorPool {
         Ok(done)
     }
 
+    fn inner(&self) -> &ExecutorHandle {
+        self.handle.as_ref().expect("pool not yet shut down")
+    }
+
     /// A cloneable, `Send` submission handle for other threads. NB: an
-    /// outstanding handle keeps the job queue open, so dropping the pool
-    /// blocks until every handle is gone.
+    /// outstanding handle keeps the job queues open, so dropping the
+    /// pool blocks until every handle is gone.
     pub fn handle(&self) -> ExecutorHandle {
-        ExecutorHandle {
-            tx: self.tx.as_ref().expect("pool not yet shut down").clone(),
-            jobs: self.jobs.clone(),
-            workers: self.worker_count,
-        }
+        self.inner().clone()
     }
 
     pub fn workers(&self) -> usize {
         self.worker_count
     }
 
+    /// Workers eligible to hold model weights.
+    pub fn weight_workers(&self) -> usize {
+        self.weight_workers
+    }
+
     pub fn jobs_submitted(&self) -> u64 {
-        self.jobs.load(Ordering::Relaxed)
+        self.inner().jobs_submitted()
+    }
+
+    /// Aggregated compile / weight-upload counters across the workers.
+    pub fn counters(&self) -> ExecCounters {
+        self.inner().counters()
     }
 }
 
 impl Drop for ExecutorPool {
     fn drop(&mut self) {
-        // Close the queue, let the workers drain what's already
+        // Close the queues, let the workers drain what's already
         // enqueued, then join them.
-        self.tx.take();
+        self.handle.take();
         for j in self.workers.drain(..) {
             let _ = j.join();
         }
@@ -405,8 +599,8 @@ fn run_job<B: ExecBackend>(
 ) -> Result<ExecDone, String> {
     let t0 = Instant::now();
     match job {
-        ExecJob::Warmup { config } => {
-            match catch_unwind(AssertUnwindSafe(|| backend.warmup(&config))) {
+        ExecJob::Warmup { config, weight_free_only } => {
+            match catch_unwind(AssertUnwindSafe(|| backend.warmup(&config, weight_free_only))) {
                 Ok(Ok(_n)) => Ok(ExecDone {
                     outputs: Vec::new(),
                     inputs: Vec::new(),
@@ -534,5 +728,31 @@ mod tests {
         .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("no backend on worker 1"), "{}", msg);
+    }
+
+    #[test]
+    fn weight_jobs_stay_on_weight_workers() {
+        let pool = ExecutorPool::spawn_routed(4, 1, |_| Ok(Scaler)).unwrap();
+        assert_eq!(pool.weight_workers(), 1);
+        let weight_tickets: Vec<ExecTicket> = (0..8)
+            .map(|i| {
+                pool.submit(ExecJob::Qkv {
+                    name: format!("w{}", i),
+                    layer: 0,
+                    args: vec![f32s(&[1.0])],
+                })
+            })
+            .collect();
+        let free_tickets: Vec<ExecTicket> = (0..8)
+            .map(|i| {
+                pool.submit(ExecJob::Selection { name: format!("s{}", i), args: vec![f32s(&[1.0])] })
+            })
+            .collect();
+        for t in weight_tickets {
+            assert_eq!(t.wait().unwrap().worker, 0, "weight job left the weight worker");
+        }
+        for t in free_tickets {
+            assert!(t.wait().unwrap().worker < 4);
+        }
     }
 }

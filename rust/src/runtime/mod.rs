@@ -9,7 +9,9 @@ pub mod executor;
 
 pub use artifacts::{ArgSpec, ArtifactSpec, DType, Manifest, WeightsSpec};
 pub use client::{HostTensor, Runtime, RuntimeStats};
-pub use executor::{ExecBackend, ExecDone, ExecJob, ExecTicket, ExecutorHandle, ExecutorPool};
+pub use executor::{
+    ExecBackend, ExecCounters, ExecDone, ExecJob, ExecTicket, ExecutorHandle, ExecutorPool,
+};
 
 /// True when the environment demands the real artifact backend
 /// (`FREEKV_REQUIRE_ARTIFACTS=1`, set by the CI real-backend job).

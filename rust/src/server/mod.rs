@@ -279,6 +279,11 @@ pub struct ServeOptions {
     /// answered `503` and closed; a further [`PROBE_HEADROOM`] threads
     /// still serve `/healthz` and `/metrics` so probes stay truthful.
     pub max_connections: usize,
+    /// Graceful-drain budget applied when the server shuts down
+    /// (`Submitter::drain` via `EngineLoop::shutdown_graceful`): running
+    /// sessions get this long to finish before being cancelled. Zero
+    /// (the default) preserves the old cancel-everything shutdown.
+    pub drain: Duration,
 }
 
 /// Extra connection threads allowed past [`ServeOptions::max_connections`]
@@ -375,6 +380,13 @@ pub fn serve_listener(
             }
         });
     }
+    // The edge is exiting: begin the engine-loop drain now so running
+    // sessions keep decoding (new submissions are refused) while the
+    // caller tears the process down. `EngineLoop::shutdown_graceful`
+    // then joins the already-draining loop.
+    if !opts.drain.is_zero() {
+        submitter.drain(opts.drain);
+    }
     Ok(())
 }
 
@@ -453,6 +465,12 @@ fn handle_generate(
         Ok(h) => h,
         Err(e @ SubmitError::Busy { .. }) => {
             let _ = write_response(stream, 429, "application/json", &error_json(&e.to_string()));
+            return;
+        }
+        Err(e @ SubmitError::Draining) => {
+            // Shutting down but alive: 503 without tripping the
+            // engine-down latch — in-flight sessions are still served.
+            let _ = write_response(stream, 503, "application/json", &error_json(&e.to_string()));
             return;
         }
         Err(SubmitError::Closed) => {

@@ -24,6 +24,11 @@ pub enum Stream {
     /// scoring. Serialized per worker like every stream, but concurrent
     /// with `Compute`.
     Exec,
+    /// One decode microbatch lane's artifact stream (N-lane dispatch):
+    /// lane `i` maps to `Lane(i % exec_streams)`, so lanes beyond the
+    /// modeled worker count serialize exactly like jobs sharing a pool
+    /// worker do.
+    Lane(u8),
 }
 
 pub type EventId = usize;

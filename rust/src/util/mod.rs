@@ -8,3 +8,36 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// Split `total` items into `n` balanced contiguous widths (first
+/// `total % n` get one extra). The one lane-partition rule shared by
+/// the scheduler's split, the engine's bucket-aware lane planner, and
+/// the latency model's lane twin — so they cannot drift apart.
+/// `n` is clamped to `1..=total` (empty input yields a single 0 width).
+pub fn balanced_widths(total: usize, n: usize) -> Vec<usize> {
+    let n = n.clamp(1, total.max(1));
+    let (w, rem) = (total / n, total % n);
+    (0..n).map(|i| w + usize::from(i < rem)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::balanced_widths;
+
+    #[test]
+    fn balanced_widths_cover_and_balance() {
+        assert_eq!(balanced_widths(11, 3), vec![4, 4, 3]);
+        assert_eq!(balanced_widths(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(balanced_widths(3, 5), vec![1, 1, 1], "n clamps to total");
+        assert_eq!(balanced_widths(5, 1), vec![5]);
+        assert_eq!(balanced_widths(0, 2), vec![0]);
+        for total in 1..40usize {
+            for n in 1..8usize {
+                let w = balanced_widths(total, n);
+                assert_eq!(w.iter().sum::<usize>(), total);
+                let (lo, hi) = (w.iter().min().unwrap(), w.iter().max().unwrap());
+                assert!(hi - lo <= 1, "unbalanced {:?}", w);
+            }
+        }
+    }
+}

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
-use freekv::runtime::{ExecBackend, ExecJob, ExecTicket, ExecutorPool, HostTensor};
+use freekv::runtime::{ExecBackend, ExecCounters, ExecJob, ExecTicket, ExecutorPool, HostTensor};
 
 /// Deterministic host backend: output = inputs scaled by (layer + 2);
 /// artifact names trigger special behaviour (`panic!`, error, sleep).
@@ -160,6 +160,94 @@ fn warmup_broadcast_resolves_per_worker() {
     assert_eq!(p.jobs_submitted(), 3);
     // pool still serves normal jobs afterwards
     assert_eq!(p.submit(job(1)).wait().unwrap().outputs, expected(1));
+}
+
+#[test]
+fn weight_routing_confines_weight_jobs_and_uploads() {
+    // A backend that "uploads weights" the first time it executes a
+    // weight-bearing job: with 4 workers and 1 weight worker, every
+    // weight job must land on worker 0 and exactly one upload happens
+    // pool-wide, no matter how many workers exist.
+    struct Counting {
+        runs: u64,
+        uploaded: bool,
+    }
+    impl ExecBackend for Counting {
+        fn run(
+            &mut self,
+            name: &str,
+            args: &[HostTensor],
+            _layer: Option<usize>,
+        ) -> Result<Vec<HostTensor>> {
+            self.runs += 1;
+            if name.starts_with('w') {
+                self.uploaded = true;
+            }
+            Ok(args.to_vec())
+        }
+        fn counters(&self) -> ExecCounters {
+            ExecCounters { compiled: self.runs, weight_uploads: u64::from(self.uploaded) }
+        }
+    }
+    let p = ExecutorPool::spawn_routed(4, 1, |_| Ok(Counting { runs: 0, uploaded: false }))
+        .expect("routed pool spawns");
+    assert_eq!(p.weight_workers(), 1);
+    let weight: Vec<ExecTicket> = (0..6)
+        .map(|i| {
+            p.submit(ExecJob::Qkv { name: format!("w{}", i), layer: 0, args: vec![f32s(&[1.0])] })
+        })
+        .collect();
+    let free: Vec<ExecTicket> = (0..6)
+        .map(|i| p.submit(ExecJob::Selection { name: format!("s{}", i), args: vec![f32s(&[1.0])] }))
+        .collect();
+    for t in weight {
+        assert_eq!(t.wait().unwrap().worker, 0, "weight job escaped the weight worker");
+    }
+    for t in free {
+        assert!(t.wait().unwrap().worker < 4);
+    }
+    let c = p.counters();
+    assert_eq!(c.weight_uploads, 1, "exactly one worker uploaded weights");
+    assert_eq!(c.compiled, 12, "every executed job was counted");
+}
+
+#[test]
+fn route_aware_warmup_filters_non_weight_workers() {
+    use std::sync::Mutex;
+    // Warm-up must reach every worker, with weight_free_only set
+    // exactly on the workers that can never be routed a weight job.
+    struct Warming {
+        worker: usize,
+        seen: Arc<Mutex<Vec<(usize, bool)>>>,
+    }
+    impl ExecBackend for Warming {
+        fn run(
+            &mut self,
+            _name: &str,
+            args: &[HostTensor],
+            _layer: Option<usize>,
+        ) -> Result<Vec<HostTensor>> {
+            Ok(args.to_vec())
+        }
+        fn warmup(&mut self, _config: &str, weight_free_only: bool) -> Result<usize> {
+            self.seen.lock().unwrap().push((self.worker, weight_free_only));
+            Ok(0)
+        }
+    }
+    let seen: Arc<Mutex<Vec<(usize, bool)>>> = Arc::new(Mutex::new(Vec::new()));
+    let record = seen.clone();
+    let p = ExecutorPool::spawn_routed(3, 1, move |worker| {
+        Ok(Warming { worker, seen: record.clone() })
+    })
+    .expect("routed pool spawns");
+    assert_eq!(p.warmup("tiny").expect("warmup resolves"), 3);
+    let mut got = seen.lock().unwrap().clone();
+    got.sort_unstable();
+    assert_eq!(
+        got,
+        vec![(0, false), (1, true), (2, true)],
+        "weight worker warms everything; the rest warm weight-free only"
+    );
 }
 
 #[test]

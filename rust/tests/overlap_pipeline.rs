@@ -130,10 +130,18 @@ fn worker_recall_equals_inline_recall_on_request_kv() {
 // ---------------------------------------------------------------------
 
 fn engine(overlap: bool, exec_workers: usize) -> Option<Engine> {
+    engine_lanes(overlap, exec_workers, 2)
+}
+
+fn engine_lanes(overlap: bool, exec_workers: usize, max_lanes: usize) -> Option<Engine> {
     let rt = freekv::runtime::load_or_skip(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
     Some(
-        Engine::new(rt, "tiny", FreeKvParams { tau: 0.9, overlap, exec_workers, ..Default::default() })
-            .expect("engine constructs once the runtime loads"),
+        Engine::new(
+            rt,
+            "tiny",
+            FreeKvParams { tau: 0.9, overlap, exec_workers, max_lanes, ..Default::default() },
+        )
+        .expect("engine constructs once the runtime loads"),
     )
 }
 
@@ -216,62 +224,99 @@ fn pooled_dispatch_bit_identical_to_inline_dispatch() {
     assert!(inline.1 .0 > 0, "no pages recalled — test not exercising the pipeline");
 }
 
-#[test]
-fn microbatch_pair_bit_identical_across_dispatch_modes() {
-    // Six sequences split 3/3: the joint batch exceeds the largest
-    // compiled decode bucket (4), so the pair path genuinely runs two
-    // bucket-4 lanes — this is the configuration where microbatching
-    // extends the servable batch size. Pipelined (pooled) and
-    // sequential (serial) dispatch must produce identical outputs.
-    let run_pair = |exec_workers: usize, steps: usize| -> Option<Vec<Vec<i32>>> {
-        let mut eng = engine(true, exec_workers)?;
-        let mut seqs: Vec<Sequence> = (0..6)
-            .map(|i| {
-                let prompt: Vec<i32> =
-                    (0..600).map(|t| ((t * 13 + i * 7) % 250) as i32).collect();
-                eng.new_sequence(
-                    i as u64,
-                    prompt,
-                    steps + 1,
-                    SampleParams { temperature: 0.8, top_p: 0.95, seed: 11 + i as u64 },
-                )
-            })
-            .collect();
-        for s in seqs.iter_mut() {
-            let lg = eng.prefill(s).unwrap();
-            let tok =
-                freekv::coordinator::engine::sample_token(&lg, &s.sample.clone(), &mut s.rng);
-            s.tokens.push(tok);
+/// Decode `n_seqs` seeded sequences for `steps` steps through
+/// `decode_step_lanes`, feeding the engine a deliberately uneven caller
+/// partition (alternating 2/3-wide lanes) — the engine re-plans it
+/// bucket-aware. Returns per-seq tokens plus (lane_sets,
+/// max_lanes_inflight) stats.
+#[allow(clippy::type_complexity)]
+fn run_lanes(
+    exec_workers: usize,
+    max_lanes: usize,
+    n_seqs: usize,
+    steps: usize,
+) -> Option<(Vec<Vec<i32>>, (u64, u64))> {
+    let mut eng = engine_lanes(true, exec_workers, max_lanes)?;
+    let mut seqs: Vec<Sequence> = (0..n_seqs)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..600).map(|t| ((t * 13 + i * 7) % 250) as i32).collect();
+            eng.new_sequence(
+                i as u64,
+                prompt,
+                steps + 1,
+                SampleParams { temperature: 0.8, top_p: 0.95, seed: 11 + i as u64 },
+            )
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        let lg = eng.prefill(s).unwrap();
+        let tok = freekv::coordinator::engine::sample_token(&lg, &s.sample.clone(), &mut s.rng);
+        s.tokens.push(tok);
+    }
+    for step in 0..steps {
+        // uneven caller partition, varied per step: the engine must be
+        // partition-agnostic
+        let mut lanes: Vec<Vec<&mut Sequence>> = Vec::new();
+        let mut it = seqs.iter_mut();
+        let mut take = if step % 2 == 0 { 2 } else { 3 };
+        loop {
+            let lane: Vec<&mut Sequence> = it.by_ref().take(take).collect();
+            if lane.is_empty() {
+                break;
+            }
+            lanes.push(lane);
+            take = if take == 2 { 3 } else { 2 };
         }
-        for _ in 0..steps {
-            let (front, back) = seqs.split_at_mut(3);
-            let mut a: Vec<&mut Sequence> = front.iter_mut().collect();
-            let mut b: Vec<&mut Sequence> = back.iter_mut().collect();
-            eng.decode_step_pair(&mut a, &mut b).unwrap();
-        }
-        for s in seqs.iter_mut() {
-            eng.drain_sequence(s);
-        }
-        if exec_workers > 0 {
-            assert!(eng.stats.microbatch_pairs > 0, "pair path not exercised");
-            assert!(eng.stats.exec_jobs > 0, "pool not exercised");
-        }
-        Some(seqs.iter().map(|s| s.generated().to_vec()).collect())
-    };
-    let (Some(serial), Some(pooled)) = (run_pair(0, 12), run_pair(2, 12)) else {
-        eprintln!("artifacts/ missing — skipping microbatch pair equivalence test");
-        return;
-    };
-    assert_eq!(serial, pooled, "paired microbatch tokens diverged between dispatch modes");
+        eng.decode_step_lanes(&mut lanes).unwrap();
+    }
+    for s in seqs.iter_mut() {
+        eng.drain_sequence(s);
+    }
+    if exec_workers > 0 && max_lanes >= 2 {
+        assert!(eng.stats.exec_jobs > 0, "pool not exercised");
+    }
+    let stats = (eng.stats.lane_sets, eng.stats.max_lanes_inflight);
+    Some((seqs.iter().map(|s| s.generated().to_vec()).collect(), stats))
 }
 
 #[test]
-fn pair_merges_when_splitting_would_not_shrink_the_bucket() {
+fn lane_scheduler_bit_identical_across_lane_counts_and_dispatch_modes() {
+    // Eleven sequences exceed two full buckets (cap 4), so the planner
+    // runs three lanes (4/4/3 — genuinely uneven). The same workload
+    // must produce identical tokens under serial dispatch, pooled
+    // dispatch with concurrency 1, 2, 3, and 4 — lane scheduling is a
+    // pure wall-clock change.
+    let steps = 8;
+    let Some((serial, _)) = run_lanes(0, 2, 11, steps) else {
+        eprintln!("artifacts/ missing — skipping lane-scheduler equivalence test");
+        return;
+    };
+    for max_lanes in 1..=4usize {
+        let (pooled, (lane_sets, inflight)) =
+            run_lanes(2, max_lanes, 11, steps).expect("backend available");
+        assert_eq!(
+            serial, pooled,
+            "lane tokens diverged from serial dispatch at max_lanes={}",
+            max_lanes
+        );
+        if max_lanes >= 2 {
+            assert!(lane_sets > 0, "lane scheduler not exercised at max_lanes={}", max_lanes);
+            assert_eq!(
+                inflight,
+                max_lanes.min(3) as u64,
+                "concurrency should cap at min(max_lanes, planned lanes)"
+            );
+        }
+    }
+}
+
+#[test]
+fn lane_plan_merges_when_splitting_would_not_shrink_the_bucket() {
     // Two lanes of two sequences both pad to bucket 4 — identical to
-    // the joint batch's bucket — so decode_step_pair must decode them
-    // as ONE joint step instead of doubling artifact compute.
+    // the joint batch's bucket — so the planner must decode them as ONE
+    // joint step instead of doubling artifact compute.
     let Some(mut eng) = engine(true, 2) else {
-        eprintln!("artifacts/ missing — skipping pair-merge test");
+        eprintln!("artifacts/ missing — skipping lane-merge test");
         return;
     };
     let mut seqs: Vec<Sequence> = (0..4)
@@ -287,16 +332,124 @@ fn pair_merges_when_splitting_would_not_shrink_the_bucket() {
     }
     {
         let (front, back) = seqs.split_at_mut(2);
-        let mut a: Vec<&mut Sequence> = front.iter_mut().collect();
-        let mut b: Vec<&mut Sequence> = back.iter_mut().collect();
-        eng.decode_step_pair(&mut a, &mut b).unwrap();
+        let mut lanes: Vec<Vec<&mut Sequence>> = vec![
+            front.iter_mut().collect(),
+            back.iter_mut().collect(),
+        ];
+        eng.decode_step_lanes(&mut lanes).unwrap();
     }
     for s in seqs.iter_mut() {
         eng.drain_sequence(s);
     }
-    assert_eq!(eng.stats.microbatch_pairs, 0, "same-bucket split must merge, not pair");
-    assert_eq!(eng.stats.steps, 1, "merged pair decodes as one joint step");
+    assert_eq!(eng.stats.lane_sets, 0, "same-bucket split must merge, not run lanes");
+    assert_eq!(eng.stats.steps, 1, "merged lanes decode as one joint step");
     assert_eq!(eng.stats.max_batch_lanes, 4, "joint step carries all four lanes");
+}
+
+#[test]
+fn weight_uploads_bounded_by_weight_workers_not_pool_size() {
+    // Four pool workers, one designated weight worker (the default):
+    // after multi-lane decode routes weight-bearing artifacts through
+    // the pool, at most `weight_workers + 1` runtimes (engine thread +
+    // weight workers) may ever have uploaded the blob — NOT one per
+    // worker, which was the old `(workers + 1)x` memory cliff.
+    let Some(mut eng) = engine_lanes(true, 4, 2) else {
+        eprintln!("artifacts/ missing — skipping weight-upload bound test");
+        return;
+    };
+    let mut seqs: Vec<Sequence> = (0..6)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..600).map(|t| ((t * 13 + i * 7) % 250) as i32).collect();
+            eng.new_sequence(i as u64, prompt, 8, SampleParams::greedy())
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        let lg = eng.prefill(s).unwrap();
+        let tok = freekv::coordinator::engine::sample_token(&lg, &s.sample.clone(), &mut s.rng);
+        s.tokens.push(tok);
+    }
+    for _ in 0..4 {
+        let (front, back) = seqs.split_at_mut(3);
+        let mut lanes: Vec<Vec<&mut Sequence>> =
+            vec![front.iter_mut().collect(), back.iter_mut().collect()];
+        eng.decode_step_lanes(&mut lanes).unwrap();
+    }
+    for s in seqs.iter_mut() {
+        eng.drain_sequence(s);
+    }
+    assert!(eng.stats.lane_sets > 0, "lane path not exercised");
+    assert!(eng.stats.weight_uploads >= 1, "no weight upload recorded at all");
+    assert!(
+        eng.stats.weight_uploads <= 2,
+        "weight uploads {} exceed weight_workers + 1 = 2 (pool has 4 workers)",
+        eng.stats.weight_uploads
+    );
+}
+
+#[test]
+fn chunked_prefill_overlaps_decode_and_matches_sync_prefill() {
+    // A prefill begun while six sequences decode as two lanes must (a)
+    // make progress on the pool during the decode steps (EngineStats
+    // proof), and (b) produce exactly the logits the synchronous
+    // prefill path computes — chunking is a pure scheduling change.
+    let Some(mut eng) = engine_lanes(true, 2, 2) else {
+        eprintln!("artifacts/ missing — skipping chunked-prefill overlap test");
+        return;
+    };
+    let mut seqs: Vec<Sequence> = (0..6)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..600).map(|t| ((t * 13 + i * 7) % 250) as i32).collect();
+            eng.new_sequence(
+                i as u64,
+                prompt,
+                64,
+                SampleParams { temperature: 0.8, top_p: 0.95, seed: 11 + i as u64 },
+            )
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        let lg = eng.prefill(s).unwrap();
+        let tok = freekv::coordinator::engine::sample_token(&lg, &s.sample.clone(), &mut s.rng);
+        s.tokens.push(tok);
+    }
+    // the newcomer's prompt, prefilled asynchronously under decode
+    let late_prompt: Vec<i32> = (0..480).map(|t| ((t * 19 + 3) % 250) as i32).collect();
+    let late = eng.new_sequence(99, late_prompt.clone(), 8, SampleParams::greedy());
+    assert!(eng.prefill_begin(late).is_none(), "pooled engine prefills asynchronously");
+    let mut async_done = None;
+    for _ in 0..24 {
+        {
+            let mut lanes: Vec<Vec<&mut Sequence>> = Vec::new();
+            let (front, back) = seqs.split_at_mut(3);
+            lanes.push(front.iter_mut().collect());
+            lanes.push(back.iter_mut().collect());
+            eng.decode_step_lanes(&mut lanes).unwrap();
+        }
+        if async_done.is_none() {
+            if let Some(done) = eng.prefill_poll().into_iter().next() {
+                async_done = Some(done);
+            }
+        }
+    }
+    let done = match async_done {
+        Some(d) => d,
+        None => eng.prefill_wait().into_iter().next().expect("prefill completes"),
+    };
+    assert_eq!(done.seq.id, 99);
+    let async_logits = done.result.expect("chunked prefill succeeds");
+    assert!(
+        eng.stats.prefill_overlap_chunks > 0,
+        "no prefill chunk completed while decode lanes were in flight"
+    );
+    for s in seqs.iter_mut() {
+        eng.drain_sequence(s);
+    }
+
+    // reference: synchronous prefill of the same prompt on a fresh engine
+    let Some(mut reference) = engine_lanes(true, 0, 2) else { return };
+    let mut ref_seq = reference.new_sequence(99, late_prompt, 8, SampleParams::greedy());
+    let sync_logits = reference.prefill(&mut ref_seq).unwrap();
+    assert_eq!(async_logits, sync_logits, "chunked prefill changed the logits");
 }
 
 #[test]

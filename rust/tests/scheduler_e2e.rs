@@ -101,8 +101,8 @@ fn microbatched_real_decode_matches_bucketed_scheduling() {
     // Decode buckets top out at 4, so a running set of 6 can only be
     // served jointly by rotating 4-deep batches — or, with
     // microbatching, by splitting into two 3-wide lanes per tick
-    // (decode_step_pair). Per-lane computation is independent, so every
-    // request must generate the same greedy text either way.
+    // (decode_step_lanes). Per-lane computation is independent, so
+    // every request must generate the same greedy text either way.
     let run = |max_batch: usize, microbatch_min: usize| -> Option<Vec<String>> {
         let mut sched = scheduler_with(SchedulerConfig {
             max_batch,
@@ -119,11 +119,11 @@ fn microbatched_real_decode_matches_bucketed_scheduling() {
     };
     // baseline: joint 4-deep batches, no splitting
     let Some(joint) = run(4, 0) else { return };
-    // microbatched: 6-deep decode set split into two pair-dispatched lanes
+    // microbatched: 6-deep decode set split into two pipelined lanes
     let Some(split) = run(8, 2) else { return };
     assert_eq!(joint, split, "microbatched decode diverged from bucketed scheduling");
-    // and the pair path genuinely ran (joint bucket for 6 doesn't exist,
-    // so the engine cannot have merged the halves)
+    // and the lane path genuinely ran (joint bucket for 6 doesn't
+    // exist, so the engine cannot have merged the lanes)
     let mut sched = scheduler_with(SchedulerConfig {
         max_batch: 8,
         admit_below: 6,
@@ -132,13 +132,57 @@ fn microbatched_real_decode_matches_bucketed_scheduling() {
     })
     .expect("backend available");
     for i in 1..=6u64 {
-        sched.submit(Request::from_text(i, &format!("count the pairs {} ", i), 6));
+        sched.submit(Request::from_text(i, &format!("count the lane sets {} ", i), 6));
     }
     sched.drain().unwrap();
     assert!(
-        sched.engine.stats().microbatch_pairs > 0,
-        "running set of 6 never took the pair path"
+        sched.engine.stats().lane_sets > 0,
+        "running set of 6 never took the lane path"
     );
+}
+
+#[test]
+fn three_lane_real_scheduling_matches_bucketed_and_overlaps_prefill() {
+    // Nine concurrent requests exceed two full decode buckets, so the
+    // lane planner runs three lanes per tick; results must match the
+    // rotating joint-batch baseline, and — because the pooled engine
+    // prefills in chunks — some prefill work must complete while decode
+    // lanes are in flight (the EngineStats overlap proof).
+    let run = |max_batch: usize,
+               microbatch_min: usize,
+               max_lanes: usize|
+     -> Option<(Vec<String>, u64, u64)> {
+        let rt = freekv::runtime::load_or_skip(artifacts_dir())?;
+        let eng = Engine::new(
+            rt,
+            "tiny",
+            FreeKvParams { tau: 0.9, max_lanes, ..Default::default() },
+        )
+        .ok()?;
+        let mut sched = Scheduler::new(
+            eng,
+            SchedulerConfig {
+                max_batch,
+                admit_below: 9,
+                microbatch_min,
+                max_lanes,
+                ..Default::default()
+            },
+        );
+        for i in 1..=9u64 {
+            sched.submit(Request::from_text(i, &format!("nine lanes {} ", i), 6));
+        }
+        sched.drain().unwrap();
+        let texts: Vec<String> =
+            (1..=9u64).map(|i| sched.take_completion(i).unwrap().text).collect();
+        let st = sched.engine.stats();
+        Some((texts, st.lane_sets, st.prefill_overlap_chunks))
+    };
+    let Some((joint, _, _)) = run(4, 0, 2) else { return };
+    let Some((split, lane_sets, overlap_chunks)) = run(9, 2, 3) else { return };
+    assert_eq!(joint, split, "three-lane scheduling diverged from bucketed scheduling");
+    assert!(lane_sets > 0, "9-deep running set never took the lane path");
+    assert!(overlap_chunks > 0, "no prefill chunk completed under in-flight decode lanes");
 }
 
 #[test]
