@@ -231,6 +231,49 @@ fn main() {
     }
 
     println!();
+    println!("=== bench e2e: shared-prefix pool memory (sim, 8 requests) ===");
+    {
+        // Eight requests with an identical prompt through the full
+        // scheduler stack on the artifact-free SimBackend: with the
+        // prefix cache on, the shared pool should hold roughly one
+        // request's pages instead of eight. Peak pages come from the
+        // allocator's high-water mark, so this also runs in CI's
+        // bench-smoke job without artifacts.
+        use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig};
+        use freekv::coordinator::sim_backend::SimBackend;
+        let run = |share: bool| -> (u64, u64) {
+            let backend = SimBackend::tiny_with_pool(0, share);
+            let alloc = backend.allocator();
+            let cfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
+            let mut s = Scheduler::new(backend, cfg);
+            let prompt = "shared prefix workload ".repeat(8);
+            for i in 1..=8u64 {
+                s.submit(Request::from_text(i, &prompt, 32));
+            }
+            s.drain().expect("sim drain");
+            let st = alloc.stats();
+            (st.pages_peak, st.prefix_hits)
+        };
+        let (private_peak, _) = run(false);
+        let (shared_peak, hits) = run(true);
+        let savings = 1.0 - shared_peak as f64 / private_peak.max(1) as f64;
+        println!(
+            "private {:>5} pages peak | shared {:>5} pages peak | prefix hits {} | {:.0}% saved",
+            private_peak,
+            shared_peak,
+            hits,
+            savings * 100.0
+        );
+        let mut mem = JsonObj::new();
+        mem.insert("requests", 8usize);
+        mem.insert("pages_peak_private", private_peak as usize);
+        mem.insert("pages_peak_shared", shared_peak as usize);
+        mem.insert("prefix_hits", hits as usize);
+        mem.insert("savings_frac", savings);
+        report.insert("memory", mem);
+    }
+
+    println!();
     println!("=== bench e2e: real tiny-model engine throughput ===");
     if Runtime::load("artifacts").is_err() {
         println!("artifacts/ missing — run `make artifacts` (skipping real bench)");

@@ -204,6 +204,20 @@ pub struct FreeKvParams {
     /// `(weight_workers + 1) x` (engine runtime + weight workers)
     /// instead of `(exec_workers + 1) x`.
     pub weight_workers: usize,
+    /// Capacity of the shared CPU KV page pool, in pages aggregated
+    /// across all layers (`--kv-pool-pages`). `0` = unbounded. With a
+    /// capacity set, the scheduler charges each request's worst-case
+    /// page footprint at admission and *queues* requests the pool
+    /// cannot cover instead of letting decode OOM; pages free on
+    /// finish/cancel and queued requests resume.
+    pub kv_pool_pages: usize,
+    /// Copy-on-write prefix sharing (`--prefix-cache`): a request whose
+    /// token prefix hash-matches pages a resident request already
+    /// committed aliases those pool pages (refcounted) instead of
+    /// writing duplicates; a shared page is materialized privately
+    /// before any write. Off by default — with sharing off the pool is
+    /// bit-identical to private per-request pools.
+    pub prefix_cache: bool,
 }
 
 impl Default for FreeKvParams {
@@ -217,6 +231,8 @@ impl Default for FreeKvParams {
             exec_workers: 2,
             max_lanes: 2,
             weight_workers: 1,
+            kv_pool_pages: 0,
+            prefix_cache: false,
         }
     }
 }

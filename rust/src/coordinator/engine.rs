@@ -32,12 +32,14 @@
 //! and outputs are bit-identical either way.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{FreeKvParams, ModelConfig};
-use crate::kvcache::{Layout, RequestKv};
+use crate::kvcache::alloc::worst_case_pages;
+use crate::kvcache::{AdmitDecision, KvPoolStats, Layout, PageAllocator, RequestKv};
 use crate::policies::freekv::{correction_check, SpecState};
 use crate::runtime::{ExecDone, ExecJob, ExecTicket, ExecutorPool, HostTensor, Runtime};
 use crate::transfer::{RecallJob, RecallPipeline, TransferEngine};
@@ -94,6 +96,16 @@ pub struct EngineStats {
     /// Weight-blob device uploads across the engine runtime and pool
     /// workers; bounded by `weight_workers + 1`, not the pool size.
     pub weight_uploads: u64,
+    /// Distinct CPU pool pages allocated across the shared KV allocator
+    /// (shared pages counted once, process-wide). Gauge, synced per step.
+    pub kv_pages_used: u64,
+    /// Pool pages currently aliased by two or more requests.
+    pub kv_pages_shared: u64,
+    /// Offloads satisfied by prefix sharing instead of a page write.
+    pub kv_prefix_hits: u64,
+    /// Allocator-charged bytes: distinct CPU pool pages + GPU-ledger
+    /// bytes of live requests.
+    pub kv_bytes_used: u64,
     pub steps: u64,
     /// Decode steps that carried ≥ 2 sequences (continuous batching
     /// actually interleaving concurrent requests).
@@ -114,6 +126,15 @@ impl EngineStats {
         } else {
             self.corrections as f64 / self.correction_checks as f64
         }
+    }
+
+    /// Fold the shared KV pool gauges into the stats — the one mapping
+    /// used by every backend, so `/stats` cannot diverge between them.
+    pub fn sync_kv(&mut self, kv: &crate::kvcache::KvPoolStats) {
+        self.kv_pages_used = kv.pages_used;
+        self.kv_pages_shared = kv.pages_shared;
+        self.kv_prefix_hits = kv.prefix_hits;
+        self.kv_bytes_used = kv.cpu_bytes_used + kv.gpu_bytes_used;
     }
 
     /// Fraction of recall wall time hidden behind compute (0 when every
@@ -209,6 +230,27 @@ pub trait Backend {
     /// cancelled sequence strands nothing on background workers.
     fn retire_sequence(&mut self, _seq: &mut Sequence) {}
 
+    /// Capacity-aware admission: charge the request's worst-case KV
+    /// page footprint against the shared pool before it starts.
+    /// `Admit` reserves the footprint (pair with
+    /// [`Backend::kv_release`]); `Wait` asks the scheduler to keep the
+    /// request queued until running requests free pages; `Never` means
+    /// the footprint exceeds the whole pool. The default admits
+    /// everything (no pool limit).
+    fn kv_admit(&mut self, _id: u64, _prompt_tokens: usize, _max_new: usize) -> AdmitDecision {
+        AdmitDecision::Admit
+    }
+
+    /// Release the admission reservation taken by [`Backend::kv_admit`]
+    /// (idempotent; called on finish, cancel, and prefill failure).
+    fn kv_release(&mut self, _id: u64) {}
+
+    /// Live gauges of the shared KV pool (pages used/shared, prefix
+    /// hits, allocator-charged bytes). Zeros for backends without one.
+    fn kv_stats(&self) -> KvPoolStats {
+        KvPoolStats::default()
+    }
+
     fn stats(&self) -> &EngineStats;
 }
 
@@ -260,7 +302,30 @@ pub struct Sequence {
 }
 
 impl Sequence {
-    pub fn new(id: u64, cfg: &ModelConfig, prompt: Vec<i32>, max_new: usize, layout: Layout, sample: SampleParams) -> Sequence {
+    /// Sequence over a private, unbounded page allocator (standalone
+    /// tools and tests); serving engines share one allocator across
+    /// sequences via [`Sequence::with_alloc`].
+    pub fn new(
+        id: u64,
+        cfg: &ModelConfig,
+        prompt: Vec<i32>,
+        max_new: usize,
+        layout: Layout,
+        sample: SampleParams,
+    ) -> Sequence {
+        let alloc = PageAllocator::for_model(cfg, 0, false);
+        Sequence::with_alloc(id, cfg, prompt, max_new, layout, sample, alloc)
+    }
+
+    pub fn with_alloc(
+        id: u64,
+        cfg: &ModelConfig,
+        prompt: Vec<i32>,
+        max_new: usize,
+        layout: Layout,
+        sample: SampleParams,
+        alloc: Arc<PageAllocator>,
+    ) -> Sequence {
         let s = cfg.budget_slots();
         Sequence {
             id,
@@ -268,7 +333,7 @@ impl Sequence {
             prompt_len: prompt.len(),
             tokens: prompt,
             max_new_tokens: max_new,
-            kv: RequestKv::new(cfg, layout),
+            kv: RequestKv::with_alloc(cfg, layout, alloc),
             xfer: TransferEngine::new(cfg.page_size, cfg.d_head, true),
             rng: Rng::new(sample.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15)),
             sample,
@@ -453,6 +518,10 @@ pub struct Engine {
     /// true while the lane scheduler is driving a decode lane set —
     /// prefill chunks completing in this window are the overlap proof.
     decode_active: bool,
+    /// Shared KV page allocator: every sequence's CPU pool pages come
+    /// from here (capacity `params.kv_pool_pages`, CoW prefix sharing
+    /// when `params.prefix_cache`), and admission reserves against it.
+    alloc: Arc<PageAllocator>,
 }
 
 impl Engine {
@@ -472,6 +541,8 @@ impl Engine {
         } else {
             None
         };
+        let alloc =
+            PageAllocator::for_model(&cfg, params.kv_pool_pages as u64, params.prefix_cache);
         Ok(Engine {
             rt,
             cfg,
@@ -488,6 +559,7 @@ impl Engine {
             prefills: Vec::new(),
             prefill_done: Vec::new(),
             decode_active: false,
+            alloc,
         })
     }
 
@@ -508,9 +580,16 @@ impl Engine {
         Ok(n)
     }
 
-    /// Create a fresh sequence for a prompt.
+    /// Create a fresh sequence for a prompt; its CPU pool pages draw
+    /// from the engine's shared allocator.
     pub fn new_sequence(&self, id: u64, prompt: Vec<i32>, max_new: usize, sample: SampleParams) -> Sequence {
-        Sequence::new(id, &self.cfg, prompt, max_new, Layout::Hnd, sample)
+        let alloc = self.alloc.clone();
+        Sequence::with_alloc(id, &self.cfg, prompt, max_new, Layout::Hnd, sample, alloc)
+    }
+
+    /// Live gauges of the shared KV pool.
+    pub fn kv_pool_stats(&self) -> KvPoolStats {
+        self.alloc.stats()
     }
 
     fn overlap_active(&self) -> bool {
@@ -548,6 +627,8 @@ impl Engine {
         let valid_t = HostTensor::F32(valid, vec![bucket]);
         let mut q_last_per_layer: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers);
 
+        // the prompt is fully known: hash it for prefix-page keys
+        seq.kv.feed_tokens(&seq.tokens);
         for l in 0..cfg.n_layers {
             let out = self.rt.run(
                 &self.art(&format!("layer_prefill_t{}", bucket)),
@@ -559,13 +640,9 @@ impl Engine {
             let k = it.next().unwrap().into_f32s()?;
             let v = it.next().unwrap().into_f32s()?;
             let q_last = it.next().unwrap().into_f32s()?;
-            // populate GPU cache + offload completed pages
-            let st = &mut seq.kv.layers[l];
-            let completed = st.gpu.load_prefill(&k, &v, len, bucket);
-            let x = st.xfer_mut();
-            for cp in &completed {
-                seq.xfer.offload_page(cp, &mut x.pool);
-            }
+            // populate GPU cache + offload completed pages (prefix-keyed)
+            let completed = seq.kv.layers[l].gpu.load_prefill(&k, &v, len, bucket);
+            seq.kv.offload_completed(l, &completed, &mut seq.xfer);
             q_last_per_layer.push(q_last);
         }
 
@@ -1307,8 +1384,10 @@ impl Engine {
         }
 
         let (m, dh, qo) = (self.cfg.n_kv, self.cfg.d_head, self.cfg.n_qo);
-        // ---- append new KV, offload completed pages ----
+        // ---- append new KV, offload completed pages (prefix-keyed:
+        // the token this K/V belongs to is already in seq.tokens) ----
         for (i, seq) in lane.seqs.iter_mut().enumerate() {
+            seq.kv.feed_tokens(&seq.tokens);
             let kn = &lane.k_new[i * m * dh..(i + 1) * m * dh];
             let vn = &lane.v_new[i * m * dh..(i + 1) * m * dh];
             seq.kv.append(l, kn, vn, &mut seq.xfer);
@@ -1605,12 +1684,10 @@ impl Engine {
                 // populate GPU cache + offload completed pages (same
                 // host work, same order as synchronous prefill)
                 {
-                    let st = &mut job.seq.kv.layers[l];
-                    let completed = st.gpu.load_prefill(&k, &v, job.len, job.bucket);
-                    let x = st.xfer_mut();
-                    for cp in &completed {
-                        job.seq.xfer.offload_page(cp, &mut x.pool);
-                    }
+                    job.seq.kv.feed_tokens(&job.seq.tokens);
+                    let completed =
+                        job.seq.kv.layers[l].gpu.load_prefill(&k, &v, job.len, job.bucket);
+                    job.seq.kv.offload_completed(l, &completed, &mut job.seq.xfer);
                 }
                 job.q_last.push(q_last);
                 if l + 1 < n_layers {
@@ -1724,6 +1801,7 @@ impl Engine {
         }
         self.stats.exec_compiles = compiled;
         self.stats.weight_uploads = uploads;
+        self.stats.sync_kv(&self.alloc.stats());
     }
 
     /// Take (or allocate) the batch gather tensors for this bucket.
@@ -1858,6 +1936,19 @@ impl Backend for Engine {
 
     fn retire_sequence(&mut self, seq: &mut Sequence) {
         self.drain_sequence(seq);
+    }
+
+    fn kv_admit(&mut self, id: u64, prompt_tokens: usize, max_new: usize) -> AdmitDecision {
+        let footprint = worst_case_pages(&self.cfg, prompt_tokens.saturating_add(max_new));
+        self.alloc.try_reserve(id, footprint)
+    }
+
+    fn kv_release(&mut self, id: u64) {
+        self.alloc.release_reservation(id);
+    }
+
+    fn kv_stats(&self) -> KvPoolStats {
+        self.alloc.stats()
     }
 
     fn stats(&self) -> &EngineStats {

@@ -446,7 +446,21 @@ fn handle_command<B: Backend>(
             true
         }
         Command::Metrics(reply) => {
-            let _ = reply.send(sched.metrics.report());
+            // one line: serving metrics + the shared KV pool gauges
+            let kv = sched.kv_pool_stats();
+            let report = format!(
+                "{} kv_pages_total={} kv_pages_used={} kv_pages_shared={} \
+                 kv_pages_reserved={} prefix_hits={} kv_cpu_bytes={} kv_gpu_bytes={}",
+                sched.metrics.report(),
+                kv.pages_capacity,
+                kv.pages_used,
+                kv.pages_shared,
+                kv.pages_reserved,
+                kv.prefix_hits,
+                kv.cpu_bytes_used,
+                kv.gpu_bytes_used
+            );
+            let _ = reply.send(report);
             true
         }
         Command::Stats(reply) => {

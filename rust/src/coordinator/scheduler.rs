@@ -23,6 +23,7 @@ use crate::coordinator::engine::{
 };
 use crate::coordinator::metrics::{Metrics, RequestTiming};
 use crate::coordinator::tokenizer;
+use crate::kvcache::{AdmitDecision, KvPoolStats};
 
 /// A queued generation request.
 #[derive(Debug, Clone)]
@@ -242,9 +243,17 @@ impl<B: Backend> Scheduler<B> {
 
     /// Bytes of KV state (GPU-resident + CPU pool) held by running
     /// sequences — drops back to zero when they finish or are cancelled.
-    /// (Sequences mid-prefill are owned by the backend and not counted.)
+    /// (Sequences mid-prefill are owned by the backend and not counted;
+    /// shared pool pages count once per referencing request here — the
+    /// process-wide figure is [`Scheduler::kv_pool_stats`].)
     pub fn running_kv_bytes(&self) -> usize {
         self.running.iter().map(|r| r.seq.kv.gpu_bytes() + r.seq.kv.cpu_bytes()).sum()
+    }
+
+    /// Live gauges of the backend's shared KV pool (pages, prefix hits,
+    /// allocator-charged bytes — shared pages counted once).
+    pub fn kv_pool_stats(&self) -> KvPoolStats {
+        self.engine.kv_stats()
     }
 
     /// One scheduling iteration: admission (prefill handed to the
@@ -268,6 +277,7 @@ impl<B: Backend> Scheduler<B> {
                 let ids: Vec<u64> = self.prefilling.keys().copied().collect();
                 for id in ids {
                     self.prefilling.remove(&id);
+                    self.engine.kv_release(id);
                     self.metrics.on_failed();
                     events.push(StepEvent::Failed {
                         id,
@@ -286,11 +296,17 @@ impl<B: Backend> Scheduler<B> {
         Ok(events)
     }
 
-    /// Admission: prefill-priority. One prefill per tick while decode is
-    /// in flight (keeps running sequences' ITL steady), bursting up to
-    /// `admit_below` when the engine is idle so a queued backlog doesn't
-    /// pay one decode step of TTFT per request. Prefilling sequences
-    /// occupy admission slots like running ones.
+    /// Admission: prefill-priority and capacity-aware. One prefill per
+    /// tick while decode is in flight (keeps running sequences' ITL
+    /// steady), bursting up to `admit_below` when the engine is idle so
+    /// a queued backlog doesn't pay one decode step of TTFT per
+    /// request. Prefilling sequences occupy admission slots like
+    /// running ones. Before a request starts, its worst-case KV page
+    /// footprint is charged against the backend's shared pool
+    /// ([`Backend::kv_admit`]): when the pool cannot cover it the
+    /// request stays queued (FIFO — no head-of-line skipping) and
+    /// retries once a finish/cancel frees pages; a footprint larger
+    /// than the whole pool fails that request alone.
     fn admit(&mut self, events: &mut Vec<StepEvent>) {
         let occupied = self.running.len() + self.prefilling.len();
         let burst = if occupied == 0 { self.cfg.admit_below } else { 1 };
@@ -298,9 +314,32 @@ impl<B: Backend> Scheduler<B> {
         while admitted < burst
             && self.running.len() + self.prefilling.len() < self.cfg.admit_below
         {
-            let Some(q) = self.queue.pop_front() else { break };
-            admitted += 1;
-            self.begin_prefill(q, events);
+            let Some(front) = self.queue.front() else { break };
+            let id = front.req.id;
+            let prompt_len = front.req.prompt.len();
+            // same clamp as begin_prefill, so the charged footprint
+            // matches what the request can actually decode
+            let budget = self.engine.model().max_context.saturating_sub(prompt_len).max(1);
+            let max_new = front.req.max_new_tokens.min(budget);
+            match self.engine.kv_admit(id, prompt_len, max_new) {
+                AdmitDecision::Admit => {
+                    let q = self.queue.pop_front().expect("front exists");
+                    admitted += 1;
+                    self.begin_prefill(q, events);
+                }
+                AdmitDecision::Wait => break,
+                AdmitDecision::Never => {
+                    let q = self.queue.pop_front().expect("front exists");
+                    self.metrics.on_failed();
+                    events.push(StepEvent::Failed {
+                        id: q.req.id,
+                        error: format!(
+                            "request KV footprint ({} prompt + {} new tokens) exceeds the pool",
+                            prompt_len, max_new
+                        ),
+                    });
+                }
+            }
         }
     }
 
@@ -370,6 +409,7 @@ impl<B: Backend> Scheduler<B> {
                 self.running.push(r);
             }
             Err(e) => {
+                self.engine.kv_release(id);
                 self.metrics.on_failed();
                 events.push(StepEvent::Failed { id, error: format!("{e:#}") });
             }
@@ -502,6 +542,9 @@ impl<B: Backend> Scheduler<B> {
                     finish_reason: reason,
                 };
                 Self::store_completion(&mut self.finished, &mut self.finished_order, &self.cfg, c);
+                // the sequence (and its pool pages) drops here; give the
+                // admission reservation back so queued requests resume
+                self.engine.kv_release(id);
                 events.push(StepEvent::Finished { id });
             } else {
                 still.push(r);
@@ -564,6 +607,7 @@ impl<B: Backend> Scheduler<B> {
             // so its KV drops here; any chunk still executing completes
             // on a worker and is discarded.
             let seq = self.engine.prefill_cancel(id);
+            self.engine.kv_release(id);
             self.metrics.on_cancelled();
             let (tokens, prompt_tokens) = match seq {
                 Some(s) => (s.tokens.clone(), s.prompt_len),
@@ -583,6 +627,7 @@ impl<B: Backend> Scheduler<B> {
         if let Some(i) = self.running.iter().position(|r| r.seq.id == id) {
             let mut r = self.running.remove(i);
             self.engine.retire_sequence(&mut r.seq);
+            self.engine.kv_release(id);
             self.metrics.on_cancelled();
             let c = Completion {
                 id,
@@ -977,6 +1022,66 @@ mod tests {
         assert_eq!(c.generated_tokens, 0);
         s.drain().unwrap();
         assert_eq!(s.take_completion(1).unwrap().generated_tokens, 20);
+    }
+
+    #[test]
+    fn admission_queues_on_pool_exhaustion_and_resumes() {
+        // Pool of 24 pages; each request's worst-case footprint is
+        // 2 layers x ceil((10 prompt + 12 new) / 4) = 12 pages, so only
+        // two requests fit at once. The other two must queue (not fail,
+        // not OOM) and resume as finishes release reservations.
+        let backend = SimBackend::tiny_with_pool(24, false);
+        let alloc = backend.allocator();
+        let cfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
+        let mut s = Scheduler::new(backend, cfg);
+        for i in 1..=4u64 {
+            s.submit(Request::from_text(i, "pool cap ", 12));
+        }
+        let mut peak_inflight = 0usize;
+        let mut saw_queue_wait = false;
+        while s.pending() > 0 {
+            for ev in s.tick().unwrap() {
+                if let StepEvent::Failed { id, error } = ev {
+                    panic!("request {} failed under capacity pressure: {}", id, error);
+                }
+            }
+            peak_inflight = peak_inflight.max(s.running_len() + s.prefilling_len());
+            if s.queued_len() > 0 && s.running_len() > 0 {
+                saw_queue_wait = true;
+            }
+        }
+        assert_eq!(peak_inflight, 2, "pool covers exactly two footprints at a time");
+        assert!(saw_queue_wait, "over-capacity requests must wait in the queue");
+        for i in 1..=4u64 {
+            let c = s.take_completion(i).expect("queued request completed after pages freed");
+            assert_eq!(c.generated_tokens, 12);
+        }
+        let st = alloc.stats();
+        assert_eq!(st.pages_reserved, 0, "all reservations returned");
+        assert_eq!(st.pages_used, 0, "all pool pages freed on retire");
+        assert!(st.pages_peak <= 24, "pool never exceeded its capacity");
+    }
+
+    #[test]
+    fn request_larger_than_pool_fails_that_request_only() {
+        let backend = SimBackend::tiny_with_pool(8, false);
+        let mut s = Scheduler::new(backend, SchedulerConfig::default());
+        s.submit(Request::from_text(1, "too big ", 100));
+        s.submit(Request::from_text(2, "ok ", 4));
+        let mut failed = None;
+        while s.pending() > 0 {
+            for ev in s.tick().unwrap() {
+                if let StepEvent::Failed { id, error } = ev {
+                    failed = Some((id, error));
+                }
+            }
+        }
+        let (id, error) = failed.expect("oversize footprint reported");
+        assert_eq!(id, 1);
+        assert!(error.contains("exceeds the pool"), "{}", error);
+        assert!(s.take_completion(2).is_some(), "the small request still ran");
+        assert!(s.take_completion(1).is_none());
+        assert_eq!(s.kv_pool_stats().pages_reserved, 0);
     }
 
     #[test]

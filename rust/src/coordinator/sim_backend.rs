@@ -12,12 +12,15 @@
 //! an honest overlap window. Also reachable from the CLI via
 //! `freekv serve --sim` / `freekv loadtest --sim`.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::ModelConfig;
-use crate::coordinator::engine::{Backend, EngineStats, PrefillDone, Sequence};
+use crate::coordinator::engine::{Backend, EngineStats, PrefillDone, SampleParams, Sequence};
+use crate::kvcache::alloc::worst_case_pages;
+use crate::kvcache::{AdmitDecision, KvPoolStats, Layout, PageAllocator};
 
 /// The deterministic next-token function: an LCG over the previous
 /// token, mapped to printable ASCII (so decoded text is readable and
@@ -68,11 +71,23 @@ pub struct SimBackend {
     /// Decode-failure injection: `decode_step` errors when the batch
     /// contains any of these request ids (lane-containment tests).
     pub fail_decode_ids: Vec<u64>,
+    /// Shared KV page allocator, exactly like the real engine's: every
+    /// sequence's pool pages come from here, and `kv_admit` reserves
+    /// against its capacity.
+    alloc: Arc<PageAllocator>,
 }
 
 impl SimBackend {
     pub fn new(cfg: ModelConfig) -> SimBackend {
+        SimBackend::with_pool(cfg, 0, false)
+    }
+
+    /// Backend over a bounded / prefix-sharing pool (capacity in pages
+    /// across all layers, 0 = unbounded) — the knobs scheduler and
+    /// memory tests drive.
+    pub fn with_pool(cfg: ModelConfig, pool_pages: u64, prefix_cache: bool) -> SimBackend {
         let max_prompt = cfg.max_context / 2;
+        let alloc = PageAllocator::for_model(&cfg, pool_pages, prefix_cache);
         SimBackend {
             cfg,
             stats: EngineStats::default(),
@@ -81,11 +96,25 @@ impl SimBackend {
             prefill_ticks: 0,
             prefilling: Vec::new(),
             fail_decode_ids: Vec::new(),
+            alloc,
         }
     }
 
     pub fn tiny() -> SimBackend {
         SimBackend::new(sim_config())
+    }
+
+    pub fn tiny_with_pool(pool_pages: u64, prefix_cache: bool) -> SimBackend {
+        SimBackend::with_pool(sim_config(), pool_pages, prefix_cache)
+    }
+
+    /// The backing allocator (tests and benches inspect its gauges).
+    pub fn allocator(&self) -> Arc<PageAllocator> {
+        self.alloc.clone()
+    }
+
+    fn sync_kv_stats(&mut self) {
+        self.stats.sync_kv(&self.alloc.stats());
     }
 
     fn complete_prefill(&mut self, mut seq: Sequence) -> PrefillDone {
@@ -99,6 +128,24 @@ impl Backend for SimBackend {
         &self.cfg
     }
 
+    fn new_sequence(
+        &self,
+        id: u64,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sample: SampleParams,
+    ) -> Sequence {
+        Sequence::with_alloc(
+            id,
+            &self.cfg,
+            prompt,
+            max_new,
+            Layout::Hnd,
+            sample,
+            self.alloc.clone(),
+        )
+    }
+
     fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>> {
         let len = seq.tokens.len();
         if len > self.max_prompt {
@@ -108,6 +155,8 @@ impl Backend for SimBackend {
                 self.max_prompt
             ));
         }
+        // prompt fully known: key completed pages for prefix sharing
+        seq.kv.feed_tokens(&seq.tokens);
         let kv_row = vec![0.0f32; self.cfg.n_kv * self.cfg.d_head];
         for _ in 0..len {
             for l in 0..self.cfg.n_layers {
@@ -118,6 +167,7 @@ impl Backend for SimBackend {
         let tok = sim_next_token(*seq.tokens.last().unwrap());
         logits[tok as usize] = 1.0;
         self.stats.prefills += 1;
+        self.sync_kv_stats();
         Ok(logits)
     }
 
@@ -180,6 +230,8 @@ impl Backend for SimBackend {
         let kv_row = vec![0.0f32; self.cfg.n_kv * self.cfg.d_head];
         for seq in seqs.iter_mut() {
             let tok = sim_next_token(*seq.tokens.last().unwrap());
+            // the K/V appended belongs to the current last token
+            seq.kv.feed_tokens(&seq.tokens);
             for l in 0..self.cfg.n_layers {
                 seq.kv.append(l, &kv_row, &kv_row, &mut seq.xfer);
             }
@@ -188,7 +240,21 @@ impl Backend for SimBackend {
                 seq.finished = true;
             }
         }
+        self.sync_kv_stats();
         Ok(())
+    }
+
+    fn kv_admit(&mut self, id: u64, prompt_tokens: usize, max_new: usize) -> AdmitDecision {
+        let footprint = worst_case_pages(&self.cfg, prompt_tokens.saturating_add(max_new));
+        self.alloc.try_reserve(id, footprint)
+    }
+
+    fn kv_release(&mut self, id: u64) {
+        self.alloc.release_reservation(id);
+    }
+
+    fn kv_stats(&self) -> KvPoolStats {
+        self.alloc.stats()
     }
 
     fn stats(&self) -> &EngineStats {

@@ -3,7 +3,9 @@
 //! paper's model geometries and device profiles.
 
 use crate::config::ModelConfig;
-use crate::policies::latency::{gpu_kv_bytes, simulate_request, weight_bytes, Method, SimKnobs};
+use crate::policies::latency::{
+    gpu_kv_bytes, shared_prefix_pool_pages, simulate_request, weight_bytes, Method, SimKnobs,
+};
 use crate::sim::{CostModel, DeviceProfile};
 use crate::util::table::{fnum, ftime, Table};
 
@@ -229,6 +231,35 @@ pub fn fig10() -> Table {
             fnum(a.total()),
             fnum(f.total()),
             format!("{:.1}x", a.total() / f.total()),
+        ]);
+    }
+    t
+}
+
+/// Shared-prefix pool memory: modeled CPU pages (and GB) for N
+/// requests with a common prompt prefix, with and without the
+/// copy-on-write prefix cache — the modeled twin of the rust engine's
+/// `--prefix-cache` page sharing.
+pub fn prefix_mem_table() -> Table {
+    let m = ModelConfig::llama31_8b();
+    let (prefix, unique) = (32768usize, 512usize);
+    // page counts are aggregated across layers, so GB = pages x one
+    // page's bytes (all kv heads, K+V)
+    let page_gb = m.page_bytes() as f64 / 1e9;
+    let mut t = Table::new(
+        "Shared-prefix CPU pool memory (Llama-3.1-8B, 32K shared prompt + 512 unique)",
+        &["requests", "private pages", "shared pages", "private GB", "shared GB", "savings"],
+    );
+    for n in [1usize, 4, 8, 16] {
+        let private = shared_prefix_pool_pages(&m, n, prefix, unique, false);
+        let shared = shared_prefix_pool_pages(&m, n, prefix, unique, true);
+        t.row(vec![
+            n.to_string(),
+            private.to_string(),
+            shared.to_string(),
+            fnum(private as f64 * page_gb),
+            fnum(shared as f64 * page_gb),
+            format!("{:.2}x", private as f64 / shared as f64),
         ]);
     }
     t

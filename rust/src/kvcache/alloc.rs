@@ -1,0 +1,634 @@
+//! Shared paged KV memory subsystem: the process-wide page allocator
+//! behind every [`LayerPool`](crate::kvcache::pool::LayerPool) view.
+//!
+//! # Why
+//!
+//! The seed allocated KV memory the naive way: each `RequestKv` built a
+//! private, dense, full-context slab per layer, so host memory scaled
+//! with `running_set x max_context` regardless of how many pages a
+//! request actually offloaded, admission was blind to memory, and N
+//! requests with the same prompt stored the same pages N times. This
+//! module replaces that with one allocator shared by every sequence of
+//! an engine:
+//!
+//! * **One CPU slab per layer**, grown on demand one page at a time —
+//!   a request's pool footprint is the pages it has *offloaded*, not
+//!   `max_context`. Both HND and NHD page layouts live in the same
+//!   slab (the layout governs the element order *within* a page, so
+//!   the hybrid-layout ablation is preserved; see `pool.rs`).
+//! * **Refcounted page handles** ([`Slot`]). A `LayerPool` is a view: a
+//!   logical-page -> slot table plus an `Arc` of this allocator. Slots
+//!   free when the last view referencing them drops (retire, cancel,
+//!   disconnect), with double-free and use-after-free turned into loud
+//!   assertions instead of corruption.
+//! * **Copy-on-write prefix sharing.** When a request offloads a page
+//!   whose token prefix hash matches a page a *resident* request
+//!   already committed (same layer, same layout, same model
+//!   namespace), the new view aliases the existing slot instead of
+//!   writing a duplicate ([`PageAllocator::adopt`]); a later write to
+//!   an aliased page materializes a private copy first
+//!   ([`PageAllocator::make_unique`]), so a shared page is never
+//!   mutated in place. Registrations die with the slot: sharing is
+//!   only ever against pages that are still alive. Keys are 128-bit
+//!   double-chain hashes (FNV-1a + a splitmix-style mixer over the
+//!   same token stream): not cryptographic, but aliasing the wrong
+//!   page requires colliding two structurally different chains at
+//!   once; exact token-block verification is the escalation path if
+//!   the cache is ever exposed to adversarial multi-tenant prompts.
+//! * **A capacity ledger** for admission control. The scheduler charges
+//!   a request's worst-case page footprint ([`worst_case_pages`])
+//!   before admitting it ([`PageAllocator::try_reserve`]); when the
+//!   pool cannot cover the footprint the request *queues* instead of
+//!   OOMing mid-decode, and resumes when a finish/cancel releases its
+//!   reservation. A **GPU-budget ledger** tracks the device-side bytes
+//!   (budget cache + summaries + select slabs) charged by live
+//!   `RequestKv`s the same way.
+//!
+//! # Concurrency
+//!
+//! The transfer half of a layer (select slots + `LayerPool` view) is
+//! checked out to the background recall worker while the engine
+//! computes other layers, so slot reads happen off the engine thread.
+//! All slab state sits behind one internal mutex; reads and writes copy
+//! through short critical sections (`read_slot` / `write_slot`), and no
+//! allocator method calls back out while holding the lock.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::ModelConfig;
+use crate::kvcache::pool::Layout;
+
+/// Handle to one allocated page within a layer slab.
+pub type Slot = u32;
+
+/// Outcome of charging a request's footprint against the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// Footprint reserved; the request may start.
+    Admit,
+    /// The pool cannot cover the footprint right now; keep the request
+    /// queued and retry once running requests free pages.
+    Wait,
+    /// The footprint exceeds the whole pool; the request can never run.
+    Never,
+}
+
+/// Live gauges of the shared pool (surfaced on `/metrics` and in
+/// `EngineStats`).
+#[derive(Debug, Clone, Default)]
+pub struct KvPoolStats {
+    /// Configured capacity in pages across all layers (0 = unbounded).
+    pub pages_capacity: u64,
+    /// Distinct allocated slots across all layers (shared pages counted
+    /// once, process-wide).
+    pub pages_used: u64,
+    /// High-water mark of `pages_used`.
+    pub pages_peak: u64,
+    /// Slots currently referenced by two or more views.
+    pub pages_shared: u64,
+    /// Pages reserved by admitted requests (worst-case footprints).
+    pub pages_reserved: u64,
+    /// Offloads satisfied by aliasing an already-resident page.
+    pub prefix_hits: u64,
+    /// Bytes of allocated CPU slab pages (distinct slots only).
+    pub cpu_bytes_used: u64,
+    /// GPU-side bytes charged by live `RequestKv`s.
+    pub gpu_bytes_used: u64,
+}
+
+/// FNV-1a over one i32 token — half of the incremental prefix hash
+/// chained by `RequestKv::feed_tokens`.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Seed of the second, independent chain (splitmix-style mixer). Prefix
+/// keys are the 128-bit concatenation of both chains: neither is
+/// cryptographic, but a page-aliasing collision must now defeat two
+/// structurally different mixers simultaneously over the same token
+/// stream, and accidental collisions are out at ~2^64 birthday bound.
+pub const MIX2_SEED: u64 = 0x6a09_e667_f3bc_c909;
+
+#[inline]
+pub fn fnv1a_i32(state: u64, tok: i32) -> u64 {
+    let mut h = state;
+    for b in tok.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The second chain: splitmix64 finalizer over state xor token.
+#[inline]
+pub fn mix2_i32(state: u64, tok: i32) -> u64 {
+    let mut z = state ^ (tok as u32 as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Fold both chain states into the 128-bit prefix key.
+#[inline]
+pub fn fold_key(fnv: u64, mix: u64) -> u128 {
+    ((fnv as u128) << 64) | (mix as u128)
+}
+
+/// Worst-case distinct pool pages a request can offload across all
+/// layers: every completed page of `prompt + max_new` tokens (clamped
+/// to the model context), per layer. The admission charge.
+pub fn worst_case_pages(cfg: &ModelConfig, total_tokens: usize) -> u64 {
+    let toks = total_tokens.min(cfg.max_context).max(1);
+    (cfg.n_layers as u64) * (toks.div_ceil(cfg.page_size) as u64)
+}
+
+/// Prefix-cache key: 128-bit token-stream hash qualified by layer and
+/// page layout (an HND page and an NHD page are different byte
+/// patterns). The allocator namespace (model identity) is mixed into
+/// `hash`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PrefixKey {
+    layer: u32,
+    hnd: bool,
+    hash: u128,
+}
+
+struct LayerSlab {
+    /// Page data, `slots * page_elems` elements, grown on demand.
+    data: Vec<f32>,
+    refcnt: Vec<u32>,
+    written: Vec<bool>,
+    /// Prefix key registered for a slot (reverse index for cleanup).
+    key: Vec<Option<PrefixKey>>,
+    free: Vec<Slot>,
+}
+
+impl LayerSlab {
+    fn new() -> LayerSlab {
+        LayerSlab {
+            data: Vec::new(),
+            refcnt: Vec::new(),
+            written: Vec::new(),
+            key: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+}
+
+struct Inner {
+    slabs: Vec<LayerSlab>,
+    prefix: HashMap<PrefixKey, Slot>,
+    used: u64,
+    peak_used: u64,
+    shared: u64,
+    prefix_hits: u64,
+    reservations: HashMap<u64, u64>,
+    reserved: u64,
+    gpu_used: u64,
+}
+
+impl Inner {
+    fn alloc(&mut self, layer: usize, page_elems: usize) -> Slot {
+        let slab = &mut self.slabs[layer];
+        let slot = match slab.free.pop() {
+            Some(s) => s,
+            None => {
+                let s = slab.refcnt.len() as Slot;
+                slab.data.resize((s as usize + 1) * page_elems, 0.0);
+                slab.refcnt.push(0);
+                slab.written.push(false);
+                slab.key.push(None);
+                s
+            }
+        };
+        let i = slot as usize;
+        assert_eq!(slab.refcnt[i], 0, "allocating a live slot {} (layer {})", slot, layer);
+        slab.refcnt[i] = 1;
+        slab.written[i] = false;
+        slab.key[i] = None;
+        self.used += 1;
+        self.peak_used = self.peak_used.max(self.used);
+        slot
+    }
+
+    fn retain(&mut self, layer: usize, slot: Slot) {
+        let r = &mut self.slabs[layer].refcnt[slot as usize];
+        assert!(*r > 0, "retain of a free slot {} (layer {})", slot, layer);
+        *r += 1;
+        if *r == 2 {
+            self.shared += 1;
+        }
+    }
+
+    fn release(&mut self, layer: usize, slot: Slot) {
+        let slab = &mut self.slabs[layer];
+        let i = slot as usize;
+        assert!(slab.refcnt[i] > 0, "double free of slot {} (layer {})", slot, layer);
+        slab.refcnt[i] -= 1;
+        if slab.refcnt[i] == 1 {
+            self.shared -= 1;
+        }
+        if slab.refcnt[i] == 0 {
+            slab.written[i] = false;
+            if let Some(k) = slab.key[i].take() {
+                if self.prefix.get(&k) == Some(&slot) {
+                    self.prefix.remove(&k);
+                }
+            }
+            slab.free.push(slot);
+            self.used -= 1;
+        }
+    }
+
+    /// CoW: return a slot holding the same bytes that is safe to write
+    /// (refcount 1). Aliased slots get a private copy; a page that is
+    /// already private only sheds its stale prefix registration (its
+    /// content is about to change).
+    fn make_unique(&mut self, layer: usize, slot: Slot, page_elems: usize) -> Slot {
+        let i = slot as usize;
+        if self.slabs[layer].refcnt[i] == 1 {
+            if let Some(k) = self.slabs[layer].key[i].take() {
+                if self.prefix.get(&k) == Some(&slot) {
+                    self.prefix.remove(&k);
+                }
+            }
+            return slot;
+        }
+        let fresh = self.alloc(layer, page_elems);
+        let slab = &mut self.slabs[layer];
+        let src = i * page_elems;
+        slab.data.copy_within(src..src + page_elems, fresh as usize * page_elems);
+        slab.written[fresh as usize] = slab.written[i];
+        self.release(layer, slot);
+        fresh
+    }
+}
+
+/// The shared allocator. Cheap to clone via `Arc`; `Send + Sync` so
+/// `LayerPool` views travel to the recall worker inside `LayerXfer`.
+pub struct PageAllocator {
+    pub n_layers: usize,
+    pub n_kv: usize,
+    pub page_size: usize,
+    pub d_head: usize,
+    /// Elements of one page across kv heads, K+V planes together.
+    pub page_elems: usize,
+    /// Aggregate capacity in pages across all layers (0 = unbounded).
+    pub capacity_pages: u64,
+    sharing: bool,
+    namespace: u64,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for PageAllocator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("PageAllocator")
+            .field("n_layers", &self.n_layers)
+            .field("page_elems", &self.page_elems)
+            .field("capacity_pages", &self.capacity_pages)
+            .field("sharing", &self.sharing)
+            .field("pages_used", &s.pages_used)
+            .finish()
+    }
+}
+
+impl PageAllocator {
+    pub fn new(
+        n_layers: usize,
+        n_kv: usize,
+        page_size: usize,
+        d_head: usize,
+        capacity_pages: u64,
+        sharing: bool,
+        namespace: u64,
+    ) -> Arc<PageAllocator> {
+        Arc::new(PageAllocator {
+            n_layers,
+            n_kv,
+            page_size,
+            d_head,
+            page_elems: n_kv * 2 * page_size * d_head,
+            capacity_pages,
+            sharing,
+            namespace,
+            inner: Mutex::new(Inner {
+                slabs: (0..n_layers).map(|_| LayerSlab::new()).collect(),
+                prefix: HashMap::new(),
+                used: 0,
+                peak_used: 0,
+                shared: 0,
+                prefix_hits: 0,
+                reservations: HashMap::new(),
+                reserved: 0,
+                gpu_used: 0,
+            }),
+        })
+    }
+
+    /// Allocator for one model config, with the namespace derived from
+    /// its identity so prefix keys never collide across models.
+    pub fn for_model(
+        cfg: &ModelConfig,
+        capacity_pages: u64,
+        sharing: bool,
+    ) -> Arc<PageAllocator> {
+        let mut ns = FNV_OFFSET;
+        for b in cfg.name.bytes() {
+            ns = fnv1a_i32(ns, b as i32);
+        }
+        for v in [cfg.n_layers, cfg.n_kv, cfg.d_head, cfg.page_size, cfg.max_context] {
+            ns = fnv1a_i32(ns, v as i32);
+        }
+        PageAllocator::new(
+            cfg.n_layers,
+            cfg.n_kv,
+            cfg.page_size,
+            cfg.d_head,
+            capacity_pages,
+            sharing,
+            ns,
+        )
+    }
+
+    /// Is copy-on-write prefix sharing enabled on this allocator?
+    pub fn sharing(&self) -> bool {
+        self.sharing
+    }
+
+    /// Bytes of one page (all kv heads, K+V).
+    pub fn page_bytes(&self) -> usize {
+        self.page_elems * 4
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("kv page allocator poisoned")
+    }
+
+    fn prefix_key(&self, layer: usize, layout: Layout, hash: u128) -> PrefixKey {
+        let ns = fold_key(self.namespace, self.namespace.rotate_left(17));
+        PrefixKey { layer: layer as u32, hnd: matches!(layout, Layout::Hnd), hash: hash ^ ns }
+    }
+
+    // ------------------------------------------------------------------
+    // Slot lifecycle (used by LayerPool views)
+    // ------------------------------------------------------------------
+
+    pub(crate) fn alloc_slot(&self, layer: usize) -> Slot {
+        self.lock().alloc(layer, self.page_elems)
+    }
+
+    pub(crate) fn release_slot(&self, layer: usize, slot: Slot) {
+        self.lock().release(layer, slot);
+    }
+
+    pub(crate) fn make_unique(&self, layer: usize, slot: Slot) -> Slot {
+        self.lock().make_unique(layer, slot, self.page_elems)
+    }
+
+    pub(crate) fn slot_written(&self, layer: usize, slot: Slot) -> bool {
+        self.lock().slabs[layer].written[slot as usize]
+    }
+
+    pub(crate) fn set_written(&self, layer: usize, slot: Slot) {
+        self.lock().slabs[layer].written[slot as usize] = true;
+    }
+
+    /// Read a slot's page bytes under the lock.
+    pub(crate) fn read_slot<R>(&self, layer: usize, slot: Slot, f: impl FnOnce(&[f32]) -> R) -> R {
+        let inner = self.lock();
+        let base = slot as usize * self.page_elems;
+        f(&inner.slabs[layer].data[base..base + self.page_elems])
+    }
+
+    /// Write a slot's page bytes under the lock. The slot must be
+    /// private (`make_unique` first): writing a shared slot would leak
+    /// through every alias.
+    pub(crate) fn write_slot<R>(
+        &self,
+        layer: usize,
+        slot: Slot,
+        f: impl FnOnce(&mut [f32]) -> R,
+    ) -> R {
+        let mut inner = self.lock();
+        assert_eq!(
+            inner.slabs[layer].refcnt[slot as usize],
+            1,
+            "writing a shared slot {} (layer {}) — make_unique first",
+            slot,
+            layer
+        );
+        let base = slot as usize * self.page_elems;
+        f(&mut inner.slabs[layer].data[base..base + self.page_elems])
+    }
+
+    // ------------------------------------------------------------------
+    // Prefix sharing
+    // ------------------------------------------------------------------
+
+    /// Alias a committed page whose prefix key matches, bumping its
+    /// refcount. `None` when sharing is off or no resident match.
+    pub(crate) fn adopt(&self, layer: usize, layout: Layout, hash: u128) -> Option<Slot> {
+        if !self.sharing {
+            return None;
+        }
+        let key = self.prefix_key(layer, layout, hash);
+        let mut inner = self.lock();
+        let slot = *inner.prefix.get(&key)?;
+        if !inner.slabs[layer].written[slot as usize] {
+            return None;
+        }
+        inner.retain(layer, slot);
+        inner.prefix_hits += 1;
+        Some(slot)
+    }
+
+    /// Register a freshly written page under its prefix key (first
+    /// writer wins; the registration dies with the slot).
+    pub(crate) fn register_prefix(&self, layer: usize, layout: Layout, hash: u128, slot: Slot) {
+        if !self.sharing {
+            return;
+        }
+        let key = self.prefix_key(layer, layout, hash);
+        let mut guard = self.lock();
+        // deref once so the map entry and the slab reverse-index can be
+        // borrowed as disjoint fields
+        let inner = &mut *guard;
+        if let Entry::Vacant(e) = inner.prefix.entry(key) {
+            e.insert(slot);
+            inner.slabs[layer].key[slot as usize] = Some(key);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Admission ledger
+    // ------------------------------------------------------------------
+
+    /// Charge `pages` (a worst-case footprint) against the pool for
+    /// request `id`. `Wait` leaves no reservation behind; `Admit` must
+    /// be paired with [`PageAllocator::release_reservation`].
+    pub fn try_reserve(&self, id: u64, pages: u64) -> AdmitDecision {
+        let mut inner = self.lock();
+        if self.capacity_pages > 0 {
+            if pages > self.capacity_pages {
+                return AdmitDecision::Never;
+            }
+            if inner.reserved + pages > self.capacity_pages {
+                return AdmitDecision::Wait;
+            }
+        }
+        if let Some(old) = inner.reservations.insert(id, pages) {
+            inner.reserved -= old;
+        }
+        inner.reserved += pages;
+        AdmitDecision::Admit
+    }
+
+    /// Release request `id`'s reservation (idempotent).
+    pub fn release_reservation(&self, id: u64) {
+        let mut inner = self.lock();
+        if let Some(pages) = inner.reservations.remove(&id) {
+            inner.reserved -= pages;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // GPU-budget ledger
+    // ------------------------------------------------------------------
+
+    pub fn charge_gpu(&self, bytes: usize) {
+        self.lock().gpu_used += bytes as u64;
+    }
+
+    pub fn release_gpu(&self, bytes: usize) {
+        let mut inner = self.lock();
+        inner.gpu_used = inner.gpu_used.saturating_sub(bytes as u64);
+    }
+
+    /// Snapshot of the pool gauges.
+    pub fn stats(&self) -> KvPoolStats {
+        let inner = self.lock();
+        KvPoolStats {
+            pages_capacity: self.capacity_pages,
+            pages_used: inner.used,
+            pages_peak: inner.peak_used,
+            pages_shared: inner.shared,
+            pages_reserved: inner.reserved,
+            prefix_hits: inner.prefix_hits,
+            cpu_bytes_used: inner.used * self.page_bytes() as u64,
+            gpu_bytes_used: inner.gpu_used,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_alloc(capacity: u64, sharing: bool) -> Arc<PageAllocator> {
+        PageAllocator::new(2, 2, 4, 8, capacity, sharing, 0xABCD)
+    }
+
+    #[test]
+    fn slots_recycle_and_stats_track_usage() {
+        let a = tiny_alloc(0, false);
+        let s0 = a.alloc_slot(0);
+        let s1 = a.alloc_slot(0);
+        let s2 = a.alloc_slot(1);
+        assert_eq!(a.stats().pages_used, 3);
+        a.release_slot(0, s0);
+        assert_eq!(a.stats().pages_used, 2);
+        let s3 = a.alloc_slot(0);
+        assert_eq!(s3, s0, "freed slot is recycled");
+        a.release_slot(0, s1);
+        a.release_slot(0, s3);
+        a.release_slot(1, s2);
+        let st = a.stats();
+        assert_eq!(st.pages_used, 0);
+        assert_eq!(st.pages_peak, 3);
+        assert_eq!(st.cpu_bytes_used, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_is_loud() {
+        let a = tiny_alloc(0, false);
+        let s = a.alloc_slot(0);
+        a.release_slot(0, s);
+        a.release_slot(0, s);
+    }
+
+    #[test]
+    fn cow_gives_a_private_copy() {
+        let a = tiny_alloc(0, true);
+        let s = a.alloc_slot(0);
+        a.write_slot(0, s, |buf| buf.iter_mut().for_each(|x| *x = 7.0));
+        a.set_written(0, s);
+        a.register_prefix(0, Layout::Hnd, 42, s);
+        let adopted = a.adopt(0, Layout::Hnd, 42).expect("registered page adopts");
+        assert_eq!(adopted, s);
+        assert_eq!(a.stats().pages_shared, 1);
+        // write through the adopting view: must materialize privately
+        let fresh = a.make_unique(0, adopted);
+        assert_ne!(fresh, s, "shared slot must not be written in place");
+        a.write_slot(0, fresh, |buf| buf.iter_mut().for_each(|x| *x = -1.0));
+        a.read_slot(0, s, |buf| assert!(buf.iter().all(|&x| x == 7.0), "original mutated"));
+        a.read_slot(0, fresh, |buf| assert!(buf.iter().all(|&x| x == -1.0)));
+        assert_eq!(a.stats().pages_shared, 0);
+        a.release_slot(0, fresh);
+        a.release_slot(0, s);
+        assert_eq!(a.stats().pages_used, 0);
+        // the registration died with the slot
+        assert!(a.adopt(0, Layout::Hnd, 42).is_none());
+    }
+
+    #[test]
+    fn adopt_respects_layer_layout_and_namespace() {
+        let a = tiny_alloc(0, true);
+        let s = a.alloc_slot(0);
+        a.set_written(0, s);
+        a.register_prefix(0, Layout::Hnd, 9, s);
+        assert!(a.adopt(1, Layout::Hnd, 9).is_none(), "different layer");
+        assert!(a.adopt(0, Layout::Nhd, 9).is_none(), "different layout");
+        assert!(a.adopt(0, Layout::Hnd, 10).is_none(), "different hash");
+        let got = a.adopt(0, Layout::Hnd, 9).unwrap();
+        a.release_slot(0, got);
+        a.release_slot(0, s);
+    }
+
+    #[test]
+    fn reservation_ledger_admits_waits_and_fails() {
+        let a = tiny_alloc(10, false);
+        assert_eq!(a.try_reserve(1, 6), AdmitDecision::Admit);
+        assert_eq!(a.try_reserve(2, 6), AdmitDecision::Wait, "6+6 exceeds 10");
+        assert_eq!(a.try_reserve(3, 11), AdmitDecision::Never, "bigger than the pool");
+        a.release_reservation(1);
+        assert_eq!(a.try_reserve(2, 6), AdmitDecision::Admit, "resumes after a release");
+        a.release_reservation(2);
+        a.release_reservation(2); // idempotent
+        assert_eq!(a.stats().pages_reserved, 0);
+    }
+
+    #[test]
+    fn gpu_ledger_balances() {
+        let a = tiny_alloc(0, false);
+        a.charge_gpu(1000);
+        a.charge_gpu(500);
+        assert_eq!(a.stats().gpu_bytes_used, 1500);
+        a.release_gpu(1000);
+        a.release_gpu(500);
+        assert_eq!(a.stats().gpu_bytes_used, 0);
+    }
+
+    #[test]
+    fn worst_case_footprint_is_per_layer_page_count() {
+        let cfg = ModelConfig::llama31_8b();
+        // 100 tokens on page 32 -> 4 pages x 32 layers
+        assert_eq!(worst_case_pages(&cfg, 100), 4 * 32);
+        // clamped at the model context
+        assert_eq!(
+            worst_case_pages(&cfg, usize::MAX),
+            (cfg.max_context / cfg.page_size * cfg.n_layers) as u64
+        );
+    }
+}

@@ -1,35 +1,61 @@
 //! Paged KV-cache manager: GPU-resident budget cache (NHD) + CPU offload
 //! pool (HND for FreeKV, NHD for the layout ablation/baselines), page
-//! tables, and min/max page summaries.
+//! tables, and min/max page summaries — all CPU pages drawn from the
+//! shared refcounted [`PageAllocator`] (`kvcache::alloc`), which also
+//! provides copy-on-write prefix sharing and the capacity ledger the
+//! scheduler admits against.
 //!
 //! Ownership is split per layer into a compute half ([`GpuLayerCache`])
 //! that never leaves the engine thread, and a transfer half
-//! ([`LayerXfer`] = select slots + CPU pool) that can be checked out to
-//! the background recall worker (`transfer::pipeline`) while the engine
-//! computes other layers. While checked out, `LayerState::xfer` is
-//! `None`; the engine re-attaches it at the drain point before the next
-//! use of that layer's selection state.
+//! ([`LayerXfer`] = select slots + CPU pool view) that can be checked
+//! out to the background recall worker (`transfer::pipeline`) while the
+//! engine computes other layers. While checked out, `LayerState::xfer`
+//! is `None`; the engine re-attaches it at the drain point before the
+//! next use of that layer's selection state. The pool view is only a
+//! page table plus an `Arc` of the allocator, so checking it out moves
+//! no page data.
 
+pub mod alloc;
 pub mod gpu;
 pub mod pool;
+
+use std::sync::Arc;
 
 use crate::config::ModelConfig;
 use crate::transfer::TransferEngine;
 
+pub use self::alloc::{AdmitDecision, KvPoolStats, PageAllocator};
 pub use gpu::{CompletedPage, GpuLayerCache, SelectSlots};
 pub use pool::{Chunk, LayerPool, Layout};
 
 /// All KV state for one request across layers.
 pub struct RequestKv {
     pub layers: Vec<LayerState>,
-    pool_bytes_per_layer: usize,
     select_bytes_per_layer: usize,
+    alloc: Arc<PageAllocator>,
+    /// GPU-ledger charge taken at construction, released on drop.
+    gpu_charged: usize,
+    /// prefix sharing active on the allocator (cached).
+    sharing: bool,
+    page_size: usize,
+    /// two independent incremental chains over the token stream (FNV-1a
+    /// and a splitmix-style mixer) folded into 128-bit prefix keys...
+    hash_state: u64,
+    mix_state: u64,
+    hashed_tokens: usize,
+    /// ...snapshotted at every page boundary: `boundary_hashes[g]` keys
+    /// the page covering tokens `[0, (g+1)*page_size)`.
+    boundary_hashes: Vec<u128>,
 }
 
 pub struct LayerState {
     pub gpu: GpuLayerCache,
     /// Transfer half; `None` while checked out to the recall worker.
     xfer: Option<LayerXfer>,
+    /// Pool bytes snapshot taken when the transfer half was checked
+    /// out, so byte accounting stays answerable while it is in flight
+    /// (the worker only reads the pool; it never allocates pages).
+    cached_pool_bytes: usize,
 }
 
 /// The per-layer state the recall worker needs exclusive access to:
@@ -55,7 +81,9 @@ impl LayerState {
 
     /// Check the transfer half out (for handing to the recall worker).
     pub fn take_xfer(&mut self) -> LayerXfer {
-        self.xfer.take().expect("transfer half already checked out")
+        let x = self.xfer.take().expect("transfer half already checked out");
+        self.cached_pool_bytes = x.pool.bytes();
+        x
     }
 
     /// Re-attach the transfer half returned by the recall worker.
@@ -79,6 +107,15 @@ impl LayerState {
     /// Convenience read access to the CPU pool.
     pub fn pool(&self) -> &LayerPool {
         &self.xfer().pool
+    }
+
+    /// This layer's pool-page bytes, live when the transfer half is
+    /// attached, last-known while it is on the recall worker.
+    pub fn pool_bytes(&self) -> usize {
+        match &self.xfer {
+            Some(x) => x.pool.bytes(),
+            None => self.cached_pool_bytes,
+        }
     }
 }
 
@@ -104,9 +141,23 @@ pub fn apply_selection_parts(
 }
 
 impl RequestKv {
+    /// KV state over a private, unbounded allocator — the standalone
+    /// path (tests, single-request tools). Serving stacks share one
+    /// allocator across requests via [`RequestKv::with_alloc`].
     pub fn new(cfg: &ModelConfig, cpu_layout: Layout) -> RequestKv {
+        RequestKv::with_alloc(cfg, cpu_layout, PageAllocator::for_model(cfg, 0, false))
+    }
+
+    /// KV state drawing CPU pages from a shared allocator. Charges the
+    /// GPU-side bytes (budget cache + summaries + select slabs) to the
+    /// allocator's GPU ledger; the charge releases on drop.
+    pub fn with_alloc(
+        cfg: &ModelConfig,
+        cpu_layout: Layout,
+        alloc: Arc<PageAllocator>,
+    ) -> RequestKv {
         let layers: Vec<LayerState> = (0..cfg.n_layers)
-            .map(|_| {
+            .map(|l| {
                 let gpu = GpuLayerCache::new(
                     cfg.n_kv,
                     cfg.d_head,
@@ -117,19 +168,71 @@ impl RequestKv {
                     cfg.n_pages_max(),
                 );
                 let select = gpu.new_select_slots();
-                let pool = LayerPool::new(
+                let pool = LayerPool::with_alloc(
                     cpu_layout,
                     cfg.n_pages_max(),
                     cfg.n_kv,
                     cfg.page_size,
                     cfg.d_head,
+                    alloc.clone(),
+                    l,
                 );
-                LayerState { gpu, xfer: Some(LayerXfer { select, pool }) }
+                LayerState { gpu, xfer: Some(LayerXfer { select, pool }), cached_pool_bytes: 0 }
             })
             .collect();
-        let pool_bytes_per_layer = layers.first().map_or(0, |l| l.pool().bytes());
         let select_bytes_per_layer = layers.first().map_or(0, |l| l.select().bytes());
-        RequestKv { layers, pool_bytes_per_layer, select_bytes_per_layer }
+        let gpu_charged = layers.iter().map(|l| l.gpu.gpu_bytes()).sum::<usize>()
+            + layers.len() * select_bytes_per_layer;
+        alloc.charge_gpu(gpu_charged);
+        let sharing = alloc.sharing();
+        RequestKv {
+            layers,
+            select_bytes_per_layer,
+            alloc,
+            gpu_charged,
+            sharing,
+            page_size: cfg.page_size,
+            hash_state: self::alloc::FNV_OFFSET,
+            mix_state: self::alloc::MIX2_SEED,
+            hashed_tokens: 0,
+            boundary_hashes: Vec::new(),
+        }
+    }
+
+    /// The allocator backing this request's CPU pages.
+    pub fn allocator(&self) -> &Arc<PageAllocator> {
+        &self.alloc
+    }
+
+    /// Feed the request's token stream for prefix keying (no-op unless
+    /// the allocator has sharing enabled). Call with the tokens known
+    /// so far before appending their K/V; only the unseen suffix is
+    /// hashed, and the chain state is snapshotted at page boundaries so
+    /// each completed page gets the hash of exactly the tokens it
+    /// covers.
+    pub fn feed_tokens(&mut self, tokens: &[i32]) {
+        if !self.sharing {
+            return;
+        }
+        while self.hashed_tokens < tokens.len() {
+            let tok = tokens[self.hashed_tokens];
+            self.hash_state = self::alloc::fnv1a_i32(self.hash_state, tok);
+            self.mix_state = self::alloc::mix2_i32(self.mix_state, tok);
+            self.hashed_tokens += 1;
+            if self.hashed_tokens % self.page_size == 0 {
+                self.boundary_hashes.push(self::alloc::fold_key(self.hash_state, self.mix_state));
+            }
+        }
+    }
+
+    /// Prefix key of logical page `page`, if sharing is on and the
+    /// covering tokens were fed.
+    pub fn page_key(&self, page: usize) -> Option<u128> {
+        if self.sharing {
+            self.boundary_hashes.get(page).copied()
+        } else {
+            None
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -142,7 +245,8 @@ impl RequestKv {
         self.len() == 0
     }
 
-    /// Append a token's K/V to a layer, offloading the page if completed.
+    /// Append a token's K/V to a layer, offloading the page if completed
+    /// (aliasing a resident prefix-matched page when sharing allows).
     pub fn append(
         &mut self,
         layer: usize,
@@ -150,10 +254,27 @@ impl RequestKv {
         v_new: &[f32],
         engine: &mut TransferEngine,
     ) {
-        let st = &mut self.layers[layer];
-        if let Some(cp) = st.gpu.append(k_new, v_new) {
+        if let Some(cp) = self.layers[layer].gpu.append(k_new, v_new) {
+            let key = self.page_key(cp.page);
+            let st = &mut self.layers[layer];
             let x = st.xfer.as_mut().expect("append while transfer half is on the recall worker");
-            engine.offload_page(&cp, &mut x.pool);
+            engine.offload_page_keyed(&cp, &mut x.pool, key);
+        }
+    }
+
+    /// Offload a batch of completed pages (the prefill path), keyed for
+    /// prefix sharing when the covering tokens were fed.
+    pub fn offload_completed(
+        &mut self,
+        layer: usize,
+        completed: &[CompletedPage],
+        engine: &mut TransferEngine,
+    ) {
+        let keys: Vec<Option<u128>> = completed.iter().map(|cp| self.page_key(cp.page)).collect();
+        let st = &mut self.layers[layer];
+        let x = st.xfer.as_mut().expect("offload while transfer half is on the recall worker");
+        for (cp, key) in completed.iter().zip(keys) {
+            engine.offload_page_keyed(cp, &mut x.pool, key);
         }
     }
 
@@ -171,16 +292,26 @@ impl RequestKv {
         apply_selection_parts(&mut x.select, &x.pool, head, pages, engine)
     }
 
-    /// Total host bytes of the CPU pools (the offloaded cache). Derived
-    /// from geometry so it stays answerable while halves are in flight.
+    /// Host bytes of CPU pool pages this request references — actual
+    /// allocated pages, not the old dense `max_context` reservation.
+    /// Shared pages count fully for each referencing request here; the
+    /// process-wide figure (shared counted once) is
+    /// `PageAllocator::stats().cpu_bytes_used`. Stays answerable while
+    /// transfer halves are in flight (last-known snapshot per layer).
     pub fn cpu_bytes(&self) -> usize {
-        self.layers.len() * self.pool_bytes_per_layer
+        self.layers.iter().map(|l| l.pool_bytes()).sum()
     }
 
     /// Total bytes of GPU-resident state (budget cache + summaries).
     pub fn gpu_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.gpu.gpu_bytes()).sum::<usize>()
             + self.layers.len() * self.select_bytes_per_layer
+    }
+}
+
+impl Drop for RequestKv {
+    fn drop(&mut self) {
+        self.alloc.release_gpu(self.gpu_charged);
     }
 }
 
@@ -232,21 +363,84 @@ mod tests {
         let n2 = kv.apply_selection(0, 1, &[1, 2], &mut eng);
         assert_eq!(n2, 0);
         assert!(kv.cpu_bytes() > 0 && kv.gpu_bytes() > 0);
+        // byte accounting reflects offloaded pages, not max_context
+        let page_bytes = kv.allocator().page_bytes();
+        assert_eq!(kv.cpu_bytes(), 2 * 5 * page_bytes);
     }
 
     #[test]
     fn transfer_half_checkout_roundtrip() {
         let cfg = tiny_cfg();
         let mut kv = RequestKv::new(&cfg, Layout::Hnd);
+        let mut eng = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        let mut rng = Rng::new(9);
+        // offload one page so byte accounting has something to report
+        for _ in 0..cfg.page_size {
+            for l in 0..cfg.n_layers {
+                let k: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                kv.append(l, &k.clone(), &k, &mut eng);
+            }
+        }
         assert!(!kv.layers[0].in_flight());
         let cpu_bytes = kv.cpu_bytes();
+        assert!(cpu_bytes > 0);
         let x = kv.layers[0].take_xfer();
         assert!(kv.layers[0].in_flight());
         // length and byte accounting stay answerable while checked out
-        assert_eq!(kv.len(), 0);
+        assert_eq!(kv.len(), cfg.page_size);
         assert_eq!(kv.cpu_bytes(), cpu_bytes);
         kv.layers[0].put_xfer(x);
         assert!(!kv.layers[0].in_flight());
         assert_eq!(kv.layers[0].select().selected(0).len(), cfg.select_pages);
+    }
+
+    #[test]
+    fn gpu_ledger_charges_and_releases_with_request_lifetime() {
+        let cfg = tiny_cfg();
+        let alloc = PageAllocator::for_model(&cfg, 0, false);
+        assert_eq!(alloc.stats().gpu_bytes_used, 0);
+        let kv = RequestKv::with_alloc(&cfg, Layout::Hnd, alloc.clone());
+        let charged = kv.gpu_bytes() as u64;
+        assert!(charged > 0);
+        assert_eq!(alloc.stats().gpu_bytes_used, charged);
+        let kv2 = RequestKv::with_alloc(&cfg, Layout::Hnd, alloc.clone());
+        assert_eq!(alloc.stats().gpu_bytes_used, charged + kv2.gpu_bytes() as u64);
+        drop(kv);
+        drop(kv2);
+        assert_eq!(alloc.stats().gpu_bytes_used, 0);
+    }
+
+    #[test]
+    fn shared_prefix_appends_alias_pool_pages() {
+        let cfg = tiny_cfg();
+        let alloc = PageAllocator::for_model(&cfg, 0, true);
+        let tokens: Vec<i32> = (0..12).map(|t| t % 7).collect();
+        let kv_row = vec![0.25f32; cfg.n_kv * cfg.d_head];
+        let fill = |kv: &mut RequestKv, eng: &mut TransferEngine| {
+            for t in 0..tokens.len() {
+                kv.feed_tokens(&tokens[..t + 1]);
+                for l in 0..cfg.n_layers {
+                    kv.append(l, &kv_row, &kv_row, eng);
+                }
+            }
+        };
+        let mut a = RequestKv::with_alloc(&cfg, Layout::Hnd, alloc.clone());
+        let mut ea = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        fill(&mut a, &mut ea);
+        // 12 tokens = 3 pages x 2 layers
+        assert_eq!(alloc.stats().pages_used, 6);
+        assert_eq!(ea.counters.prefix_hits, 0);
+        let mut b = RequestKv::with_alloc(&cfg, Layout::Hnd, alloc.clone());
+        let mut eb = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        fill(&mut b, &mut eb);
+        // identical token stream: every page of b aliases a's
+        assert_eq!(alloc.stats().pages_used, 6, "no new physical pages");
+        assert_eq!(alloc.stats().pages_shared, 6);
+        assert_eq!(eb.counters.prefix_hits, 6);
+        assert_eq!(b.cpu_bytes(), a.cpu_bytes());
+        drop(a);
+        assert_eq!(alloc.stats().pages_used, 6, "b keeps the pages alive");
+        drop(b);
+        assert_eq!(alloc.stats().pages_used, 0);
     }
 }

@@ -1,36 +1,60 @@
-//! CPU-side KV page pool (the offload target).
+//! CPU-side KV page pool (the offload target) — a *view* over the
+//! shared page allocator (`kvcache::alloc`).
 //!
-//! The paper's hybrid-layout design (§4.2): FreeKV keeps the *CPU* pool in
-//! HND layout, `(n_page, n_kv, 2, p, d)`, so recalling one page for one kv
-//! head moves a single contiguous `2*p*d` chunk; the mainstream NHD layout
-//! `(n_page, p, n_kv, d)` fragments the same recall into `2*p` chunks of
-//! `d` elements. Both layouts are implemented so the ablation (Fig. 9) and
-//! the baselines can run on their native layout.
+//! The paper's hybrid-layout design (§4.2): FreeKV keeps the *CPU* pool
+//! in HND layout, `(n_kv, 2, p, d)` per page, so recalling one page for
+//! one kv head moves a single contiguous `2*p*d` chunk; the mainstream
+//! NHD layout `([K|V], p, n_kv, d)` per page fragments the same recall
+//! into `2*p` chunks of `d` elements. Both layouts are implemented so
+//! the ablation (Fig. 9) and the baselines can run on their native
+//! layout. The layout governs element order *within* a page; pages
+//! themselves are refcounted slots handed out by the allocator, so
+//! memory scales with pages actually offloaded (not `max_context`),
+//! identical prompt prefixes can alias one physical page across
+//! requests, and everything frees when the last view drops.
 
-/// Memory organization of the pool.
+use std::sync::Arc;
+
+use crate::kvcache::alloc::{PageAllocator, Slot};
+
+/// Memory organization of a page.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Layout {
-    /// `(page, p, n_kv, d)` per K/V plane — natural projection output.
+    /// `([K|V], p, n_kv, d)` per page — natural projection output.
     Nhd,
-    /// `(page, n_kv, [K|V], p, d)` — FreeKV's CPU layout.
+    /// `(n_kv, [K|V], p, d)` per page — FreeKV's CPU layout.
     Hnd,
 }
 
-/// One layer's pool. Pages are dense in [0, n_pages).
-#[derive(Debug)]
+/// One layer's pool view: logical pages in [0, n_pages) mapped to
+/// allocator slots on demand.
 pub struct LayerPool {
     pub layout: Layout,
     pub n_pages: usize,
     pub n_kv: usize,
     pub p: usize,
     pub d: usize,
-    /// K and V for NHD (two planes); single slab for HND.
-    data: Vec<f32>,
-    /// per-page write flag.
-    written: Vec<bool>,
+    alloc: Arc<PageAllocator>,
+    layer: usize,
+    /// logical page -> allocator slot (None = never offloaded).
+    table: Vec<Option<Slot>>,
+    /// occupied table entries, maintained incrementally so byte
+    /// accounting is O(1) on the per-step checkout path.
+    held: usize,
 }
 
-/// A contiguous source range within the pool (for chunked transfer).
+impl std::fmt::Debug for LayerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LayerPool")
+            .field("layout", &self.layout)
+            .field("n_pages", &self.n_pages)
+            .field("held_pages", &self.held_pages())
+            .finish()
+    }
+}
+
+/// A contiguous source range within one page (offsets are
+/// page-relative; pair with the page id for [`LayerPool::copy_chunks`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Chunk {
     pub offset: usize,
@@ -38,78 +62,151 @@ pub struct Chunk {
 }
 
 impl LayerPool {
+    /// Standalone pool backed by its own private, unbounded allocator
+    /// (tests, benches, single-request tools). Serving stacks share one
+    /// allocator across requests via [`LayerPool::with_alloc`].
     pub fn new(layout: Layout, n_pages: usize, n_kv: usize, p: usize, d: usize) -> LayerPool {
-        LayerPool {
-            layout,
-            n_pages,
-            n_kv,
-            p,
-            d,
-            data: vec![0.0; n_pages * n_kv * 2 * p * d],
-            written: vec![false; n_pages],
-        }
+        let alloc = PageAllocator::new(1, n_kv, p, d, 0, false, 0);
+        LayerPool::with_alloc(layout, n_pages, n_kv, p, d, alloc, 0)
     }
 
+    /// View over `layer` of a shared allocator.
+    pub fn with_alloc(
+        layout: Layout,
+        n_pages: usize,
+        n_kv: usize,
+        p: usize,
+        d: usize,
+        alloc: Arc<PageAllocator>,
+        layer: usize,
+    ) -> LayerPool {
+        assert_eq!(
+            alloc.page_elems,
+            n_kv * 2 * p * d,
+            "allocator geometry does not match the pool view"
+        );
+        assert!(layer < alloc.n_layers, "layer {} outside allocator", layer);
+        LayerPool { layout, n_pages, n_kv, p, d, alloc, layer, table: vec![None; n_pages], held: 0 }
+    }
+
+    /// Logical pages currently holding a slot reference.
+    pub fn held_pages(&self) -> usize {
+        debug_assert_eq!(self.held, self.table.iter().flatten().count());
+        self.held
+    }
+
+    /// Bytes of pool pages this view references. Shared pages count
+    /// fully for each holder here; the process-wide figure (shared
+    /// counted once) is `PageAllocator::stats().cpu_bytes_used`.
     pub fn bytes(&self) -> usize {
-        self.data.len() * 4
+        self.held_pages() * self.alloc.page_bytes()
     }
 
     pub fn is_written(&self, page: usize) -> bool {
-        self.written[page]
+        self.table[page].map_or(false, |s| self.alloc.slot_written(self.layer, s))
     }
 
-    /// Flat offset of element (page, head, plane 0=K/1=V, tok, dim).
+    /// Flat page-relative offset of element (head, plane 0=K/1=V, tok, dim).
     #[inline]
-    fn off(&self, page: usize, head: usize, plane: usize, tok: usize, dim: usize) -> usize {
+    fn off(&self, head: usize, plane: usize, tok: usize, dim: usize) -> usize {
         match self.layout {
-            Layout::Hnd => {
-                (((page * self.n_kv + head) * 2 + plane) * self.p + tok) * self.d + dim
-            }
+            Layout::Hnd => ((head * 2 + plane) * self.p + tok) * self.d + dim,
             Layout::Nhd => {
-                // two NHD planes: K then V, each (page, p, n_kv, d)
-                let plane_size = self.n_pages * self.p * self.n_kv * self.d;
-                plane * plane_size + ((page * self.p + tok) * self.n_kv + head) * self.d + dim
+                // two NHD planes per page: K then V, each (p, n_kv, d)
+                plane * self.p * self.n_kv * self.d + (tok * self.n_kv + head) * self.d + dim
+            }
+        }
+    }
+
+    /// A slot this view may write: allocates on first touch, and
+    /// copy-on-writes a page that is aliased by another view (a shared
+    /// page is never mutated in place).
+    fn ensure_private_slot(&mut self, page: usize) -> Slot {
+        match self.table[page] {
+            Some(s) => {
+                let fresh = self.alloc.make_unique(self.layer, s);
+                self.table[page] = Some(fresh);
+                fresh
+            }
+            None => {
+                let s = self.alloc.alloc_slot(self.layer);
+                self.table[page] = Some(s);
+                self.held += 1;
+                s
             }
         }
     }
 
     /// Store one page given K/V in NHD token-major order
-    /// (`k[tok][head][dim]` flattened) — exactly what the GPU cache holds.
-    /// For HND this performs the offload-time transpose the paper
-    /// amortizes here rather than on the per-step decode path.
+    /// (`k[tok][head][dim]` flattened) — exactly what the GPU cache
+    /// holds. For HND this performs the offload-time transpose the
+    /// paper amortizes here rather than on the per-step decode path.
     pub fn write_page(&mut self, page: usize, k_nhd: &[f32], v_nhd: &[f32]) {
+        self.write_page_keyed(page, k_nhd, v_nhd, None);
+    }
+
+    /// `write_page` plus a prefix-cache registration: a later request
+    /// offloading a page with the same token-prefix hash aliases this
+    /// one instead of writing a duplicate ([`LayerPool::try_adopt`]).
+    pub fn write_page_keyed(
+        &mut self,
+        page: usize,
+        k_nhd: &[f32],
+        v_nhd: &[f32],
+        key: Option<u128>,
+    ) {
         let (p, m, d) = (self.p, self.n_kv, self.d);
         assert_eq!(k_nhd.len(), p * m * d);
         assert_eq!(v_nhd.len(), p * m * d);
-        for tok in 0..p {
-            for head in 0..m {
-                let src = (tok * m + head) * d;
-                let ko = self.off(page, head, 0, tok, 0);
-                self.data[ko..ko + d].copy_from_slice(&k_nhd[src..src + d]);
-                let vo = self.off(page, head, 1, tok, 0);
-                self.data[vo..vo + d].copy_from_slice(&v_nhd[src..src + d]);
+        let slot = self.ensure_private_slot(page);
+        self.alloc.write_slot(self.layer, slot, |buf| {
+            for tok in 0..p {
+                for head in 0..m {
+                    let src = (tok * m + head) * d;
+                    let ko = self.off(head, 0, tok, 0);
+                    buf[ko..ko + d].copy_from_slice(&k_nhd[src..src + d]);
+                    let vo = self.off(head, 1, tok, 0);
+                    buf[vo..vo + d].copy_from_slice(&v_nhd[src..src + d]);
+                }
             }
+        });
+        self.alloc.set_written(self.layer, slot);
+        if let Some(h) = key {
+            self.alloc.register_prefix(self.layer, self.layout, h, slot);
         }
-        self.written[page] = true;
+    }
+
+    /// Try to satisfy an offload by aliasing a resident page committed
+    /// under the same prefix key (refcounted; no bytes move). Returns
+    /// whether the adoption happened.
+    pub fn try_adopt(&mut self, page: usize, key: u128) -> bool {
+        match self.alloc.adopt(self.layer, self.layout, key) {
+            Some(slot) => {
+                match self.table[page].replace(slot) {
+                    Some(old) => self.alloc.release_slot(self.layer, old),
+                    None => self.held += 1,
+                }
+                true
+            }
+            None => false,
+        }
     }
 
     /// Contiguous chunks to move one (page, head) pair — the layout-
     /// dependent transfer plan whose chunk count drives recall cost.
-    pub fn recall_chunks(&self, page: usize, head: usize) -> Vec<Chunk> {
+    /// Offsets are relative to the page ([`LayerPool::copy_chunks`]).
+    pub fn recall_chunks(&self, _page: usize, head: usize) -> Vec<Chunk> {
         match self.layout {
             Layout::Hnd => {
                 // K and V adjacent: one chunk of 2*p*d.
-                vec![Chunk { offset: self.off(page, head, 0, 0, 0), len: 2 * self.p * self.d }]
+                vec![Chunk { offset: self.off(head, 0, 0, 0), len: 2 * self.p * self.d }]
             }
             Layout::Nhd => {
                 // p chunks of d per plane.
                 let mut out = Vec::with_capacity(2 * self.p);
                 for plane in 0..2 {
                     for tok in 0..self.p {
-                        out.push(Chunk {
-                            offset: self.off(page, head, plane, tok, 0),
-                            len: self.d,
-                        });
+                        out.push(Chunk { offset: self.off(head, plane, tok, 0), len: self.d });
                     }
                 }
                 out
@@ -117,25 +214,46 @@ impl LayerPool {
         }
     }
 
-    /// Raw read access for the transfer engine.
-    pub fn slice(&self, chunk: Chunk) -> &[f32] {
-        &self.data[chunk.offset..chunk.offset + chunk.len]
+    /// Stream `chunks` of `page` into `dst` back to back (the transfer
+    /// engine's "DMA" read). One lock acquisition per call; returns the
+    /// elements copied.
+    pub fn copy_chunks(&self, page: usize, chunks: &[Chunk], dst: &mut [f32]) -> usize {
+        let slot = self.table[page].expect("reading a page that was never offloaded");
+        self.alloc.read_slot(self.layer, slot, |buf| {
+            let mut off = 0usize;
+            for c in chunks {
+                dst[off..off + c.len].copy_from_slice(&buf[c.offset..c.offset + c.len]);
+                off += c.len;
+            }
+            off
+        })
     }
 
     /// Read one (page, head) pair back into NHD-slot order
-    /// (`[tok][dim]` for K then V), independent of layout — used by tests
-    /// and by the recall fallback path.
+    /// (`[tok][dim]` for K then V), independent of layout — used by
+    /// tests and by the recall fallback path.
     pub fn read_page_head(&self, page: usize, head: usize) -> (Vec<f32>, Vec<f32>) {
         let (p, d) = (self.p, self.d);
+        let slot = self.table[page].expect("reading a page that was never offloaded");
         let mut k = vec![0.0; p * d];
         let mut v = vec![0.0; p * d];
-        for tok in 0..p {
-            let ko = self.off(page, head, 0, tok, 0);
-            k[tok * d..(tok + 1) * d].copy_from_slice(&self.data[ko..ko + d]);
-            let vo = self.off(page, head, 1, tok, 0);
-            v[tok * d..(tok + 1) * d].copy_from_slice(&self.data[vo..vo + d]);
-        }
+        self.alloc.read_slot(self.layer, slot, |buf| {
+            for tok in 0..p {
+                let ko = self.off(head, 0, tok, 0);
+                k[tok * d..(tok + 1) * d].copy_from_slice(&buf[ko..ko + d]);
+                let vo = self.off(head, 1, tok, 0);
+                v[tok * d..(tok + 1) * d].copy_from_slice(&buf[vo..vo + d]);
+            }
+        });
         (k, v)
+    }
+}
+
+impl Drop for LayerPool {
+    fn drop(&mut self) {
+        for slot in self.table.iter().flatten() {
+            self.alloc.release_slot(self.layer, *slot);
+        }
     }
 }
 
@@ -195,8 +313,10 @@ mod tests {
         let v = fill(&mut rng, p * m * d);
         pool.write_page(1, &k, &v);
         for head in 0..m {
-            let c = pool.recall_chunks(1, head)[0];
-            let s = pool.slice(c);
+            let chunks = pool.recall_chunks(1, head);
+            assert_eq!(chunks.len(), 1, "HND is one contiguous chunk per head");
+            let mut s = vec![0.0f32; chunks[0].len];
+            pool.copy_chunks(1, &chunks, &mut s);
             // First p*d elems = K tokens in order, next p*d = V.
             for tok in 0..p {
                 for dim in 0..d {
@@ -219,5 +339,52 @@ mod tests {
                 seen.push((c.offset, c.len));
             }
         }
+    }
+
+    #[test]
+    fn pool_grows_on_demand_and_frees_on_drop() {
+        let alloc = PageAllocator::new(1, 2, 4, 8, 0, false, 0);
+        {
+            let mut pool = LayerPool::with_alloc(Layout::Hnd, 64, 2, 4, 8, alloc.clone(), 0);
+            assert_eq!(pool.bytes(), 0, "no up-front reservation");
+            let page = vec![0.5f32; 4 * 2 * 8];
+            pool.write_page(0, &page, &page);
+            pool.write_page(5, &page, &page);
+            assert_eq!(pool.held_pages(), 2);
+            assert_eq!(alloc.stats().pages_used, 2, "only written pages are allocated");
+            assert_eq!(pool.bytes(), 2 * alloc.page_bytes());
+        }
+        assert_eq!(alloc.stats().pages_used, 0, "drop released every slot");
+    }
+
+    #[test]
+    fn adopted_page_is_shared_then_cow_materializes_privately() {
+        let alloc = PageAllocator::new(1, 2, 4, 8, 0, true, 1);
+        let (m, p, d) = (2usize, 4usize, 8usize);
+        let mut rng = Rng::new(3);
+        let k = fill(&mut rng, p * m * d);
+        let v = fill(&mut rng, p * m * d);
+        let mut a = LayerPool::with_alloc(Layout::Hnd, 8, m, p, d, alloc.clone(), 0);
+        let mut b = LayerPool::with_alloc(Layout::Hnd, 8, m, p, d, alloc.clone(), 0);
+        a.write_page_keyed(0, &k, &v, Some(77));
+        assert!(b.try_adopt(0, 77), "same-key offload aliases the resident page");
+        assert!(b.is_written(0));
+        assert_eq!(alloc.stats().pages_used, 1, "one physical page for two views");
+        assert_eq!(alloc.stats().pages_shared, 1);
+        assert_eq!(b.read_page_head(0, 1), a.read_page_head(0, 1));
+        // CoW: rewriting through one view must not touch the other's data
+        let k2 = fill(&mut rng, p * m * d);
+        let v2 = fill(&mut rng, p * m * d);
+        b.write_page(0, &k2, &v2);
+        assert_eq!(alloc.stats().pages_used, 2);
+        assert_eq!(alloc.stats().pages_shared, 0);
+        let (ka, _) = a.read_page_head(0, 0);
+        for tok in 0..p {
+            for dim in 0..d {
+                assert_eq!(ka[tok * d + dim], k[(tok * m) * d + dim], "shared page mutated");
+            }
+        }
+        // a key that nobody registered does not adopt
+        assert!(!b.try_adopt(1, 999));
     }
 }

@@ -44,6 +44,9 @@ fn run() -> Result<()> {
     // in-thread artifact dispatch, the ablation baseline).
     // --max-lanes caps concurrent decode microbatch lanes;
     // --weight-workers bounds how many pool workers hold weight copies.
+    // --kv-pool-pages caps the shared CPU KV page pool (0 = unbounded);
+    // admission queues requests the pool cannot cover.
+    // --prefix-cache enables copy-on-write prefix sharing of pool pages.
     let defaults = FreeKvParams::default();
     let params = FreeKvParams {
         tau,
@@ -51,6 +54,8 @@ fn run() -> Result<()> {
         exec_workers: args.usize_or("exec-workers", defaults.exec_workers),
         max_lanes: args.usize_or("max-lanes", defaults.max_lanes),
         weight_workers: args.usize_or("weight-workers", defaults.weight_workers),
+        kv_pool_pages: args.usize_or("kv-pool-pages", defaults.kv_pool_pages),
+        prefix_cache: args.flag("prefix-cache") || defaults.prefix_cache,
         ..Default::default()
     };
 
@@ -96,6 +101,12 @@ fn run() -> Result<()> {
         }
         Some("serve") => {
             let addr = args.str_or("addr", "127.0.0.1:8080");
+            // Block SIGINT/SIGTERM before any thread spawns so the
+            // watcher thread below is their only consumer: Ctrl-C then
+            // triggers the graceful-drain path instead of killing
+            // in-flight sessions.
+            #[cfg(unix)]
+            let signals_blocked = freekv::util::signal::block_shutdown_signals();
             let scfg = SchedulerConfig {
                 max_batch: args.usize_or("max-batch", 4),
                 admit_below: args.usize_or("admit-below", 4),
@@ -110,7 +121,10 @@ fn run() -> Result<()> {
             // The engine is constructed on the loop thread (the PJRT
             // client is !Send); --sim swaps in the artifact-free backend.
             let el = if args.flag("sim") {
-                EngineLoop::spawn(loop_cfg, move || Ok(Scheduler::new(SimBackend::tiny(), scfg)))?
+                let (pool_pages, prefix) = (params.kv_pool_pages as u64, params.prefix_cache);
+                EngineLoop::spawn(loop_cfg, move || {
+                    Ok(Scheduler::new(SimBackend::tiny_with_pool(pool_pages, prefix), scfg))
+                })?
             } else {
                 EngineLoop::spawn(loop_cfg, move || {
                     let rt = Runtime::load(&artifacts)?;
@@ -124,17 +138,33 @@ fn run() -> Result<()> {
                 })?
             };
             let max_requests = args.get("max-requests").and_then(|v| v.parse().ok());
-            // --drain-secs: on shutdown, let running sessions finish for
-            // this long before cancelling them (0 = cancel immediately).
-            let drain = std::time::Duration::from_secs_f64(args.f64_or("drain-secs", 0.0).max(0.0));
+            // --drain-secs: on shutdown (Ctrl-C / SIGTERM included), let
+            // running sessions finish for this long before cancelling
+            // them (0 = cancel immediately). Default 5s so a signal
+            // drains gracefully out of the box.
+            let drain = std::time::Duration::from_secs_f64(args.f64_or("drain-secs", 5.0).max(0.0));
+            // Bind here so the signal watcher can wake a blocked accept
+            // by poking the listener address.
+            let listener = std::net::TcpListener::bind(&addr)?;
+            let local = listener.local_addr()?;
+            let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+            #[cfg(unix)]
+            if signals_blocked {
+                let flag = stop.clone();
+                // handle dropped: the watcher lives for the process
+                let _ = freekv::util::signal::watch_shutdown(flag, move || {
+                    let _ = std::net::TcpStream::connect(local);
+                });
+            }
             let opts = ServeOptions {
                 max_requests,
                 // 0 derives the connection-thread cap from the queue cap
                 max_connections: args.usize_or("max-conns", 0),
                 drain,
+                shutdown: Some(stop.clone()),
                 ..Default::default()
             };
-            let result = freekv::server::serve(el.submitter(), &addr, opts);
+            let result = freekv::server::serve_listener(listener, el.submitter(), opts);
             if drain.is_zero() {
                 el.shutdown();
             } else {
@@ -151,7 +181,9 @@ fn run() -> Result<()> {
                 ..Default::default()
             };
             if args.flag("sim") {
-                loadtest(Scheduler::new(SimBackend::tiny(), scfg), &args)
+                let backend =
+                    SimBackend::tiny_with_pool(params.kv_pool_pages as u64, params.prefix_cache);
+                loadtest(Scheduler::new(backend, scfg), &args)
             } else {
                 let rt = Runtime::load(&artifacts)?;
                 let eng = Engine::new(rt, &model, params)?;
@@ -165,12 +197,13 @@ fn run() -> Result<()> {
         }
         _ => Err(anyhow!(
             "usage: freekv <info|generate|serve|loadtest|eval> [--model tiny] [--artifacts dir] \
-             [--serial-recall] [--exec-workers 2] [--max-lanes 2] [--weight-workers 1] [--sim] \
+             [--serial-recall] [--exec-workers 2] [--max-lanes 2] [--weight-workers 1] \
+             [--kv-pool-pages 0] [--prefix-cache] [--sim] \
              [--queue-cap 64] [--max-batch 4] [--admit-below 4] [--microbatch-min 0] \
-             [--max-conns 0] [--drain-secs 0]\n\
+             [--max-conns 0] [--drain-secs 5]\n\
              eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
              table2 table3 table4 table5 table6 table7 table8 table9 fig7 fig8 fig9 fig10 \
-             oom real-breakdown real-correction fig16-20 all"
+             oom prefix-mem real-breakdown real-correction fig16-20 all"
         )),
     }
 }
@@ -266,6 +299,9 @@ fn eval(what: &str, seeds: u64, artifacts: &str, model: &str) -> Result<()> {
     }
     if is("oom") {
         emit(latency::oom_table(), "oom");
+    }
+    if is("prefix-mem") {
+        emit(latency::prefix_mem_table(), "prefix_mem");
     }
     if is("fig3-similarity") {
         emit(real::fig3_similarity(artifacts, model, 96)?, "fig3_similarity");

@@ -627,6 +627,33 @@ pub fn gpu_kv_bytes(
     }
 }
 
+/// Modeled CPU-pool pages for `n_requests` whose prompts share a
+/// `prefix_tokens`-token prefix and then diverge for `unique_tokens`
+/// each — the shared-prefix memory model behind the rust engine's
+/// copy-on-write page sharing (`kvcache::alloc`). Without sharing every
+/// request stores its full context privately; with sharing the common
+/// prefix's completed pages exist once process-wide and only the
+/// per-request tails multiply. (A prefix page straddling the divergence
+/// point is charged to the tails, matching the hash-chain keying: a
+/// page is shareable only if *all* its tokens are common.)
+pub fn shared_prefix_pool_pages(
+    m: &ModelConfig,
+    n_requests: usize,
+    prefix_tokens: usize,
+    unique_tokens: usize,
+    sharing: bool,
+) -> u64 {
+    let p = m.page_size;
+    let layers = m.n_layers as u64;
+    let total = prefix_tokens + unique_tokens;
+    if !sharing {
+        return layers * (n_requests as u64) * (total / p) as u64;
+    }
+    let shared_pages = (prefix_tokens / p) as u64;
+    let tail_pages = (total / p) as u64 - shared_pages;
+    layers * (shared_pages + (n_requests as u64) * tail_pages)
+}
+
 /// Model weight bytes (for completeness of the OOM check).
 pub fn weight_bytes(m: &ModelConfig, elem: usize) -> f64 {
     let per_layer = m.d_model * (m.n_qo + 2 * m.n_kv) * m.d_head
@@ -661,6 +688,25 @@ mod tests {
         assert!(ig.per_token() > fk.per_token());
         // ArkVale is the slowest of the retrieval baselines (Fig. 1/7).
         assert!(av.per_token() >= sv.per_token() && av.per_token() >= ig.per_token());
+    }
+
+    #[test]
+    fn shared_prefix_memory_model_is_consistent() {
+        let m = ModelConfig::llama31_8b(); // page 32, 32 layers
+        // one request: sharing changes nothing
+        assert_eq!(
+            shared_prefix_pool_pages(&m, 1, 3200, 320, true),
+            shared_prefix_pool_pages(&m, 1, 3200, 320, false)
+        );
+        // 8 requests, fully shared prompt, no unique tail: 8x savings
+        let private = shared_prefix_pool_pages(&m, 8, 3200, 0, false);
+        let shared = shared_prefix_pool_pages(&m, 8, 3200, 0, true);
+        assert_eq!(private, 8 * shared);
+        // with tails, shared is strictly between one copy and N copies
+        let shared_t = shared_prefix_pool_pages(&m, 8, 3200, 320, true);
+        let private_t = shared_prefix_pool_pages(&m, 8, 3200, 320, false);
+        assert!(shared_t < private_t);
+        assert!(shared_t > private_t / 8);
     }
 
     #[test]

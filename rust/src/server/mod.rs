@@ -20,6 +20,17 @@
 //!                      percentiles included)
 //!   GET  /healthz   -> ok
 //!
+//! HTTP keep-alive: a client sending `Connection: keep-alive` gets a
+//! per-connection request loop (bounded by
+//! [`HttpLimits::keep_alive_idle`] between requests), so repeated
+//! generations — a loadtest, a chat turn loop — stop paying TCP setup
+//! per request. Opt-in only: without the header the edge keeps its
+//! one-request-per-connection contract (clients that read to EOF),
+//! and error responses and SSE streams always close. Requests are
+//! processed strictly in order (no concurrent execution per
+//! connection), but one `BufReader` spans the connection, so a client
+//! that pipelines its next request early loses nothing.
+//!
 //! Robustness at the edge: request lines that aren't `METHOD SP PATH SP
 //! HTTP/x` are rejected with 400, bodies above
 //! [`HttpLimits::max_body_bytes`] with 413, a read timeout bounds how
@@ -69,6 +80,9 @@ pub struct HttpLimits {
     /// blocked write exceeds this (frees the connection thread and
     /// cancels the session).
     pub write_timeout: Duration,
+    /// How long a kept-alive connection may sit idle between requests
+    /// before the server closes it (frees the connection-thread slot).
+    pub keep_alive_idle: Duration,
 }
 
 impl Default for HttpLimits {
@@ -79,6 +93,7 @@ impl Default for HttpLimits {
             max_headers: 100,
             header_timeout: Duration::from_secs(10),
             write_timeout: Duration::from_secs(30),
+            keep_alive_idle: Duration::from_secs(5),
         }
     }
 }
@@ -100,6 +115,11 @@ pub struct HttpRequest {
     pub method: String,
     pub path: String,
     pub body: String,
+    /// Client asked to reuse the connection (`Connection: keep-alive`).
+    /// Opt-in only — without the explicit header the edge keeps its
+    /// historical one-request-per-connection contract, so clients that
+    /// read to EOF keep working.
+    pub keep_alive: bool,
 }
 
 /// Read one line, capped at `cap` bytes.
@@ -114,11 +134,38 @@ fn take_line<R: BufRead>(r: &mut R, out: &mut String, cap: usize) -> Result<usiz
 
 /// Read one HTTP/1.1 request from a stream, enforcing `limits`.
 pub fn read_request(stream: &mut TcpStream, limits: &HttpLimits) -> Result<HttpRequest, HttpError> {
-    stream.set_read_timeout(Some(limits.header_timeout)).map_err(HttpError::Io)?;
     let mut reader = BufReader::new(stream.try_clone().map_err(HttpError::Io)?);
+    read_request_from(&mut reader, stream, limits, None)
+}
+
+/// [`read_request`] over a caller-owned reader — the keep-alive loop
+/// keeps ONE `BufReader` per connection so readahead bytes (a client
+/// writing its next request early) survive across requests instead of
+/// dying with a per-request reader. `idle` is the distinct first-byte
+/// timeout for the *next* request line; the rest of the request runs on
+/// the header timeout (timeouts are socket-level, shared with the
+/// cloned reader FD). A clean EOF while waiting between keep-alive
+/// requests surfaces as `Io` (normal close), not `BadRequest`.
+fn read_request_from(
+    reader: &mut BufReader<TcpStream>,
+    stream: &TcpStream,
+    limits: &HttpLimits,
+    idle: Option<Duration>,
+) -> Result<HttpRequest, HttpError> {
+    stream
+        .set_read_timeout(Some(idle.unwrap_or(limits.header_timeout)))
+        .map_err(HttpError::Io)?;
     let mut line = String::new();
-    if take_line(&mut reader, &mut line, limits.max_line_bytes)? == 0 {
+    if take_line(reader, &mut line, limits.max_line_bytes)? == 0 {
+        if idle.is_some() {
+            // the client closed between keep-alive requests: a normal
+            // end of session, not a protocol error
+            return Err(HttpError::Io(std::io::ErrorKind::UnexpectedEof.into()));
+        }
         return Err(HttpError::BadRequest("empty request".into()));
+    }
+    if idle.is_some() {
+        stream.set_read_timeout(Some(limits.header_timeout)).map_err(HttpError::Io)?;
     }
     let parts: Vec<String> = line.trim_end().split(' ').map(str::to_string).collect();
     if parts.len() != 3 {
@@ -137,6 +184,7 @@ pub fn read_request(stream: &mut TcpStream, limits: &HttpLimits) -> Result<HttpR
 
     let mut content_len = 0usize;
     let mut n_headers = 0usize;
+    let mut keep_alive = false;
     loop {
         if take_line(&mut reader, &mut line, limits.max_line_bytes)? == 0 {
             return Err(HttpError::BadRequest("truncated headers".into()));
@@ -157,6 +205,21 @@ pub fn read_request(stream: &mut TcpStream, limits: &HttpLimits) -> Result<HttpR
                 .trim()
                 .parse()
                 .map_err(|_| HttpError::BadRequest(format!("bad content-length {:?}", v.trim())))?;
+        } else if k.eq_ignore_ascii_case("transfer-encoding") {
+            // Chunked (or any) request framing is unsupported; accepting
+            // it while only draining Content-Length bytes would leave
+            // the body on the wire for the keep-alive loop to parse as
+            // the next request — a smuggling primitive. Reject and close
+            // (the 400 path closes the connection).
+            return Err(HttpError::BadRequest(format!(
+                "Transfer-Encoding {:?} not supported; use Content-Length",
+                v.trim()
+            )));
+        } else if k.eq_ignore_ascii_case("connection") {
+            let wants_keep =
+                v.split(',').any(|t| t.trim().eq_ignore_ascii_case("keep-alive"));
+            let wants_close = v.split(',').any(|t| t.trim().eq_ignore_ascii_case("close"));
+            keep_alive = wants_keep && !wants_close;
         }
     }
     if content_len > limits.max_body_bytes {
@@ -170,15 +233,28 @@ pub fn read_request(stream: &mut TcpStream, limits: &HttpLimits) -> Result<HttpR
         method: method.to_string(),
         path: path.to_string(),
         body: String::from_utf8_lossy(&body).into_owned(),
+        keep_alive,
     })
 }
 
-/// Write a complete HTTP response.
+/// Write a complete HTTP response that closes the connection.
 pub fn write_response<W: Write>(
     w: &mut W,
     status: u16,
     content_type: &str,
     body: &str,
+) -> Result<()> {
+    write_response_conn(w, status, content_type, body, false)
+}
+
+/// Write a complete HTTP response, advertising keep-alive when the
+/// connection will serve another request.
+pub fn write_response_conn<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
 ) -> Result<()> {
     let reason = match status {
         200 => "OK",
@@ -189,13 +265,15 @@ pub fn write_response<W: Write>(
         503 => "Service Unavailable",
         _ => "Internal Server Error",
     };
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(
         w,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
         status,
         reason,
         content_type,
         body.len(),
+        conn,
         body
     )?;
     Ok(())
@@ -284,6 +362,12 @@ pub struct ServeOptions {
     /// sessions get this long to finish before being cancelled. Zero
     /// (the default) preserves the old cancel-everything shutdown.
     pub drain: Duration,
+    /// External shutdown request (the signal handler in `freekv serve`
+    /// sets it on Ctrl-C / SIGTERM): when the flag flips, the acceptor
+    /// stops taking connections and begins the graceful drain. Whoever
+    /// sets the flag must also poke the listener with a throwaway
+    /// connection so a blocked `accept` wakes up.
+    pub shutdown: Option<Arc<AtomicBool>>,
 }
 
 /// Extra connection threads allowed past [`ServeOptions::max_connections`]
@@ -332,6 +416,10 @@ pub fn serve_listener(
     };
     let active_conns = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
+        if opts.shutdown.as_ref().map_or(false, |f| f.load(Ordering::SeqCst)) {
+            println!("[freekv] shutdown requested; draining in-flight sessions");
+            break;
+        }
         if engine_down.load(Ordering::SeqCst) {
             return Err(anyhow!("engine loop terminated; shutting down server"));
         }
@@ -390,6 +478,12 @@ pub fn serve_listener(
     Ok(())
 }
 
+/// Serve requests off one connection. HTTP keep-alive is honored when
+/// the client opts in with `Connection: keep-alive`: the thread loops
+/// reading further requests (bounded by `HttpLimits::keep_alive_idle`
+/// between them) so loadtest clients stop paying per-request TCP
+/// setup. Without the header, one request per connection as before.
+/// Error responses and SSE streams always close.
 fn handle_connection(
     stream: &mut TcpStream,
     sub: &Submitter,
@@ -400,102 +494,133 @@ fn handle_connection(
 ) {
     // A peer that stops reading must not wedge this thread on a write.
     let _ = stream.set_write_timeout(Some(limits.write_timeout));
-    let req = match read_request(stream, limits) {
-        Ok(r) => r,
-        Err(HttpError::BadRequest(msg)) => {
-            let _ = write_response(stream, 400, "application/json", &error_json(&msg));
+    // One reader for the whole connection: keep-alive readahead (a
+    // client sending its next request early) stays buffered here
+    // instead of being lost with a per-request reader.
+    let Ok(clone) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(clone);
+    let mut first = true;
+    loop {
+        let idle = if first { None } else { Some(limits.keep_alive_idle) };
+        first = false;
+        let req = match read_request_from(&mut reader, stream, limits, idle) {
+            Ok(r) => r,
+            Err(HttpError::BadRequest(msg)) => {
+                let _ = write_response(stream, 400, "application/json", &error_json(&msg));
+                return;
+            }
+            Err(HttpError::TooLarge { len, cap }) => {
+                let msg = format!("body of {} bytes exceeds cap of {}", len, cap);
+                let _ = write_response(stream, 413, "application/json", &error_json(&msg));
+                return;
+            }
+            Err(HttpError::Io(_)) => return, // stalled, idle-timed-out, or vanished client
+        };
+        let keep = req.keep_alive;
+        let again = match (req.method.as_str(), req.path.as_str()) {
+            // Health is honest: it round-trips the engine loop, so a dead
+            // loop flips this instance to 503 for load balancers.
+            ("GET", "/healthz") => match sub.metrics_report() {
+                Ok(_) => write_response_conn(stream, 200, "text/plain", "ok", keep).is_ok() && keep,
+                Err(_) => {
+                    engine_down.store(true, Ordering::SeqCst);
+                    let _ = write_response(stream, 503, "text/plain", "engine loop down");
+                    false
+                }
+            },
+            ("GET", "/metrics") => match sub.metrics_report() {
+                Ok(r) => write_response_conn(stream, 200, "text/plain", &r, keep).is_ok() && keep,
+                Err(_) => {
+                    engine_down.store(true, Ordering::SeqCst);
+                    let _ = write_response(stream, 503, "text/plain", "engine unavailable");
+                    false
+                }
+            },
+            ("POST", "/generate") if restricted => {
+                // Overflow (probe-headroom) slot: generation would hold
+                // this thread for a whole session, which the cap exists
+                // to bound.
+                let msg = error_json("connection limit reached; retry later");
+                let _ = write_response(stream, 503, "application/json", &msg);
+                false
+            }
+            ("POST", "/generate") => {
+                handle_generate(stream, sub, served, engine_down, &req.body, keep)
+            }
+            _ => {
+                let _ = write_response(stream, 404, "text/plain", "not found");
+                false
+            }
+        };
+        if !again {
             return;
-        }
-        Err(HttpError::TooLarge { len, cap }) => {
-            let msg = format!("body of {} bytes exceeds cap of {}", len, cap);
-            let _ = write_response(stream, 413, "application/json", &error_json(&msg));
-            return;
-        }
-        Err(HttpError::Io(_)) => return, // stalled or vanished client
-    };
-    match (req.method.as_str(), req.path.as_str()) {
-        // Health is honest: it round-trips the engine loop, so a dead
-        // loop flips this instance to 503 for load balancers.
-        ("GET", "/healthz") => match sub.metrics_report() {
-            Ok(_) => {
-                let _ = write_response(stream, 200, "text/plain", "ok");
-            }
-            Err(_) => {
-                engine_down.store(true, Ordering::SeqCst);
-                let _ = write_response(stream, 503, "text/plain", "engine loop down");
-            }
-        },
-        ("GET", "/metrics") => match sub.metrics_report() {
-            Ok(r) => {
-                let _ = write_response(stream, 200, "text/plain", &r);
-            }
-            Err(_) => {
-                engine_down.store(true, Ordering::SeqCst);
-                let _ = write_response(stream, 503, "text/plain", "engine unavailable");
-            }
-        },
-        ("POST", "/generate") if restricted => {
-            // Overflow (probe-headroom) slot: generation would hold this
-            // thread for a whole session, which the cap exists to bound.
-            let msg = error_json("connection limit reached; retry later");
-            let _ = write_response(stream, 503, "application/json", &msg);
-        }
-        ("POST", "/generate") => handle_generate(stream, sub, served, engine_down, &req.body),
-        _ => {
-            let _ = write_response(stream, 404, "text/plain", "not found");
         }
     }
 }
 
+/// Returns whether the connection may serve another request.
 fn handle_generate(
     stream: &mut TcpStream,
     sub: &Submitter,
     served: &AtomicUsize,
     engine_down: &AtomicBool,
     body: &str,
-) {
+    keep: bool,
+) -> bool {
     let (req, stream_mode) = match parse_generate(body) {
         Ok(x) => x,
         Err(msg) => {
             let _ = write_response(stream, 400, "application/json", &error_json(&msg));
-            return;
+            return false;
         }
     };
     let handle = match sub.submit(req) {
         Ok(h) => h,
         Err(e @ SubmitError::Busy { .. }) => {
-            let _ = write_response(stream, 429, "application/json", &error_json(&e.to_string()));
-            return;
+            // Backpressure keeps the connection usable: a keep-alive
+            // loadtest client retries on the same socket.
+            let _ = write_response_conn(
+                stream,
+                429,
+                "application/json",
+                &error_json(&e.to_string()),
+                keep,
+            );
+            return keep;
         }
         Err(e @ SubmitError::Draining) => {
             // Shutting down but alive: 503 without tripping the
             // engine-down latch — in-flight sessions are still served.
             let _ = write_response(stream, 503, "application/json", &error_json(&e.to_string()));
-            return;
+            return false;
         }
         Err(SubmitError::Closed) => {
             engine_down.store(true, Ordering::SeqCst);
             let msg = error_json("engine unavailable");
             let _ = write_response(stream, 503, "application/json", &msg);
-            return;
+            return false;
         }
     };
     if stream_mode {
+        // SSE streams end with the chunked terminator + close.
         stream_session(stream, &handle, served, engine_down);
+        false
     } else {
-        wait_session(stream, &handle, served, engine_down);
+        wait_session(stream, &handle, served, engine_down, keep)
     }
 }
 
 /// Buffered mode: wait for the terminal event, polling for client
 /// disconnect so an abandoned request is cancelled instead of decoded
-/// to completion.
+/// to completion. Returns whether the connection may serve another
+/// request (keep-alive + clean 200).
 fn wait_session(
     stream: &mut TcpStream,
     h: &SessionHandle,
     served: &AtomicUsize,
     engine_down: &AtomicBool,
-) {
+    keep: bool,
+) -> bool {
     loop {
         match h.recv_timeout(DISCONNECT_POLL) {
             Ok(SessionEvent::Token { .. }) => {}
@@ -507,27 +632,27 @@ fn wait_session(
                 obj.insert("generated", c.generated_tokens);
                 obj.insert("finish_reason", c.finish_reason.as_str());
                 let body = Json::from(obj).to_string_compact();
-                let _ = write_response(stream, 200, "application/json", &body);
+                let ok = write_response_conn(stream, 200, "application/json", &body, keep).is_ok();
                 served.fetch_add(1, Ordering::SeqCst);
-                return;
+                return ok && keep;
             }
             Ok(SessionEvent::Error(e)) => {
                 let _ = write_response(stream, 500, "application/json", &error_json(&e));
-                return;
+                return false;
             }
             Err(RecvTimeoutError::Timeout) => {
                 // EOF alone is not abandonment here: buffered clients
                 // may half-close and still await the response.
                 if client_gone(stream, false) {
                     h.cancel();
-                    return;
+                    return false;
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 engine_down.store(true, Ordering::SeqCst);
                 let msg = error_json("engine shut down");
                 let _ = write_response(stream, 503, "application/json", &msg);
-                return;
+                return false;
             }
         }
     }
@@ -735,6 +860,50 @@ mod tests {
         assert!(parse_generate("not json").is_err());
         assert!(parse_generate(r#"{"max_tokens":4}"#).is_err());
         assert!(parse_generate(r#"{"prompt":""}"#).is_err());
+    }
+
+    #[test]
+    fn transfer_encoding_is_rejected_not_smuggled() {
+        // Accepting chunked framing while draining only Content-Length
+        // would leave the body on the wire for the keep-alive loop to
+        // parse as the next request.
+        let raw =
+            b"POST /generate HTTP/1.1\r\nTransfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n";
+        match parse_raw(raw, HttpLimits::default()) {
+            Err(HttpError::BadRequest(msg)) => assert!(msg.contains("Transfer-Encoding"), "{}", msg),
+            other => panic!("expected BadRequest, got {:?}", other.map(|r| r.method)),
+        }
+    }
+
+    #[test]
+    fn keep_alive_is_explicit_opt_in() {
+        let r = parse_raw(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n", HttpLimits::default())
+            .unwrap();
+        assert!(!r.keep_alive, "no Connection header keeps the close contract");
+        let r = parse_raw(
+            b"GET /healthz HTTP/1.1\r\nConnection: keep-alive\r\n\r\n",
+            HttpLimits::default(),
+        )
+        .unwrap();
+        assert!(r.keep_alive);
+        let r = parse_raw(
+            b"GET /healthz HTTP/1.1\r\nConnection: Keep-Alive, close\r\n\r\n",
+            HttpLimits::default(),
+        )
+        .unwrap();
+        assert!(!r.keep_alive, "close wins over keep-alive");
+    }
+
+    #[test]
+    fn response_advertises_connection_mode() {
+        let mut buf = Vec::new();
+        write_response_conn(&mut buf, 200, "text/plain", "ok", true).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("Connection: keep-alive"), "{}", s);
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "text/plain", "ok").unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("Connection: close"), "{}", s);
     }
 
     #[test]

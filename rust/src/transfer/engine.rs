@@ -27,6 +27,9 @@ pub struct TransferCounters {
     pub convert_bytes: u64,
     pub recalled_pages: u64,
     pub offloaded_pages: u64,
+    /// Offloads satisfied by aliasing a resident prefix-matched page:
+    /// no bytes moved, no pool page written.
+    pub prefix_hits: u64,
     pub real_h2d_secs: f64,
     pub real_convert_secs: f64,
     pub real_d2h_secs: f64,
@@ -43,6 +46,7 @@ impl TransferCounters {
             convert_bytes: self.convert_bytes + o.convert_bytes,
             recalled_pages: self.recalled_pages + o.recalled_pages,
             offloaded_pages: self.offloaded_pages + o.offloaded_pages,
+            prefix_hits: self.prefix_hits + o.prefix_hits,
             real_h2d_secs: self.real_h2d_secs + o.real_h2d_secs,
             real_convert_secs: self.real_convert_secs + o.real_convert_secs,
             real_d2h_secs: self.real_d2h_secs + o.real_d2h_secs,
@@ -90,15 +94,12 @@ impl TransferEngine {
         }
 
         // Phase 1: chunked "DMA" into staging, normalized to
-        // [K tokens | V tokens] token-major order.
+        // [K tokens | V tokens] token-major order. The pool view reads
+        // its (possibly shared) slot under the allocator lock.
         let t0 = Instant::now();
         {
             let staging = &mut self.staging[buf_idx];
-            let mut off = 0usize;
-            for c in &chunks {
-                staging[off..off + c.len].copy_from_slice(pool.slice(*c));
-                off += c.len;
-            }
+            let off = pool.copy_chunks(page, &chunks, staging);
             self.counters.h2d_chunks += chunks.len() as u64;
             self.counters.h2d_bytes += (off * 4) as u64;
             self.counters.h2d_calls += 1;
@@ -127,8 +128,29 @@ impl TransferEngine {
     /// chunk accounting reflects the wire format: n_kv contiguous
     /// per-head chunks for HND, 2 plane chunks for NHD.
     pub fn offload_page(&mut self, cp: &CompletedPage, pool: &mut LayerPool) {
+        self.offload_page_keyed(cp, pool, None);
+    }
+
+    /// `offload_page` with an optional prefix key. When the key matches
+    /// a page a resident request already committed, the pool aliases
+    /// that page instead of writing a duplicate: no D2H traffic, no new
+    /// pool page — counted as a `prefix_hits` (the page still counts as
+    /// offloaded: it is resident and recallable).
+    pub fn offload_page_keyed(
+        &mut self,
+        cp: &CompletedPage,
+        pool: &mut LayerPool,
+        key: Option<u128>,
+    ) {
+        if let Some(h) = key {
+            if pool.try_adopt(cp.page, h) {
+                self.counters.prefix_hits += 1;
+                self.counters.offloaded_pages += 1;
+                return;
+            }
+        }
         let t0 = Instant::now();
-        pool.write_page(cp.page, &cp.k_nhd, &cp.v_nhd);
+        pool.write_page_keyed(cp.page, &cp.k_nhd, &cp.v_nhd, key);
         let bytes = ((cp.k_nhd.len() + cp.v_nhd.len()) * 4) as u64;
         self.counters.d2h_bytes += bytes;
         self.counters.d2h_chunks += match pool.layout {

@@ -28,10 +28,16 @@
 //! Rust makes the concurrency discipline explicit: the *compute half* of
 //! a layer's KV state (`GpuLayerCache`: sink/window slabs, summaries,
 //! sequence length) never leaves the engine thread, while the *transfer
-//! half* (`LayerXfer`: select slab + page table + CPU pool) is **moved**
-//! into the job and moved back in the completion. While a layer's
-//! transfer half is in flight, `LayerState::xfer` is `None`, so any
-//! accidental engine-side use is a loud panic instead of a data race.
+//! half* (`LayerXfer`: select slab + page table + CPU pool view) is
+//! **moved** into the job and moved back in the completion. While a
+//! layer's transfer half is in flight, `LayerState::xfer` is `None`, so
+//! any accidental engine-side use is a loud panic instead of a data
+//! race. The pool view itself is just a page→slot table plus an `Arc`
+//! of the shared page allocator (`kvcache::alloc`) — moving it here
+//! moves no page data, and the worker's recall reads go through the
+//! allocator's refcounted handles (short critical sections), so pages
+//! aliased across requests by the prefix cache are safe to read while
+//! the engine offloads other pages into the same slab.
 //!
 //! # Drain points
 //!

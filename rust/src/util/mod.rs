@@ -6,6 +6,8 @@ pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+#[cfg(unix)]
+pub mod signal;
 pub mod stats;
 pub mod table;
 

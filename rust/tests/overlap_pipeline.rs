@@ -453,6 +453,72 @@ fn chunked_prefill_overlaps_decode_and_matches_sync_prefill() {
 }
 
 #[test]
+fn shared_pool_capacity_and_prefix_cache_keep_outputs_identical() {
+    // The shared page allocator must be invisible to the data path:
+    // (a) a capacity-bounded pool produces bit-identical tokens to the
+    // unbounded default, and (b) with the prefix cache on, two requests
+    // with the same prompt alias prompt pages (fewer distinct pool
+    // pages, prefix hits > 0) while still producing identical tokens.
+    let run = |kv_pool_pages: usize, prefix_cache: bool| -> Option<(Vec<Vec<i32>>, u64, u64)> {
+        let rt = freekv::runtime::load_or_skip(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+        let params = FreeKvParams {
+            tau: 0.9,
+            overlap: true,
+            exec_workers: 2,
+            kv_pool_pages,
+            prefix_cache,
+            ..Default::default()
+        };
+        let mut eng = Engine::new(rt, "tiny", params).expect("engine constructs");
+        let steps = 12usize;
+        // identical prompts so the prefix cache has something to share
+        let prompt: Vec<i32> = (0..600usize).map(|t| ((t * 13) % 250) as i32).collect();
+        let mut seqs: Vec<Sequence> = (0..2)
+            .map(|i| {
+                eng.new_sequence(
+                    i as u64,
+                    prompt.clone(),
+                    steps + 1,
+                    SampleParams { temperature: 0.8, top_p: 0.95, seed: 11 + i as u64 },
+                )
+            })
+            .collect();
+        for s in seqs.iter_mut() {
+            let lg = eng.prefill(s).unwrap();
+            let tok =
+                freekv::coordinator::engine::sample_token(&lg, &s.sample.clone(), &mut s.rng);
+            s.tokens.push(tok);
+        }
+        for _ in 0..steps {
+            let mut batch: Vec<&mut Sequence> = seqs.iter_mut().collect();
+            eng.decode_step(&mut batch).unwrap();
+        }
+        for s in seqs.iter_mut() {
+            eng.drain_sequence(s);
+        }
+        let st = eng.kv_pool_stats();
+        let toks = seqs.iter().map(|s| s.generated().to_vec()).collect();
+        Some((toks, st.pages_used, st.prefix_hits))
+    };
+    let Some((base, _, _)) = run(0, false) else {
+        eprintln!("artifacts/ missing — skipping shared-pool equivalence test");
+        return;
+    };
+    let (capped, capped_used, capped_hits) = run(4096, false).expect("backend available");
+    assert_eq!(base, capped, "a capacity-bounded pool changed decode outputs");
+    assert_eq!(capped_hits, 0, "sharing off must never alias pages");
+    let (shared, shared_used, hits) = run(0, true).expect("backend available");
+    assert_eq!(base, shared, "prefix sharing changed decode outputs");
+    assert!(hits > 0, "identical prompts must share prefix pages");
+    assert!(
+        shared_used < capped_used,
+        "sharing must reduce distinct pool pages ({} vs {})",
+        shared_used,
+        capped_used
+    );
+}
+
+#[test]
 fn overlapped_engine_matches_blocking_when_budget_covers_context() {
     // With the whole context resident, speculation cannot lose pages, so
     // blocking and overlapped speculative decode must produce identical

@@ -15,7 +15,10 @@ use std::net::{TcpListener, TcpStream};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use freekv::coordinator::engine_loop::{EngineLoop, LoopConfig};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use freekv::coordinator::engine_loop::{EngineLoop, LoopConfig, SubmitError};
 use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use freekv::coordinator::sim_backend::{sim_next_token, SimBackend};
 use freekv::coordinator::tokenizer;
@@ -371,6 +374,152 @@ fn dead_engine_flips_healthz_to_503_and_stops_the_server() {
     // and the acceptor notices on its next pass and exits with an error
     let result = server.join().unwrap();
     assert!(result.is_err(), "server must stop once the engine loop is gone");
+}
+
+/// Read one HTTP response (status line + headers + Content-Length body)
+/// off a persistent reader, leaving the stream positioned at the next
+/// response — the keep-alive client half.
+fn read_one_response<R: BufRead>(reader: &mut R) -> (u16, String, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 =
+        status_line.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let mut headers = String::new();
+    let mut content_len = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.trim_end().split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+        headers.push_str(&line);
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body).unwrap();
+    (status, headers, String::from_utf8_lossy(&body).into_owned())
+}
+
+#[test]
+fn keep_alive_serves_multiple_generations_on_one_connection() {
+    let el = spawn_sim_loop(0, 8);
+    let addr = serve_sim(&el, None);
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    for i in 0..3 {
+        let body = format!(r#"{{"prompt":"keep alive {} ","max_tokens":4}}"#, i);
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        let (status, headers, resp) = read_one_response(&mut reader);
+        assert_eq!(status, 200, "request {} on the shared connection: {}", i, resp);
+        assert!(
+            headers.to_lowercase().contains("connection: keep-alive"),
+            "response must advertise keep-alive: {}",
+            headers
+        );
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("generated").as_usize(), Some(4));
+    }
+    // pipelined: both requests written before reading either response —
+    // the connection-spanning reader must not drop the second one's
+    // bytes (they arrive as readahead while request one is parsed)
+    for tag in ["one", "two"] {
+        let body = format!(r#"{{"prompt":"pipelined {} ","max_tokens":3}}"#, tag);
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+    }
+    for i in 0..2 {
+        let (status, _, resp) = read_one_response(&mut reader);
+        assert_eq!(status, 200, "pipelined response {}: {}", i, resp);
+    }
+    // probes ride the same connection too
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n").unwrap();
+    let (status, _, metrics) = read_one_response(&mut reader);
+    assert_eq!(status, 200);
+    assert!(metrics.contains("completed=5"), "{}", metrics);
+    assert!(metrics.contains("kv_pages_total="), "{}", metrics);
+    // asking for close actually closes
+    write!(s, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let (status, headers, _) = read_one_response(&mut reader);
+    assert_eq!(status, 200);
+    assert!(headers.to_lowercase().contains("connection: close"), "{}", headers);
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server closed after Connection: close");
+    el.shutdown();
+}
+
+#[test]
+fn shutdown_flag_stops_the_acceptor_and_drains_inflight_sessions() {
+    // The signal handler's contract with the server: flipping the flag
+    // (plus a wake connection) stops the acceptor, which begins the
+    // graceful drain — running sessions finish, new ones get refused.
+    let el = spawn_sim_loop(5, 8);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let sub = el.submitter();
+    let opts = ServeOptions {
+        drain: Duration::from_secs(10),
+        shutdown: Some(stop.clone()),
+        ..Default::default()
+    };
+    let server = thread::spawn(move || serve_listener(listener, sub, opts));
+    // a streaming session mid-generation when the "signal" lands
+    let mut s = TcpStream::connect(addr).unwrap();
+    let body = r#"{"prompt":"drain me ","max_tokens":30,"stream":true}"#;
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    let mut reader = BufReader::new(s);
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap() > 0 {
+        if line.starts_with("data: ") {
+            break;
+        }
+        line.clear();
+    }
+    // the "signal": set the flag, poke the listener awake
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    server.join().unwrap().expect("acceptor exits cleanly on shutdown");
+    // drain has begun: new sessions are refused...
+    assert!(matches!(el.submitter().submit_text("late ", 2), Err(SubmitError::Draining)));
+    // ...but the in-flight stream runs to its natural completion
+    let mut done = None;
+    let mut l = String::new();
+    while reader.read_line(&mut l).unwrap() > 0 {
+        if let Some(payload) = l.trim_end().strip_prefix("data: ") {
+            let j = Json::parse(payload).unwrap();
+            if j.get("event").as_str() == Some("done") {
+                done = Some(j);
+                break;
+            }
+        }
+        l.clear();
+    }
+    let done = done.expect("drained session completes");
+    assert_eq!(done.get("finish_reason").as_str(), Some("length"));
+    assert_eq!(done.get("generated").as_usize(), Some(30));
+    el.shutdown_graceful(Duration::from_secs(5));
 }
 
 #[test]
