@@ -218,6 +218,12 @@ pub struct FreeKvParams {
     /// before any write. Off by default — with sharing off the pool is
     /// bit-identical to private per-request pools.
     pub prefix_cache: bool,
+    /// Seed a deterministic fault-injection plan (`--chaos-seed`):
+    /// injected job failures, worker deaths, slow transfers, and engine
+    /// panics at seed-derived call indices, exercising the degradation
+    /// ladders. `None` (production) compiles every fault site down to a
+    /// single untaken branch.
+    pub chaos_seed: Option<u64>,
 }
 
 impl Default for FreeKvParams {
@@ -233,6 +239,7 @@ impl Default for FreeKvParams {
             weight_workers: 1,
             kv_pool_pages: 0,
             prefix_cache: false,
+            chaos_seed: None,
         }
     }
 }

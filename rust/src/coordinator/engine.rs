@@ -43,6 +43,7 @@ use crate::kvcache::{AdmitDecision, KvPoolStats, Layout, PageAllocator, RequestK
 use crate::policies::freekv::{correction_check, SpecState};
 use crate::runtime::{ExecDone, ExecJob, ExecTicket, ExecutorPool, HostTensor, Runtime};
 use crate::transfer::{RecallJob, RecallPipeline, TransferEngine};
+use crate::util::fault::FaultPlan;
 use crate::util::rng::Rng;
 
 /// Distinguishes Sequence objects even when callers reuse request ids
@@ -117,6 +118,23 @@ pub struct EngineStats {
     pub correction_checks: u64,
     pub recalled_pages: u64,
     pub speculative_hits: u64,
+    // ---- fault-domain / degradation gauges (PR 6) ----
+    /// Speculative recalls that fell back to the serial (exposed) path
+    /// because the recall worker died or aborted a job. Non-zero means
+    /// the overlap pipeline is disabled for the rest of this engine's
+    /// life (degraded mode).
+    pub recall_fallbacks: u64,
+    /// Executor workers currently dead (gauge, synced per step).
+    pub exec_dead_workers: u64,
+    /// Executor workers respawned after dying.
+    pub exec_respawns: u64,
+    /// Exec job attempts that failed once and were retried.
+    pub exec_retries: u64,
+    /// Pooled dispatches that ran inline because no live (or revivable)
+    /// worker could take the job.
+    pub exec_inline_fallbacks: u64,
+    /// Faults injected by the active `FaultPlan` (0 in production).
+    pub faults_injected: u64,
 }
 
 impl EngineStats {
@@ -146,6 +164,13 @@ impl EngineStats {
         } else {
             self.recall_hidden_secs / total
         }
+    }
+
+    /// Is this engine running on a degradation ladder rung — serving,
+    /// but with a helper thread lost or routed around? Feeds the
+    /// `Ok`/`Degraded` health state on `/healthz`.
+    pub fn degraded(&self) -> bool {
+        self.recall_fallbacks > 0 || self.exec_dead_workers > 0 || self.exec_inline_fallbacks > 0
     }
 }
 
@@ -522,6 +547,15 @@ pub struct Engine {
     /// from here (capacity `params.kv_pool_pages`, CoW prefix sharing
     /// when `params.prefix_cache`), and admission reserves against it.
     alloc: Arc<PageAllocator>,
+    /// Deterministic fault-injection plan (`params.chaos_seed`), shared
+    /// with the executor pool and the recall worker. `None` in
+    /// production: every check site is a single untaken branch.
+    faults: Option<Arc<FaultPlan>>,
+    /// Latched when the recall worker died (a submit bounced or a job
+    /// came back aborted): speculative recall runs serially (exposed)
+    /// for the rest of this engine's life instead of wedging on a dead
+    /// channel.
+    recall_dead: bool,
 }
 
 impl Engine {
@@ -543,6 +577,10 @@ impl Engine {
         };
         let alloc =
             PageAllocator::for_model(&cfg, params.kv_pool_pages as u64, params.prefix_cache);
+        let faults = params.chaos_seed.map(|seed| Arc::new(FaultPlan::chaos(seed)));
+        if let (Some(pool), Some(plan)) = (&executor, &faults) {
+            pool.set_faults(plan.clone());
+        }
         Ok(Engine {
             rt,
             cfg,
@@ -560,7 +598,19 @@ impl Engine {
             prefill_done: Vec::new(),
             decode_active: false,
             alloc,
+            faults,
+            recall_dead: false,
         })
+    }
+
+    /// Install a fault plan after construction (tests share one plan
+    /// across engine restarts). Must run before the first decode step:
+    /// the recall pipeline captures the plan when it is lazily spawned.
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        if let Some(pool) = &self.executor {
+            pool.set_faults(plan.clone());
+        }
+        self.faults = Some(plan);
     }
 
     pub fn art(&self, name: &str) -> String {
@@ -1066,7 +1116,11 @@ impl Engine {
 
     fn ensure_pipeline(&mut self) {
         if self.overlap_active() && self.pipeline.is_none() {
-            self.pipeline = Some(RecallPipeline::new(self.cfg.page_size, self.cfg.d_head));
+            self.pipeline = Some(RecallPipeline::with_faults(
+                self.cfg.page_size,
+                self.cfg.d_head,
+                self.faults.clone(),
+            ));
         }
     }
 
@@ -1077,8 +1131,14 @@ impl Engine {
     fn dispatch_in(&mut self, job: ExecJob, pooled: bool) -> Result<Pending> {
         if pooled {
             if let Some(pool) = &self.executor {
-                self.stats.exec_jobs += 1;
-                return Ok(Pending::Ticket(pool.submit(job)));
+                if pool.ready_for(&job) {
+                    self.stats.exec_jobs += 1;
+                    return Ok(Pending::Ticket(pool.submit(job)));
+                }
+                // Degradation ladder: no live (or revivable) worker can
+                // take this job — execute inline on the engine thread
+                // rather than fail the request.
+                self.stats.exec_inline_fallbacks += 1;
             }
         }
         let (name, layer, args) = job.into_parts();
@@ -1399,25 +1459,42 @@ impl Engine {
         // and the recall hides under the remaining layers' compute;
         // serial mode keeps it inline as the ablation baseline. ----
         if !self.blocking_mode {
-            if self.overlap_active() {
-                for (i, seq) in lane.seqs.iter_mut().enumerate() {
+            for (i, seq) in lane.seqs.iter_mut().enumerate() {
+                let mut serial = !self.overlap_active() || self.recall_dead;
+                if !serial {
                     let xfer = seq.kv.layers[l].take_xfer();
-                    let pipe = self.pipeline.as_mut().expect("pipeline active");
-                    pipe.submit(RecallJob {
-                        seq_uid: seq.uid,
-                        layer: l,
-                        selections: lane.sel_pages[i].clone(),
-                        xfer,
-                    });
-                    self.stats.recall_jobs += 1;
-                    // sweep finished completions first so this counts
-                    // actual worker backlog, not jobs-since-drain
-                    pipe.poll();
-                    let depth = pipe.pending() as u64;
-                    self.stats.max_queue_depth = self.stats.max_queue_depth.max(depth);
+                    let submitted = self.pipeline.as_mut().expect("pipeline active").submit(
+                        RecallJob {
+                            seq_uid: seq.uid,
+                            layer: l,
+                            selections: lane.sel_pages[i].clone(),
+                            xfer,
+                        },
+                    );
+                    match submitted {
+                        Ok(()) => {
+                            self.stats.recall_jobs += 1;
+                            // sweep finished completions first so this
+                            // counts actual worker backlog, not
+                            // jobs-since-drain
+                            let pipe = self.pipeline.as_mut().expect("pipeline active");
+                            pipe.poll();
+                            let depth = pipe.pending() as u64;
+                            self.stats.max_queue_depth = self.stats.max_queue_depth.max(depth);
+                        }
+                        Err(job) => {
+                            // Degradation ladder: the recall worker's
+                            // channel is gone. Re-attach the transfer
+                            // half and run this (and every future)
+                            // recall serially instead of wedging.
+                            seq.kv.layers[l].put_xfer(job.xfer);
+                            self.recall_dead = true;
+                            self.stats.recall_fallbacks += 1;
+                            serial = true;
+                        }
+                    }
                 }
-            } else {
-                for (i, seq) in lane.seqs.iter_mut().enumerate() {
+                if serial {
                     for head in 0..m {
                         let t1 = Instant::now();
                         let nrec =
@@ -1470,12 +1547,13 @@ impl Engine {
         if !seq.kv.layers[layer].in_flight() {
             return;
         }
-        let pipe = self
+        let t0 = Instant::now();
+        let done = self
             .pipeline
             .as_mut()
-            .expect("transfer half checked out but no pipeline is running");
-        let t0 = Instant::now();
-        let done = pipe.wait(seq.uid, layer);
+            .expect("transfer half checked out but no pipeline is running")
+            .wait(seq.uid, layer)
+            .expect("recall worker hung up with a transfer half checked out");
         let waited = t0.elapsed().as_secs_f64();
         // Of the worker's busy time, the part we just blocked for was NOT
         // hidden; only the remainder ran under compute.
@@ -1485,6 +1563,23 @@ impl Engine {
         self.stats.recalled_pages += done.recalled_pages as u64;
         seq.xfer.counters = seq.xfer.counters.merged(&done.counters);
         seq.kv.layers[layer].put_xfer(done.xfer);
+        if let Some(selections) = done.aborted {
+            // Degradation ladder: the worker died (or panicked) holding
+            // this job and bounced it back. Redo the echoed selection
+            // inline — `apply_selection` diffs against the slots the
+            // worker may have partially installed, so the redo
+            // converges — and stay serial from here on.
+            self.recall_dead = true;
+            self.stats.recall_fallbacks += 1;
+            for (head, sel) in selections.iter().enumerate() {
+                let t1 = Instant::now();
+                let nrec = seq.kv.apply_selection(layer, head, sel, &mut seq.xfer);
+                let dt = t1.elapsed().as_secs_f64();
+                self.stats.recall_secs += dt;
+                self.stats.recall_exposed_secs += dt;
+                self.stats.recalled_pages += nrec as u64;
+            }
+        }
     }
 
     /// Block until every in-flight recall job of this sequence has been
@@ -1513,7 +1608,17 @@ impl Engine {
     /// prefill run the same artifacts on the same inputs in the same
     /// order, so results are bit-identical.
     pub fn prefill_begin(&mut self, mut seq: Sequence) -> Option<PrefillDone> {
-        if self.executor.is_none() {
+        let pool_ready = match &self.executor {
+            Some(pool) => pool.ready_weight(),
+            None => false,
+        };
+        if !pool_ready {
+            // No pool, or no live weight-bearing worker left (respawn
+            // budget exhausted): degrade to the synchronous inline
+            // prefill rather than queue chunks to a dead pool.
+            if self.executor.is_some() {
+                self.stats.exec_inline_fallbacks += 1;
+            }
             let result = self.prefill(&mut seq);
             return Some(PrefillDone { seq, result });
         }
@@ -1798,6 +1903,13 @@ impl Engine {
             let c = pool.counters();
             compiled += c.compiled;
             uploads += c.weight_uploads;
+            let h = pool.health();
+            self.stats.exec_respawns = h.respawns;
+            self.stats.exec_retries = h.retries;
+            self.stats.exec_dead_workers = h.workers.saturating_sub(h.alive) as u64;
+        }
+        if let Some(plan) = &self.faults {
+            self.stats.faults_injected = plan.injected();
         }
         self.stats.exec_compiles = compiled;
         self.stats.weight_uploads = uploads;

@@ -29,7 +29,8 @@
 //! in flight from one engine thread, with prefill chunks interleaved.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::thread;
@@ -39,6 +40,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::engine::{Backend, EngineStats};
 use crate::coordinator::scheduler::{Completion, Request, Scheduler, StepEvent};
+use crate::util::fault::panic_message;
 
 /// What a session's client receives, in order: zero or more `Token`s,
 /// then exactly one `Done` or `Error` (unless the engine loop shuts
@@ -114,11 +116,48 @@ pub struct LoopConfig {
     /// Max sessions in flight (queued + running) before `submit`
     /// returns [`SubmitError::Busy`].
     pub queue_cap: usize,
+    /// How many times the supervisor rebuilds the scheduler/engine after
+    /// a tick panic or engine-global error before staying down. Each
+    /// restart fails the in-flight sessions (terminal `Error` events,
+    /// KV released) and re-opens admission on the fresh engine.
+    pub max_engine_restarts: u64,
 }
 
 impl Default for LoopConfig {
     fn default() -> Self {
-        LoopConfig { queue_cap: 64 }
+        LoopConfig { queue_cap: 64, max_engine_restarts: 2 }
+    }
+}
+
+/// Coarse serving-health state surfaced on `/healthz`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Fully healthy: no restarts, no degraded subsystems.
+    Ok,
+    /// Still serving, but on a degradation-ladder rung: the engine was
+    /// restarted, an executor worker is dead or being routed around, or
+    /// recall fell back to the serial path.
+    Degraded,
+    /// Not serving: the loop exited (shutdown, or restart budget
+    /// exhausted).
+    Down,
+}
+
+impl Health {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Health::Ok => "ok",
+            Health::Degraded => "degraded",
+            Health::Down => "down",
+        }
+    }
+
+    fn from_u8(v: u8) -> Health {
+        match v {
+            0 => Health::Ok,
+            1 => Health::Degraded,
+            _ => Health::Down,
+        }
     }
 }
 
@@ -131,6 +170,8 @@ pub struct Submitter {
     next_id: Arc<AtomicU64>,
     draining: Arc<AtomicBool>,
     queue_cap: usize,
+    health: Arc<AtomicU8>,
+    restarts: Arc<AtomicU64>,
 }
 
 impl Submitter {
@@ -178,11 +219,24 @@ impl Submitter {
         self.queue_cap
     }
 
-    /// One-line serving metrics report from the loop's scheduler.
+    /// Current serving-health state (updated by the loop thread; `Down`
+    /// once the loop exits for good).
+    pub fn health(&self) -> Health {
+        Health::from_u8(self.health.load(Ordering::SeqCst))
+    }
+
+    /// Engine restarts performed by the supervisor so far.
+    pub fn engine_restarts(&self) -> u64 {
+        self.restarts.load(Ordering::SeqCst)
+    }
+
+    /// One-line serving metrics report from the loop's scheduler, with
+    /// the supervisor's health state appended.
     pub fn metrics_report(&self) -> Result<String, SubmitError> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Command::Metrics(tx)).map_err(|_| SubmitError::Closed)?;
-        rx.recv().map_err(|_| SubmitError::Closed)
+        let line = rx.recv().map_err(|_| SubmitError::Closed)?;
+        Ok(format!("{} health={}", line, self.health().as_str()))
     }
 
     /// Snapshot of the engine's cumulative stats.
@@ -262,30 +316,38 @@ pub struct EngineLoop {
 impl EngineLoop {
     /// Spawn the engine thread. `make` runs *on* that thread (the
     /// engine need not be `Send`); spawn blocks until construction
-    /// finishes and propagates its error if it fails.
+    /// finishes and propagates its error if it fails. `make` is `FnMut`
+    /// because the supervisor re-invokes it to rebuild the scheduler
+    /// after an engine panic (up to `cfg.max_engine_restarts` times).
     pub fn spawn<B, F>(cfg: LoopConfig, make: F) -> Result<EngineLoop>
     where
         B: Backend + 'static,
-        F: FnOnce() -> Result<Scheduler<B>> + Send + 'static,
+        F: FnMut() -> Result<Scheduler<B>> + Send + 'static,
     {
         let (cmd_tx, cmd_rx) = mpsc::channel();
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let health = Arc::new(AtomicU8::new(0));
+        let restarts = Arc::new(AtomicU64::new(0));
         let counter = in_flight.clone();
+        let (health_w, restarts_w) = (health.clone(), restarts.clone());
+        let max_restarts = cfg.max_engine_restarts;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let handle = thread::Builder::new()
             .name("freekv-engine".into())
             .spawn(move || {
-                let mut sched = match make() {
+                let mut make = make;
+                let sched = match make() {
                     Ok(s) => {
                         let _ = ready_tx.send(Ok(()));
                         s
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(format!("{e:#}")));
+                        health_w.store(Health::Down as u8, Ordering::SeqCst);
                         return;
                     }
                 };
-                run_loop(&mut sched, cmd_rx, &counter);
+                supervise(sched, make, cmd_rx, &counter, &health_w, &restarts_w, max_restarts);
             })
             .expect("spawn engine thread");
         match ready_rx.recv() {
@@ -296,6 +358,8 @@ impl EngineLoop {
                     next_id: Arc::new(AtomicU64::new(1)),
                     draining: Arc::new(AtomicBool::new(false)),
                     queue_cap: cfg.queue_cap.max(1),
+                    health,
+                    restarts,
                 },
                 handle,
             }),
@@ -344,73 +408,183 @@ impl Sessions {
     }
 }
 
-fn run_loop<B: Backend>(
-    sched: &mut Scheduler<B>,
+/// Why [`run_loop`] returned.
+enum LoopExit {
+    /// Intentional stop: shutdown command, drain finished, or every
+    /// submitter hung up.
+    Stop,
+    /// The engine failed mid-tick (panic or engine-global error). The
+    /// in-flight sessions have already been failed and their admission
+    /// slots released; the scheduler's state is arbitrary.
+    Failed(String),
+}
+
+/// The supervisor: pumps [`run_loop`], and on an engine failure rebuilds
+/// the scheduler via `make` (carrying the serving metrics over) up to
+/// `max_restarts` times before staying down. Restart teardown happens
+/// inside `run_loop` (fail in-flight sessions, release KV, re-open
+/// admission); this function only owns the rebuild.
+fn supervise<B: Backend>(
+    mut sched: Scheduler<B>,
+    mut make: impl FnMut() -> Result<Scheduler<B>>,
     rx: mpsc::Receiver<Command>,
     in_flight: &Arc<AtomicUsize>,
+    health: &Arc<AtomicU8>,
+    restarts: &Arc<AtomicU64>,
+    max_restarts: u64,
 ) {
     let mut sessions = Sessions { channels: HashMap::new(), in_flight: in_flight.clone() };
-    // Set by Command::Drain: no new sessions; the loop exits once the
-    // in-flight set empties or the deadline passes (stragglers are
-    // cancelled by the shutdown tail below).
+    // Set by Command::Drain; survives engine restarts so a drain begun
+    // before a panic still converges.
     let mut draining: Option<Instant> = None;
+    let mut healthy_exit = true;
+    loop {
+        match run_loop(&mut sched, &rx, &mut sessions, &mut draining, health, restarts) {
+            LoopExit::Stop => break,
+            LoopExit::Failed(msg) => {
+                let used = restarts.load(Ordering::SeqCst);
+                if used >= max_restarts {
+                    eprintln!(
+                        "[freekv] engine failed ({}); restart budget ({}) exhausted — down",
+                        msg, max_restarts
+                    );
+                    healthy_exit = false;
+                    break;
+                }
+                // Rebuild on this same thread; the serving metrics
+                // (request/failure counters, latency histograms) carry
+                // across so /metrics reflects the process, not the
+                // incarnation.
+                let metrics = std::mem::take(&mut sched.metrics);
+                match make() {
+                    Ok(mut fresh) => {
+                        restarts.fetch_add(1, Ordering::SeqCst);
+                        fresh.metrics = metrics;
+                        fresh.metrics.engine_restarts = restarts.load(Ordering::SeqCst);
+                        let wedged = std::mem::replace(&mut sched, fresh);
+                        // The wedged scheduler's drop path may panic
+                        // again (its invariants are gone); contain it.
+                        let _ = catch_unwind(AssertUnwindSafe(move || drop(wedged)));
+                        health.store(Health::Degraded as u8, Ordering::SeqCst);
+                        eprintln!(
+                            "[freekv] engine failed ({}); restarted ({}/{})",
+                            msg,
+                            restarts.load(Ordering::SeqCst),
+                            max_restarts
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!("[freekv] engine restart failed: {e:#} — down");
+                        healthy_exit = false;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    health.store(Health::Down as u8, Ordering::SeqCst);
+    // Shutdown: retire in-flight sequences so nothing strands on the
+    // recall worker, then drop the session channels (clients see EOF).
+    // On the unhealthy path the scheduler is wedged and its in-flight
+    // set was already failed; skip touching it further.
+    if healthy_exit {
+        for id in sched.active_ids() {
+            sched.cancel(id);
+            let _ = sched.take_completion(id);
+            sessions.close(id);
+        }
+    }
+}
+
+/// Fail every in-flight session with `msg` after an engine fault:
+/// terminal `Error` events (the request is NOT silently lost), KV pages
+/// and reservations released through the normal retire paths where the
+/// wedged engine still allows it, admission slots re-opened.
+fn fail_inflight<B: Backend>(sched: &mut Scheduler<B>, sessions: &mut Sessions, msg: &str) {
+    let ids = catch_unwind(AssertUnwindSafe(|| sched.active_ids())).unwrap_or_default();
+    for id in ids {
+        // abort() walks the normal retire path (drain recall worker,
+        // drop sequence, release reservation) and counts the request as
+        // failed. A wedged engine may panic again inside it — contain
+        // that and at least release the admission-charged reservation.
+        if catch_unwind(AssertUnwindSafe(|| sched.abort(id))).is_err() {
+            let _ = catch_unwind(AssertUnwindSafe(|| sched.engine.kv_release(id)));
+            sched.metrics.on_failed();
+        }
+        if let Some(tx) = sessions.close(id) {
+            let _ = tx.send(SessionEvent::Error(msg.to_string()));
+        }
+    }
+    // Sessions whose submit command is still queued in the channel keep
+    // their slots; the restarted loop admits them normally.
+}
+
+fn run_loop<B: Backend>(
+    sched: &mut Scheduler<B>,
+    rx: &mpsc::Receiver<Command>,
+    sessions: &mut Sessions,
+    draining: &mut Option<Instant>,
+    health: &Arc<AtomicU8>,
+    restarts: &Arc<AtomicU64>,
+) -> LoopExit {
     'outer: loop {
-        if let Some(deadline) = draining {
+        // Publish health: Degraded while restarted or while the engine
+        // reports a degradation-ladder rung, Ok otherwise.
+        let degraded = restarts.load(Ordering::SeqCst) > 0 || sched.engine.stats().degraded();
+        let state = if degraded { Health::Degraded } else { Health::Ok };
+        health.store(state as u8, Ordering::SeqCst);
+        if let Some(deadline) = *draining {
             if sched.pending() == 0 || Instant::now() >= deadline {
-                break 'outer;
+                return LoopExit::Stop;
             }
         }
         // Idle: block until the next command instead of spinning.
         if sched.pending() == 0 {
             match rx.recv() {
                 Ok(cmd) => {
-                    if !handle_command(sched, &mut sessions, cmd, &mut draining) {
-                        break 'outer;
+                    if !handle_command(sched, sessions, cmd, draining) {
+                        return LoopExit::Stop;
                     }
                 }
-                Err(_) => break 'outer, // every Submitter is gone
+                Err(_) => return LoopExit::Stop, // every Submitter is gone
             }
         }
         // Busy: drain whatever has arrived, then tick.
         loop {
             match rx.try_recv() {
                 Ok(cmd) => {
-                    if !handle_command(sched, &mut sessions, cmd, &mut draining) {
-                        break 'outer;
+                    if !handle_command(sched, sessions, cmd, draining) {
+                        return LoopExit::Stop;
                     }
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     if sched.pending() == 0 {
-                        break 'outer;
+                        return LoopExit::Stop;
                     }
                     break;
                 }
             }
         }
         if sched.pending() > 0 {
-            match sched.tick() {
-                Ok(events) => route_events(sched, &mut sessions, events),
-                Err(e) => {
-                    // Decode errors are engine-global: fail every live
-                    // session loudly and stop serving.
-                    let msg = format!("{e:#}");
-                    for id in sched.active_ids() {
-                        if let Some(tx) = sessions.close(id) {
-                            let _ = tx.send(SessionEvent::Error(msg.clone()));
-                        }
-                    }
-                    break 'outer;
+            match catch_unwind(AssertUnwindSafe(|| sched.tick())) {
+                Ok(Ok(events)) => route_events(sched, sessions, events),
+                Ok(Err(e)) => {
+                    // Engine-global decode error: fail every live
+                    // session loudly and let the supervisor decide
+                    // whether to rebuild the engine.
+                    let msg = format!("engine error: {e:#}");
+                    fail_inflight(sched, sessions, &msg);
+                    break 'outer LoopExit::Failed(msg);
+                }
+                Err(payload) => {
+                    // Engine-thread panic: same ladder, scarier cause.
+                    let msg = format!("engine panicked: {}", panic_message(payload.as_ref()));
+                    fail_inflight(sched, sessions, &msg);
+                    break 'outer LoopExit::Failed(msg);
                 }
             }
         }
-    }
-    // Shutdown: retire in-flight sequences so nothing strands on the
-    // recall worker, then drop the session channels (clients see EOF).
-    for id in sched.active_ids() {
-        sched.cancel(id);
-        let _ = sched.take_completion(id);
-        sessions.close(id);
     }
 }
 

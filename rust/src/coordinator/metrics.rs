@@ -71,6 +71,10 @@ pub struct Metrics {
     pub failed: u64,
     pub tokens_in: u64,
     pub tokens_out: u64,
+    /// Times the engine-loop supervisor rebuilt the engine after a
+    /// panic or engine-global error (carried across the restarts it
+    /// counts).
+    pub engine_restarts: u64,
     pub started: Option<Instant>,
 }
 
@@ -127,7 +131,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} completed={} cancelled={} failed={} tokens_out={} \
+            "requests={} completed={} cancelled={} failed={} engine_restarts={} tokens_out={} \
              throughput={:.1} tok/s \
              ttft p50={:.1}ms p95={:.1}ms p99={:.1}ms \
              itl p50={:.1}ms p95={:.1}ms p99={:.1}ms \
@@ -136,6 +140,7 @@ impl Metrics {
             self.completed,
             self.cancelled,
             self.failed,
+            self.engine_restarts,
             self.tokens_out,
             self.throughput_tok_s(),
             self.ttft.percentile(50.0) * 1e3,

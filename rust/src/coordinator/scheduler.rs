@@ -643,6 +643,22 @@ impl<B: Backend> Scheduler<B> {
         false
     }
 
+    /// Fail a request mid-flight (engine-fault teardown): the same
+    /// resource reclamation as [`Scheduler::cancel`] — sequence retired,
+    /// KV pages and reservation released — but the request counts as
+    /// `failed`, not `cancelled`, and leaves no completion behind (the
+    /// caller surfaces the fault as the session's terminal error event).
+    /// Returns false if `id` is not in flight.
+    pub fn abort(&mut self, id: u64) -> bool {
+        if !self.cancel(id) {
+            return false;
+        }
+        let _ = self.take_completion(id);
+        self.metrics.cancelled -= 1;
+        self.metrics.on_failed();
+        true
+    }
+
     /// Run until every queued request completes. Completions stay
     /// claimable via [`Scheduler::take_completion`] (bounded backlog).
     pub fn drain(&mut self) -> Result<()> {

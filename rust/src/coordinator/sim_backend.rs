@@ -21,6 +21,7 @@ use crate::config::ModelConfig;
 use crate::coordinator::engine::{Backend, EngineStats, PrefillDone, SampleParams, Sequence};
 use crate::kvcache::alloc::worst_case_pages;
 use crate::kvcache::{AdmitDecision, KvPoolStats, Layout, PageAllocator};
+use crate::util::fault::{FaultPlan, FaultSite};
 
 /// The deterministic next-token function: an LCG over the previous
 /// token, mapped to printable ASCII (so decoded text is readable and
@@ -75,6 +76,10 @@ pub struct SimBackend {
     /// sequence's pool pages come from here, and `kv_admit` reserves
     /// against its capacity.
     alloc: Arc<PageAllocator>,
+    /// Deterministic fault-injection plan: decode-time panics, decode
+    /// errors, and allocator-lock panics fire at seed-derived call
+    /// indices (chaos tests). `None` = production behavior.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl SimBackend {
@@ -86,8 +91,15 @@ impl SimBackend {
     /// across all layers, 0 = unbounded) — the knobs scheduler and
     /// memory tests drive.
     pub fn with_pool(cfg: ModelConfig, pool_pages: u64, prefix_cache: bool) -> SimBackend {
-        let max_prompt = cfg.max_context / 2;
         let alloc = PageAllocator::for_model(&cfg, pool_pages, prefix_cache);
+        SimBackend::with_allocator(cfg, alloc)
+    }
+
+    /// Backend over an existing allocator. Chaos tests use this to keep
+    /// one allocator (and its page gauges) alive across supervised
+    /// engine restarts, exactly like the real engine sharing its pool.
+    pub fn with_allocator(cfg: ModelConfig, alloc: Arc<PageAllocator>) -> SimBackend {
+        let max_prompt = cfg.max_context / 2;
         SimBackend {
             cfg,
             stats: EngineStats::default(),
@@ -97,6 +109,7 @@ impl SimBackend {
             prefilling: Vec::new(),
             fail_decode_ids: Vec::new(),
             alloc,
+            faults: None,
         }
     }
 
@@ -111,6 +124,12 @@ impl SimBackend {
     /// The backing allocator (tests and benches inspect its gauges).
     pub fn allocator(&self) -> Arc<PageAllocator> {
         self.alloc.clone()
+    }
+
+    /// Install a fault plan (shared with other backend incarnations in
+    /// chaos tests so call indices keep advancing across restarts).
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
     }
 
     fn sync_kv_stats(&mut self) {
@@ -217,6 +236,22 @@ impl Backend for SimBackend {
     fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
+        }
+        if let Some(plan) = &self.faults {
+            if plan.check(FaultSite::EnginePanic) {
+                panic!("injected engine panic (sim decode step)");
+            }
+            if plan.check(FaultSite::AllocPanic) {
+                // Panics while holding the allocator mutex: poisons the
+                // lock so recovery (`lock_unpoisoned` semantics in
+                // `PageAllocator::lock`) is exercised on a live pool.
+                self.alloc.panic_while_locked("sim decode step");
+            }
+            if plan.check(FaultSite::DecodeError) {
+                self.stats.faults_injected = plan.injected();
+                return Err(anyhow!("injected engine-global decode error"));
+            }
+            self.stats.faults_injected = plan.injected();
         }
         if let Some(seq) = seqs.iter().find(|s| self.fail_decode_ids.contains(&s.id)) {
             return Err(anyhow!("injected decode failure for request {}", seq.id));

@@ -262,6 +262,33 @@ impl Inner {
         self.release(layer, slot);
         fresh
     }
+
+    /// Full slab-invariant audit, used when recovering a poisoned lock:
+    /// every free-list slot has refcount 0, `used` matches the live-slot
+    /// count, `shared` matches the aliased-slot count, and the ledgers
+    /// agree. All allocator methods keep these invariants across their
+    /// whole critical section or die by assertion *before* mutating, so
+    /// a poisoning panic should always leave them intact.
+    fn invariants_hold(&self) -> bool {
+        let mut used = 0u64;
+        let mut shared = 0u64;
+        for slab in &self.slabs {
+            for &r in &slab.refcnt {
+                if r > 0 {
+                    used += 1;
+                }
+                if r >= 2 {
+                    shared += 1;
+                }
+            }
+            if slab.free.iter().any(|&s| slab.refcnt[s as usize] != 0) {
+                return false;
+            }
+        }
+        used == self.used
+            && shared == self.shared
+            && self.reservations.values().sum::<u64>() == self.reserved
+    }
 }
 
 /// The shared allocator. Cheap to clone via `Arc`; `Send + Sync` so
@@ -361,8 +388,37 @@ impl PageAllocator {
         self.page_elems * 4
     }
 
+    /// Lock the pool, deliberately recovering from poisoning. A panic
+    /// while the lock was held (an engine-thread fault, an injected
+    /// `AllocPanic`) poisons the mutex, and the allocator is shared by
+    /// the engine, the recall worker, and (across supervisor restarts)
+    /// successive engine instances — cascading `PoisonError` panics
+    /// into all of them would turn one contained fault into a process
+    /// death. Every method holds the lock only for in-place mutations
+    /// that assert *before* touching state, so the slab invariants are
+    /// re-audited (debug builds) and the guard handed out.
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.inner.lock().expect("kv page allocator poisoned")
+        #[allow(clippy::disallowed_methods)] // deliberate poison recovery
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                let g = poisoned.into_inner();
+                debug_assert!(
+                    g.invariants_hold(),
+                    "kv page allocator poisoned with broken slab invariants"
+                );
+                g
+            }
+        }
+    }
+
+    /// Fault-injection hook: panic *while holding* the pool lock,
+    /// poisoning the mutex exactly the way a crashed critical section
+    /// would. Exists so chaos tests (`FaultSite::AllocPanic`) exercise
+    /// the poison-recovery path above end to end.
+    pub fn panic_while_locked(&self, msg: &str) -> ! {
+        let _guard = self.lock();
+        panic!("injected allocator fault: {}", msg);
     }
 
     fn prefix_key(&self, layer: usize, layout: Layout, hash: u128) -> PrefixKey {
@@ -618,6 +674,30 @@ mod tests {
         a.release_gpu(1000);
         a.release_gpu(500);
         assert_eq!(a.stats().gpu_bytes_used, 0);
+    }
+
+    #[test]
+    fn poisoned_allocator_stays_usable() {
+        let a = tiny_alloc(8, true);
+        let s0 = a.alloc_slot(0);
+        assert_eq!(a.try_reserve(1, 4), AdmitDecision::Admit);
+        // poison the lock the way a crashed critical section would
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.panic_while_locked("chaos");
+        }));
+        assert!(r.is_err(), "the injected panic propagates to the faulting thread");
+        // every path still works: alloc, data access, ledger, stats
+        let s1 = a.alloc_slot(0);
+        a.write_slot(0, s1, |buf| buf.iter_mut().for_each(|x| *x = 2.0));
+        a.read_slot(0, s1, |buf| assert!(buf.iter().all(|&x| x == 2.0)));
+        assert_eq!(a.try_reserve(2, 4), AdmitDecision::Admit);
+        a.release_reservation(1);
+        a.release_reservation(2);
+        a.release_slot(0, s1);
+        a.release_slot(0, s0);
+        let st = a.stats();
+        assert_eq!(st.pages_used, 0, "pool drains to baseline after poisoning");
+        assert_eq!(st.pages_reserved, 0);
     }
 
     #[test]

@@ -47,6 +47,8 @@ fn run() -> Result<()> {
     // --kv-pool-pages caps the shared CPU KV page pool (0 = unbounded);
     // admission queues requests the pool cannot cover.
     // --prefix-cache enables copy-on-write prefix sharing of pool pages.
+    // --chaos-seed N seeds deterministic fault injection (worker deaths,
+    // engine panics, slow transfers) to exercise the degradation ladder.
     let defaults = FreeKvParams::default();
     let params = FreeKvParams {
         tau,
@@ -56,6 +58,7 @@ fn run() -> Result<()> {
         weight_workers: args.usize_or("weight-workers", defaults.weight_workers),
         kv_pool_pages: args.usize_or("kv-pool-pages", defaults.kv_pool_pages),
         prefix_cache: args.flag("prefix-cache") || defaults.prefix_cache,
+        chaos_seed: args.get("chaos-seed").and_then(|v| v.parse().ok()),
         ..Default::default()
     };
 
@@ -122,19 +125,29 @@ fn run() -> Result<()> {
             // client is !Send); --sim swaps in the artifact-free backend.
             let el = if args.flag("sim") {
                 let (pool_pages, prefix) = (params.kv_pool_pages as u64, params.prefix_cache);
+                // One fault plan for the whole process: a supervised
+                // engine restart keeps advancing the same schedule
+                // instead of replaying it from call index 0.
+                let plan = params
+                    .chaos_seed
+                    .map(|s| std::sync::Arc::new(freekv::util::fault::FaultPlan::chaos(s)));
                 EngineLoop::spawn(loop_cfg, move || {
-                    Ok(Scheduler::new(SimBackend::tiny_with_pool(pool_pages, prefix), scfg))
+                    let mut b = SimBackend::tiny_with_pool(pool_pages, prefix);
+                    if let Some(p) = &plan {
+                        b.set_faults(p.clone());
+                    }
+                    Ok(Scheduler::new(b, scfg.clone()))
                 })?
             } else {
                 EngineLoop::spawn(loop_cfg, move || {
                     let rt = Runtime::load(&artifacts)?;
-                    let eng = Engine::new(rt, &model, params)?;
+                    let eng = Engine::new(rt, &model, params.clone())?;
                     if warm {
                         // warms the engine runtime and every pool worker
                         let n = eng.warmup()?;
                         println!("[freekv] warmed {} artifacts", n);
                     }
-                    Ok(Scheduler::new(eng, scfg))
+                    Ok(Scheduler::new(eng, scfg.clone()))
                 })?
             };
             let max_requests = args.get("max-requests").and_then(|v| v.parse().ok());
@@ -181,8 +194,13 @@ fn run() -> Result<()> {
                 ..Default::default()
             };
             if args.flag("sim") {
-                let backend =
+                let mut backend =
                     SimBackend::tiny_with_pool(params.kv_pool_pages as u64, params.prefix_cache);
+                if let Some(seed) = params.chaos_seed {
+                    backend.set_faults(std::sync::Arc::new(
+                        freekv::util::fault::FaultPlan::chaos(seed),
+                    ));
+                }
                 loadtest(Scheduler::new(backend, scfg), &args)
             } else {
                 let rt = Runtime::load(&artifacts)?;
@@ -198,7 +216,7 @@ fn run() -> Result<()> {
         _ => Err(anyhow!(
             "usage: freekv <info|generate|serve|loadtest|eval> [--model tiny] [--artifacts dir] \
              [--serial-recall] [--exec-workers 2] [--max-lanes 2] [--weight-workers 1] \
-             [--kv-pool-pages 0] [--prefix-cache] [--sim] \
+             [--kv-pool-pages 0] [--prefix-cache] [--sim] [--chaos-seed N] \
              [--queue-cap 64] [--max-batch 4] [--admit-below 4] [--microbatch-min 0] \
              [--max-conns 0] [--drain-secs 5]\n\
              eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
@@ -223,14 +241,23 @@ fn loadtest<B: Backend>(mut sched: Scheduler<B>, args: &Args) -> Result<()> {
         freekv::workload::run_loadtest(&mut sched, workload, args.f64_or("ticks-per-sec", 8.0))?;
     println!("{}", sched.metrics.report());
     println!(
-        "loadtest: {} completed ({} failed) in {:.2}s over {} ticks, max inflight {}, {} tokens out",
+        "loadtest: {} completed ({} failed, {} engine faults) in {:.2}s over {} ticks, \
+         max inflight {}, {} tokens out",
         report.completed,
         report.failed,
+        report.tick_faults,
         report.wall_secs,
         report.ticks,
         report.max_inflight,
         report.tokens_out
     );
+    if report.tick_faults > 0 {
+        println!(
+            "loadtest: degraded run — {} tick(s) hit an injected or real engine fault; \
+             every request still reached a terminal outcome",
+            report.tick_faults
+        );
+    }
     Ok(())
 }
 

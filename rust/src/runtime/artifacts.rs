@@ -179,6 +179,7 @@ impl Manifest {
     /// its `Arc` the memory is released and a later reader re-reads
     /// from disk (the OS page cache makes that cheap).
     pub fn read_blob(&self, file: &str) -> Result<Arc<Vec<u8>>> {
+        #[allow(clippy::disallowed_methods)] // poisoning mapped to an error, not unwrapped
         let mut cache = self
             .blob_cache
             .lock()

@@ -42,12 +42,25 @@
 //! is how `EngineStats` proves weight memory stopped scaling with the
 //! pool.
 //!
-//! Failure semantics: a panic inside a job is caught on the worker,
-//! reported as an error on that job's ticket, and the worker keeps
-//! serving (one poisoned input must not take down the pool). A worker
-//! that dies entirely surfaces as a disconnected ticket. Dropping the
-//! pool drains: already-queued jobs still execute and their tickets
-//! still resolve, then the workers exit and are joined.
+//! ## Failure semantics & degradation ladder
+//!
+//! A panic inside a job is caught on the worker, reported as an error
+//! on that job's ticket, and the worker keeps serving (one poisoned
+//! input must not take down the pool). Failed job attempts (error or
+//! panic) get **one deterministic retry** on the same worker before the
+//! failure surfaces — transient faults cost a retry, persistent ones
+//! still fail fast. A worker that *dies* resolves its queued tickets as
+//! errors (never leaves them blocking), is marked dead so routing steers
+//! around it, and is **respawned with a bounded budget** and a small
+//! deterministic backoff the next time a job needs it; respawned workers
+//! keep their index, so weight affinity is preserved. When every
+//! eligible worker is dead and the budget is exhausted, submission
+//! returns an already-failed ticket (the engine then falls back to
+//! inline execution). Dropping the pool drains: already-queued jobs
+//! still execute and their tickets still resolve — including on dead
+//! workers, whose queues resolve as disconnects — then the workers exit
+//! and are joined. Faults can be injected deterministically via
+//! [`ExecutorPool::set_faults`] (`ExecJobError`, `ExecWorkerDeath`).
 //!
 //! The pool is generic over [`ExecBackend`] so its scheduling/lifecycle
 //! machinery is testable on hosts without a native XLA backend (see
@@ -63,16 +76,26 @@
 //! CPU kernels — so pooling is a pure scheduling change.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::{self, JoinHandle};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::artifacts::Manifest;
 use super::client::{HostTensor, Runtime};
+use crate::util::fault::{panic_message, FaultPlan, FaultSite};
+use crate::util::sync::lock_unpoisoned;
+
+/// How many times a dead worker may be respawned before the pool gives
+/// up on that slot and submission degrades to already-failed tickets.
+const RESPAWN_BUDGET: u64 = 2;
+
+/// Base backoff before a respawn attempt; scales linearly with the
+/// attempt number so repeated deaths pay increasing, deterministic cost.
+const RESPAWN_BACKOFF: Duration = Duration::from_millis(10);
 
 /// One artifact execution, typed by pipeline stage. The variants carry
 /// the fully-resolved artifact name (the engine owns config/bucket
@@ -279,14 +302,42 @@ impl ExecBackend for Runtime {
 struct PoolCounters {
     compiled: AtomicU64,
     weight_uploads: AtomicU64,
+    retries: AtomicU64,
+    respawns: AtomicU64,
 }
 
-/// One worker's submission side: its private queue plus a gauge of jobs
-/// submitted-but-not-finished (the routing load signal).
-#[derive(Clone)]
+/// Liveness + health gauges of the pool, surfaced in `EngineStats` and
+/// on `/metrics`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolHealth {
+    /// Configured worker count.
+    pub workers: usize,
+    /// Workers currently accepting jobs.
+    pub alive: usize,
+    /// Dead workers brought back over the pool's lifetime.
+    pub respawns: u64,
+    /// Job attempts that failed once and were retried.
+    pub retries: u64,
+}
+
+/// State shared with the worker thread itself. Deliberately does NOT
+/// hold the job `Sender`: a worker must never keep its own queue open,
+/// or pool drop would deadlock waiting for the queue to close.
+struct WorkerState {
+    /// Jobs submitted-but-not-finished (the routing load signal).
+    outstanding: AtomicU64,
+    /// Cleared when the worker exits (injected death, queue close) or a
+    /// send to it fails; routing skips dead workers.
+    alive: AtomicBool,
+}
+
+/// One worker's submission side. The sender is replaced wholesale when
+/// the worker is respawned, hence the mutex (held only to clone/swap).
 struct WorkerLink {
-    tx: Sender<JobMsg>,
-    outstanding: Arc<AtomicU64>,
+    tx: Mutex<Sender<JobMsg>>,
+    state: Arc<WorkerState>,
+    /// Remaining respawn budget for this slot.
+    respawns_left: AtomicU64,
 }
 
 /// Cloneable, `Send` submission handle. Holding one keeps the pool's
@@ -294,19 +345,37 @@ struct WorkerLink {
 /// pool's own copy) is gone and their queues have drained.
 #[derive(Clone)]
 pub struct ExecutorHandle {
-    links: Vec<WorkerLink>,
+    links: Arc<Vec<WorkerLink>>,
     weight_workers: usize,
     jobs: Arc<AtomicU64>,
     counters: Arc<PoolCounters>,
+    faults: Arc<OnceLock<Arc<FaultPlan>>>,
+    /// Respawn worker `i` in place (bounded budget, deterministic
+    /// backoff). Type-erased: constructed inside `spawn_routed`, where
+    /// the backend type and factory are still known.
+    respawn: Arc<dyn Fn(usize) -> Result<(), String> + Send + Sync>,
 }
 
 impl ExecutorHandle {
-    /// Enqueue a job on the least-loaded eligible worker (weight-bearing
-    /// jobs: the weight workers only). Never blocks. If the pool is gone
-    /// the error surfaces at [`ExecTicket::wait`].
+    /// Enqueue a job on the least-loaded *live* eligible worker
+    /// (weight-bearing jobs: the weight workers only), respawning a dead
+    /// worker if none is live. Never blocks on a queue. When every
+    /// eligible worker is dead and the respawn budget is exhausted, the
+    /// returned ticket is already resolved to an error — the caller's
+    /// cue to fall back to inline execution.
     pub fn submit(&self, job: ExecJob) -> ExecTicket {
-        let worker = self.route(&job);
-        self.submit_to(worker, job)
+        match self.route(&job) {
+            Some(worker) => self.submit_to(worker, job),
+            None => {
+                let name = job.name().to_string();
+                let (reply, rx) = channel();
+                let _ = reply.send(Err(format!(
+                    "no live executor worker for `{}` (respawn budget exhausted)",
+                    name
+                )));
+                ExecTicket { rx, name }
+            }
+        }
     }
 
     /// Enqueue a job on a specific worker (warm-up broadcast, tests).
@@ -315,34 +384,69 @@ impl ExecutorHandle {
         let (reply, rx) = channel();
         self.jobs.fetch_add(1, Ordering::Relaxed);
         let link = &self.links[worker];
-        link.outstanding.fetch_add(1, Ordering::SeqCst);
+        link.state.outstanding.fetch_add(1, Ordering::SeqCst);
+        let tx = lock_unpoisoned(&link.tx).clone();
         // On a dead worker the message (with its reply sender) is
-        // dropped, which the ticket observes as a disconnect.
-        if link.tx.send(JobMsg { job, reply }).is_err() {
-            link.outstanding.fetch_sub(1, Ordering::SeqCst);
+        // dropped, which the ticket observes as a disconnect error.
+        if tx.send(JobMsg { job, reply }).is_err() {
+            link.state.outstanding.fetch_sub(1, Ordering::SeqCst);
+            link.state.alive.store(false, Ordering::SeqCst);
         }
         ExecTicket { rx, name }
     }
 
-    /// Least-outstanding worker among those eligible for this job; ties
-    /// prefer non-weight workers so the weight lane stays clear for the
-    /// jobs that must run there.
-    fn route(&self, job: &ExecJob) -> usize {
-        let eligible = if job.needs_weights() {
-            &self.links[..self.weight_workers]
-        } else {
-            &self.links[..]
-        };
-        let mut best = 0usize;
+    /// Least-outstanding live worker among those eligible for this job;
+    /// ties prefer non-weight workers so the weight lane stays clear for
+    /// the jobs that must run there. With every eligible worker dead,
+    /// attempts a respawn (index order, so routing stays deterministic).
+    fn route(&self, job: &ExecJob) -> Option<usize> {
+        let eligible =
+            if job.needs_weights() { self.weight_workers } else { self.links.len() };
+        let mut best: Option<usize> = None;
         let mut best_load = u64::MAX;
-        for (i, link) in eligible.iter().enumerate() {
-            let load = link.outstanding.load(Ordering::SeqCst);
+        for (i, link) in self.links[..eligible].iter().enumerate() {
+            if !link.state.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let load = link.state.outstanding.load(Ordering::SeqCst);
             if load < best_load || (load == best_load && i >= self.weight_workers) {
-                best = i;
+                best = Some(i);
                 best_load = load;
             }
         }
+        if best.is_none() {
+            for i in 0..eligible {
+                if (self.respawn)(i).is_ok() {
+                    return Some(i);
+                }
+            }
+        }
         best
+    }
+
+    /// Would this job find (or revive) a worker right now? The engine
+    /// checks before dispatching a pooled stage and runs inline when the
+    /// answer is no.
+    pub fn ready_for(&self, job: &ExecJob) -> bool {
+        self.route(job).is_some()
+    }
+
+    /// Is a weight-eligible worker live (reviving one if needed)? Gates
+    /// chunked pooled prefill; `false` means prefill synchronously.
+    pub fn ready_weight(&self) -> bool {
+        if self.links[..self.weight_workers]
+            .iter()
+            .any(|l| l.state.alive.load(Ordering::SeqCst))
+        {
+            return true;
+        }
+        (0..self.weight_workers).any(|i| (self.respawn)(i).is_ok())
+    }
+
+    /// Install a fault plan (first caller wins; later calls are ignored).
+    /// Workers observe it from their next job on.
+    pub fn set_faults(&self, plan: Arc<FaultPlan>) {
+        let _ = self.faults.set(plan);
     }
 
     pub fn workers(&self) -> usize {
@@ -367,6 +471,20 @@ impl ExecutorHandle {
             weight_uploads: self.counters.weight_uploads.load(Ordering::Relaxed),
         }
     }
+
+    /// Live health gauges (worker liveness, respawns, retries).
+    pub fn health(&self) -> PoolHealth {
+        PoolHealth {
+            workers: self.links.len(),
+            alive: self
+                .links
+                .iter()
+                .filter(|l| l.state.alive.load(Ordering::SeqCst))
+                .count(),
+            respawns: self.counters.respawns.load(Ordering::Relaxed),
+            retries: self.counters.retries.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// The pool: owns the worker threads. Dropping it drains the queues
@@ -376,7 +494,8 @@ pub struct ExecutorPool {
     handle: Option<ExecutorHandle>,
     worker_count: usize,
     weight_workers: usize,
-    workers: Vec<JoinHandle<()>>,
+    /// Shared with the respawner so replacement threads are joined too.
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl ExecutorPool {
@@ -409,22 +528,31 @@ impl ExecutorPool {
         let weight_workers = weight_workers.clamp(1, workers);
         let factory = Arc::new(factory);
         let counters = Arc::new(PoolCounters::default());
+        let faults_cell: Arc<OnceLock<Arc<FaultPlan>>> = Arc::new(OnceLock::new());
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let mut links = Vec::with_capacity(workers);
         let mut joins = Vec::with_capacity(workers);
         let mut failures = Vec::new();
         for i in 0..workers {
             let (tx, rx) = channel::<JobMsg>();
-            let outstanding = Arc::new(AtomicU64::new(0));
-            links.push(WorkerLink { tx, outstanding: outstanding.clone() });
+            let state = Arc::new(WorkerState {
+                outstanding: AtomicU64::new(0),
+                alive: AtomicBool::new(true),
+            });
+            links.push(WorkerLink {
+                tx: Mutex::new(tx),
+                state: state.clone(),
+                respawns_left: AtomicU64::new(RESPAWN_BUDGET),
+            });
             let factory = factory.clone();
             let ready = ready_tx.clone();
             let totals = counters.clone();
+            let faults = faults_cell.clone();
             let spawned = thread::Builder::new()
                 .name(format!("freekv-exec-{}", i))
                 .spawn(move || {
                     // Backend built on-thread; never crosses threads.
-                    let mut backend = match factory(i) {
+                    let backend = match factory(i) {
                         Ok(b) => {
                             let _ = ready.send(Ok(()));
                             b
@@ -434,24 +562,7 @@ impl ExecutorPool {
                             return;
                         }
                     };
-                    let mut last = ExecCounters::default();
-                    while let Ok(JobMsg { job, reply }) = rx.recv() {
-                        let result = run_job(&mut backend, job, i);
-                        outstanding.fetch_sub(1, Ordering::SeqCst);
-                        let now = backend.counters();
-                        totals.compiled.fetch_add(
-                            now.compiled.saturating_sub(last.compiled),
-                            Ordering::Relaxed,
-                        );
-                        totals.weight_uploads.fetch_add(
-                            now.weight_uploads.saturating_sub(last.weight_uploads),
-                            Ordering::Relaxed,
-                        );
-                        last = now;
-                        // A caller that dropped its ticket just loses the
-                        // result; the worker moves on.
-                        let _ = reply.send(result);
-                    }
+                    worker_loop(backend, rx, i, &state, &totals, &faults);
                 });
             match spawned {
                 Ok(j) => joins.push(j),
@@ -488,12 +599,99 @@ impl ExecutorPool {
             ));
         }
 
+        let links = Arc::new(links);
+        let joins = Arc::new(Mutex::new(joins));
+
+        // The respawner: replaces a dead worker's thread and queue in
+        // place (same index, so weight affinity is preserved). Built
+        // here, where `B` and the factory are still nameable, and then
+        // type-erased into the handle.
+        let respawn: Arc<dyn Fn(usize) -> Result<(), String> + Send + Sync> = {
+            let links = links.clone();
+            let joins = joins.clone();
+            let factory = factory.clone();
+            let totals = counters.clone();
+            let faults = faults_cell.clone();
+            Arc::new(move |i: usize| {
+                let link = &links[i];
+                if link.state.alive.load(Ordering::SeqCst) {
+                    return Ok(()); // a concurrent respawn beat us to it
+                }
+                // Claim one unit of budget (CAS so racers cannot overspend).
+                let left = loop {
+                    let left = link.respawns_left.load(Ordering::SeqCst);
+                    if left == 0 {
+                        return Err(format!(
+                            "executor worker {} respawn budget exhausted",
+                            i
+                        ));
+                    }
+                    if link
+                        .respawns_left
+                        .compare_exchange(left, left - 1, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        break left;
+                    }
+                };
+                // Deterministic linear backoff: later attempts wait longer.
+                thread::sleep(RESPAWN_BACKOFF * (RESPAWN_BUDGET - left + 1) as u32);
+                let (tx, rx) = channel::<JobMsg>();
+                let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+                let spawned = thread::Builder::new()
+                    .name(format!("freekv-exec-{}", i))
+                    .spawn({
+                        let factory = factory.clone();
+                        let state = link.state.clone();
+                        let totals = totals.clone();
+                        let faults = faults.clone();
+                        move || {
+                            let backend = match factory(i) {
+                                Ok(b) => {
+                                    let _ = ready_tx.send(Ok(()));
+                                    b
+                                }
+                                Err(e) => {
+                                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                                    return;
+                                }
+                            };
+                            worker_loop(backend, rx, i, &state, &totals, &faults);
+                        }
+                    })
+                    .map_err(|e| format!("respawning executor worker {}: {}", i, e))?;
+                match ready_rx.recv() {
+                    Ok(Ok(())) => {
+                        // Jobs stranded in the dead worker's old queue have
+                        // resolved (or will) as disconnects; the load gauge
+                        // restarts clean with the fresh queue.
+                        link.state.outstanding.store(0, Ordering::SeqCst);
+                        *lock_unpoisoned(&link.tx) = tx;
+                        link.state.alive.store(true, Ordering::SeqCst);
+                        totals.respawns.fetch_add(1, Ordering::Relaxed);
+                        lock_unpoisoned(&joins).push(spawned);
+                        Ok(())
+                    }
+                    Ok(Err(e)) => {
+                        let _ = spawned.join();
+                        Err(format!("respawned executor worker {} failed: {}", i, e))
+                    }
+                    Err(_) => {
+                        let _ = spawned.join();
+                        Err(format!("respawned executor worker {} died before ready", i))
+                    }
+                }
+            })
+        };
+
         Ok(ExecutorPool {
             handle: Some(ExecutorHandle {
                 links,
                 weight_workers,
                 jobs: Arc::new(AtomicU64::new(0)),
                 counters,
+                faults: faults_cell,
+                respawn,
             }),
             worker_count: workers,
             weight_workers,
@@ -578,24 +776,103 @@ impl ExecutorPool {
     pub fn counters(&self) -> ExecCounters {
         self.inner().counters()
     }
+
+    /// Install a fault plan on the workers (first caller wins).
+    pub fn set_faults(&self, plan: Arc<FaultPlan>) {
+        self.inner().set_faults(plan);
+    }
+
+    /// Live health gauges (worker liveness, respawns, retries).
+    pub fn health(&self) -> PoolHealth {
+        self.inner().health()
+    }
+
+    /// See [`ExecutorHandle::ready_for`].
+    pub fn ready_for(&self, job: &ExecJob) -> bool {
+        self.inner().ready_for(job)
+    }
+
+    /// See [`ExecutorHandle::ready_weight`].
+    pub fn ready_weight(&self) -> bool {
+        self.inner().ready_weight()
+    }
 }
 
 impl Drop for ExecutorPool {
     fn drop(&mut self) {
-        // Close the queues, let the workers drain what's already
-        // enqueued, then join them.
+        // Close the queues (the handle holds every sender and the
+        // respawner), let live workers drain what's already enqueued,
+        // then join them. Dead workers' threads are already gone — their
+        // JoinHandles resolve immediately, so a dead worker can never
+        // hang shutdown.
         self.handle.take();
-        for j in self.workers.drain(..) {
+        let joins: Vec<JoinHandle<()>> = lock_unpoisoned(&self.workers).drain(..).collect();
+        for j in joins {
             let _ = j.join();
         }
     }
 }
 
-/// Execute one job on a worker's backend, panics contained.
+/// One worker's serve loop: pull jobs until the queue closes or an
+/// injected death fires. On death, the current job and everything
+/// already queued resolve as errors (tickets must never block on a dead
+/// worker) before the thread exits.
+fn worker_loop<B: ExecBackend>(
+    mut backend: B,
+    rx: Receiver<JobMsg>,
+    i: usize,
+    state: &WorkerState,
+    totals: &PoolCounters,
+    faults: &OnceLock<Arc<FaultPlan>>,
+) {
+    let mut last = ExecCounters::default();
+    while let Ok(JobMsg { job, reply }) = rx.recv() {
+        if let Some(f) = faults.get() {
+            if f.check(FaultSite::ExecWorkerDeath) {
+                state.alive.store(false, Ordering::SeqCst);
+                let fail = |job: ExecJob, reply: Sender<Result<ExecDone, String>>| {
+                    state.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    let _ = reply.send(Err(format!(
+                        "executor worker {} died (injected fault) with `{}` queued",
+                        i,
+                        job.name()
+                    )));
+                };
+                fail(job, reply);
+                while let Ok(JobMsg { job, reply }) = rx.try_recv() {
+                    fail(job, reply);
+                }
+                return;
+            }
+        }
+        let result = run_job(&mut backend, job, i, faults.get().map(|a| a.as_ref()), totals);
+        state.outstanding.fetch_sub(1, Ordering::SeqCst);
+        let now = backend.counters();
+        totals
+            .compiled
+            .fetch_add(now.compiled.saturating_sub(last.compiled), Ordering::Relaxed);
+        totals.weight_uploads.fetch_add(
+            now.weight_uploads.saturating_sub(last.weight_uploads),
+            Ordering::Relaxed,
+        );
+        last = now;
+        // A caller that dropped its ticket just loses the result; the
+        // worker moves on.
+        let _ = reply.send(result);
+    }
+    state.alive.store(false, Ordering::SeqCst);
+}
+
+/// Execute one job on a worker's backend, panics contained. A failed
+/// attempt (error or panic) gets exactly one retry on the same worker —
+/// deterministic, so fault-free runs are unaffected — before the
+/// failure surfaces on the ticket.
 fn run_job<B: ExecBackend>(
     backend: &mut B,
     job: ExecJob,
     worker: usize,
+    faults: Option<&FaultPlan>,
+    totals: &PoolCounters,
 ) -> Result<ExecDone, String> {
     let t0 = Instant::now();
     match job {
@@ -618,33 +895,46 @@ fn run_job<B: ExecBackend>(
         }
         job => {
             let (name, layer, args) = job.into_parts();
-            let outcome = catch_unwind(AssertUnwindSafe(|| backend.run(&name, &args, layer)));
+            let mut attempt = |backend: &mut B| -> Result<Vec<HostTensor>, String> {
+                if let Some(f) = faults {
+                    if f.check(FaultSite::ExecJobError) {
+                        return Err(format!(
+                            "injected transient failure on worker {}",
+                            worker
+                        ));
+                    }
+                }
+                match catch_unwind(AssertUnwindSafe(|| backend.run(&name, &args, layer))) {
+                    Ok(Ok(outputs)) => Ok(outputs),
+                    Ok(Err(e)) => Err(format!("{e:#}")),
+                    Err(payload) => Err(format!(
+                        "worker {} panicked executing `{}`: {}",
+                        worker,
+                        name,
+                        panic_message(&payload)
+                    )),
+                }
+            };
+            let outcome = match attempt(backend) {
+                Ok(outputs) => Ok(outputs),
+                Err(first) => {
+                    totals.retries.fetch_add(1, Ordering::Relaxed);
+                    attempt(backend).map_err(|second| {
+                        format!("{} (after one retry; first failure: {})", second, first)
+                    })
+                }
+            };
+            drop(attempt);
             match outcome {
-                Ok(Ok(outputs)) => Ok(ExecDone {
+                Ok(outputs) => Ok(ExecDone {
                     outputs,
                     inputs: args,
                     busy_secs: t0.elapsed().as_secs_f64(),
                     worker,
                 }),
-                Ok(Err(e)) => Err(format!("{e:#}")),
-                Err(payload) => Err(format!(
-                    "worker {} panicked executing `{}`: {}",
-                    worker,
-                    name,
-                    panic_message(&payload)
-                )),
+                Err(e) => Err(e),
             }
         }
-    }
-}
-
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
     }
 }
 

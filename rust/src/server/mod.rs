@@ -521,10 +521,18 @@ fn handle_connection(
             // Health is honest: it round-trips the engine loop, so a dead
             // loop flips this instance to 503 for load balancers.
             ("GET", "/healthz") => match sub.metrics_report() {
-                Ok(_) => write_response_conn(stream, 200, "text/plain", "ok", keep).is_ok() && keep,
+                // Alive: report the supervisor's ladder rung — "ok" or
+                // "degraded" (engine restarted, executor worker dead,
+                // recall gone serial). Both are 200: a degraded
+                // instance still serves and must not be killed by its
+                // load balancer.
+                Ok(_) => {
+                    let body = sub.health().as_str();
+                    write_response_conn(stream, 200, "text/plain", body, keep).is_ok() && keep
+                }
                 Err(_) => {
                     engine_down.store(true, Ordering::SeqCst);
-                    let _ = write_response(stream, 503, "text/plain", "engine loop down");
+                    let _ = write_response(stream, 503, "text/plain", "down");
                     false
                 }
             },

@@ -12,10 +12,12 @@
 //! (`transfer::pipeline`); the worker's counters are snapshotted per job
 //! and merged back at the drain point.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::kvcache::gpu::{CompletedPage, SelectSlots};
 use crate::kvcache::pool::{LayerPool, Layout};
+use crate::util::fault::{FaultPlan, FaultSite};
 
 #[derive(Debug, Default, Clone)]
 pub struct TransferCounters {
@@ -62,6 +64,9 @@ pub struct TransferEngine {
     cur: usize,
     pub double_buffer: bool,
     pub counters: TransferCounters,
+    /// Fault injection (`SlowTransfer` stalls a recall). Set by the
+    /// recall pipeline on its worker's engine; `None` in production.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl TransferEngine {
@@ -71,6 +76,7 @@ impl TransferEngine {
             cur: 0,
             double_buffer,
             counters: TransferCounters::default(),
+            faults: None,
         }
     }
 
@@ -86,6 +92,13 @@ impl TransferEngine {
         sel: &mut SelectSlots,
         slot_j: usize,
     ) {
+        if let Some(f) = &self.faults {
+            if f.check(FaultSite::SlowTransfer) {
+                // A degraded link: the recall still completes, it just
+                // pays a stall (shows up as hidden/exposed recall time).
+                std::thread::sleep(f.slow_transfer_delay());
+            }
+        }
         let (p, d) = (pool.p, pool.d);
         let chunks = pool.recall_chunks(page, head);
         let buf_idx = self.cur;

@@ -62,12 +62,15 @@
 //! scoring step *t*'s selection.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::Instant;
 
 use crate::kvcache::{apply_selection_parts, LayerXfer};
 use crate::transfer::engine::{TransferCounters, TransferEngine};
+use crate::util::fault::{FaultPlan, FaultSite};
 
 /// A speculative-recall work item for one (sequence, layer).
 pub struct RecallJob {
@@ -92,6 +95,13 @@ pub struct RecallDone {
     pub counters: TransferCounters,
     /// Wall time the worker spent on this job (hidden recall time).
     pub busy_secs: f64,
+    /// `Some(selections)` when the worker did NOT complete the job — an
+    /// injected worker death or a contained per-job panic. The transfer
+    /// half always comes back (possibly with a partial selection
+    /// installed); the engine must re-run the echoed selection inline.
+    /// The invariant behind the whole ladder: a `LayerXfer` handed to
+    /// the worker is ALWAYS handed back, whatever happened.
+    pub aborted: Option<Vec<Vec<usize>>>,
 }
 
 /// Handle to the background recall worker. Dropping it closes the job
@@ -112,32 +122,99 @@ impl RecallPipeline {
     /// Spawn the worker. `page_size`/`d_head` size its staging buffers
     /// (the same double-buffered pair a serial `TransferEngine` uses).
     pub fn new(page_size: usize, d_head: usize) -> RecallPipeline {
+        RecallPipeline::with_faults(page_size, d_head, None)
+    }
+
+    /// [`RecallPipeline::new`] with a fault plan on the worker
+    /// (`RecallWorkerDeath` aborts jobs, `SlowTransfer` stalls recalls).
+    ///
+    /// Failure containment: a per-job panic is caught on the worker and
+    /// the job's transfer half is sent back with `aborted` set — the
+    /// worker keeps serving. An injected worker death flips the worker
+    /// into *dead mode*: it stops doing recall work and bounces every
+    /// job back untouched (also `aborted`). Dead mode deliberately keeps
+    /// the thread on its receive loop rather than exiting, so a
+    /// `LayerXfer` can never be stranded in a closed channel; the engine
+    /// degrades to serial recall after the first abort it sees.
+    pub fn with_faults(
+        page_size: usize,
+        d_head: usize,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> RecallPipeline {
         let (job_tx, job_rx) = channel::<RecallJob>();
         let (done_tx, done_rx) = channel::<RecallDone>();
         let worker = thread::Builder::new()
             .name("freekv-recall".into())
             .spawn(move || {
                 let mut eng = TransferEngine::new(page_size, d_head, true);
-                for mut job in job_rx {
-                    let t0 = Instant::now();
-                    let mut recalled = 0usize;
-                    for (head, pages) in job.selections.iter().enumerate() {
-                        recalled += apply_selection_parts(
-                            &mut job.xfer.select,
-                            &job.xfer.pool,
-                            head,
-                            pages,
-                            &mut eng,
-                        );
+                eng.faults = faults.clone();
+                let mut dying = false;
+                for job in job_rx {
+                    if !dying {
+                        if let Some(f) = &faults {
+                            dying = f.check(FaultSite::RecallWorkerDeath);
+                        }
                     }
+                    let RecallJob { seq_uid, layer, selections, xfer } = job;
+                    if dying {
+                        let done = RecallDone {
+                            seq_uid,
+                            layer,
+                            xfer,
+                            recalled_pages: 0,
+                            counters: TransferCounters::default(),
+                            busy_secs: 0.0,
+                            aborted: Some(selections),
+                        };
+                        if done_tx.send(done).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
+                    let t0 = Instant::now();
+                    // The transfer half lives OUTSIDE the unwind boundary
+                    // so it survives a panicking recall and always goes
+                    // back to the engine.
+                    let mut xfer_cell = Some(xfer);
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        let xf = xfer_cell.as_mut().expect("transfer half present");
+                        let mut recalled = 0usize;
+                        for (head, pages) in selections.iter().enumerate() {
+                            recalled += apply_selection_parts(
+                                &mut xf.select,
+                                &xf.pool,
+                                head,
+                                pages,
+                                &mut eng,
+                            );
+                        }
+                        recalled
+                    }));
+                    let xfer = xfer_cell.take().expect("transfer half survives the job");
                     let counters = std::mem::take(&mut eng.counters);
-                    let done = RecallDone {
-                        seq_uid: job.seq_uid,
-                        layer: job.layer,
-                        xfer: job.xfer,
-                        recalled_pages: recalled,
-                        counters,
-                        busy_secs: t0.elapsed().as_secs_f64(),
+                    let busy_secs = t0.elapsed().as_secs_f64();
+                    let done = match outcome {
+                        Ok(recalled) => RecallDone {
+                            seq_uid,
+                            layer,
+                            xfer,
+                            recalled_pages: recalled,
+                            counters,
+                            busy_secs,
+                            aborted: None,
+                        },
+                        // Contained panic: partial work is fine — the
+                        // inline redo of the echoed selection converges
+                        // (apply_selection diffs against current slots).
+                        Err(_) => RecallDone {
+                            seq_uid,
+                            layer,
+                            xfer,
+                            recalled_pages: 0,
+                            counters,
+                            busy_secs,
+                            aborted: Some(selections),
+                        },
                     };
                     if done_tx.send(done).is_err() {
                         break; // receiver gone: engine is shutting down
@@ -156,14 +233,18 @@ impl RecallPipeline {
     }
 
     /// Enqueue a job. Returns immediately; the worker picks it up FIFO.
-    pub fn submit(&mut self, job: RecallJob) {
-        self.in_flight += 1;
-        self.enqueued_jobs += 1;
-        self.job_tx
-            .as_ref()
-            .expect("pipeline already shut down")
-            .send(job)
-            .expect("recall worker hung up");
+    /// `Err` hands the job back when the worker is unreachable (channel
+    /// closed) — the caller must then run the recall inline.
+    pub fn submit(&mut self, job: RecallJob) -> Result<(), RecallJob> {
+        let Some(tx) = self.job_tx.as_ref() else { return Err(job) };
+        match tx.send(job) {
+            Ok(()) => {
+                self.in_flight += 1;
+                self.enqueued_jobs += 1;
+                Ok(())
+            }
+            Err(std::sync::mpsc::SendError(job)) => Err(job),
+        }
     }
 
     /// Jobs submitted but not yet absorbed into the ready map.
@@ -187,18 +268,22 @@ impl RecallPipeline {
 
     /// Block until the job for (seq_uid, layer) completes and return it.
     /// Earlier completions for other keys are parked in the ready map.
-    pub fn wait(&mut self, seq_uid: u64, layer: usize) -> RecallDone {
+    /// `None` means the worker vanished without returning the transfer
+    /// half — unreachable under the dead-mode protocol (a dying worker
+    /// bounces jobs back instead of exiting), so callers treat it as the
+    /// sequence's state being unrecoverable.
+    pub fn wait(&mut self, seq_uid: u64, layer: usize) -> Option<RecallDone> {
         self.poll();
         loop {
             if let Some(done) = self.ready.remove(&(seq_uid, layer)) {
-                return done;
+                return Some(done);
             }
             match self.done_rx.recv() {
                 Ok(done) => self.absorb(done),
-                Err(_) => panic!(
-                    "recall worker exited with job (seq {}, layer {}) outstanding",
-                    seq_uid, layer
-                ),
+                Err(_) => {
+                    self.in_flight = 0;
+                    return None;
+                }
             }
         }
     }
@@ -246,8 +331,11 @@ mod tests {
         // worker path on an identical transfer half
         let b = xfer(pages, m, p, d, 42);
         let mut pipe = RecallPipeline::new(p, d);
-        pipe.submit(RecallJob { seq_uid: 7, layer: 0, selections: sel_pages.clone(), xfer: b });
-        let done = pipe.wait(7, 0);
+        assert!(pipe
+            .submit(RecallJob { seq_uid: 7, layer: 0, selections: sel_pages.clone(), xfer: b })
+            .is_ok());
+        let done = pipe.wait(7, 0).expect("worker returns the job");
+        assert!(done.aborted.is_none());
         assert_eq!(done.recalled_pages, inline_recalled);
         assert_eq!(done.counters.recalled_pages, eng.counters.recalled_pages);
         assert_eq!(done.counters.h2d_chunks, eng.counters.h2d_chunks);
@@ -263,21 +351,93 @@ mod tests {
         let (pages, m, p, d) = (8, 2, 4, 8);
         let mut pipe = RecallPipeline::new(p, d);
         for layer in 0..4usize {
-            pipe.submit(RecallJob {
-                seq_uid: 1,
-                layer,
-                selections: vec![vec![1 + layer % 3], vec![2]],
-                xfer: xfer(pages, m, p, d, layer as u64),
-            });
+            assert!(pipe
+                .submit(RecallJob {
+                    seq_uid: 1,
+                    layer,
+                    selections: vec![vec![1 + layer % 3], vec![2]],
+                    xfer: xfer(pages, m, p, d, layer as u64),
+                })
+                .is_ok());
         }
         assert_eq!(pipe.pending(), 4);
         // await in reverse order: FIFO completions get parked and matched
         for layer in (0..4usize).rev() {
-            let done = pipe.wait(1, layer);
+            let done = pipe.wait(1, layer).expect("worker alive");
             assert_eq!(done.layer, layer);
             assert!(done.xfer.select.selected(0).iter().flatten().count() > 0);
         }
         assert_eq!(pipe.pending(), 0);
         assert_eq!(pipe.enqueued_jobs, 4);
+    }
+
+    #[test]
+    fn injected_worker_death_bounces_jobs_back() {
+        let (pages, m, p, d) = (8, 2, 4, 8);
+        let plan = Arc::new(FaultPlan::events(&[(FaultSite::RecallWorkerDeath, 1)]));
+        let mut pipe = RecallPipeline::with_faults(p, d, Some(plan.clone()));
+        assert!(pipe
+            .submit(RecallJob {
+                seq_uid: 1,
+                layer: 0,
+                selections: vec![vec![1], vec![2]],
+                xfer: xfer(pages, m, p, d, 1),
+            })
+            .is_ok());
+        let first = pipe.wait(1, 0).expect("first job completes normally");
+        assert!(first.aborted.is_none());
+        assert!(first.recalled_pages > 0);
+        // the second job hits the injected death: bounced back untouched
+        assert!(pipe
+            .submit(RecallJob {
+                seq_uid: 1,
+                layer: 1,
+                selections: vec![vec![3], vec![4]],
+                xfer: xfer(pages, m, p, d, 2),
+            })
+            .is_ok());
+        let second = pipe.wait(1, 1).expect("aborted jobs still return the transfer half");
+        assert_eq!(second.aborted.as_deref(), Some(&[vec![3usize], vec![4usize]][..]));
+        assert_eq!(second.recalled_pages, 0);
+        // dead mode is sticky: later jobs bounce too, nothing is stranded
+        assert!(pipe
+            .submit(RecallJob {
+                seq_uid: 1,
+                layer: 2,
+                selections: vec![vec![1], vec![1]],
+                xfer: xfer(pages, m, p, d, 3),
+            })
+            .is_ok());
+        assert!(pipe.wait(1, 2).expect("still answering").aborted.is_some());
+        assert_eq!(pipe.pending(), 0);
+        assert_eq!(plan.fired(FaultSite::RecallWorkerDeath), 1);
+    }
+
+    #[test]
+    fn job_panic_is_contained_and_returns_the_transfer_half() {
+        let (pages, m, p, d) = (4, 2, 4, 8);
+        let mut pipe = RecallPipeline::new(p, d);
+        // page 99 is out of range for a 4-page pool: the recall panics
+        // on the worker; the transfer half must still come back
+        assert!(pipe
+            .submit(RecallJob {
+                seq_uid: 5,
+                layer: 0,
+                selections: vec![vec![99], vec![0]],
+                xfer: xfer(pages, m, p, d, 9),
+            })
+            .is_ok());
+        let done = pipe.wait(5, 0).expect("transfer half survives the panic");
+        assert!(done.aborted.is_some(), "panicked job reports aborted");
+        // the worker survives one poisoned job and keeps serving
+        assert!(pipe
+            .submit(RecallJob {
+                seq_uid: 5,
+                layer: 1,
+                selections: vec![vec![1], vec![2]],
+                xfer: xfer(pages, m, p, d, 10),
+            })
+            .is_ok());
+        assert!(pipe.wait(5, 1).expect("still serving").aborted.is_none());
     }
 }

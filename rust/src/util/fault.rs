@@ -1,0 +1,257 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Every helper thread FreeKV moves work onto — the recall transfer
+//! worker, the executor-pool workers, the engine loop itself — is a
+//! fault domain, and each domain's degradation ladder (see README,
+//! "Failure model & degradation ladder") is only trustworthy if it is
+//! *exercised*. A [`FaultPlan`] is a seeded schedule of failures at
+//! named sites: each site keeps an atomic call counter, and a call
+//! whose index is in the site's precomputed fire set injects the fault.
+//! The same seed therefore produces the same faults at the same points
+//! on every run, across threads, independent of timing — chaos tests
+//! are reproducible and CI failures replayable.
+//!
+//! Components hold an `Option<Arc<FaultPlan>>`; `None` is the
+//! production configuration and costs one branch per site. A present
+//! but *empty* plan ([`FaultPlan::disabled`]) fires nothing and must be
+//! behaviourally identical to `None` — the bit-identical-when-disabled
+//! property the fault tests assert.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Where a fault can be injected. Each site is checked by exactly one
+/// component, so schedules never interfere across domains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Executor worker: the job attempt fails with a transient error
+    /// (exercises the one-deterministic-retry ladder).
+    ExecJobError,
+    /// Executor worker: the worker thread drains its queue with errors
+    /// and exits (exercises route-around + respawn).
+    ExecWorkerDeath,
+    /// Recall worker: stops processing and bounces every job back
+    /// untouched (exercises the serial-recall fallback).
+    RecallWorkerDeath,
+    /// Transfer engine: a recall pays an artificial stall (exercises
+    /// exposed-time accounting under a slow link).
+    SlowTransfer,
+    /// Engine thread: `decode_step` panics (exercises the engine-loop
+    /// supervisor restart).
+    EnginePanic,
+    /// Engine thread: `decode_step` returns a transient error.
+    DecodeError,
+    /// A panic raised while holding the page-allocator lock (exercises
+    /// poisoned-lock recovery end to end).
+    AllocPanic,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 7] = [
+        FaultSite::ExecJobError,
+        FaultSite::ExecWorkerDeath,
+        FaultSite::RecallWorkerDeath,
+        FaultSite::SlowTransfer,
+        FaultSite::EnginePanic,
+        FaultSite::DecodeError,
+        FaultSite::AllocPanic,
+    ];
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::ExecJobError => "exec-job-error",
+            FaultSite::ExecWorkerDeath => "exec-worker-death",
+            FaultSite::RecallWorkerDeath => "recall-worker-death",
+            FaultSite::SlowTransfer => "slow-transfer",
+            FaultSite::EnginePanic => "engine-panic",
+            FaultSite::DecodeError => "decode-error",
+            FaultSite::AllocPanic => "alloc-panic",
+        }
+    }
+}
+
+/// One site's schedule: sorted call indices that fire, plus live
+/// counters. Immutable after construction, so checks are lock-free.
+#[derive(Debug, Default)]
+struct SiteSchedule {
+    fire_at: Vec<u64>,
+    calls: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// A seeded, deterministic schedule of injected failures. Cheap to
+/// share (`Arc`) across the engine thread, pool workers, and the recall
+/// worker; thread-safe without locks.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    sites: [SiteSchedule; FaultSite::ALL.len()],
+    injected: AtomicU64,
+    /// Stall applied when `SlowTransfer` fires.
+    slow: Duration,
+}
+
+impl FaultPlan {
+    /// A plan that never fires. Present-but-disabled must be
+    /// behaviourally identical to no plan at all.
+    pub fn disabled() -> FaultPlan {
+        FaultPlan { slow: Duration::from_millis(2), ..Default::default() }
+    }
+
+    /// Targeted plan: fire each `(site, call_index)` exactly once
+    /// (indices are per-site, counted from 0).
+    pub fn events(events: &[(FaultSite, u64)]) -> FaultPlan {
+        let mut plan = FaultPlan::disabled();
+        for &(site, at) in events {
+            plan.sites[site.idx()].fire_at.push(at);
+        }
+        for s in plan.sites.iter_mut() {
+            s.fire_at.sort_unstable();
+            s.fire_at.dedup();
+        }
+        plan
+    }
+
+    /// The default chaotic mixture for a seed: a handful of faults per
+    /// site, scheduled over the early calls so short test runs reach
+    /// them. Same seed, same schedule, forever.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_F1A6);
+        let mut events = Vec::new();
+        let mut draw = |site: FaultSite, count: usize, horizon: u64, out: &mut Vec<(FaultSite, u64)>| {
+            for _ in 0..count {
+                out.push((site, rng.below(horizon as usize) as u64));
+            }
+        };
+        draw(FaultSite::ExecJobError, 1 + rng.below(3), 96, &mut events);
+        draw(FaultSite::ExecWorkerDeath, rng.below(2), 64, &mut events);
+        draw(FaultSite::RecallWorkerDeath, rng.below(2), 48, &mut events);
+        draw(FaultSite::SlowTransfer, 2 + rng.below(4), 64, &mut events);
+        draw(FaultSite::EnginePanic, 1 + rng.below(2), 48, &mut events);
+        draw(FaultSite::DecodeError, 1 + rng.below(2), 48, &mut events);
+        draw(FaultSite::AllocPanic, rng.below(2), 64, &mut events);
+        FaultPlan::events(&events)
+    }
+
+    /// Count this call against `site` and report whether it fires. The
+    /// no-fault fast path is one atomic increment plus a binary search
+    /// of an (almost always empty) sorted list.
+    pub fn check(&self, site: FaultSite) -> bool {
+        let s = &self.sites[site.idx()];
+        let i = s.calls.fetch_add(1, Ordering::SeqCst);
+        if s.fire_at.binary_search(&i).is_ok() {
+            s.fired.fetch_add(1, Ordering::SeqCst);
+            self.injected.fetch_add(1, Ordering::SeqCst);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Total faults injected so far, across all sites.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    /// Faults injected at one site so far.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.sites[site.idx()].fired.load(Ordering::SeqCst)
+    }
+
+    /// Calls observed at one site so far.
+    pub fn calls(&self, site: FaultSite) -> u64 {
+        self.sites[site.idx()].calls.load(Ordering::SeqCst)
+    }
+
+    /// True when no site can ever fire.
+    pub fn is_disabled(&self) -> bool {
+        self.sites.iter().all(|s| s.fire_at.is_empty())
+    }
+
+    /// The stall a fired `SlowTransfer` pays.
+    pub fn slow_transfer_delay(&self) -> Duration {
+        self.slow
+    }
+}
+
+/// Render a caught panic payload (the `&str` / `String` cases; anything
+/// else gets a placeholder). Shared by every `catch_unwind` boundary in
+/// the stack so fault reports read the same everywhere.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// `catch_unwind` with the panic rendered to a `String` error — the
+/// supervisor boundaries all want exactly this shape.
+pub fn catch_panic<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    std::panic::catch_unwind(AssertUnwindSafe(f)).map_err(|p| panic_message(&p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_at_exact_call_indices() {
+        let plan = FaultPlan::events(&[
+            (FaultSite::DecodeError, 0),
+            (FaultSite::DecodeError, 2),
+            (FaultSite::EnginePanic, 1),
+        ]);
+        assert!(plan.check(FaultSite::DecodeError), "call 0 fires");
+        assert!(!plan.check(FaultSite::DecodeError), "call 1 silent");
+        assert!(plan.check(FaultSite::DecodeError), "call 2 fires");
+        assert!(!plan.check(FaultSite::DecodeError), "call 3 silent");
+        assert!(!plan.check(FaultSite::EnginePanic), "independent counter");
+        assert!(plan.check(FaultSite::EnginePanic));
+        assert_eq!(plan.injected(), 3);
+        assert_eq!(plan.fired(FaultSite::DecodeError), 2);
+        assert_eq!(plan.calls(FaultSite::DecodeError), 4);
+    }
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let plan = FaultPlan::disabled();
+        assert!(plan.is_disabled());
+        for _ in 0..100 {
+            for site in FaultSite::ALL {
+                assert!(!plan.check(site));
+            }
+        }
+        assert_eq!(plan.injected(), 0);
+    }
+
+    #[test]
+    fn chaos_is_deterministic_per_seed() {
+        let a = FaultPlan::chaos(7);
+        let b = FaultPlan::chaos(7);
+        for site in FaultSite::ALL {
+            assert_eq!(a.sites[site.idx()].fire_at, b.sites[site.idx()].fire_at);
+        }
+        let c = FaultPlan::chaos(8);
+        let differs = FaultSite::ALL
+            .iter()
+            .any(|s| a.sites[s.idx()].fire_at != c.sites[s.idx()].fire_at);
+        assert!(differs, "different seeds should differ somewhere");
+        assert!(!a.is_disabled(), "chaos schedules at least one fault");
+    }
+
+    #[test]
+    fn catch_panic_renders_payloads() {
+        assert_eq!(catch_panic(|| 5).unwrap(), 5);
+        let e = catch_panic(|| panic!("boom {}", 1)).unwrap_err();
+        assert_eq!(e, "boom 1");
+    }
+}

@@ -3,12 +3,14 @@
 //! property-test harness are implemented here.
 
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod proptest;
 pub mod rng;
 #[cfg(unix)]
 pub mod signal;
 pub mod stats;
+pub mod sync;
 pub mod table;
 
 /// Split `total` items into `n` balanced contiguous widths (first

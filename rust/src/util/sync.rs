@@ -1,0 +1,38 @@
+//! Poison-aware locking. `clippy.toml` bans bare `Mutex::lock()` in
+//! this crate: a panic while a lock is held (a worker job blowing up,
+//! an injected fault) poisons the mutex, and every `.lock().unwrap()`
+//! downstream then cascades the panic through unrelated threads. Call
+//! sites must either recover deliberately (this helper, or a bespoke
+//! recovery like `PageAllocator::lock`) or map the error explicitly.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, deliberately recovering from poisoning: the data is
+/// still returned, on the caller's judgement that its invariants hold
+/// (or are re-validated) regardless of where the poisoning panic hit.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    #[allow(clippy::disallowed_methods)] // the one deliberate recovery point
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Mutex::new(3usize);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = lock_unpoisoned(&m);
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned());
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 4);
+    }
+}

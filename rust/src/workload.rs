@@ -136,20 +136,48 @@ pub fn run_loadtest<B: Backend>(
     let mut max_inflight = 0usize;
     let mut completed = 0usize;
     let mut failed = 0usize;
+    let mut tick_faults = 0usize;
     while !pending.is_empty() || sched.pending() > 0 {
         let now = tick as f64 / ticks_per_second.max(1e-9);
         while pending.front().map_or(false, |r| r.at <= now) {
             sched.submit(pending.pop_front().unwrap().request);
         }
-        for ev in sched.tick()? {
-            match ev {
-                StepEvent::Finished { id } => {
-                    completed += 1;
-                    // claim each completion so nothing accumulates
-                    let _ = sched.take_completion(id);
+        // Chaos tolerance (`--chaos-seed`): a tick panic or
+        // engine-global error fails the in-flight requests — mirroring
+        // the engine-loop supervisor's teardown — and the replay
+        // continues; every request still reaches exactly one terminal
+        // outcome (completed or failed).
+        let events = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sched.tick()))
+            .map_err(|p| anyhow::anyhow!("{}", crate::util::fault::panic_message(p.as_ref())));
+        match events.and_then(|r| r) {
+            Ok(events) => {
+                for ev in events {
+                    match ev {
+                        StepEvent::Finished { id } => {
+                            completed += 1;
+                            // claim each completion so nothing accumulates
+                            let _ = sched.take_completion(id);
+                        }
+                        StepEvent::Failed { .. } => failed += 1,
+                        StepEvent::Token { .. } => {}
+                    }
                 }
-                StepEvent::Failed { .. } => failed += 1,
-                StepEvent::Token { .. } => {}
+            }
+            Err(e) => {
+                tick_faults += 1;
+                let ids =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sched.active_ids()))
+                        .unwrap_or_default();
+                for id in ids {
+                    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sched.abort(id)))
+                        .is_err()
+                    {
+                        sched.engine.kv_release(id);
+                        sched.metrics.on_failed();
+                    }
+                    failed += 1;
+                }
+                eprintln!("[loadtest] engine fault on tick {}: {:#}", tick, e);
             }
         }
         max_inflight = max_inflight.max(sched.pending());
@@ -162,6 +190,7 @@ pub fn run_loadtest<B: Backend>(
         failed,
         max_inflight,
         tokens_out: sched.metrics.tokens_out,
+        tick_faults,
     })
 }
 
@@ -173,6 +202,9 @@ pub struct LoadtestReport {
     pub failed: usize,
     pub max_inflight: usize,
     pub tokens_out: u64,
+    /// Ticks that ended in an engine panic or engine-global error
+    /// (non-zero only under `--chaos-seed` fault injection).
+    pub tick_faults: usize,
 }
 
 #[cfg(test)]

@@ -1,8 +1,14 @@
 //! Executor-pool mechanics, artifact-free: the pool is generic over
-//! `ExecBackend`, so scheduling, result routing, panic containment, and
-//! shutdown/drain are all testable with host-side backends on any host.
-//! The PJRT-backed equivalence tests (pooled selection bit-identical to
-//! serial dispatch on the real engine) live in `tests/overlap_pipeline.rs`.
+//! `ExecBackend`, so scheduling, result routing, panic containment,
+//! shutdown/drain, and the failure ladder (retry once → route around a
+//! dead worker → respawn → degrade to failed tickets) are all testable
+//! with host-side backends on any host. The PJRT-backed equivalence
+//! tests (pooled selection bit-identical to serial dispatch on the real
+//! engine) live in `tests/overlap_pipeline.rs`.
+
+// Tests may use bare `Mutex::lock().unwrap()`; the disallowed-methods
+// lint (clippy.toml) polices src/, where poisoning must be *handled*.
+#![allow(clippy::disallowed_methods)]
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -10,6 +16,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 use freekv::runtime::{ExecBackend, ExecCounters, ExecJob, ExecTicket, ExecutorPool, HostTensor};
+use freekv::util::fault::{FaultPlan, FaultSite};
 
 /// Deterministic host backend: output = inputs scaled by (layer + 2);
 /// artifact names trigger special behaviour (`panic!`, error, sleep).
@@ -248,6 +255,81 @@ fn route_aware_warmup_filters_non_weight_workers() {
         vec![(0, false), (1, true), (2, true)],
         "weight worker warms everything; the rest warm weight-free only"
     );
+}
+
+#[test]
+fn injected_transient_error_is_retried_once_and_succeeds() {
+    let p = pool(1, 0);
+    p.set_faults(Arc::new(FaultPlan::events(&[(FaultSite::ExecJobError, 0)])));
+    let done = p.submit(job(2)).wait().expect("transient failure absorbed by the retry");
+    assert_eq!(done.outputs, expected(2));
+    assert_eq!(p.health().retries, 1, "the retry was counted");
+}
+
+#[test]
+fn back_to_back_injected_errors_surface_with_retry_context() {
+    let p = pool(1, 0);
+    // Both the attempt and its one retry fail: the ticket error must
+    // carry the first failure too, so operators see it was persistent.
+    p.set_faults(Arc::new(FaultPlan::events(&[
+        (FaultSite::ExecJobError, 0),
+        (FaultSite::ExecJobError, 1),
+    ])));
+    let err = format!("{:#}", p.submit(job(2)).wait().unwrap_err());
+    assert!(err.contains("after one retry"), "{}", err);
+    assert!(err.contains("injected transient failure"), "{}", err);
+    assert_eq!(p.health().retries, 1, "exactly one retry, not a loop");
+    // the worker is unharmed: the next job executes first-try
+    assert_eq!(p.submit(job(3)).wait().unwrap().outputs, expected(3));
+}
+
+#[test]
+fn injected_worker_death_resolves_every_queued_ticket_then_respawns() {
+    // Slow single worker: jobs 1..4 queue behind job 0; the worker dies
+    // picking up job 1 and must drain the queue with errors — a ticket
+    // to a dead worker never blocks.
+    let p = pool(1, 20);
+    p.set_faults(Arc::new(FaultPlan::events(&[(FaultSite::ExecWorkerDeath, 1)])));
+    let tickets: Vec<ExecTicket> = (0..4).map(|i| p.submit(job(i))).collect();
+    let mut outcomes = tickets.into_iter().map(|t| t.wait());
+    let first = outcomes.next().unwrap().expect("job before the death completes");
+    assert_eq!(first.outputs, expected(0));
+    for (i, r) in outcomes.enumerate() {
+        let err = format!("{:#}", r.expect_err("jobs behind the death fail, never block"));
+        assert!(err.contains("died") || err.contains("shut down"), "job {}: {}", i + 1, err);
+    }
+    assert_eq!(p.health().alive, 0, "routing sees the worker as dead");
+    // The next submission revives the slot in place (same index).
+    let done = p.submit(job(7)).wait().expect("respawned worker serves");
+    assert_eq!(done.outputs, expected(7));
+    let h = p.health();
+    assert_eq!((h.alive, h.respawns), (1, 1), "{:?}", h);
+}
+
+#[test]
+fn respawn_budget_exhaustion_degrades_to_failed_tickets_and_drop_does_not_hang() {
+    // The worker dies on every job it ever receives: the first death is
+    // free, the next two submissions each spend one unit of the respawn
+    // budget, and after that the pool degrades — submissions return
+    // already-failed tickets, ready_for() says inline, drop still joins.
+    let p = pool(1, 0);
+    p.set_faults(Arc::new(FaultPlan::events(&[
+        (FaultSite::ExecWorkerDeath, 0),
+        (FaultSite::ExecWorkerDeath, 1),
+        (FaultSite::ExecWorkerDeath, 2),
+    ])));
+    for i in 0..3usize {
+        let err = format!("{:#}", p.submit(job(i)).wait().unwrap_err());
+        assert!(err.contains("died (injected fault)"), "death {}: {}", i, err);
+    }
+    let h = p.health();
+    assert_eq!((h.alive, h.respawns), (0, 2), "{:?}", h);
+    assert!(!p.ready_for(&job(9)), "engine's cue to execute inline");
+    let err = format!("{:#}", p.submit(job(9)).wait().unwrap_err());
+    assert!(err.contains("respawn budget exhausted"), "{}", err);
+    // Dropping a pool whose only worker is dead must not hang: its
+    // JoinHandle resolves immediately. (A hang fails via test timeout.)
+    drop(p);
 }
 
 #[test]
