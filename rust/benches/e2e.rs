@@ -274,6 +274,72 @@ fn main() {
     }
 
     println!();
+    println!("=== bench e2e: KV page codecs (sim, 8 requests) ===");
+    {
+        // The memory-section workload re-run once per page codec, plus a
+        // standalone offload/recall stream through a pool of each codec:
+        // page counts stay identical across dtypes while the pool byte
+        // gauges and encoded wire traffic shrink with the codec. Runs in
+        // CI's bench-smoke job without artifacts.
+        use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig};
+        use freekv::coordinator::sim_backend::SimBackend;
+        use freekv::kvcache::{GpuLayerCache, KvDtype, Layout, LayerPool};
+        use freekv::transfer::TransferEngine;
+        use freekv::util::rng::Rng;
+        let mut rows = Vec::new();
+        for dtype in KvDtype::all() {
+            let backend = SimBackend::tiny_with_pool_dtype(0, true, dtype);
+            let alloc = backend.allocator();
+            let cfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
+            let mut s = Scheduler::new(backend, cfg);
+            let prompt = "shared prefix workload ".repeat(8);
+            for i in 1..=8u64 {
+                s.submit(Request::from_text(i, &prompt, 32));
+            }
+            s.drain().expect("sim drain");
+            let st = alloc.stats();
+            // encoded wire traffic: 6 pages offloaded, 4 recalled per head
+            let (m, d, p) = (2usize, 8usize, 4usize);
+            let mut pool = LayerPool::new_dtype(Layout::Hnd, 16, m, p, d, dtype);
+            let mut gpu = GpuLayerCache::new(m, d, p, 1, 2, 2, 16);
+            let mut sel = gpu.new_select_slots();
+            let mut eng = TransferEngine::new(p, d, true);
+            let mut rng = Rng::new(5);
+            for _ in 0..(6 * p) {
+                let k: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                if let Some(cp) = gpu.append(&k, &v) {
+                    eng.offload_page(&cp, &mut pool);
+                }
+            }
+            for page in 0..4usize {
+                for head in 0..m {
+                    eng.recall_page(&pool, page, head, &mut sel, page % 2);
+                }
+            }
+            println!(
+                "{:>4}: peak {:>4} pages {:>9} pool bytes  hits {:>3} | recall {:>5} B  offload {:>5} B (encoded)",
+                dtype,
+                st.pages_peak,
+                st.cpu_bytes_peak,
+                st.prefix_hits,
+                eng.counters.h2d_encoded_bytes,
+                eng.counters.d2h_encoded_bytes,
+            );
+            let mut o = JsonObj::new();
+            o.insert("dtype", dtype.as_str());
+            o.insert("pages_peak", st.pages_peak as usize);
+            o.insert("pool_bytes_peak", st.cpu_bytes_peak as usize);
+            o.insert("prefix_hits", st.prefix_hits as usize);
+            o.insert("recall_encoded_bytes", eng.counters.h2d_encoded_bytes as usize);
+            o.insert("recall_logical_bytes", eng.counters.h2d_bytes as usize);
+            o.insert("offload_encoded_bytes", eng.counters.d2h_encoded_bytes as usize);
+            rows.push(Json::from(o));
+        }
+        report.insert("kv_dtype", Json::Arr(rows));
+    }
+
+    println!();
     println!("=== bench e2e: real tiny-model engine throughput ===");
     if Runtime::load("artifacts").is_err() {
         println!("artifacts/ missing — run `make artifacts` (skipping real bench)");

@@ -224,6 +224,12 @@ pub struct FreeKvParams {
     /// ladders. `None` (production) compiles every fault site down to a
     /// single untaken branch.
     pub chaos_seed: Option<u64>,
+    /// Element dtype of the shared CPU KV page pool (`--kv-dtype`):
+    /// `f32` (bit-exact default), `int8` (symmetric, per-(head,plane)
+    /// scales), or `int4` (packed). Quantize-on-offload, dequantize-on-
+    /// gather; the GPU-resident sink + local window stay full
+    /// precision. See `kvcache::quant`.
+    pub kv_dtype: crate::kvcache::quant::KvDtype,
 }
 
 impl Default for FreeKvParams {
@@ -240,6 +246,7 @@ impl Default for FreeKvParams {
             kv_pool_pages: 0,
             prefix_cache: false,
             chaos_seed: None,
+            kv_dtype: crate::kvcache::quant::KvDtype::F32,
         }
     }
 }

@@ -575,8 +575,12 @@ impl Engine {
         } else {
             None
         };
-        let alloc =
-            PageAllocator::for_model(&cfg, params.kv_pool_pages as u64, params.prefix_cache);
+        let alloc = PageAllocator::for_model_dtype(
+            &cfg,
+            params.kv_pool_pages as u64,
+            params.prefix_cache,
+            params.kv_dtype,
+        );
         let faults = params.chaos_seed.map(|seed| Arc::new(FaultPlan::chaos(seed)));
         if let (Some(pool), Some(plan)) = (&executor, &faults) {
             pool.set_faults(plan.clone());

@@ -95,6 +95,18 @@ impl SimBackend {
         SimBackend::with_allocator(cfg, alloc)
     }
 
+    /// [`SimBackend::with_pool`] with an explicit page codec dtype
+    /// (`--kv-dtype` on the sim serve/loadtest paths).
+    pub fn with_pool_dtype(
+        cfg: ModelConfig,
+        pool_pages: u64,
+        prefix_cache: bool,
+        dtype: crate::kvcache::quant::KvDtype,
+    ) -> SimBackend {
+        let alloc = PageAllocator::for_model_dtype(&cfg, pool_pages, prefix_cache, dtype);
+        SimBackend::with_allocator(cfg, alloc)
+    }
+
     /// Backend over an existing allocator. Chaos tests use this to keep
     /// one allocator (and its page gauges) alive across supervised
     /// engine restarts, exactly like the real engine sharing its pool.
@@ -119,6 +131,14 @@ impl SimBackend {
 
     pub fn tiny_with_pool(pool_pages: u64, prefix_cache: bool) -> SimBackend {
         SimBackend::with_pool(sim_config(), pool_pages, prefix_cache)
+    }
+
+    pub fn tiny_with_pool_dtype(
+        pool_pages: u64,
+        prefix_cache: bool,
+        dtype: crate::kvcache::quant::KvDtype,
+    ) -> SimBackend {
+        SimBackend::with_pool_dtype(sim_config(), pool_pages, prefix_cache, dtype)
     }
 
     /// The backing allocator (tests and benches inspect its gauges).

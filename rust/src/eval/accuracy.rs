@@ -350,6 +350,75 @@ pub fn table9(seeds: u64) -> Table {
     t
 }
 
+/// KV-dtype ablation: FreeKV accuracy when offloaded pages are stored
+/// through the page codec (kvcache::quant) instead of f32.
+///
+/// The oracle carries score surfaces rather than raw K/V tensors, so
+/// quantization enters through what a retrieval policy *reads back from
+/// CPU pages*: every score row (summary / MeanQ / MaxQ) and the realized
+/// attention-weight rows pass through the codec roundtrip with one scale
+/// per row — the same per-(page, head) scale granularity the slab codec
+/// uses. Weight rows are renormalized to their original mass so the
+/// ablation perturbs *which* pages look hot, not how much attention mass
+/// exists. F32 is the bit-exact baseline row.
+pub fn dtype_ablation(seeds: u64) -> Table {
+    use crate::kvcache::quant::KvDtype;
+    let mut t = Table::new(
+        "Dtype ablation — FreeKV under quantized KV pages (x100)",
+        &["kv dtype", "longinput", "longgen", "reasoning", "mass-recall"],
+    );
+    for dtype in KvDtype::all() {
+        let mut row = vec![dtype.as_str().to_string()];
+        let mut mass = 0.0;
+        for kind in [TaskKind::Summarization, TaskKind::LongGen, TaskKind::Reasoning] {
+            let traces: Vec<Trace> = traces_for(kind, 28, 4, seeds)
+                .into_iter()
+                .map(|tr| quantize_trace(tr, dtype))
+                .collect();
+            let knobs = knobs_for(Method::FreeKv, kind);
+            let r = mean_ep(Method::FreeKv, SelectVariant::MeanS, &traces, &knobs);
+            row.push(fnum(r.task_score * 100.0));
+            mass += r.mass_recall / 3.0;
+        }
+        row.push(fnum(mass * 100.0));
+        t.row(row);
+    }
+    t
+}
+
+/// Pass every score surface a retrieval policy reads through the page
+/// codec's quantize/dequantize roundtrip (one scale per row).
+fn quantize_trace(tr: Trace, dtype: crate::kvcache::quant::KvDtype) -> Trace {
+    use crate::kvcache::quant::{roundtrip_f32s, KvDtype};
+    if dtype == KvDtype::F32 {
+        return tr;
+    }
+    let Trace { spec, n_qo, n_kv, steps } = tr;
+    let steps = steps
+        .into_iter()
+        .map(|mut st| {
+            for rows in
+                [&mut st.summary_scores, &mut st.scores_meanq, &mut st.scores_maxq]
+            {
+                for row in rows.iter_mut() {
+                    *row = roundtrip_f32s(dtype, row);
+                }
+            }
+            for row in st.weights.iter_mut() {
+                let total: f32 = row.iter().sum();
+                *row = roundtrip_f32s(dtype, row);
+                let qt: f32 = row.iter().sum();
+                if qt > 0.0 {
+                    let k = total / qt;
+                    row.iter_mut().for_each(|x| *x *= k);
+                }
+            }
+            st
+        })
+        .collect();
+    Trace { spec, n_qo, n_kv, steps }
+}
+
 /// Fig. 2b: accuracy-efficiency Pareto points (accuracy from the oracle,
 /// latency from the simulator).
 pub fn fig2_pareto(seeds: u64) -> Table {

@@ -16,6 +16,12 @@
 //!   `max_context`. Both HND and NHD page layouts live in the same
 //!   slab (the layout governs the element order *within* a page, so
 //!   the hybrid-layout ablation is preserved; see `pool.rs`).
+//! * **Codec-parameterized pages.** The slab is byte-addressed: each
+//!   page occupies the [`PageCodec`]-defined stride (f32, INT8, or
+//!   packed INT4 payload) plus a sidecar of per-(head, plane) bf16
+//!   scale entries (`kvcache::quant`). The allocator only moves and
+//!   refcounts encoded bytes; encode/decode happens in the pool view
+//!   (`write_page*` / `copy_chunks` / `read_page_head`).
 //! * **Refcounted page handles** ([`Slot`]). A `LayerPool` is a view: a
 //!   logical-page -> slot table plus an `Arc` of this allocator. Slots
 //!   free when the last view referencing them drops (retire, cancel,
@@ -23,7 +29,7 @@
 //!   assertions instead of corruption.
 //! * **Copy-on-write prefix sharing.** When a request offloads a page
 //!   whose token prefix hash matches a page a *resident* request
-//!   already committed (same layer, same layout, same model
+//!   already committed (same layer, same layout, same dtype, same model
 //!   namespace), the new view aliases the existing slot instead of
 //!   writing a duplicate ([`PageAllocator::adopt`]); a later write to
 //!   an aliased page materializes a private copy first
@@ -59,6 +65,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::ModelConfig;
 use crate::kvcache::pool::Layout;
+use crate::kvcache::quant::{KvDtype, PageCodec};
 
 /// Handle to one allocated page within a layer slab.
 pub type Slot = u32;
@@ -92,8 +99,11 @@ pub struct KvPoolStats {
     pub pages_reserved: u64,
     /// Offloads satisfied by aliasing an already-resident page.
     pub prefix_hits: u64,
-    /// Bytes of allocated CPU slab pages (distinct slots only).
+    /// Bytes of allocated CPU slab pages (distinct slots only), at the
+    /// pool's *encoded* page stride (payload + scale sidecar).
     pub cpu_bytes_used: u64,
+    /// High-water mark of `cpu_bytes_used` — scales with the codec.
+    pub cpu_bytes_peak: u64,
     /// GPU-side bytes charged by live `RequestKv`s.
     pub gpu_bytes_used: u64,
 }
@@ -142,20 +152,26 @@ pub fn worst_case_pages(cfg: &ModelConfig, total_tokens: usize) -> u64 {
     (cfg.n_layers as u64) * (toks.div_ceil(cfg.page_size) as u64)
 }
 
-/// Prefix-cache key: 128-bit token-stream hash qualified by layer and
-/// page layout (an HND page and an NHD page are different byte
-/// patterns). The allocator namespace (model identity) is mixed into
-/// `hash`.
+/// Prefix-cache key: 128-bit token-stream hash qualified by layer, page
+/// layout, *and element dtype* (an HND page and an NHD page are
+/// different byte patterns, and an f32 page must never alias into an
+/// int8 pool even if two allocators ever shared a prefix map). The
+/// allocator namespace (model identity) is mixed into `hash`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct PrefixKey {
     layer: u32,
     hnd: bool,
+    dtype: KvDtype,
     hash: u128,
 }
 
 struct LayerSlab {
-    /// Page data, `slots * page_elems` elements, grown on demand.
-    data: Vec<f32>,
+    /// Encoded page payloads, `slots * payload_stride` bytes, grown on
+    /// demand.
+    data: Vec<u8>,
+    /// Scale sidecar, `slots * scales_per_page` bf16 bit patterns
+    /// (empty for F32 pools).
+    scales: Vec<u16>,
     refcnt: Vec<u32>,
     written: Vec<bool>,
     /// Prefix key registered for a slot (reverse index for cleanup).
@@ -167,6 +183,7 @@ impl LayerSlab {
     fn new() -> LayerSlab {
         LayerSlab {
             data: Vec::new(),
+            scales: Vec::new(),
             refcnt: Vec::new(),
             written: Vec::new(),
             key: Vec::new(),
@@ -188,13 +205,14 @@ struct Inner {
 }
 
 impl Inner {
-    fn alloc(&mut self, layer: usize, page_elems: usize) -> Slot {
+    fn alloc(&mut self, layer: usize, payload_stride: usize, scale_stride: usize) -> Slot {
         let slab = &mut self.slabs[layer];
         let slot = match slab.free.pop() {
             Some(s) => s,
             None => {
                 let s = slab.refcnt.len() as Slot;
-                slab.data.resize((s as usize + 1) * page_elems, 0.0);
+                slab.data.resize((s as usize + 1) * payload_stride, 0);
+                slab.scales.resize((s as usize + 1) * scale_stride, 0);
                 slab.refcnt.push(0);
                 slab.written.push(false);
                 slab.key.push(None);
@@ -240,11 +258,17 @@ impl Inner {
         }
     }
 
-    /// CoW: return a slot holding the same bytes that is safe to write
-    /// (refcount 1). Aliased slots get a private copy; a page that is
-    /// already private only sheds its stale prefix registration (its
-    /// content is about to change).
-    fn make_unique(&mut self, layer: usize, slot: Slot, page_elems: usize) -> Slot {
+    /// CoW: return a slot holding the same encoded bytes (payload and
+    /// scales) that is safe to write (refcount 1). Aliased slots get a
+    /// private copy; a page that is already private only sheds its
+    /// stale prefix registration (its content is about to change).
+    fn make_unique(
+        &mut self,
+        layer: usize,
+        slot: Slot,
+        payload_stride: usize,
+        scale_stride: usize,
+    ) -> Slot {
         let i = slot as usize;
         if self.slabs[layer].refcnt[i] == 1 {
             if let Some(k) = self.slabs[layer].key[i].take() {
@@ -254,10 +278,14 @@ impl Inner {
             }
             return slot;
         }
-        let fresh = self.alloc(layer, page_elems);
+        let fresh = self.alloc(layer, payload_stride, scale_stride);
         let slab = &mut self.slabs[layer];
-        let src = i * page_elems;
-        slab.data.copy_within(src..src + page_elems, fresh as usize * page_elems);
+        let src = i * payload_stride;
+        slab.data.copy_within(src..src + payload_stride, fresh as usize * payload_stride);
+        if scale_stride > 0 {
+            let ssrc = i * scale_stride;
+            slab.scales.copy_within(ssrc..ssrc + scale_stride, fresh as usize * scale_stride);
+        }
         slab.written[fresh as usize] = slab.written[i];
         self.release(layer, slot);
         fresh
@@ -298,10 +326,13 @@ pub struct PageAllocator {
     pub n_kv: usize,
     pub page_size: usize,
     pub d_head: usize,
-    /// Elements of one page across kv heads, K+V planes together.
+    /// Logical f32 elements of one page across kv heads, K+V planes
+    /// together (the pre-encode element count; the slab stride is
+    /// `codec.payload_bytes()`).
     pub page_elems: usize,
     /// Aggregate capacity in pages across all layers (0 = unbounded).
     pub capacity_pages: u64,
+    codec: PageCodec,
     sharing: bool,
     namespace: u64,
     inner: Mutex<Inner>,
@@ -313,6 +344,7 @@ impl std::fmt::Debug for PageAllocator {
         f.debug_struct("PageAllocator")
             .field("n_layers", &self.n_layers)
             .field("page_elems", &self.page_elems)
+            .field("dtype", &self.codec.dtype)
             .field("capacity_pages", &self.capacity_pages)
             .field("sharing", &self.sharing)
             .field("pages_used", &s.pages_used)
@@ -321,6 +353,7 @@ impl std::fmt::Debug for PageAllocator {
 }
 
 impl PageAllocator {
+    /// Full-precision (f32) allocator — the historical constructor.
     pub fn new(
         n_layers: usize,
         n_kv: usize,
@@ -330,13 +363,39 @@ impl PageAllocator {
         sharing: bool,
         namespace: u64,
     ) -> Arc<PageAllocator> {
+        PageAllocator::with_dtype(
+            n_layers,
+            n_kv,
+            page_size,
+            d_head,
+            capacity_pages,
+            sharing,
+            namespace,
+            KvDtype::F32,
+        )
+    }
+
+    /// Allocator whose pages are stored through the `dtype` codec.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_dtype(
+        n_layers: usize,
+        n_kv: usize,
+        page_size: usize,
+        d_head: usize,
+        capacity_pages: u64,
+        sharing: bool,
+        namespace: u64,
+        dtype: KvDtype,
+    ) -> Arc<PageAllocator> {
+        let codec = PageCodec::new(dtype, n_kv, page_size, d_head);
         Arc::new(PageAllocator {
             n_layers,
             n_kv,
             page_size,
             d_head,
-            page_elems: n_kv * 2 * page_size * d_head,
+            page_elems: codec.page_elems(),
             capacity_pages,
+            codec,
             sharing,
             namespace,
             inner: Mutex::new(Inner {
@@ -353,12 +412,22 @@ impl PageAllocator {
         })
     }
 
-    /// Allocator for one model config, with the namespace derived from
-    /// its identity so prefix keys never collide across models.
+    /// f32 allocator for one model config, with the namespace derived
+    /// from its identity so prefix keys never collide across models.
     pub fn for_model(
         cfg: &ModelConfig,
         capacity_pages: u64,
         sharing: bool,
+    ) -> Arc<PageAllocator> {
+        PageAllocator::for_model_dtype(cfg, capacity_pages, sharing, KvDtype::F32)
+    }
+
+    /// [`PageAllocator::for_model`] with an explicit page codec dtype.
+    pub fn for_model_dtype(
+        cfg: &ModelConfig,
+        capacity_pages: u64,
+        sharing: bool,
+        dtype: KvDtype,
     ) -> Arc<PageAllocator> {
         let mut ns = FNV_OFFSET;
         for b in cfg.name.bytes() {
@@ -367,7 +436,7 @@ impl PageAllocator {
         for v in [cfg.n_layers, cfg.n_kv, cfg.d_head, cfg.page_size, cfg.max_context] {
             ns = fnv1a_i32(ns, v as i32);
         }
-        PageAllocator::new(
+        PageAllocator::with_dtype(
             cfg.n_layers,
             cfg.n_kv,
             cfg.page_size,
@@ -375,6 +444,7 @@ impl PageAllocator {
             capacity_pages,
             sharing,
             ns,
+            dtype,
         )
     }
 
@@ -383,9 +453,30 @@ impl PageAllocator {
         self.sharing
     }
 
-    /// Bytes of one page (all kv heads, K+V).
+    /// Element dtype of every page in this pool.
+    pub fn dtype(&self) -> KvDtype {
+        self.codec.dtype
+    }
+
+    /// The page codec (dtype + geometry) governing the slab stride.
+    pub fn codec(&self) -> PageCodec {
+        self.codec
+    }
+
+    /// Encoded bytes of one page (all kv heads, K+V): codec payload
+    /// stride plus the 2-byte-per-region scale sidecar.
     pub fn page_bytes(&self) -> usize {
-        self.page_elems * 4
+        self.codec.page_bytes()
+    }
+
+    /// Payload bytes of one page, excluding the scale sidecar.
+    fn payload_stride(&self) -> usize {
+        self.codec.payload_bytes()
+    }
+
+    /// Scale entries of one page.
+    fn scale_stride(&self) -> usize {
+        self.codec.scales_per_page()
     }
 
     /// Lock the pool, deliberately recovering from poisoning. A panic
@@ -423,7 +514,12 @@ impl PageAllocator {
 
     fn prefix_key(&self, layer: usize, layout: Layout, hash: u128) -> PrefixKey {
         let ns = fold_key(self.namespace, self.namespace.rotate_left(17));
-        PrefixKey { layer: layer as u32, hnd: matches!(layout, Layout::Hnd), hash: hash ^ ns }
+        PrefixKey {
+            layer: layer as u32,
+            hnd: matches!(layout, Layout::Hnd),
+            dtype: self.codec.dtype,
+            hash: hash ^ ns,
+        }
     }
 
     // ------------------------------------------------------------------
@@ -431,7 +527,8 @@ impl PageAllocator {
     // ------------------------------------------------------------------
 
     pub(crate) fn alloc_slot(&self, layer: usize) -> Slot {
-        self.lock().alloc(layer, self.page_elems)
+        let (p, s) = (self.payload_stride(), self.scale_stride());
+        self.lock().alloc(layer, p, s)
     }
 
     pub(crate) fn release_slot(&self, layer: usize, slot: Slot) {
@@ -439,7 +536,8 @@ impl PageAllocator {
     }
 
     pub(crate) fn make_unique(&self, layer: usize, slot: Slot) -> Slot {
-        self.lock().make_unique(layer, slot, self.page_elems)
+        let (p, s) = (self.payload_stride(), self.scale_stride());
+        self.lock().make_unique(layer, slot, p, s)
     }
 
     pub(crate) fn slot_written(&self, layer: usize, slot: Slot) -> bool {
@@ -450,21 +548,29 @@ impl PageAllocator {
         self.lock().slabs[layer].written[slot as usize] = true;
     }
 
-    /// Read a slot's page bytes under the lock.
-    pub(crate) fn read_slot<R>(&self, layer: usize, slot: Slot, f: impl FnOnce(&[f32]) -> R) -> R {
+    /// Read a slot's encoded payload and scale sidecar under the lock.
+    pub(crate) fn read_slot<R>(
+        &self,
+        layer: usize,
+        slot: Slot,
+        f: impl FnOnce(&[u8], &[u16]) -> R,
+    ) -> R {
         let inner = self.lock();
-        let base = slot as usize * self.page_elems;
-        f(&inner.slabs[layer].data[base..base + self.page_elems])
+        let (ps, ss) = (self.payload_stride(), self.scale_stride());
+        let base = slot as usize * ps;
+        let sbase = slot as usize * ss;
+        let slab = &inner.slabs[layer];
+        f(&slab.data[base..base + ps], &slab.scales[sbase..sbase + ss])
     }
 
-    /// Write a slot's page bytes under the lock. The slot must be
-    /// private (`make_unique` first): writing a shared slot would leak
-    /// through every alias.
+    /// Write a slot's encoded payload and scale sidecar under the lock.
+    /// The slot must be private (`make_unique` first): writing a shared
+    /// slot would leak through every alias.
     pub(crate) fn write_slot<R>(
         &self,
         layer: usize,
         slot: Slot,
-        f: impl FnOnce(&mut [f32]) -> R,
+        f: impl FnOnce(&mut [u8], &mut [u16]) -> R,
     ) -> R {
         let mut inner = self.lock();
         assert_eq!(
@@ -474,8 +580,12 @@ impl PageAllocator {
             slot,
             layer
         );
-        let base = slot as usize * self.page_elems;
-        f(&mut inner.slabs[layer].data[base..base + self.page_elems])
+        let (ps, ss) = (self.payload_stride(), self.scale_stride());
+        let base = slot as usize * ps;
+        let sbase = slot as usize * ss;
+        let slab = &mut inner.slabs[layer];
+        let (data, scales) = (&mut slab.data, &mut slab.scales);
+        f(&mut data[base..base + ps], &mut scales[sbase..sbase + ss])
     }
 
     // ------------------------------------------------------------------
@@ -572,6 +682,7 @@ impl PageAllocator {
             pages_reserved: inner.reserved,
             prefix_hits: inner.prefix_hits,
             cpu_bytes_used: inner.used * self.page_bytes() as u64,
+            cpu_bytes_peak: inner.peak_used * self.page_bytes() as u64,
             gpu_bytes_used: inner.gpu_used,
         }
     }
@@ -603,6 +714,25 @@ mod tests {
         assert_eq!(st.pages_used, 0);
         assert_eq!(st.pages_peak, 3);
         assert_eq!(st.cpu_bytes_used, 0);
+        assert_eq!(st.cpu_bytes_peak, 3 * a.page_bytes() as u64);
+    }
+
+    #[test]
+    fn page_bytes_scale_with_the_codec() {
+        let elems = 2 * 2 * 4 * 8; // n_kv * 2 * p * d
+        let f = PageAllocator::with_dtype(1, 2, 4, 8, 0, false, 0, KvDtype::F32);
+        let i8a = PageAllocator::with_dtype(1, 2, 4, 8, 0, false, 0, KvDtype::Int8);
+        let i4a = PageAllocator::with_dtype(1, 2, 4, 8, 0, false, 0, KvDtype::Int4);
+        assert_eq!(f.page_bytes(), elems * 4);
+        assert_eq!(i8a.page_bytes(), elems + 4 * 2); // payload + 4 bf16 scales
+        assert_eq!(i4a.page_bytes(), elems / 2 + 4 * 2);
+        // the acceptance ratio: int8 pool bytes <= ~30% of f32 at equal pages
+        assert!(i8a.page_bytes() * 100 <= f.page_bytes() * 30);
+        for a in [&f, &i8a, &i4a] {
+            let s = a.alloc_slot(0);
+            assert_eq!(a.stats().cpu_bytes_used, a.page_bytes() as u64);
+            a.release_slot(0, s);
+        }
     }
 
     #[test]
@@ -618,7 +748,7 @@ mod tests {
     fn cow_gives_a_private_copy() {
         let a = tiny_alloc(0, true);
         let s = a.alloc_slot(0);
-        a.write_slot(0, s, |buf| buf.iter_mut().for_each(|x| *x = 7.0));
+        a.write_slot(0, s, |buf, _| buf.iter_mut().for_each(|x| *x = 7));
         a.set_written(0, s);
         a.register_prefix(0, Layout::Hnd, 42, s);
         let adopted = a.adopt(0, Layout::Hnd, 42).expect("registered page adopts");
@@ -627,15 +757,38 @@ mod tests {
         // write through the adopting view: must materialize privately
         let fresh = a.make_unique(0, adopted);
         assert_ne!(fresh, s, "shared slot must not be written in place");
-        a.write_slot(0, fresh, |buf| buf.iter_mut().for_each(|x| *x = -1.0));
-        a.read_slot(0, s, |buf| assert!(buf.iter().all(|&x| x == 7.0), "original mutated"));
-        a.read_slot(0, fresh, |buf| assert!(buf.iter().all(|&x| x == -1.0)));
+        a.write_slot(0, fresh, |buf, _| buf.iter_mut().for_each(|x| *x = 255));
+        a.read_slot(0, s, |buf, _| assert!(buf.iter().all(|&x| x == 7), "original mutated"));
+        a.read_slot(0, fresh, |buf, _| assert!(buf.iter().all(|&x| x == 255)));
         assert_eq!(a.stats().pages_shared, 0);
         a.release_slot(0, fresh);
         a.release_slot(0, s);
         assert_eq!(a.stats().pages_used, 0);
         // the registration died with the slot
         assert!(a.adopt(0, Layout::Hnd, 42).is_none());
+    }
+
+    #[test]
+    fn cow_copies_the_scale_sidecar_too() {
+        let a = PageAllocator::with_dtype(1, 2, 4, 8, 0, true, 0, KvDtype::Int8);
+        let s = a.alloc_slot(0);
+        a.write_slot(0, s, |buf, scales| {
+            buf.iter_mut().for_each(|x| *x = 11);
+            scales.iter_mut().enumerate().for_each(|(i, v)| *v = 100 + i as u16);
+        });
+        a.set_written(0, s);
+        a.register_prefix(0, Layout::Hnd, 7, s);
+        let adopted = a.adopt(0, Layout::Hnd, 7).unwrap();
+        let fresh = a.make_unique(0, adopted);
+        assert_ne!(fresh, s);
+        a.read_slot(0, fresh, |buf, scales| {
+            assert!(buf.iter().all(|&x| x == 11), "payload not copied");
+            for (i, &v) in scales.iter().enumerate() {
+                assert_eq!(v, 100 + i as u16, "scale sidecar not copied");
+            }
+        });
+        a.release_slot(0, fresh);
+        a.release_slot(0, s);
     }
 
     #[test]
@@ -650,6 +803,20 @@ mod tests {
         let got = a.adopt(0, Layout::Hnd, 9).unwrap();
         a.release_slot(0, got);
         a.release_slot(0, s);
+    }
+
+    #[test]
+    fn quantized_pools_still_adopt_under_dtype_qualified_keys() {
+        for dtype in KvDtype::all() {
+            let a = PageAllocator::with_dtype(1, 2, 4, 8, 0, true, 0xE, dtype);
+            let s = a.alloc_slot(0);
+            a.set_written(0, s);
+            a.register_prefix(0, Layout::Hnd, 77, s);
+            let got = a.adopt(0, Layout::Hnd, 77);
+            assert!(got.is_some(), "{:?}: same-dtype adopt must hit", dtype);
+            a.release_slot(0, got.unwrap());
+            a.release_slot(0, s);
+        }
     }
 
     #[test]
@@ -688,8 +855,8 @@ mod tests {
         assert!(r.is_err(), "the injected panic propagates to the faulting thread");
         // every path still works: alloc, data access, ledger, stats
         let s1 = a.alloc_slot(0);
-        a.write_slot(0, s1, |buf| buf.iter_mut().for_each(|x| *x = 2.0));
-        a.read_slot(0, s1, |buf| assert!(buf.iter().all(|&x| x == 2.0)));
+        a.write_slot(0, s1, |buf, _| buf.iter_mut().for_each(|x| *x = 2));
+        a.read_slot(0, s1, |buf, _| assert!(buf.iter().all(|&x| x == 2)));
         assert_eq!(a.try_reserve(2, 4), AdmitDecision::Admit);
         a.release_reservation(1);
         a.release_reservation(2);

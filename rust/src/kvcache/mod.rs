@@ -18,6 +18,7 @@
 pub mod alloc;
 pub mod gpu;
 pub mod pool;
+pub mod quant;
 
 use std::sync::Arc;
 
@@ -27,6 +28,7 @@ use crate::transfer::TransferEngine;
 pub use self::alloc::{AdmitDecision, KvPoolStats, PageAllocator};
 pub use gpu::{CompletedPage, GpuLayerCache, SelectSlots};
 pub use pool::{Chunk, LayerPool, Layout};
+pub use quant::{KvDtype, PageCodec};
 
 /// All KV state for one request across layers.
 pub struct RequestKv {

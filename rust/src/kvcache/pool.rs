@@ -16,6 +16,7 @@
 use std::sync::Arc;
 
 use crate::kvcache::alloc::{PageAllocator, Slot};
+use crate::kvcache::quant::{bf16_bits_to_f32, KvDtype, PageCodec};
 
 /// Memory organization of a page.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,6 +35,9 @@ pub struct LayerPool {
     pub n_kv: usize,
     pub p: usize,
     pub d: usize,
+    /// Page codec (dtype + geometry) of the backing allocator: encode
+    /// on `write_page*`, decode in `copy_chunks` / `read_page_head`.
+    codec: PageCodec,
     alloc: Arc<PageAllocator>,
     layer: usize,
     /// logical page -> allocator slot (None = never offloaded).
@@ -66,7 +70,19 @@ impl LayerPool {
     /// (tests, benches, single-request tools). Serving stacks share one
     /// allocator across requests via [`LayerPool::with_alloc`].
     pub fn new(layout: Layout, n_pages: usize, n_kv: usize, p: usize, d: usize) -> LayerPool {
-        let alloc = PageAllocator::new(1, n_kv, p, d, 0, false, 0);
+        LayerPool::new_dtype(layout, n_pages, n_kv, p, d, KvDtype::F32)
+    }
+
+    /// Standalone pool with an explicit page codec dtype.
+    pub fn new_dtype(
+        layout: Layout,
+        n_pages: usize,
+        n_kv: usize,
+        p: usize,
+        d: usize,
+        dtype: KvDtype,
+    ) -> LayerPool {
+        let alloc = PageAllocator::with_dtype(1, n_kv, p, d, 0, false, 0, dtype);
         LayerPool::with_alloc(layout, n_pages, n_kv, p, d, alloc, 0)
     }
 
@@ -86,7 +102,45 @@ impl LayerPool {
             "allocator geometry does not match the pool view"
         );
         assert!(layer < alloc.n_layers, "layer {} outside allocator", layer);
-        LayerPool { layout, n_pages, n_kv, p, d, alloc, layer, table: vec![None; n_pages], held: 0 }
+        let codec = alloc.codec();
+        LayerPool {
+            layout,
+            n_pages,
+            n_kv,
+            p,
+            d,
+            codec,
+            alloc,
+            layer,
+            table: vec![None; n_pages],
+            held: 0,
+        }
+    }
+
+    /// Element dtype of this pool's pages.
+    pub fn dtype(&self) -> KvDtype {
+        self.codec.dtype
+    }
+
+    /// Encoded payload bytes covering `elems` logical f32 elements —
+    /// the wire size of a chunk transfer out of this pool.
+    pub fn encoded_bytes(&self, elems: usize) -> usize {
+        self.codec.encoded_len(elems)
+    }
+
+    /// Encoded bytes of one whole page, scale sidecar included.
+    pub fn page_encoded_bytes(&self) -> usize {
+        self.codec.page_bytes()
+    }
+
+    /// Scale-sidecar bytes that ride along when one head's K+V regions
+    /// move (0 for F32, two 2-byte scales otherwise).
+    pub fn head_scale_bytes(&self) -> usize {
+        if self.codec.dtype == KvDtype::F32 {
+            0
+        } else {
+            2 * 2
+        }
     }
 
     /// Logical pages currently holding a slot reference.
@@ -158,15 +212,42 @@ impl LayerPool {
         let (p, m, d) = (self.p, self.n_kv, self.d);
         assert_eq!(k_nhd.len(), p * m * d);
         assert_eq!(v_nhd.len(), p * m * d);
+        // Stage the page in layout element order, then encode it into
+        // the slot (quantize-on-offload; a single memcpy-shaped pass
+        // for F32). The transpose here is the offload-time HND
+        // transpose the paper amortizes off the decode path.
+        let mut staged = vec![0.0f32; self.codec.page_elems()];
+        for tok in 0..p {
+            for head in 0..m {
+                let src = (tok * m + head) * d;
+                let ko = self.off(head, 0, tok, 0);
+                staged[ko..ko + d].copy_from_slice(&k_nhd[src..src + d]);
+                let vo = self.off(head, 1, tok, 0);
+                staged[vo..vo + d].copy_from_slice(&v_nhd[src..src + d]);
+            }
+        }
+        let codec = self.codec;
+        let layout = self.layout;
         let slot = self.ensure_private_slot(page);
-        self.alloc.write_slot(self.layer, slot, |buf| {
-            for tok in 0..p {
-                for head in 0..m {
-                    let src = (tok * m + head) * d;
-                    let ko = self.off(head, 0, tok, 0);
-                    buf[ko..ko + d].copy_from_slice(&k_nhd[src..src + d]);
-                    let vo = self.off(head, 1, tok, 0);
-                    buf[vo..vo + d].copy_from_slice(&v_nhd[src..src + d]);
+        self.alloc.write_slot(self.layer, slot, |buf, scales| {
+            if codec.dtype == KvDtype::F32 {
+                codec.encode_run(&staged, buf, 0, 1.0);
+                return;
+            }
+            for head in 0..m {
+                for plane in 0..2 {
+                    let region = head * 2 + plane;
+                    let mut max_abs = 0.0f32;
+                    for_region_runs(codec, layout, head, plane, |e0, len| {
+                        for &x in &staged[e0..e0 + len] {
+                            max_abs = max_abs.max(x.abs());
+                        }
+                    });
+                    let (scale, bits) = codec.scale_for(max_abs);
+                    scales[region] = bits;
+                    for_region_runs(codec, layout, head, plane, |e0, len| {
+                        codec.encode_run(&staged[e0..e0 + len], buf, e0, scale);
+                    });
                 }
             }
         });
@@ -219,11 +300,26 @@ impl LayerPool {
     /// elements copied.
     pub fn copy_chunks(&self, page: usize, chunks: &[Chunk], dst: &mut [f32]) -> usize {
         let slot = self.table[page].expect("reading a page that was never offloaded");
-        self.alloc.read_slot(self.layer, slot, |buf| {
+        let codec = self.codec;
+        let layout = self.layout;
+        self.alloc.read_slot(self.layer, slot, |buf, scales| {
             let mut off = 0usize;
             for c in chunks {
-                dst[off..off + c.len].copy_from_slice(&buf[c.offset..c.offset + c.len]);
-                off += c.len;
+                // Chunk offsets/lens are logical f32 elements. Decode in
+                // scale-homogeneous runs: a chunk may span regions (an
+                // HND head chunk covers its K and V regions).
+                let mut e = c.offset;
+                let end = c.offset + c.len;
+                while e < end {
+                    let run = codec.region_run_len(layout, e).min(end - e);
+                    let scale = match codec.dtype {
+                        KvDtype::F32 => 1.0,
+                        _ => bf16_bits_to_f32(scales[codec.region_of(layout, e)]),
+                    };
+                    codec.decode_run(buf, e, run, scale, &mut dst[off..off + run]);
+                    off += run;
+                    e += run;
+                }
             }
             off
         })
@@ -235,17 +331,43 @@ impl LayerPool {
     pub fn read_page_head(&self, page: usize, head: usize) -> (Vec<f32>, Vec<f32>) {
         let (p, d) = (self.p, self.d);
         let slot = self.table[page].expect("reading a page that was never offloaded");
+        let codec = self.codec;
         let mut k = vec![0.0; p * d];
         let mut v = vec![0.0; p * d];
-        self.alloc.read_slot(self.layer, slot, |buf| {
+        self.alloc.read_slot(self.layer, slot, |buf, scales| {
+            let scale_of = |region: usize| match codec.dtype {
+                KvDtype::F32 => 1.0,
+                _ => bf16_bits_to_f32(scales[region]),
+            };
+            let (ks, vs) = (scale_of(head * 2), scale_of(head * 2 + 1));
             for tok in 0..p {
                 let ko = self.off(head, 0, tok, 0);
-                k[tok * d..(tok + 1) * d].copy_from_slice(&buf[ko..ko + d]);
+                codec.decode_run(buf, ko, d, ks, &mut k[tok * d..(tok + 1) * d]);
                 let vo = self.off(head, 1, tok, 0);
-                v[tok * d..(tok + 1) * d].copy_from_slice(&buf[vo..vo + d]);
+                codec.decode_run(buf, vo, d, vs, &mut v[tok * d..(tok + 1) * d]);
             }
         });
         (k, v)
+    }
+}
+
+/// Visit the contiguous element runs of one (head, plane) scale region:
+/// a single `p*d` run under HND, `p` strided runs of `d` under NHD.
+fn for_region_runs(
+    codec: PageCodec,
+    layout: Layout,
+    head: usize,
+    plane: usize,
+    mut f: impl FnMut(usize, usize),
+) {
+    let (p, m, d) = (codec.page_size, codec.n_kv, codec.d_head);
+    match layout {
+        Layout::Hnd => f(((head * 2 + plane) * p) * d, p * d),
+        Layout::Nhd => {
+            for tok in 0..p {
+                f(plane * p * m * d + (tok * m + head) * d, d);
+            }
+        }
     }
 }
 
@@ -386,5 +508,88 @@ mod tests {
         }
         // a key that nobody registered does not adopt
         assert!(!b.try_adopt(1, 999));
+    }
+
+    /// One scale per (head, plane) region: dequantized values stay
+    /// within half a quantization step of the originals, under both
+    /// layouts and through both read paths (chunks + page head).
+    #[test]
+    fn quantized_roundtrip_stays_within_error_bound() {
+        let mut rng = Rng::new(17);
+        let (pages, m, p, d) = (4, 3, 8, 16);
+        let k = fill(&mut rng, p * m * d);
+        let v = fill(&mut rng, p * m * d);
+        for (dtype, qmax) in [(KvDtype::Int8, 127.0f32), (KvDtype::Int4, 7.0)] {
+            for layout in [Layout::Nhd, Layout::Hnd] {
+                let mut pool = LayerPool::new_dtype(layout, pages, m, p, d, dtype);
+                pool.write_page(2, &k, &v);
+                let max_abs = k
+                    .iter()
+                    .chain(v.iter())
+                    .fold(0.0f32, |a, &x| a.max(x.abs()));
+                let bound = max_abs / qmax * 0.51 + max_abs / 256.0;
+                for head in 0..m {
+                    let (kr, vr) = pool.read_page_head(2, head);
+                    for tok in 0..p {
+                        for dim in 0..d {
+                            let src = (tok * m + head) * d + dim;
+                            assert!(
+                                (kr[tok * d + dim] - k[src]).abs() <= bound,
+                                "{:?} {:?} K: {} vs {}",
+                                dtype,
+                                layout,
+                                kr[tok * d + dim],
+                                k[src]
+                            );
+                            assert!((vr[tok * d + dim] - v[src]).abs() <= bound);
+                        }
+                    }
+                    // copy_chunks decodes to the same values
+                    let chunks = pool.recall_chunks(2, head);
+                    let n: usize = chunks.iter().map(|c| c.len).sum();
+                    let mut s = vec![0.0f32; n];
+                    pool.copy_chunks(2, &chunks, &mut s);
+                    let (sk, sv) = s.split_at(p * d);
+                    assert_eq!(sk, &kr[..], "{:?} {:?}", dtype, layout);
+                    assert_eq!(sv, &vr[..]);
+                }
+            }
+        }
+    }
+
+    /// Writing the same data twice decodes identically — quantization
+    /// is deterministic, so prefix-shared quantized pages are exact
+    /// replicas of what a private write would have produced.
+    #[test]
+    fn quantization_is_deterministic_across_pools() {
+        let mut rng = Rng::new(23);
+        let (m, p, d) = (2, 4, 8);
+        let k = fill(&mut rng, p * m * d);
+        let v = fill(&mut rng, p * m * d);
+        for dtype in KvDtype::all() {
+            let mut a = LayerPool::new_dtype(Layout::Hnd, 2, m, p, d, dtype);
+            let mut b = LayerPool::new_dtype(Layout::Hnd, 2, m, p, d, dtype);
+            a.write_page(0, &k, &v);
+            b.write_page(0, &k, &v);
+            for head in 0..m {
+                assert_eq!(a.read_page_head(0, head), b.read_page_head(0, head), "{:?}", dtype);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_bytes_shrink_with_the_codec() {
+        let (m, p, d) = (2, 4, 8);
+        let page = vec![0.5f32; p * m * d];
+        let mut sizes = Vec::new();
+        for dtype in KvDtype::all() {
+            let mut pool = LayerPool::new_dtype(Layout::Hnd, 4, m, p, d, dtype);
+            pool.write_page(0, &page, &page);
+            assert_eq!(pool.bytes(), pool.page_encoded_bytes());
+            assert_eq!(pool.encoded_bytes(d), (d as f64 * dtype.bytes_per_elem()) as usize);
+            sizes.push(pool.bytes());
+        }
+        assert!(sizes[1] * 100 <= sizes[0] * 30, "int8 page <= 30% of f32: {:?}", sizes);
+        assert!(sizes[2] < sizes[1], "int4 < int8: {:?}", sizes);
     }
 }

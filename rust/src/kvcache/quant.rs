@@ -1,0 +1,403 @@
+//! KV page codecs: quantized page payloads for the shared slab.
+//!
+//! The paged allocator stores every page through a [`PageCodec`]
+//! instead of a hardcoded f32 stride. Three codecs:
+//!
+//! * **F32** — 4 bytes/elem, no scales, bit-exact (the default; every
+//!   pre-existing exhibit runs on it unchanged).
+//! * **Int8Sym** — symmetric per-(head, plane) INT8: one scale per
+//!   (kv head, K|V plane) region of a page, `q = round(x / s)` clamped
+//!   to ±127. 1 byte/elem + a 2-byte scale per region.
+//! * **Int4Packed** — symmetric INT4 packed two elements per byte,
+//!   `q = round(x / s)` clamped to ±7, stored biased (`q + 8`) in a
+//!   nibble. 0.5 bytes/elem + a 2-byte scale per region.
+//!
+//! Scales live in a sidecar slab next to the payload (`kvcache::alloc`)
+//! as bf16 bit patterns (upper 16 bits of the f32, round-to-nearest).
+//! Quantization uses the *roundtripped* scale, so encode and decode
+//! agree exactly and the error bound `|x - dq(q(x))| <= s/2` holds with
+//! the stored scale `s`.
+//!
+//! Quantize-on-offload, dequantize-on-gather: only the CPU pool and the
+//! transfers touching it are encoded. The GPU-resident sink + local
+//! window (and the select slabs the recall installs into) stay full
+//! precision — the near-lossless design point from the KV-cache
+//! quantization literature (see ROADMAP / PAPERS 2407.18003, 2412.19442).
+
+use crate::kvcache::pool::Layout;
+
+/// Per-pool element dtype knob, selected alongside HND/NHD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvDtype {
+    /// Full precision, bit-exact (default).
+    #[default]
+    F32,
+    /// Symmetric INT8, per-(head, plane) scales.
+    Int8,
+    /// Packed INT4 (two elems/byte), per-(head, plane) scales.
+    Int4,
+}
+
+impl KvDtype {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+            KvDtype::Int4 => "int4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s {
+            "f32" | "fp32" => Some(KvDtype::F32),
+            "int8" | "i8" => Some(KvDtype::Int8),
+            "int4" | "i4" => Some(KvDtype::Int4),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [KvDtype; 3] {
+        [KvDtype::F32, KvDtype::Int8, KvDtype::Int4]
+    }
+
+    /// Payload bytes per element on the wire / in the slab.
+    pub fn bytes_per_elem(&self) -> f64 {
+        match self {
+            KvDtype::F32 => 4.0,
+            KvDtype::Int8 => 1.0,
+            KvDtype::Int4 => 0.5,
+        }
+    }
+
+    /// Largest representable quantized magnitude (0 for F32).
+    fn qmax(&self) -> f32 {
+        match self {
+            KvDtype::F32 => 0.0,
+            KvDtype::Int8 => 127.0,
+            KvDtype::Int4 => 7.0,
+        }
+    }
+}
+
+impl std::fmt::Display for KvDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Round an f32 to the nearest bf16 bit pattern (ties to even).
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let round = 0x7fff + ((b >> 16) & 1);
+    ((b.wrapping_add(round)) >> 16) as u16
+}
+
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Page geometry + dtype: everything needed to size and transcode one
+/// page of the slab. Cheap `Copy`; derived once per allocator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageCodec {
+    pub dtype: KvDtype,
+    pub n_kv: usize,
+    pub page_size: usize,
+    pub d_head: usize,
+}
+
+impl PageCodec {
+    pub fn new(dtype: KvDtype, n_kv: usize, page_size: usize, d_head: usize) -> PageCodec {
+        PageCodec { dtype, n_kv, page_size, d_head }
+    }
+
+    /// Logical f32 elements of one page (all kv heads, K+V planes).
+    pub fn page_elems(&self) -> usize {
+        self.n_kv * 2 * self.page_size * self.d_head
+    }
+
+    /// Encoded payload bytes covering `elems` logical elements.
+    pub fn encoded_len(&self, elems: usize) -> usize {
+        match self.dtype {
+            KvDtype::F32 => elems * 4,
+            KvDtype::Int8 => elems,
+            KvDtype::Int4 => elems.div_ceil(2),
+        }
+    }
+
+    /// Encoded payload bytes of one whole page.
+    pub fn payload_bytes(&self) -> usize {
+        self.encoded_len(self.page_elems())
+    }
+
+    /// Scale-sidecar entries per page: one per (kv head, plane) region
+    /// for the quantized codecs, none for F32.
+    pub fn scales_per_page(&self) -> usize {
+        match self.dtype {
+            KvDtype::F32 => 0,
+            _ => 2 * self.n_kv,
+        }
+    }
+
+    /// Total slab bytes of one page: payload + 2-byte scale sidecar.
+    pub fn page_bytes(&self) -> usize {
+        self.payload_bytes() + self.scales_per_page() * 2
+    }
+
+    /// Scale-region index of element `e` under `layout`: always
+    /// `head * 2 + plane`, independent of layout, so a page re-encoded
+    /// under the other layout carries the same scales.
+    #[inline]
+    pub fn region_of(&self, layout: Layout, e: usize) -> usize {
+        let (p, m, d) = (self.page_size, self.n_kv, self.d_head);
+        match layout {
+            Layout::Hnd => e / (p * d),
+            Layout::Nhd => {
+                let plane = e / (p * m * d);
+                let head = (e / d) % m;
+                head * 2 + plane
+            }
+        }
+    }
+
+    /// Elements from `e` (inclusive) to the next region boundary.
+    #[inline]
+    pub fn region_run_len(&self, layout: Layout, e: usize) -> usize {
+        let (p, d) = (self.page_size, self.d_head);
+        match layout {
+            Layout::Hnd => p * d - e % (p * d),
+            Layout::Nhd => d - e % d,
+        }
+    }
+
+    /// Quantization scale for a region with max magnitude `max_abs`,
+    /// roundtripped through the bf16 sidecar representation so encode
+    /// and decode use the identical value. Returns `(scale, bits)`.
+    pub fn scale_for(&self, max_abs: f32) -> (f32, u16) {
+        let raw = if max_abs > 0.0 { max_abs / self.dtype.qmax().max(1.0) } else { 1.0 };
+        let bits = f32_to_bf16_bits(raw);
+        (bf16_bits_to_f32(bits), bits)
+    }
+
+    /// Encode `src` into `payload` starting at logical element `e0`,
+    /// using `scale` (ignored for F32).
+    pub fn encode_run(&self, src: &[f32], payload: &mut [u8], e0: usize, scale: f32) {
+        match self.dtype {
+            KvDtype::F32 => {
+                for (i, &x) in src.iter().enumerate() {
+                    payload[(e0 + i) * 4..(e0 + i) * 4 + 4].copy_from_slice(&x.to_le_bytes());
+                }
+            }
+            KvDtype::Int8 => {
+                let inv = 1.0 / scale;
+                for (i, &x) in src.iter().enumerate() {
+                    payload[e0 + i] = (x * inv).round().clamp(-127.0, 127.0) as i8 as u8;
+                }
+            }
+            KvDtype::Int4 => {
+                let inv = 1.0 / scale;
+                for (i, &x) in src.iter().enumerate() {
+                    let q = ((x * inv).round().clamp(-7.0, 7.0) as i32 + 8) as u8;
+                    let e = e0 + i;
+                    let b = &mut payload[e / 2];
+                    if e % 2 == 0 {
+                        *b = (*b & 0xf0) | q;
+                    } else {
+                        *b = (*b & 0x0f) | (q << 4);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode `len` elements starting at logical element `e0` of
+    /// `payload` into `dst`, using `scale` (ignored for F32).
+    pub fn decode_run(&self, payload: &[u8], e0: usize, len: usize, scale: f32, dst: &mut [f32]) {
+        match self.dtype {
+            KvDtype::F32 => {
+                for (i, slot) in dst.iter_mut().enumerate().take(len) {
+                    let o = (e0 + i) * 4;
+                    *slot = f32::from_le_bytes(payload[o..o + 4].try_into().unwrap());
+                }
+            }
+            KvDtype::Int8 => {
+                for (i, slot) in dst.iter_mut().enumerate().take(len) {
+                    *slot = payload[e0 + i] as i8 as f32 * scale;
+                }
+            }
+            KvDtype::Int4 => {
+                for (i, slot) in dst.iter_mut().enumerate().take(len) {
+                    let e = e0 + i;
+                    let b = payload[e / 2];
+                    let q = if e % 2 == 0 { b & 0x0f } else { b >> 4 };
+                    *slot = (q as i32 - 8) as f32 * scale;
+                }
+            }
+        }
+    }
+}
+
+/// Roundtrip a whole f32 slice through the codec with one shared
+/// symmetric scale — the analytic counterpart of storing it in a
+/// quantized page region. Identity for F32. Used by the accuracy
+/// dtype-ablation exhibit to inject the codec's error into oracle
+/// traces (which carry scores, not raw K/V).
+pub fn roundtrip_f32s(dtype: KvDtype, xs: &[f32]) -> Vec<f32> {
+    if dtype == KvDtype::F32 || xs.is_empty() {
+        return xs.to_vec();
+    }
+    let codec = PageCodec::new(dtype, 1, 1, xs.len());
+    let max_abs = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let (scale, _) = codec.scale_for(max_abs);
+    let mut payload = vec![0u8; codec.encoded_len(xs.len())];
+    codec.encode_run(xs, &mut payload, 0, scale);
+    let mut out = vec![0.0f32; xs.len()];
+    codec.decode_run(&payload, 0, xs.len(), scale, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for d in KvDtype::all() {
+            assert_eq!(KvDtype::parse(d.as_str()), Some(d));
+        }
+        assert_eq!(KvDtype::parse("fp16"), None);
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+    }
+
+    #[test]
+    fn byte_sizing_matches_dtype() {
+        let (m, p, d) = (2usize, 4usize, 8usize);
+        let elems = m * 2 * p * d; // 128
+        let f32c = PageCodec::new(KvDtype::F32, m, p, d);
+        let i8c = PageCodec::new(KvDtype::Int8, m, p, d);
+        let i4c = PageCodec::new(KvDtype::Int4, m, p, d);
+        assert_eq!(f32c.page_bytes(), elems * 4);
+        assert_eq!(i8c.page_bytes(), elems + 2 * m * 2);
+        assert_eq!(i4c.page_bytes(), elems / 2 + 2 * m * 2);
+        assert!(i8c.page_bytes() * 100 <= f32c.page_bytes() * 30, "int8 page <= 30% of f32");
+        assert!(i4c.page_bytes() < i8c.page_bytes());
+    }
+
+    #[test]
+    fn bf16_bits_roundtrip_is_close_and_stable() {
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            let x = rng.normal_f32(0.0, 3.0).abs() + 1e-6;
+            let y = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            assert!((x - y).abs() <= x * (1.0 / 256.0), "{} vs {}", x, y);
+            // the roundtripped value is a fixed point
+            assert_eq!(f32_to_bf16_bits(y), f32_to_bf16_bits(x));
+        }
+    }
+
+    /// Quant/dequant error bound: with the stored (bf16-roundtripped)
+    /// scale s, every in-range element obeys |x - dq| <= s/2 + eps;
+    /// clamped elements (possible when bf16 rounds the scale down) stay
+    /// within s/2 + max_abs/256.
+    #[test]
+    fn roundtrip_error_is_bounded_by_half_a_step() {
+        check("quant-roundtrip-bound", 50, |rng| {
+            let n = 1 + (rng.next_u64() % 64) as usize * 2;
+            let sigma = 10f32.powi((rng.next_u64() % 7) as i32 - 3);
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, sigma)).collect();
+            let max_abs = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            for dtype in [KvDtype::Int8, KvDtype::Int4] {
+                let codec = PageCodec::new(dtype, 1, 1, n);
+                let (scale, _) = codec.scale_for(max_abs);
+                let mut payload = vec![0u8; codec.encoded_len(n)];
+                codec.encode_run(&xs, &mut payload, 0, scale);
+                let mut back = vec![0.0f32; n];
+                codec.decode_run(&payload, 0, n, scale, &mut back);
+                let bound = scale * 0.5 + max_abs / 256.0 + 1e-7;
+                for (i, (&x, &y)) in xs.iter().zip(&back).enumerate() {
+                    crate::prop_assert!(
+                        (x - y).abs() <= bound,
+                        "{:?} elem {}: {} -> {} (scale {}, bound {})",
+                        dtype,
+                        i,
+                        x,
+                        y,
+                        scale,
+                        bound
+                    );
+                }
+            }
+            // F32 is bit-exact through the byte payload
+            let codec = PageCodec::new(KvDtype::F32, 1, 1, n);
+            let mut payload = vec![0u8; codec.encoded_len(n)];
+            codec.encode_run(&xs, &mut payload, 0, 1.0);
+            let mut back = vec![0.0f32; n];
+            codec.decode_run(&payload, 0, n, 1.0, &mut back);
+            crate::prop_assert!(xs == back, "f32 payload roundtrip must be exact");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_nibble_packing_is_position_exact() {
+        // odd/even element offsets must hit the right nibbles
+        let codec = PageCodec::new(KvDtype::Int4, 1, 1, 6);
+        let xs = [7.0f32, -7.0, 1.0, 0.0, 3.0, -3.0];
+        let (scale, _) = codec.scale_for(7.0);
+        let mut payload = vec![0u8; codec.encoded_len(6)];
+        // encode one element at a time at arbitrary offsets
+        for (e, &x) in xs.iter().enumerate() {
+            codec.encode_run(&[x], &mut payload, e, scale);
+        }
+        let mut back = vec![0.0f32; 6];
+        codec.decode_run(&payload, 0, 6, scale, &mut back);
+        for (&x, &y) in xs.iter().zip(&back) {
+            assert!((x - y).abs() <= scale * 0.5 + 7.0 / 256.0 + 1e-6, "{} vs {}", x, y);
+        }
+        // the max-magnitude elements roundtrip essentially exactly
+        assert!((back[0] - 7.0).abs() < 0.05 && (back[1] + 7.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn region_indexing_covers_both_layouts() {
+        let (m, p, d) = (3usize, 4usize, 8usize);
+        for dtype in [KvDtype::Int8, KvDtype::Int4] {
+            let codec = PageCodec::new(dtype, m, p, d);
+            for layout in [Layout::Hnd, Layout::Nhd] {
+                let mut counts = vec![0usize; codec.scales_per_page()];
+                let mut e = 0;
+                while e < codec.page_elems() {
+                    let run = codec.region_run_len(layout, e);
+                    let r = codec.region_of(layout, e);
+                    // a run never crosses a region boundary
+                    for i in 0..run {
+                        assert_eq!(codec.region_of(layout, e + i), r);
+                    }
+                    counts[r] += run;
+                    e += run;
+                }
+                // every region sees exactly its p*d elements
+                assert!(counts.iter().all(|&c| c == p * d), "{:?} {:?}", dtype, layout);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_f32s_helper_identity_and_bounds() {
+        let mut rng = Rng::new(77);
+        let xs: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        assert_eq!(roundtrip_f32s(KvDtype::F32, &xs), xs);
+        let max_abs = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        for (dtype, qmax) in [(KvDtype::Int8, 127.0f32), (KvDtype::Int4, 7.0)] {
+            let back = roundtrip_f32s(dtype, &xs);
+            let bound = max_abs / qmax * 0.51 + max_abs / 256.0;
+            for (&x, &y) in xs.iter().zip(&back) {
+                assert!((x - y).abs() <= bound, "{:?}: {} vs {}", dtype, x, y);
+            }
+        }
+    }
+}

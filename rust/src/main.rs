@@ -16,6 +16,7 @@ use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use freekv::coordinator::sim_backend::SimBackend;
 use freekv::coordinator::tokenizer;
 use freekv::eval::{accuracy, latency, real};
+use freekv::kvcache::quant::KvDtype;
 use freekv::runtime::Runtime;
 use freekv::server::ServeOptions;
 use freekv::util::cli::Args;
@@ -49,7 +50,14 @@ fn run() -> Result<()> {
     // --prefix-cache enables copy-on-write prefix sharing of pool pages.
     // --chaos-seed N seeds deterministic fault injection (worker deaths,
     // engine panics, slow transfers) to exercise the degradation ladder.
+    // --kv-dtype f32|int8|int4 selects the CPU pool page codec
+    // (quantize-on-offload, dequantize-on-gather; sink/window stay f32).
     let defaults = FreeKvParams::default();
+    let kv_dtype = match args.get("kv-dtype") {
+        Some(s) => KvDtype::parse(&s)
+            .ok_or_else(|| anyhow!("unknown --kv-dtype {s:?} (expected f32|int8|int4)"))?,
+        None => defaults.kv_dtype,
+    };
     let params = FreeKvParams {
         tau,
         overlap: !args.flag("serial-recall"),
@@ -59,6 +67,7 @@ fn run() -> Result<()> {
         kv_pool_pages: args.usize_or("kv-pool-pages", defaults.kv_pool_pages),
         prefix_cache: args.flag("prefix-cache") || defaults.prefix_cache,
         chaos_seed: args.get("chaos-seed").and_then(|v| v.parse().ok()),
+        kv_dtype,
         ..Default::default()
     };
 
@@ -125,6 +134,7 @@ fn run() -> Result<()> {
             // client is !Send); --sim swaps in the artifact-free backend.
             let el = if args.flag("sim") {
                 let (pool_pages, prefix) = (params.kv_pool_pages as u64, params.prefix_cache);
+                let dtype = params.kv_dtype;
                 // One fault plan for the whole process: a supervised
                 // engine restart keeps advancing the same schedule
                 // instead of replaying it from call index 0.
@@ -132,7 +142,7 @@ fn run() -> Result<()> {
                     .chaos_seed
                     .map(|s| std::sync::Arc::new(freekv::util::fault::FaultPlan::chaos(s)));
                 EngineLoop::spawn(loop_cfg, move || {
-                    let mut b = SimBackend::tiny_with_pool(pool_pages, prefix);
+                    let mut b = SimBackend::tiny_with_pool_dtype(pool_pages, prefix, dtype);
                     if let Some(p) = &plan {
                         b.set_faults(p.clone());
                     }
@@ -194,8 +204,11 @@ fn run() -> Result<()> {
                 ..Default::default()
             };
             if args.flag("sim") {
-                let mut backend =
-                    SimBackend::tiny_with_pool(params.kv_pool_pages as u64, params.prefix_cache);
+                let mut backend = SimBackend::tiny_with_pool_dtype(
+                    params.kv_pool_pages as u64,
+                    params.prefix_cache,
+                    params.kv_dtype,
+                );
                 if let Some(seed) = params.chaos_seed {
                     backend.set_faults(std::sync::Arc::new(
                         freekv::util::fault::FaultPlan::chaos(seed),
@@ -216,12 +229,13 @@ fn run() -> Result<()> {
         _ => Err(anyhow!(
             "usage: freekv <info|generate|serve|loadtest|eval> [--model tiny] [--artifacts dir] \
              [--serial-recall] [--exec-workers 2] [--max-lanes 2] [--weight-workers 1] \
-             [--kv-pool-pages 0] [--prefix-cache] [--sim] [--chaos-seed N] \
+             [--kv-pool-pages 0] [--kv-dtype f32|int8|int4] [--prefix-cache] [--sim] \
+             [--chaos-seed N] \
              [--queue-cap 64] [--max-batch 4] [--admit-below 4] [--microbatch-min 0] \
              [--max-conns 0] [--drain-secs 5]\n\
              eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
              table2 table3 table4 table5 table6 table7 table8 table9 fig7 fig8 fig9 fig10 \
-             oom prefix-mem real-breakdown real-correction fig16-20 all"
+             dtype oom prefix-mem real-breakdown real-correction fig16-20 all"
         )),
     }
 }
@@ -323,6 +337,9 @@ fn eval(what: &str, seeds: u64, artifacts: &str, model: &str) -> Result<()> {
     }
     if is("fig10") {
         emit(latency::fig10(), "fig10");
+    }
+    if is("dtype") {
+        emit(accuracy::dtype_ablation(seeds), "dtype_ablation");
     }
     if is("oom") {
         emit(latency::oom_table(), "oom");

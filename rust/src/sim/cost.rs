@@ -8,6 +8,7 @@
 //! shapes without the paper's hardware.
 
 use crate::config::ModelConfig;
+use crate::kvcache::quant::KvDtype;
 
 use super::profiles::DeviceProfile;
 
@@ -17,15 +18,36 @@ pub struct CostModel {
     pub model: ModelConfig,
     /// bytes per weight element on device (2 = fp16 paper setting).
     pub weight_elem_bytes: usize,
+    /// CPU-side page codec (kvcache::quant). Scales host<->device wire
+    /// bytes only: the GPU working set (attention / gather / selection /
+    /// layout conversion) stays at `kv_elem_bytes` because pages are
+    /// dequantized at the transfer boundary.
+    pub kv_dtype: KvDtype,
 }
 
 impl CostModel {
     pub fn new(dev: DeviceProfile, model: ModelConfig) -> CostModel {
-        CostModel { dev, model, weight_elem_bytes: 2 }
+        CostModel { dev, model, weight_elem_bytes: 2, kv_dtype: KvDtype::F32 }
+    }
+
+    pub fn with_kv_dtype(dev: DeviceProfile, model: ModelConfig, dtype: KvDtype) -> CostModel {
+        let mut c = CostModel::new(dev, model);
+        c.kv_dtype = dtype;
+        c
     }
 
     fn eb(&self) -> f64 {
         self.model.kv_elem_bytes as f64
+    }
+
+    /// Bytes per KV element on the PCIe wire (encoded form). F32 pools
+    /// move `kv_elem_bytes` untouched; quantized pools move the codec's
+    /// payload width (scale sidecars are amortized into the noise).
+    fn wire_eb(&self) -> f64 {
+        match self.kv_dtype {
+            KvDtype::F32 => self.eb(),
+            d => d.bytes_per_elem(),
+        }
     }
 
     fn web(&self) -> f64 {
@@ -136,13 +158,13 @@ impl CostModel {
     /// transactions of d elems per (page, head, k/v plane).
     pub fn recall_pages(&self, pages: usize, hnd: bool) -> f64 {
         let m = &self.model;
-        let per_head_bytes = (2 * m.page_size * m.d_head) as f64 * self.eb();
+        let per_head_bytes = (2 * m.page_size * m.d_head) as f64 * self.wire_eb();
         if hnd {
             let chunks = (pages * m.n_kv) as u64;
             self.dev.h2d.time(chunks, per_head_bytes as u64)
         } else {
             let chunks = (pages * m.n_kv * 2 * m.page_size) as u64;
-            let chunk_bytes = m.d_head as f64 * self.eb();
+            let chunk_bytes = m.d_head as f64 * self.wire_eb();
             self.dev.h2d.time(chunks, chunk_bytes as u64)
         }
     }
@@ -151,14 +173,14 @@ impl CostModel {
     pub fn recall_tokens(&self, tokens: usize) -> f64 {
         let m = &self.model;
         let chunks = (tokens * m.n_kv * 2) as u64;
-        let chunk_bytes = (m.d_head as f64 * self.eb()) as u64;
+        let chunk_bytes = (m.d_head as f64 * self.wire_eb()) as u64;
         self.dev.h2d.time(chunks, chunk_bytes)
     }
 
     /// Offload one completed page (D2H), HND-converted on the fly.
     pub fn offload_page(&self) -> f64 {
         let m = &self.model;
-        let per_head_bytes = (2 * m.page_size * m.d_head) as f64 * self.eb();
+        let per_head_bytes = (2 * m.page_size * m.d_head) as f64 * self.wire_eb();
         self.dev.d2h.time(m.n_kv as u64, per_head_bytes as u64)
     }
 
@@ -222,6 +244,34 @@ mod tests {
         let t1 = c.prefill_compute(8192);
         let t2 = c.prefill_compute(32768);
         assert!(t2 > 3.9 * t1);
+    }
+
+    #[test]
+    fn quantized_pools_shrink_wire_time_but_not_gpu_time() {
+        let c = cm();
+        let c8 = CostModel::with_kv_dtype(
+            DeviceProfile::a100_pcie4(),
+            ModelConfig::llama31_8b(),
+            KvDtype::Int8,
+        );
+        let c4 = CostModel::with_kv_dtype(
+            DeviceProfile::a100_pcie4(),
+            ModelConfig::llama31_8b(),
+            KvDtype::Int4,
+        );
+        // PCIe blocks scale with the codec's payload width (latency floor
+        // keeps the ratio below the raw byte ratio).
+        let (f, i8t, i4t) =
+            (c.recall_pages(64, true), c8.recall_pages(64, true), c4.recall_pages(64, true));
+        assert!(i8t < f && i4t < i8t, "f32 {} int8 {} int4 {}", f, i8t, i4t);
+        assert!(i8t < 0.75 * f, "int8 recall {} vs f32 {}", i8t, f);
+        assert!(c8.offload_page() < c.offload_page());
+        assert!(c8.recall_tokens(1024) < c.recall_tokens(1024));
+        // GPU-side ops see dequantized pages: identical across dtypes.
+        assert_eq!(c.attention(1, 2048), c8.attention(1, 2048));
+        assert_eq!(c.gather(1, 2048), c4.gather(1, 2048));
+        assert_eq!(c.selection(1, 512), c8.selection(1, 512));
+        assert_eq!(c.convert_pages(32), c4.convert_pages(32));
     }
 
     #[test]

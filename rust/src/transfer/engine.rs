@@ -22,10 +22,19 @@ use crate::util::fault::{FaultPlan, FaultSite};
 #[derive(Debug, Default, Clone)]
 pub struct TransferCounters {
     pub h2d_chunks: u64,
+    /// Logical (decoded f32) bytes recalled — layout/selection driven,
+    /// codec independent, comparable across dtypes.
     pub h2d_bytes: u64,
     pub h2d_calls: u64,
     pub d2h_chunks: u64,
+    /// Logical (decoded f32) bytes offloaded.
     pub d2h_bytes: u64,
+    /// Encoded wire bytes recalled (quantized payload + scale sidecar);
+    /// equals `h2d_bytes` on an f32 pool.
+    pub h2d_encoded_bytes: u64,
+    /// Encoded wire bytes offloaded into the pool; equals `d2h_bytes`
+    /// on an f32 pool (prefix hits move nothing).
+    pub d2h_encoded_bytes: u64,
     pub convert_bytes: u64,
     pub recalled_pages: u64,
     pub offloaded_pages: u64,
@@ -45,6 +54,8 @@ impl TransferCounters {
             h2d_calls: self.h2d_calls + o.h2d_calls,
             d2h_chunks: self.d2h_chunks + o.d2h_chunks,
             d2h_bytes: self.d2h_bytes + o.d2h_bytes,
+            h2d_encoded_bytes: self.h2d_encoded_bytes + o.h2d_encoded_bytes,
+            d2h_encoded_bytes: self.d2h_encoded_bytes + o.d2h_encoded_bytes,
             convert_bytes: self.convert_bytes + o.convert_bytes,
             recalled_pages: self.recalled_pages + o.recalled_pages,
             offloaded_pages: self.offloaded_pages + o.offloaded_pages,
@@ -115,6 +126,8 @@ impl TransferEngine {
             let off = pool.copy_chunks(page, &chunks, staging);
             self.counters.h2d_chunks += chunks.len() as u64;
             self.counters.h2d_bytes += (off * 4) as u64;
+            self.counters.h2d_encoded_bytes +=
+                (pool.encoded_bytes(off) + pool.head_scale_bytes()) as u64;
             self.counters.h2d_calls += 1;
         }
         self.counters.real_h2d_secs += t0.elapsed().as_secs_f64();
@@ -166,6 +179,7 @@ impl TransferEngine {
         pool.write_page_keyed(cp.page, &cp.k_nhd, &cp.v_nhd, key);
         let bytes = ((cp.k_nhd.len() + cp.v_nhd.len()) * 4) as u64;
         self.counters.d2h_bytes += bytes;
+        self.counters.d2h_encoded_bytes += pool.page_encoded_bytes() as u64;
         self.counters.d2h_chunks += match pool.layout {
             Layout::Hnd => pool.n_kv as u64,
             Layout::Nhd => 2,
@@ -251,6 +265,43 @@ mod tests {
             assert_eq!(eng.counters.h2d_chunks, 2 * per_page_head, "{:?}", layout);
             assert_eq!(eng.counters.h2d_bytes, 2 * (2 * 4 * 8 * 4) as u64);
             assert_eq!(eng.counters.recalled_pages, 2);
+            // on the default f32 pool the wire bytes ARE the logical bytes
+            assert_eq!(eng.counters.h2d_encoded_bytes, eng.counters.h2d_bytes);
         }
+    }
+
+    #[test]
+    fn encoded_byte_gauges_track_the_codec() {
+        use crate::kvcache::quant::KvDtype;
+        let (m, d, p) = (2usize, 8usize, 4usize);
+        let mut wire = Vec::new();
+        for dtype in KvDtype::all() {
+            let mut pool = LayerPool::new_dtype(Layout::Hnd, 16, m, p, d, dtype);
+            let mut gpu = GpuLayerCache::new(m, d, p, 1, 2, 2, 16);
+            let mut sel = gpu.new_select_slots();
+            let mut eng = TransferEngine::new(p, d, true);
+            let mut rng = Rng::new(7);
+            for _ in 0..8 {
+                let k: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..m * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                if let Some(cp) = gpu.append(&k, &v) {
+                    eng.offload_page(&cp, &mut pool);
+                }
+            }
+            eng.recall_page(&pool, 0, 0, &mut sel, 0);
+            let c = &eng.counters;
+            // logical gauges are codec-independent
+            assert_eq!(c.h2d_bytes, (2 * p * d * 4) as u64, "{:?}", dtype);
+            assert_eq!(c.d2h_bytes, (2 * 2 * m * p * d * 4) as u64, "{:?}", dtype);
+            if dtype == KvDtype::F32 {
+                assert_eq!(c.h2d_encoded_bytes, c.h2d_bytes);
+                assert_eq!(c.d2h_encoded_bytes, c.d2h_bytes);
+            } else {
+                assert!(c.h2d_encoded_bytes < c.h2d_bytes / 3, "{:?}", dtype);
+                assert!(c.d2h_encoded_bytes < c.d2h_bytes / 3, "{:?}", dtype);
+            }
+            wire.push(c.d2h_encoded_bytes);
+        }
+        assert!(wire[2] < wire[1] && wire[1] < wire[0], "int4 < int8 < f32: {:?}", wire);
     }
 }

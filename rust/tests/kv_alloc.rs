@@ -4,11 +4,15 @@
 //! references, the allocator-backed pool is behaviorally identical to
 //! the old private-per-request layout when sharing is off, and prefix
 //! sharing measurably shrinks the pool for shared-prompt workloads
-//! while leaving every token stream unchanged.
+//! while leaving every token stream unchanged. The whole invariant
+//! suite runs once per page codec (f32 / int8 / int4): quantization is
+//! deterministic, so "reads back exactly what it last wrote" becomes
+//! "reads back exactly what a reference pool of the same codec returns
+//! for that content".
 
 use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig, StepEvent};
 use freekv::coordinator::sim_backend::{sim_config, SimBackend};
-use freekv::kvcache::{LayerPool, Layout, PageAllocator, RequestKv};
+use freekv::kvcache::{KvDtype, LayerPool, Layout, PageAllocator, RequestKv};
 use freekv::prop_assert;
 use freekv::transfer::TransferEngine;
 use freekv::util::proptest::check;
@@ -19,103 +23,116 @@ use freekv::util::rng::Rng;
 fn allocator_invariants_under_random_share_write_drop() {
     // Random interleavings of keyed writes, adoptions, and private
     // (CoW) rewrites across several views; after every step each view
-    // must read back exactly what it last wrote or adopted, and after
-    // the views drop (in random order) the allocator must be empty.
-    // A double-free or refcount leak fires the allocator's own asserts.
-    check("kv-alloc-invariants", 25, |rng| {
-        let (m, p, d) = (1 + rng.below(3), 2 + rng.below(4), 4 + rng.below(8));
-        let n_layers = 1 + rng.below(2);
-        let n_pages = 6usize;
-        let n_views = 2 + rng.below(3);
-        let alloc = PageAllocator::new(n_layers, m, p, d, 0, true, rng.next_u64());
-        let page_elems = p * m * d;
-        let canon = |g: usize| -> Vec<f32> {
-            (0..page_elems).map(|i| (g * 31 + i) as f32).collect()
-        };
-        let mine = |v: usize| -> Vec<f32> {
-            (0..page_elems).map(|i| 0.5 + (v * 977 + i) as f32).collect()
-        };
-        let mut views: Vec<Option<Vec<LayerPool>>> = (0..n_views)
-            .map(|_| {
-                Some(
-                    (0..n_layers)
-                        .map(|l| {
-                            LayerPool::with_alloc(Layout::Hnd, n_pages, m, p, d, alloc.clone(), l)
-                        })
-                        .collect(),
-                )
-            })
-            .collect();
-        let mut content: Vec<Vec<Vec<Option<Vec<f32>>>>> =
-            vec![vec![vec![None; n_pages]; n_layers]; n_views];
-        for _step in 0..30 {
-            let v = rng.below(n_views);
-            let l = rng.below(n_layers);
-            let g = rng.below(n_pages);
-            let key = (g as u128 + 1) * 1000;
-            let pools = views[v].as_mut().expect("views live during the write phase");
-            match rng.below(3) {
-                0 => {
-                    let c = canon(g);
-                    pools[l].write_page_keyed(g, &c, &c, Some(key));
-                    content[v][l][g] = Some(c);
-                }
-                1 => {
-                    if pools[l].try_adopt(g, key) {
-                        content[v][l][g] = Some(canon(g));
+    // must read back exactly what it last wrote or adopted (through the
+    // pool's codec), and after the views drop (in random order) the
+    // allocator must be empty. A double-free or refcount leak fires the
+    // allocator's own asserts. Runs once per codec.
+    for dtype in KvDtype::all() {
+        check(&format!("kv-alloc-invariants-{}", dtype.as_str()), 25, |rng| {
+            let (m, p, d) = (1 + rng.below(3), 2 + rng.below(4), 4 + rng.below(8));
+            let n_layers = 1 + rng.below(2);
+            let n_pages = 6usize;
+            let n_views = 2 + rng.below(3);
+            let alloc =
+                PageAllocator::with_dtype(n_layers, m, p, d, 0, true, rng.next_u64(), dtype);
+            let page_elems = p * m * d;
+            let canon = |g: usize| -> Vec<f32> {
+                (0..page_elems).map(|i| (g * 31 + i) as f32).collect()
+            };
+            let mine = |v: usize| -> Vec<f32> {
+                (0..page_elems).map(|i| 0.5 + (v * 977 + i) as f32).collect()
+            };
+            // What a read of head 0 must return for `c` under this codec:
+            // quantization is deterministic, so a scratch pool of the
+            // same geometry is an exact reference (bit-identity for f32).
+            let expected = |c: &[f32]| -> (Vec<f32>, Vec<f32>) {
+                let mut scratch = LayerPool::new_dtype(Layout::Hnd, 1, m, p, d, dtype);
+                scratch.write_page(0, c, c);
+                scratch.read_page_head(0, 0)
+            };
+            let mut views: Vec<Option<Vec<LayerPool>>> = (0..n_views)
+                .map(|_| {
+                    Some(
+                        (0..n_layers)
+                            .map(|l| {
+                                LayerPool::with_alloc(
+                                    Layout::Hnd,
+                                    n_pages,
+                                    m,
+                                    p,
+                                    d,
+                                    alloc.clone(),
+                                    l,
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect();
+            let mut content: Vec<Vec<Vec<Option<(Vec<f32>, Vec<f32>)>>>> =
+                vec![vec![vec![None; n_pages]; n_layers]; n_views];
+            for _step in 0..30 {
+                let v = rng.below(n_views);
+                let l = rng.below(n_layers);
+                let g = rng.below(n_pages);
+                let key = (g as u128 + 1) * 1000;
+                let pools = views[v].as_mut().expect("views live during the write phase");
+                match rng.below(3) {
+                    0 => {
+                        let c = canon(g);
+                        pools[l].write_page_keyed(g, &c, &c, Some(key));
+                        content[v][l][g] = Some(expected(&c));
+                    }
+                    1 => {
+                        if pools[l].try_adopt(g, key) {
+                            content[v][l][g] = Some(expected(&canon(g)));
+                        }
+                    }
+                    _ => {
+                        let c = mine(v);
+                        pools[l].write_page(g, &c, &c);
+                        content[v][l][g] = Some(expected(&c));
                     }
                 }
-                _ => {
-                    let c = mine(v);
-                    pools[l].write_page(g, &c, &c);
-                    content[v][l][g] = Some(c);
-                }
-            }
-            // every view's recorded pages must read back intact —
-            // aliasing and CoW must never leak one view's write into
-            // another view
-            for (vi, slot) in views.iter().enumerate() {
-                let pools = slot.as_ref().unwrap();
-                for (li, pool) in pools.iter().enumerate() {
-                    for (gi, want) in content[vi][li].iter().enumerate() {
-                        let Some(want) = want else { continue };
-                        let (k_read, v_read) = pool.read_page_head(gi, 0);
-                        for tok in 0..p {
-                            for dim in 0..d {
-                                let src = (tok * m) * d + dim;
-                                prop_assert!(
-                                    k_read[tok * d + dim] == want[src]
-                                        && v_read[tok * d + dim] == want[src],
-                                    "view {} layer {} page {} diverged at tok {} dim {}",
-                                    vi,
-                                    li,
-                                    gi,
-                                    tok,
-                                    dim
-                                );
-                            }
+                // every view's recorded pages must read back intact —
+                // aliasing and CoW must never leak one view's write into
+                // another view
+                for (vi, slot) in views.iter().enumerate() {
+                    let pools = slot.as_ref().unwrap();
+                    for (li, pool) in pools.iter().enumerate() {
+                        for (gi, want) in content[vi][li].iter().enumerate() {
+                            let Some((want_k, want_v)) = want else { continue };
+                            let (k_read, v_read) = pool.read_page_head(gi, 0);
+                            prop_assert!(
+                                &k_read == want_k && &v_read == want_v,
+                                "view {} layer {} page {} diverged ({})",
+                                vi,
+                                li,
+                                gi,
+                                dtype
+                            );
                         }
                     }
                 }
+                let st = alloc.stats();
+                prop_assert!(
+                    st.pages_used <= (n_views * n_layers * n_pages) as u64,
+                    "used {} exceeds every view full",
+                    st.pages_used
+                );
+            }
+            // drop the views in random order: refcounts must reach zero
+            let mut order: Vec<usize> = (0..n_views).collect();
+            rng.shuffle(&mut order);
+            for idx in order {
+                views[idx] = None;
             }
             let st = alloc.stats();
-            prop_assert!(
-                st.pages_used <= (n_views * n_layers * n_pages) as u64,
-                "used {} exceeds every view full",
-                st.pages_used
-            );
-        }
-        // drop the views in random order: refcounts must reach zero
-        let mut order: Vec<usize> = (0..n_views).collect();
-        rng.shuffle(&mut order);
-        for idx in order {
-            views[idx] = None;
-        }
-        let st = alloc.stats();
-        prop_assert!(st.pages_used == 0, "leaked {} pages", st.pages_used);
-        prop_assert!(st.pages_shared == 0, "shared gauge leaked {}", st.pages_shared);
-        Ok(())
-    });
+            prop_assert!(st.pages_used == 0, "leaked {} pages", st.pages_used);
+            prop_assert!(st.pages_shared == 0, "shared gauge leaked {}", st.pages_shared);
+            Ok(())
+        });
+    }
 }
 
 #[test]
@@ -184,10 +201,83 @@ fn shared_allocator_pool_matches_private_pool_bit_for_bit() {
     assert_eq!(shared.stats().pages_used, 0);
 }
 
+#[test]
+fn quantized_shared_pool_matches_quantized_private_pool() {
+    // The allocator swap must stay invisible to the data path for
+    // quantized codecs too: the same append/selection schedule through
+    // a sharing int8 pool and a private int8 pool gathers identical
+    // (deterministically quantized) tensors.
+    for dtype in [KvDtype::Int8, KvDtype::Int4] {
+        let cfg = sim_config();
+        let shared = PageAllocator::for_model_dtype(&cfg, 0, true, dtype);
+        let private = PageAllocator::for_model_dtype(&cfg, 0, false, dtype);
+        let mut a = RequestKv::with_alloc(&cfg, Layout::Hnd, private);
+        let mut b = RequestKv::with_alloc(&cfg, Layout::Hnd, shared.clone());
+        let mut ea = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        let mut eb = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        let mut rng = Rng::new(7);
+        let tokens: Vec<i32> = (0..24).map(|t| 32 + t % 90).collect();
+        for t in 0..tokens.len() {
+            b.feed_tokens(&tokens[..t + 1]);
+            for l in 0..cfg.n_layers {
+                let k: Vec<f32> =
+                    (0..cfg.n_kv * cfg.d_head).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let v: Vec<f32> =
+                    (0..cfg.n_kv * cfg.d_head).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                a.append(l, &k, &v, &mut ea);
+                b.append(l, &k, &v, &mut eb);
+            }
+        }
+        assert_eq!(ea.counters.offloaded_pages, eb.counters.offloaded_pages);
+        let mask = a.layers[0].gpu.selectable_mask();
+        let cands: Vec<usize> =
+            mask.iter().enumerate().filter(|(_, &x)| x > 0.0).map(|(g, _)| g).collect();
+        assert!(!cands.is_empty(), "need selectable pages");
+        for l in 0..cfg.n_layers {
+            for head in 0..cfg.n_kv {
+                let pages = vec![cands[head % cands.len()]];
+                let na = a.apply_selection(l, head, &pages, &mut ea);
+                let nb = b.apply_selection(l, head, &pages, &mut eb);
+                assert_eq!(na, nb, "{} layer {} head {}", dtype, l, head);
+            }
+        }
+        assert_eq!(ea.counters.h2d_encoded_bytes, eb.counters.h2d_encoded_bytes);
+        for l in 0..cfg.n_layers {
+            let s = a.layers[l].gpu.budget_slots();
+            let (m, d) = (cfg.n_kv, cfg.d_head);
+            let mut ga =
+                (vec![0.0f32; m * s * d], vec![0.0f32; m * s * d], vec![0.0f32; m * s]);
+            let mut gb = ga.clone();
+            {
+                let (gpu, x) = a.layers[l].parts_mut();
+                gpu.gather_full(&mut x.select, &mut ga.0, &mut ga.1, &mut ga.2);
+            }
+            {
+                let (gpu, x) = b.layers[l].parts_mut();
+                gpu.gather_full(&mut x.select, &mut gb.0, &mut gb.1, &mut gb.2);
+            }
+            assert_eq!(ga, gb, "{} layer {} gathered tensors diverged", dtype, l);
+        }
+        drop(b);
+        assert_eq!(shared.stats().pages_used, 0);
+    }
+}
+
 /// Drive N identical-prompt requests through the full scheduler stack;
 /// returns (completion texts, peak pool pages, prefix hits).
 fn run_shared_prompt(n: u64, prefix_cache: bool) -> (Vec<String>, u64, u64) {
-    let backend = SimBackend::tiny_with_pool(0, prefix_cache);
+    let (texts, stats) = run_shared_prompt_dtype(n, prefix_cache, KvDtype::F32);
+    (texts, stats.pages_peak, stats.prefix_hits)
+}
+
+/// [`run_shared_prompt`] with an explicit page codec; returns the full
+/// allocator stats so byte gauges can be compared across codecs.
+fn run_shared_prompt_dtype(
+    n: u64,
+    prefix_cache: bool,
+    dtype: KvDtype,
+) -> (Vec<String>, freekv::kvcache::KvPoolStats) {
+    let backend = SimBackend::tiny_with_pool_dtype(0, prefix_cache, dtype);
     let alloc = backend.allocator();
     let cfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
     let mut s = Scheduler::new(backend, cfg);
@@ -203,8 +293,34 @@ fn run_shared_prompt(n: u64, prefix_cache: bool) -> (Vec<String>, u64, u64) {
         }
     }
     let texts: Vec<String> = (1..=n).map(|i| s.take_completion(i).unwrap().text).collect();
-    let st = alloc.stats();
-    (texts, st.pages_peak, st.prefix_hits)
+    (texts, alloc.stats())
+}
+
+#[test]
+fn every_codec_serves_and_int8_pool_is_under_30_percent_of_f32() {
+    // The full scheduler stack runs unchanged on every codec: token
+    // streams are identical (sim decode never reads KV back), prefix
+    // sharing still hits under dtype-qualified keys, page counts match,
+    // and the CPU byte gauges shrink with the codec — int8 to <=30% of
+    // f32 at the same page count (the issue's acceptance bar), int4
+    // strictly below int8.
+    let n = 6u64;
+    let (texts_f32, st_f32) = run_shared_prompt_dtype(n, true, KvDtype::F32);
+    let (texts_i8, st_i8) = run_shared_prompt_dtype(n, true, KvDtype::Int8);
+    let (texts_i4, st_i4) = run_shared_prompt_dtype(n, true, KvDtype::Int4);
+    assert_eq!(texts_f32, texts_i8);
+    assert_eq!(texts_f32, texts_i4);
+    for st in [&st_i8, &st_i4] {
+        assert!(st.prefix_hits > 0, "prefix cache must still hit on quantized pools");
+        assert_eq!(st.pages_peak, st_f32.pages_peak, "page counts are codec-independent");
+    }
+    assert!(
+        st_i8.cpu_bytes_peak * 10 <= st_f32.cpu_bytes_peak * 3,
+        "int8 pool bytes {} not <= 30% of f32 {}",
+        st_i8.cpu_bytes_peak,
+        st_f32.cpu_bytes_peak
+    );
+    assert!(st_i4.cpu_bytes_peak < st_i8.cpu_bytes_peak);
 }
 
 #[test]

@@ -5,7 +5,7 @@
 
 use freekv::config::{FreeKvParams, ModelConfig};
 use freekv::coordinator::engine::{Engine, SampleParams, Sequence};
-use freekv::kvcache::{Layout, RequestKv};
+use freekv::kvcache::{KvDtype, Layout, PageAllocator, RequestKv};
 use freekv::transfer::{RecallJob, RecallPipeline, TransferEngine};
 use freekv::util::rng::Rng;
 
@@ -46,8 +46,31 @@ fn fill(kv: &mut RequestKv, cfg: &ModelConfig, eng: &mut TransferEngine, tokens:
 
 #[test]
 fn worker_recall_equals_inline_recall_on_request_kv() {
+    worker_vs_inline(KvDtype::F32);
+}
+
+#[test]
+fn worker_recall_equals_inline_recall_on_quantized_pools() {
+    // Quantization happens at the pool boundary (encode on offload,
+    // decode on gather) and is deterministic, so the background worker
+    // must still be byte-for-byte equivalent to inline dispatch on
+    // int8/int4 pools — both sides read back the same quantized values.
+    worker_vs_inline(KvDtype::Int8);
+    worker_vs_inline(KvDtype::Int4);
+}
+
+fn worker_vs_inline(dtype: KvDtype) {
     let cfg = tiny_cfg();
-    let (mut a, mut b) = (RequestKv::new(&cfg, Layout::Hnd), RequestKv::new(&cfg, Layout::Hnd));
+    let mut a = RequestKv::with_alloc(
+        &cfg,
+        Layout::Hnd,
+        PageAllocator::for_model_dtype(&cfg, 0, false, dtype),
+    );
+    let mut b = RequestKv::with_alloc(
+        &cfg,
+        Layout::Hnd,
+        PageAllocator::for_model_dtype(&cfg, 0, false, dtype),
+    );
     let mut eng_a = TransferEngine::new(cfg.page_size, cfg.d_head, true);
     let mut eng_b = TransferEngine::new(cfg.page_size, cfg.d_head, true);
     fill(&mut a, &cfg, &mut eng_a, 40, 77);
@@ -102,6 +125,7 @@ fn worker_recall_equals_inline_recall_on_request_kv() {
     assert_eq!(eng_a.counters.recalled_pages, eng_b.counters.recalled_pages);
     assert_eq!(eng_a.counters.h2d_chunks, eng_b.counters.h2d_chunks);
     assert_eq!(eng_a.counters.h2d_bytes, eng_b.counters.h2d_bytes);
+    assert_eq!(eng_a.counters.h2d_encoded_bytes, eng_b.counters.h2d_encoded_bytes);
     assert_eq!(eng_a.counters.convert_bytes, eng_b.counters.convert_bytes);
 
     // gathered attention operands identical
@@ -122,6 +146,71 @@ fn worker_recall_equals_inline_recall_on_request_kv() {
         assert_eq!(ga.1, gb.1, "layer {} gathered V diverged", l);
         assert_eq!(ga.2, gb.2, "layer {} validity diverged", l);
     }
+}
+
+#[test]
+fn int8_pool_diverges_from_f32_only_within_the_quantization_bound() {
+    // Documented divergence: an int8 pool does NOT gather bit-identical
+    // tensors to f32 — it gathers tensors within the codec's error bound
+    // (half a quantization step plus the bf16 scale rounding, per
+    // element). The validity plane and selection bookkeeping stay exact.
+    let cfg = tiny_cfg();
+    let mut a = RequestKv::new(&cfg, Layout::Hnd); // f32 reference
+    let mut b = RequestKv::with_alloc(
+        &cfg,
+        Layout::Hnd,
+        PageAllocator::for_model_dtype(&cfg, 0, false, KvDtype::Int8),
+    );
+    let mut eng_a = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+    let mut eng_b = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+    fill(&mut a, &cfg, &mut eng_a, 40, 77);
+    fill(&mut b, &cfg, &mut eng_b, 40, 77);
+    let mask = a.layers[0].gpu.selectable_mask();
+    let cands: Vec<usize> =
+        mask.iter().enumerate().filter(|(_, &x)| x > 0.0).map(|(g, _)| g).collect();
+    assert!(cands.len() >= 2);
+    for l in 0..cfg.n_layers {
+        for head in 0..cfg.n_kv {
+            let pages = vec![cands[head % cands.len()], cands[(head + 1) % cands.len()]];
+            let na = a.apply_selection(l, head, &pages, &mut eng_a);
+            let nb = b.apply_selection(l, head, &pages, &mut eng_b);
+            assert_eq!(na, nb, "selection bookkeeping must be dtype-independent");
+        }
+    }
+    // quantized recall moves fewer bytes over the wire
+    assert_eq!(eng_a.counters.h2d_bytes, eng_b.counters.h2d_bytes, "logical bytes match");
+    assert!(
+        eng_b.counters.h2d_encoded_bytes * 3 < eng_a.counters.h2d_encoded_bytes,
+        "int8 wire bytes {} not under a third of f32 {}",
+        eng_b.counters.h2d_encoded_bytes,
+        eng_a.counters.h2d_encoded_bytes
+    );
+    let mut max_diff = 0.0f32;
+    let mut max_abs = 0.0f32;
+    for l in 0..cfg.n_layers {
+        let s = a.layers[l].gpu.budget_slots();
+        let (m, d) = (cfg.n_kv, cfg.d_head);
+        let mut ga = (vec![0.0f32; m * s * d], vec![0.0f32; m * s * d], vec![0.0f32; m * s]);
+        let mut gb = ga.clone();
+        {
+            let (gpu, x) = a.layers[l].parts_mut();
+            gpu.gather_full(&mut x.select, &mut ga.0, &mut ga.1, &mut ga.2);
+        }
+        {
+            let (gpu, x) = b.layers[l].parts_mut();
+            gpu.gather_full(&mut x.select, &mut gb.0, &mut gb.1, &mut gb.2);
+        }
+        assert_eq!(ga.2, gb.2, "layer {} validity plane must stay exact", l);
+        for (x, y) in ga.0.iter().chain(ga.1.iter()).zip(gb.0.iter().chain(gb.1.iter())) {
+            max_abs = max_abs.max(x.abs());
+            max_diff = max_diff.max((x - y).abs());
+        }
+    }
+    assert!(max_diff > 0.0, "int8 must actually quantize (bit-identity would be suspicious)");
+    // per-element bound: scale/2 (rounding) + max_abs/256 (bf16 scale),
+    // with scale <= region_max/127 <= max_abs/127.
+    let bound = max_abs * (0.5 / 127.0) * 1.02 + max_abs / 256.0 + 1e-6;
+    assert!(max_diff <= bound, "divergence {} exceeds quantization bound {}", max_diff, bound);
 }
 
 // ---------------------------------------------------------------------
