@@ -274,6 +274,61 @@ fn main() {
     }
 
     println!();
+    println!("=== bench e2e: persistent prefix cache (sim, 8 serialized requests) ===");
+    {
+        // Eight requests with an identical prompt run one at a time —
+        // each fully retires before the next arrives, so a resident-only
+        // prefix cache can never share (no live pages to alias). With
+        // the retained tier on, every request after the first adopts the
+        // whole prompt from cache instead of re-offloading it. Runs in
+        // CI's bench-smoke job without artifacts.
+        use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig};
+        use freekv::coordinator::sim_backend::SimBackend;
+        use freekv::kvcache::PrefixCacheMode;
+        let requests = 8u64;
+        let run = |mode: PrefixCacheMode| -> (u64, u64, u64, u64) {
+            let backend = SimBackend::tiny_with_pool_mode(0, mode, 0);
+            let alloc = backend.allocator();
+            let cfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
+            let mut s = Scheduler::new(backend, cfg);
+            let prompt = "shared prefix workload ".repeat(8);
+            for i in 1..=requests {
+                s.submit(Request::from_text(i, &prompt, 32));
+                s.drain().expect("sim drain");
+            }
+            let st = alloc.stats();
+            let saved = s.engine.stats().prefill_tokens_saved;
+            (st.retained_hits, st.prefix_hits, st.bytes_saved, saved)
+        };
+        let (_, resident_hits, _, _) = run(PrefixCacheMode::Resident);
+        let (retained_hits, prefix_hits, bytes_saved, tokens_saved) =
+            run(PrefixCacheMode::Retained);
+        // prefill offloads the prompt's completed pages once per request;
+        // the hit rate is the fraction of those writes the cache absorbed
+        let offloads = prefix_hits.max(1) * requests / (requests - 1).max(1);
+        let hit_rate = prefix_hits as f64 / offloads.max(1) as f64;
+        println!(
+            "resident-only hits {:>3} | retained hits {:>3} of {:>3} prefix hits \
+             | {:>5} prefill tokens saved | {:>8} bytes saved | hit rate {:.0}%",
+            resident_hits,
+            retained_hits,
+            prefix_hits,
+            tokens_saved,
+            bytes_saved,
+            hit_rate * 100.0
+        );
+        let mut px = JsonObj::new();
+        px.insert("requests", requests as usize);
+        px.insert("resident_only_prefix_hits", resident_hits as usize);
+        px.insert("retained_hits", retained_hits as usize);
+        px.insert("prefix_hits", prefix_hits as usize);
+        px.insert("prefill_tokens_saved", tokens_saved as usize);
+        px.insert("bytes_saved", bytes_saved as usize);
+        px.insert("hit_rate", hit_rate);
+        report.insert("prefix", px);
+    }
+
+    println!();
     println!("=== bench e2e: KV page codecs (sim, 8 requests) ===");
     {
         // The memory-section workload re-run once per page codec, plus a

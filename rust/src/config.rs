@@ -8,20 +8,35 @@ use crate::util::json::Json;
 /// Field names match `python/compile/config.py::ModelConfig`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Config name, e.g. `"tiny"` or `"llama-3.1-8b"`.
     pub name: String,
+    /// Number of transformer layers.
     pub n_layers: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Number of query/output attention heads.
     pub n_qo: usize,
+    /// Number of key/value heads (GQA: `n_kv <= n_qo`).
     pub n_kv: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// Feed-forward hidden width.
     pub d_ffn: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// RoPE base frequency.
     pub rope_theta: f64,
+    /// RMSNorm epsilon.
     pub rms_eps: f64,
+    /// Tokens per KV page.
     pub page_size: usize,
+    /// Maximum context length in tokens.
     pub max_context: usize,
+    /// GPU-resident attention-sink pages (always attended).
     pub sink_pages: usize,
+    /// GPU-resident local-window pages (most recent tokens).
     pub window_pages: usize,
+    /// Pages recalled per step by speculative selection.
     pub select_pages: usize,
     /// bytes per element of the KV cache (4 = f32 on the CPU plugin;
     /// paper-geometry simulations use 2 = fp16).
@@ -29,12 +44,15 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// Query heads per kv head (GQA group size).
     pub fn group_size(&self) -> usize {
         self.n_qo / self.n_kv
     }
+    /// KV pages needed for a full `max_context` sequence (one layer).
     pub fn n_pages_max(&self) -> usize {
         self.max_context / self.page_size
     }
+    /// Total GPU page budget: sink + window + selected.
     pub fn budget_pages(&self) -> usize {
         self.sink_pages + self.window_pages + self.select_pages
     }
@@ -55,6 +73,7 @@ impl ModelConfig {
         2 * context * self.n_kv * self.d_head * self.kv_elem_bytes
     }
 
+    /// Parse a config object from `artifacts/manifest.json`.
     pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
         let req = |k: &str| -> anyhow::Result<f64> {
             j.get(k).as_f64().ok_or_else(|| anyhow::anyhow!("manifest config missing `{}`", k))
@@ -147,6 +166,7 @@ impl ModelConfig {
         }
     }
 
+    /// Look up a hand-constructed paper geometry by name.
     pub fn paper_geometry(name: &str) -> Option<ModelConfig> {
         match name {
             "llama-3.1-8b" => Some(Self::llama31_8b()),
@@ -211,13 +231,22 @@ pub struct FreeKvParams {
     /// cannot cover instead of letting decode OOM; pages free on
     /// finish/cancel and queued requests resume.
     pub kv_pool_pages: usize,
-    /// Copy-on-write prefix sharing (`--prefix-cache`): a request whose
-    /// token prefix hash-matches pages a resident request already
-    /// committed aliases those pool pages (refcounted) instead of
-    /// writing duplicates; a shared page is materialized privately
-    /// before any write. Off by default — with sharing off the pool is
-    /// bit-identical to private per-request pools.
-    pub prefix_cache: bool,
+    /// Prefix-cache mode (`--prefix-cache[=resident|retained]`).
+    /// `Resident`: copy-on-write sharing — a request whose token prefix
+    /// hash-matches pages a resident request already committed aliases
+    /// those pool pages (refcounted) instead of writing duplicates; a
+    /// shared page is materialized privately before any write.
+    /// `Retained` adds the persistent tier: a retiring request's
+    /// committed pages stay adoptable (refcount 0, pinned by the
+    /// cache) until evicted by pool pressure or `kv_retain_pages`, and
+    /// new requests adopt their longest common prefix page by page.
+    /// Off by default — with sharing off the pool is bit-identical to
+    /// private per-request pools.
+    pub prefix_cache: crate::kvcache::alloc::PrefixCacheMode,
+    /// Max pages the retained prefix tier may pin
+    /// (`--kv-retain-pages`). `0` = bounded only by pool pressure
+    /// (`kv_pool_pages`). Ignored outside retained mode.
+    pub kv_retain_pages: usize,
     /// Seed a deterministic fault-injection plan (`--chaos-seed`):
     /// injected job failures, worker deaths, slow transfers, and engine
     /// panics at seed-derived call indices, exercising the degradation
@@ -244,24 +273,34 @@ impl Default for FreeKvParams {
             max_lanes: 2,
             weight_workers: 1,
             kv_pool_pages: 0,
-            prefix_cache: false,
+            prefix_cache: crate::kvcache::alloc::PrefixCacheMode::Off,
+            kv_retain_pages: 0,
             chaos_seed: None,
             kv_dtype: crate::kvcache::quant::KvDtype::F32,
         }
     }
 }
 
+/// Speculative page-selection scoring variant (paper Appendix B.2):
+/// how per-page key summaries are pooled and which query is scored.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SelectVariant {
+    /// Mean-pooled key summaries scored with the stale query (default).
     MeanS,
+    /// Max-pooled key summaries scored with the stale query.
     MaxS,
+    /// Mean-pooled summaries, per-group query-key scoring.
     MeanQK,
+    /// Max-pooled summaries, per-group query-key scoring.
     MaxQK,
+    /// Mean-pooled summaries scored with the current query.
     MeanQ,
+    /// Max-pooled summaries scored with the current query.
     MaxQ,
 }
 
 impl SelectVariant {
+    /// Canonical lowercase name (CLI / report key).
     pub fn as_str(&self) -> &'static str {
         match self {
             SelectVariant::MeanS => "means",
@@ -273,6 +312,7 @@ impl SelectVariant {
         }
     }
 
+    /// Parse the name produced by [`SelectVariant::as_str`].
     pub fn parse(s: &str) -> Option<SelectVariant> {
         Some(match s {
             "means" => SelectVariant::MeanS,
@@ -285,6 +325,7 @@ impl SelectVariant {
         })
     }
 
+    /// All variants, in ablation-sweep order.
     pub fn all() -> [SelectVariant; 6] {
         [
             SelectVariant::MeanS,

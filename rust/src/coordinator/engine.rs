@@ -53,13 +53,21 @@ static SEQ_UID: AtomicU64 = AtomicU64::new(1);
 /// Wall-time breakdown of the real pipeline (per engine, cumulative).
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
+    /// Wall seconds spent in prefill.
     pub prefill_secs: f64,
+    /// Wall seconds spent in decode steps.
     pub decode_secs: f64,
+    /// Wall seconds in QKV projection.
     pub qkv_secs: f64,
+    /// Wall seconds in attention + FFN execution.
     pub attn_secs: f64,
+    /// Wall seconds the engine thread blocked on selection scoring.
     pub select_secs: f64,
+    /// Wall seconds gathering budget-cache slabs for attention.
     pub gather_secs: f64,
+    /// Wall seconds in recall on the engine thread (exposed + joins).
     pub recall_secs: f64,
+    /// Wall seconds in the logits head + sampling.
     pub logits_secs: f64,
     /// Recall wall time spent on the background worker (off the decode
     /// critical path).
@@ -107,16 +115,39 @@ pub struct EngineStats {
     /// Allocator-charged bytes: distinct CPU pool pages + GPU-ledger
     /// bytes of live requests.
     pub kv_bytes_used: u64,
+    // ---- persistent prefix-cache gauges (PR 8) ----
+    /// Pool pages currently in the retained tier: committed prefix
+    /// pages with zero live references, pinned by the cache instead of
+    /// freed. Gauge, synced per step.
+    pub kv_pages_retained: u64,
+    /// Prefix adoptions that revived a page from the retained tier
+    /// (the sharing request had already fully retired).
+    pub kv_retained_hits: u64,
+    /// Retained pages reclaimed under pool pressure or the retention
+    /// cap (LRU-with-popularity victim order).
+    pub kv_retained_evictions: u64,
+    /// Pool-write bytes avoided by prefix sharing, resident and
+    /// retained combined (`prefix_hits x page payload bytes`).
+    pub kv_bytes_saved: u64,
+    /// Prompt tokens whose KV pool pages were adopted from a cached
+    /// prefix instead of re-offloaded during prefill.
+    pub prefill_tokens_saved: u64,
+    /// Decode steps executed.
     pub steps: u64,
     /// Decode steps that carried ≥ 2 sequences (continuous batching
     /// actually interleaving concurrent requests).
     pub batched_steps: u64,
     /// Largest number of sequences decoded together in one step.
     pub max_batch_lanes: u64,
+    /// Prefills executed.
     pub prefills: u64,
+    /// Correction recalls triggered (similarity below tau).
     pub corrections: u64,
+    /// Correction-trigger checks performed.
     pub correction_checks: u64,
+    /// Pages moved CPU→GPU by selection/correction recall.
     pub recalled_pages: u64,
+    /// Steps where the speculative selection needed no correction.
     pub speculative_hits: u64,
     // ---- fault-domain / degradation gauges (PR 6) ----
     /// Speculative recalls that fell back to the serial (exposed) path
@@ -138,6 +169,7 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
+    /// Fraction of correction checks that triggered a correction.
     pub fn correction_rate(&self) -> f64 {
         if self.correction_checks == 0 {
             0.0
@@ -153,6 +185,10 @@ impl EngineStats {
         self.kv_pages_shared = kv.pages_shared;
         self.kv_prefix_hits = kv.prefix_hits;
         self.kv_bytes_used = kv.cpu_bytes_used + kv.gpu_bytes_used;
+        self.kv_pages_retained = kv.pages_retained;
+        self.kv_retained_hits = kv.retained_hits;
+        self.kv_retained_evictions = kv.retained_evictions;
+        self.kv_bytes_saved = kv.bytes_saved;
     }
 
     /// Fraction of recall wall time hidden behind compute (0 when every
@@ -282,12 +318,16 @@ pub trait Backend {
 /// Sampling parameters.
 #[derive(Debug, Clone)]
 pub struct SampleParams {
+    /// Softmax temperature; 0 = greedy argmax.
     pub temperature: f32,
+    /// Nucleus (top-p) truncation threshold.
     pub top_p: f32,
+    /// Per-request sampling seed.
     pub seed: u64,
 }
 
 impl SampleParams {
+    /// Deterministic greedy decoding (temperature 0).
     pub fn greedy() -> SampleParams {
         SampleParams { temperature: 0.0, top_p: 1.0, seed: 0 }
     }
@@ -297,7 +337,9 @@ impl SampleParams {
 /// the sequence comes back with either its next-token logits or the
 /// per-request failure.
 pub struct PrefillDone {
+    /// The sequence whose prefill completed.
     pub seq: Sequence,
+    /// Next-token logits on success, per-request error otherwise.
     pub result: Result<Vec<f32>>,
 }
 
@@ -310,16 +352,26 @@ struct GatherBuf {
 
 /// One in-flight sequence (request) with its KV state.
 pub struct Sequence {
+    /// Caller-assigned request id (may repeat across sessions).
     pub id: u64,
     uid: u64,
+    /// Prompt tokens followed by generated tokens.
     pub tokens: Vec<i32>,
+    /// Length of the prompt portion of `tokens`.
     pub prompt_len: usize,
+    /// Generation budget.
     pub max_new_tokens: usize,
+    /// All KV-cache state across layers.
     pub kv: RequestKv,
+    /// Per-request transfer engine (offload/recall counters).
     pub xfer: TransferEngine,
+    /// Sampling parameters.
     pub sample: SampleParams,
+    /// Sampling RNG (seeded from `sample.seed` and `id`).
     pub rng: Rng,
+    /// Set when generation hit EOS or was finished externally.
     pub finished: bool,
+    /// EOS token that ended generation, if any.
     pub eos: Option<i32>,
     spec: Vec<SpecState>,
     /// per-layer persistent gather lanes (incrementally maintained).
@@ -342,6 +394,7 @@ impl Sequence {
         Sequence::with_alloc(id, cfg, prompt, max_new, layout, sample, alloc)
     }
 
+    /// Sequence drawing CPU pages from a shared allocator.
     pub fn with_alloc(
         id: u64,
         cfg: &ModelConfig,
@@ -375,14 +428,17 @@ impl Sequence {
         }
     }
 
+    /// Tokens generated so far (excludes the prompt).
     pub fn generated(&self) -> &[i32] {
         &self.tokens[self.prompt_len..]
     }
 
+    /// Absolute sequence position (tokens with KV appended).
     pub fn pos(&self) -> usize {
         self.kv.len()
     }
 
+    /// Whether generation finished (EOS or budget exhausted).
     pub fn done(&self) -> bool {
         self.finished || self.generated().len() >= self.max_new_tokens
     }
@@ -515,10 +571,15 @@ struct PrefillJob {
 /// The engine: owns the runtime handle + model config and executes the
 /// decode pipeline for batches of sequences.
 pub struct Engine {
+    /// PJRT runtime handle (artifacts + weights).
     pub rt: Runtime,
+    /// Model geometry this engine serves.
     pub cfg: ModelConfig,
+    /// Manifest name of `cfg`.
     pub cfg_name: String,
+    /// FreeKV algorithm/serving parameters.
     pub params: FreeKvParams,
+    /// Cumulative wall-time and counter breakdown.
     pub stats: EngineStats,
     /// disable speculation+correction entirely: run selection blocking
     /// each step (tau=1-like reference mode).
@@ -526,6 +587,7 @@ pub struct Engine {
     /// when set, per-head query similarities are recorded as
     /// (layer, sims[n_qo]) tuples each decode step (Fig. 3 / Table 8).
     pub record_sims: bool,
+    /// Recorded (layer, per-head query similarity) tuples.
     pub sim_trace: Vec<(usize, Vec<f32>)>,
     /// background recall worker (lazily spawned when overlap is active).
     pipeline: Option<RecallPipeline>,
@@ -544,8 +606,9 @@ pub struct Engine {
     /// prefill chunks completing in this window are the overlap proof.
     decode_active: bool,
     /// Shared KV page allocator: every sequence's CPU pool pages come
-    /// from here (capacity `params.kv_pool_pages`, CoW prefix sharing
-    /// when `params.prefix_cache`), and admission reserves against it.
+    /// from here (capacity `params.kv_pool_pages`; CoW prefix sharing
+    /// and the persistent retained tier per `params.prefix_cache`), and
+    /// admission reserves against it.
     alloc: Arc<PageAllocator>,
     /// Deterministic fault-injection plan (`params.chaos_seed`), shared
     /// with the executor pool and the recall worker. `None` in
@@ -559,6 +622,9 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine for `cfg_name` from the runtime's manifest:
+    /// spawns the executor pool, the shared page allocator, and the
+    /// optional fault plan per `params`.
     pub fn new(rt: Runtime, cfg_name: &str, params: FreeKvParams) -> Result<Engine> {
         let cfg = rt.manifest.config(cfg_name)?.clone();
         // Each pool worker owns a full PJRT client built on its own
@@ -575,10 +641,11 @@ impl Engine {
         } else {
             None
         };
-        let alloc = PageAllocator::for_model_dtype(
+        let alloc = PageAllocator::for_model_mode(
             &cfg,
             params.kv_pool_pages as u64,
             params.prefix_cache,
+            params.kv_retain_pages as u64,
             params.kv_dtype,
         );
         let faults = params.chaos_seed.map(|seed| Arc::new(FaultPlan::chaos(seed)));
@@ -617,6 +684,7 @@ impl Engine {
         self.faults = Some(plan);
     }
 
+    /// Manifest-qualified artifact name: `<cfg_name>_<name>`.
     pub fn art(&self, name: &str) -> String {
         format!("{}_{}", self.cfg_name, name)
     }
@@ -681,8 +749,13 @@ impl Engine {
         let valid_t = HostTensor::F32(valid, vec![bucket]);
         let mut q_last_per_layer: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_layers);
 
-        // the prompt is fully known: hash it for prefix-page keys
+        // the prompt is fully known: hash it for prefix-page keys, then
+        // adopt the longest cached prefix (resident or retained) so the
+        // per-layer offloads below skip pages the cache already holds.
+        // GPU prefill still runs for every token — device state stays
+        // bit-identical to a cold prefill; only pool writes are saved.
         seq.kv.feed_tokens(&seq.tokens);
+        self.stats.prefill_tokens_saved += seq.kv.adopt_prefix() as u64;
         for l in 0..cfg.n_layers {
             let out = self.rt.run(
                 &self.art(&format!("layer_prefill_t{}", bucket)),
@@ -1791,9 +1864,13 @@ impl Engine {
                 job.valid_t = Some(valid_t);
                 job.h = Some(h);
                 // populate GPU cache + offload completed pages (same
-                // host work, same order as synchronous prefill)
+                // host work, same order as synchronous prefill).
+                // `adopt_prefix` self-guards on len() != 0, so only the
+                // first layer of the first chunk actually adopts.
                 {
                     job.seq.kv.feed_tokens(&job.seq.tokens);
+                    self.stats.prefill_tokens_saved +=
+                        job.seq.kv.adopt_prefix() as u64;
                     let completed =
                         job.seq.kv.layers[l].gpu.load_prefill(&k, &v, job.len, job.bucket);
                     job.seq.kv.offload_completed(l, &completed, &mut job.seq.xfer);

@@ -47,8 +47,18 @@ use crate::util::fault::panic_message;
 /// down first, which closes the channel).
 #[derive(Debug, Clone)]
 pub enum SessionEvent {
-    Token { index: usize, token: i32, text: String },
+    /// One generated token: its index, id, and decoded text.
+    Token {
+        /// Zero-based position within the generated output.
+        index: usize,
+        /// Token id.
+        token: i32,
+        /// Decoded text of this token.
+        text: String,
+    },
+    /// Terminal success: the finished completion.
     Done(Completion),
+    /// Terminal failure: the engine's error message.
     Error(String),
 }
 
@@ -144,6 +154,7 @@ pub enum Health {
 }
 
 impl Health {
+    /// Lowercase wire form used on `/healthz`.
     pub fn as_str(&self) -> &'static str {
         match self {
             Health::Ok => "ok",
@@ -270,6 +281,7 @@ pub struct SessionHandle {
 }
 
 impl SessionHandle {
+    /// The loop-assigned session id.
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -374,6 +386,7 @@ impl EngineLoop {
         }
     }
 
+    /// A cloneable handle for submitting sessions to this loop.
     pub fn submitter(&self) -> Submitter {
         self.submitter.clone()
     }
@@ -621,10 +634,13 @@ fn handle_command<B: Backend>(
         }
         Command::Metrics(reply) => {
             // one line: serving metrics + the shared KV pool gauges
+            // (including the persistent prefix-cache tier counters)
             let kv = sched.kv_pool_stats();
             let report = format!(
                 "{} kv_pages_total={} kv_pages_used={} kv_pages_shared={} \
-                 kv_pages_reserved={} prefix_hits={} kv_cpu_bytes={} kv_gpu_bytes={}",
+                 kv_pages_reserved={} prefix_hits={} kv_cpu_bytes={} kv_gpu_bytes={} \
+                 kv_pages_retained={} kv_retained_hits={} kv_retained_evictions={} \
+                 kv_bytes_saved={} prefill_tokens_saved={}",
                 sched.metrics.report(),
                 kv.pages_capacity,
                 kv.pages_used,
@@ -632,7 +648,12 @@ fn handle_command<B: Backend>(
                 kv.pages_reserved,
                 kv.prefix_hits,
                 kv.cpu_bytes_used,
-                kv.gpu_bytes_used
+                kv.gpu_bytes_used,
+                kv.pages_retained,
+                kv.retained_hits,
+                kv.retained_evictions,
+                kv.bytes_saved,
+                sched.engine.stats().prefill_tokens_saved
             );
             let _ = reply.send(report);
             true

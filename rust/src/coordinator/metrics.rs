@@ -10,18 +10,24 @@ use crate::util::stats::Histogram;
 /// Per-request timestamps, updated as the scheduler emits tokens.
 #[derive(Debug, Clone)]
 pub struct RequestTiming {
+    /// When the request arrived (queueing counts toward TTFT).
     pub arrived: Instant,
+    /// When prefill completed (TTFT fallback if no token sampled yet).
     pub prefill_done: Option<Instant>,
     /// When the first output token was sampled (TTFT endpoint).
     pub first_token: Option<Instant>,
     /// When the most recent output token was sampled (ITL base).
     pub last_token: Option<Instant>,
+    /// When the request reached a terminal state.
     pub finished: Option<Instant>,
+    /// Prompt length in tokens.
     pub prompt_tokens: usize,
+    /// Output tokens sampled so far.
     pub generated_tokens: usize,
 }
 
 impl RequestTiming {
+    /// Timing record stamped with the current instant as arrival.
     pub fn new(prompt_tokens: usize) -> RequestTiming {
         RequestTiming {
             arrived: Instant::now(),
@@ -34,12 +40,14 @@ impl RequestTiming {
         }
     }
 
+    /// Time to first token in seconds (prefill-done fallback).
     pub fn ttft(&self) -> Option<f64> {
         self.first_token
             .or(self.prefill_done)
             .map(|t| (t - self.arrived).as_secs_f64())
     }
 
+    /// End-to-end latency in seconds (arrival → finish).
     pub fn e2e(&self) -> Option<f64> {
         self.finished.map(|t| (t - self.arrived).as_secs_f64())
     }
@@ -59,30 +67,42 @@ impl RequestTiming {
 /// Aggregated serving metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Time-to-first-token histogram (seconds).
     pub ttft: Histogram,
     /// Inter-token latency: gap between consecutive sampled tokens of
     /// one request (the streaming user's perceived cadence).
     pub itl: Histogram,
+    /// Time-per-output-token histogram (seconds).
     pub tpot: Histogram,
+    /// End-to-end latency histogram (seconds).
     pub e2e: Histogram,
+    /// Requests that arrived.
     pub requests: u64,
+    /// Requests that completed normally.
     pub completed: u64,
+    /// Requests cancelled mid-flight.
     pub cancelled: u64,
+    /// Requests that failed.
     pub failed: u64,
+    /// Prompt tokens accepted.
     pub tokens_in: u64,
+    /// Output tokens sampled.
     pub tokens_out: u64,
     /// Times the engine-loop supervisor rebuilt the engine after a
     /// panic or engine-global error (carried across the restarts it
     /// counts).
     pub engine_restarts: u64,
+    /// When this metrics window opened (throughput denominator).
     pub started: Option<Instant>,
 }
 
 impl Metrics {
+    /// Fresh metrics with the throughput clock started now.
     pub fn new() -> Metrics {
         Metrics { started: Some(Instant::now()), ..Default::default() }
     }
 
+    /// Record a request arrival.
     pub fn on_arrival(&mut self, prompt_tokens: usize) {
         self.requests += 1;
         self.tokens_in += prompt_tokens as u64;
@@ -104,6 +124,7 @@ impl Metrics {
         self.tokens_out += 1;
     }
 
+    /// Record a normal completion (folds TPOT and E2E into histograms).
     pub fn on_complete(&mut self, t: &RequestTiming) {
         self.completed += 1;
         if let Some(x) = t.tpot() {
@@ -114,14 +135,17 @@ impl Metrics {
         }
     }
 
+    /// Record a cancellation.
     pub fn on_cancelled(&mut self) {
         self.cancelled += 1;
     }
 
+    /// Record a failure.
     pub fn on_failed(&mut self) {
         self.failed += 1;
     }
 
+    /// Output tokens per second since the window opened.
     pub fn throughput_tok_s(&self) -> f64 {
         match self.started {
             Some(t0) => self.tokens_out as f64 / t0.elapsed().as_secs_f64().max(1e-9),
@@ -129,6 +153,7 @@ impl Metrics {
         }
     }
 
+    /// One-line human-readable summary (counters + latency percentiles).
     pub fn report(&self) -> String {
         format!(
             "requests={} completed={} cancelled={} failed={} engine_restarts={} tokens_out={} \

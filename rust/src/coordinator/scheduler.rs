@@ -31,8 +31,11 @@ pub struct Request {
     /// Caller-chosen id; must be unique among in-flight requests (the
     /// `Submitter` assigns fresh ids automatically).
     pub id: u64,
+    /// Prompt tokens.
     pub prompt: Vec<i32>,
+    /// Generation budget.
     pub max_new_tokens: usize,
+    /// Sampling parameters.
     pub sample: SampleParams,
     /// Stop strings: generation finishes when the decoded output
     /// contains any of them; the completion text is truncated at the
@@ -41,6 +44,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// Greedy request over byte-tokenized `text` with no stop strings.
     pub fn from_text(id: u64, text: &str, max_new: usize) -> Request {
         Request {
             id,
@@ -66,6 +70,7 @@ pub enum FinishReason {
 }
 
 impl FinishReason {
+    /// Lowercase wire form (HTTP responses, logs).
     pub fn as_str(&self) -> &'static str {
         match self {
             FinishReason::Length => "length",
@@ -79,11 +84,17 @@ impl FinishReason {
 /// A finished generation.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// The request's id.
     pub id: u64,
+    /// Generated tokens (prompt excluded).
     pub tokens: Vec<i32>,
+    /// Decoded output text (stop-truncated if a stop string matched).
     pub text: String,
+    /// Prompt length in tokens.
     pub prompt_tokens: usize,
+    /// Number of generated tokens.
     pub generated_tokens: usize,
+    /// Why generation stopped.
     pub finish_reason: FinishReason,
 }
 
@@ -176,19 +187,26 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Continuous-batching scheduler: admits queued requests against the
+/// backend's KV-pool capacity, drives prefill and batched decode via
+/// [`Scheduler::tick`], and emits per-token [`StepEvent`]s.
 pub struct Scheduler<B: Backend = Engine> {
+    /// The backend (real engine or sim) this scheduler drives.
     pub engine: B,
+    /// Policy knobs.
     pub cfg: SchedulerConfig,
     queue: VecDeque<Queued>,
     running: Vec<Running>,
     /// Requests whose sequences are prefilling inside the backend.
     prefilling: HashMap<u64, Prefilling>,
+    /// Serving metrics (TTFT/ITL/TPOT histograms + counters).
     pub metrics: Metrics,
     finished: HashMap<u64, Completion>,
     finished_order: VecDeque<u64>,
 }
 
 impl<B: Backend> Scheduler<B> {
+    /// Scheduler over a backend with the given policy knobs.
     pub fn new(engine: B, cfg: SchedulerConfig) -> Scheduler<B> {
         Scheduler {
             engine,
@@ -202,6 +220,7 @@ impl<B: Backend> Scheduler<B> {
         }
     }
 
+    /// Enqueue a request, stamping arrival now.
     pub fn submit(&mut self, req: Request) {
         self.submit_arrived(req, Instant::now());
     }
@@ -214,14 +233,17 @@ impl<B: Backend> Scheduler<B> {
         self.queue.push_back(Queued { req, arrived });
     }
 
+    /// Requests not yet finished (queued + prefilling + running).
     pub fn pending(&self) -> usize {
         self.queue.len() + self.prefilling.len() + self.running.len()
     }
 
+    /// Requests waiting in the admission queue.
     pub fn queued_len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Requests currently decoding.
     pub fn running_len(&self) -> usize {
         self.running.len()
     }

@@ -55,6 +55,11 @@ pub fn sim_config() -> ModelConfig {
     }
 }
 
+/// Deterministic in-process stand-in for the real engine: same
+/// [`Backend`](crate::coordinator::engine::Backend) surface and the
+/// same shared page allocator / admission ledger, but token generation
+/// is a cheap hash of the prompt — so scheduler, pool, and chaos tests
+/// run without a compiled runtime.
 pub struct SimBackend {
     cfg: ModelConfig,
     stats: EngineStats,
@@ -83,6 +88,7 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Backend over an unbounded, non-sharing pool.
     pub fn new(cfg: ModelConfig) -> SimBackend {
         SimBackend::with_pool(cfg, 0, false)
     }
@@ -107,6 +113,20 @@ impl SimBackend {
         SimBackend::with_allocator(cfg, alloc)
     }
 
+    /// [`SimBackend::with_pool`] with an explicit prefix-cache mode and
+    /// retention cap (`--prefix-cache=retained` / `--kv-retain-pages`
+    /// on the sim serve/loadtest paths).
+    pub fn with_pool_mode(
+        cfg: ModelConfig,
+        pool_pages: u64,
+        mode: crate::kvcache::PrefixCacheMode,
+        retain_cap: u64,
+        dtype: crate::kvcache::quant::KvDtype,
+    ) -> SimBackend {
+        let alloc = PageAllocator::for_model_mode(&cfg, pool_pages, mode, retain_cap, dtype);
+        SimBackend::with_allocator(cfg, alloc)
+    }
+
     /// Backend over an existing allocator. Chaos tests use this to keep
     /// one allocator (and its page gauges) alive across supervised
     /// engine restarts, exactly like the real engine sharing its pool.
@@ -125,20 +145,49 @@ impl SimBackend {
         }
     }
 
+    /// Backend over the tiny built-in test geometry.
     pub fn tiny() -> SimBackend {
         SimBackend::new(sim_config())
     }
 
+    /// [`SimBackend::tiny`] over a bounded / prefix-sharing pool.
     pub fn tiny_with_pool(pool_pages: u64, prefix_cache: bool) -> SimBackend {
         SimBackend::with_pool(sim_config(), pool_pages, prefix_cache)
     }
 
+    /// [`SimBackend::tiny_with_pool`] with an explicit page codec dtype.
     pub fn tiny_with_pool_dtype(
         pool_pages: u64,
         prefix_cache: bool,
         dtype: crate::kvcache::quant::KvDtype,
     ) -> SimBackend {
         SimBackend::with_pool_dtype(sim_config(), pool_pages, prefix_cache, dtype)
+    }
+
+    /// [`SimBackend::tiny`] over an explicit prefix-cache mode
+    /// (f32 pages; see [`SimBackend::tiny_with_pool_mode_dtype`]).
+    pub fn tiny_with_pool_mode(
+        pool_pages: u64,
+        mode: crate::kvcache::PrefixCacheMode,
+        retain_cap: u64,
+    ) -> SimBackend {
+        SimBackend::tiny_with_pool_mode_dtype(
+            pool_pages,
+            mode,
+            retain_cap,
+            crate::kvcache::quant::KvDtype::F32,
+        )
+    }
+
+    /// [`SimBackend::tiny_with_pool_mode`] with an explicit page codec
+    /// dtype — the full knob set `--sim` serving exposes.
+    pub fn tiny_with_pool_mode_dtype(
+        pool_pages: u64,
+        mode: crate::kvcache::PrefixCacheMode,
+        retain_cap: u64,
+        dtype: crate::kvcache::quant::KvDtype,
+    ) -> SimBackend {
+        SimBackend::with_pool_mode(sim_config(), pool_pages, mode, retain_cap, dtype)
     }
 
     /// The backing allocator (tests and benches inspect its gauges).
@@ -194,8 +243,13 @@ impl Backend for SimBackend {
                 self.max_prompt
             ));
         }
-        // prompt fully known: key completed pages for prefix sharing
+        // prompt fully known: key completed pages for prefix sharing,
+        // then adopt the longest cached prefix (resident or retained)
+        // before any K/V lands — adopted pages skip their offload in
+        // `RequestKv::append`, so the decode path stays bit-identical
+        // to a cold prefill while the pool write work is saved.
         seq.kv.feed_tokens(&seq.tokens);
+        self.stats.prefill_tokens_saved += seq.kv.adopt_prefix() as u64;
         let kv_row = vec![0.0f32; self.cfg.n_kv * self.cfg.d_head];
         for _ in 0..len {
             for l in 0..self.cfg.n_layers {

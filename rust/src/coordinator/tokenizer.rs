@@ -1,10 +1,15 @@
 //! Byte-level tokenizer: 256 byte tokens + BOS/EOS/PAD/SEP specials.
 //! The synthetic-weight models use vocab 260 to match.
 
+/// Beginning-of-sequence token.
 pub const BOS: i32 = 256;
+/// End-of-sequence token.
 pub const EOS: i32 = 257;
+/// Padding token.
 pub const PAD: i32 = 258;
+/// Separator token.
 pub const SEP: i32 = 259;
+/// Vocabulary size (256 byte tokens + 4 specials).
 pub const VOCAB: usize = 260;
 
 /// Encode text as BOS + bytes.

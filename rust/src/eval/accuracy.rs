@@ -15,6 +15,7 @@ use crate::util::table::{fnum, Table};
 pub const MODELS: [(&str, usize, usize); 3] =
     [("llama-3.1-8b", 32, 8), ("qwen-2.5-7b", 28, 4), ("qwen-2.5-14b", 40, 8)];
 
+/// Directory CSV exhibits are saved under (`None` disables saving).
 pub fn out_dir() -> Option<&'static str> {
     Some("results")
 }

@@ -10,6 +10,8 @@ use crate::runtime::Runtime;
 use crate::util::stats::Summary;
 use crate::util::table::{fnum, ftime, Table};
 
+/// Load the manifest under `artifacts` and build a single-stream engine
+/// for `model` (pool dispatch disabled so phase timings are full costs).
 pub fn load_engine(artifacts: &str, model: &str, params: FreeKvParams) -> Result<Engine> {
     let rt = Runtime::load(artifacts)?;
     // Exhibits reproduce the paper's single-stream engine: artifact

@@ -34,13 +34,28 @@
 //!   writing a duplicate ([`PageAllocator::adopt`]); a later write to
 //!   an aliased page materializes a private copy first
 //!   ([`PageAllocator::make_unique`]), so a shared page is never
-//!   mutated in place. Registrations die with the slot: sharing is
-//!   only ever against pages that are still alive. Keys are 128-bit
-//!   double-chain hashes (FNV-1a + a splitmix-style mixer over the
-//!   same token stream): not cryptographic, but aliasing the wrong
-//!   page requires colliding two structurally different chains at
-//!   once; exact token-block verification is the escalation path if
-//!   the cache is ever exposed to adversarial multi-tenant prompts.
+//!   mutated in place. In [`PrefixCacheMode::Resident`] mode
+//!   registrations die with the slot: sharing is only ever against
+//!   pages that are still alive. Keys are 128-bit double-chain hashes
+//!   (FNV-1a + a splitmix-style mixer over the same token stream):
+//!   not cryptographic, but aliasing the wrong page requires
+//!   colliding two structurally different chains at once; debug
+//!   builds additionally keep an exact token-block oracle
+//!   ([`PageAllocator::verify_token_block`]) that fails loudly on the
+//!   first real collision.
+//! * **A persistent prefix-cache tier** ([`PrefixCacheMode::Retained`]).
+//!   When a retiring request drops the last reference to a committed,
+//!   prefix-registered page, the page moves to a *retained* set —
+//!   refcount 0 but pinned by the cache, still registered, still
+//!   counted in `pages_used` — instead of freeing. A later request
+//!   whose token chain reaches the same boundary hash revives it
+//!   ([`PageAllocator::adopt_stack`] walks the longest common prefix
+//!   page by page), turning prefill into recall across request
+//!   lifetimes. Retained pages are reclaimable capacity: allocation
+//!   under pool pressure evicts them in ascending
+//!   (popularity, recency) order — live pages are never evicted — and
+//!   an optional retention cap bounds the tier independently of the
+//!   pool.
 //! * **A capacity ledger** for admission control. The scheduler charges
 //!   a request's worst-case page footprint ([`worst_case_pages`])
 //!   before admitting it ([`PageAllocator::try_reserve`]); when the
@@ -69,6 +84,65 @@ use crate::kvcache::quant::{KvDtype, PageCodec};
 
 /// Handle to one allocated page within a layer slab.
 pub type Slot = u32;
+
+/// Operating mode of the cross-request prefix cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrefixCacheMode {
+    /// No sharing: every request writes private pages.
+    #[default]
+    Off,
+    /// Copy-on-write sharing against *resident* requests only (the
+    /// PR-5 semantics): prefix registrations die with the last live
+    /// reference to a page.
+    Resident,
+    /// Resident sharing plus the persistent tier: a retiring request's
+    /// committed pages stay adoptable at refcount 0, pinned by the
+    /// cache until evicted by pool pressure or the retention cap.
+    Retained,
+}
+
+impl PrefixCacheMode {
+    /// Stable CLI / report name of the mode.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PrefixCacheMode::Off => "off",
+            PrefixCacheMode::Resident => "resident",
+            PrefixCacheMode::Retained => "retained",
+        }
+    }
+
+    /// Parse a CLI value; accepts `on` as a back-compat alias for the
+    /// historical boolean `--prefix-cache` flag.
+    pub fn parse(s: &str) -> Option<PrefixCacheMode> {
+        match s {
+            "off" | "none" => Some(PrefixCacheMode::Off),
+            "resident" | "on" => Some(PrefixCacheMode::Resident),
+            "retained" | "lru" => Some(PrefixCacheMode::Retained),
+            _ => None,
+        }
+    }
+
+    /// Every mode, for sweeps.
+    pub fn all() -> [PrefixCacheMode; 3] {
+        [PrefixCacheMode::Off, PrefixCacheMode::Resident, PrefixCacheMode::Retained]
+    }
+
+    /// Is any form of prefix sharing (resident or retained) enabled?
+    pub fn sharing(&self) -> bool {
+        !matches!(self, PrefixCacheMode::Off)
+    }
+
+    /// Does the cache retain pages past the last live reference?
+    pub fn retention(&self) -> bool {
+        matches!(self, PrefixCacheMode::Retained)
+    }
+}
+
+impl std::fmt::Display for PrefixCacheMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Outcome of charging a request's footprint against the pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +180,18 @@ pub struct KvPoolStats {
     pub cpu_bytes_peak: u64,
     /// GPU-side bytes charged by live `RequestKv`s.
     pub gpu_bytes_used: u64,
+    /// Pages in the retained tier: refcount 0, pinned by the prefix
+    /// cache, counted inside `pages_used`.
+    pub pages_retained: u64,
+    /// Adoptions that revived a retained (refcount-0) page — the
+    /// cross-request-lifetime subset of `prefix_hits`.
+    pub retained_hits: u64,
+    /// Retained pages reclaimed under pool pressure or the retention
+    /// cap (cumulative).
+    pub retained_evictions: u64,
+    /// Encoded CPU bytes whose offload was satisfied by adoption
+    /// instead of a fresh page write (`prefix_hits x page_bytes`).
+    pub bytes_saved: u64,
 }
 
 /// FNV-1a over one i32 token — half of the incremental prefix hash
@@ -119,6 +205,7 @@ pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 /// stream, and accidental collisions are out at ~2^64 birthday bound.
 pub const MIX2_SEED: u64 = 0x6a09_e667_f3bc_c909;
 
+/// The first chain: FNV-1a folded over the token's little-endian bytes.
 #[inline]
 pub fn fnv1a_i32(state: u64, tok: i32) -> u64 {
     let mut h = state;
@@ -176,6 +263,10 @@ struct LayerSlab {
     written: Vec<bool>,
     /// Prefix key registered for a slot (reverse index for cleanup).
     key: Vec<Option<PrefixKey>>,
+    /// Adoption count per slot — the popularity half of the retained
+    /// tier's eviction score. Survives retention/revival; resets when
+    /// the slot is actually freed.
+    hits: Vec<u32>,
     free: Vec<Slot>,
 }
 
@@ -187,6 +278,7 @@ impl LayerSlab {
             refcnt: Vec::new(),
             written: Vec::new(),
             key: Vec::new(),
+            hits: Vec::new(),
             free: Vec::new(),
         }
     }
@@ -202,10 +294,32 @@ struct Inner {
     reservations: HashMap<u64, u64>,
     reserved: u64,
     gpu_used: u64,
+    /// Config copies (immutable after construction) so slot-lifecycle
+    /// methods need no threading of allocator parameters.
+    capacity: u64,
+    retention: bool,
+    retain_cap: u64,
+    /// The retained tier: `(layer, slot) -> last-touched tick`. Every
+    /// member has refcount 0, `written`, and a live prefix
+    /// registration; it stays counted in `used`.
+    retained: HashMap<(u32, Slot), u64>,
+    /// Logical clock advanced on every retention, giving the recency
+    /// half of the eviction score a deterministic total order.
+    clock: u64,
+    retained_hits: u64,
+    retained_evictions: u64,
 }
 
 impl Inner {
     fn alloc(&mut self, layer: usize, payload_stride: usize, scale_stride: usize) -> Slot {
+        // Pool pressure: the retained tier is reclaimable capacity.
+        // Before growing past the configured page budget, evict the
+        // coldest retained (refcount-0) page and reuse its slot — live
+        // pages are never evicted, so an admitted request's footprint
+        // always fits (live pages <= reservations <= capacity).
+        if self.capacity > 0 && self.used >= self.capacity {
+            self.evict_retained(1);
+        }
         let slab = &mut self.slabs[layer];
         let slot = match slab.free.pop() {
             Some(s) => s,
@@ -216,6 +330,7 @@ impl Inner {
                 slab.refcnt.push(0);
                 slab.written.push(false);
                 slab.key.push(None);
+                slab.hits.push(0);
                 s
             }
         };
@@ -224,6 +339,7 @@ impl Inner {
         slab.refcnt[i] = 1;
         slab.written[i] = false;
         slab.key[i] = None;
+        slab.hits[i] = 0;
         self.used += 1;
         self.peak_used = self.peak_used.max(self.used);
         slot
@@ -239,23 +355,96 @@ impl Inner {
     }
 
     fn release(&mut self, layer: usize, slot: Slot) {
-        let slab = &mut self.slabs[layer];
         let i = slot as usize;
-        assert!(slab.refcnt[i] > 0, "double free of slot {} (layer {})", slot, layer);
-        slab.refcnt[i] -= 1;
-        if slab.refcnt[i] == 1 {
-            self.shared -= 1;
-        }
-        if slab.refcnt[i] == 0 {
-            slab.written[i] = false;
-            if let Some(k) = slab.key[i].take() {
-                if self.prefix.get(&k) == Some(&slot) {
-                    self.prefix.remove(&k);
-                }
+        {
+            let slab = &mut self.slabs[layer];
+            assert!(slab.refcnt[i] > 0, "double free of slot {} (layer {})", slot, layer);
+            slab.refcnt[i] -= 1;
+            if slab.refcnt[i] == 1 {
+                self.shared -= 1;
             }
-            slab.free.push(slot);
-            self.used -= 1;
+            if slab.refcnt[i] != 0 {
+                return;
+            }
         }
+        // Last reference dropped. In retained mode a committed,
+        // prefix-registered page enters the retained tier (still
+        // registered, still counted in `used`) instead of freeing;
+        // anything unwritten or never registered frees as before.
+        let retainable =
+            self.retention && self.slabs[layer].written[i] && self.slabs[layer].key[i].is_some();
+        if retainable {
+            if self.retain_cap > 0 && self.retained.len() as u64 >= self.retain_cap {
+                self.evict_retained(1);
+            }
+            self.clock += 1;
+            self.retained.insert((layer as u32, slot), self.clock);
+            return;
+        }
+        self.free_slot(layer, slot);
+    }
+
+    /// Physically free a refcount-0 slot: clear its commit bit and
+    /// popularity, drop its prefix registration, and recycle it.
+    fn free_slot(&mut self, layer: usize, slot: Slot) {
+        let i = slot as usize;
+        let slab = &mut self.slabs[layer];
+        debug_assert_eq!(slab.refcnt[i], 0, "freeing a live slot {} (layer {})", slot, layer);
+        slab.written[i] = false;
+        slab.hits[i] = 0;
+        if let Some(k) = slab.key[i].take() {
+            if self.prefix.get(&k) == Some(&slot) {
+                self.prefix.remove(&k);
+            }
+        }
+        slab.free.push(slot);
+        self.used -= 1;
+    }
+
+    /// Evict up to `n` retained pages in ascending
+    /// (popularity, recency) order — least-adopted first, ties broken
+    /// by least-recently-retained (the retention clock is unique per
+    /// entry, so the victim order is deterministic). Returns how many
+    /// pages were actually evicted.
+    fn evict_retained(&mut self, n: usize) -> usize {
+        let mut evicted = 0;
+        while evicted < n {
+            let victim = self
+                .retained
+                .iter()
+                .min_by_key(|((layer, slot), &t)| {
+                    (self.slabs[*layer as usize].hits[*slot as usize], t)
+                })
+                .map(|(&key, _)| key);
+            let Some((layer, slot)) = victim else { break };
+            self.retained.remove(&(layer, slot));
+            self.free_slot(layer as usize, slot);
+            self.retained_evictions += 1;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Bump an adoptable slot's refcount, reviving it from the
+    /// retained tier when its last live reference is already gone, and
+    /// record the popularity hit either way.
+    fn adopt_slot(&mut self, layer: usize, slot: Slot) {
+        let i = slot as usize;
+        if self.retained.remove(&(layer as u32, slot)).is_some() {
+            debug_assert_eq!(
+                self.slabs[layer].refcnt[i],
+                0,
+                "retained slot {} (layer {}) with a live refcount",
+                slot,
+                layer
+            );
+            self.slabs[layer].refcnt[i] = 1;
+            self.retained_hits += 1;
+        } else {
+            self.retain(layer, slot);
+        }
+        self.slabs[layer].hits[i] = self.slabs[layer].hits[i].saturating_add(1);
+        self.prefix_hits += 1;
     }
 
     /// CoW: return a slot holding the same encoded bytes (payload and
@@ -298,12 +487,12 @@ impl Inner {
     /// whole critical section or die by assertion *before* mutating, so
     /// a poisoning panic should always leave them intact.
     fn invariants_hold(&self) -> bool {
-        let mut used = 0u64;
+        let mut live = 0u64;
         let mut shared = 0u64;
         for slab in &self.slabs {
             for &r in &slab.refcnt {
                 if r > 0 {
-                    used += 1;
+                    live += 1;
                 }
                 if r >= 2 {
                     shared += 1;
@@ -313,8 +502,16 @@ impl Inner {
                 return false;
             }
         }
-        used == self.used
+        // every retained page is committed, registered, and at
+        // refcount 0 (pinned by the cache, not by any view)
+        let retained_ok = self.retained.keys().all(|&(layer, slot)| {
+            let slab = &self.slabs[layer as usize];
+            let i = slot as usize;
+            slab.refcnt[i] == 0 && slab.written[i] && slab.key[i].is_some()
+        });
+        live + self.retained.len() as u64 == self.used
             && shared == self.shared
+            && retained_ok
             && self.reservations.values().sum::<u64>() == self.reserved
     }
 }
@@ -322,9 +519,13 @@ impl Inner {
 /// The shared allocator. Cheap to clone via `Arc`; `Send + Sync` so
 /// `LayerPool` views travel to the recall worker inside `LayerXfer`.
 pub struct PageAllocator {
+    /// Number of model layers (one logical pool per layer).
     pub n_layers: usize,
+    /// KV heads per layer.
     pub n_kv: usize,
+    /// Tokens per page.
     pub page_size: usize,
+    /// Per-head dimension.
     pub d_head: usize,
     /// Logical f32 elements of one page across kv heads, K+V planes
     /// together (the pre-encode element count; the slab stride is
@@ -333,9 +534,17 @@ pub struct PageAllocator {
     /// Aggregate capacity in pages across all layers (0 = unbounded).
     pub capacity_pages: u64,
     codec: PageCodec,
-    sharing: bool,
+    mode: PrefixCacheMode,
+    /// Max pages the retained tier may pin (0 = bounded only by pool
+    /// pressure). Only meaningful in [`PrefixCacheMode::Retained`].
+    retain_cap_pages: u64,
     namespace: u64,
     inner: Mutex<Inner>,
+    /// Debug-only collision oracle: boundary hash -> the exact token
+    /// block that produced it (see
+    /// [`PageAllocator::verify_token_block`]).
+    #[cfg(debug_assertions)]
+    token_blocks: Mutex<HashMap<u128, Vec<i32>>>,
 }
 
 impl std::fmt::Debug for PageAllocator {
@@ -346,8 +555,9 @@ impl std::fmt::Debug for PageAllocator {
             .field("page_elems", &self.page_elems)
             .field("dtype", &self.codec.dtype)
             .field("capacity_pages", &self.capacity_pages)
-            .field("sharing", &self.sharing)
+            .field("mode", &self.mode)
             .field("pages_used", &s.pages_used)
+            .field("pages_retained", &s.pages_retained)
             .finish()
     }
 }
@@ -375,7 +585,10 @@ impl PageAllocator {
         )
     }
 
-    /// Allocator whose pages are stored through the `dtype` codec.
+    /// Allocator whose pages are stored through the `dtype` codec,
+    /// with the prefix cache either off or resident-only (the
+    /// historical boolean). Use [`PageAllocator::with_mode`] for the
+    /// retained tier.
     #[allow(clippy::too_many_arguments)]
     pub fn with_dtype(
         n_layers: usize,
@@ -384,6 +597,35 @@ impl PageAllocator {
         d_head: usize,
         capacity_pages: u64,
         sharing: bool,
+        namespace: u64,
+        dtype: KvDtype,
+    ) -> Arc<PageAllocator> {
+        let mode = if sharing { PrefixCacheMode::Resident } else { PrefixCacheMode::Off };
+        PageAllocator::with_mode(
+            n_layers,
+            n_kv,
+            page_size,
+            d_head,
+            capacity_pages,
+            mode,
+            0,
+            namespace,
+            dtype,
+        )
+    }
+
+    /// The fully general constructor: explicit prefix-cache mode and
+    /// retention cap (pages the retained tier may pin; 0 = bounded
+    /// only by pool pressure).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_mode(
+        n_layers: usize,
+        n_kv: usize,
+        page_size: usize,
+        d_head: usize,
+        capacity_pages: u64,
+        mode: PrefixCacheMode,
+        retain_cap_pages: u64,
         namespace: u64,
         dtype: KvDtype,
     ) -> Arc<PageAllocator> {
@@ -396,7 +638,8 @@ impl PageAllocator {
             page_elems: codec.page_elems(),
             capacity_pages,
             codec,
-            sharing,
+            mode,
+            retain_cap_pages,
             namespace,
             inner: Mutex::new(Inner {
                 slabs: (0..n_layers).map(|_| LayerSlab::new()).collect(),
@@ -408,7 +651,16 @@ impl PageAllocator {
                 reservations: HashMap::new(),
                 reserved: 0,
                 gpu_used: 0,
+                capacity: capacity_pages,
+                retention: mode.retention(),
+                retain_cap: retain_cap_pages,
+                retained: HashMap::new(),
+                clock: 0,
+                retained_hits: 0,
+                retained_evictions: 0,
             }),
+            #[cfg(debug_assertions)]
+            token_blocks: Mutex::new(HashMap::new()),
         })
     }
 
@@ -429,6 +681,20 @@ impl PageAllocator {
         sharing: bool,
         dtype: KvDtype,
     ) -> Arc<PageAllocator> {
+        let mode = if sharing { PrefixCacheMode::Resident } else { PrefixCacheMode::Off };
+        PageAllocator::for_model_mode(cfg, capacity_pages, mode, 0, dtype)
+    }
+
+    /// [`PageAllocator::for_model_dtype`] with an explicit prefix-cache
+    /// mode and retention cap; the namespace is derived from the model
+    /// identity so prefix keys never collide across models.
+    pub fn for_model_mode(
+        cfg: &ModelConfig,
+        capacity_pages: u64,
+        mode: PrefixCacheMode,
+        retain_cap_pages: u64,
+        dtype: KvDtype,
+    ) -> Arc<PageAllocator> {
         let mut ns = FNV_OFFSET;
         for b in cfg.name.bytes() {
             ns = fnv1a_i32(ns, b as i32);
@@ -436,13 +702,14 @@ impl PageAllocator {
         for v in [cfg.n_layers, cfg.n_kv, cfg.d_head, cfg.page_size, cfg.max_context] {
             ns = fnv1a_i32(ns, v as i32);
         }
-        PageAllocator::with_dtype(
+        PageAllocator::with_mode(
             cfg.n_layers,
             cfg.n_kv,
             cfg.page_size,
             cfg.d_head,
             capacity_pages,
-            sharing,
+            mode,
+            retain_cap_pages,
             ns,
             dtype,
         )
@@ -450,7 +717,12 @@ impl PageAllocator {
 
     /// Is copy-on-write prefix sharing enabled on this allocator?
     pub fn sharing(&self) -> bool {
-        self.sharing
+        self.mode.sharing()
+    }
+
+    /// The prefix-cache operating mode.
+    pub fn prefix_mode(&self) -> PrefixCacheMode {
+        self.mode
     }
 
     /// Element dtype of every page in this pool.
@@ -593,9 +865,10 @@ impl PageAllocator {
     // ------------------------------------------------------------------
 
     /// Alias a committed page whose prefix key matches, bumping its
-    /// refcount. `None` when sharing is off or no resident match.
+    /// refcount (reviving it from the retained tier if its last live
+    /// reference is gone). `None` when sharing is off or no match.
     pub(crate) fn adopt(&self, layer: usize, layout: Layout, hash: u128) -> Option<Slot> {
-        if !self.sharing {
+        if !self.sharing() {
             return None;
         }
         let key = self.prefix_key(layer, layout, hash);
@@ -604,15 +877,90 @@ impl PageAllocator {
         if !inner.slabs[layer].written[slot as usize] {
             return None;
         }
-        inner.retain(layer, slot);
-        inner.prefix_hits += 1;
+        inner.adopt_slot(layer, slot);
         Some(slot)
     }
 
+    /// Atomically adopt the page behind `hash` across *all* layers —
+    /// the longest-common-prefix path adopts whole cross-layer pages
+    /// or nothing (a page resident in only some layers would leave a
+    /// request half-prefilled). Returns one slot per layer on a full
+    /// hit; on any miss the allocator is left untouched.
+    pub(crate) fn adopt_stack(&self, layout: Layout, hash: u128) -> Option<Vec<Slot>> {
+        if !self.sharing() {
+            return None;
+        }
+        let mut inner = self.lock();
+        let mut slots = Vec::with_capacity(self.n_layers);
+        for layer in 0..self.n_layers {
+            let key = self.prefix_key(layer, layout, hash);
+            let slot = *inner.prefix.get(&key)?;
+            if !inner.slabs[layer].written[slot as usize] {
+                return None;
+            }
+            slots.push(slot);
+        }
+        for (layer, &slot) in slots.iter().enumerate() {
+            inner.adopt_slot(layer, slot);
+        }
+        Some(slots)
+    }
+
+    /// Drop every retained (refcount-0) page, returning the pool to a
+    /// live-pages-only baseline. Counts into `retained_evictions`.
+    /// Exposed for tests and cache-flush tooling; live pages are
+    /// untouched.
+    pub fn drop_retained(&self) -> u64 {
+        let mut inner = self.lock();
+        let n = inner.retained.len();
+        inner.evict_retained(n) as u64
+    }
+
+    /// Record and cross-check the exact token block behind a boundary
+    /// hash (debug builds only; release builds compile this away).
+    ///
+    /// Chain hashes are FNV-1a + splitmix — fast, not cryptographic —
+    /// and the retained tier widens the collision window from "pages
+    /// of currently resident requests" to the whole cache lifetime.
+    /// Debug and test builds therefore keep a `hash -> token block`
+    /// oracle: the first time two *different* token blocks produce the
+    /// same chain hash, this assertion fires at hash-record time
+    /// (before any adoption can alias the wrong page). The trust model
+    /// is documented in `ARCHITECTURE.md`.
+    pub fn verify_token_block(&self, hash: u128, tokens: &[i32]) {
+        #[cfg(debug_assertions)]
+        {
+            if !self.sharing() {
+                return;
+            }
+            let mut map = crate::util::sync::lock_unpoisoned(&self.token_blocks);
+            // bound debug-build memory; the oracle is best-effort
+            if map.len() >= (1 << 16) && !map.contains_key(&hash) {
+                map.clear();
+            }
+            match map.entry(hash) {
+                Entry::Vacant(e) => {
+                    e.insert(tokens.to_vec());
+                }
+                Entry::Occupied(e) => {
+                    assert_eq!(
+                        e.get().as_slice(),
+                        tokens,
+                        "prefix-hash collision: two distinct token blocks share chain hash {:#034x}",
+                        hash
+                    );
+                }
+            }
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = (hash, tokens);
+    }
+
     /// Register a freshly written page under its prefix key (first
-    /// writer wins; the registration dies with the slot).
+    /// writer wins; in resident mode the registration dies with the
+    /// slot, in retained mode it survives into the retained tier).
     pub(crate) fn register_prefix(&self, layer: usize, layout: Layout, hash: u128, slot: Slot) {
-        if !self.sharing {
+        if !self.sharing() {
             return;
         }
         let key = self.prefix_key(layer, layout, hash);
@@ -633,6 +981,14 @@ impl PageAllocator {
     /// Charge `pages` (a worst-case footprint) against the pool for
     /// request `id`. `Wait` leaves no reservation behind; `Admit` must
     /// be paired with [`PageAllocator::release_reservation`].
+    ///
+    /// Retained pages are deliberately *not* counted against the
+    /// ledger: they are reclaimable capacity. Admission only weighs
+    /// live reservations, and when an admitted request later allocates
+    /// into a full pool the allocator evicts the coldest retained page
+    /// to make room — reservations may evict retained pages but never
+    /// live ones, so `Wait => progress` is preserved exactly as
+    /// without the retained tier.
     pub fn try_reserve(&self, id: u64, pages: u64) -> AdmitDecision {
         let mut inner = self.lock();
         if self.capacity_pages > 0 {
@@ -662,10 +1018,12 @@ impl PageAllocator {
     // GPU-budget ledger
     // ------------------------------------------------------------------
 
+    /// Add `bytes` to the GPU-resident KV usage gauge.
     pub fn charge_gpu(&self, bytes: usize) {
         self.lock().gpu_used += bytes as u64;
     }
 
+    /// Subtract `bytes` from the GPU-resident KV usage gauge (saturating).
     pub fn release_gpu(&self, bytes: usize) {
         let mut inner = self.lock();
         inner.gpu_used = inner.gpu_used.saturating_sub(bytes as u64);
@@ -684,6 +1042,10 @@ impl PageAllocator {
             cpu_bytes_used: inner.used * self.page_bytes() as u64,
             cpu_bytes_peak: inner.peak_used * self.page_bytes() as u64,
             gpu_bytes_used: inner.gpu_used,
+            pages_retained: inner.retained.len() as u64,
+            retained_hits: inner.retained_hits,
+            retained_evictions: inner.retained_evictions,
+            bytes_saved: inner.prefix_hits * self.page_bytes() as u64,
         }
     }
 }
@@ -694,6 +1056,200 @@ mod tests {
 
     fn tiny_alloc(capacity: u64, sharing: bool) -> Arc<PageAllocator> {
         PageAllocator::new(2, 2, 4, 8, capacity, sharing, 0xABCD)
+    }
+
+    fn tiny_retained(capacity: u64, retain_cap: u64) -> Arc<PageAllocator> {
+        PageAllocator::with_mode(
+            2,
+            2,
+            4,
+            8,
+            capacity,
+            PrefixCacheMode::Retained,
+            retain_cap,
+            0xABCD,
+            KvDtype::F32,
+        )
+    }
+
+    /// Allocate, commit, and register one page under `hash`.
+    fn committed_page(a: &PageAllocator, layer: usize, hash: u128, fill: u8) -> Slot {
+        let s = a.alloc_slot(layer);
+        a.write_slot(layer, s, |buf, _| buf.iter_mut().for_each(|x| *x = fill));
+        a.set_written(layer, s);
+        a.register_prefix(layer, Layout::Hnd, hash, s);
+        s
+    }
+
+    #[test]
+    fn retained_pages_survive_release_and_revive_on_adopt() {
+        let a = tiny_retained(0, 0);
+        let s = committed_page(&a, 0, 42, 7);
+        a.release_slot(0, s);
+        let st = a.stats();
+        assert_eq!(st.pages_used, 1, "retained page still counts as used");
+        assert_eq!(st.pages_retained, 1);
+        assert_eq!(st.retained_hits, 0);
+        // content is still adoptable after the last view died
+        let got = a.adopt(0, Layout::Hnd, 42).expect("retained page revives");
+        assert_eq!(got, s);
+        a.read_slot(0, got, |buf, _| assert!(buf.iter().all(|&x| x == 7)));
+        let st = a.stats();
+        assert_eq!(st.pages_retained, 0, "revived page left the retained tier");
+        assert_eq!(st.retained_hits, 1);
+        assert_eq!(st.prefix_hits, 1);
+        a.release_slot(0, got);
+        assert_eq!(a.stats().pages_retained, 1, "retires back into the tier");
+        assert_eq!(a.drop_retained(), 1);
+        let st = a.stats();
+        assert_eq!(st.pages_used, 0, "cache drop returns the pool to baseline");
+        assert_eq!(st.pages_retained, 0);
+        assert!(a.adopt(0, Layout::Hnd, 42).is_none(), "registration died with eviction");
+    }
+
+    #[test]
+    fn resident_mode_never_retains() {
+        let a = tiny_alloc(0, true);
+        let s = committed_page(&a, 0, 42, 7);
+        a.release_slot(0, s);
+        let st = a.stats();
+        assert_eq!(st.pages_used, 0);
+        assert_eq!(st.pages_retained, 0);
+        assert!(a.adopt(0, Layout::Hnd, 42).is_none());
+    }
+
+    #[test]
+    fn uncommitted_or_unregistered_pages_free_instead_of_retaining() {
+        let a = tiny_retained(0, 0);
+        let plain = a.alloc_slot(0); // never written, never registered
+        let written = a.alloc_slot(0);
+        a.set_written(0, written); // written but never registered
+        a.release_slot(0, plain);
+        a.release_slot(0, written);
+        let st = a.stats();
+        assert_eq!(st.pages_used, 0);
+        assert_eq!(st.pages_retained, 0);
+    }
+
+    #[test]
+    fn pool_pressure_evicts_least_popular_then_least_recent() {
+        // capacity 3: three retained pages fill the pool; page B is the
+        // most popular (adopted once), A and C never were; A was
+        // retained before C. Under allocation pressure the victims go
+        // A (cold, oldest) then C (cold, newer) then B.
+        let a = tiny_retained(3, 0);
+        let sa = committed_page(&a, 0, 1, 1);
+        let sb = committed_page(&a, 0, 2, 2);
+        let sc = committed_page(&a, 0, 3, 3);
+        a.release_slot(0, sa); // A: cold, retained first
+        a.release_slot(0, sb);
+        let rb = a.adopt(0, Layout::Hnd, 2).expect("b revives"); // B: 1 hit
+        a.release_slot(0, rb); // B: popular
+        a.release_slot(0, sc); // C: cold, retained last
+        assert_eq!(a.stats().pages_retained, 3);
+        // each allocation at capacity reclaims exactly one page; a
+        // failed adopt probe (`None`) is side-effect free, so the
+        // eviction order is observable page by page
+        let n1 = a.alloc_slot(1);
+        assert!(a.adopt(0, Layout::Hnd, 1).is_none(), "cold oldest A evicted first");
+        assert_eq!(a.stats().pages_retained, 2);
+        let n2 = a.alloc_slot(1);
+        assert!(a.adopt(0, Layout::Hnd, 3).is_none(), "cold newer C evicted second");
+        let n3 = a.alloc_slot(1);
+        assert!(a.adopt(0, Layout::Hnd, 2).is_none(), "popular B evicted last");
+        let st = a.stats();
+        assert_eq!(st.retained_evictions, 3);
+        assert_eq!(st.pages_used, 3, "pool never exceeded capacity");
+        for s in [n1, n2, n3] {
+            a.release_slot(1, s);
+        }
+        assert_eq!(a.stats().pages_used, 0);
+    }
+
+    #[test]
+    fn retention_cap_bounds_the_tier() {
+        let a = tiny_retained(0, 2);
+        for hash in [10u128, 11, 12] {
+            let s = committed_page(&a, 0, hash, hash as u8);
+            a.release_slot(0, s);
+        }
+        let st = a.stats();
+        assert_eq!(st.pages_retained, 2, "cap holds the tier at 2");
+        assert_eq!(st.retained_evictions, 1);
+        assert!(a.adopt(0, Layout::Hnd, 10).is_none(), "oldest page evicted at cap");
+        a.drop_retained();
+        assert_eq!(a.stats().pages_used, 0);
+    }
+
+    #[test]
+    fn adopt_stack_is_all_or_nothing_across_layers() {
+        let a = tiny_retained(0, 0);
+        // hash 5 committed in both layers; hash 6 only in layer 0
+        let s0 = committed_page(&a, 0, 5, 1);
+        let s1 = committed_page(&a, 1, 5, 2);
+        let s2 = committed_page(&a, 0, 6, 3);
+        for (l, s) in [(0, s0), (1, s1), (0, s2)] {
+            a.release_slot(l, s);
+        }
+        let before = a.stats();
+        assert!(a.adopt_stack(Layout::Hnd, 6).is_none(), "layer-1 miss adopts nothing");
+        let after = a.stats();
+        assert_eq!(before.prefix_hits, after.prefix_hits, "failed stack adopt left no trace");
+        assert_eq!(after.pages_retained, 3);
+        let slots = a.adopt_stack(Layout::Hnd, 5).expect("full-stack hit");
+        assert_eq!(slots, vec![s0, s1]);
+        assert_eq!(a.stats().retained_hits, 2);
+        for (l, s) in slots.into_iter().enumerate() {
+            a.release_slot(l, s);
+        }
+        a.drop_retained();
+        assert_eq!(a.stats().pages_used, 0);
+    }
+
+    #[test]
+    fn reservations_may_evict_retained_but_never_live_pages() {
+        // capacity 4; a retired request left 4 retained pages. A new
+        // reservation for the whole pool still admits (retained pages
+        // are reclaimable), and its allocations evict them one by one.
+        let a = tiny_retained(4, 0);
+        let mut retained = Vec::new();
+        for h in 0..4u128 {
+            retained.push(committed_page(&a, 0, 100 + h, h as u8));
+        }
+        for s in retained {
+            a.release_slot(0, s);
+        }
+        assert_eq!(a.stats().pages_retained, 4);
+        assert_eq!(a.try_reserve(1, 4), AdmitDecision::Admit, "retained pages don't block");
+        let mut live = Vec::new();
+        for _ in 0..4 {
+            live.push(a.alloc_slot(1));
+        }
+        let st = a.stats();
+        assert_eq!(st.pages_used, 4, "pool stayed at capacity");
+        assert_eq!(st.pages_retained, 0, "all retained pages were reclaimed");
+        assert_eq!(st.retained_evictions, 4);
+        for s in live {
+            a.release_slot(1, s);
+        }
+        a.release_reservation(1);
+        assert_eq!(a.stats().pages_used, 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "prefix-hash collision")]
+    fn token_block_oracle_catches_collisions() {
+        let a = tiny_retained(0, 0);
+        a.verify_token_block(99, &[1, 2, 3, 4]);
+        a.verify_token_block(99, &[1, 2, 3, 5]);
+    }
+
+    #[test]
+    fn token_block_oracle_accepts_consistent_rehashes() {
+        let a = tiny_retained(0, 0);
+        a.verify_token_block(99, &[1, 2, 3, 4]);
+        a.verify_token_block(99, &[1, 2, 3, 4]);
     }
 
     #[test]

@@ -28,21 +28,30 @@
 /// A page whose last token was just written; ready for offload.
 #[derive(Debug, Clone)]
 pub struct CompletedPage {
+    /// Logical page index within the sequence.
     pub page: usize,
     /// NHD token-major content `[tok][head][d]` — K then V.
     pub k_nhd: Vec<f32>,
+    /// NHD token-major V content `[tok][head][d]`.
     pub v_nhd: Vec<f32>,
 }
 
 /// Compute half: sink + window slabs, ring, summaries, dirty bits.
 #[derive(Debug)]
 pub struct GpuLayerCache {
+    /// KV heads.
     pub n_kv: usize,
+    /// Per-head dimension.
     pub d: usize,
+    /// Tokens per page.
     pub p: usize,
+    /// Sink pages (slots `[0, sink_pages)`).
     pub sink_pages: usize,
+    /// Local-window ring pages.
     pub window_pages: usize,
+    /// Select-slot budget (pages recalled per step).
     pub select_pages: usize,
+    /// Max logical pages of a full-context sequence (summary extent).
     pub n_pages_max: usize,
     /// NHD K/V slabs for the shared slots: `[sink+window][p][n_kv][d]`.
     k: Vec<f32>,
@@ -51,14 +60,16 @@ pub struct GpuLayerCache {
     ring_pages: Vec<Option<usize>>,
     /// tokens appended so far (absolute sequence length).
     pub len: usize,
-    /// min/max page summaries `[head][page][d]` over post-RoPE keys.
+    /// min page summaries `[head][page][d]` over post-RoPE keys.
     pub smin: Vec<f32>,
+    /// max page summaries `[head][page][d]` over post-RoPE keys.
     pub smax: Vec<f32>,
     /// shared (all-head) slots written since the last incremental gather.
     dirty_shared: Vec<bool>,
 }
 
 impl GpuLayerCache {
+    /// Empty compute-half cache with the given geometry and page budget.
     pub fn new(
         n_kv: usize,
         d: usize,
@@ -92,18 +103,22 @@ impl GpuLayerCache {
         SelectSlots::new(self.n_kv, self.d, self.p, self.select_pages)
     }
 
+    /// Total page budget B = sink + window + select.
     pub fn budget_pages(&self) -> usize {
         self.sink_pages + self.window_pages + self.select_pages
     }
 
+    /// Token slots the decode attention kernel sees (budget × page size).
     pub fn budget_slots(&self) -> usize {
         self.budget_pages() * self.p
     }
 
+    /// Logical page currently being filled.
     pub fn cur_page(&self) -> usize {
         self.len / self.p
     }
 
+    /// Bytes of GPU-resident state this half owns (slabs + summaries).
     pub fn gpu_bytes(&self) -> usize {
         (self.k.len() + self.v.len() + self.smin.len() + self.smax.len()) * 4
     }
@@ -357,9 +372,13 @@ impl GpuLayerCache {
 /// to the background recall worker while speculative recall runs.
 #[derive(Debug)]
 pub struct SelectSlots {
+    /// KV heads.
     pub n_kv: usize,
+    /// Per-head dimension.
     pub d: usize,
+    /// Tokens per page.
     pub p: usize,
+    /// Select slots per head.
     pub select_pages: usize,
     /// NHD K/V slabs for the select slots: `[select_pages][p][n_kv][d]`.
     k: Vec<f32>,
@@ -371,6 +390,7 @@ pub struct SelectSlots {
 }
 
 impl SelectSlots {
+    /// Empty select slab: no pages installed, all slots clean.
     pub fn new(n_kv: usize, d: usize, p: usize, select_pages: usize) -> SelectSlots {
         SelectSlots {
             n_kv,
@@ -389,6 +409,7 @@ impl SelectSlots {
         ((slot_j * self.p + tok) * self.n_kv + head) * self.d
     }
 
+    /// Bytes of GPU-resident state this half owns (K + V slabs).
     pub fn bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 4
     }

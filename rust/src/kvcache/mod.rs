@@ -25,13 +25,14 @@ use std::sync::Arc;
 use crate::config::ModelConfig;
 use crate::transfer::TransferEngine;
 
-pub use self::alloc::{AdmitDecision, KvPoolStats, PageAllocator};
+pub use self::alloc::{AdmitDecision, KvPoolStats, PageAllocator, PrefixCacheMode};
 pub use gpu::{CompletedPage, GpuLayerCache, SelectSlots};
 pub use pool::{Chunk, LayerPool, Layout};
 pub use quant::{KvDtype, PageCodec};
 
 /// All KV state for one request across layers.
 pub struct RequestKv {
+    /// Per-layer KV state (compute half + transfer half).
     pub layers: Vec<LayerState>,
     select_bytes_per_layer: usize,
     alloc: Arc<PageAllocator>,
@@ -50,7 +51,10 @@ pub struct RequestKv {
     boundary_hashes: Vec<u128>,
 }
 
+/// One layer's KV state: the engine-resident compute half plus the
+/// checkout-able transfer half.
 pub struct LayerState {
+    /// Compute half: sink/window slabs, ring, summaries.
     pub gpu: GpuLayerCache,
     /// Transfer half; `None` while checked out to the recall worker.
     xfer: Option<LayerXfer>,
@@ -63,7 +67,9 @@ pub struct LayerState {
 /// The per-layer state the recall worker needs exclusive access to:
 /// the CPU page pool it reads and the GPU select slots it fills.
 pub struct LayerXfer {
+    /// GPU select-slot slab the recall worker fills.
     pub select: SelectSlots,
+    /// CPU page-pool view the recall worker reads.
     pub pool: LayerPool,
 }
 
@@ -73,10 +79,12 @@ impl LayerState {
         self.xfer.is_none()
     }
 
+    /// The attached transfer half; panics if checked out.
     pub fn xfer(&self) -> &LayerXfer {
         self.xfer.as_ref().expect("transfer half is checked out to the recall worker")
     }
 
+    /// Mutable access to the attached transfer half; panics if checked out.
     pub fn xfer_mut(&mut self) -> &mut LayerXfer {
         self.xfer.as_mut().expect("transfer half is checked out to the recall worker")
     }
@@ -222,9 +230,49 @@ impl RequestKv {
             self.mix_state = self::alloc::mix2_i32(self.mix_state, tok);
             self.hashed_tokens += 1;
             if self.hashed_tokens % self.page_size == 0 {
-                self.boundary_hashes.push(self::alloc::fold_key(self.hash_state, self.mix_state));
+                let h = self::alloc::fold_key(self.hash_state, self.mix_state);
+                self.boundary_hashes.push(h);
+                // Debug-only collision oracle: record the exact token
+                // block behind this boundary hash so a real FNV+splitmix
+                // collision fails loudly before any adoption can alias
+                // the wrong page (release builds compile this away).
+                self.alloc.verify_token_block(
+                    h,
+                    &tokens[self.hashed_tokens - self.page_size..self.hashed_tokens],
+                );
             }
         }
+    }
+
+    /// Adopt the longest common prefix of this request's token stream
+    /// from the shared prefix cache: walk the page-boundary chain
+    /// hashes from page 0 and claim each whole cross-layer page that is
+    /// still committed in the allocator — resident pages of a live
+    /// request or refcount-0 pages pinned by the retained tier alike —
+    /// stopping at the first miss. Returns the number of tokens whose
+    /// completed-page offload is now already satisfied; the caller
+    /// prefills normally and [`RequestKv::append`] /
+    /// [`RequestKv::offload_completed`] skip the redundant page writes.
+    ///
+    /// Must run at the prefill entry point: after [`RequestKv::feed_tokens`]
+    /// has hashed the prompt, before any K/V lands (no-op otherwise).
+    pub fn adopt_prefix(&mut self) -> usize {
+        if !self.sharing || self.layers.is_empty() || self.len() != 0 {
+            return 0;
+        }
+        let layout = self.layers[0].pool().layout;
+        let mut pages = 0usize;
+        for g in 0..self.boundary_hashes.len() {
+            let Some(slots) = self.alloc.adopt_stack(layout, self.boundary_hashes[g]) else {
+                break;
+            };
+            debug_assert_eq!(slots.len(), self.layers.len());
+            for (l, slot) in slots.into_iter().enumerate() {
+                self.layers[l].xfer_mut().pool.install_adopted(g, slot);
+            }
+            pages += 1;
+        }
+        pages * self.page_size
     }
 
     /// Prefix key of logical page `page`, if sharing is on and the
@@ -237,12 +285,14 @@ impl RequestKv {
         }
     }
 
+    /// Tokens appended so far (absolute sequence length).
     pub fn len(&self) -> usize {
         // the compute half (which owns `len`) never leaves the engine, so
         // this is safe even while transfer halves are in flight.
         self.layers.first().map_or(0, |l| l.gpu.len)
     }
 
+    /// Whether no tokens have been appended yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -260,7 +310,12 @@ impl RequestKv {
             let key = self.page_key(cp.page);
             let st = &mut self.layers[layer];
             let x = st.xfer.as_mut().expect("append while transfer half is on the recall worker");
-            engine.offload_page_keyed(&cp, &mut x.pool, key);
+            // A page completes exactly once, so a committed pool entry
+            // here can only mean the page was LCP-adopted at prefill
+            // entry — the offload (write + quantize) is already done.
+            if !x.pool.is_written(cp.page) {
+                engine.offload_page_keyed(&cp, &mut x.pool, key);
+            }
         }
     }
 
@@ -276,7 +331,11 @@ impl RequestKv {
         let st = &mut self.layers[layer];
         let x = st.xfer.as_mut().expect("offload while transfer half is on the recall worker");
         for (cp, key) in completed.iter().zip(keys) {
-            engine.offload_page_keyed(cp, &mut x.pool, key);
+            // skip pages whose offload was satisfied by LCP adoption
+            // (see `append`)
+            if !x.pool.is_written(cp.page) {
+                engine.offload_page_keyed(cp, &mut x.pool, key);
+            }
         }
     }
 
@@ -444,5 +503,64 @@ mod tests {
         assert_eq!(alloc.stats().pages_used, 6, "b keeps the pages alive");
         drop(b);
         assert_eq!(alloc.stats().pages_used, 0);
+    }
+
+    #[test]
+    fn lcp_adoption_survives_request_death_and_matches_cold_prefill() {
+        let cfg = tiny_cfg();
+        let alloc =
+            PageAllocator::for_model_mode(&cfg, 0, PrefixCacheMode::Retained, 0, KvDtype::F32);
+        let tokens: Vec<i32> = (0..12).map(|t| t % 7).collect();
+        // distinguishable per-token rows so page content is checkable
+        let rows: Vec<Vec<f32>> = (0..tokens.len())
+            .map(|t| (0..cfg.n_kv * cfg.d_head).map(|i| (t * 13 + i) as f32 * 0.25).collect())
+            .collect();
+        let fill = |kv: &mut RequestKv, eng: &mut TransferEngine, adopt: bool| -> usize {
+            kv.feed_tokens(&tokens);
+            let adopted = if adopt { kv.adopt_prefix() } else { 0 };
+            for row in &rows {
+                for l in 0..cfg.n_layers {
+                    kv.append(l, row, row, eng);
+                }
+            }
+            adopted
+        };
+        // request A prefills cold and fully retires
+        let mut a = RequestKv::with_alloc(&cfg, Layout::Hnd, alloc.clone());
+        let mut ea = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        fill(&mut a, &mut ea, false);
+        drop(a);
+        let st = alloc.stats();
+        assert_eq!(st.pages_used, 6, "retained pages still count as used");
+        assert_eq!(st.pages_retained, 6, "3 pages x 2 layers retained past death");
+        // request B adopts the whole prefix out of the retained tier
+        let mut b = RequestKv::with_alloc(&cfg, Layout::Hnd, alloc.clone());
+        let mut eb = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        let adopted = fill(&mut b, &mut eb, true);
+        assert_eq!(adopted, 12, "every whole page of the prompt adopted");
+        assert_eq!(eb.counters.offloaded_pages, 0, "no adopted page was re-written");
+        let st = alloc.stats();
+        assert_eq!(st.retained_hits, 6);
+        assert_eq!(st.pages_retained, 0, "revived pages left the tier");
+        // the adopted pool is bit-identical to a cold prefill's pool
+        let mut c = RequestKv::new(&cfg, Layout::Hnd);
+        let mut ec = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+        fill(&mut c, &mut ec, false);
+        for l in 0..cfg.n_layers {
+            for g in 0..3 {
+                for h in 0..cfg.n_kv {
+                    assert_eq!(
+                        b.layers[l].pool().read_page_head(g, h),
+                        c.layers[l].pool().read_page_head(g, h),
+                        "layer {} page {} head {} diverged from cold prefill",
+                        l,
+                        g,
+                        h
+                    );
+                }
+            }
+        }
+        drop(b);
+        assert_eq!(alloc.stats().pages_retained, 6, "pages retire back into the tier");
     }
 }

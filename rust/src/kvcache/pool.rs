@@ -30,10 +30,15 @@ pub enum Layout {
 /// One layer's pool view: logical pages in [0, n_pages) mapped to
 /// allocator slots on demand.
 pub struct LayerPool {
+    /// Page memory layout (NHD or HND).
     pub layout: Layout,
+    /// Logical pages this view addresses.
     pub n_pages: usize,
+    /// KV heads per page.
     pub n_kv: usize,
+    /// Tokens per page.
     pub p: usize,
+    /// Per-head dimension.
     pub d: usize,
     /// Page codec (dtype + geometry) of the backing allocator: encode
     /// on `write_page*`, decode in `copy_chunks` / `read_page_head`.
@@ -61,7 +66,9 @@ impl std::fmt::Debug for LayerPool {
 /// page-relative; pair with the page id for [`LayerPool::copy_chunks`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Chunk {
+    /// First token slot within the page.
     pub offset: usize,
+    /// Number of token slots.
     pub len: usize,
 }
 
@@ -156,6 +163,9 @@ impl LayerPool {
         self.held_pages() * self.alloc.page_bytes()
     }
 
+    /// Whether logical `page` maps to a slot whose payload has been
+    /// committed (written once and immutable) — e.g. an adopted or
+    /// CoW-shared prefix page the request never needs to offload again.
     pub fn is_written(&self, page: usize) -> bool {
         self.table[page].map_or(false, |s| self.alloc.slot_written(self.layer, s))
     }
@@ -271,6 +281,21 @@ impl LayerPool {
             }
             None => false,
         }
+    }
+
+    /// Install a slot that [`PageAllocator::adopt_stack`] already
+    /// refcounted for this view — the longest-common-prefix adoption
+    /// path, where the whole cross-layer page was claimed atomically
+    /// and each layer's view just records its slot. The logical page
+    /// must be untouched (LCP adoption happens before any offload).
+    pub(crate) fn install_adopted(&mut self, page: usize, slot: Slot) {
+        assert!(
+            self.table[page].is_none(),
+            "LCP-adopting into page {} which already holds a slot",
+            page
+        );
+        self.table[page] = Some(slot);
+        self.held += 1;
     }
 
     /// Contiguous chunks to move one (page, head) pair — the layout-

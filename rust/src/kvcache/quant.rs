@@ -39,6 +39,7 @@ pub enum KvDtype {
 }
 
 impl KvDtype {
+    /// Canonical lowercase name (CLI / report key).
     pub fn as_str(&self) -> &'static str {
         match self {
             KvDtype::F32 => "f32",
@@ -47,6 +48,7 @@ impl KvDtype {
         }
     }
 
+    /// Parse a CLI dtype name (`f32`/`fp32`, `int8`/`i8`, `int4`/`i4`).
     pub fn parse(s: &str) -> Option<KvDtype> {
         match s {
             "f32" | "fp32" => Some(KvDtype::F32),
@@ -56,6 +58,7 @@ impl KvDtype {
         }
     }
 
+    /// All dtypes, in ablation-sweep order.
     pub fn all() -> [KvDtype; 3] {
         [KvDtype::F32, KvDtype::Int8, KvDtype::Int4]
     }
@@ -93,6 +96,7 @@ pub fn f32_to_bf16_bits(x: f32) -> u16 {
     ((b.wrapping_add(round)) >> 16) as u16
 }
 
+/// Expand a bf16 bit pattern back to f32 (exact).
 #[inline]
 pub fn bf16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits((h as u32) << 16)
@@ -102,13 +106,18 @@ pub fn bf16_bits_to_f32(h: u16) -> f32 {
 /// page of the slab. Cheap `Copy`; derived once per allocator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PageCodec {
+    /// Element dtype of the slab payload.
     pub dtype: KvDtype,
+    /// KV heads per page.
     pub n_kv: usize,
+    /// Tokens per page.
     pub page_size: usize,
+    /// Per-head dimension.
     pub d_head: usize,
 }
 
 impl PageCodec {
+    /// Codec for the given dtype and page geometry.
     pub fn new(dtype: KvDtype, n_kv: usize, page_size: usize, d_head: usize) -> PageCodec {
         PageCodec { dtype, n_kv, page_size, d_head }
     }

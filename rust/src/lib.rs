@@ -9,6 +9,9 @@
     clippy::many_single_char_names,
     clippy::type_complexity
 )]
+// Every public item carries rustdoc; CI builds the docs with
+// `RUSTDOCFLAGS=-D warnings`, so a missing or broken doc fails there.
+#![warn(missing_docs)]
 
 //! FreeKV: boosting KV cache retrieval for efficient LLM inference.
 //!

@@ -24,6 +24,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Euclidean (L2) norm.
 pub fn norm(a: &[f32]) -> f32 {
     dot(a, a).sqrt()
 }
@@ -75,6 +76,7 @@ pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
     top
 }
 
+/// Index of the largest value (first on ties; 0 for empty input).
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in xs.iter().enumerate() {
@@ -88,16 +90,21 @@ pub fn argmax(xs: &[f32]) -> usize {
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major backing storage, `rows * cols` elements.
     pub data: Vec<f32>,
 }
 
 impl Mat {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Build from row vectors; every row must have the same length.
     pub fn from_rows(rows: Vec<Vec<f32>>) -> Mat {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
@@ -109,16 +116,19 @@ impl Mat {
         Mat { rows: r, cols: c, data }
     }
 
+    /// Element at row `r`, column `c`.
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
     }
 
+    /// Mutable reference to the element at row `r`, column `c`.
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
         &mut self.data[r * self.cols + c]
     }
 
+    /// Row `r` as a contiguous slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
@@ -144,6 +154,7 @@ impl Mat {
         out
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -154,6 +165,7 @@ impl Mat {
         out
     }
 
+    /// Frobenius norm (L2 norm of all entries).
     pub fn frob_norm(&self) -> f32 {
         norm(&self.data)
     }

@@ -17,6 +17,7 @@ use freekv::coordinator::sim_backend::SimBackend;
 use freekv::coordinator::tokenizer;
 use freekv::eval::{accuracy, latency, real};
 use freekv::kvcache::quant::KvDtype;
+use freekv::kvcache::PrefixCacheMode;
 use freekv::runtime::Runtime;
 use freekv::server::ServeOptions;
 use freekv::util::cli::Args;
@@ -47,7 +48,11 @@ fn run() -> Result<()> {
     // --weight-workers bounds how many pool workers hold weight copies.
     // --kv-pool-pages caps the shared CPU KV page pool (0 = unbounded);
     // admission queues requests the pool cannot cover.
-    // --prefix-cache enables copy-on-write prefix sharing of pool pages.
+    // --prefix-cache[=resident|retained|off] enables copy-on-write
+    // prefix sharing of pool pages; `retained` also keeps committed
+    // prefix pages cached after their last request retires (bare
+    // --prefix-cache means `resident`). --kv-retain-pages N caps the
+    // retained tier (0 = bounded only by pool pressure).
     // --chaos-seed N seeds deterministic fault injection (worker deaths,
     // engine panics, slow transfers) to exercise the degradation ladder.
     // --kv-dtype f32|int8|int4 selects the CPU pool page codec
@@ -58,6 +63,15 @@ fn run() -> Result<()> {
             .ok_or_else(|| anyhow!("unknown --kv-dtype {s:?} (expected f32|int8|int4)"))?,
         None => defaults.kv_dtype,
     };
+    let prefix_cache = match args.get("prefix-cache") {
+        Some(s) => PrefixCacheMode::parse(&s).ok_or_else(|| {
+            anyhow!("unknown --prefix-cache {s:?} (expected off|resident|retained)")
+        })?,
+        // bare `--prefix-cache` keeps its historical meaning: resident
+        // CoW sharing without the persistent tier.
+        None if args.flag("prefix-cache") => PrefixCacheMode::Resident,
+        None => defaults.prefix_cache,
+    };
     let params = FreeKvParams {
         tau,
         overlap: !args.flag("serial-recall"),
@@ -65,7 +79,8 @@ fn run() -> Result<()> {
         max_lanes: args.usize_or("max-lanes", defaults.max_lanes),
         weight_workers: args.usize_or("weight-workers", defaults.weight_workers),
         kv_pool_pages: args.usize_or("kv-pool-pages", defaults.kv_pool_pages),
-        prefix_cache: args.flag("prefix-cache") || defaults.prefix_cache,
+        prefix_cache,
+        kv_retain_pages: args.usize_or("kv-retain-pages", defaults.kv_retain_pages),
         chaos_seed: args.get("chaos-seed").and_then(|v| v.parse().ok()),
         kv_dtype,
         ..Default::default()
@@ -134,6 +149,7 @@ fn run() -> Result<()> {
             // client is !Send); --sim swaps in the artifact-free backend.
             let el = if args.flag("sim") {
                 let (pool_pages, prefix) = (params.kv_pool_pages as u64, params.prefix_cache);
+                let retain = params.kv_retain_pages as u64;
                 let dtype = params.kv_dtype;
                 // One fault plan for the whole process: a supervised
                 // engine restart keeps advancing the same schedule
@@ -142,7 +158,8 @@ fn run() -> Result<()> {
                     .chaos_seed
                     .map(|s| std::sync::Arc::new(freekv::util::fault::FaultPlan::chaos(s)));
                 EngineLoop::spawn(loop_cfg, move || {
-                    let mut b = SimBackend::tiny_with_pool_dtype(pool_pages, prefix, dtype);
+                    let mut b =
+                        SimBackend::tiny_with_pool_mode_dtype(pool_pages, prefix, retain, dtype);
                     if let Some(p) = &plan {
                         b.set_faults(p.clone());
                     }
@@ -204,9 +221,10 @@ fn run() -> Result<()> {
                 ..Default::default()
             };
             if args.flag("sim") {
-                let mut backend = SimBackend::tiny_with_pool_dtype(
+                let mut backend = SimBackend::tiny_with_pool_mode_dtype(
                     params.kv_pool_pages as u64,
                     params.prefix_cache,
+                    params.kv_retain_pages as u64,
                     params.kv_dtype,
                 );
                 if let Some(seed) = params.chaos_seed {
@@ -229,7 +247,8 @@ fn run() -> Result<()> {
         _ => Err(anyhow!(
             "usage: freekv <info|generate|serve|loadtest|eval> [--model tiny] [--artifacts dir] \
              [--serial-recall] [--exec-workers 2] [--max-lanes 2] [--weight-workers 1] \
-             [--kv-pool-pages 0] [--kv-dtype f32|int8|int4] [--prefix-cache] [--sim] \
+             [--kv-pool-pages 0] [--kv-dtype f32|int8|int4] \
+             [--prefix-cache[=off|resident|retained]] [--kv-retain-pages 0] [--sim] \
              [--chaos-seed N] \
              [--queue-cap 64] [--max-batch 4] [--admit-below 4] [--microbatch-min 0] \
              [--max-conns 0] [--drain-secs 5]\n\

@@ -42,6 +42,7 @@ pub struct StepTruth {
     /// scores of the group-pooled query (Appendix B.2 MeanQ / MaxQ
     /// variants pool q *before* scoring): `[n_kv][pages]`.
     pub scores_meanq: Vec<Vec<f32>>,
+    /// Scores of the group max-pooled query: `[n_kv][pages]`.
     pub scores_maxq: Vec<Vec<f32>>,
     /// pages that the task *requires* at this step (empty if none).
     pub required_pages: Vec<usize>,
@@ -51,13 +52,18 @@ pub struct StepTruth {
 
 /// The full generated trace of one episode.
 pub struct Trace {
+    /// Episode shape the trace was generated from.
     pub spec: TaskSpec,
+    /// Query heads.
     pub n_qo: usize,
+    /// KV heads.
     pub n_kv: usize,
+    /// Per-step ground truth, in decode order.
     pub steps: Vec<StepTruth>,
 }
 
 impl Trace {
+    /// Query heads per kv head (GQA group size).
     pub fn group(&self) -> usize {
         self.n_qo / self.n_kv
     }

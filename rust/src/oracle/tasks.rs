@@ -4,6 +4,7 @@
 
 use crate::util::rng::Rng;
 
+/// Task category an oracle episode mimics (the paper's benchmark groups).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TaskKind {
     /// Needle-in-a-haystack: one prompt page must be retrievable during
@@ -21,6 +22,7 @@ pub enum TaskKind {
 }
 
 impl TaskKind {
+    /// Lower-case task name (CLI / table rows).
     pub fn name(&self) -> &'static str {
         match self {
             TaskKind::Niah => "niah",
@@ -30,6 +32,7 @@ impl TaskKind {
         }
     }
 
+    /// Parse a task name as produced by [`TaskKind::name`] (plus aliases).
     pub fn parse(s: &str) -> Option<TaskKind> {
         Some(match s {
             "niah" => TaskKind::Niah,
@@ -40,21 +43,27 @@ impl TaskKind {
         })
     }
 
+    /// All task kinds, in table order.
     pub fn all() -> [TaskKind; 4] {
         [TaskKind::Niah, TaskKind::Summarization, TaskKind::LongGen, TaskKind::Reasoning]
     }
 }
 
+/// Shape of one oracle episode: task kind plus prompt/generation sizes.
 #[derive(Debug, Clone)]
 pub struct TaskSpec {
+    /// Task category.
     pub kind: TaskKind,
+    /// Prompt length, in pages.
     pub prompt_pages: usize,
+    /// Decode steps to generate.
     pub gen_steps: usize,
     /// decode steps per generated page (page granularity of the trace).
     pub tokens_per_page: usize,
 }
 
 impl TaskSpec {
+    /// Spec from explicit sizes.
     pub fn new(kind: TaskKind, prompt_pages: usize, gen_steps: usize, tokens_per_page: usize) -> TaskSpec {
         TaskSpec { kind, prompt_pages, gen_steps, tokens_per_page }
     }
@@ -85,6 +94,7 @@ pub struct Overlay {
 }
 
 impl Overlay {
+    /// Draw an episode's schedule from the spec.
     pub fn new(spec: &TaskSpec, rng: &mut Rng) -> Overlay {
         let mut hot = Vec::new();
         let mut jumps = Vec::new();

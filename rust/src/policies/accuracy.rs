@@ -16,8 +16,11 @@ use crate::util::rng::Rng;
 /// in pages; defaults mirror the tiny config's proportions).
 #[derive(Debug, Clone, Copy)]
 pub struct AccBudget {
+    /// Always-resident sink pages at the sequence start.
     pub sink: usize,
+    /// Always-resident sliding-window pages at the sequence tail.
     pub window: usize,
+    /// Dynamically selected middle pages.
     pub select: usize,
 }
 
@@ -47,11 +50,13 @@ pub struct EpisodeResult {
 /// Extra method knobs for the accuracy sim.
 #[derive(Debug, Clone)]
 pub struct AccKnobs {
+    /// FreeKV parameters (tau, pooling, selection variant).
     pub freekv: FreeKvParams,
     /// Razor retrieval-head fraction.
     pub razor_rho: f64,
     /// ShadowKV summary-refresh interval (steps) and staleness noise.
     pub shadowkv_refresh: usize,
+    /// Noise added to ShadowKV's stale summaries between refreshes.
     pub shadowkv_stale_noise: f32,
     /// InfiniGen last-layer proxy quality (1.0 = perfect query).
     pub infinigen_mix: f32,

@@ -12,16 +12,21 @@ use crate::linalg;
 pub struct SpecState {
     /// previous step's q, `[n_qo][d]` flattened.
     pub prev_q: Option<Vec<f32>>,
+    /// Query heads.
     pub n_qo: usize,
+    /// KV heads.
     pub n_kv: usize,
+    /// Head dimension.
     pub d: usize,
 }
 
 impl SpecState {
+    /// Fresh state with no previous query recorded.
     pub fn new(n_qo: usize, n_kv: usize, d: usize) -> SpecState {
         SpecState { prev_q: None, n_qo, n_kv, d }
     }
 
+    /// Query heads per kv head (GQA group size).
     pub fn group(&self) -> usize {
         self.n_qo / self.n_kv
     }
@@ -61,6 +66,7 @@ pub struct CorrectionDecision {
 }
 
 impl CorrectionDecision {
+    /// Whether any kv head needs correction.
     pub fn any(&self) -> bool {
         !self.corrected_heads.is_empty()
     }

@@ -18,18 +18,28 @@ use crate::util::rng::Rng;
 /// KV compression methods compared in the paper.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
+    /// Dense attention over the full KV cache (no sparsity).
     Full,
+    /// Quest: query-aware page selection, all pages resident on GPU.
     Quest,
+    /// ArkVale: page selection with CPU offload and page-cache recall.
     ArkVale,
+    /// ShadowKV: low-rank keys on GPU, values recalled from CPU.
     ShadowKv,
+    /// InfiniGen: speculative per-token prefetch from CPU.
     InfiniGen,
+    /// RaaS: retrieval-attention with persistent top-k reuse.
     RaaS,
+    /// RazorAttention: retrieval heads dense, other heads windowed.
     Razor,
+    /// StreamingLLM: attention sinks plus a sliding window.
     Streaming,
+    /// FreeKV: speculative recall with correction (this paper).
     FreeKv,
 }
 
 impl Method {
+    /// Lower-case method name (CLI / table rows).
     pub fn name(&self) -> &'static str {
         match self {
             Method::Full => "full",
@@ -44,6 +54,7 @@ impl Method {
         }
     }
 
+    /// Parse a method name as produced by [`Method::name`].
     pub fn parse(s: &str) -> Option<Method> {
         Some(match s {
             "full" => Method::Full,
@@ -59,6 +70,7 @@ impl Method {
         })
     }
 
+    /// All methods, in table order.
     pub fn all() -> [Method; 9] {
         [
             Method::Full,
@@ -100,7 +112,9 @@ pub struct SimKnobs {
     /// FreeKV ablation switches (Fig. 9): hybrid layouts, double-buffered
     /// streamed recall, speculative retrieval.
     pub hybrid_layout: bool,
+    /// Double-buffered streamed recall (Fig. 9 ablation).
     pub double_buffer: bool,
+    /// Speculative retrieval with the stale query (Fig. 9 ablation).
     pub speculative: bool,
     /// Dispatch speculative recall on the copy stream concurrently with
     /// compute (the real engine's `FreeKvParams::overlap`); when false
@@ -163,26 +177,36 @@ impl SimKnobs {
 /// Aggregate result of simulating one request.
 #[derive(Debug, Clone, Default)]
 pub struct RunRecord {
+    /// Method name (see [`Method::name`]).
     pub method: String,
+    /// Modeled prefill wall time, seconds.
     pub prefill_secs: f64,
+    /// Modeled decode wall time, seconds.
     pub decode_secs: f64,
+    /// Decode steps simulated.
     pub steps: usize,
     /// busy time by class, for the Fig. 1 (right) breakdown.
     pub compute_busy: f64,
+    /// Busy seconds scoring page selection.
     pub selection_busy: f64,
+    /// Busy seconds recalling pages from CPU.
     pub recall_busy: f64,
     /// recall/selection time NOT hidden under compute (exposed).
     pub recall_exposed: f64,
+    /// Selection time NOT hidden under compute (exposed).
     pub selection_exposed: f64,
     /// peak GPU bytes for KV-related state.
     pub gpu_kv_bytes: f64,
+    /// Whether the modeled run exceeded GPU capacity.
     pub oom: bool,
 }
 
 impl RunRecord {
+    /// Prefill + decode wall time, seconds.
     pub fn total(&self) -> f64 {
         self.prefill_secs + self.decode_secs
     }
+    /// Mean decode seconds per generated token.
     pub fn per_token(&self) -> f64 {
         if self.steps == 0 { 0.0 } else { self.decode_secs / self.steps as f64 }
     }

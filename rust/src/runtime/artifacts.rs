@@ -10,9 +10,12 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::ModelConfig;
 use crate::util::json::{usize_array, Json};
 
+/// Element type of a manifest tensor argument.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -29,8 +32,11 @@ impl DType {
 /// One argument of an artifact's entry computation.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
+    /// Argument name (matches the python export).
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Tensor shape, row-major.
     pub shape: Vec<usize>,
     /// true if this argument is a model weight (bound once at load time,
     /// per layer for layer artifacts).
@@ -38,6 +44,7 @@ pub struct ArgSpec {
 }
 
 impl ArgSpec {
+    /// Number of elements (product of the shape).
     pub fn elem_count(&self) -> usize {
         self.shape.iter().product()
     }
@@ -46,17 +53,24 @@ impl ArgSpec {
 /// One AOT-compiled HLO artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// Model config this artifact was compiled for.
     pub config: String,
+    /// Artifact kind (e.g. `decode_step`, `prefill`).
     pub kind: String,
+    /// HLO-text file, relative to the manifest directory.
     pub file: String,
+    /// Entry-computation arguments, in call order.
     pub args: Vec<ArgSpec>,
 }
 
 impl ArtifactSpec {
+    /// Arguments supplied per call (non-weight).
     pub fn data_args(&self) -> impl Iterator<Item = &ArgSpec> {
         self.args.iter().filter(|a| !a.weight)
     }
+    /// Arguments bound once at load time (weights).
     pub fn weight_args(&self) -> impl Iterator<Item = &ArgSpec> {
         self.args.iter().filter(|a| a.weight)
     }
@@ -65,27 +79,40 @@ impl ArtifactSpec {
 /// Entry in the flat weights blob.
 #[derive(Debug, Clone)]
 pub struct WeightTensor {
+    /// Tensor name (matches the artifact's weight args).
     pub name: String,
+    /// Tensor shape, row-major.
     pub shape: Vec<usize>,
     /// offset into the blob, in f32 elements.
     pub offset: usize,
+    /// Element count.
     pub size: usize,
 }
 
+/// Weight blob for one model config: a flat f32 file plus the tensors
+/// packed into it.
 #[derive(Debug, Clone)]
 pub struct WeightsSpec {
+    /// Blob file, relative to the manifest directory.
     pub file: String,
+    /// Tensors packed into the blob, in offset order.
     pub tensors: Vec<WeightTensor>,
 }
 
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from (artifact files are relative to it).
     pub dir: PathBuf,
+    /// Model configs by name.
     pub configs: HashMap<String, ModelConfig>,
+    /// Compiled artifacts by name.
     pub artifacts: HashMap<String, ArtifactSpec>,
+    /// Weight blobs by config name.
     pub weights: HashMap<String, WeightsSpec>,
+    /// Available decode batch-size buckets, ascending.
     pub decode_batch_buckets: Vec<usize>,
+    /// Available prefill token-count buckets, ascending.
     pub prefill_buckets: Vec<usize>,
     /// Host-side cache of large blob files (the weights), keyed by
     /// manifest-relative path and **shared across clones**: the engine
@@ -99,6 +126,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Parse `manifest.json` under `dir` into a typed manifest.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -195,10 +223,12 @@ impl Manifest {
         Ok(blob)
     }
 
+    /// Look up a model config by name.
     pub fn config(&self, name: &str) -> Result<&ModelConfig> {
         self.configs.get(name).ok_or_else(|| anyhow!("config `{}` not in manifest", name))
     }
 
+    /// Look up an artifact spec by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts.get(name).ok_or_else(|| anyhow!("artifact `{}` not in manifest", name))
     }

@@ -16,28 +16,34 @@ use super::artifacts::{ArtifactSpec, DType, Manifest};
 /// Host-side tensor passed to / returned from artifact executions.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
+    /// f32 data plus its shape.
     F32(Vec<f32>, Vec<usize>),
+    /// i32 data plus its shape.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl HostTensor {
+    /// Tensor shape, row-major.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
         }
     }
+    /// Borrow the f32 data (error if the tensor is i32).
     pub fn f32s(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32(d, _) => Ok(d),
             _ => Err(anyhow!("tensor is not f32")),
         }
     }
+    /// Borrow the i32 data (error if the tensor is f32).
     pub fn i32s(&self) -> Result<&[i32]> {
         match self {
             HostTensor::I32(d, _) => Ok(d),
             _ => Err(anyhow!("tensor is not i32")),
         }
     }
+    /// Take ownership of the f32 data (error if the tensor is i32).
     pub fn into_f32s(self) -> Result<Vec<f32>> {
         match self {
             HostTensor::F32(d, _) => Ok(d),
@@ -50,11 +56,17 @@ impl HostTensor {
 /// perf harness).
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
+    /// Artifact executions completed.
     pub executions: u64,
+    /// Wall-clock seconds spent inside executions.
     pub exec_secs: f64,
+    /// Bytes uploaded host-to-device.
     pub h2d_bytes: u64,
+    /// Bytes downloaded device-to-host.
     pub d2h_bytes: u64,
+    /// Wall-clock seconds spent compiling artifacts.
     pub compile_secs: f64,
+    /// Artifacts compiled (each compiles at most once).
     pub compiled: u64,
     /// Weight-blob device uploads (one per config whose weights became
     /// resident on this client). The executor pool aggregates this
@@ -67,14 +79,17 @@ pub struct RuntimeStats {
 /// buffers for every model config in the manifest.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The artifact manifest this runtime serves.
     pub manifest: Manifest,
     exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     /// per config: tensor name -> device buffer.
     weights: RefCell<HashMap<String, Rc<HashMap<String, xla::PjRtBuffer>>>>,
+    /// Cumulative execution/transfer/compile counters.
     pub stats: RefCell<RuntimeStats>,
 }
 
 impl Runtime {
+    /// Runtime over an already-loaded manifest, with a fresh PJRT CPU client.
     pub fn new(manifest: Manifest) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
         Ok(Runtime {
@@ -86,6 +101,7 @@ impl Runtime {
         })
     }
 
+    /// Load the manifest under `dir` and build a runtime for it.
     pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
         Runtime::new(Manifest::load(dir)?)
     }

@@ -126,6 +126,7 @@ pub enum ExecJob {
 }
 
 impl ExecJob {
+    /// Artifact name (config name for `Warmup`).
     pub fn name(&self) -> &str {
         match self {
             ExecJob::Embed { name, .. }
@@ -139,6 +140,7 @@ impl ExecJob {
         }
     }
 
+    /// Job kind as a static label (metrics / logs).
     pub fn kind(&self) -> &'static str {
         match self {
             ExecJob::Embed { .. } => "embed",
@@ -190,8 +192,11 @@ impl ExecJob {
 /// wall time — hidden latency unless the caller blocked in
 /// [`ExecTicket::wait`] for it.
 pub struct ExecDone {
+    /// Artifact outputs, in entry-computation order.
     pub outputs: Vec<HostTensor>,
+    /// The job's input tensors, returned for buffer reuse.
     pub inputs: Vec<HostTensor>,
+    /// Wall-clock seconds the worker spent on the job.
     pub busy_secs: f64,
     /// Index of the worker that executed the job.
     pub worker: usize,
@@ -449,6 +454,7 @@ impl ExecutorHandle {
         let _ = self.faults.set(plan);
     }
 
+    /// Number of workers in the pool.
     pub fn workers(&self) -> usize {
         self.links.len()
     }
@@ -759,6 +765,7 @@ impl ExecutorPool {
         self.inner().clone()
     }
 
+    /// Number of workers in the pool.
     pub fn workers(&self) -> usize {
         self.worker_count
     }
@@ -768,6 +775,7 @@ impl ExecutorPool {
         self.weight_workers
     }
 
+    /// Total jobs submitted over the pool's lifetime.
     pub fn jobs_submitted(&self) -> u64 {
         self.inner().jobs_submitted()
     }

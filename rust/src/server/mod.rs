@@ -112,8 +112,11 @@ pub enum HttpError {
 /// A parsed HTTP request.
 #[derive(Debug)]
 pub struct HttpRequest {
+    /// HTTP method (`GET`, `POST`, ...).
     pub method: String,
+    /// Request path including any query string.
     pub path: String,
+    /// Request body (empty if none).
     pub body: String,
     /// Client asked to reuse the connection (`Connection: keep-alive`).
     /// Opt-in only — without the explicit header the edge keeps its
@@ -348,6 +351,7 @@ fn client_gone(stream: &TcpStream, eof_means_gone: bool) -> bool {
 pub struct ServeOptions {
     /// Exit after this many completed generations (None = run forever).
     pub max_requests: Option<usize>,
+    /// Wire-parsing limits (line/header/body caps, read timeouts).
     pub limits: HttpLimits,
     /// Cap on generation-serving connection threads. `0` derives the
     /// cap from the submitter's admission depth (`2 * queue_cap`, min

@@ -12,9 +12,13 @@ use crate::kvcache::quant::KvDtype;
 
 use super::profiles::DeviceProfile;
 
+/// Roofline cost model: op durations from bytes moved and flops, for one
+/// device profile and model geometry.
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// Device bandwidth/compute profile.
     pub dev: DeviceProfile,
+    /// Model geometry the costs are derived from.
     pub model: ModelConfig,
     /// bytes per weight element on device (2 = fp16 paper setting).
     pub weight_elem_bytes: usize,
@@ -26,10 +30,12 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// Cost model with the paper's fp16 weights and an f32 KV pool.
     pub fn new(dev: DeviceProfile, model: ModelConfig) -> CostModel {
         CostModel { dev, model, weight_elem_bytes: 2, kv_dtype: KvDtype::F32 }
     }
 
+    /// Cost model with a quantized CPU-side KV pool codec.
     pub fn with_kv_dtype(dev: DeviceProfile, model: ModelConfig, dtype: KvDtype) -> CostModel {
         let mut c = CostModel::new(dev, model);
         c.kv_dtype = dtype;

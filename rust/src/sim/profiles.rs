@@ -32,6 +32,7 @@ impl LinkProfile {
 /// Full device profile.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceProfile {
+    /// Profile name (see [`DeviceProfile::by_name`]).
     pub name: String,
     /// peak dense matmul throughput, flop/s (fp16/bf16 tensor units).
     pub peak_flops: f64,
@@ -39,7 +40,9 @@ pub struct DeviceProfile {
     pub hbm_bw: f64,
     /// fixed kernel-launch overhead per device op.
     pub launch: f64,
+    /// Host-to-device link (recall direction).
     pub h2d: LinkProfile,
+    /// Device-to-host link (offload direction).
     pub d2h: LinkProfile,
     /// on-device layout-conversion throughput (HND->NHD transpose),
     /// bytes/s — bounded by HBM bandwidth, with some inefficiency.
@@ -101,6 +104,7 @@ impl DeviceProfile {
         }
     }
 
+    /// Look up a built-in profile by name (accepts short aliases).
     pub fn by_name(name: &str) -> Option<DeviceProfile> {
         match name {
             "a100-pcie4" | "a100" => Some(Self::a100_pcie4()),

@@ -7,6 +7,8 @@
 
 use std::collections::HashMap;
 
+/// A serialized execution resource in the modeled device (ops on the
+/// same stream run back-to-back; ops on different streams overlap).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Stream {
     /// GPU compute (attention, FFN, selection kernels).
@@ -31,14 +33,21 @@ pub enum Stream {
     Lane(u8),
 }
 
+/// Index of a scheduled event within its timeline.
 pub type EventId = usize;
 
+/// One scheduled op on a stream.
 #[derive(Debug, Clone)]
 pub struct Event {
+    /// Position in the timeline's event list.
     pub id: EventId,
+    /// Stream the op executed on.
     pub stream: Stream,
+    /// Human-readable op label (diagrams / debugging).
     pub label: String,
+    /// Start time, seconds since timeline start.
     pub start: f64,
+    /// End time, seconds since timeline start.
     pub end: f64,
 }
 
@@ -50,6 +59,7 @@ pub struct Timeline {
 }
 
 impl Timeline {
+    /// Empty timeline with all streams free at t=0.
     pub fn new() -> Timeline {
         Timeline::default()
     }
@@ -80,10 +90,12 @@ impl Timeline {
         self.events.iter().map(|e| e.end).fold(0.0, f64::max)
     }
 
+    /// End time of one event.
     pub fn end_of(&self, id: EventId) -> f64 {
         self.events[id].end
     }
 
+    /// All events, in scheduling order.
     pub fn events(&self) -> &[Event] {
         &self.events
     }

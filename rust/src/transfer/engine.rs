@@ -19,13 +19,18 @@ use crate::kvcache::gpu::{CompletedPage, SelectSlots};
 use crate::kvcache::pool::{LayerPool, Layout};
 use crate::util::fault::{FaultPlan, FaultSite};
 
+/// Cumulative transfer counters: chunk/byte/page counts per direction
+/// plus measured wall time, mirroring the paper's Fig. 5 accounting.
 #[derive(Debug, Default, Clone)]
 pub struct TransferCounters {
+    /// DMA transactions issued host-to-device.
     pub h2d_chunks: u64,
     /// Logical (decoded f32) bytes recalled — layout/selection driven,
     /// codec independent, comparable across dtypes.
     pub h2d_bytes: u64,
+    /// Recall invocations (one per page-head recalled).
     pub h2d_calls: u64,
+    /// DMA transactions issued device-to-host.
     pub d2h_chunks: u64,
     /// Logical (decoded f32) bytes offloaded.
     pub d2h_bytes: u64,
@@ -35,18 +40,25 @@ pub struct TransferCounters {
     /// Encoded wire bytes offloaded into the pool; equals `d2h_bytes`
     /// on an f32 pool (prefix hits move nothing).
     pub d2h_encoded_bytes: u64,
+    /// Bytes run through HND→NHD layout conversion on device.
     pub convert_bytes: u64,
+    /// (page, head) pairs recalled from the CPU pool.
     pub recalled_pages: u64,
+    /// (page, head) pairs offloaded into the CPU pool.
     pub offloaded_pages: u64,
     /// Offloads satisfied by aliasing a resident prefix-matched page:
     /// no bytes moved, no pool page written.
     pub prefix_hits: u64,
+    /// Measured wall time inside recall copies, seconds.
     pub real_h2d_secs: f64,
+    /// Measured wall time inside layout conversion, seconds.
     pub real_convert_secs: f64,
+    /// Measured wall time inside offload copies, seconds.
     pub real_d2h_secs: f64,
 }
 
 impl TransferCounters {
+    /// Element-wise sum of two counter sets (aggregating workers).
     pub fn merged(&self, o: &TransferCounters) -> TransferCounters {
         TransferCounters {
             h2d_chunks: self.h2d_chunks + o.h2d_chunks,
@@ -73,7 +85,9 @@ impl TransferCounters {
 pub struct TransferEngine {
     staging: [Vec<f32>; 2],
     cur: usize,
+    /// Alternate staging buffers between recalls (the DB ablation).
     pub double_buffer: bool,
+    /// Cumulative transfer counters for this engine.
     pub counters: TransferCounters,
     /// Fault injection (`SlowTransfer` stalls a recall). Set by the
     /// recall pipeline on its worker's engine; `None` in production.
@@ -81,6 +95,7 @@ pub struct TransferEngine {
 }
 
 impl TransferEngine {
+    /// Engine with staging sized for `p`-slot pages of `d`-dim heads.
     pub fn new(p: usize, d: usize, double_buffer: bool) -> TransferEngine {
         TransferEngine {
             staging: [vec![0.0; 2 * p * d], vec![0.0; 2 * p * d]],

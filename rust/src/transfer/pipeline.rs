@@ -77,6 +77,7 @@ pub struct RecallJob {
     /// Unique id of the sequence (not the user-facing request id, which
     /// callers may reuse across sequences).
     pub seq_uid: u64,
+    /// Layer the recall targets.
     pub layer: usize,
     /// Selected pages per kv head (already mask-filtered).
     pub selections: Vec<Vec<usize>>,
@@ -86,8 +87,11 @@ pub struct RecallJob {
 
 /// Completion of a [`RecallJob`]: the transfer half plus accounting.
 pub struct RecallDone {
+    /// Sequence uid the job belonged to.
     pub seq_uid: u64,
+    /// Layer the recall targeted.
     pub layer: usize,
+    /// The transfer half, handed back unconditionally.
     pub xfer: LayerXfer,
     /// Pages actually moved (page-cache misses).
     pub recalled_pages: usize,

@@ -5,14 +5,17 @@
 
 use std::collections::HashMap;
 
+/// Parsed command-line arguments.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     opts: HashMap<String, String>,
     flags: Vec<String>,
+    /// Arguments that are not `--` options, in order.
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// Parse an argument iterator (program name excluded).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -32,30 +35,37 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Value of `--key value` / `--key=value`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// String option with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// usize option with a default (default also on parse failure).
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// u64 option with a default (default also on parse failure).
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// f64 option with a default (default also on parse failure).
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether bare `--key` was given (no value attached).
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

@@ -50,6 +50,7 @@ pub enum FaultSite {
 }
 
 impl FaultSite {
+    /// Every fault site, in enum order.
     pub const ALL: [FaultSite; 7] = [
         FaultSite::ExecJobError,
         FaultSite::ExecWorkerDeath,
@@ -64,6 +65,7 @@ impl FaultSite {
         self as usize
     }
 
+    /// Kebab-case name used in chaos-test logs.
     pub fn name(self) -> &'static str {
         match self {
             FaultSite::ExecJobError => "exec-job-error",

@@ -13,16 +13,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (all numbers are f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
     /// Objects keep a side vector of keys in insertion order for stable
     /// serialization; lookups go through the map.
     Obj(JsonObj),
 }
 
+/// A JSON object preserving key insertion order.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct JsonObj {
     map: BTreeMap<String, Json>,
@@ -30,9 +36,11 @@ pub struct JsonObj {
 }
 
 impl JsonObj {
+    /// Empty object.
     pub fn new() -> Self {
         Self::default()
     }
+    /// Insert or replace a key (insertion order kept on replace).
     pub fn insert(&mut self, key: impl Into<String>, val: impl Into<Json>) {
         let key = key.into();
         if !self.map.contains_key(&key) {
@@ -40,18 +48,23 @@ impl JsonObj {
         }
         self.map.insert(key, val.into());
     }
+    /// Value for `key`, if present.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.map.get(key)
     }
+    /// Keys in insertion order.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.order.iter()
     }
+    /// Number of entries.
     pub fn len(&self) -> usize {
         self.map.len()
     }
+    /// Whether the object has no entries.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+    /// (key, value) pairs in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Json)> {
         self.order.iter().map(move |k| (k, &self.map[k]))
     }
@@ -101,7 +114,9 @@ impl From<JsonObj> for Json {
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset in the input where parsing failed.
     pub offset: usize,
 }
 
@@ -113,6 +128,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing characters are an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -126,36 +142,43 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number value truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The number value truncated to i64, if this is a `Num`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The array elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The object, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&JsonObj> {
         match self {
             Json::Obj(o) => Some(o),
@@ -170,6 +193,7 @@ impl Json {
             _ => &NULL,
         }
     }
+    /// Array element `i`; Null when out of range or not an array.
     pub fn idx(&self, i: usize) -> &Json {
         static NULL: Json = Json::Null;
         match self {
@@ -180,12 +204,14 @@ impl Json {
 
     // ---- serialization ---------------------------------------------------
 
+    /// Serialize with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(0));
         s
     }
 
+    /// Serialize without whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None);

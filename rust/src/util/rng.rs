@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// RNG seeded deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare: None }
     }
@@ -21,6 +22,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0xBF58476D1CE4E5B9))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -34,6 +36,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -61,6 +64,7 @@ impl Rng {
         r * c
     }
 
+    /// Normal draw with the given mean and standard deviation.
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         (self.normal() as f32) * std + mean
     }

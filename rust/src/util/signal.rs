@@ -17,7 +17,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 
+/// POSIX SIGINT (Ctrl-C).
 pub const SIGINT: i32 = 2;
+/// POSIX SIGTERM.
 pub const SIGTERM: i32 = 15;
 const SIG_BLOCK: i32 = 0;
 

@@ -4,17 +4,26 @@
 /// Summary statistics over a sample.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median.
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
 impl Summary {
+    /// Summarize a sample (all-zero summary for empty input).
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
             return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
@@ -52,12 +61,14 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Linear-interpolated percentile of an unsorted slice.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     percentile_sorted(&s, p)
 }
 
+/// Arithmetic mean (0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
 }
@@ -83,6 +94,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Histogram { buckets: vec![0; HIST_BUCKETS], count: 0, sum: 0.0, min: f64::MAX, max: 0.0 }
     }
@@ -99,6 +111,7 @@ impl Histogram {
         HIST_BASE * HIST_GROWTH.powi(i as i32)
     }
 
+    /// Record one observation.
     pub fn record(&mut self, v: f64) {
         self.buckets[Self::bucket_of(v)] += 1;
         self.count += 1;
@@ -107,14 +120,17 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Observations recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean of recorded observations (exact, from the running sum).
     pub fn mean(&self) -> f64 {
         if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
     }
 
+    /// Approximate percentile (bucket resolution, clamped to min/max).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -130,6 +146,7 @@ impl Histogram {
         self.max
     }
 
+    /// Fold another histogram's observations into this one.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;

@@ -1,14 +1,19 @@
 //! ASCII table rendering for eval drivers — prints the same rows the
 //! paper's tables/figures report, plus CSV export for plotting.
 
+/// A titled table of string cells.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Title rendered above the table (empty = none).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows; every row has `headers.len()` cells.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -17,11 +22,13 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as an ASCII box table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -63,6 +70,7 @@ impl Table {
         out
     }
 
+    /// Render as CSV (headers + rows, quoted where needed).
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| {
             if s.contains(',') || s.contains('"') {

@@ -17,14 +17,22 @@ pub enum Scenario {
     LongGeneration,
     /// chat-like mixture of both.
     Mixed,
+    /// every request opens with the same long system prompt plus a
+    /// short unique suffix — the shape the persistent prefix cache is
+    /// built for (`--prefix-cache=retained` turns re-prefills of the
+    /// shared head into retained-tier hits).
+    RepeatedPrompt,
 }
 
 impl Scenario {
+    /// Parse a `--scenario` CLI name (`long-input`, `long-gen`,
+    /// `mixed`, `repeated-prompt`/`repeated`/`shared-prefix`).
     pub fn parse(s: &str) -> Option<Scenario> {
         Some(match s {
             "long-input" | "longinput" => Scenario::LongInput,
             "long-gen" | "longgen" => Scenario::LongGeneration,
             "mixed" => Scenario::Mixed,
+            "repeated-prompt" | "repeated" | "shared-prefix" => Scenario::RepeatedPrompt,
             _ => return None,
         })
     }
@@ -33,13 +41,17 @@ impl Scenario {
 /// Workload generator configuration.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// Request-shape distribution to draw from.
     pub scenario: Scenario,
     /// mean arrival rate (requests/second) of the Poisson process.
     pub rate: f64,
+    /// Total requests to generate.
     pub n_requests: usize,
     /// bounds imposed by the compiled model (prefill buckets / context).
     pub max_prompt: usize,
+    /// Cap on any request's `max_new_tokens`.
     pub max_output: usize,
+    /// Seed for arrivals, shapes, and prompt bytes (fully deterministic).
     pub seed: u64,
 }
 
@@ -59,7 +71,9 @@ impl Default for WorkloadSpec {
 /// A generated request with its arrival offset (seconds from start).
 #[derive(Debug, Clone)]
 pub struct TimedRequest {
+    /// Arrival offset in seconds from the start of the replay.
     pub at: f64,
+    /// The request to submit at that instant.
     pub request: Request,
 }
 
@@ -74,6 +88,11 @@ fn shape(rng: &mut Rng, scenario: Scenario, max_prompt: usize, max_output: usize
             } else {
                 (32, 128.min(max_prompt), max_output / 2, max_output)
             }
+        }
+        // shared head (3/4 of max_prompt) + a short unique tail
+        Scenario::RepeatedPrompt => {
+            let h = repeated_head_len(max_prompt);
+            ((h + 1).min(max_prompt), (h + 33).min(max_prompt), 8, max_output / 4)
         }
     };
     let p = p_lo + rng.below((p_hi - p_lo).max(1));
@@ -98,15 +117,38 @@ fn synth_prompt(rng: &mut Rng, tokens: usize) -> Vec<i32> {
     p
 }
 
+/// Tokens of the shared head every [`Scenario::RepeatedPrompt`] request
+/// opens with (the rest of the prompt is a per-request unique tail).
+fn repeated_head_len(max_prompt: usize) -> usize {
+    (max_prompt * 3 / 4).max(2)
+}
+
 /// Generate the full timed workload (Poisson arrivals).
 pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
     let mut rng = Rng::new(spec.seed);
+    // RepeatedPrompt: draw the shared head once from the spec seed, so
+    // every request (and every rerun of the same spec) opens with the
+    // exact same token block and keys the same prefix pages.
+    let shared_head = if spec.scenario == Scenario::RepeatedPrompt {
+        synth_prompt(&mut rng.fork(u64::MAX), repeated_head_len(spec.max_prompt))
+    } else {
+        Vec::new()
+    };
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(spec.n_requests);
     for i in 0..spec.n_requests {
         t += rng.exp(spec.rate.max(1e-9));
         let (p_len, o_len) = shape(&mut rng, spec.scenario, spec.max_prompt, spec.max_output);
-        let prompt = synth_prompt(&mut rng.fork(i as u64), p_len);
+        let prompt = if spec.scenario == Scenario::RepeatedPrompt {
+            let mut p = shared_head.clone();
+            let mut tail = rng.fork(i as u64);
+            while p.len() < p_len {
+                p.push((b'a' + tail.below(26) as u8) as i32);
+            }
+            p
+        } else {
+            synth_prompt(&mut rng.fork(i as u64), p_len)
+        };
         out.push(TimedRequest {
             at: t,
             request: Request {
@@ -194,13 +236,20 @@ pub fn run_loadtest<B: Backend>(
     })
 }
 
+/// Terminal accounting of one [`run_loadtest`] replay.
 #[derive(Debug, Clone)]
 pub struct LoadtestReport {
+    /// Real elapsed wall time of the replay.
     pub wall_secs: f64,
+    /// Scheduler ticks executed.
     pub ticks: u64,
+    /// Requests that finished normally.
     pub completed: usize,
+    /// Requests that reached a failure outcome.
     pub failed: usize,
+    /// Peak requests simultaneously queued or running.
     pub max_inflight: usize,
+    /// Total generated tokens across all requests.
     pub tokens_out: u64,
     /// Ticks that ended in an engine panic or engine-global error
     /// (non-zero only under `--chaos-seed` fault injection).
@@ -224,7 +273,12 @@ mod tests {
 
     #[test]
     fn shapes_respect_scenario_bounds() {
-        for scenario in [Scenario::LongInput, Scenario::LongGeneration, Scenario::Mixed] {
+        for scenario in [
+            Scenario::LongInput,
+            Scenario::LongGeneration,
+            Scenario::Mixed,
+            Scenario::RepeatedPrompt,
+        ] {
             let spec = WorkloadSpec { scenario, n_requests: 60, ..Default::default() };
             for tr in generate(&spec) {
                 assert!(tr.request.prompt.len() <= spec.max_prompt);
@@ -274,5 +328,63 @@ mod tests {
         for tr in w {
             assert!(tr.request.prompt.iter().all(|&t| (0..260).contains(&t)));
         }
+    }
+
+    #[test]
+    fn repeated_prompt_requests_share_a_head_with_unique_tails() {
+        let spec = WorkloadSpec {
+            scenario: Scenario::RepeatedPrompt,
+            n_requests: 8,
+            max_prompt: 128,
+            ..Default::default()
+        };
+        let w = generate(&spec);
+        let head = repeated_head_len(spec.max_prompt);
+        let first = &w[0].request.prompt;
+        for tr in &w {
+            assert!(tr.request.prompt.len() >= head);
+            assert!(tr.request.prompt.len() <= spec.max_prompt);
+            assert_eq!(&tr.request.prompt[..head], &first[..head], "shared head diverged");
+            assert!(tr.request.prompt.iter().all(|&t| (0..260).contains(&t)));
+        }
+        // tails are per-request unique (full prompts differ pairwise)
+        for (i, a) in w.iter().enumerate() {
+            for b in w.iter().skip(i + 1) {
+                assert_ne!(a.request.prompt, b.request.prompt, "two identical prompts");
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_prompt_loadtest_hits_the_retained_tier() {
+        use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+        use crate::coordinator::sim_backend::SimBackend;
+        use crate::kvcache::PrefixCacheMode;
+        // Arrivals far apart relative to generation length, so earlier
+        // requests fully retire (dropping their pages to the retained
+        // tier) before later ones prefill — the hits below can only be
+        // retained-tier revivals, not live-page sharing.
+        let spec = WorkloadSpec {
+            scenario: Scenario::RepeatedPrompt,
+            rate: 0.002,
+            n_requests: 4,
+            max_prompt: 64,
+            max_output: 4,
+            ..Default::default()
+        };
+        let w = generate(&spec);
+        let backend = SimBackend::tiny_with_pool_mode(0, PrefixCacheMode::Retained, 0);
+        let alloc = backend.allocator();
+        let mut sched = Scheduler::new(backend, SchedulerConfig::default());
+        let report = run_loadtest(&mut sched, w, 1.0).unwrap();
+        assert_eq!(report.completed, 4);
+        assert_eq!(report.failed, 0);
+        let kv = alloc.stats();
+        assert!(kv.retained_hits > 0, "no retained-tier prefix hits: {:?}", kv);
+        assert!(kv.prefix_hits >= kv.retained_hits);
+        assert!(kv.bytes_saved > 0);
+        let stats = sched.engine.stats();
+        assert!(stats.prefill_tokens_saved > 0, "no prefill tokens saved");
+        assert_eq!(stats.kv_retained_hits, kv.retained_hits);
     }
 }

@@ -12,7 +12,7 @@
 
 use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig, StepEvent};
 use freekv::coordinator::sim_backend::{sim_config, SimBackend};
-use freekv::kvcache::{KvDtype, LayerPool, Layout, PageAllocator, RequestKv};
+use freekv::kvcache::{KvDtype, LayerPool, Layout, PageAllocator, PrefixCacheMode, RequestKv};
 use freekv::prop_assert;
 use freekv::transfer::TransferEngine;
 use freekv::util::proptest::check;
@@ -339,6 +339,150 @@ fn prefix_sharing_saves_pages_and_keeps_tokens_identical() {
         "sharing should at least halve peak pool pages ({} vs {})",
         peak_on,
         peak_off
+    );
+}
+
+/// Drive the shared-prompt workload one request at a time: each fully
+/// retires (its `Sequence` drops) before the next is submitted, so any
+/// prefix hit can only come from the retained tier — there are never
+/// live pages to alias. Returns (texts, final stats, the allocator).
+fn run_serialized_prompt_mode(
+    n: u64,
+    mode: PrefixCacheMode,
+    pool_pages: u64,
+    dtype: KvDtype,
+) -> (Vec<String>, freekv::kvcache::KvPoolStats, std::sync::Arc<PageAllocator>) {
+    let backend = SimBackend::tiny_with_pool_mode_dtype(pool_pages, mode, 0, dtype);
+    let alloc = backend.allocator();
+    let cfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
+    let mut s = Scheduler::new(backend, cfg);
+    let prompt = "the shared prompt prefix every tenant sends ".repeat(3);
+    for i in 1..=n {
+        s.submit(Request::from_text(i, &prompt, 24));
+        drain_scheduler(&mut s);
+    }
+    let texts: Vec<String> = (1..=n).map(|i| s.take_completion(i).unwrap().text).collect();
+    (texts, alloc.stats(), alloc)
+}
+
+fn drain_scheduler(s: &mut Scheduler<SimBackend>) {
+    while s.pending() > 0 {
+        for ev in s.tick().expect("sim tick") {
+            if let StepEvent::Failed { id, error } = ev {
+                panic!("request {} failed: {}", id, error);
+            }
+        }
+    }
+}
+
+#[test]
+fn retained_tier_serves_fully_retired_prefixes_bit_identically() {
+    // Every request runs alone — by the time request i+1 arrives,
+    // request i's pages have zero live references. A resident-only
+    // cache therefore can never hit, while the retained tier adopts the
+    // whole prompt; either way the token streams must be identical to
+    // sharing off (adoption only skips pool writes, never GPU compute).
+    // Runs per codec: retained pages are revived through the same codec
+    // that wrote them, so quantized reruns stay deterministic too.
+    for dtype in KvDtype::all() {
+        let n = 4u64;
+        let (texts_off, st_off, _) = run_serialized_prompt_mode(n, PrefixCacheMode::Off, 0, dtype);
+        let (texts_res, st_res, _) =
+            run_serialized_prompt_mode(n, PrefixCacheMode::Resident, 0, dtype);
+        let (texts_ret, st_ret, _) =
+            run_serialized_prompt_mode(n, PrefixCacheMode::Retained, 0, dtype);
+        assert_eq!(texts_off, texts_res, "{}: resident sharing changed tokens", dtype);
+        assert_eq!(texts_off, texts_ret, "{}: retained adoption changed tokens", dtype);
+        assert_eq!(st_off.prefix_hits, 0);
+        assert_eq!(
+            st_res.prefix_hits, 0,
+            "{}: resident-only sharing cannot hit across retirements",
+            dtype
+        );
+        assert!(st_ret.retained_hits > 0, "{}: no retained-tier hits", dtype);
+        assert_eq!(
+            st_ret.prefix_hits, st_ret.retained_hits,
+            "{}: every hit here must be a retained revival",
+            dtype
+        );
+        assert!(st_ret.bytes_saved > 0);
+        assert!(st_ret.pages_retained > 0, "{}: last request's pages stay cached", dtype);
+    }
+}
+
+#[test]
+fn retained_gauges_return_to_baseline_after_cache_drop() {
+    let (_, st, alloc) = run_serialized_prompt_mode(3, PrefixCacheMode::Retained, 0, KvDtype::F32);
+    // every request has retired: the only pages left are the cache's
+    assert!(st.pages_retained > 0);
+    assert_eq!(st.pages_used, st.pages_retained, "live pages after all requests retired");
+    let dropped = alloc.drop_retained();
+    assert_eq!(dropped, st.pages_retained);
+    let after = alloc.stats();
+    assert_eq!(after.pages_retained, 0);
+    assert_eq!(after.pages_used, 0, "dropping the cache must empty the pool");
+    assert_eq!(after.pages_shared, 0);
+    assert_eq!(after.retained_evictions, st.retained_evictions + dropped);
+    // counters (not gauges) survive the drop untouched
+    assert_eq!(after.retained_hits, st.retained_hits);
+    assert_eq!(after.bytes_saved, st.bytes_saved);
+}
+
+#[test]
+fn admission_treats_retained_pages_as_reclaimable_capacity() {
+    // Wait => progress liveness under retention: request A retires and
+    // its retained pages fill most of a bounded pool; request B (a
+    // different prompt, so nothing to adopt) must still be admitted —
+    // the ledger counts retained pages as reclaimable — and complete by
+    // evicting A's cache under pressure, never wedging in Wait.
+    use freekv::kvcache::alloc::worst_case_pages;
+    let cfg = sim_config();
+    let prompt_a = "the shared prompt prefix every tenant sends ".repeat(3);
+    let prompt_b = "an entirely different prompt from the second tenant ".repeat(3);
+    // capacity ~ one request's worst case (with decode slack): far less
+    // than A's cache plus B's working set together
+    let capacity = worst_case_pages(&cfg, prompt_a.len().max(prompt_b.len()) + 40);
+    let backend = SimBackend::tiny_with_pool_mode(capacity, PrefixCacheMode::Retained, 0);
+    let alloc = backend.allocator();
+    let scfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
+    let mut s = Scheduler::new(backend, scfg);
+    s.submit(Request::from_text(1, &prompt_a, 24));
+    drain_scheduler(&mut s);
+    assert!(s.take_completion(1).is_some());
+    let st = alloc.stats();
+    assert!(st.pages_retained > 0, "A's pages must enter the retained tier");
+    s.submit(Request::from_text(2, &prompt_b, 24));
+    drain_scheduler(&mut s);
+    assert!(s.take_completion(2).is_some(), "B must complete, not wait forever");
+    let st2 = alloc.stats();
+    assert!(
+        st2.retained_evictions > 0,
+        "B's pages must come from evicting A's retained pages (capacity {})",
+        capacity
+    );
+    assert_eq!(st2.retained_hits, 0, "different prompts must not alias");
+}
+
+#[test]
+fn retention_cap_bounds_the_cache_through_the_scheduler() {
+    let cfg = sim_config();
+    let cap = cfg.n_layers as u64 * 2;
+    let backend = SimBackend::tiny_with_pool_mode(0, PrefixCacheMode::Retained, cap);
+    let alloc = backend.allocator();
+    let scfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
+    let mut s = Scheduler::new(backend, scfg);
+    let prompt = "the shared prompt prefix every tenant sends ".repeat(3);
+    for i in 1..=3u64 {
+        s.submit(Request::from_text(i, &prompt, 24));
+        drain_scheduler(&mut s);
+    }
+    let st = alloc.stats();
+    assert!(st.pages_retained > 0);
+    assert!(
+        st.pages_retained <= cap,
+        "retained tier {} exceeds --kv-retain-pages {}",
+        st.pages_retained,
+        cap
     );
 }
 

@@ -555,7 +555,11 @@ fn shared_pool_capacity_and_prefix_cache_keep_outputs_identical() {
             overlap: true,
             exec_workers: 2,
             kv_pool_pages,
-            prefix_cache,
+            prefix_cache: if prefix_cache {
+                freekv::kvcache::PrefixCacheMode::Resident
+            } else {
+                freekv::kvcache::PrefixCacheMode::Off
+            },
             ..Default::default()
         };
         let mut eng = Engine::new(rt, "tiny", params).expect("engine constructs");
