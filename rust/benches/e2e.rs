@@ -20,11 +20,12 @@ use freekv::util::json::{Json, JsonObj};
 fn real_lane_decode(
     batch: usize,
     max_lanes: usize,
+    exec_workers: usize,
     steps: usize,
 ) -> Option<(f64, Vec<Vec<i32>>, freekv::coordinator::engine::EngineStats)> {
     let rt = Runtime::load("artifacts").ok()?;
     let params =
-        FreeKvParams { tau: 0.9, overlap: true, exec_workers: 2, max_lanes, ..Default::default() };
+        FreeKvParams { tau: 0.9, overlap: true, exec_workers, max_lanes, ..Default::default() };
     let mut eng = Engine::new(rt, "tiny", params).ok()?;
     let prompt: Vec<i32> = (0..480).map(|i| (i * 17 % 250) as i32).collect();
     let mut seqs: Vec<Sequence> = (0..batch)
@@ -395,6 +396,184 @@ fn main() {
     }
 
     println!();
+    println!("=== bench e2e: allocator lock contention (sharded vs global) ===");
+    {
+        use freekv::kvcache::{
+            KvDtype, KvLockMode, LayerPool, Layout, PageAllocator, PrefixCacheMode,
+        };
+
+        const L: usize = 8; // layers = shard count under --kv-lock=sharded
+        const M: usize = 2;
+        const P: usize = 16;
+        const D: usize = 16;
+        const PAGES: usize = 16;
+        const RECALL_THREADS: usize = 4;
+        const RECALL_OPS: usize = 4000;
+        const WRITER_ROUNDS: usize = 8;
+        const WRITER_PAGES_PER_ROUND: usize = 256;
+
+        let key = |page: usize| 0xC0FF_EE00u128 + page as u128;
+        let elems = P * M * D;
+        let k: Vec<f32> = (0..elems).map(|i| (i % 251) as f32 * 0.125 - 8.0).collect();
+        let v: Vec<f32> = (0..elems).map(|i| (i % 239) as f32 * 0.25 - 16.0).collect();
+
+        // One engine-pattern writer (append + drop churn on its own
+        // private pages) plus N recall workers gather-reading adopted
+        // shared prefix pages on disjoint layer stripes — the decode-loop
+        // shape the shard split targets. Returns total ops, wall seconds,
+        // and the lock wait-count/wait-time deltas across the run.
+        let run = |lock: KvLockMode, recall_threads: usize, with_writer: bool| {
+            let alloc = PageAllocator::with_mode_lock(
+                L,
+                M,
+                P,
+                D,
+                0,
+                PrefixCacheMode::Resident,
+                0,
+                0xBE9C,
+                KvDtype::F32,
+                lock,
+            );
+            // Seed the shared prefix pages the recall workers adopt; the
+            // seeder views stay alive through the run so the Resident
+            // registrations survive.
+            let mut seed: Vec<LayerPool> = (0..L)
+                .map(|l| LayerPool::with_alloc(Layout::Hnd, PAGES, M, P, D, alloc.clone(), l))
+                .collect();
+            for pool in seed.iter_mut() {
+                for page in 0..PAGES {
+                    pool.write_page_keyed(page, &k, &v, Some(key(page)));
+                }
+            }
+            let before = alloc.stats();
+            let t0 = Instant::now();
+            let ops: u64 = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for t in 0..recall_threads {
+                    let alloc = alloc.clone();
+                    handles.push(s.spawn(move || {
+                        let mut pools: Vec<LayerPool> = (0..L)
+                            .filter(|l| l % recall_threads == t)
+                            .map(|l| {
+                                LayerPool::with_alloc(Layout::Hnd, PAGES, M, P, D, alloc.clone(), l)
+                            })
+                            .collect();
+                        for p in pools.iter_mut() {
+                            for page in 0..PAGES {
+                                assert!(p.try_adopt(page, key(page)));
+                            }
+                        }
+                        let mut dst = vec![0.0f32; 2 * P * D];
+                        let mut ops = 0u64;
+                        for i in 0..RECALL_OPS {
+                            let n_pools = pools.len();
+                            let pool = &mut pools[i % n_pools];
+                            let page = i % PAGES;
+                            let chunks = pool.recall_chunks(page, i % M);
+                            pool.copy_chunks(page, &chunks, &mut dst);
+                            ops += 1;
+                            if i % 64 == 63 {
+                                // release/re-adopt churn on the shared slot
+                                assert!(pool.try_adopt(page, key(page)));
+                                ops += 1;
+                            }
+                        }
+                        ops
+                    }));
+                }
+                if with_writer {
+                    let alloc = alloc.clone();
+                    let (kr, vr) = (&k, &v);
+                    handles.push(s.spawn(move || {
+                        let mut ops = 0u64;
+                        for _ in 0..WRITER_ROUNDS {
+                            let mut pools: Vec<LayerPool> = (0..L)
+                                .map(|l| {
+                                    LayerPool::with_alloc(
+                                        Layout::Hnd,
+                                        PAGES,
+                                        M,
+                                        P,
+                                        D,
+                                        alloc.clone(),
+                                        l,
+                                    )
+                                })
+                                .collect();
+                            for i in 0..WRITER_PAGES_PER_ROUND {
+                                pools[i % L].write_page((i / L) % PAGES, kr, vr);
+                                ops += 1;
+                            }
+                            // dropping the views frees the round's private
+                            // pages — the release half of the lifecycle
+                        }
+                        ops
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let after = alloc.stats();
+            drop(seed);
+            (
+                ops,
+                wall,
+                after.shard_lock_waits - before.shard_lock_waits,
+                after.shard_lock_wait_secs - before.shard_lock_wait_secs,
+                after.meta_lock_waits - before.meta_lock_waits,
+                after.meta_lock_wait_secs - before.meta_lock_wait_secs,
+            )
+        };
+
+        let mut section = JsonObj::new();
+        section.insert("layers", L);
+        section.insert("recall_threads", RECALL_THREADS);
+        let mut sharded_wait = f64::NAN;
+        let mut global_wait = f64::NAN;
+        for lock in KvLockMode::all() {
+            let (s_ops, s_wall, ..) = run(lock, 1, false);
+            let single_ops_s = s_ops as f64 / s_wall;
+            let (c_ops, c_wall, sw, sws, mw, mws) = run(lock, RECALL_THREADS, true);
+            let total_wait = sws + mws;
+            let contended_ops_s = c_ops as f64 / c_wall;
+            println!(
+                "{:<7} single {:>9.0} ops/s | contended {:>9.0} ops/s | shard waits {:>6} ({:>8.4} s) meta waits {:>6} ({:>8.4} s)",
+                lock.as_str(),
+                single_ops_s,
+                contended_ops_s,
+                sw,
+                sws,
+                mw,
+                mws,
+            );
+            let mut o = JsonObj::new();
+            o.insert("single_thread_ops_per_sec", single_ops_s);
+            o.insert("contended_ops_per_sec", contended_ops_s);
+            o.insert("contended_wall_secs", c_wall);
+            o.insert("shard_lock_waits", sw as usize);
+            o.insert("shard_lock_wait_secs", sws);
+            o.insert("meta_lock_waits", mw as usize);
+            o.insert("meta_lock_wait_secs", mws);
+            o.insert("total_lock_wait_secs", total_wait);
+            section.insert(lock.as_str(), o);
+            match lock {
+                KvLockMode::Sharded => sharded_wait = total_wait,
+                KvLockMode::Global => global_wait = total_wait,
+            }
+        }
+        if global_wait > 0.0 {
+            let ratio = sharded_wait / global_wait;
+            println!("sharded total lock wait = {:.1}% of global", ratio * 100.0);
+            section.insert("sharded_wait_over_global", ratio);
+        } else {
+            println!("global run saw no lock waits — wait ratio not meaningful");
+            section.insert("sharded_wait_over_global", Json::Null);
+        }
+        report.insert("alloc_contention", section);
+    }
+
+    println!();
     println!("=== bench e2e: real tiny-model engine throughput ===");
     if Runtime::load("artifacts").is_err() {
         println!("artifacts/ missing — run `make artifacts` (skipping real bench)");
@@ -469,8 +648,9 @@ fn main() {
         let steps = 32usize;
         let mut rows = Vec::new();
         let mut outputs_identical = true;
+        let mut perf: Vec<(usize, usize, f64)> = Vec::new();
         for (batch, lanes) in [(4usize, 1usize), (8, 2), (16, 4)] {
-            match real_lane_decode(batch, lanes, steps) {
+            match real_lane_decode(batch, lanes, 2, steps) {
                 Some((ms, toks, st)) => {
                     let tok_s = batch as f64 * 1e3 / ms;
                     println!(
@@ -481,7 +661,7 @@ fn main() {
                     // tokens vs single-lane dispatch of the same batch
                     // (the lanes==1 row IS its own reference)
                     if lanes > 1 {
-                        match real_lane_decode(batch, 1, steps) {
+                        match real_lane_decode(batch, 1, 2, steps) {
                             Some((_, ref_toks, _)) => outputs_identical &= ref_toks == toks,
                             None => outputs_identical = false,
                         }
@@ -494,16 +674,42 @@ fn main() {
                     o.insert("lane_sets", st.lane_sets as usize);
                     o.insert("max_lanes_inflight", st.max_lanes_inflight as usize);
                     rows.push(Json::from(o));
+                    perf.push((batch, lanes, tok_s));
                 }
                 None => break,
             }
         }
         if rows.is_empty() {
             report.insert("real_lanes", Json::Null);
+            report.insert("real_lanes_workers", Json::Null);
         } else {
             println!("lane outputs identical to single-lane dispatch: {}", outputs_identical);
             report.insert("real_lanes", Json::Arr(rows));
             report.insert("real_lanes_outputs_identical", outputs_identical);
+            // exec-worker sweep at the best lane count: does the executor
+            // pool still pay for itself once lanes already overlap compute?
+            let (batch, lanes, _) = *perf
+                .iter()
+                .max_by(|a, b| a.2.total_cmp(&b.2))
+                .expect("perf rows mirror the lane rows");
+            let mut wrows = Vec::new();
+            for workers in [1usize, 2, 4] {
+                if let Some((ms, _, _)) = real_lane_decode(batch, lanes, workers, steps) {
+                    let tok_s = batch as f64 * 1e3 / ms;
+                    println!(
+                        "batch={:>2} max_lanes={} exec_workers={} {:>8.2} ms/step {:>8.1} tok/s",
+                        batch, lanes, workers, ms, tok_s,
+                    );
+                    let mut o = JsonObj::new();
+                    o.insert("batch", batch);
+                    o.insert("max_lanes", lanes);
+                    o.insert("exec_workers", workers);
+                    o.insert("ms_per_step", ms);
+                    o.insert("tok_s", tok_s);
+                    wrows.push(Json::from(o));
+                }
+            }
+            report.insert("real_lanes_workers", Json::Arr(wrows));
         }
     }
 

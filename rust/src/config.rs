@@ -259,6 +259,12 @@ pub struct FreeKvParams {
     /// gather; the GPU-resident sink + local window stay full
     /// precision. See `kvcache::quant`.
     pub kv_dtype: crate::kvcache::quant::KvDtype,
+    /// Lock layout of the shared KV page allocator (`--kv-lock`):
+    /// `sharded` (default) gives every layer slab its own lock so the
+    /// recall worker and the engine stop serializing on the allocator;
+    /// `global` funnels all layers through one lock — the contention
+    /// baseline, bit-identical by construction. See `kvcache::alloc`.
+    pub kv_lock: crate::kvcache::alloc::KvLockMode,
 }
 
 impl Default for FreeKvParams {
@@ -277,6 +283,7 @@ impl Default for FreeKvParams {
             kv_retain_pages: 0,
             chaos_seed: None,
             kv_dtype: crate::kvcache::quant::KvDtype::F32,
+            kv_lock: crate::kvcache::alloc::KvLockMode::Sharded,
         }
     }
 }

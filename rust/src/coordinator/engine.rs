@@ -132,6 +132,18 @@ pub struct EngineStats {
     /// Prompt tokens whose KV pool pages were adopted from a cached
     /// prefix instead of re-offloaded during prefill.
     pub prefill_tokens_saved: u64,
+    // ---- allocator lock-contention gauges (PR 9) ----
+    /// Allocator shard-lock acquisitions that found the lock held and
+    /// blocked (cumulative across all per-layer slab locks; the
+    /// engine-vs-recall-worker serialization the sharding removes).
+    pub kv_shard_lock_waits: u64,
+    /// Total seconds spent blocked on allocator shard locks.
+    pub kv_shard_lock_wait_secs: f64,
+    /// Allocator metadata-lock acquisitions that blocked (prefix
+    /// registry / retained tier / ledgers).
+    pub kv_meta_lock_waits: u64,
+    /// Total seconds spent blocked on the allocator metadata lock.
+    pub kv_meta_lock_wait_secs: f64,
     /// Decode steps executed.
     pub steps: u64,
     /// Decode steps that carried ≥ 2 sequences (continuous batching
@@ -189,6 +201,10 @@ impl EngineStats {
         self.kv_retained_hits = kv.retained_hits;
         self.kv_retained_evictions = kv.retained_evictions;
         self.kv_bytes_saved = kv.bytes_saved;
+        self.kv_shard_lock_waits = kv.shard_lock_waits;
+        self.kv_shard_lock_wait_secs = kv.shard_lock_wait_secs;
+        self.kv_meta_lock_waits = kv.meta_lock_waits;
+        self.kv_meta_lock_wait_secs = kv.meta_lock_wait_secs;
     }
 
     /// Fraction of recall wall time hidden behind compute (0 when every
@@ -641,12 +657,13 @@ impl Engine {
         } else {
             None
         };
-        let alloc = PageAllocator::for_model_mode(
+        let alloc = PageAllocator::for_model_lock(
             &cfg,
             params.kv_pool_pages as u64,
             params.prefix_cache,
             params.kv_retain_pages as u64,
             params.kv_dtype,
+            params.kv_lock,
         );
         let faults = params.chaos_seed.map(|seed| Arc::new(FaultPlan::chaos(seed)));
         if let (Some(pool), Some(plan)) = (&executor, &faults) {

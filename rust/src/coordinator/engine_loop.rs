@@ -640,7 +640,9 @@ fn handle_command<B: Backend>(
                 "{} kv_pages_total={} kv_pages_used={} kv_pages_shared={} \
                  kv_pages_reserved={} prefix_hits={} kv_cpu_bytes={} kv_gpu_bytes={} \
                  kv_pages_retained={} kv_retained_hits={} kv_retained_evictions={} \
-                 kv_bytes_saved={} prefill_tokens_saved={}",
+                 kv_bytes_saved={} prefill_tokens_saved={} \
+                 kv_shard_lock_waits={} kv_shard_lock_wait_secs={:.6} \
+                 kv_meta_lock_waits={} kv_meta_lock_wait_secs={:.6}",
                 sched.metrics.report(),
                 kv.pages_capacity,
                 kv.pages_used,
@@ -653,7 +655,11 @@ fn handle_command<B: Backend>(
                 kv.retained_hits,
                 kv.retained_evictions,
                 kv.bytes_saved,
-                sched.engine.stats().prefill_tokens_saved
+                sched.engine.stats().prefill_tokens_saved,
+                kv.shard_lock_waits,
+                kv.shard_lock_wait_secs,
+                kv.meta_lock_waits,
+                kv.meta_lock_wait_secs
             );
             let _ = reply.send(report);
             true

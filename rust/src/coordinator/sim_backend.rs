@@ -127,6 +127,21 @@ impl SimBackend {
         SimBackend::with_allocator(cfg, alloc)
     }
 
+    /// [`SimBackend::with_pool_mode`] with an explicit allocator lock
+    /// layout (`--kv-lock` on the sim serve/loadtest paths).
+    pub fn with_pool_opts(
+        cfg: ModelConfig,
+        pool_pages: u64,
+        mode: crate::kvcache::PrefixCacheMode,
+        retain_cap: u64,
+        dtype: crate::kvcache::quant::KvDtype,
+        lock: crate::kvcache::KvLockMode,
+    ) -> SimBackend {
+        let alloc =
+            PageAllocator::for_model_lock(&cfg, pool_pages, mode, retain_cap, dtype, lock);
+        SimBackend::with_allocator(cfg, alloc)
+    }
+
     /// Backend over an existing allocator. Chaos tests use this to keep
     /// one allocator (and its page gauges) alive across supervised
     /// engine restarts, exactly like the real engine sharing its pool.
@@ -188,6 +203,19 @@ impl SimBackend {
         dtype: crate::kvcache::quant::KvDtype,
     ) -> SimBackend {
         SimBackend::with_pool_mode(sim_config(), pool_pages, mode, retain_cap, dtype)
+    }
+
+    /// [`SimBackend::tiny_with_pool_mode_dtype`] with an explicit
+    /// allocator lock layout — the full knob set `--sim` serving
+    /// exposes.
+    pub fn tiny_with_pool_opts(
+        pool_pages: u64,
+        mode: crate::kvcache::PrefixCacheMode,
+        retain_cap: u64,
+        dtype: crate::kvcache::quant::KvDtype,
+        lock: crate::kvcache::KvLockMode,
+    ) -> SimBackend {
+        SimBackend::with_pool_opts(sim_config(), pool_pages, mode, retain_cap, dtype, lock)
     }
 
     /// The backing allocator (tests and benches inspect its gauges).
@@ -316,10 +344,18 @@ impl Backend for SimBackend {
                 panic!("injected engine panic (sim decode step)");
             }
             if plan.check(FaultSite::AllocPanic) {
-                // Panics while holding the allocator mutex: poisons the
-                // lock so recovery (`lock_unpoisoned` semantics in
-                // `PageAllocator::lock`) is exercised on a live pool.
-                self.alloc.panic_while_locked("sim decode step");
+                // Panics while holding an allocator lock, poisoning it
+                // exactly like a crashed critical section. Alternate
+                // between the metadata lock and a schedule-chosen slab
+                // shard so every lock class's deliberate recovery
+                // (`lock_timed` in `kvcache::alloc`) is exercised on a
+                // live pool.
+                let n = plan.injected() as usize;
+                if n % 2 == 0 {
+                    self.alloc.panic_while_locked("sim decode step");
+                } else {
+                    self.alloc.panic_while_locked_shard(n / 2, "sim decode step");
+                }
             }
             if plan.check(FaultSite::DecodeError) {
                 self.stats.faults_injected = plan.injected();

@@ -25,7 +25,7 @@ use std::sync::Arc;
 use crate::config::ModelConfig;
 use crate::transfer::TransferEngine;
 
-pub use self::alloc::{AdmitDecision, KvPoolStats, PageAllocator, PrefixCacheMode};
+pub use self::alloc::{AdmitDecision, KvLockMode, KvPoolStats, PageAllocator, PrefixCacheMode};
 pub use gpu::{CompletedPage, GpuLayerCache, SelectSlots};
 pub use pool::{Chunk, LayerPool, Layout};
 pub use quant::{KvDtype, PageCodec};

@@ -13,10 +13,26 @@
 //! identical prompt prefixes can alias one physical page across
 //! requests, and everything frees when the last view drops.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
 use crate::kvcache::alloc::{PageAllocator, Slot};
 use crate::kvcache::quant::{bf16_bits_to_f32, KvDtype, PageCodec};
+
+/// Bounded seqlock retries for [`LayerPool::copy_chunks`]: a reader
+/// holds a refcount on the slot it snapshots, so the only legal
+/// concurrent mutations are this request's own CoW/rewrite races —
+/// unbounded churn means the refcount protocol is already broken, and
+/// the loop panics instead of spinning forever.
+const SNAPSHOT_RETRIES: usize = 64;
+
+thread_local! {
+    /// Per-thread scratch for the copy-outside-critical-section paths:
+    /// staged f32 page + encoded payload + scale sidecar. Reused across
+    /// calls so the hot offload/gather loops allocate nothing.
+    static PAGE_SCRATCH: RefCell<(Vec<f32>, Vec<u8>, Vec<u16>)> =
+        RefCell::new((Vec::new(), Vec::new(), Vec::new()));
+}
 
 /// Memory organization of a page.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -222,44 +238,31 @@ impl LayerPool {
         let (p, m, d) = (self.p, self.n_kv, self.d);
         assert_eq!(k_nhd.len(), p * m * d);
         assert_eq!(v_nhd.len(), p * m * d);
-        // Stage the page in layout element order, then encode it into
-        // the slot (quantize-on-offload; a single memcpy-shaped pass
-        // for F32). The transpose here is the offload-time HND
+        // Stage the page in layout element order and encode it
+        // (quantize-on-offload) entirely *outside* the allocator
+        // locks; the critical section is then one memcpy of the
+        // encoded bytes. The transpose here is the offload-time HND
         // transpose the paper amortizes off the decode path.
-        let mut staged = vec![0.0f32; self.codec.page_elems()];
-        for tok in 0..p {
-            for head in 0..m {
-                let src = (tok * m + head) * d;
-                let ko = self.off(head, 0, tok, 0);
-                staged[ko..ko + d].copy_from_slice(&k_nhd[src..src + d]);
-                let vo = self.off(head, 1, tok, 0);
-                staged[vo..vo + d].copy_from_slice(&v_nhd[src..src + d]);
-            }
-        }
         let codec = self.codec;
         let layout = self.layout;
-        let slot = self.ensure_private_slot(page);
-        self.alloc.write_slot(self.layer, slot, |buf, scales| {
-            if codec.dtype == KvDtype::F32 {
-                codec.encode_run(&staged, buf, 0, 1.0);
-                return;
-            }
-            for head in 0..m {
-                for plane in 0..2 {
-                    let region = head * 2 + plane;
-                    let mut max_abs = 0.0f32;
-                    for_region_runs(codec, layout, head, plane, |e0, len| {
-                        for &x in &staged[e0..e0 + len] {
-                            max_abs = max_abs.max(x.abs());
-                        }
-                    });
-                    let (scale, bits) = codec.scale_for(max_abs);
-                    scales[region] = bits;
-                    for_region_runs(codec, layout, head, plane, |e0, len| {
-                        codec.encode_run(&staged[e0..e0 + len], buf, e0, scale);
-                    });
+        let slot = PAGE_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (staged, payload, scales) = &mut *scratch;
+            staged.clear();
+            staged.resize(codec.page_elems(), 0.0);
+            for tok in 0..p {
+                for head in 0..m {
+                    let src = (tok * m + head) * d;
+                    let ko = self.off(head, 0, tok, 0);
+                    staged[ko..ko + d].copy_from_slice(&k_nhd[src..src + d]);
+                    let vo = self.off(head, 1, tok, 0);
+                    staged[vo..vo + d].copy_from_slice(&v_nhd[src..src + d]);
                 }
             }
+            codec.encode_page(layout, staged, payload, scales);
+            let slot = self.ensure_private_slot(page);
+            self.alloc.write_slot_encoded(self.layer, slot, payload, scales);
+            slot
         });
         self.alloc.set_written(self.layer, slot);
         if let Some(h) = key {
@@ -321,32 +324,71 @@ impl LayerPool {
     }
 
     /// Stream `chunks` of `page` into `dst` back to back (the transfer
-    /// engine's "DMA" read). One lock acquisition per call; returns the
-    /// elements copied.
+    /// engine's "DMA" read). The encoded bytes are *snapshotted* under
+    /// the shard lock and decoded with no lock held; a seqlock-style
+    /// generation re-check detects a concurrent mutation of the slot
+    /// (a CoW `make_unique` recycling it, a rewrite) and retries the
+    /// snapshot. Returns the elements copied.
     pub fn copy_chunks(&self, page: usize, chunks: &[Chunk], dst: &mut [f32]) -> usize {
         let slot = self.table[page].expect("reading a page that was never offloaded");
         let codec = self.codec;
         let layout = self.layout;
-        self.alloc.read_slot(self.layer, slot, |buf, scales| {
-            let mut off = 0usize;
-            for c in chunks {
-                // Chunk offsets/lens are logical f32 elements. Decode in
-                // scale-homogeneous runs: a chunk may span regions (an
-                // HND head chunk covers its K and V regions).
-                let mut e = c.offset;
-                let end = c.offset + c.len;
-                while e < end {
-                    let run = codec.region_run_len(layout, e).min(end - e);
-                    let scale = match codec.dtype {
-                        KvDtype::F32 => 1.0,
-                        _ => bf16_bits_to_f32(scales[codec.region_of(layout, e)]),
-                    };
-                    codec.decode_run(buf, e, run, scale, &mut dst[off..off + run]);
-                    off += run;
-                    e += run;
+        // Byte-range plan, one range per chunk. INT4 packs two elements
+        // per byte, so a chunk's range snaps out to the enclosing byte
+        // (nibble-pair) boundary; `base` is the first element the
+        // snapshotted range covers, giving the relative element index
+        // used to address the snapshot (parity-preserving: `base` is
+        // even whenever it matters).
+        let mut plan = Vec::with_capacity(chunks.len()); // (base elem, snapshot byte start)
+        let mut ranges = Vec::with_capacity(chunks.len());
+        let mut snap_bytes = 0usize;
+        for c in chunks {
+            let base = if codec.dtype == KvDtype::Int4 { c.offset & !1 } else { c.offset };
+            let byte_off = codec.encoded_len(base);
+            let byte_len = codec.encoded_len(c.offset + c.len) - byte_off;
+            plan.push((base, snap_bytes));
+            ranges.push((byte_off, byte_len));
+            snap_bytes += byte_len;
+        }
+        PAGE_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (_, payload, scales) = &mut *scratch;
+            for attempt in 0..=SNAPSHOT_RETRIES {
+                let gen =
+                    self.alloc.snapshot_slot_ranges(self.layer, slot, &ranges, payload, scales);
+                let mut off = 0usize;
+                for (c, &(base, snap_start)) in chunks.iter().zip(&plan) {
+                    let buf = &payload[snap_start..];
+                    // Chunk offsets/lens are logical f32 elements.
+                    // Decode in scale-homogeneous runs: a chunk may
+                    // span regions (an HND head chunk covers its K and
+                    // V regions).
+                    let mut e = c.offset;
+                    let end = c.offset + c.len;
+                    while e < end {
+                        let run = codec.region_run_len(layout, e).min(end - e);
+                        let scale = match codec.dtype {
+                            KvDtype::F32 => 1.0,
+                            _ => bf16_bits_to_f32(scales[codec.region_of(layout, e)]),
+                        };
+                        codec.decode_run(buf, e - base, run, scale, &mut dst[off..off + run]);
+                        off += run;
+                        e += run;
+                    }
                 }
+                if self.alloc.slot_generation(self.layer, slot) == gen {
+                    return off;
+                }
+                assert!(
+                    attempt < SNAPSHOT_RETRIES,
+                    "KV slot {} (layer {}) mutated concurrently through {} snapshot retries — \
+                     refcount protocol violated",
+                    slot,
+                    self.layer,
+                    SNAPSHOT_RETRIES
+                );
             }
-            off
+            unreachable!()
         })
     }
 
@@ -373,26 +415,6 @@ impl LayerPool {
             }
         });
         (k, v)
-    }
-}
-
-/// Visit the contiguous element runs of one (head, plane) scale region:
-/// a single `p*d` run under HND, `p` strided runs of `d` under NHD.
-fn for_region_runs(
-    codec: PageCodec,
-    layout: Layout,
-    head: usize,
-    plane: usize,
-    mut f: impl FnMut(usize, usize),
-) {
-    let (p, m, d) = (codec.page_size, codec.n_kv, codec.d_head);
-    match layout {
-        Layout::Hnd => f(((head * 2 + plane) * p) * d, p * d),
-        Layout::Nhd => {
-            for tok in 0..p {
-                f(plane * p * m * d + (tok * m + head) * d, d);
-            }
-        }
     }
 }
 

@@ -246,6 +246,52 @@ impl PageCodec {
             }
         }
     }
+
+    /// Encode one whole staged page (`page_elems` f32s in `layout`
+    /// element order) into an encoded payload + scale sidecar, both
+    /// caller-owned scratch. This is the lock-free half of the offload
+    /// path: the pool view stages and encodes outside any allocator
+    /// lock, then installs the bytes with one memcpy under the shard
+    /// lock (`PageAllocator::write_slot_encoded`).
+    pub fn encode_page(
+        &self,
+        layout: Layout,
+        staged: &[f32],
+        payload: &mut Vec<u8>,
+        scales: &mut Vec<u16>,
+    ) {
+        debug_assert_eq!(staged.len(), self.page_elems());
+        payload.resize(self.payload_bytes(), 0);
+        scales.resize(self.scales_per_page(), 0);
+        if self.dtype == KvDtype::F32 {
+            self.encode_run(staged, payload, 0, 1.0);
+            return;
+        }
+        // Pass 1: per-region max magnitude (region = (head, plane)).
+        let mut max_abs = vec![0.0f32; self.scales_per_page()];
+        let mut e = 0;
+        while e < staged.len() {
+            let run = self.region_run_len(layout, e);
+            let r = self.region_of(layout, e);
+            let m = staged[e..e + run].iter().fold(max_abs[r], |a, &x| a.max(x.abs()));
+            max_abs[r] = m;
+            e += run;
+        }
+        let mut region_scale = vec![1.0f32; max_abs.len()];
+        for (r, &m) in max_abs.iter().enumerate() {
+            let (s, bits) = self.scale_for(m);
+            region_scale[r] = s;
+            scales[r] = bits;
+        }
+        // Pass 2: quantize each region run with its stored scale.
+        let mut e = 0;
+        while e < staged.len() {
+            let run = self.region_run_len(layout, e);
+            let r = self.region_of(layout, e);
+            self.encode_run(&staged[e..e + run], payload, e, region_scale[r]);
+            e += run;
+        }
+    }
 }
 
 /// Roundtrip a whole f32 slice through the codec with one shared

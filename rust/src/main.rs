@@ -17,7 +17,7 @@ use freekv::coordinator::sim_backend::SimBackend;
 use freekv::coordinator::tokenizer;
 use freekv::eval::{accuracy, latency, real};
 use freekv::kvcache::quant::KvDtype;
-use freekv::kvcache::PrefixCacheMode;
+use freekv::kvcache::{KvLockMode, PrefixCacheMode};
 use freekv::runtime::Runtime;
 use freekv::server::ServeOptions;
 use freekv::util::cli::Args;
@@ -57,11 +57,19 @@ fn run() -> Result<()> {
     // engine panics, slow transfers) to exercise the degradation ladder.
     // --kv-dtype f32|int8|int4 selects the CPU pool page codec
     // (quantize-on-offload, dequantize-on-gather; sink/window stay f32).
+    // --kv-lock global|sharded selects the allocator lock layout
+    // (sharded per-layer slab locks by default; global is the
+    // contention-ablation baseline, bit-identical output).
     let defaults = FreeKvParams::default();
     let kv_dtype = match args.get("kv-dtype") {
         Some(s) => KvDtype::parse(&s)
             .ok_or_else(|| anyhow!("unknown --kv-dtype {s:?} (expected f32|int8|int4)"))?,
         None => defaults.kv_dtype,
+    };
+    let kv_lock = match args.get("kv-lock") {
+        Some(s) => KvLockMode::parse(&s)
+            .ok_or_else(|| anyhow!("unknown --kv-lock {s:?} (expected global|sharded)"))?,
+        None => defaults.kv_lock,
     };
     let prefix_cache = match args.get("prefix-cache") {
         Some(s) => PrefixCacheMode::parse(&s).ok_or_else(|| {
@@ -83,6 +91,7 @@ fn run() -> Result<()> {
         kv_retain_pages: args.usize_or("kv-retain-pages", defaults.kv_retain_pages),
         chaos_seed: args.get("chaos-seed").and_then(|v| v.parse().ok()),
         kv_dtype,
+        kv_lock,
         ..Default::default()
     };
 
@@ -151,6 +160,7 @@ fn run() -> Result<()> {
                 let (pool_pages, prefix) = (params.kv_pool_pages as u64, params.prefix_cache);
                 let retain = params.kv_retain_pages as u64;
                 let dtype = params.kv_dtype;
+                let lock = params.kv_lock;
                 // One fault plan for the whole process: a supervised
                 // engine restart keeps advancing the same schedule
                 // instead of replaying it from call index 0.
@@ -159,7 +169,7 @@ fn run() -> Result<()> {
                     .map(|s| std::sync::Arc::new(freekv::util::fault::FaultPlan::chaos(s)));
                 EngineLoop::spawn(loop_cfg, move || {
                     let mut b =
-                        SimBackend::tiny_with_pool_mode_dtype(pool_pages, prefix, retain, dtype);
+                        SimBackend::tiny_with_pool_opts(pool_pages, prefix, retain, dtype, lock);
                     if let Some(p) = &plan {
                         b.set_faults(p.clone());
                     }
@@ -221,11 +231,12 @@ fn run() -> Result<()> {
                 ..Default::default()
             };
             if args.flag("sim") {
-                let mut backend = SimBackend::tiny_with_pool_mode_dtype(
+                let mut backend = SimBackend::tiny_with_pool_opts(
                     params.kv_pool_pages as u64,
                     params.prefix_cache,
                     params.kv_retain_pages as u64,
                     params.kv_dtype,
+                    params.kv_lock,
                 );
                 if let Some(seed) = params.chaos_seed {
                     backend.set_faults(std::sync::Arc::new(
@@ -247,7 +258,7 @@ fn run() -> Result<()> {
         _ => Err(anyhow!(
             "usage: freekv <info|generate|serve|loadtest|eval> [--model tiny] [--artifacts dir] \
              [--serial-recall] [--exec-workers 2] [--max-lanes 2] [--weight-workers 1] \
-             [--kv-pool-pages 0] [--kv-dtype f32|int8|int4] \
+             [--kv-pool-pages 0] [--kv-dtype f32|int8|int4] [--kv-lock global|sharded] \
              [--prefix-cache[=off|resident|retained]] [--kv-retain-pages 0] [--sim] \
              [--chaos-seed N] \
              [--queue-cap 64] [--max-batch 4] [--admit-below 4] [--microbatch-min 0] \

@@ -40,7 +40,11 @@
 //! the submitter's admission queue depth by default): past the cap,
 //! generation requests get `503` instead of spawning unboundedly, while
 //! a small probe headroom keeps `/healthz` and `/metrics` answering so
-//! saturation is not mistaken for a dead engine loop. Client
+//! saturation is not mistaken for a dead engine loop. A kept-alive
+//! connection counts against the cap only while serving a request:
+//! parked idle between requests it releases its slot and re-acquires
+//! one when the next request line arrives (`503` + close if the edge
+//! saturated meanwhile). Client
 //! disconnects cancel the in-flight session mid-generation, returning
 //! its GPU slots and CPU pool pages to the free pool: streaming
 //! sessions treat a failed chunk write *or* an EOF `peek` as
@@ -455,14 +459,24 @@ pub fn serve_listener(
         // metrics); generation requests get the saturation 503.
         let restricted = prev >= conn_cap;
         let slot = ConnSlot(active_conns.clone());
+        let conns = active_conns.clone();
         let sub = submitter.clone();
         let served = served.clone();
         let engine_down = engine_down.clone();
         let limits = limits.clone();
         let max = opts.max_requests;
         thread::spawn(move || {
-            let _slot = slot; // released when the handler thread exits
-            handle_connection(&mut stream, &sub, &limits, &served, &engine_down, restricted);
+            handle_connection(
+                &mut stream,
+                &sub,
+                &limits,
+                &served,
+                &engine_down,
+                &conns,
+                conn_cap,
+                slot,
+                restricted,
+            );
             // Completing the last generation — or noticing the engine
             // loop died — must unblock the acceptor.
             if engine_down.load(Ordering::SeqCst)
@@ -488,12 +502,21 @@ pub fn serve_listener(
 /// between them) so loadtest clients stop paying per-request TCP
 /// setup. Without the header, one request per connection as before.
 /// Error responses and SSE streams always close.
+///
+/// The connection-thread slot is only held while a request is actually
+/// being served: a kept-alive connection parked between requests gives
+/// its slot back (an idle client must not pin the budget for its whole
+/// `keep_alive_idle` window) and re-acquires one when the next request
+/// arrives — answered `503` and closed if the edge saturated meanwhile.
 fn handle_connection(
     stream: &mut TcpStream,
     sub: &Submitter,
     limits: &HttpLimits,
     served: &AtomicUsize,
     engine_down: &AtomicBool,
+    conns: &Arc<AtomicUsize>,
+    conn_cap: usize,
+    slot: ConnSlot,
     restricted: bool,
 ) {
     // A peer that stops reading must not wedge this thread on a write.
@@ -504,8 +527,15 @@ fn handle_connection(
     let Ok(clone) = stream.try_clone() else { return };
     let mut reader = BufReader::new(clone);
     let mut first = true;
+    let mut slot = Some(slot);
+    let mut restricted = restricted;
     loop {
         let idle = if first { None } else { Some(limits.keep_alive_idle) };
+        if !first {
+            // Parked between keep-alive requests: release the slot so
+            // idle connections don't count against the budget.
+            slot = None;
+        }
         first = false;
         let req = match read_request_from(&mut reader, stream, limits, idle) {
             Ok(r) => r,
@@ -520,6 +550,23 @@ fn handle_connection(
             }
             Err(HttpError::Io(_)) => return, // stalled, idle-timed-out, or vanished client
         };
+        if slot.is_none() {
+            // The next keep-alive request arrived: re-acquire a slot
+            // before doing any work. Mirrors the acceptor's admission:
+            // past cap + headroom the request is refused outright; past
+            // the cap but within headroom only probes are served.
+            let prev = conns.fetch_add(1, Ordering::SeqCst);
+            slot = Some(ConnSlot(conns.clone()));
+            if prev >= conn_cap + PROBE_HEADROOM {
+                let msg = error_json(&format!(
+                    "connection limit reached ({} active); retry later",
+                    prev
+                ));
+                let _ = write_response(stream, 503, "application/json", &msg);
+                return;
+            }
+            restricted = prev >= conn_cap;
+        }
         let keep = req.keep_alive;
         let again = match (req.method.as_str(), req.path.as_str()) {
             // Health is honest: it round-trips the engine loop, so a dead

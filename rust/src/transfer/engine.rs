@@ -133,8 +133,9 @@ impl TransferEngine {
         }
 
         // Phase 1: chunked "DMA" into staging, normalized to
-        // [K tokens | V tokens] token-major order. The pool view reads
-        // its (possibly shared) slot under the allocator lock.
+        // [K tokens | V tokens] token-major order. The pool view
+        // snapshots its (possibly shared) slot under that layer's
+        // shard lock and decodes outside it (generation-checked).
         let t0 = Instant::now();
         {
             let staging = &mut self.staging[buf_idx];

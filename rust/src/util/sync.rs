@@ -3,7 +3,8 @@
 //! an injected fault) poisons the mutex, and every `.lock().unwrap()`
 //! downstream then cascades the panic through unrelated threads. Call
 //! sites must either recover deliberately (this helper, or a bespoke
-//! recovery like `PageAllocator::lock`) or map the error explicitly.
+//! recovery like the page allocator's `lock_timed`) or map the error
+//! explicitly.
 
 use std::sync::{Mutex, MutexGuard};
 

@@ -132,6 +132,11 @@ fn chaos_round(seed: u64) {
     let kv = alloc.stats();
     assert_eq!(kv.pages_used, 0, "seed {}: leaked pages: {:?}", seed, kv);
     assert_eq!(kv.pages_reserved, 0, "seed {}: leaked reservations: {:?}", seed, kv);
+    // The full cross-lock invariant set must hold after recovery — the
+    // AllocPanic site alternates between poisoning the metadata lock
+    // and a seed-chosen shard lock, so any seed that fired it has
+    // exercised poisoned-shard recovery too.
+    alloc.audit_invariants();
 }
 
 #[test]
@@ -206,9 +211,10 @@ fn engine_global_decode_error_walks_the_same_ladder() {
 fn alloc_lock_panic_recovers_and_pool_stays_usable() {
     let cfg = sim_config();
     let alloc = PageAllocator::for_model(&cfg, 0, false);
-    // Panic *while holding the allocator mutex* on the second decode
+    // Panic *while holding an allocator lock* on the second decode
     // step: the restart teardown and every later request must recover
-    // the poisoned lock (PageAllocator::lock) on the same live pool.
+    // the poisoned mutex (`lock_timed`'s `into_inner` path, audited by
+    // the per-lock `poison_audit`) on the same live pool.
     let plan = Arc::new(FaultPlan::events(&[(FaultSite::AllocPanic, 1)]));
     let el = spawn_chaos_loop(cfg, alloc.clone(), plan, LoopConfig::default());
     let sub = el.submitter();
@@ -224,6 +230,45 @@ fn alloc_lock_panic_recovers_and_pool_stays_usable() {
     el.shutdown();
     let kv = alloc.stats();
     assert_eq!((kv.pages_used, kv.pages_reserved), (0, 0), "{:?}", kv);
+    alloc.audit_invariants();
+}
+
+#[test]
+fn alloc_poison_covers_meta_and_shard_locks() {
+    let cfg = sim_config();
+    let alloc = PageAllocator::for_model(&cfg, 0, false);
+    // Two lock-holder panics. The AllocPanic site picks its target from
+    // the post-increment injected counter: the first firing (n=1, odd)
+    // poisons a *shard* lock, the second (n=2, even) the *metadata*
+    // lock — so this single schedule walks both recovery paths on one
+    // live allocator. The second fire index leaves the first victim
+    // enough decode steps to die and the supervisor to restart.
+    let plan = Arc::new(FaultPlan::events(&[
+        (FaultSite::AllocPanic, 1),
+        (FaultSite::AllocPanic, 8),
+    ]));
+    let el = spawn_chaos_loop(
+        cfg,
+        alloc.clone(),
+        plan.clone(),
+        LoopConfig { queue_cap: 8, max_engine_restarts: 8 },
+    );
+    let sub = el.submitter();
+
+    let first = sub.submit_text("poisons a shard lock ", 50).unwrap();
+    assert!(collect_terminal(&first).1.is_err(), "shard-poison victim fails loudly");
+    let second = sub.submit_text("poisons the metadata lock ", 50).unwrap();
+    assert!(collect_terminal(&second).1.is_err(), "meta-poison victim fails loudly");
+    assert_eq!(plan.fired(FaultSite::AllocPanic), 2, "both scheduled faults fired");
+
+    // Both poisoned mutexes recovered: the same pool keeps serving.
+    let again = sub.submit_text("after both poisons ", 6).unwrap();
+    assert_eq!(collect_terminal(&again).1.expect("pool usable"), 6);
+
+    el.shutdown();
+    let kv = alloc.stats();
+    assert_eq!((kv.pages_used, kv.pages_reserved), (0, 0), "{:?}", kv);
+    alloc.audit_invariants();
 }
 
 #[test]

@@ -12,7 +12,9 @@
 
 use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig, StepEvent};
 use freekv::coordinator::sim_backend::{sim_config, SimBackend};
-use freekv::kvcache::{KvDtype, LayerPool, Layout, PageAllocator, PrefixCacheMode, RequestKv};
+use freekv::kvcache::{
+    KvDtype, KvLockMode, LayerPool, Layout, PageAllocator, PrefixCacheMode, RequestKv,
+};
 use freekv::prop_assert;
 use freekv::transfer::TransferEngine;
 use freekv::util::proptest::check;
@@ -484,6 +486,163 @@ fn retention_cap_bounds_the_cache_through_the_scheduler() {
         st.pages_retained,
         cap
     );
+}
+
+/// Seeds for the concurrency stress suite. CI's contention matrix runs
+/// one seed per job via `FREEKV_CHAOS_SEEDS` (the chaos suite's
+/// convention); a plain `cargo test` covers the fixed trio.
+fn stress_seeds() -> Vec<u64> {
+    match std::env::var("FREEKV_CHAOS_SEEDS") {
+        Ok(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+        Err(_) => vec![11, 23, 47],
+    }
+}
+
+/// Canonical content for the page shared under key `g`: a pure function
+/// of the key, so adopting a page some other thread wrote yields bytes
+/// identical to writing it yourself (quantization is deterministic).
+fn canon_page(g: usize, page_elems: usize) -> Vec<f32> {
+    (0..page_elems).map(|i| ((g * 37 + i) % 113) as f32 * 0.25 - 7.0).collect()
+}
+
+#[test]
+fn concurrent_share_write_adopt_drop_matches_sequential_replay() {
+    // N threads hammer one allocator with random keyed writes,
+    // adoptions, private (CoW) rewrites, and whole-view drop/recreate
+    // cycles. Shared content is a pure function of the prefix key, so
+    // each thread knows exactly what every one of its pages must hold
+    // regardless of interleaving. After the run, every surviving page
+    // must read back byte-equal to a single-threaded replay of the same
+    // final content through a private reference pool of the same codec;
+    // the allocator's full invariant audit must pass; and dropping every
+    // view must drain the pool to zero. Runs per codec and per lock
+    // layout (`--kv-lock=global|sharded`) on every seed.
+    for dtype in KvDtype::all() {
+        for lock in KvLockMode::all() {
+            for seed in stress_seeds() {
+                stress_round(dtype, lock, seed);
+            }
+        }
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn stress_round(dtype: KvDtype, lock: KvLockMode, seed: u64) {
+    const THREADS: usize = 4;
+    const ITERS: usize = 200;
+    let (n_layers, m, p, d) = (4usize, 2usize, 4usize, 8usize);
+    let n_pages = 8usize;
+    let alloc = PageAllocator::with_mode_lock(
+        n_layers,
+        m,
+        p,
+        d,
+        0,
+        PrefixCacheMode::Resident,
+        0,
+        seed,
+        dtype,
+        lock,
+    );
+    let page_elems = p * m * d;
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let alloc = alloc.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(seed ^ (0xA5A5_0000 + t as u64));
+                let mut pools: Vec<LayerPool> = (0..n_layers)
+                    .map(|l| {
+                        LayerPool::with_alloc(Layout::Hnd, n_pages, m, p, d, alloc.clone(), l)
+                    })
+                    .collect();
+                // what each of this thread's pages must hold right now
+                let mut content: Vec<Vec<Option<Vec<f32>>>> = vec![vec![None; n_pages]; n_layers];
+                for step in 0..ITERS {
+                    let l = rng.below(n_layers);
+                    let g = rng.below(n_pages);
+                    let key = (g as u128 + 1) * 0x9E37;
+                    match rng.below(8) {
+                        0..=2 => {
+                            // keyed canonical write: shareable with every
+                            // other thread under the same key
+                            let c = canon_page(g, page_elems);
+                            pools[l].write_page_keyed(g, &c, &c, Some(key));
+                            content[l][g] = Some(c);
+                        }
+                        3..=4 => {
+                            // adopt if some thread has published the key;
+                            // otherwise publish it ourselves — either way
+                            // the page holds the canonical bytes
+                            if !pools[l].try_adopt(g, key) {
+                                let c = canon_page(g, page_elems);
+                                pools[l].write_page_keyed(g, &c, &c, Some(key));
+                            }
+                            content[l][g] = Some(canon_page(g, page_elems));
+                        }
+                        5..=6 => {
+                            // private rewrite: forces CoW off any alias
+                            let c: Vec<f32> = (0..page_elems)
+                                .map(|i| 0.5 + ((t * 1009 + step * 131 + i) % 97) as f32)
+                                .collect();
+                            pools[l].write_page(g, &c, &c);
+                            content[l][g] = Some(c);
+                        }
+                        _ => {
+                            // drop one layer's whole view and start over:
+                            // release/free churn concurrent with sharing
+                            pools[l] = LayerPool::with_alloc(
+                                Layout::Hnd,
+                                n_pages,
+                                m,
+                                p,
+                                d,
+                                alloc.clone(),
+                                l,
+                            );
+                            content[l] = vec![None; n_pages];
+                        }
+                    }
+                    // periodic reads interleave with other threads'
+                    // writes and frees on the same shard
+                    if step % 16 == 0 && content[l][g].is_some() {
+                        let _ = pools[l].read_page_head(g, 0);
+                    }
+                }
+                // sequential replay: the same final content through a
+                // fresh private pool of the same codec must match the
+                // concurrent pool byte for byte
+                for l in 0..n_layers {
+                    let mut reference = LayerPool::new_dtype(Layout::Hnd, n_pages, m, p, d, dtype);
+                    for g in 0..n_pages {
+                        let Some(c) = &content[l][g] else { continue };
+                        reference.write_page(g, c, c);
+                        for head in 0..m {
+                            let want = reference.read_page_head(g, head);
+                            let got = pools[l].read_page_head(g, head);
+                            assert_eq!(
+                                got,
+                                want,
+                                "{}/{} seed {}: thread {} layer {} page {} head {} diverged",
+                                dtype,
+                                lock,
+                                seed,
+                                t,
+                                l,
+                                g,
+                                head
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    });
+    // all views dropped with their threads: the pool must be empty and
+    // internally consistent (refcounts, free list, gauges, registry)
+    alloc.audit_invariants();
+    let st = alloc.stats();
+    assert_eq!(st.pages_used, 0, "{}/{} seed {}: leaked pages", dtype, lock, seed);
+    assert_eq!(st.pages_shared, 0, "{}/{} seed {}: shared gauge leaked", dtype, lock, seed);
 }
 
 #[test]

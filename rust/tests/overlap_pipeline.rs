@@ -5,7 +5,7 @@
 
 use freekv::config::{FreeKvParams, ModelConfig};
 use freekv::coordinator::engine::{Engine, SampleParams, Sequence};
-use freekv::kvcache::{KvDtype, Layout, PageAllocator, RequestKv};
+use freekv::kvcache::{KvDtype, KvLockMode, Layout, PageAllocator, PrefixCacheMode, RequestKv};
 use freekv::transfer::{RecallJob, RecallPipeline, TransferEngine};
 use freekv::util::rng::Rng;
 
@@ -145,6 +145,116 @@ fn worker_vs_inline(dtype: KvDtype) {
         assert_eq!(ga.0, gb.0, "layer {} gathered K diverged", l);
         assert_eq!(ga.1, gb.1, "layer {} gathered V diverged", l);
         assert_eq!(ga.2, gb.2, "layer {} validity diverged", l);
+    }
+}
+
+#[test]
+fn global_and_sharded_lock_layouts_are_bit_identical() {
+    // `--kv-lock` must be a pure synchronization change. The same
+    // two-request shared-prefix workload (fill, cross-layer LCP
+    // adoption, rotating selections, full gathers) through a
+    // Global-lock allocator and a Sharded-lock allocator must produce
+    // byte-identical gathered tensors, identical transfer accounting,
+    // and identical non-timing pool gauges (pages peak, prefix hits,
+    // bytes saved). Lock wait counters are timing-dependent and
+    // deliberately excluded from the comparison. Runs per codec.
+    for dtype in KvDtype::all() {
+        let cfg = tiny_cfg();
+        let run = |lock: KvLockMode| {
+            let alloc = PageAllocator::with_mode_lock(
+                cfg.n_layers,
+                cfg.n_kv,
+                cfg.page_size,
+                cfg.d_head,
+                0,
+                PrefixCacheMode::Resident,
+                0,
+                0x51AB,
+                dtype,
+                lock,
+            );
+            let tokens: Vec<i32> = (0..40).map(|t| 32 + t % 90).collect();
+            let fill_req = |eng: &mut TransferEngine, kv: &mut RequestKv| {
+                let mut rng = Rng::new(77);
+                for t in 0..tokens.len() {
+                    kv.feed_tokens(&tokens[..t + 1]);
+                    for l in 0..cfg.n_layers {
+                        let k: Vec<f32> =
+                            (0..cfg.n_kv * cfg.d_head).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                        let v: Vec<f32> =
+                            (0..cfg.n_kv * cfg.d_head).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                        kv.append(l, &k, &v, eng);
+                    }
+                }
+            };
+            let mut a = RequestKv::with_alloc(&cfg, Layout::Hnd, alloc.clone());
+            let mut ea = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+            fill_req(&mut ea, &mut a);
+            let mut b = RequestKv::with_alloc(&cfg, Layout::Hnd, alloc.clone());
+            let mut eb = TransferEngine::new(cfg.page_size, cfg.d_head, true);
+            fill_req(&mut eb, &mut b);
+            assert!(
+                eb.counters.prefix_hits > 0,
+                "{}/{}: second request must adopt the shared prefix",
+                dtype,
+                lock
+            );
+            let mask = a.layers[0].gpu.selectable_mask();
+            let cands: Vec<usize> =
+                mask.iter().enumerate().filter(|(_, &x)| x > 0.0).map(|(g, _)| g).collect();
+            assert!(cands.len() >= 2, "need selectable pages");
+            let mut recalled = 0usize;
+            for round in 0..3 {
+                for l in 0..cfg.n_layers {
+                    for head in 0..cfg.n_kv {
+                        let pages = vec![cands[(round + head) % cands.len()]];
+                        recalled += a.apply_selection(l, head, &pages, &mut ea);
+                        recalled += b.apply_selection(l, head, &pages, &mut eb);
+                    }
+                }
+            }
+            let mut gathered: Vec<Vec<f32>> = Vec::new();
+            for req in [&mut a, &mut b] {
+                for l in 0..cfg.n_layers {
+                    let s = req.layers[l].gpu.budget_slots();
+                    let (m, d) = (cfg.n_kv, cfg.d_head);
+                    let mut k = vec![0.0f32; m * s * d];
+                    let mut v = vec![0.0f32; m * s * d];
+                    let mut valid = vec![0.0f32; m * s];
+                    let (gpu, x) = req.layers[l].parts_mut();
+                    gpu.gather_full(&mut x.select, &mut k, &mut v, &mut valid);
+                    gathered.push(k);
+                    gathered.push(v);
+                    gathered.push(valid);
+                }
+            }
+            let st = alloc.stats();
+            let counters = (
+                ea.counters.h2d_chunks,
+                ea.counters.h2d_bytes,
+                eb.counters.h2d_chunks,
+                eb.counters.h2d_encoded_bytes,
+                eb.counters.prefix_hits,
+                eb.counters.offloaded_pages,
+            );
+            drop(a);
+            drop(b);
+            assert_eq!(
+                alloc.stats().pages_used,
+                0,
+                "{}/{}: pool must drain once both requests retire",
+                dtype,
+                lock
+            );
+            alloc.audit_invariants();
+            (gathered, recalled, counters, (st.pages_peak, st.prefix_hits, st.bytes_saved))
+        };
+        let g = run(KvLockMode::Global);
+        let s = run(KvLockMode::Sharded);
+        assert_eq!(g.0, s.0, "{}: gathered tensors diverged across lock layouts", dtype);
+        assert_eq!(g.1, s.1, "{}: recalled-page counts diverged", dtype);
+        assert_eq!(g.2, s.2, "{}: transfer counters diverged", dtype);
+        assert_eq!(g.3, s.3, "{}: non-timing pool gauges diverged", dtype);
     }
 }
 

@@ -186,6 +186,51 @@ fn three_lane_real_scheduling_matches_bucketed_and_overlaps_prefill() {
 }
 
 #[test]
+fn kv_lock_layouts_produce_identical_text_through_the_scheduler() {
+    // `--kv-lock` is a pure synchronization change: the same
+    // shared-prompt sampled workload through a global-lock and a
+    // sharded-lock allocator must complete with identical texts and
+    // identical non-timing pool gauges. Lock wait counters are
+    // timing-dependent and deliberately excluded from the comparison.
+    let run = |lock: freekv::kvcache::KvLockMode| -> Option<(Vec<String>, (u64, u64))> {
+        let rt = freekv::runtime::load_or_skip(artifacts_dir())?;
+        let eng = Engine::new(
+            rt,
+            "tiny",
+            FreeKvParams {
+                tau: 0.9,
+                prefix_cache: freekv::kvcache::PrefixCacheMode::Resident,
+                kv_lock: lock,
+                ..Default::default()
+            },
+        )
+        .ok()?;
+        let mut sched = Scheduler::new(
+            eng,
+            SchedulerConfig { max_batch: 4, admit_below: 4, ..Default::default() },
+        );
+        for i in 1..=6u64 {
+            let mut r = Request::from_text(i, "the shared prompt every lock layout sees ", 10);
+            r.sample = SampleParams { temperature: 0.8, top_p: 0.9, seed: i };
+            sched.submit(r);
+        }
+        sched.drain().unwrap();
+        let texts: Vec<String> =
+            (1..=6u64).map(|i| sched.take_completion(i).unwrap().text).collect();
+        let st = sched.engine.kv_pool_stats();
+        Some((texts, (st.pages_peak, st.prefix_hits)))
+    };
+    let Some(global) = run(freekv::kvcache::KvLockMode::Global) else {
+        eprintln!("artifacts/ missing — skipping kv-lock scheduler equivalence test");
+        return;
+    };
+    let sharded = run(freekv::kvcache::KvLockMode::Sharded).expect("backend available");
+    assert_eq!(global.0, sharded.0, "kv-lock layout changed generated text");
+    assert_eq!(global.1, sharded.1, "non-timing pool gauges diverged across lock layouts");
+    assert!(sharded.1 .1 > 0, "identical prompts must hit the prefix cache");
+}
+
+#[test]
 fn cancel_mid_generation_frees_kv_on_the_real_engine() {
     let Some(mut sched) = scheduler() else { return };
     sched.submit(Request::from_text(1, "cancel on the real engine ", 64));

@@ -464,6 +464,102 @@ fn keep_alive_serves_multiple_generations_on_one_connection() {
 }
 
 #[test]
+fn idle_keep_alive_connection_releases_its_slot() {
+    // max_connections 1: the whole budget is one slot. A kept-alive
+    // connection parked between requests must not pin it for the
+    // keep_alive_idle window — the slot is released while parked and
+    // re-acquired when the next request line arrives.
+    let el = spawn_sim_loop(5, 8);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sub = el.submitter();
+    thread::spawn(move || {
+        serve_listener(
+            listener,
+            sub,
+            ServeOptions { max_connections: 1, ..Default::default() },
+        )
+        .unwrap();
+    });
+
+    // A: keep-alive connection, one quick generation, then parked idle.
+    let mut a = TcpStream::connect(addr).unwrap();
+    let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    let send = |a: &mut TcpStream, body: &str| {
+        write!(
+            a,
+            "POST /generate HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+    };
+    send(&mut a, r#"{"prompt":"keep alive slot ","max_tokens":2}"#);
+    let (status, _, resp) = read_one_response(&mut a_reader);
+    assert_eq!(status, 200, "{}", resp);
+
+    // While A idles, another client must be able to take the only slot.
+    // (Brief retry: the release happens when A's handler loops back to
+    // park after writing its response.)
+    let t0 = Instant::now();
+    loop {
+        let (status, body) =
+            post_generate(addr, r#"{"prompt":"uses the slot ","max_tokens":2}"#);
+        if status == 200 {
+            break;
+        }
+        assert_eq!(status, 503, "{}", body);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "idle keep-alive connection still pins the only connection slot"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    // The parked connection re-acquires a slot and keeps serving.
+    send(&mut a, r#"{"prompt":"woke up ","max_tokens":2}"#);
+    let (status, _, resp) = read_one_response(&mut a_reader);
+    assert_eq!(status, 200, "parked connection must re-acquire a slot: {}", resp);
+
+    // Saturate the edge with a long streaming session, then wake A: the
+    // re-acquire must observe saturation and refuse with 503 (headroom
+    // slots serve no generations).
+    let t1 = Instant::now();
+    let _held = loop {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let body = r#"{"prompt":"occupy ","max_tokens":500,"stream":true}"#;
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        if line.starts_with("HTTP/1.1 200") {
+            // first token = the session surely holds its slot
+            let mut l = String::new();
+            while r.read_line(&mut l).unwrap() > 0 {
+                if l.starts_with("data: ") {
+                    break;
+                }
+                l.clear();
+            }
+            break (s, r);
+        }
+        assert!(t1.elapsed() < Duration::from_secs(10), "stream never admitted");
+        thread::sleep(Duration::from_millis(20));
+    };
+    send(&mut a, r#"{"prompt":"no slot left ","max_tokens":2}"#);
+    let (status, _, resp) = read_one_response(&mut a_reader);
+    assert_eq!(status, 503, "re-acquire under saturation must refuse: {}", resp);
+    assert!(resp.contains("connection limit"), "{}", resp);
+    el.shutdown();
+}
+
+#[test]
 fn shutdown_flag_stops_the_acceptor_and_drains_inflight_sessions() {
     // The signal handler's contract with the server: flipping the flag
     // (plus a wake connection) stops the acceptor, which begins the
