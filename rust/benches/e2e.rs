@@ -574,6 +574,126 @@ fn main() {
     }
 
     println!();
+    println!("=== bench e2e: router tier (sim multi-replica loadtest) ===");
+    {
+        // The multi-replica serving tier on the artifact-free SimBackend
+        // (CI's bench-smoke job records this without artifacts): a timed
+        // workload replayed through N independent scheduler replicas
+        // behind each dispatch policy. The long-gen burst measures pure
+        // scale-out — prompts are unique, so dispatch is load-driven and
+        // the replica count is the throughput lever. The repeated-prompt
+        // trickle measures what prefix affinity adds on top: every
+        // request opens with one shared head, and the kv-aware policy
+        // should pin the repeats to the replica retaining it.
+        use freekv::coordinator::router::{DispatchPolicy, KvRouterConfig};
+        use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
+        use freekv::coordinator::sim_backend::SimBackend;
+        use freekv::kvcache::PrefixCacheMode;
+        use freekv::workload::{generate, run_router_loadtest, Scenario, WorkloadSpec};
+
+        let tps = 1000.0;
+        let run = |spec: &WorkloadSpec, replicas: usize, kv: bool| {
+            let mut scheds: Vec<Scheduler<SimBackend>> = (0..replicas)
+                .map(|_| {
+                    Scheduler::new(
+                        SimBackend::tiny_with_pool_mode(0, PrefixCacheMode::Retained, 0),
+                        SchedulerConfig { max_batch: 4, admit_below: 4, ..Default::default() },
+                    )
+                })
+                .collect();
+            let page_size = scheds[0].engine.model().page_size;
+            let mut policy = if kv {
+                DispatchPolicy::kv_aware(KvRouterConfig { page_size, ..Default::default() })
+            } else {
+                DispatchPolicy::round_robin()
+            };
+            run_router_loadtest(&mut scheds, &mut policy, generate(spec), tps)
+                .expect("sim router loadtest")
+        };
+
+        // replica sweep: a decode-bound burst (every arrival at t≈0)
+        let burst = WorkloadSpec {
+            scenario: Scenario::LongGeneration,
+            rate: 1e6,
+            n_requests: 32,
+            max_prompt: 64,
+            max_output: 16,
+            seed: 0xF00D,
+        };
+        let mut rows = Vec::new();
+        let mut kv_tput_1 = f64::NAN;
+        let mut kv_tput_4 = f64::NAN;
+        for replicas in [1usize, 2, 4] {
+            for kv in [true, false] {
+                let r = run(&burst, replicas, kv);
+                let name = if kv { "kv" } else { "round-robin" };
+                let tput = r.modeled_throughput(tps);
+                if kv && replicas == 1 {
+                    kv_tput_1 = tput;
+                }
+                if kv && replicas == 4 {
+                    kv_tput_4 = tput;
+                }
+                println!(
+                    "long-gen burst  {:<11} replicas={} {:>8.1} tok/s  ttft p95 {:>6.3}s  completed {}/{}",
+                    name,
+                    replicas,
+                    tput,
+                    r.ttft_p95_secs,
+                    r.completed,
+                    burst.n_requests,
+                );
+                let mut o = JsonObj::new();
+                o.insert("scenario", "long-gen-burst");
+                o.insert("router", name);
+                o.insert("replicas", replicas);
+                o.insert("modeled_tok_s", tput);
+                o.insert("ttft_p95_secs", r.ttft_p95_secs);
+                o.insert("completed", r.completed);
+                o.insert("failed", r.failed);
+                o.insert("retained_hit_concentration", r.retained_hit_concentration());
+                rows.push(Json::from(o));
+            }
+        }
+        let speedup = kv_tput_4 / kv_tput_1;
+        println!("kv 4-replica speedup over 1 replica (long-gen burst) = {:.2}x", speedup);
+
+        // affinity: spaced repeated-prompt arrivals, 2 replicas, kv vs rr
+        let trickle = WorkloadSpec {
+            scenario: Scenario::RepeatedPrompt,
+            rate: 20.0,
+            n_requests: 16,
+            max_prompt: 64,
+            max_output: 8,
+            seed: 0xF00D,
+        };
+        let mut affinity = JsonObj::new();
+        for (label, kv) in [("kv", true), ("round_robin", false)] {
+            let r = run(&trickle, 2, kv);
+            println!(
+                "repeated trickle {:<11} replicas=2 retained hits {:>4} (concentration {:.2})  prefill tokens saved {:>5}",
+                label,
+                r.retained_hits(),
+                r.retained_hit_concentration(),
+                r.prefill_tokens_saved(),
+            );
+            let mut o = JsonObj::new();
+            o.insert("retained_hits", r.retained_hits() as usize);
+            o.insert("retained_hit_concentration", r.retained_hit_concentration());
+            o.insert("prefill_tokens_saved", r.prefill_tokens_saved() as usize);
+            o.insert("modeled_tok_s", r.modeled_throughput(tps));
+            o.insert("ttft_p95_secs", r.ttft_p95_secs);
+            affinity.insert(label, o);
+        }
+
+        let mut section = JsonObj::new();
+        section.insert("sweep", Json::Arr(rows));
+        section.insert("speedup_kv_4x_vs_1x", speedup);
+        section.insert("affinity_2x", affinity);
+        report.insert("router", section);
+    }
+
+    println!();
     println!("=== bench e2e: real tiny-model engine throughput ===");
     if Runtime::load("artifacts").is_err() {
         println!("artifacts/ missing — run `make artifacts` (skipping real bench)");

@@ -28,7 +28,11 @@ pub struct ModelConfig {
     pub rope_theta: f64,
     /// RMSNorm epsilon.
     pub rms_eps: f64,
-    /// Tokens per KV page.
+    /// Tokens per KV page. Also the stride of the prefix cache's
+    /// boundary-hash chain, which the multi-replica router
+    /// ([`crate::coordinator::router`]) reuses for prefix-affinity
+    /// dispatch — replicas must agree on it for affinity to line up
+    /// with what their retained tiers actually hold.
     pub page_size: usize,
     /// Maximum context length in tokens.
     pub max_context: usize,

@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::config::ModelConfig;
 use crate::coordinator::engine::{Backend, EngineStats};
 use crate::coordinator::scheduler::{Completion, Request, Scheduler, StepEvent};
 use crate::util::fault::panic_message;
@@ -67,6 +68,7 @@ enum Command {
     Cancel(u64),
     Metrics(mpsc::Sender<String>),
     Stats(mpsc::Sender<EngineStats>),
+    Model(mpsc::Sender<ModelConfig>),
     /// Stop accepting new sessions and finish the in-flight ones; any
     /// still running at the deadline are cancelled.
     Drain { deadline: Instant },
@@ -257,6 +259,14 @@ impl Submitter {
         rx.recv().map_err(|_| SubmitError::Closed)
     }
 
+    /// The model configuration of the backend behind this loop (a
+    /// router reads `page_size` from it to key prefix-affinity hashes).
+    pub fn model_config(&self) -> Result<ModelConfig, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Command::Model(tx)).map_err(|_| SubmitError::Closed)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
     /// Ask the loop to stop. In-flight sessions are cancelled and their
     /// event channels closed.
     pub fn shutdown(&self) {
@@ -268,8 +278,15 @@ impl Submitter {
     /// whatever still runs after `timeout` is cancelled as the loop
     /// exits. Metrics/stats queries keep answering during the drain.
     pub fn drain(&self, timeout: Duration) {
+        self.drain_until(Instant::now() + timeout);
+    }
+
+    /// Like [`Submitter::drain`], with an absolute deadline — a
+    /// multi-replica router fans one shared deadline out to every
+    /// replica so set-wide drains run concurrently, not stacked.
+    pub fn drain_until(&self, deadline: Instant) {
         self.draining.store(true, Ordering::SeqCst);
-        let _ = self.tx.send(Command::Drain { deadline: Instant::now() + timeout });
+        let _ = self.tx.send(Command::Drain { deadline });
     }
 }
 
@@ -403,6 +420,14 @@ impl EngineLoop {
     /// running at the deadline are cancelled.
     pub fn shutdown_graceful(self, timeout: Duration) {
         self.submitter.drain(timeout);
+        let _ = self.handle.join();
+    }
+
+    /// Join the engine thread without sending any command — used by
+    /// [`crate::coordinator::router::ReplicaSet`] after fanning a
+    /// shared drain deadline out to every replica (a per-replica
+    /// `shutdown_graceful` would stack the deadlines).
+    pub(crate) fn join(self) {
         let _ = self.handle.join();
     }
 }
@@ -668,6 +693,10 @@ fn handle_command<B: Backend>(
             let _ = reply.send(sched.engine.stats().clone());
             true
         }
+        Command::Model(reply) => {
+            let _ = reply.send(sched.engine.model().clone());
+            true
+        }
         Command::Drain { deadline } => {
             *draining = Some(deadline);
             true
@@ -720,7 +749,7 @@ mod tests {
     use crate::coordinator::sim_backend::SimBackend;
 
     fn spawn_sim(queue_cap: usize, step_delay_ms: u64) -> EngineLoop {
-        EngineLoop::spawn(LoopConfig { queue_cap }, move || {
+        EngineLoop::spawn(LoopConfig { queue_cap, ..Default::default() }, move || {
             let mut b = SimBackend::tiny();
             b.step_delay = Duration::from_millis(step_delay_ms);
             let cfg = SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() };
@@ -760,7 +789,7 @@ mod tests {
         // stream must match the single-batch result (the sim stream is a
         // pure function of the prompt), proving the pair dispatch path
         // is invisible to clients.
-        let el = EngineLoop::spawn(LoopConfig { queue_cap: 8 }, || {
+        let el = EngineLoop::spawn(LoopConfig { queue_cap: 8, ..Default::default() }, || {
             let cfg = SchedulerConfig {
                 max_batch: 8,
                 admit_below: 8,

@@ -8,11 +8,16 @@
 //! [`engine_loop::Submitter`] with bounded admission and a
 //! [`engine_loop::SessionHandle`] with streaming events and mid-flight
 //! cancellation. [`sim_backend::SimBackend`] swaps in for the engine
-//! where artifacts/PJRT are unavailable.
+//! where artifacts/PJRT are unavailable. Above the loop, the
+//! [`router`] tier scales serving out to N engine-loop replicas behind
+//! one [`router::Router`] seam — KV-pressure balancing with
+//! prefix-affinity dispatch, plus round-robin and single-replica
+//! ablations — which is what the HTTP edge actually talks to.
 
 pub mod engine;
 pub mod engine_loop;
 pub mod metrics;
+pub mod router;
 pub mod scheduler;
 pub mod sim_backend;
 pub mod tokenizer;
@@ -20,5 +25,9 @@ pub mod tokenizer;
 pub use engine::{Backend, Engine, EngineStats, SampleParams, Sequence};
 pub use engine_loop::{EngineLoop, LoopConfig, SessionEvent, SessionHandle, SubmitError, Submitter};
 pub use metrics::{Metrics, RequestTiming};
+pub use router::{
+    DispatchPolicy, KvAwareRouter, KvRouterConfig, ReplicaLoad, ReplicaSet, RoundRobinRouter,
+    Router, RouterCounters, RouterKind, SingleRouter,
+};
 pub use scheduler::{Completion, FinishReason, Request, Scheduler, SchedulerConfig, StepEvent};
 pub use sim_backend::SimBackend;

@@ -1,0 +1,1084 @@
+//! Multi-replica router tier: the seam between the HTTP edge and N
+//! [`EngineLoop`] replicas.
+//!
+//! The server no longer talks to a bare [`Submitter`]; it talks to a
+//! [`Router`], and a bare `Submitter` *is* the single-replica router
+//! (today's path, bit-identical). [`ReplicaSet`] spawns and owns N
+//! engine loops — each with its own scheduler, backend, and KV page
+//! allocator, so no allocator lock is ever contended across replicas —
+//! and hands out routers over their submitters:
+//!
+//! * [`SingleRouter`] — N=1 passthrough, the ablation baseline equal to
+//!   the pre-router stack.
+//! * [`RoundRobinRouter`] — strict rotation over live replicas,
+//!   ignoring load and prefix affinity (the routing ablation).
+//! * [`KvAwareRouter`] — the production policy: new requests go to the
+//!   replica with the lowest combined queue depth + KV-page pressure,
+//!   while requests whose prompt shares a prefix with earlier traffic
+//!   are steered to the replica whose retained tier already holds those
+//!   pages. Affinity is tracked in a small router-side map from prefix
+//!   chain hashes (the same per-page boundary hashes `RequestKv`
+//!   records, so a map hit predicts a retained-tier adoption) to the
+//!   replica that last served them, bounded FIFO with eviction on
+//!   capacity. A bounded imbalance factor overrides affinity when it
+//!   would overload one replica.
+//!
+//! Health and failure aggregate across the set: one dead replica is
+//! routed around and reported `degraded`; only when every replica is
+//! down does the router report `down` and refuse with
+//! [`SubmitError::Closed`]. [`Router::drain`] fans one shared deadline
+//! out to every replica, so SIGINT/SIGTERM drains the whole set at
+//! once. Cancellation needs no routing: a [`SessionHandle`] carries its
+//! own channel to the replica that admitted it.
+//!
+//! The routing policy itself ([`DispatchPolicy`]) is a pure function of
+//! per-replica load snapshots ([`ReplicaLoad`]), shared between the
+//! live routers here and the deterministic tick-level loadtest driver
+//! in [`crate::workload::run_router_loadtest`] — the bench sweeps and
+//! the serving path exercise the exact same scoring and affinity code.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::Backend;
+use crate::coordinator::engine_loop::{
+    EngineLoop, Health, LoopConfig, SessionHandle, SubmitError, Submitter,
+};
+use crate::coordinator::scheduler::{Request, Scheduler};
+use crate::kvcache::alloc::{fnv1a_i32, fold_key, mix2_i32, FNV_OFFSET, MIX2_SEED};
+
+/// Lock a mutex, recovering the value from a poisoned lock (a panicking
+/// connection thread must not wedge routing for everyone else).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The dispatch surface the HTTP edge needs from the serving tier,
+/// whether it is one engine loop or many. A bare [`Submitter`]
+/// implements it as the single-replica identity, so `serve_listener`
+/// callers that pass `el.submitter()` keep today's behaviour exactly.
+pub trait Router: Send + Sync {
+    /// Dispatch a request to some replica. Multi-replica routers retry
+    /// the remaining live replicas when the chosen one refuses with
+    /// [`SubmitError::Closed`], so a single dead replica never turns
+    /// into a client-visible engine-down error.
+    fn submit(&self, req: Request) -> Result<SessionHandle, SubmitError>;
+
+    /// Aggregated serving health: `Ok` when every replica is healthy,
+    /// `Degraded` while any replica is degraded or down but at least
+    /// one still serves, `Down` when none do.
+    fn health(&self) -> Health;
+
+    /// Serving metrics. Single-replica routers return the engine loop's
+    /// one-line report unchanged; multi-replica routers return an
+    /// aggregate router line followed by one `replica<i> ...` labelled
+    /// line per replica. `Err` only when every replica is gone.
+    fn metrics_report(&self) -> Result<String, SubmitError>;
+
+    /// Sessions currently queued or running across all replicas.
+    fn in_flight(&self) -> usize;
+
+    /// Aggregate admission capacity (the HTTP edge sizes its
+    /// connection-thread budget from this).
+    fn queue_cap(&self) -> usize;
+
+    /// Begin a graceful drain on every replica under one shared
+    /// deadline: new submissions are refused immediately, in-flight
+    /// sessions finish until `timeout` from now.
+    fn drain(&self, timeout: Duration);
+
+    /// Number of engine-loop replicas behind this router.
+    fn replicas(&self) -> usize;
+}
+
+impl Router for Submitter {
+    fn submit(&self, req: Request) -> Result<SessionHandle, SubmitError> {
+        Submitter::submit(self, req)
+    }
+
+    fn health(&self) -> Health {
+        Submitter::health(self)
+    }
+
+    fn metrics_report(&self) -> Result<String, SubmitError> {
+        Submitter::metrics_report(self)
+    }
+
+    fn in_flight(&self) -> usize {
+        Submitter::in_flight(self)
+    }
+
+    fn queue_cap(&self) -> usize {
+        Submitter::queue_cap(self)
+    }
+
+    fn drain(&self, timeout: Duration) {
+        Submitter::drain(self, timeout)
+    }
+
+    fn replicas(&self) -> usize {
+        1
+    }
+}
+
+impl<T: Router + ?Sized> Router for Arc<T> {
+    fn submit(&self, req: Request) -> Result<SessionHandle, SubmitError> {
+        (**self).submit(req)
+    }
+
+    fn health(&self) -> Health {
+        (**self).health()
+    }
+
+    fn metrics_report(&self) -> Result<String, SubmitError> {
+        (**self).metrics_report()
+    }
+
+    fn in_flight(&self) -> usize {
+        (**self).in_flight()
+    }
+
+    fn queue_cap(&self) -> usize {
+        (**self).queue_cap()
+    }
+
+    fn drain(&self, timeout: Duration) {
+        (**self).drain(timeout)
+    }
+
+    fn replicas(&self) -> usize {
+        (**self).replicas()
+    }
+}
+
+/// Compute the page-boundary prefix chain hashes of a prompt — the
+/// exact keys `RequestKv::feed_tokens` snapshots (FNV-1a and a
+/// splitmix-style mixer chained per token from [`FNV_OFFSET`] /
+/// [`MIX2_SEED`], folded at every `page_size` boundary), so an affinity
+/// map keyed on these predicts which replica's prefix cache can adopt
+/// the prompt's pages.
+pub fn prefix_boundary_hashes(prompt: &[i32], page_size: usize) -> Vec<u128> {
+    if page_size == 0 {
+        return Vec::new();
+    }
+    let (mut fnv, mut mix) = (FNV_OFFSET, MIX2_SEED);
+    let mut out = Vec::with_capacity(prompt.len() / page_size);
+    for (i, &tok) in prompt.iter().enumerate() {
+        fnv = fnv1a_i32(fnv, tok);
+        mix = mix2_i32(mix, tok);
+        if (i + 1) % page_size == 0 {
+            out.push(fold_key(fnv, mix));
+        }
+    }
+    out
+}
+
+/// Live load signals of one replica, however it is hosted (engine loop
+/// or bare scheduler in the tick-level loadtest).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaLoad {
+    /// Whether the replica is serving (false routes around it).
+    pub alive: bool,
+    /// Sessions queued or running on the replica.
+    pub in_flight: usize,
+    /// Distinct KV pool pages the replica's allocator currently holds.
+    pub kv_pages_used: u64,
+}
+
+/// Tuning knobs of the KV-aware dispatch policy.
+#[derive(Debug, Clone)]
+pub struct KvRouterConfig {
+    /// Page-boundary stride of the affinity hashes; must match the
+    /// backend's `ModelConfig::page_size` for map hits to predict
+    /// prefix-cache adoptions ([`ReplicaSet::kv_router`] reads it from
+    /// replica 0 automatically).
+    pub page_size: usize,
+    /// Max boundary-hash entries in the affinity map; oldest entries
+    /// are evicted FIFO past this.
+    pub affinity_cap: usize,
+    /// Bounded imbalance factor: an affinity dispatch is overridden
+    /// (falling back to least-loaded) when it would leave the target's
+    /// queue depth above `imbalance * (least_loaded_depth + 1)`.
+    pub imbalance: f64,
+    /// Weight of relative KV-page pressure against queue depth in the
+    /// least-loaded score (pressure is normalized to `[0, 1]` across
+    /// replicas, so this is in units of queue slots).
+    pub kv_weight: f64,
+    /// Live routers refresh each replica's cached KV-page gauge every
+    /// this many submissions (an `EngineStats` round-trip per replica;
+    /// queue depth is an atomic read and always fresh).
+    pub stats_every: u64,
+}
+
+impl Default for KvRouterConfig {
+    fn default() -> Self {
+        KvRouterConfig {
+            // the sim backend's page size; real deployments read theirs
+            // via ReplicaSet::kv_router
+            page_size: 4,
+            affinity_cap: 4096,
+            imbalance: 2.0,
+            kv_weight: 1.0,
+            stats_every: 8,
+        }
+    }
+}
+
+/// Cumulative counters of one dispatch policy's routing decisions.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterCounters {
+    /// Routes whose deepest boundary hash was found in the affinity map
+    /// pointing at a live replica.
+    pub affinity_hits: u64,
+    /// Routes with no usable affinity entry (dispatched least-loaded).
+    pub affinity_misses: u64,
+    /// Affinity hits overridden by the bounded imbalance factor.
+    pub affinity_reroutes: u64,
+    /// Affinity entries evicted by the FIFO capacity bound.
+    pub affinity_evictions: u64,
+}
+
+struct AffinityEntry {
+    replica: usize,
+    stamp: u64,
+}
+
+/// The KV-aware routing policy core: pure state + scoring over
+/// [`ReplicaLoad`] snapshots, with no engine-loop plumbing — shared
+/// verbatim between [`KvAwareRouter`] and the tick-level loadtest
+/// driver so benches measure the exact policy the server runs.
+pub struct KvDispatchState {
+    cfg: KvRouterConfig,
+    affinity: HashMap<u128, AffinityEntry>,
+    /// FIFO insertion order of affinity keys; one slot per live map
+    /// entry (re-records update the entry in place, keeping its slot).
+    order: VecDeque<(u128, u64)>,
+    stamp: u64,
+    counters: RouterCounters,
+}
+
+impl KvDispatchState {
+    /// Fresh policy state.
+    pub fn new(cfg: KvRouterConfig) -> KvDispatchState {
+        KvDispatchState {
+            cfg,
+            affinity: HashMap::new(),
+            order: VecDeque::new(),
+            stamp: 0,
+            counters: RouterCounters::default(),
+        }
+    }
+
+    /// Least-loaded live replica by queue depth + weighted relative KV
+    /// pressure; ties break to the lowest index (deterministic).
+    fn least_loaded(&self, loads: &[ReplicaLoad]) -> Option<usize> {
+        let max_kv = loads
+            .iter()
+            .filter(|l| l.alive)
+            .map(|l| l.kv_pages_used)
+            .max()
+            .unwrap_or(0)
+            .max(1);
+        let score = |l: &ReplicaLoad| {
+            l.in_flight as f64 + self.cfg.kv_weight * (l.kv_pages_used as f64 / max_kv as f64)
+        };
+        loads
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.alive)
+            .min_by(|(_, a), (_, b)| {
+                score(a).partial_cmp(&score(b)).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Pick a replica for `prompt` given the current loads. `None` only
+    /// when no replica is alive. Affinity first: the deepest boundary
+    /// hash present in the map wins (the longest already-cached prefix);
+    /// an entry pointing at a dead replica is treated as a miss (and is
+    /// overwritten at the next [`KvDispatchState::record`]). The
+    /// bounded imbalance factor then compares queue depths only — KV
+    /// pressure steers the least-loaded choice but must not repel
+    /// affinity from the very replica whose retained pages raise it.
+    pub fn route(&mut self, prompt: &[i32], loads: &[ReplicaLoad]) -> Option<usize> {
+        let least = self.least_loaded(loads)?;
+        let mut target = None;
+        for h in prefix_boundary_hashes(prompt, self.cfg.page_size).into_iter().rev() {
+            if let Some(e) = self.affinity.get(&h) {
+                if loads.get(e.replica).map_or(false, |l| l.alive) {
+                    target = Some(e.replica);
+                }
+                break;
+            }
+        }
+        match target {
+            Some(t) => {
+                self.counters.affinity_hits += 1;
+                let bound = self.cfg.imbalance.max(1.0) * (loads[least].in_flight as f64 + 1.0);
+                if t != least && (loads[t].in_flight as f64 + 1.0) > bound {
+                    self.counters.affinity_reroutes += 1;
+                    Some(least)
+                } else {
+                    Some(t)
+                }
+            }
+            None => {
+                self.counters.affinity_misses += 1;
+                Some(least)
+            }
+        }
+    }
+
+    /// Record that `prompt` was dispatched to `replica`: every boundary
+    /// hash of the prompt now maps there (its pages will land in — or
+    /// already live in — that replica's prefix cache). Existing entries
+    /// are updated in place; new keys join the FIFO order and the
+    /// oldest are evicted past `affinity_cap`.
+    pub fn record(&mut self, prompt: &[i32], replica: usize) {
+        for h in prefix_boundary_hashes(prompt, self.cfg.page_size) {
+            match self.affinity.entry(h) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    e.get_mut().replica = replica;
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    self.stamp += 1;
+                    v.insert(AffinityEntry { replica, stamp: self.stamp });
+                    self.order.push_back((h, self.stamp));
+                }
+            }
+        }
+        while self.affinity.len() > self.cfg.affinity_cap.max(1) {
+            let Some((h, s)) = self.order.pop_front() else { break };
+            if self.affinity.get(&h).map_or(false, |e| e.stamp == s) {
+                self.affinity.remove(&h);
+                self.counters.affinity_evictions += 1;
+            }
+        }
+    }
+
+    /// Routing-decision counters so far.
+    pub fn counters(&self) -> RouterCounters {
+        self.counters
+    }
+
+    /// Live affinity-map entries (bounded by `affinity_cap`).
+    pub fn affinity_len(&self) -> usize {
+        self.affinity.len()
+    }
+}
+
+/// A dispatch policy over per-replica load snapshots: the pure routing
+/// core shared by the live routers and the tick-level loadtest driver.
+pub enum DispatchPolicy {
+    /// Strict rotation over live replicas — ignores load and prefix
+    /// affinity (the routing ablation).
+    RoundRobin {
+        /// Next rotation index (monotone, wrapped mod replica count).
+        next: usize,
+    },
+    /// KV-pressure + prefix-affinity routing (the production policy).
+    KvAware(KvDispatchState),
+}
+
+impl DispatchPolicy {
+    /// The round-robin ablation policy.
+    pub fn round_robin() -> DispatchPolicy {
+        DispatchPolicy::RoundRobin { next: 0 }
+    }
+
+    /// The KV-aware production policy.
+    pub fn kv_aware(cfg: KvRouterConfig) -> DispatchPolicy {
+        DispatchPolicy::KvAware(KvDispatchState::new(cfg))
+    }
+
+    /// Parse a `--router` CLI name (`kv`/`kv-aware`,
+    /// `round-robin`/`rr`). `page_size` seeds the KV policy's boundary
+    /// hashing and must match the backend's.
+    pub fn parse(name: &str, page_size: usize) -> Option<DispatchPolicy> {
+        Some(match name {
+            "kv" | "kv-aware" | "kvaware" => {
+                DispatchPolicy::kv_aware(KvRouterConfig { page_size, ..Default::default() })
+            }
+            "round-robin" | "roundrobin" | "rr" => DispatchPolicy::round_robin(),
+            _ => return None,
+        })
+    }
+
+    /// Stable policy name (metrics label / bench row key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin { .. } => "round-robin",
+            DispatchPolicy::KvAware(_) => "kv",
+        }
+    }
+
+    /// Pick a replica for `prompt`; `None` only when no replica is
+    /// alive.
+    pub fn route(&mut self, prompt: &[i32], loads: &[ReplicaLoad]) -> Option<usize> {
+        match self {
+            DispatchPolicy::RoundRobin { next } => {
+                let n = loads.len();
+                for k in 0..n {
+                    let i = (*next + k) % n;
+                    if loads[i].alive {
+                        *next = (i + 1) % n;
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            DispatchPolicy::KvAware(state) => state.route(prompt, loads),
+        }
+    }
+
+    /// Record the replica a prompt was actually dispatched to (no-op
+    /// for round-robin).
+    pub fn record(&mut self, prompt: &[i32], replica: usize) {
+        if let DispatchPolicy::KvAware(state) = self {
+            state.record(prompt, replica);
+        }
+    }
+
+    /// Routing-decision counters (all zero for round-robin).
+    pub fn counters(&self) -> RouterCounters {
+        match self {
+            DispatchPolicy::RoundRobin { .. } => RouterCounters::default(),
+            DispatchPolicy::KvAware(state) => state.counters(),
+        }
+    }
+}
+
+/// Aggregate health over a replica set: all down → `Down`; any down or
+/// degraded (with at least one serving) → `Degraded`; else `Ok`.
+fn aggregate_health(replicas: &[Submitter]) -> Health {
+    let mut alive = 0usize;
+    let mut degraded = false;
+    for s in replicas {
+        match s.health() {
+            Health::Ok => alive += 1,
+            Health::Degraded => {
+                alive += 1;
+                degraded = true;
+            }
+            Health::Down => degraded = true,
+        }
+    }
+    if alive == 0 {
+        Health::Down
+    } else if degraded {
+        Health::Degraded
+    } else {
+        Health::Ok
+    }
+}
+
+/// Multi-replica metrics: one aggregate `router=...` line, then one
+/// `replica<i> ...` labelled line per replica (a dead replica reports
+/// only `health=down`). `Err(Closed)` when every replica is gone, so
+/// the edge's engine-down latch fires exactly when nothing serves.
+fn aggregate_report(
+    kind: &str,
+    extra: &str,
+    replicas: &[Submitter],
+) -> Result<String, SubmitError> {
+    let mut rows = Vec::with_capacity(replicas.len() + 1);
+    let mut alive = 0usize;
+    for (i, s) in replicas.iter().enumerate() {
+        match s.metrics_report() {
+            Ok(r) => {
+                alive += 1;
+                rows.push(format!("replica{} {}", i, r));
+            }
+            Err(_) => rows.push(format!("replica{} health=down", i)),
+        }
+    }
+    if alive == 0 {
+        return Err(SubmitError::Closed);
+    }
+    let head = format!(
+        "router={} replicas={} alive={}{} health={}",
+        kind,
+        replicas.len(),
+        alive,
+        extra,
+        aggregate_health(replicas).as_str()
+    );
+    let mut out = head;
+    for row in rows {
+        out.push('\n');
+        out.push_str(&row);
+    }
+    Ok(out)
+}
+
+/// Fan one shared drain deadline out to every replica.
+fn drain_all(replicas: &[Submitter], timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    for s in replicas {
+        s.drain_until(deadline);
+    }
+}
+
+/// Route `req` with `policy` over `loads`, then submit: the routed
+/// replica first, then every other live replica by ascending queue
+/// depth. `Closed` from one replica routes around it; `Busy` is
+/// remembered and returned only when every live replica is busy;
+/// `Draining` propagates (drains are router-wide). The policy records
+/// the replica that actually admitted the request.
+fn dispatch(
+    replicas: &[Submitter],
+    policy: &Mutex<DispatchPolicy>,
+    loads: &[ReplicaLoad],
+    req: Request,
+) -> Result<SessionHandle, SubmitError> {
+    let Some(first) = lock(policy).route(&req.prompt, loads) else {
+        return Err(SubmitError::Closed);
+    };
+    let mut order = vec![first];
+    let mut rest: Vec<usize> =
+        (0..replicas.len()).filter(|&i| i != first && loads[i].alive).collect();
+    rest.sort_by_key(|&i| loads[i].in_flight);
+    order.extend(rest);
+    let mut busy = None;
+    for &i in &order {
+        match replicas[i].submit(req.clone()) {
+            Ok(h) => {
+                lock(policy).record(&req.prompt, i);
+                return Ok(h);
+            }
+            Err(e @ SubmitError::Busy { .. }) => {
+                busy.get_or_insert(e);
+            }
+            Err(SubmitError::Draining) => return Err(SubmitError::Draining),
+            Err(SubmitError::Closed) => {}
+        }
+    }
+    Err(busy.unwrap_or(SubmitError::Closed))
+}
+
+/// N=1 passthrough router: today's single-`Submitter` path with a
+/// router-shaped type. Responses, metrics, and health are bit-identical
+/// to serving the submitter directly.
+#[derive(Clone)]
+pub struct SingleRouter {
+    replica: Submitter,
+}
+
+impl SingleRouter {
+    /// Wrap the one replica's submitter.
+    pub fn new(replica: Submitter) -> SingleRouter {
+        SingleRouter { replica }
+    }
+}
+
+impl Router for SingleRouter {
+    fn submit(&self, req: Request) -> Result<SessionHandle, SubmitError> {
+        self.replica.submit(req)
+    }
+
+    fn health(&self) -> Health {
+        self.replica.health()
+    }
+
+    fn metrics_report(&self) -> Result<String, SubmitError> {
+        self.replica.metrics_report()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.replica.in_flight()
+    }
+
+    fn queue_cap(&self) -> usize {
+        self.replica.queue_cap()
+    }
+
+    fn drain(&self, timeout: Duration) {
+        self.replica.drain(timeout)
+    }
+
+    fn replicas(&self) -> usize {
+        1
+    }
+}
+
+/// Strict-rotation ablation router: live replicas take turns, with no
+/// load or affinity signal. Dead replicas are skipped.
+#[derive(Clone)]
+pub struct RoundRobinRouter {
+    replicas: Arc<Vec<Submitter>>,
+    policy: Arc<Mutex<DispatchPolicy>>,
+}
+
+impl RoundRobinRouter {
+    /// Rotate over `replicas` (panics if empty).
+    pub fn new(replicas: Vec<Submitter>) -> RoundRobinRouter {
+        assert!(!replicas.is_empty(), "router needs at least one replica");
+        RoundRobinRouter {
+            replicas: Arc::new(replicas),
+            policy: Arc::new(Mutex::new(DispatchPolicy::round_robin())),
+        }
+    }
+
+    fn loads(&self) -> Vec<ReplicaLoad> {
+        self.replicas
+            .iter()
+            .map(|s| ReplicaLoad {
+                alive: s.health() != Health::Down,
+                in_flight: s.in_flight(),
+                kv_pages_used: 0,
+            })
+            .collect()
+    }
+}
+
+impl Router for RoundRobinRouter {
+    fn submit(&self, req: Request) -> Result<SessionHandle, SubmitError> {
+        dispatch(&self.replicas, &self.policy, &self.loads(), req)
+    }
+
+    fn health(&self) -> Health {
+        aggregate_health(&self.replicas)
+    }
+
+    fn metrics_report(&self) -> Result<String, SubmitError> {
+        aggregate_report("round-robin", "", &self.replicas)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.replicas.iter().map(|s| s.in_flight()).sum()
+    }
+
+    fn queue_cap(&self) -> usize {
+        self.replicas.iter().map(|s| s.queue_cap()).sum()
+    }
+
+    fn drain(&self, timeout: Duration) {
+        drain_all(&self.replicas, timeout)
+    }
+
+    fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+}
+
+/// Cached per-replica KV-page gauges: queue depth is an atomic read per
+/// submit, but `kv_pages_used` needs an `EngineStats` round-trip to
+/// each loop, so it refreshes every `every` submissions.
+struct PressureCache {
+    pages: Vec<u64>,
+    submits: u64,
+    every: u64,
+}
+
+/// The production router: KV-pressure + queue-depth balancing with
+/// prefix-affinity steering (see the module docs for the policy).
+#[derive(Clone)]
+pub struct KvAwareRouter {
+    replicas: Arc<Vec<Submitter>>,
+    policy: Arc<Mutex<DispatchPolicy>>,
+    pressure: Arc<Mutex<PressureCache>>,
+}
+
+impl KvAwareRouter {
+    /// Route over `replicas` with the given policy knobs (panics if
+    /// `replicas` is empty). `cfg.page_size` must match the backend's;
+    /// [`ReplicaSet::kv_router`] fills it in automatically.
+    pub fn new(replicas: Vec<Submitter>, cfg: KvRouterConfig) -> KvAwareRouter {
+        assert!(!replicas.is_empty(), "router needs at least one replica");
+        let n = replicas.len();
+        let every = cfg.stats_every.max(1);
+        KvAwareRouter {
+            replicas: Arc::new(replicas),
+            policy: Arc::new(Mutex::new(DispatchPolicy::kv_aware(cfg))),
+            pressure: Arc::new(Mutex::new(PressureCache {
+                pages: vec![0; n],
+                submits: 0,
+                every,
+            })),
+        }
+    }
+
+    /// Routing-decision counters so far (also embedded in
+    /// [`Router::metrics_report`]).
+    pub fn counters(&self) -> RouterCounters {
+        lock(&self.policy).counters()
+    }
+
+    fn loads(&self) -> Vec<ReplicaLoad> {
+        let pages = {
+            let mut p = lock(&self.pressure);
+            if p.submits % p.every == 0 {
+                for (i, s) in self.replicas.iter().enumerate() {
+                    if s.health() != Health::Down {
+                        if let Ok(stats) = s.engine_stats() {
+                            p.pages[i] = stats.kv_pages_used;
+                        }
+                    }
+                }
+            }
+            p.submits += 1;
+            p.pages.clone()
+        };
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ReplicaLoad {
+                alive: s.health() != Health::Down,
+                in_flight: s.in_flight(),
+                kv_pages_used: pages[i],
+            })
+            .collect()
+    }
+}
+
+impl Router for KvAwareRouter {
+    fn submit(&self, req: Request) -> Result<SessionHandle, SubmitError> {
+        dispatch(&self.replicas, &self.policy, &self.loads(), req)
+    }
+
+    fn health(&self) -> Health {
+        aggregate_health(&self.replicas)
+    }
+
+    fn metrics_report(&self) -> Result<String, SubmitError> {
+        let c = self.counters();
+        let extra = format!(
+            " affinity_hits={} affinity_misses={} affinity_reroutes={} affinity_evictions={}",
+            c.affinity_hits, c.affinity_misses, c.affinity_reroutes, c.affinity_evictions
+        );
+        aggregate_report("kv", &extra, &self.replicas)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.replicas.iter().map(|s| s.in_flight()).sum()
+    }
+
+    fn queue_cap(&self) -> usize {
+        self.replicas.iter().map(|s| s.queue_cap()).sum()
+    }
+
+    fn drain(&self, timeout: Duration) {
+        drain_all(&self.replicas, timeout)
+    }
+
+    fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+}
+
+/// Which router policy `--router` selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    /// KV-pressure + prefix-affinity dispatch (the default).
+    Kv,
+    /// Strict rotation (the routing ablation).
+    RoundRobin,
+}
+
+impl RouterKind {
+    /// Parse a `--router` CLI name (`kv`/`kv-aware`,
+    /// `round-robin`/`rr`).
+    pub fn parse(s: &str) -> Option<RouterKind> {
+        Some(match s {
+            "kv" | "kv-aware" | "kvaware" => RouterKind::Kv,
+            "round-robin" | "roundrobin" | "rr" => RouterKind::RoundRobin,
+            _ => return None,
+        })
+    }
+
+    /// The stable CLI / metrics name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouterKind::Kv => "kv",
+            RouterKind::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// Owns N engine-loop replicas: spawning, router construction, and
+/// set-wide shutdown. Each replica gets its own scheduler and backend
+/// from the factory — per-replica KV allocators stay fully independent,
+/// so replicas never contend on an allocator lock and a replica crash
+/// cannot corrupt a neighbour's pool.
+pub struct ReplicaSet {
+    loops: Vec<EngineLoop>,
+}
+
+impl ReplicaSet {
+    /// Spawn `n` replicas (min 1). `factory(i)` builds replica `i`'s
+    /// scheduler-constructor closure, which runs on — and is re-invoked
+    /// by — that replica's supervised engine thread, exactly as with
+    /// [`EngineLoop::spawn`]. If a later replica fails to spawn, the
+    /// earlier ones are shut down before the error returns.
+    pub fn spawn<B, G, F>(n: usize, cfg: LoopConfig, mut factory: F) -> Result<ReplicaSet>
+    where
+        B: Backend + 'static,
+        G: FnMut() -> Result<Scheduler<B>> + Send + 'static,
+        F: FnMut(usize) -> G,
+    {
+        let n = n.max(1);
+        let mut loops = Vec::with_capacity(n);
+        for i in 0..n {
+            match EngineLoop::spawn(cfg.clone(), factory(i)) {
+                Ok(el) => loops.push(el),
+                Err(e) => {
+                    for el in loops {
+                        el.shutdown();
+                    }
+                    return Err(e.context(format!("spawning replica {}", i)));
+                }
+            }
+        }
+        Ok(ReplicaSet { loops })
+    }
+
+    /// Number of replicas in the set.
+    pub fn len(&self) -> usize {
+        self.loops.len()
+    }
+
+    /// Whether the set is empty (never true for a spawned set).
+    pub fn is_empty(&self) -> bool {
+        self.loops.is_empty()
+    }
+
+    /// Cloned submitters, one per replica in index order.
+    pub fn submitters(&self) -> Vec<Submitter> {
+        self.loops.iter().map(|el| el.submitter()).collect()
+    }
+
+    /// Passthrough router over replica 0 (use with N=1).
+    pub fn single_router(&self) -> SingleRouter {
+        SingleRouter::new(self.loops[0].submitter())
+    }
+
+    /// Round-robin ablation router over the whole set.
+    pub fn round_robin_router(&self) -> RoundRobinRouter {
+        RoundRobinRouter::new(self.submitters())
+    }
+
+    /// KV-aware router over the whole set, with the boundary-hash page
+    /// size read from replica 0's model config.
+    pub fn kv_router(&self) -> Result<KvAwareRouter> {
+        let model = self.loops[0]
+            .submitter()
+            .model_config()
+            .map_err(|e| anyhow!("reading replica model config: {}", e))?;
+        let cfg = KvRouterConfig { page_size: model.page_size, ..Default::default() };
+        Ok(KvAwareRouter::new(self.submitters(), cfg))
+    }
+
+    /// Build the serving router for `kind`. One replica always gets the
+    /// [`SingleRouter`] passthrough (bit-identical to the pre-router
+    /// stack) regardless of `kind`.
+    pub fn build_router(&self, kind: RouterKind) -> Result<Arc<dyn Router>> {
+        if self.len() == 1 {
+            return Ok(Arc::new(self.single_router()));
+        }
+        Ok(match kind {
+            RouterKind::Kv => Arc::new(self.kv_router()?),
+            RouterKind::RoundRobin => Arc::new(self.round_robin_router()),
+        })
+    }
+
+    /// Stop every replica immediately (in-flight sessions cancelled)
+    /// and join the engine threads.
+    pub fn shutdown(self) {
+        for el in self.loops {
+            el.shutdown();
+        }
+    }
+
+    /// Graceful set-wide shutdown: fan one shared drain deadline out to
+    /// every replica first (so drains run concurrently, not stacked),
+    /// then join each loop as it finishes.
+    pub fn shutdown_graceful(self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        for el in &self.loops {
+            el.submitter().drain_until(deadline);
+        }
+        for el in self.loops {
+            el.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::SchedulerConfig;
+    use crate::coordinator::sim_backend::SimBackend;
+
+    fn loads(spec: &[(bool, usize, u64)]) -> Vec<ReplicaLoad> {
+        spec.iter()
+            .map(|&(alive, in_flight, kv)| ReplicaLoad { alive, in_flight, kv_pages_used: kv })
+            .collect()
+    }
+
+    #[test]
+    fn boundary_hashes_are_prefix_consistent_and_stride_aligned() {
+        let long: Vec<i32> = (0..17).collect();
+        let h_long = prefix_boundary_hashes(&long, 4);
+        assert_eq!(h_long.len(), 4, "one hash per completed page");
+        let h_short = prefix_boundary_hashes(&long[..8], 4);
+        assert_eq!(h_short, h_long[..2], "shared prefix shares hashes");
+        let mut other = long.clone();
+        other[0] = 999;
+        assert_ne!(prefix_boundary_hashes(&other, 4)[0], h_long[0]);
+        assert!(prefix_boundary_hashes(&long, 0).is_empty());
+        assert!(prefix_boundary_hashes(&long[..3], 4).is_empty());
+    }
+
+    #[test]
+    fn kv_policy_routes_miss_to_least_loaded_and_hit_to_recorded_replica() {
+        let cfg = KvRouterConfig { page_size: 4, ..Default::default() };
+        let mut st = KvDispatchState::new(cfg);
+        let prompt: Vec<i32> = (0..12).collect();
+        // miss: replica 1 has the lower queue depth
+        let l = loads(&[(true, 3, 0), (true, 0, 0)]);
+        assert_eq!(st.route(&prompt, &l), Some(1));
+        st.record(&prompt, 1);
+        // hit: same prompt sticks to replica 1 even though 0 drained
+        let l = loads(&[(true, 0, 0), (true, 1, 0)]);
+        assert_eq!(st.route(&prompt, &l), Some(1));
+        // a shorter shared prefix still hits (page-boundary chain)
+        assert_eq!(st.route(&prompt[..8], &l), Some(1));
+        let c = st.counters();
+        assert_eq!((c.affinity_hits, c.affinity_misses), (2, 1));
+    }
+
+    #[test]
+    fn kv_pressure_steers_misses_but_does_not_repel_affinity() {
+        let cfg = KvRouterConfig { page_size: 4, kv_weight: 1.0, ..Default::default() };
+        let mut st = KvDispatchState::new(cfg);
+        let prompt: Vec<i32> = (0..8).collect();
+        // equal queues, replica 0 holds all the KV pages: miss goes to 1
+        let l = loads(&[(true, 0, 100), (true, 0, 0)]);
+        assert_eq!(st.route(&prompt, &l), Some(1));
+        st.record(&prompt, 0);
+        // affinity points at the high-pressure replica (its retained
+        // pages are exactly why) and must win while queues stay level
+        assert_eq!(st.route(&prompt, &l), Some(0));
+    }
+
+    #[test]
+    fn imbalance_bound_overrides_affinity() {
+        let cfg = KvRouterConfig { page_size: 4, imbalance: 2.0, ..Default::default() };
+        let mut st = KvDispatchState::new(cfg);
+        let prompt: Vec<i32> = (0..8).collect();
+        st.record(&prompt, 0);
+        // depth 5 vs 1: 5+1 > 2.0*(1+1) → rerouted to least-loaded
+        let l = loads(&[(true, 5, 0), (true, 1, 0)]);
+        assert_eq!(st.route(&prompt, &l), Some(1));
+        assert_eq!(st.counters().affinity_reroutes, 1);
+        // depth 2 vs 1: 2+1 <= 2.0*(1+1) → affinity holds
+        let l = loads(&[(true, 2, 0), (true, 1, 0)]);
+        assert_eq!(st.route(&prompt, &l), Some(0));
+    }
+
+    #[test]
+    fn dead_replica_affinity_is_a_miss_and_rerecorded() {
+        let cfg = KvRouterConfig { page_size: 4, ..Default::default() };
+        let mut st = KvDispatchState::new(cfg);
+        let prompt: Vec<i32> = (0..8).collect();
+        st.record(&prompt, 0);
+        let l = loads(&[(false, 0, 0), (true, 2, 0)]);
+        assert_eq!(st.route(&prompt, &l), Some(1), "route around the dead replica");
+        st.record(&prompt, 1);
+        let l = loads(&[(true, 0, 0), (true, 0, 0)]);
+        assert_eq!(st.route(&prompt, &l), Some(1), "affinity follows the re-record");
+        assert_eq!(st.route(&prompt, &loads(&[(false, 0, 0), (false, 0, 0)])), None);
+    }
+
+    #[test]
+    fn affinity_map_is_fifo_bounded() {
+        let cfg = KvRouterConfig { page_size: 1, affinity_cap: 4, ..Default::default() };
+        let mut st = KvDispatchState::new(cfg);
+        for i in 0..8i32 {
+            st.record(&[i * 1000], i as usize % 2);
+        }
+        assert_eq!(st.affinity_len(), 4);
+        assert_eq!(st.counters().affinity_evictions, 4);
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_dead() {
+        let mut p = DispatchPolicy::round_robin();
+        let l = loads(&[(true, 0, 0), (false, 0, 0), (true, 9, 0)]);
+        let picks: Vec<_> = (0..4).map(|_| p.route(&[], &l).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        assert_eq!(p.counters(), RouterCounters::default());
+    }
+
+    fn spawn_sim_replica() -> EngineLoop {
+        EngineLoop::spawn(LoopConfig { queue_cap: 8, max_engine_restarts: 0 }, || {
+            Ok(Scheduler::new(
+                SimBackend::tiny(),
+                SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() },
+            ))
+        })
+        .expect("sim replica spawns")
+    }
+
+    #[test]
+    fn live_router_routes_around_a_dead_replica_and_degrades() {
+        let dead = spawn_sim_replica();
+        let live = spawn_sim_replica();
+        let dead_sub = dead.submitter();
+        let router = KvAwareRouter::new(
+            vec![dead.submitter(), live.submitter()],
+            KvRouterConfig { page_size: 4, ..Default::default() },
+        );
+        assert_eq!(Router::health(&router), Health::Ok);
+        dead.shutdown();
+        assert_eq!(dead_sub.health(), Health::Down);
+        assert_eq!(Router::health(&router), Health::Degraded, "one dead replica degrades");
+        for i in 0..3 {
+            let h = router
+                .submit(Request::from_text(0, &format!("route around {} ", i), 4))
+                .expect("live replica admits");
+            assert_eq!(h.wait().expect("completes").generated_tokens, 4);
+        }
+        let report = Router::metrics_report(&router).expect("one replica still answers");
+        assert!(report.starts_with("router=kv replicas=2 alive=1"), "{}", report);
+        assert!(report.contains("replica0 health=down"), "{}", report);
+        assert!(report.contains("replica1 "), "{}", report);
+        assert!(report.ends_with("health=ok") || report.contains("\nreplica"), "{}", report);
+        live.shutdown();
+        assert_eq!(Router::health(&router), Health::Down, "all dead is down");
+        assert!(Router::metrics_report(&router).is_err());
+        assert!(matches!(
+            router.submit(Request::from_text(0, "too late ", 2)),
+            Err(SubmitError::Closed)
+        ));
+    }
+
+    #[test]
+    fn replica_set_spawns_n_and_aggregates_capacity() {
+        let set = ReplicaSet::spawn(
+            3,
+            LoopConfig { queue_cap: 4, max_engine_restarts: 0 },
+            |_i| {
+                || {
+                    Ok(Scheduler::new(
+                        SimBackend::tiny(),
+                        SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() },
+                    ))
+                }
+            },
+        )
+        .expect("set spawns");
+        assert_eq!(set.len(), 3);
+        let router = set.build_router(RouterKind::Kv).expect("router builds");
+        assert_eq!(router.replicas(), 3);
+        assert_eq!(router.queue_cap(), 12, "aggregate admission capacity");
+        let c = set.submitters()[0].model_config().expect("model config answers");
+        assert_eq!(c.page_size, crate::coordinator::sim_backend::sim_config().page_size);
+        let h = router.submit(Request::from_text(0, "spawned set serves ", 3)).unwrap();
+        assert_eq!(h.wait().unwrap().generated_tokens, 3);
+        set.shutdown_graceful(Duration::from_secs(5));
+    }
+}

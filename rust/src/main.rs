@@ -11,7 +11,8 @@ use anyhow::{anyhow, Result};
 
 use freekv::config::FreeKvParams;
 use freekv::coordinator::engine::{Backend, Engine, SampleParams};
-use freekv::coordinator::engine_loop::{EngineLoop, LoopConfig};
+use freekv::coordinator::engine_loop::LoopConfig;
+use freekv::coordinator::router::{DispatchPolicy, ReplicaSet, RouterKind};
 use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
 use freekv::coordinator::sim_backend::SimBackend;
 use freekv::coordinator::tokenizer;
@@ -152,41 +153,64 @@ fn run() -> Result<()> {
                 max_lanes: params.max_lanes,
                 ..Default::default()
             };
-            let loop_cfg = LoopConfig { queue_cap: args.usize_or("queue-cap", 64) };
+            let loop_cfg =
+                LoopConfig { queue_cap: args.usize_or("queue-cap", 64), ..Default::default() };
             let warm = args.flag("warmup");
-            // The engine is constructed on the loop thread (the PJRT
-            // client is !Send); --sim swaps in the artifact-free backend.
-            let el = if args.flag("sim") {
+            // --replicas N runs N independent engine loops behind one
+            // router; --router picks the dispatch policy (kv-aware
+            // pressure + prefix affinity, or the round-robin ablation).
+            // N=1 is a bit-identical passthrough to the single loop.
+            let replicas = args.usize_or("replicas", 1).max(1);
+            let router_kind = RouterKind::parse(&args.str_or("router", "kv"))
+                .ok_or_else(|| anyhow!("unknown --router (expected kv|round-robin)"))?;
+            // Each replica's engine is constructed on its own loop
+            // thread (the PJRT client is !Send); --sim swaps in the
+            // artifact-free backend. Per-replica schedulers, backends,
+            // and KV allocators are fully independent.
+            let set = if args.flag("sim") {
                 let (pool_pages, prefix) = (params.kv_pool_pages as u64, params.prefix_cache);
                 let retain = params.kv_retain_pages as u64;
                 let dtype = params.kv_dtype;
                 let lock = params.kv_lock;
-                // One fault plan for the whole process: a supervised
-                // engine restart keeps advancing the same schedule
-                // instead of replaying it from call index 0.
-                let plan = params
-                    .chaos_seed
-                    .map(|s| std::sync::Arc::new(freekv::util::fault::FaultPlan::chaos(s)));
-                EngineLoop::spawn(loop_cfg, move || {
-                    let mut b =
-                        SimBackend::tiny_with_pool_opts(pool_pages, prefix, retain, dtype, lock);
-                    if let Some(p) = &plan {
-                        b.set_faults(p.clone());
+                // One fault plan per replica: a supervised engine
+                // restart keeps advancing the same schedule instead of
+                // replaying it from call index 0, and replicas fault
+                // independently (seed offset by replica index).
+                let chaos_seed = params.chaos_seed;
+                ReplicaSet::spawn(replicas, loop_cfg, move |i| {
+                    let plan = chaos_seed.map(|s| {
+                        std::sync::Arc::new(freekv::util::fault::FaultPlan::chaos(s + i as u64))
+                    });
+                    let scfg = scfg.clone();
+                    move || {
+                        let mut b = SimBackend::tiny_with_pool_opts(
+                            pool_pages, prefix, retain, dtype, lock,
+                        );
+                        if let Some(p) = &plan {
+                            b.set_faults(p.clone());
+                        }
+                        Ok(Scheduler::new(b, scfg.clone()))
                     }
-                    Ok(Scheduler::new(b, scfg.clone()))
                 })?
             } else {
-                EngineLoop::spawn(loop_cfg, move || {
-                    let rt = Runtime::load(&artifacts)?;
-                    let eng = Engine::new(rt, &model, params.clone())?;
-                    if warm {
-                        // warms the engine runtime and every pool worker
-                        let n = eng.warmup()?;
-                        println!("[freekv] warmed {} artifacts", n);
+                ReplicaSet::spawn(replicas, loop_cfg, move |_i| {
+                    let artifacts = artifacts.clone();
+                    let model = model.clone();
+                    let params = params.clone();
+                    let scfg = scfg.clone();
+                    move || {
+                        let rt = Runtime::load(&artifacts)?;
+                        let eng = Engine::new(rt, &model, params.clone())?;
+                        if warm {
+                            // warms the engine runtime and every pool worker
+                            let n = eng.warmup()?;
+                            println!("[freekv] warmed {} artifacts", n);
+                        }
+                        Ok(Scheduler::new(eng, scfg.clone()))
                     }
-                    Ok(Scheduler::new(eng, scfg.clone()))
                 })?
             };
+            let router = set.build_router(router_kind)?;
             let max_requests = args.get("max-requests").and_then(|v| v.parse().ok());
             // --drain-secs: on shutdown (Ctrl-C / SIGTERM included), let
             // running sessions finish for this long before cancelling
@@ -214,11 +238,13 @@ fn run() -> Result<()> {
                 shutdown: Some(stop.clone()),
                 ..Default::default()
             };
-            let result = freekv::server::serve_listener(listener, el.submitter(), opts);
+            let result = freekv::server::serve_listener(listener, router, opts);
+            // Set-wide teardown: the graceful path fans one shared
+            // drain deadline out to every replica before joining them.
             if drain.is_zero() {
-                el.shutdown();
+                set.shutdown();
             } else {
-                el.shutdown_graceful(drain);
+                set.shutdown_graceful(drain);
             }
             result
         }
@@ -230,24 +256,47 @@ fn run() -> Result<()> {
                 max_lanes: params.max_lanes,
                 ..Default::default()
             };
+            // --replicas N replays the workload across N independent
+            // schedulers through the same dispatch policy the serving
+            // tier runs (--router kv|round-robin); N=1 keeps the
+            // original single-scheduler replay bit-identical.
+            let replicas = args.usize_or("replicas", 1).max(1);
             if args.flag("sim") {
-                let mut backend = SimBackend::tiny_with_pool_opts(
-                    params.kv_pool_pages as u64,
-                    params.prefix_cache,
-                    params.kv_retain_pages as u64,
-                    params.kv_dtype,
-                    params.kv_lock,
-                );
-                if let Some(seed) = params.chaos_seed {
-                    backend.set_faults(std::sync::Arc::new(
-                        freekv::util::fault::FaultPlan::chaos(seed),
-                    ));
+                let make = |i: usize| {
+                    let mut backend = SimBackend::tiny_with_pool_opts(
+                        params.kv_pool_pages as u64,
+                        params.prefix_cache,
+                        params.kv_retain_pages as u64,
+                        params.kv_dtype,
+                        params.kv_lock,
+                    );
+                    // per-replica fault schedules, offset by index
+                    if let Some(seed) = params.chaos_seed {
+                        backend.set_faults(std::sync::Arc::new(
+                            freekv::util::fault::FaultPlan::chaos(seed + i as u64),
+                        ));
+                    }
+                    Scheduler::new(backend, scfg.clone())
+                };
+                if replicas == 1 {
+                    loadtest(make(0), &args)
+                } else {
+                    router_loadtest((0..replicas).map(make).collect(), &args)
                 }
-                loadtest(Scheduler::new(backend, scfg), &args)
-            } else {
+            } else if replicas == 1 {
                 let rt = Runtime::load(&artifacts)?;
                 let eng = Engine::new(rt, &model, params)?;
                 loadtest(Scheduler::new(eng, scfg), &args)
+            } else {
+                // N engines on this one thread (Runtime is !Send): fine
+                // for a replay, which ticks them in lockstep anyway.
+                let mut scheds = Vec::with_capacity(replicas);
+                for _ in 0..replicas {
+                    let rt = Runtime::load(&artifacts)?;
+                    let eng = Engine::new(rt, &model, params.clone())?;
+                    scheds.push(Scheduler::new(eng, scfg.clone()));
+                }
+                router_loadtest(scheds, &args)
             }
         }
         Some("eval") => {
@@ -262,7 +311,7 @@ fn run() -> Result<()> {
              [--prefix-cache[=off|resident|retained]] [--kv-retain-pages 0] [--sim] \
              [--chaos-seed N] \
              [--queue-cap 64] [--max-batch 4] [--admit-below 4] [--microbatch-min 0] \
-             [--max-conns 0] [--drain-secs 5]\n\
+             [--max-conns 0] [--drain-secs 5] [--replicas 1] [--router kv|round-robin]\n\
              eval exhibits: fig1-accuracy fig1-breakdown fig2-pareto fig3-similarity table1 \
              table2 table3 table4 table5 table6 table7 table8 table9 fig7 fig8 fig9 fig10 \
              dtype oom prefix-mem real-breakdown real-correction fig16-20 all"
@@ -270,8 +319,8 @@ fn run() -> Result<()> {
     }
 }
 
-fn loadtest<B: Backend>(mut sched: Scheduler<B>, args: &Args) -> Result<()> {
-    let spec = freekv::workload::WorkloadSpec {
+fn workload_spec(args: &Args) -> Result<freekv::workload::WorkloadSpec> {
+    Ok(freekv::workload::WorkloadSpec {
         scenario: freekv::workload::Scenario::parse(&args.str_or("scenario", "mixed"))
             .ok_or_else(|| anyhow!("unknown scenario"))?,
         rate: args.f64_or("rate", 4.0),
@@ -279,7 +328,11 @@ fn loadtest<B: Backend>(mut sched: Scheduler<B>, args: &Args) -> Result<()> {
         max_prompt: args.usize_or("max-prompt", 1000),
         max_output: args.usize_or("max-output", 48),
         seed: args.u64_or("seed", 0xF00D),
-    };
+    })
+}
+
+fn loadtest<B: Backend>(mut sched: Scheduler<B>, args: &Args) -> Result<()> {
+    let spec = workload_spec(args)?;
     let workload = freekv::workload::generate(&spec);
     let report =
         freekv::workload::run_loadtest(&mut sched, workload, args.f64_or("ticks-per-sec", 8.0))?;
@@ -300,6 +353,60 @@ fn loadtest<B: Backend>(mut sched: Scheduler<B>, args: &Args) -> Result<()> {
             "loadtest: degraded run — {} tick(s) hit an injected or real engine fault; \
              every request still reached a terminal outcome",
             report.tick_faults
+        );
+    }
+    Ok(())
+}
+
+/// Multi-replica replay: the same workload through [`DispatchPolicy`]
+/// over N schedulers, with per-replica and routing breakdowns printed.
+fn router_loadtest<B: Backend>(mut scheds: Vec<Scheduler<B>>, args: &Args) -> Result<()> {
+    let spec = workload_spec(args)?;
+    let page_size = scheds[0].engine.model().page_size;
+    let mut policy = DispatchPolicy::parse(&args.str_or("router", "kv"), page_size)
+        .ok_or_else(|| anyhow!("unknown --router (expected kv|round-robin)"))?;
+    let tps = args.f64_or("ticks-per-sec", 8.0);
+    let workload = freekv::workload::generate(&spec);
+    let report = freekv::workload::run_router_loadtest(&mut scheds, &mut policy, workload, tps)?;
+    println!(
+        "loadtest: router={} replicas={} — {} completed ({} failed, {} engine faults) \
+         in {:.2}s over {} ticks, max inflight {}, {} tokens out",
+        policy.name(),
+        scheds.len(),
+        report.completed,
+        report.failed,
+        report.tick_faults,
+        report.wall_secs,
+        report.ticks,
+        report.max_inflight,
+        report.tokens_out
+    );
+    let c = report.counters;
+    println!(
+        "router: modeled {:.1} tok/s, ttft p95 {:.3}s, retained hits {} \
+         (concentration {:.2}), prefill tokens saved {}, \
+         affinity hits/misses/reroutes/evictions {}/{}/{}/{}",
+        report.modeled_throughput(tps),
+        report.ttft_p95_secs,
+        report.retained_hits(),
+        report.retained_hit_concentration(),
+        report.prefill_tokens_saved(),
+        c.affinity_hits,
+        c.affinity_misses,
+        c.affinity_reroutes,
+        c.affinity_evictions
+    );
+    for (i, p) in report.per_replica.iter().enumerate() {
+        println!(
+            "replica{}: completed={} failed={} tokens_out={} retained_hits={} \
+             prefill_tokens_saved={} pages_retained={}",
+            i,
+            p.completed,
+            p.failed,
+            p.tokens_out,
+            p.retained_hits,
+            p.prefill_tokens_saved,
+            p.kv_pages_retained
         );
     }
     Ok(())

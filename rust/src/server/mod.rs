@@ -1,9 +1,13 @@
 //! Minimal HTTP/1.1 edge over the event-driven serving API. Hand-rolled
 //! on `std::net` (the offline registry has no hyper/tokio): one acceptor
-//! plus a thread per connection, all of them talking to the engine
-//! thread only through a cloneable [`Submitter`] — so concurrent
-//! `/generate` requests genuinely share decode batches instead of
-//! serializing behind a single request/response loop.
+//! plus a thread per connection, all of them talking to the serving
+//! tier only through a [`Router`] — so concurrent `/generate` requests
+//! genuinely share decode batches instead of serializing behind a
+//! single request/response loop. A bare [`Submitter`] *is* the
+//! single-replica router (today's path, unchanged); multi-replica
+//! deployments pass a `KvAwareRouter`/`RoundRobinRouter` over N engine
+//! loops instead and the edge neither knows nor cares — dispatch,
+//! health aggregation, and drain fan-out all live behind the trait.
 //!
 //! API:
 //!   POST /generate  {"prompt": "...", "max_tokens": 64,
@@ -63,6 +67,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::engine::SampleParams;
 use crate::coordinator::engine_loop::{SessionEvent, SessionHandle, SubmitError, Submitter};
+use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::Request;
 use crate::util::json::{Json, JsonObj};
 
@@ -358,17 +363,18 @@ pub struct ServeOptions {
     /// Wire-parsing limits (line/header/body caps, read timeouts).
     pub limits: HttpLimits,
     /// Cap on generation-serving connection threads. `0` derives the
-    /// cap from the submitter's admission depth (`2 * queue_cap`, min
-    /// 8): every admissible session can hold a connection plus room for
+    /// cap from the router's aggregate admission depth (`2 * queue_cap`,
+    /// min 8): every admissible session can hold a connection plus room for
     /// 429 rejections, but a connection flood can no longer spawn
     /// unbounded threads. At the cap, `/generate` connections are
     /// answered `503` and closed; a further [`PROBE_HEADROOM`] threads
     /// still serve `/healthz` and `/metrics` so probes stay truthful.
     pub max_connections: usize,
     /// Graceful-drain budget applied when the server shuts down
-    /// (`Submitter::drain` via `EngineLoop::shutdown_graceful`): running
-    /// sessions get this long to finish before being cancelled. Zero
-    /// (the default) preserves the old cancel-everything shutdown.
+    /// ([`Router::drain`], which fans one shared deadline out to every
+    /// replica): running sessions get this long to finish before being
+    /// cancelled. Zero (the default) preserves the old
+    /// cancel-everything shutdown.
     pub drain: Duration,
     /// External shutdown request (the signal handler in `freekv serve`
     /// sets it on Ctrl-C / SIGTERM): when the flag flips, the acceptor
@@ -397,19 +403,22 @@ impl Drop for ConnSlot {
 }
 
 /// Bind `addr` and serve. See [`serve_listener`].
-pub fn serve(submitter: Submitter, addr: &str, opts: ServeOptions) -> Result<()> {
+pub fn serve<R: Router + 'static>(router: R, addr: &str, opts: ServeOptions) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    serve_listener(listener, submitter, opts)
+    serve_listener(listener, router, opts)
 }
 
 /// Serve connections from an already-bound listener: one thread per
-/// connection, sessions multiplexed onto the engine loop through
-/// `submitter`. Returns once `max_requests` generations have completed.
-pub fn serve_listener(
+/// connection, sessions multiplexed onto the serving tier through
+/// `router` (a bare [`Submitter`] for the single-replica path, or a
+/// multi-replica router). Returns once `max_requests` generations have
+/// completed.
+pub fn serve_listener<R: Router + 'static>(
     listener: TcpListener,
-    submitter: Submitter,
+    router: R,
     opts: ServeOptions,
 ) -> Result<()> {
+    let router = Arc::new(router);
     let local = listener.local_addr()?;
     println!("[freekv] serving on http://{}", local);
     let served = Arc::new(AtomicUsize::new(0));
@@ -420,7 +429,7 @@ pub fn serve_listener(
     let conn_cap = if opts.max_connections > 0 {
         opts.max_connections
     } else {
-        submitter.queue_cap().saturating_mul(2).max(8)
+        router.queue_cap().saturating_mul(2).max(8)
     };
     let active_conns = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
@@ -460,7 +469,7 @@ pub fn serve_listener(
         let restricted = prev >= conn_cap;
         let slot = ConnSlot(active_conns.clone());
         let conns = active_conns.clone();
-        let sub = submitter.clone();
+        let sub = router.clone();
         let served = served.clone();
         let engine_down = engine_down.clone();
         let limits = limits.clone();
@@ -468,7 +477,7 @@ pub fn serve_listener(
         thread::spawn(move || {
             handle_connection(
                 &mut stream,
-                &sub,
+                &*sub,
                 &limits,
                 &served,
                 &engine_down,
@@ -486,12 +495,14 @@ pub fn serve_listener(
             }
         });
     }
-    // The edge is exiting: begin the engine-loop drain now so running
+    // The edge is exiting: begin the serving-tier drain now — the
+    // router fans one shared deadline out to every replica — so running
     // sessions keep decoding (new submissions are refused) while the
-    // caller tears the process down. `EngineLoop::shutdown_graceful`
-    // then joins the already-draining loop.
+    // caller tears the process down. `ReplicaSet::shutdown_graceful` /
+    // `EngineLoop::shutdown_graceful` then join the already-draining
+    // loops.
     if !opts.drain.is_zero() {
-        submitter.drain(opts.drain);
+        router.drain(opts.drain);
     }
     Ok(())
 }
@@ -508,9 +519,9 @@ pub fn serve_listener(
 /// its slot back (an idle client must not pin the budget for its whole
 /// `keep_alive_idle` window) and re-acquires one when the next request
 /// arrives — answered `503` and closed if the edge saturated meanwhile.
-fn handle_connection(
+fn handle_connection<R: Router + ?Sized>(
     stream: &mut TcpStream,
-    sub: &Submitter,
+    sub: &R,
     limits: &HttpLimits,
     served: &AtomicUsize,
     engine_down: &AtomicBool,
@@ -618,9 +629,9 @@ fn handle_connection(
 }
 
 /// Returns whether the connection may serve another request.
-fn handle_generate(
+fn handle_generate<R: Router + ?Sized>(
     stream: &mut TcpStream,
-    sub: &Submitter,
+    sub: &R,
     served: &AtomicUsize,
     engine_down: &AtomicBool,
     body: &str,

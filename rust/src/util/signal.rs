@@ -10,8 +10,11 @@
 //! signal the watcher flips the caller's flag and runs a wake closure
 //! (the server pokes its own listener so a blocked `accept` notices);
 //! ordinary Rust is legal there because it is a normal thread, not a
-//! signal context. A second signal hard-exits, so a wedged drain can
-//! still be Ctrl-C'd away.
+//! signal context. The woken server drains through its router seam, so
+//! under `--replicas N` one signal drains the whole replica set on one
+//! shared deadline ([`crate::coordinator::router::Router::drain`]). A
+//! second signal hard-exits (130), so a wedged drain can still be
+//! Ctrl-C'd away.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

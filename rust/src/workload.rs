@@ -2,9 +2,13 @@
 //! for load-testing the serving stack (used by `freekv loadtest` and the
 //! scheduler tests). Mirrors the paper's two evaluation scenarios:
 //! long-input (big prompt, short output) and long-generation (short
-//! prompt, long output).
+//! prompt, long output). [`run_router_loadtest`] replays the same
+//! workloads across N replica schedulers through a
+//! [`DispatchPolicy`] — the exact routing core the live serving tier
+//! runs — for the multi-replica throughput/affinity sweeps.
 
 use crate::coordinator::engine::{Backend, SampleParams};
+use crate::coordinator::router::{DispatchPolicy, ReplicaLoad, RouterCounters};
 use crate::coordinator::scheduler::{Request, StepEvent};
 use crate::util::rng::Rng;
 
@@ -256,6 +260,215 @@ pub struct LoadtestReport {
     pub tick_faults: usize,
 }
 
+/// Replay a workload across N replica schedulers through a routing
+/// policy — the multi-replica analogue of [`run_loadtest`]. Each tick
+/// dispatches the due arrivals via [`DispatchPolicy::route`] over live
+/// per-replica load snapshots (queue depth + KV pool pages, exactly
+/// what the serving-tier router reads), records the dispatch for
+/// prefix affinity, then ticks every busy replica — so N replicas
+/// genuinely decode the same tick and modeled throughput scales with
+/// the set. Per-replica engine faults mirror [`run_loadtest`]'s chaos
+/// tolerance: the faulting replica's in-flight requests are failed
+/// loudly and the replay continues.
+pub fn run_router_loadtest<B: Backend>(
+    scheds: &mut [crate::coordinator::scheduler::Scheduler<B>],
+    policy: &mut DispatchPolicy,
+    workload: Vec<TimedRequest>,
+    ticks_per_second: f64,
+) -> anyhow::Result<RouterLoadtestReport> {
+    anyhow::ensure!(!scheds.is_empty(), "router loadtest needs at least one replica");
+    let n = scheds.len();
+    let mut pending: std::collections::VecDeque<TimedRequest> = workload.into();
+    let mut tick = 0u64;
+    let t0 = std::time::Instant::now();
+    let mut max_inflight = 0usize;
+    let mut tick_faults = 0usize;
+    let mut completed = vec![0usize; n];
+    let mut failed = vec![0usize; n];
+    // request id -> arrival tick, removed at the first sampled token to
+    // model TTFT in ticks (converted to seconds by the tick rate)
+    let mut awaiting_first = std::collections::HashMap::new();
+    let mut ttfts = Vec::new();
+    loop {
+        let busy: usize = scheds.iter().map(|s| s.pending()).sum();
+        if pending.is_empty() && busy == 0 {
+            break;
+        }
+        let now = tick as f64 / ticks_per_second.max(1e-9);
+        while pending.front().map_or(false, |r| r.at <= now) {
+            let req = pending.pop_front().unwrap().request;
+            let loads: Vec<ReplicaLoad> = scheds
+                .iter()
+                .map(|s| ReplicaLoad {
+                    alive: true,
+                    in_flight: s.pending(),
+                    kv_pages_used: s.kv_pool_stats().pages_used,
+                })
+                .collect();
+            let r = policy.route(&req.prompt, &loads).expect("all replicas alive");
+            policy.record(&req.prompt, r);
+            awaiting_first.insert(req.id, tick);
+            scheds[r].submit(req);
+        }
+        for (r, sched) in scheds.iter_mut().enumerate() {
+            if sched.pending() == 0 {
+                continue;
+            }
+            let events = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sched.tick()))
+                .map_err(|p| anyhow::anyhow!("{}", crate::util::fault::panic_message(p.as_ref())));
+            match events.and_then(|x| x) {
+                Ok(events) => {
+                    for ev in events {
+                        match ev {
+                            StepEvent::Token { id, index: 0, .. } => {
+                                if let Some(at) = awaiting_first.remove(&id) {
+                                    ttfts.push(
+                                        (tick - at) as f64 / ticks_per_second.max(1e-9),
+                                    );
+                                }
+                            }
+                            StepEvent::Token { .. } => {}
+                            StepEvent::Finished { id } => {
+                                completed[r] += 1;
+                                awaiting_first.remove(&id);
+                                let _ = sched.take_completion(id);
+                            }
+                            StepEvent::Failed { id, .. } => {
+                                failed[r] += 1;
+                                awaiting_first.remove(&id);
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    tick_faults += 1;
+                    let ids = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        sched.active_ids()
+                    }))
+                    .unwrap_or_default();
+                    for id in ids {
+                        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            sched.abort(id)
+                        }))
+                        .is_err()
+                        {
+                            sched.engine.kv_release(id);
+                            sched.metrics.on_failed();
+                        }
+                        failed[r] += 1;
+                        awaiting_first.remove(&id);
+                    }
+                    eprintln!("[loadtest] replica {} fault on tick {}: {:#}", r, tick, e);
+                }
+            }
+        }
+        max_inflight = max_inflight.max(scheds.iter().map(|s| s.pending()).sum());
+        tick += 1;
+    }
+    let per_replica: Vec<ReplicaLoadtestReport> = scheds
+        .iter()
+        .enumerate()
+        .map(|(r, s)| {
+            let kv = s.kv_pool_stats();
+            let stats = s.engine.stats();
+            ReplicaLoadtestReport {
+                completed: completed[r],
+                failed: failed[r],
+                tokens_out: s.metrics.tokens_out,
+                retained_hits: kv.retained_hits,
+                prefill_tokens_saved: stats.prefill_tokens_saved,
+                kv_pages_retained: kv.pages_retained,
+            }
+        })
+        .collect();
+    Ok(RouterLoadtestReport {
+        wall_secs: t0.elapsed().as_secs_f64(),
+        ticks: tick,
+        completed: completed.iter().sum(),
+        failed: failed.iter().sum(),
+        max_inflight,
+        tokens_out: per_replica.iter().map(|p| p.tokens_out).sum(),
+        tick_faults,
+        ttft_p95_secs: crate::util::stats::percentile(&ttfts, 95.0),
+        per_replica,
+        counters: policy.counters(),
+    })
+}
+
+/// One replica's slice of a [`run_router_loadtest`] replay.
+#[derive(Debug, Clone)]
+pub struct ReplicaLoadtestReport {
+    /// Requests that finished normally on this replica.
+    pub completed: usize,
+    /// Requests that reached a failure outcome on this replica.
+    pub failed: usize,
+    /// Tokens generated by this replica.
+    pub tokens_out: u64,
+    /// Retained-tier prefix hits on this replica's allocator.
+    pub retained_hits: u64,
+    /// Prefill tokens this replica skipped via prefix reuse.
+    pub prefill_tokens_saved: u64,
+    /// Pages parked in this replica's retained tier at the end.
+    pub kv_pages_retained: u64,
+}
+
+/// Terminal accounting of one [`run_router_loadtest`] replay.
+#[derive(Debug, Clone)]
+pub struct RouterLoadtestReport {
+    /// Real elapsed wall time of the replay.
+    pub wall_secs: f64,
+    /// Scheduler ticks executed (shared clock across replicas).
+    pub ticks: u64,
+    /// Requests that finished normally, summed over replicas.
+    pub completed: usize,
+    /// Requests that reached a failure outcome, summed over replicas.
+    pub failed: usize,
+    /// Peak requests simultaneously queued or running across the set.
+    pub max_inflight: usize,
+    /// Total generated tokens across all replicas.
+    pub tokens_out: u64,
+    /// Per-replica ticks that ended in an engine panic or error.
+    pub tick_faults: usize,
+    /// p95 time-to-first-token in modeled seconds (arrival tick to
+    /// first sampled token, divided by the tick rate).
+    pub ttft_p95_secs: f64,
+    /// Per-replica breakdown, in replica index order.
+    pub per_replica: Vec<ReplicaLoadtestReport>,
+    /// The dispatch policy's routing counters (zeros for round-robin).
+    pub counters: RouterCounters,
+}
+
+impl RouterLoadtestReport {
+    /// Modeled decode throughput in tokens per modeled second: total
+    /// tokens over the tick span, scaled by the tick rate. Comparable
+    /// across replica counts because the tick is the shared clock.
+    pub fn modeled_throughput(&self, ticks_per_second: f64) -> f64 {
+        if self.ticks == 0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 * ticks_per_second / self.ticks as f64
+    }
+
+    /// Fraction of all retained-tier hits that landed on the single
+    /// hottest replica (1.0 = perfectly concentrated, the prefix-
+    /// affinity goal; ~1/N under affinity-blind routing).
+    pub fn retained_hit_concentration(&self) -> f64 {
+        let total: u64 = self.per_replica.iter().map(|p| p.retained_hits).sum();
+        let max = self.per_replica.iter().map(|p| p.retained_hits).max().unwrap_or(0);
+        max as f64 / total.max(1) as f64
+    }
+
+    /// Total retained-tier hits across the set.
+    pub fn retained_hits(&self) -> u64 {
+        self.per_replica.iter().map(|p| p.retained_hits).sum()
+    }
+
+    /// Total prefill tokens saved across the set.
+    pub fn prefill_tokens_saved(&self) -> u64 {
+        self.per_replica.iter().map(|p| p.prefill_tokens_saved).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,5 +599,91 @@ mod tests {
         let stats = sched.engine.stats();
         assert!(stats.prefill_tokens_saved > 0, "no prefill tokens saved");
         assert_eq!(stats.kv_retained_hits, kv.retained_hits);
+    }
+
+    #[test]
+    fn router_loadtest_kv_affinity_concentrates_retained_hits_vs_round_robin() {
+        use crate::coordinator::router::KvRouterConfig;
+        use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+        use crate::coordinator::sim_backend::SimBackend;
+        use crate::kvcache::PrefixCacheMode;
+        // Same far-apart arrivals as the single-scheduler retained-tier
+        // test: every hit below is a retained-tier revival.
+        let spec = WorkloadSpec {
+            scenario: Scenario::RepeatedPrompt,
+            rate: 0.002,
+            n_requests: 6,
+            max_prompt: 64,
+            max_output: 4,
+            ..Default::default()
+        };
+        let make = || {
+            (0..2)
+                .map(|_| {
+                    Scheduler::new(
+                        SimBackend::tiny_with_pool_mode(0, PrefixCacheMode::Retained, 0),
+                        SchedulerConfig::default(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut kv_scheds = make();
+        let mut kv_policy =
+            DispatchPolicy::kv_aware(KvRouterConfig { page_size: 4, ..Default::default() });
+        let kv = run_router_loadtest(&mut kv_scheds, &mut kv_policy, generate(&spec), 1.0).unwrap();
+        assert_eq!(kv.completed, 6);
+        assert_eq!(kv.failed, 0);
+        assert!(kv.retained_hits() > 0, "no retained hits: {:?}", kv.per_replica);
+        assert!(
+            kv.retained_hit_concentration() > 0.99,
+            "affinity must concentrate hits on one replica: {:?}",
+            kv.per_replica
+        );
+        assert!(kv.counters.affinity_hits > 0, "{:?}", kv.counters);
+
+        let mut rr_scheds = make();
+        let mut rr_policy = DispatchPolicy::round_robin();
+        let rr = run_router_loadtest(&mut rr_scheds, &mut rr_policy, generate(&spec), 1.0).unwrap();
+        assert_eq!(rr.completed, 6);
+        assert!(
+            kv.prefill_tokens_saved() > rr.prefill_tokens_saved(),
+            "kv-aware ({}) must beat round-robin ({}) on prefill tokens saved",
+            kv.prefill_tokens_saved(),
+            rr.prefill_tokens_saved()
+        );
+    }
+
+    #[test]
+    fn router_loadtest_four_replicas_beat_one_on_modeled_throughput() {
+        use crate::coordinator::router::KvRouterConfig;
+        use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+        use crate::coordinator::sim_backend::SimBackend;
+        // Near-simultaneous arrivals so the set is decode-bound: four
+        // replicas run 4x the lanes of one at equal per-replica config.
+        let spec = WorkloadSpec {
+            scenario: Scenario::LongGeneration,
+            rate: 1e6,
+            n_requests: 32,
+            max_prompt: 32,
+            max_output: 16,
+            ..Default::default()
+        };
+        let tps = 1000.0;
+        let run = |n: usize| {
+            let mut scheds: Vec<_> = (0..n)
+                .map(|_| Scheduler::new(SimBackend::tiny(), SchedulerConfig::default()))
+                .collect();
+            let mut policy =
+                DispatchPolicy::kv_aware(KvRouterConfig { page_size: 4, ..Default::default() });
+            run_router_loadtest(&mut scheds, &mut policy, generate(&spec), tps).unwrap()
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one.completed, 32);
+        assert_eq!(four.completed, 32);
+        assert_eq!(one.tokens_out, four.tokens_out, "same workload, same tokens");
+        let speedup = four.modeled_throughput(tps) / one.modeled_throughput(tps).max(1e-9);
+        assert!(speedup > 2.5, "4-replica speedup {:.2}x <= 2.5x", speedup);
+        assert!(four.ttft_p95_secs <= one.ttft_p95_secs, "more lanes must not slow TTFT");
     }
 }

@@ -1,5 +1,7 @@
-//! Failure-injection tests: the runtime must fail loudly and precisely on
-//! corrupted artifacts, never segfault or silently misload.
+//! Artifact-corruption tests: the runtime must fail loudly and precisely
+//! on corrupted artifacts, never segfault or silently misload. (Runtime
+//! fault-injection for the *serving* stack — chaos schedules, restart
+//! ladders, the router tier — lives in `tests/fault_injection.rs`.)
 
 use std::fs;
 

@@ -13,7 +13,12 @@
 //!   exhausted restart budget takes the loop Down and submitters see
 //!   `Closed`;
 //! * the zero-cost property — a present-but-disabled plan produces a
-//!   bit-identical token stream to no plan at all.
+//!   bit-identical token stream to no plan at all;
+//! * the router ladder — a replica that exhausts its restart budget is
+//!   routed around (set Degraded, not Down), no request is silently
+//!   lost, and every replica's KV gauges return to baseline on the
+//!   surviving N-1; plus a set-level chaos round with an independent
+//!   plan per replica.
 //!
 //! Seeds are fixed (CI runs the suite per-seed via `FREEKV_CHAOS_SEEDS`)
 //! so failures are replayable.
@@ -25,7 +30,8 @@ use freekv::config::ModelConfig;
 use freekv::coordinator::engine_loop::{
     EngineLoop, Health, LoopConfig, SessionEvent, SubmitError,
 };
-use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use freekv::coordinator::router::{KvAwareRouter, KvRouterConfig, Router};
+use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig};
 use freekv::coordinator::sim_backend::{sim_config, SimBackend};
 use freekv::kvcache::PageAllocator;
 use freekv::util::fault::{FaultPlan, FaultSite};
@@ -302,6 +308,171 @@ fn restart_budget_exhaustion_goes_down_and_closed() {
     let kv = alloc.stats();
     assert_eq!((kv.pages_used, kv.pages_reserved), (0, 0), "{:?}", kv);
     el.shutdown();
+}
+
+#[test]
+fn router_routes_around_dead_replica_and_reports_degraded() {
+    let cfg = sim_config();
+    // replica0: a panic on its first decode step and zero restart budget
+    // — the fault ladder bottoms out and the loop goes Down. replica1:
+    // clean. Independent allocators, like the real ReplicaSet.
+    let alloc0 = PageAllocator::for_model(&cfg, 0, false);
+    let plan0 = Arc::new(FaultPlan::events(&[(FaultSite::EnginePanic, 0)]));
+    let el0 = spawn_chaos_loop(
+        cfg.clone(),
+        alloc0.clone(),
+        plan0,
+        LoopConfig { queue_cap: 4, max_engine_restarts: 0 },
+    );
+    let alloc1 = PageAllocator::for_model(&cfg, 0, false);
+    let el1 = spawn_chaos_loop(
+        cfg.clone(),
+        alloc1.clone(),
+        Arc::new(FaultPlan::disabled()),
+        LoopConfig { queue_cap: 4, max_engine_restarts: 0 },
+    );
+    let (sub0, sub1) = (el0.submitter(), el1.submitter());
+    let router = KvAwareRouter::new(
+        vec![sub0.clone(), sub1.clone()],
+        KvRouterConfig { page_size: cfg.page_size, ..Default::default() },
+    );
+
+    // Both replicas idle: the first dispatch tie-breaks to replica0,
+    // where the victim dies loudly — a terminal Error, never silence.
+    let victim = router.submit(Request::from_text(0, "victim on replica0 ", 50)).unwrap();
+    assert!(collect_terminal(&victim).1.is_err(), "victim fails loudly, not silently");
+
+    // replica0 exits Down; the set aggregate is Degraded, not Down.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while sub0.health() != Health::Down {
+        assert!(Instant::now() < deadline, "replica0 never reported Down");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(router.health(), Health::Degraded, "one dead replica degrades the set");
+    let report = router.metrics_report().expect("surviving replica keeps metrics up");
+    assert!(report.contains("alive=1"), "{}", report);
+    assert!(report.contains("replica0 health=down"), "{}", report);
+
+    // New requests route around the corpse and complete on replica1.
+    for i in 0..4 {
+        let h = router
+            .submit(Request::from_text(0, &format!("route around {} ", i), 4))
+            .expect("degraded set still admits");
+        assert_eq!(collect_terminal(&h).1.expect("replica1 serves"), 4);
+    }
+    assert_eq!(sub1.health(), Health::Ok, "the survivor itself is unharmed");
+
+    // Over HTTP the aggregate shows on /healthz as 200 "degraded" — a
+    // load balancer must not kill an instance that still serves.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let r2 = router.clone();
+    std::thread::spawn(move || {
+        let _ = freekv::server::serve_listener(
+            listener,
+            r2,
+            freekv::server::ServeOptions::default(),
+        );
+    });
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    {
+        use std::io::{Read as _, Write as _};
+        write!(s, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"), "{}", resp);
+        assert!(resp.ends_with("degraded"), "{}", resp);
+    }
+
+    el1.shutdown();
+    el0.shutdown();
+    // Even the dead replica's pool drained: no page or reservation leak
+    // anywhere in the set, and the cross-lock invariants hold on N-1.
+    for (name, alloc) in [("replica0", &alloc0), ("replica1", &alloc1)] {
+        let kv = alloc.stats();
+        assert_eq!((kv.pages_used, kv.pages_reserved), (0, 0), "{}: {:?}", name, kv);
+        alloc.audit_invariants();
+    }
+}
+
+/// The chaos property lifted to the replica set: two replicas, each with
+/// its own seeded plan, behind one kv-aware router. Every accepted
+/// request reaches exactly one terminal event and every allocator
+/// returns to baseline.
+fn router_chaos_round(seed: u64) {
+    let cfg = sim_config();
+    let mut loops = Vec::new();
+    let mut allocs = Vec::new();
+    let mut subs = Vec::new();
+    for i in 0..2u64 {
+        let alloc = PageAllocator::for_model(&cfg, 0, false);
+        let plan = Arc::new(FaultPlan::chaos(seed + i));
+        let el = spawn_chaos_loop(
+            cfg.clone(),
+            alloc.clone(),
+            plan,
+            LoopConfig { queue_cap: 32, max_engine_restarts: 16 },
+        );
+        subs.push(el.submitter());
+        allocs.push(alloc);
+        loops.push(el);
+    }
+    let router = KvAwareRouter::new(
+        subs.clone(),
+        KvRouterConfig { page_size: cfg.page_size, ..Default::default() },
+    );
+
+    let mut handles = Vec::new();
+    for i in 0..24usize {
+        // A shared prompt head keeps prefix affinity engaged mid-chaos.
+        let prompt = format!("router chaos shared head, seed {} request {} ", seed, i);
+        match router.submit(Request::from_text(0, &prompt, 4 + (i % 8))) {
+            Ok(h) => handles.push(h),
+            Err(e) => panic!("submit {} unexpectedly refused: {:?}", i, e),
+        }
+    }
+    let (mut done, mut failed) = (0usize, 0usize);
+    for h in &handles {
+        match collect_terminal(h) {
+            (_, Ok(_)) => done += 1,
+            (_, Err(_)) => failed += 1,
+        }
+    }
+    assert_eq!(done + failed, handles.len(), "every request reached one terminal event");
+    assert_eq!(router.in_flight(), 0, "all admission slots released across the set");
+    assert!(
+        matches!(router.health(), Health::Ok | Health::Degraded),
+        "budgets not exhausted, yet set health = {:?}",
+        router.health()
+    );
+    let report = router.metrics_report().expect("set still answers after chaos");
+    assert!(report.starts_with("router=kv replicas=2"), "{}", report);
+
+    for el in loops {
+        el.shutdown();
+    }
+    for (i, alloc) in allocs.iter().enumerate() {
+        let kv = alloc.stats();
+        assert_eq!(kv.pages_used, 0, "seed {} replica {}: leaked pages: {:?}", seed, i, kv);
+        assert_eq!(
+            kv.pages_reserved, 0,
+            "seed {} replica {}: leaked reservations: {:?}",
+            seed, i, kv
+        );
+        alloc.audit_invariants();
+    }
+}
+
+#[test]
+fn router_chaos_no_request_is_silently_lost() {
+    let seeds: Vec<u64> = match std::env::var("FREEKV_CHAOS_SEEDS") {
+        Ok(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+        Err(_) => vec![11, 23, 47],
+    };
+    assert!(!seeds.is_empty(), "FREEKV_CHAOS_SEEDS parsed to nothing");
+    for seed in seeds {
+        router_chaos_round(seed);
+    }
 }
 
 #[test]

@@ -8,7 +8,10 @@
 //! streaming that yields the first token long before the last,
 //! mid-generation cancellation (client disconnect) releasing KV and the
 //! admission slot, 429 backpressure when the queue cap is hit, and
-//! per-token TTFT/ITL percentiles on `/metrics`.
+//! per-token TTFT/ITL percentiles on `/metrics`. The router tier rides
+//! the same seam: `--replicas 1` bit-identity vs a bare `Submitter`,
+//! prefix-affinity concentration of retained hits across replicas, and
+//! per-replica gauge labels on the aggregated `/metrics`.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -19,14 +22,18 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use freekv::coordinator::engine_loop::{EngineLoop, LoopConfig, SubmitError};
-use freekv::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use freekv::coordinator::router::{
+    KvAwareRouter, KvRouterConfig, RoundRobinRouter, Router, SingleRouter,
+};
+use freekv::coordinator::scheduler::{Request, Scheduler, SchedulerConfig};
 use freekv::coordinator::sim_backend::{sim_next_token, SimBackend};
 use freekv::coordinator::tokenizer;
+use freekv::kvcache::PrefixCacheMode;
 use freekv::server::{serve_listener, ServeOptions};
 use freekv::util::json::Json;
 
 fn spawn_sim_loop(step_delay_ms: u64, queue_cap: usize) -> EngineLoop {
-    EngineLoop::spawn(LoopConfig { queue_cap }, move || {
+    EngineLoop::spawn(LoopConfig { queue_cap, ..Default::default() }, move || {
         let mut b = SimBackend::tiny();
         b.step_delay = Duration::from_millis(step_delay_ms);
         Ok(Scheduler::new(
@@ -35,6 +42,18 @@ fn spawn_sim_loop(step_delay_ms: u64, queue_cap: usize) -> EngineLoop {
         ))
     })
     .expect("sim engine loop spawns without artifacts")
+}
+
+/// A sim loop whose allocator runs the retained prefix-cache tier —
+/// the backend shape the prefix-affinity router is built for.
+fn spawn_retained_loop() -> EngineLoop {
+    EngineLoop::spawn(LoopConfig { queue_cap: 8, ..Default::default() }, || {
+        Ok(Scheduler::new(
+            SimBackend::tiny_with_pool_mode(0, PrefixCacheMode::Retained, 0),
+            SchedulerConfig { max_batch: 8, admit_below: 8, ..Default::default() },
+        ))
+    })
+    .expect("retained sim loop spawns")
 }
 
 /// Serve on an OS-assigned port; returns the address. The server thread
@@ -647,4 +666,141 @@ fn malformed_requests_get_400_not_garbage_parsing() {
     assert_eq!(status, 200);
     assert_eq!(body, "ok");
     el.shutdown();
+}
+
+// ---------------------------------------------------------------- router tier
+
+/// Serve an arbitrary router implementation on an OS-assigned port.
+fn serve_router<R: Router + 'static>(
+    router: R,
+    max_requests: Option<usize>,
+) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    thread::spawn(move || {
+        serve_listener(listener, router, ServeOptions { max_requests, ..Default::default() })
+            .unwrap();
+    });
+    addr
+}
+
+#[test]
+fn router_single_replica_is_bit_identical_to_bare_submitter() {
+    // The same deterministic backend behind both seams: a bare
+    // `Submitter` (the pre-router path) and a `SingleRouter` wrapping an
+    // identical replica. Every byte on the wire must match.
+    let bare = spawn_sim_loop(0, 8);
+    let routed = spawn_sim_loop(0, 8);
+    let addr_a = serve_sim(&bare, None);
+    let addr_b = serve_router(SingleRouter::new(routed.submitter()), None);
+    for i in 0..3 {
+        let body = format!(r#"{{"prompt":"bit identity {} ","max_tokens":12}}"#, i);
+        let (status_a, body_a) = post_generate(addr_a, &body);
+        let (status_b, body_b) = post_generate(addr_b, &body);
+        assert_eq!(status_a, 200, "{}", body_a);
+        assert_eq!(
+            (status_a, &body_a),
+            (status_b, &body_b),
+            "single-replica router changed the wire format"
+        );
+    }
+    assert_eq!(get(addr_a, "/healthz"), (200, "ok".to_string()));
+    assert_eq!(get(addr_b, "/healthz"), (200, "ok".to_string()));
+    bare.shutdown();
+    routed.shutdown();
+}
+
+#[test]
+fn router_affinity_concentrates_retained_hits_round_robin_spreads_them() {
+    let prompt = "the shared system preamble that every single request repeats verbatim ";
+    let run = |router: &dyn Router| {
+        for _ in 0..6 {
+            let h = router.submit(Request::from_text(0, prompt, 2)).unwrap();
+            h.wait().expect("request completes");
+        }
+    };
+
+    // kv-aware: after the first dispatch records the boundary hashes,
+    // every repeat follows them to the replica retaining the prefix.
+    let (a, b) = (spawn_retained_loop(), spawn_retained_loop());
+    let (sa, sb) = (a.submitter(), b.submitter());
+    let kv = KvAwareRouter::new(
+        vec![sa.clone(), sb.clone()],
+        KvRouterConfig { page_size: 4, ..Default::default() },
+    );
+    run(&kv);
+    let (stats_a, stats_b) = (sa.engine_stats().unwrap(), sb.engine_stats().unwrap());
+    let kv_hits = [stats_a.kv_retained_hits, stats_b.kv_retained_hits];
+    let kv_saved = stats_a.prefill_tokens_saved + stats_b.prefill_tokens_saved;
+    assert!(kv_hits.iter().sum::<u64>() > 0, "retained tier never hit: {:?}", kv_hits);
+    assert_eq!(
+        kv_hits.iter().filter(|&&h| h > 0).count(),
+        1,
+        "kv-aware routing must concentrate retained hits on one replica: {:?}",
+        kv_hits
+    );
+    let counters = kv.counters();
+    assert!(counters.affinity_hits > 0, "no affinity hits recorded: {:?}", counters);
+    a.shutdown();
+    b.shutdown();
+
+    // round-robin ablation: the same workload alternates replicas, so
+    // the retained hits split and the total prefill saving drops.
+    let (a, b) = (spawn_retained_loop(), spawn_retained_loop());
+    let (sa, sb) = (a.submitter(), b.submitter());
+    let rr = RoundRobinRouter::new(vec![sa.clone(), sb.clone()]);
+    run(&rr);
+    let (stats_a, stats_b) = (sa.engine_stats().unwrap(), sb.engine_stats().unwrap());
+    let rr_saved = stats_a.prefill_tokens_saved + stats_b.prefill_tokens_saved;
+    assert!(
+        stats_a.kv_retained_hits > 0 && stats_b.kv_retained_hits > 0,
+        "round-robin should spread the repeats across both replicas: {} / {}",
+        stats_a.kv_retained_hits,
+        stats_b.kv_retained_hits
+    );
+    assert!(
+        rr_saved < kv_saved,
+        "prefix affinity must out-save round-robin: rr {} vs kv {}",
+        rr_saved,
+        kv_saved
+    );
+    a.shutdown();
+    b.shutdown();
+}
+
+#[test]
+fn router_metrics_report_per_replica_gauges_over_http() {
+    let (a, b) = (spawn_retained_loop(), spawn_retained_loop());
+    let router = KvAwareRouter::new(
+        vec![a.submitter(), b.submitter()],
+        KvRouterConfig { page_size: 4, ..Default::default() },
+    );
+    let addr = serve_router(router, None);
+    let (status, body) =
+        post_generate(addr, r#"{"prompt":"router metrics probe ","max_tokens":4}"#);
+    assert_eq!(status, 200, "{}", body);
+    let (status, body) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(body.starts_with("router=kv replicas=2 alive=2"), "{}", body);
+    for label in ["replica0", "replica1", "affinity_hits=", "affinity_misses="] {
+        assert!(body.contains(label), "missing {} in {}", label, body);
+    }
+    assert_eq!(get(addr, "/healthz"), (200, "ok".to_string()));
+    a.shutdown();
+    b.shutdown();
+}
+
+#[test]
+fn router_drain_fans_out_to_every_replica() {
+    let (a, b) = (spawn_sim_loop(0, 8), spawn_sim_loop(0, 8));
+    let (sa, sb) = (a.submitter(), b.submitter());
+    let router = KvAwareRouter::new(
+        vec![sa.clone(), sb.clone()],
+        KvRouterConfig { page_size: 4, ..Default::default() },
+    );
+    Router::drain(&router, Duration::from_secs(5));
+    assert!(matches!(sa.submit_text("late a ", 2), Err(SubmitError::Draining)));
+    assert!(matches!(sb.submit_text("late b ", 2), Err(SubmitError::Draining)));
+    a.shutdown();
+    b.shutdown();
 }
